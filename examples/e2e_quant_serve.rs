@@ -1,0 +1,123 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run):
+//!
+//! load the **trained** tiny-LM checkpoint → quantize it with BPDQ
+//! W2-G256 (the paper's extreme deployment point, §4.2) → serve batched
+//! few-shot arithmetic requests through the router/batcher on the LUT
+//! bit-plane engine → report accuracy, model size, and latency, next to
+//! the fp16 baseline served the same way.
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example e2e_quant_serve`
+
+use bpdq::data::{tasks, CorpusConfig, CorpusGen, Split, Tokenizer};
+use bpdq::eval::{perplexity, run_battery, EvalConfig};
+use bpdq::io::tlm::TlmFile;
+use bpdq::model::pipeline::quantize_model;
+use bpdq::model::Model;
+use bpdq::quant::{BpdqConfig, QuantMethod};
+use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let ckpt = Path::new("artifacts/tiny_small.tlm");
+    anyhow::ensure!(ckpt.exists(), "run `make artifacts` first (trains the tiny LM)");
+    let model = Arc::new(Model::from_tlm(&TlmFile::load(ckpt)?)?);
+    let gen = CorpusGen::new(CorpusConfig::default());
+    let tok = Tokenizer::new();
+    println!("loaded trained checkpoint: {:.2}M params", model.n_params() as f64 / 1e6);
+
+    // ---- fp16 baseline numbers ----
+    let eval_docs = gen.token_docs(Split::Eval, 32, &tok);
+    let fp_ppl = perplexity(&model, &eval_docs);
+    println!(
+        "fp16 baseline: ppl {:.3}, size {:.2} MiB",
+        fp_ppl,
+        model.fp16_bytes() as f64 / (1 << 20) as f64
+    );
+
+    // ---- quantize: BPDQ W2-G256 ----
+    let method = QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 256, ..Default::default() });
+    let calib: Vec<Vec<u32>> = gen
+        .token_docs(Split::Calib, 64, &tok)
+        .into_iter()
+        .map(|mut d| {
+            d.truncate(model.cfg.max_seq);
+            d
+        })
+        .filter(|d| d.len() >= 8)
+        .collect();
+    println!("\nquantizing with {} on {} calib seqs…", method.name(), calib.len());
+    let qm = quantize_model(&model, &calib, &method)?;
+    println!(
+        "quantized in {:.1}s: BPW {:.3}, packed size {:.2} MiB ({:.1}% of fp16)",
+        qm.quant_secs,
+        qm.bits_per_weight(),
+        qm.size_bytes() as f64 / (1 << 20) as f64,
+        100.0 * qm.size_bytes() as f64 / model.fp16_bytes() as f64
+    );
+    let q_ppl = perplexity(&qm.model, &eval_docs);
+    println!("quantized ppl {:.3} (fp16 {:.3})", q_ppl, fp_ppl);
+    let scores = run_battery(
+        &qm.model,
+        &gen,
+        &tok,
+        &EvalConfig { n_ppl_docs: 16, n_arith: 32, n_choice: 32, ..Default::default() },
+    );
+    println!(
+        "quantized battery: arith {:.1}%, fact {:.1}%, bool {:.1}%, classify {:.1}%",
+        scores.arith * 100.0,
+        scores.fact_choice * 100.0,
+        scores.bool_fact * 100.0,
+        scores.classify * 100.0
+    );
+
+    // ---- serve both through the router ----
+    let packed: HashMap<_, _> = qm
+        .packed
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+        .collect();
+    let qmodel = Arc::new(qm.model.clone());
+    let trace = tasks::gen_arith(0xE2E, 24, 2);
+
+    for (label, kind) in [
+        ("fp16 / native engine", EngineKind::Native(model.clone())),
+        ("BPDQ-W2-G256 / LUT engine", EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone())?)),
+    ] {
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 2,
+                max_batch: 6,
+                batch_window: Duration::from_millis(2),
+                strategy: Strategy::LeastLoaded,
+            },
+            |_| kind.clone(),
+        )?;
+        let rxs: Vec<_> = trace
+            .iter()
+            .map(|t| router.submit(tok.encode(&t.prompt), 8))
+            .collect();
+        let mut correct = 0;
+        for ((_, rx), t) in rxs.into_iter().zip(&trace) {
+            let resp = rx.recv()?;
+            if tok.decode(&resp.tokens).starts_with(t.answer.as_str()) {
+                correct += 1;
+            }
+        }
+        let s = router.metrics.summary();
+        println!(
+            "\n[{label}] {} reqs, EM {:.1}%, p50 first-token {:.2} ms, decode {:.1} µs/tok, {:.1} tok/s",
+            s.completed,
+            100.0 * correct as f64 / trace.len() as f64,
+            s.p50_first_us as f64 / 1e3,
+            s.us_per_token,
+            s.tokens_per_sec
+        );
+        router.shutdown();
+    }
+    println!("\nE2E OK — all layers composed (data → train(py) → quantize → pack → serve).");
+    Ok(())
+}

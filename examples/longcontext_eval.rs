@@ -1,0 +1,69 @@
+//! Long-context stress test (paper Fig. 3): passkey retrieval at
+//! increasing distance, per quantization method — generalization beyond
+//! the training context is exactly where 2-bit damage shows first.
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example longcontext_eval`
+
+use bpdq::data::{tasks, CorpusConfig, CorpusGen, Split, Tokenizer};
+use bpdq::eval::longctx;
+use bpdq::io::tlm::TlmFile;
+use bpdq::model::pipeline::quantize_model;
+use bpdq::model::Model;
+use bpdq::quant::{BpdqConfig, QuantMethod, UniformConfig};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let ckpt = Path::new("artifacts/tiny_small.tlm");
+    anyhow::ensure!(ckpt.exists(), "run `make artifacts` first");
+    let model = Model::from_tlm(&TlmFile::load(ckpt)?)?;
+    let gen = CorpusGen::new(CorpusConfig::default());
+    let tok = Tokenizer::new();
+    let n = 24;
+
+    let calib: Vec<Vec<u32>> = gen
+        .token_docs(Split::Calib, 48, &tok)
+        .into_iter()
+        .map(|mut d| {
+            d.truncate(model.cfg.max_seq);
+            d
+        })
+        .filter(|d| d.len() >= 8)
+        .collect();
+
+    let variants: Vec<(String, Model)> = {
+        let mut v = vec![("FP16".to_string(), model.clone())];
+        for (name, method) in [
+            (
+                "GPTQ-W2-G32",
+                QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 32, act_order: true }),
+            ),
+            (
+                "BPDQ-W2-G64",
+                QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 64, ..Default::default() }),
+            ),
+        ] {
+            eprintln!("quantizing {name}…");
+            v.push((name.to_string(), quantize_model(&model, &calib, &method)?.model));
+        }
+        v
+    };
+
+    println!("\npasskey retrieval accuracy vs distance (filler clauses):");
+    print!("{:<14}", "distance");
+    for d in [2usize, 4, 8, 16, 24] {
+        print!("{d:>8}");
+    }
+    println!();
+    for (name, m) in &variants {
+        print!("{name:<14}");
+        for d in [2usize, 4, 8, 16, 24] {
+            let acc = longctx(m, &tok, &tasks::gen_passkey(&gen, 77, n, d));
+            print!("{:>7.1}%", acc * 100.0);
+        }
+        println!();
+    }
+    println!("\n(paper Fig. 3 shape: fp16 ≈ BPDQ-W2 degrade gently with distance;");
+    println!(" GPTQ-W2 loses retrieval much earlier)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Bit-width × group-size sweep on one linear layer: reproduces the
+//! feasible-set story of Appendix A as numbers — how the variable grid's
+//! advantage over the fixed grid grows as bits shrink and groups widen.
+//!
+//! Run: `cargo run --release --example quantize_sweep`
+
+use bpdq::quant::{quantize_linear, BpdqConfig, QuantMethod, UniformConfig};
+use bpdq::rng::Rng;
+use bpdq::tensor::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    let (d_out, d_in, n) = (96, 256, 192);
+    let mut rng = Rng::new(7);
+    let w = Matrix::from_vec(
+        d_out,
+        d_in,
+        (0..d_out * d_in).map(|_| 0.1 * rng.student_t(5.0) as f32).collect(),
+    );
+    let x = Matrix::from_vec(
+        n,
+        d_in,
+        (0..n * d_in)
+            .map(|i| ((1.0 / (1.0 + (i % d_in) as f64)).sqrt() * 3.0 + 0.05) as f32 * rng.normal() as f32)
+            .collect(),
+    );
+
+    println!("output-aligned error ‖(W−Ŵ)X‖²_F (lower is better); ratio = GPTQ/BPDQ\n");
+    println!("{:>4} {:>6} | {:>12} {:>12} {:>8}", "bits", "group", "GPTQ", "BPDQ", "ratio");
+    for bits in [4u8, 3, 2] {
+        for g in [32usize, 64, 128] {
+            let e_gptq = quantize_linear(
+                &w,
+                &x,
+                QuantMethod::Gptq(UniformConfig { bits, group_size: g, act_order: true }),
+            )?
+            .stats
+            .output_err;
+            let e_bpdq = quantize_linear(
+                &w,
+                &x,
+                QuantMethod::Bpdq(BpdqConfig { k: bits, group_size: g, ..Default::default() }),
+            )?
+            .stats
+            .output_err;
+            println!(
+                "{bits:>4} {g:>6} | {e_gptq:>12.4} {e_bpdq:>12.4} {:>7.2}×",
+                e_gptq / e_bpdq
+            );
+        }
+    }
+    println!("\nThe ratio grows as bits drop — the shape-invariance penalty the paper");
+    println!("identifies (§1): at 4-bit a fixed grid is fine; at 2-bit it dominates.");
+
+    // Ablation: iterations and GAR (the design choices DESIGN.md calls out).
+    println!("\nablation at W2-G64 (output err):");
+    for (label, cfg) in [
+        ("init only (0 refinement iters)", BpdqConfig { k: 2, group_size: 64, iters: 1, ..Default::default() }),
+        ("3 iters", BpdqConfig { k: 2, group_size: 64, iters: 3, ..Default::default() }),
+        ("10 iters (paper)", BpdqConfig { k: 2, group_size: 64, iters: 10, ..Default::default() }),
+        ("10 iters, GAR off", BpdqConfig { k: 2, group_size: 64, iters: 10, gar: false, ..Default::default() }),
+    ] {
+        let e = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg))?.stats.output_err;
+        println!("  {label:<32} {e:.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Serving demo: multi-worker router + dynamic batcher over the LUT
+//! bit-plane engine, with a burst-y request trace (interactive chat
+//! shape) and a metrics report.
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example serve_quantized`
+
+use bpdq::data::{CorpusConfig, CorpusGen, Split, Tokenizer};
+use bpdq::io::tlm::TlmFile;
+use bpdq::model::pipeline::quantize_model;
+use bpdq::model::{synthetic_model, Model, ModelConfig};
+use bpdq::quant::{BpdqConfig, QuantMethod};
+use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let tok = Tokenizer::new();
+    let model = match TlmFile::load(Path::new("artifacts/tiny_small.tlm")) {
+        Ok(f) => Model::from_tlm(&f)?,
+        Err(_) => {
+            eprintln!("(no trained checkpoint — using synthetic weights; run `make artifacts`)");
+            synthetic_model(&ModelConfig::tiny_small(tok.vocab_size()), 7)
+        }
+    };
+    let model = Arc::new(model);
+    let gen = CorpusGen::new(CorpusConfig::default());
+
+    // Quantize to the serving format.
+    let calib: Vec<Vec<u32>> = gen
+        .token_docs(Split::Calib, 48, &tok)
+        .into_iter()
+        .map(|mut d| {
+            d.truncate(model.cfg.max_seq);
+            d
+        })
+        .filter(|d| d.len() >= 8)
+        .collect();
+    let qm = quantize_model(
+        &model,
+        &calib,
+        &QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 128, ..Default::default() }),
+    )?;
+    let packed: HashMap<_, _> = qm
+        .packed
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+        .collect();
+    let qmodel = Arc::new(qm.model.clone());
+    println!(
+        "serving BPDQ-W2-G128: {:.2} MiB packed ({:.1}% of fp16)",
+        qm.size_bytes() as f64 / (1 << 20) as f64,
+        100.0 * qm.size_bytes() as f64 / model.fp16_bytes() as f64
+    );
+
+    // Compare routing strategies under a bursty trace.
+    for strategy in [Strategy::RoundRobin, Strategy::LeastLoaded] {
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 3,
+                max_batch: 4,
+                batch_window: Duration::from_millis(3),
+                strategy,
+            },
+            |_| EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap()),
+        )?;
+        // Burst: prompts of very different lengths (skewed load).
+        let mut rxs = Vec::new();
+        for i in 0..18u64 {
+            let len = if i % 3 == 0 { 60 } else { 8 };
+            let prompt: Vec<u32> = (0..len).map(|t| ((t * 5 + i as usize) % 68) as u32).collect();
+            rxs.push(router.submit(prompt, 6));
+        }
+        for (_, rx) in rxs {
+            rx.recv()?;
+        }
+        let s = router.metrics.summary();
+        println!(
+            "{:?}: p50 queue {:.2} ms, p50 first {:.2} ms, p95 first {:.2} ms, {:.1} tok/s, mean batch {:.2}",
+            strategy,
+            s.p50_queue_us as f64 / 1e3,
+            s.p50_first_us as f64 / 1e3,
+            s.p95_first_us as f64 / 1e3,
+            s.tokens_per_sec,
+            s.mean_batch
+        );
+        router.shutdown();
+    }
+    Ok(())
+}

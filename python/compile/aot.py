@@ -1,0 +1,125 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO **text** artifacts for the
+rust PJRT runtime (L3).
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the
+published `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts produced (all shapes fixed at lowering time; the rust runtime
+compiles each once and caches the executable):
+
+* ``bpdq_gemv.hlo.txt``    — the Pallas LUT-GEMV serving kernel
+  (d_in=128, d_out=128, k=2, g=64 — the tiny_small attention shape);
+* ``dequant_gemv.hlo.txt`` — the dequantize-then-matmul baseline kernel,
+  same shape;
+* ``decode_step.hlo.txt``  — a full single-token decode step of the
+  trained tiny_small model (weights baked in as constants), KV cache
+  threaded functionally: (token, pos, kcache, vcache) → (logits, k', v').
+
+Python runs once at build time; the rust binary is self-contained after
+`make artifacts`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .export_weights import read_tlm
+from .kernels import bpdq_lut, dequant
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the decode step bakes the trained
+    # weights in as constants; the default printer elides them as
+    # `constant({...})`, which the HLO parser then reads as ZEROS —
+    # silently wrong numerics on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_kernels(out_dir: pathlib.Path, d_in=128, d_out=128, k=2, g=64):
+    """Lower both L1 kernels at the serving shape."""
+    x = jax.ShapeDtypeStruct((d_in,), jnp.float32)
+    pb = jax.ShapeDtypeStruct((k, d_out, d_in // 8), jnp.uint8)
+    cf = jax.ShapeDtypeStruct((k + 1, d_out, d_in // g), jnp.float32)
+
+    for name, fn in [
+        ("bpdq_gemv", functools.partial(bpdq_lut.lut_gemv, group_size=g)),
+        ("dequant_gemv", functools.partial(dequant.dequant_gemv, group_size=g)),
+    ]:
+        lowered = jax.jit(lambda x, pb, cf, fn=fn: (fn(x, pb, cf),)).lower(x, pb, cf)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"[aot] wrote {path} ({len(text)} chars, shape "
+              f"d_in={d_in} d_out={d_out} k={k} g={g})")
+
+
+def lower_decode_step(out_dir: pathlib.Path, ckpt: pathlib.Path, cache_len=256):
+    """Lower the trained model's single-token decode step with weights
+    baked in as HLO constants."""
+    cfg, raw = read_tlm(ckpt)
+    params = {k: jnp.asarray(v) for k, v in raw.items()}
+    mcfg = model.config(cfg["vocab_size"], cfg["d_model"], cfg["n_layers"],
+                        cfg["n_heads"], cfg["d_ff"], cfg["max_seq"])
+    nl, d = mcfg["n_layers"], mcfg["d_model"]
+
+    def step(token, pos, kcache, vcache):
+        return model.decode_step(params, mcfg, token, pos, kcache, vcache)
+
+    args = (
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((nl, cache_len, d), jnp.float32),
+        jax.ShapeDtypeStruct((nl, cache_len, d), jnp.float32),
+    )
+    lowered = jax.jit(step).lower(*args)
+    text = to_hlo_text(lowered)
+    path = out_dir / "decode_step.hlo.txt"
+    path.write_text(text)
+    meta = out_dir / "decode_step.meta"
+    meta.write_text(
+        f"vocab_size {mcfg['vocab_size']}\nd_model {d}\nn_layers {nl}\n"
+        f"cache_len {cache_len}\n"
+    )
+    print(f"[aot] wrote {path} ({len(text)} chars, cache_len={cache_len})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--ckpt", default=None,
+                    help=".tlm checkpoint for decode_step (default: "
+                         "<out>/tiny_small.tlm if present)")
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--skip-decode", action="store_true")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    lower_kernels(out_dir)
+    ckpt = pathlib.Path(args.ckpt) if args.ckpt else out_dir / "tiny_small.tlm"
+    if args.skip_decode:
+        print("[aot] skipping decode_step")
+    elif ckpt.exists():
+        lower_decode_step(out_dir, ckpt, args.cache_len)
+    else:
+        print(f"[aot] {ckpt} missing — run train_tiny first; decode_step skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Write trained JAX params to the `.tlm` format rust loads.
+
+Byte-for-byte mirror of `rust/src/io/tlm.rs` (little-endian, see that
+module for the layout).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import struct
+
+import numpy as np
+
+MAGIC = b"TLM1"
+
+
+def write_tlm(path: pathlib.Path, cfg: dict, params: dict) -> None:
+    tensors = {}
+    for name, arr in params.items():
+        a = np.asarray(arr, dtype=np.float32)
+        if a.ndim == 1:
+            a = a.reshape(1, -1)
+        assert a.ndim == 2, f"{name}: rank {a.ndim}"
+        tensors[name] = a
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        for key in ("vocab_size", "d_model", "n_layers", "n_heads", "d_ff", "max_seq"):
+            f.write(struct.pack("<I", cfg[key]))
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):  # BTreeMap order on the rust side
+            a = tensors[name]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", a.shape[0], a.shape[1]))
+            f.write(a.astype("<f4").tobytes())
+
+
+def read_tlm(path: pathlib.Path):
+    """Reader (round-trip tests + loading checkpoints back for AOT)."""
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        keys = ("vocab_size", "d_model", "n_layers", "n_heads", "d_ff", "max_seq")
+        cfg = {k: struct.unpack("<I", f.read(4))[0] for k in keys}
+        (n,) = struct.unpack("<I", f.read(4))
+        params = {}
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            rows, cols = struct.unpack("<II", f.read(8))
+            data = np.frombuffer(f.read(rows * cols * 4), dtype="<f4").reshape(rows, cols)
+            params[name] = data.copy()
+        # squeeze the vectors back
+        for k in list(params):
+            if params[k].shape[0] == 1 and ("norm" in k):
+                params[k] = params[k][0]
+    return cfg, params

@@ -1,0 +1,104 @@
+"""L1 — the bit-plane LUT-GEMV Pallas kernel (paper §4.3 / LUT-GEMM,
+Park et al. 2022), adapted from CUDA warps to the TPU execution model.
+
+Algorithm (per output tile):
+  1. Build the subset-sum LUT over 8-wide activation chunks:
+     ``LUT[c, p] = Σ_i x[8c+i]·bit(p, i)`` — expressed as the matmul
+     ``x_chunks(nc,8) @ P.T(8,256)``, i.e. **MXU-shaped** instead of the
+     CUDA shared-memory scatter (DESIGN.md §Hardware-Adaptation).
+  2. Gather per (plane, row, chunk): ``LUT[c, byte[i,r,c]]`` — a lane
+     gather (VPU) replacing the warp ballot.
+  3. Reduce chunks within each group and combine with the scalar
+     coefficients: ``y_r = Σ_g c₀ S_g + Σ_i cᵢ · partialᵢ`` where
+     ``S_g`` is the group's activation sum (the bias term of the
+     variable grid).
+
+The grid is 1-D over output-row tiles; the x vector and its LUT live in
+VMEM once per tile (BlockSpec maps the full x block to every tile).
+``interpret=True`` everywhere — the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _patterns() -> jnp.ndarray:
+    """Binary pattern table P[p, i] = bit i of p — built from iota inside
+    the kernel (pallas forbids captured constants)."""
+    p = jax.lax.iota(jnp.uint32, 256)[:, None]
+    i = jax.lax.iota(jnp.uint32, 8)[None, :]
+    return ((p >> i) & 1).astype(jnp.float32)
+
+
+def _pick_tile(d_out: int, max_tile: int = 64) -> int:
+    """Largest divisor of d_out not exceeding max_tile."""
+    for t in range(min(max_tile, d_out), 0, -1):
+        if d_out % t == 0:
+            return t
+    return 1
+
+
+def _lut_gemv_kernel(x_ref, bytes_ref, coeffs_ref, y_ref, *, group_size: int):
+    """One output tile.
+
+    x_ref:      (d_in,)            — the full activation vector
+    bytes_ref:  (k, T, d_in//8)    — packed planes for this row tile
+    coeffs_ref: (k+1, T, n_groups) — scalar coefficients for this tile
+    y_ref:      (T,)
+    """
+    x = x_ref[...]
+    pb = bytes_ref[...]
+    cf = coeffs_ref[...]
+    k, t, nc = pb.shape
+    n_groups = cf.shape[2]
+    cpg = group_size // 8  # chunks per group
+
+    # (1) subset-sum LUT via matmul (MXU-shaped)
+    xc = x.reshape(nc, 8)
+    lut = xc @ _patterns().T                                 # (nc, 256)
+
+    # group activation sums for the bias term
+    s_g = xc.reshape(n_groups, cpg * 8).sum(axis=1)          # (n_groups,)
+
+    # (2) gather LUT entries per (plane, row, chunk)
+    idx = pb.astype(jnp.int32)                               # (k, T, nc)
+    lut_b = jnp.broadcast_to(lut, (k, t, nc, 256))
+    part = jnp.take_along_axis(lut_b, idx[..., None], axis=-1)[..., 0]  # (k,T,nc)
+
+    # (3) reduce chunks per group, combine with coefficients
+    part_g = part.reshape(k, t, n_groups, cpg).sum(axis=-1)  # (k,T,ng)
+    y = cf[0] @ s_g                                          # (T,) bias term
+    y = y + jnp.einsum("ktg,ktg->t", cf[1:], part_g)
+    y_ref[...] = y
+
+
+def lut_gemv(x: jnp.ndarray, plane_bytes: jnp.ndarray, coeffs: jnp.ndarray,
+             group_size: int) -> jnp.ndarray:
+    """y = Ŵ x with Ŵ BPDQ-packed. Shapes per kernels/ref.py."""
+    d_in = x.shape[0]
+    k, d_out, nc = plane_bytes.shape
+    ng = coeffs.shape[2]
+    assert nc * 8 == d_in, "d_in must be a multiple of 8"
+    assert group_size % 8 == 0, "group_size must be a multiple of 8"
+    assert ng * group_size == d_in, "d_in must be a multiple of group_size"
+    assert coeffs.shape == (k + 1, d_out, ng)
+
+    t = _pick_tile(d_out)
+    kernel = functools.partial(_lut_gemv_kernel, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(d_out // t,),
+        in_specs=[
+            pl.BlockSpec((d_in,), lambda i: (0,)),
+            pl.BlockSpec((k, t, nc), lambda i: (0, i, 0)),
+            pl.BlockSpec((k + 1, t, ng), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_out,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), plane_bytes, coeffs.astype(jnp.float32))

@@ -1,0 +1,60 @@
+"""L1 — dequantize-then-matmul Pallas kernel (the baseline the LUT kernel
+is compared against in Table 3, and the building block of the quantized
+decode step lowered by aot.py).
+
+Per output tile: unpack the bit-planes of the tile's rows, reconstruct
+``Ŵ = REP(C₀) + Σ REP(Cᵢ)⊙Bᵢ`` in VMEM, then one (T, d_in)×(d_in,) matvec
+on the MXU. HBM traffic is the *packed* bits (k·d_in/8 bytes per row +
+coefficients), so the memory-bound decode regime sees the paper's
+bits-per-weight reduction directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bpdq_lut import _pick_tile
+
+
+def _dequant_gemv_kernel(x_ref, bytes_ref, coeffs_ref, y_ref, *, group_size: int):
+    x = x_ref[...]                       # (d_in,)
+    pb = bytes_ref[...]                  # (k, T, nc)
+    cf = coeffs_ref[...]                 # (k+1, T, ng)
+    k, t, nc = pb.shape
+    d_in = x.shape[0]
+
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = ((pb[..., None] >> shifts) & 1).astype(jnp.float32)  # (k,T,nc,8)
+    bits = bits.reshape(k, t, d_in)
+
+    rep = jnp.repeat(cf, group_size, axis=2)[:, :, :d_in]       # (k+1,T,d_in)
+    w = rep[0] + jnp.einsum("ktd,ktd->td", rep[1:], bits)       # (T, d_in)
+    y_ref[...] = w @ x
+
+
+def dequant_gemv(x: jnp.ndarray, plane_bytes: jnp.ndarray, coeffs: jnp.ndarray,
+                 group_size: int) -> jnp.ndarray:
+    """y = Ŵ x via in-VMEM dequantization."""
+    d_in = x.shape[0]
+    k, d_out, nc = plane_bytes.shape
+    ng = coeffs.shape[2]
+    assert nc * 8 == d_in and ng * group_size == d_in
+
+    t = _pick_tile(d_out)
+    kernel = functools.partial(_dequant_gemv_kernel, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(d_out // t,),
+        in_specs=[
+            pl.BlockSpec((d_in,), lambda i: (0,)),
+            pl.BlockSpec((k, t, nc), lambda i: (0, i, 0)),
+            pl.BlockSpec((k + 1, t, ng), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_out,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), plane_bytes, coeffs.astype(jnp.float32))

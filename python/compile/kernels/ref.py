@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the correctness ground truth: pytest sweeps the Pallas kernels
+against them (hypothesis over shapes/k/group-size), and the rust LUT
+engine is validated against the same packed format through the AOT
+round-trip.
+
+Packed format (shared with rust `quant::packing` and the kernels):
+  * ``plane_bytes``: (k, d_out, d_in//8) uint8 — bit ``j%8`` of byte
+    ``j//8`` is plane value at input column ``j`` (little-endian within
+    the byte, matching the rust u32 packing truncated to bytes);
+  * ``coeffs``: (k+1, d_out, d_in//group_size) float32 — index 0 is the
+    group bias C₀, index i≥1 the scale of plane i (paper Eq. 1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_planes(plane_bytes: jnp.ndarray, d_in: int) -> jnp.ndarray:
+    """(k, d_out, d_in//8) uint8 -> (k, d_out, d_in) float32 in {0,1}."""
+    k, d_out, n_chunks = plane_bytes.shape
+    assert n_chunks * 8 == d_in, f"d_in {d_in} != 8*{n_chunks}"
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (plane_bytes[..., None] >> shifts) & 1          # (k, d_out, nc, 8)
+    return bits.reshape(k, d_out, d_in).astype(jnp.float32)
+
+
+def pack_planes(planes: jnp.ndarray) -> jnp.ndarray:
+    """(k, d_out, d_in) {0,1} -> (k, d_out, d_in//8) uint8."""
+    k, d_out, d_in = planes.shape
+    assert d_in % 8 == 0
+    b = planes.reshape(k, d_out, d_in // 8, 8).astype(jnp.uint8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(b.astype(jnp.uint32) * weights, axis=-1).astype(jnp.uint8)
+
+
+def dequant_ref(plane_bytes: jnp.ndarray, coeffs: jnp.ndarray,
+                group_size: int, d_in: int) -> jnp.ndarray:
+    """Reconstruct Ŵ = REP(C₀) + Σᵢ REP(Cᵢ) ⊙ Bᵢ (paper Eq. 1)."""
+    k, d_out, _ = plane_bytes.shape
+    planes = unpack_planes(plane_bytes, d_in)              # (k, d_out, d_in)
+    rep = jnp.repeat(coeffs, group_size, axis=2)[:, :, :d_in]  # (k+1, d_out, d_in)
+    w = rep[0]
+    for i in range(k):
+        w = w + rep[i + 1] * planes[i]
+    return w
+
+
+def lut_gemv_ref(x: jnp.ndarray, plane_bytes: jnp.ndarray,
+                 coeffs: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """y = Ŵ @ x — the oracle the Pallas LUT kernel must match."""
+    w = dequant_ref(plane_bytes, coeffs, group_size, x.shape[0])
+    return w @ x

@@ -1,0 +1,214 @@
+"""L2 — the JAX tiny-LM, mirrored exactly against ``rust/src/model``.
+
+Architecture contract (any change must be mirrored in rust/src/model):
+  * token embedding, no scaling;
+  * per block: RMSNorm(eps 1e-5) -> causal MHA (wq,wk,wv,wo; RoPE
+    rotate-half, base 10000) -> residual -> RMSNorm -> SwiGLU
+    (w1=up, w3=gate, w2=down) -> residual;
+  * final RMSNorm -> untied lm_head.
+
+Weights live in a flat dict keyed like the ``.tlm`` tensors ("embed",
+"l0.wq", ..., "norm_f", "lm_head"); all linears are (d_out, d_in) so the
+forward is ``x @ W.T`` — identical to the rust convention.
+
+This module is build-time only: it trains (see train_tiny.py) and lowers
+(see aot.py). Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-5
+ROPE_BASE = 10_000.0
+
+
+def config(vocab_size: int, d_model: int, n_layers: int, n_heads: int,
+           d_ff: int, max_seq: int) -> dict:
+    assert d_model % n_heads == 0
+    return dict(vocab_size=vocab_size, d_model=d_model, n_layers=n_layers,
+                n_heads=n_heads, d_ff=d_ff, max_seq=max_seq)
+
+
+def tiny_small(vocab_size: int) -> dict:
+    """≈0.8M params — mirrors ModelConfig::tiny_small."""
+    return config(vocab_size, 128, 4, 4, 344, 256)
+
+
+def tiny_large(vocab_size: int) -> dict:
+    """≈3.4M params — mirrors ModelConfig::tiny_large."""
+    return config(vocab_size, 256, 6, 8, 688, 256)
+
+
+def init_params(cfg: dict, key: jax.Array) -> dict:
+    """He-ish init; names match the .tlm tensor set exactly."""
+    v, d, ff = cfg["vocab_size"], cfg["d_model"], cfg["d_ff"]
+    params = {}
+    n_mats = 3 + 7 * cfg["n_layers"]
+    keys = jax.random.split(key, n_mats)
+    ki = iter(keys)
+
+    def mat(k, rows, cols, scale):
+        return (jax.random.normal(k, (rows, cols), jnp.float32) * scale)
+
+    params["embed"] = mat(next(ki), v, d, 0.02)
+    params["lm_head"] = mat(next(ki), v, d, 0.02)
+    params["norm_f"] = jnp.ones((d,), jnp.float32)
+    _ = next(ki)
+    for l in range(cfg["n_layers"]):
+        s = (1.0 / d) ** 0.5
+        s2 = (1.0 / ff) ** 0.5
+        sub = jax.random.split(jax.random.fold_in(key, 1000 + l), 7)
+        params[f"l{l}.norm1"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.norm2"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.wq"] = mat(sub[0], d, d, s)
+        params[f"l{l}.wk"] = mat(sub[1], d, d, s)
+        params[f"l{l}.wv"] = mat(sub[2], d, d, s)
+        params[f"l{l}.wo"] = mat(sub[3], d, d, s)
+        params[f"l{l}.w1"] = mat(sub[4], ff, d, s)
+        params[f"l{l}.w3"] = mat(sub[5], ff, d, s)
+        params[f"l{l}.w2"] = mat(sub[6], d, ff, s2)
+    return params
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array) -> jax.Array:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * gain
+
+
+def rope_tables(seq: int, head_dim: int, offset=0):
+    half = head_dim // 2
+    pos = jnp.arange(seq)[:, None] + offset          # (seq, 1)
+    i = jnp.arange(half)[None, :]                    # (1, half)
+    theta = pos / (ROPE_BASE ** (2.0 * i / head_dim))
+    return jnp.cos(theta), jnp.sin(theta)            # each (seq, half)
+
+
+def rope_apply(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, n_heads, head_dim); rotate-half convention."""
+    half = x.shape[-1] // 2
+    a, b = x[..., :half], x[..., half:]
+    cos = cos[..., :, None, :]   # broadcast over heads
+    sin = sin[..., :, None, :]
+    return jnp.concatenate([a * cos - b * sin, b * cos + a * sin], axis=-1)
+
+
+def block_forward(params: dict, cfg: dict, l: int, h: jax.Array) -> jax.Array:
+    """h: (seq, d) -> (seq, d). Full-sequence causal block."""
+    d, nh = cfg["d_model"], cfg["n_heads"]
+    hd = d // nh
+    seq = h.shape[0]
+    p = lambda n: params[f"l{l}.{n}"]
+
+    x = rmsnorm(h, p("norm1"))
+    q = (x @ p("wq").T).reshape(seq, nh, hd)
+    k = (x @ p("wk").T).reshape(seq, nh, hd)
+    v = (x @ p("wv").T).reshape(seq, nh, hd)
+    cos, sin = rope_tables(seq, hd)
+    q = rope_apply(q, cos, sin)
+    k = rope_apply(k, cos, sin)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,khd->qhd", attn, v).reshape(seq, d)
+    h = h + ctx @ p("wo").T
+
+    x = rmsnorm(h, p("norm2"))
+    up = x @ p("w1").T
+    gate = x @ p("w3").T
+    h = h + (up * jax.nn.silu(gate)) @ p("w2").T
+    return h
+
+
+def forward(params: dict, cfg: dict, tokens: jax.Array) -> jax.Array:
+    """tokens: (seq,) int32 -> logits (seq, vocab)."""
+    h = params["embed"][tokens]
+    for l in range(cfg["n_layers"]):
+        h = block_forward(params, cfg, l, h)
+    h = rmsnorm(h, params["norm_f"])
+    return h @ params["lm_head"].T
+
+
+def forward_batch(params: dict, cfg: dict, tokens: jax.Array) -> jax.Array:
+    """tokens: (batch, seq) -> (batch, seq, vocab)."""
+    return jax.vmap(lambda t: forward(params, cfg, t))(tokens)
+
+
+def loss_fn(params: dict, cfg: dict, tokens: jax.Array, mask: jax.Array) -> jax.Array:
+    """Next-token cross entropy. tokens (b, s); mask (b, s) 1.0 where the
+    *target* position is real (not padding)."""
+    logits = forward_batch(params, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental decode step (the shape that gets AOT-lowered for the rust
+# serving engine). The KV cache is functional state threaded through.
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, cfg: dict, token: jax.Array, pos: jax.Array,
+                kcache: jax.Array, vcache: jax.Array):
+    """One-token decode.
+
+    token: () int32; pos: () int32;
+    kcache/vcache: (n_layers, cache_len, d_model).
+    Returns (logits (vocab,), kcache', vcache').
+    """
+    d, nh = cfg["d_model"], cfg["n_heads"]
+    hd = d // nh
+    cache_len = kcache.shape[1]
+    h = params["embed"][token]
+
+    half = hd // 2
+    i = jnp.arange(half)
+    theta = pos.astype(jnp.float32) / (ROPE_BASE ** (2.0 * i / hd))
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+
+    def rot(x):  # x: (nh, hd)
+        a, b = x[:, :half], x[:, half:]
+        return jnp.concatenate([a * cos - b * sin, b * cos + a * sin], axis=-1)
+
+    for l in range(cfg["n_layers"]):
+        p = lambda n: params[f"l{l}.{n}"]
+        x = rmsnorm(h, p("norm1"))
+        q = rot((p("wq") @ x).reshape(nh, hd))
+        k = rot((p("wk") @ x).reshape(nh, hd))
+        v = (p("wv") @ x).reshape(nh, hd)
+        kcache = jax.lax.dynamic_update_slice(kcache, k.reshape(1, 1, d), (l, pos, 0))
+        vcache = jax.lax.dynamic_update_slice(vcache, v.reshape(1, 1, d), (l, pos, 0))
+        kl = kcache[l].reshape(cache_len, nh, hd)
+        vl = vcache[l].reshape(cache_len, nh, hd)
+        scores = jnp.einsum("hd,thd->ht", q, kl) / jnp.sqrt(jnp.float32(hd))
+        valid = jnp.arange(cache_len) <= pos
+        scores = jnp.where(valid[None, :], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("ht,thd->hd", attn, vl).reshape(d)
+        h = h + p("wo") @ ctx
+
+        x = rmsnorm(h, p("norm2"))
+        up = p("w1") @ x
+        gate = p("w3") @ x
+        h = h + p("w2") @ (up * jax.nn.silu(gate))
+
+    h = rmsnorm(h, params["norm_f"])
+    return params["lm_head"] @ h, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward variants calling the L1 kernels (used by aot.py to lower
+# the BPDQ serving linear + a quantized decode step into HLO).
+# ---------------------------------------------------------------------------
+
+def bpdq_linear(x, plane_bytes, coeffs, group_size: int, use_pallas=True):
+    """y = Ŵ x where Ŵ is BPDQ-packed. See kernels/bpdq_lut.py."""
+    from .kernels import bpdq_lut
+    if use_pallas:
+        return bpdq_lut.lut_gemv(x, plane_bytes, coeffs, group_size)
+    from .kernels import ref
+    return ref.lut_gemv_ref(x, plane_bytes, coeffs, group_size)

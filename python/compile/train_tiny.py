@@ -1,0 +1,112 @@
+"""Build-time trainer for the tiny LMs (the paper-model stand-ins).
+
+Trains a char-level decoder-only LM (see model.py) on the rust-generated
+synthetic corpus with Adam + cosine decay, then exports `.tlm` weights
+for the rust side. This is the "train a real model so quantization
+damage is measurable" half of the substitution documented in DESIGN.md §3.
+
+Usage:
+    python -m compile.train_tiny --size small --steps 900 \
+        --artifacts ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data_io, model
+from .export_weights import write_tlm
+
+
+def adam_init(params):
+    z = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                       params, mhat, vhat)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def make_batches(tokens: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    """Random contiguous windows (+1 for the shifted target)."""
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[i:i + seq + 1] for i in idx])
+
+
+def train(size: str, steps: int, batch: int, seq: int, lr: float,
+          artifacts: pathlib.Path, seed: int = 0) -> pathlib.Path:
+    vocab = data_io.load_vocab(artifacts)
+    tokens = data_io.load_corpus_tokens(artifacts, "corpus_train.txt", vocab)
+    print(f"[train] corpus: {len(tokens)} tokens, vocab {len(vocab)}")
+
+    cfg = model.tiny_small(len(vocab)) if size == "small" else model.tiny_large(len(vocab))
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] size={size}: {n_params/1e6:.2f}M params, {steps} steps, "
+          f"batch {batch} × seq {seq}")
+
+    opt = adam_init(params)
+    warmup = max(20, steps // 20)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lr_now):
+        mask = jnp.ones_like(toks, jnp.float32)
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, cfg, toks, mask)
+        params, opt = adam_update(params, grads, opt, lr_now)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed + 1)
+    batches = make_batches(tokens, batch, seq, rng)
+    t0 = time.time()
+    losses = []
+    for s in range(steps):
+        frac = s / max(1, steps)
+        lr_now = lr * min(1.0, (s + 1) / warmup) * (0.5 * (1 + np.cos(np.pi * frac)))
+        toks = jnp.asarray(next(batches))
+        params, opt, loss = step_fn(params, opt, toks, jnp.float32(lr_now))
+        losses.append(float(loss))
+        if s % 50 == 0 or s == steps - 1:
+            dt = time.time() - t0
+            print(f"[train] step {s:5d}  loss {float(loss):.4f}  "
+                  f"({dt:.1f}s, {dt/max(1,s+1):.2f}s/step)", flush=True)
+
+    out = artifacts / f"tiny_{size}.tlm"
+    write_tlm(out, cfg, params)
+    # loss curve for EXPERIMENTS.md
+    curve = artifacts / f"tiny_{size}_loss.txt"
+    curve.write_text("\n".join(f"{i} {l:.5f}" for i, l in enumerate(losses)) + "\n")
+    print(f"[train] wrote {out} (final loss {losses[-1]:.4f})")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=["small", "large"], default="small")
+    ap.add_argument("--steps", type=int, default=900)
+    ap.add_argument("--batch", type=int, default=24)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    train(args.size, args.steps, args.batch, args.seq, args.lr,
+          pathlib.Path(args.artifacts), args.seed)
+
+
+if __name__ == "__main__":
+    main()

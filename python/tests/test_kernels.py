@@ -1,0 +1,104 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / plane counts / group sizes; the kernel must
+match ref.py to float32 tolerance everywhere. This is THE correctness
+signal for the serving hot path — the rust LUT engine implements the
+same packed format and is cross-checked against the same oracle via the
+AOT round-trip (rust integration tests).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bpdq_lut, dequant, ref
+
+
+def make_case(seed, k, d_out, d_in, g):
+    rng = np.random.default_rng(seed)
+    planes = rng.integers(0, 2, size=(k, d_out, d_in)).astype(np.float32)
+    pb = ref.pack_planes(jnp.asarray(planes))
+    coeffs = jnp.asarray(rng.normal(size=(k + 1, d_out, d_in // g)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(d_in,)).astype(np.float32))
+    return planes, pb, coeffs, x
+
+
+# group_size must divide d_in and be a multiple of 8
+CASE = st.tuples(
+    st.integers(0, 10_000),              # seed
+    st.integers(1, 4),                   # k
+    st.sampled_from([1, 3, 8, 12, 64]),  # d_out
+    st.sampled_from([16, 64, 128]),      # d_in
+    st.sampled_from([8, 16, 64]),        # g
+).filter(lambda c: c[3] % c[4] == 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(CASE)
+def test_lut_gemv_matches_ref(case):
+    seed, k, d_out, d_in, g = case
+    _, pb, coeffs, x = make_case(seed, k, d_out, d_in, g)
+    want = np.asarray(ref.lut_gemv_ref(x, pb, coeffs, g))
+    got = np.asarray(bpdq_lut.lut_gemv(x, pb, coeffs, g))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(CASE)
+def test_dequant_gemv_matches_ref(case):
+    seed, k, d_out, d_in, g = case
+    _, pb, coeffs, x = make_case(seed, k, d_out, d_in, g)
+    want = np.asarray(ref.lut_gemv_ref(x, pb, coeffs, g))
+    got = np.asarray(dequant.dequant_gemv(x, pb, coeffs, g))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 5),
+       st.sampled_from([2, 7, 16]), st.sampled_from([8, 32, 104]))
+def test_pack_unpack_roundtrip(seed, k, d_out, d_in):
+    rng = np.random.default_rng(seed)
+    planes = rng.integers(0, 2, size=(k, d_out, d_in)).astype(np.float32)
+    pb = ref.pack_planes(jnp.asarray(planes))
+    back = np.asarray(ref.unpack_planes(pb, d_in))
+    np.testing.assert_array_equal(back, planes)
+
+
+def test_dequant_ref_formula():
+    """Hand-checked Eq. 1 instance (mirrors the rust packing test)."""
+    b1 = np.array([[[1, 0, 1, 1, 0, 0, 0, 0]]], dtype=np.float32)
+    b2 = np.array([[[0, 1, 1, 0, 0, 0, 0, 0]]], dtype=np.float32)
+    planes = np.concatenate([b1, b2], axis=0)
+    pb = ref.pack_planes(jnp.asarray(planes))
+    coeffs = jnp.asarray(np.array([
+        [[0.5]], [[2.0]], [[10.0]],
+    ], dtype=np.float32))  # c0, c1, c2 for the single group of 8
+    w = np.asarray(ref.dequant_ref(pb, coeffs, 8, 8))
+    np.testing.assert_allclose(
+        w[0], [2.5, 10.5, 12.5, 2.5, 0.5, 0.5, 0.5, 0.5], rtol=1e-6)
+
+
+def test_uniform_grid_is_special_case():
+    """Proposition 1 (Eq. 13): c1=s, c2=2s reproduces UINT2 exactly."""
+    s = 0.37
+    # column j encodes value j∈{0,1,2,3}: b1 = LSB, b2 = MSB
+    b1 = np.array([[[0, 1, 0, 1, 0, 0, 0, 0]]], dtype=np.float32)
+    b2 = np.array([[[0, 0, 1, 1, 0, 0, 0, 0]]], dtype=np.float32)
+    pb = ref.pack_planes(jnp.asarray(np.concatenate([b1, b2], 0)))
+    coeffs = jnp.asarray(np.array([[[0.0]], [[s]], [[2 * s]]], np.float32))
+    w = np.asarray(ref.dequant_ref(pb, coeffs, 8, 8))
+    np.testing.assert_allclose(w[0, :4], [0.0, s, 2 * s, 3 * s], rtol=1e-6)
+
+
+def test_group_size_validation():
+    _, pb, coeffs, x = make_case(0, 2, 8, 64, 16)
+    with pytest.raises(AssertionError):
+        bpdq_lut.lut_gemv(x, pb, coeffs, 12)  # not a multiple of 8
+
+
+def test_kernel_zero_x():
+    _, pb, coeffs, _ = make_case(1, 2, 8, 64, 16)
+    x = jnp.zeros((64,), jnp.float32)
+    got = np.asarray(bpdq_lut.lut_gemv(x, pb, coeffs, 16))
+    np.testing.assert_allclose(got, np.zeros(8), atol=1e-7)

@@ -1,0 +1,84 @@
+"""L2 model tests: shapes, causality, decode-step parity, loss sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+CFG = model.config(vocab_size=20, d_model=16, n_layers=2, n_heads=2,
+                   d_ff=24, max_seq=32)
+
+
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes():
+    p = params()
+    logits = model.forward(p, CFG, jnp.arange(5, dtype=jnp.int32))
+    assert logits.shape == (5, 20)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality():
+    p = params()
+    a = model.forward(p, CFG, jnp.array([1, 2, 3, 4], jnp.int32))
+    b = model.forward(p, CFG, jnp.array([1, 2, 3, 15], jnp.int32))
+    np.testing.assert_allclose(np.asarray(a[:3]), np.asarray(b[:3]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(a[3]), np.asarray(b[3]))
+
+
+def test_decode_step_matches_full_forward():
+    """The functional KV-cache step must agree with the batch forward —
+    the exact property the rust DecodeState test asserts, so all three
+    implementations (jax full, jax step, rust) agree pairwise."""
+    p = params()
+    toks = jnp.array([3, 7, 1, 12, 5], jnp.int32)
+    full = np.asarray(model.forward(p, CFG, toks))
+    cache_len = 8
+    k = jnp.zeros((CFG["n_layers"], cache_len, CFG["d_model"]), jnp.float32)
+    v = jnp.zeros_like(k)
+    for t in range(len(toks)):
+        logits, k, v = model.decode_step(p, CFG, toks[t], jnp.int32(t), k, v)
+        np.testing.assert_allclose(np.asarray(logits), full[t],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_loss_decreases_on_repeated_batch():
+    """Two gradient steps on one batch must reduce that batch's loss."""
+    p = params()
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 20, (4, 16)),
+                       jnp.int32)
+    mask = jnp.ones_like(toks, jnp.float32)
+    loss0 = model.loss_fn(p, CFG, toks, mask)
+    g = jax.grad(model.loss_fn)(p, CFG, toks, mask)
+    p2 = jax.tree.map(lambda w, gw: w - 0.1 * gw, p, g)
+    loss1 = model.loss_fn(p2, CFG, toks, mask)
+    assert float(loss1) < float(loss0)
+
+
+def test_rope_identity_at_pos0():
+    cos, sin = model.rope_tables(1, 8)
+    x = jnp.ones((1, 2, 8))
+    y = model.rope_apply(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_rmsnorm_matches_definition():
+    x = jnp.array([3.0, -4.0])
+    g = jnp.ones(2)
+    y = np.asarray(model.rmsnorm(x, g))
+    rms = np.sqrt(12.5 + model.RMS_EPS)
+    np.testing.assert_allclose(y, [3 / rms, -4 / rms], rtol=1e-5)
+
+
+def test_param_names_match_tlm_contract():
+    p = params()
+    expected = {"embed", "lm_head", "norm_f"}
+    for l in range(CFG["n_layers"]):
+        for n in ("norm1", "norm2", "wq", "wk", "wv", "wo", "w1", "w2", "w3"):
+            expected.add(f"l{l}.{n}")
+    assert set(p.keys()) == expected

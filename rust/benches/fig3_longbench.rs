@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig3_longbench` — regenerates paper Figure 3
+//! (long-context suite: passkey retrieval, summary, classification).
+use bpdq::report::harness::{fig3, HarnessCfg};
+
+fn main() {
+    // Default QUICK: the full sweep is the CLI path (`bpdq table*`, outputs
+    // recorded in EXPERIMENTS.md); set BPDQ_BENCH_FULL=1 for the full run.
+    let quick = std::env::var("BPDQ_BENCH_FULL").is_err();
+    let cfg = HarnessCfg::new("artifacts/tiny_small.tlm", quick);
+    if let Err(e) = fig3(&cfg) {
+        eprintln!("fig3 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

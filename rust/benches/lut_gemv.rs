@@ -1,0 +1,61 @@
+//! Micro-bench: LUT-GEMV vs dequant-GEMV vs dense fp32 GEMV across
+//! bit-widths — the kernel-level basis of Table 3's latency column.
+//! Paper shape to verify: LUT latency ≈ flat in k; dequant grows with
+//! k; LUT beats dequant at every k on memory-bound shapes.
+use bpdq::benchkit::{bench, black_box, Bench};
+use bpdq::lut::{dequant_gemv, lut_gemv, LutScratch};
+use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
+use bpdq::rng::Rng;
+use bpdq::tensor::{matvec, Matrix};
+
+fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
+    let mut rng = Rng::new(seed);
+    let planes = (0..k)
+        .map(|_| {
+            let dense = Matrix::from_vec(
+                d_out,
+                d_in,
+                (0..d_out * d_in).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect(),
+            );
+            PackedPlane::pack(&dense)
+        })
+        .collect();
+    let ng = d_in.div_ceil(g);
+    let coeffs = (0..=k)
+        .map(|_| Matrix::from_vec(d_out, ng, (0..d_out * ng).map(|_| rng.normal() as f32).collect()))
+        .collect();
+    BitPlanePacked { d_out, d_in, group_size: g, planes, coeffs, coeff_bits: 16 }
+}
+
+fn main() {
+    let b = Bench::new("lut_gemv — kernel latency vs bit-width");
+    for &(d_out, d_in) in &[(512usize, 512usize), (1024, 1024), (2048, 2048)] {
+        b.section(&format!("shape {d_out}×{d_in}, g=64"));
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+        let w = Matrix::from_vec(
+            d_out,
+            d_in,
+            (0..d_out * d_in).map(|_| rng.normal() as f32).collect(),
+        );
+        let s = bench(|| {
+            black_box(matvec(black_box(&w), black_box(&x)));
+        });
+        b.row_time("dense fp32 GEMV (fp16-role baseline)", &s);
+        for k in [2usize, 3, 4] {
+            let packed = random_packed(k as u64, d_out, d_in, 64, k);
+            let mut scratch = LutScratch::default();
+            let mut y = vec![0.0f32; d_out];
+            let s = bench(|| {
+                lut_gemv(black_box(&packed), black_box(&x), &mut y, &mut scratch);
+                black_box(&y);
+            });
+            b.row_time(&format!("LUT-GEMV      k={k}"), &s);
+            let s = bench(|| {
+                black_box(dequant_gemv(black_box(&packed), black_box(&x)));
+            });
+            b.row_time(&format!("dequant-GEMV  k={k}"), &s);
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,51 @@
+//! Micro-bench: quantizer throughput per method on one linear layer —
+//! the basis of Table 2/3's quantization-cost columns (GPTQ 1×,
+//! BPDQ ≈3×, VPTQ ≫).
+use bpdq::benchkit::{bench_with, Bench, Options};
+use bpdq::quant::{
+    quantize_linear, BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig,
+};
+use bpdq::rng::Rng;
+use bpdq::tensor::Matrix;
+use std::time::Duration;
+
+fn main() {
+    let b = Bench::new("quant_kernels — per-layer quantization cost");
+    let (d_out, d_in, n) = (128usize, 128usize, 256usize);
+    let mut rng = Rng::new(3);
+    let w = Matrix::from_vec(
+        d_out,
+        d_in,
+        (0..d_out * d_in).map(|_| 0.1 * rng.student_t(5.0) as f32).collect(),
+    );
+    let x = Matrix::from_vec(n, d_in, (0..n * d_in).map(|_| rng.normal() as f32).collect());
+
+    let opts = Options {
+        warmup: Duration::from_millis(50),
+        target_time: Duration::from_millis(400),
+        max_iters: 50,
+        min_iters: 3,
+    };
+    let methods = vec![
+        QuantMethod::Rtn(UniformConfig { bits: 2, group_size: 64, act_order: false }),
+        QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 64, act_order: true }),
+        QuantMethod::Awq(UniformConfig { bits: 2, group_size: 64, act_order: false }),
+        QuantMethod::AnyBcq(BcqConfig { bits: 2, group_size: 64, alt_iters: 6 }),
+        QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 64, ..Default::default() }),
+        QuantMethod::Vptq(VqConfig { bits: 2, ..Default::default() }),
+    ];
+    b.section(&format!("layer {d_out}×{d_in}, {n} calib rows"));
+    let mut gptq_us = None;
+    for m in methods {
+        let mut keep = None;
+        let s = bench_with(opts, &mut || {
+            keep = Some(quantize_linear(&w, &x, m.clone()).unwrap());
+        });
+        if m.name().starts_with("GPTQ") {
+            gptq_us = Some(s.per_iter_us());
+        }
+        let ratio = gptq_us.map(|g| s.per_iter_us() / g).unwrap_or(f64::NAN);
+        b.row_time(&format!("{:<16} ({ratio:.1}× GPTQ)", m.name()), &s);
+    }
+    b.finish();
+}

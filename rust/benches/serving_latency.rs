@@ -1,0 +1,76 @@
+//! End-to-end serving bench: router + batcher + engines — decode
+//! latency and throughput per engine kind (the system half of Table 3).
+use bpdq::io::tlm::TlmFile;
+use bpdq::model::pipeline::quantize_model;
+use bpdq::model::{synthetic_model, Model, ModelConfig};
+use bpdq::quant::{BpdqConfig, QuantMethod};
+use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("BPDQ_BENCH_QUICK").is_ok();
+    // Use the trained checkpoint when present, else synthetic weights.
+    let model = match TlmFile::load(Path::new("artifacts/tiny_small.tlm")) {
+        Ok(f) => Model::from_tlm(&f).unwrap(),
+        Err(_) => synthetic_model(&ModelConfig::tiny_small(68), 7),
+    };
+    let model = Arc::new(model);
+    let calib: Vec<Vec<u32>> =
+        (0..24).map(|i| (0..64).map(|t| ((t * 7 + i * 3) % 68) as u32).collect()).collect();
+    let qm = quantize_model(
+        &model,
+        &calib,
+        &QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 64, ..Default::default() }),
+    )
+    .unwrap();
+    let qmodel = Arc::new(qm.model.clone());
+    let packed: HashMap<_, _> = qm
+        .packed
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+        .collect();
+
+    let n_requests = if quick { 8 } else { 32 };
+    let max_new = if quick { 4 } else { 12 };
+    println!("\n================================================================");
+    println!("BENCH serving_latency — {n_requests} requests × {max_new} new tokens");
+    println!("================================================================");
+    for (name, kind) in [
+        ("native fp32 (fp16 role)", EngineKind::Native(model.clone())),
+        ("native dequantized W2", EngineKind::Native(qmodel.clone())),
+        (
+            "LUT bit-plane W2",
+            EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap()),
+        ),
+    ] {
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 1,
+                max_batch: 4,
+                batch_window: Duration::from_millis(1),
+                strategy: Strategy::LeastLoaded,
+            },
+            |_| kind.clone(),
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| router.submit((0..12).map(|t| ((t + i) % 68) as u32).collect(), max_new))
+            .collect();
+        for (_, rx) in rxs {
+            rx.recv().unwrap();
+        }
+        let s = router.metrics.summary();
+        println!(
+            "{name:<26} p50 first {:>8.2} ms   decode {:>8.1} µs/tok   {:>7.1} tok/s   mean batch {:.1}",
+            s.p50_first_us as f64 / 1e3,
+            s.us_per_token,
+            s.tokens_per_sec,
+            s.mean_batch
+        );
+        router.shutdown();
+    }
+    println!("\nBENCH serving_latency done");
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench table1_quality` — regenerates paper Table 1
+//! (main quality sweep) on the synthetic substrate. Honors
+//! BPDQ_BENCH_QUICK=1 for a fast smoke run.
+use bpdq::report::harness::{table1, HarnessCfg};
+
+fn main() {
+    // Default QUICK: the full sweep is the CLI path (`bpdq table*`, outputs
+    // recorded in EXPERIMENTS.md); set BPDQ_BENCH_FULL=1 for the full run.
+    let quick = std::env::var("BPDQ_BENCH_FULL").is_err();
+    let cfg = HarnessCfg::new("artifacts/tiny_small.tlm", quick);
+    if let Err(e) = table1(&cfg) {
+        eprintln!("table1 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

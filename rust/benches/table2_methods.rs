@@ -1,0 +1,15 @@
+//! `cargo bench --bench table2_methods` — regenerates paper Table 2
+//! (bit-plane + VQ comparison incl. AnyBCQ and VPTQ, with SIZE and
+//! quantization-cost ratios).
+use bpdq::report::harness::{table2, HarnessCfg};
+
+fn main() {
+    // Default QUICK: the full sweep is the CLI path (`bpdq table*`, outputs
+    // recorded in EXPERIMENTS.md); set BPDQ_BENCH_FULL=1 for the full run.
+    let quick = std::env::var("BPDQ_BENCH_FULL").is_err();
+    let cfg = HarnessCfg::new("artifacts/tiny_small.tlm", quick);
+    if let Err(e) = table2(&cfg) {
+        eprintln!("table2 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench table3_efficiency` — regenerates paper Table 3
+//! (quantization cost, model size, decode latency per engine, and
+//! activation outlier statistics).
+use bpdq::report::harness::{table3, HarnessCfg};
+
+fn main() {
+    // Default QUICK: the full sweep is the CLI path (`bpdq table*`, outputs
+    // recorded in EXPERIMENTS.md); set BPDQ_BENCH_FULL=1 for the full run.
+    let quick = std::env::var("BPDQ_BENCH_FULL").is_err();
+    let cfg = HarnessCfg::new("artifacts/tiny_small.tlm", quick);
+    if let Err(e) = table3(&cfg) {
+        eprintln!("table3 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,164 @@
+//! benchkit — the micro-benchmark harness behind `cargo bench`.
+//!
+//! criterion is not in the offline vendor set; this provides the subset we
+//! rely on: warmup, repeated timed runs, and median / p95 / mean stats,
+//! with black-box protection against the optimizer. Quality-table benches
+//! (`table1_quality` etc.) use [`Bench::section`] for structured output
+//! that mirrors the paper's tables row-for-row.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export so benches don't import std::hint directly.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+}
+
+/// Time `f` with warmup; adaptive iteration count targeting `target_time`
+/// total measurement.
+pub fn bench<F: FnMut()>(mut f: F) -> Stats {
+    bench_with(Options::default(), &mut f)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        let quick = std::env::var("BPDQ_BENCH_QUICK").is_ok();
+        Self {
+            warmup: Duration::from_millis(if quick { 10 } else { 100 }),
+            target_time: Duration::from_millis(if quick { 50 } else { 500 }),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+pub fn bench_with<F: FnMut()>(opts: Options, f: &mut F) -> Stats {
+    // Warmup + estimate per-iter cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_start.elapsed() < opts.warmup || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > opts.max_iters {
+            break;
+        }
+    }
+    let est = warm_start.elapsed() / warm_iters.max(1) as u32;
+    let iters = ((opts.target_time.as_secs_f64() / est.as_secs_f64().max(1e-9)) as usize)
+        .clamp(opts.min_iters, opts.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    Stats {
+        iters,
+        mean,
+        median: samples[samples.len() / 2],
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min: samples[0],
+    }
+}
+
+/// Structured bench output: named sections with rows, formatted as an
+/// aligned text table (the cargo-bench stdout is the artifact).
+pub struct Bench {
+    name: String,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("\n================================================================");
+        println!("BENCH {name}");
+        println!("================================================================");
+        Self { name: name.to_string() }
+    }
+
+    pub fn section(&self, title: &str) {
+        println!("\n--- {title} ---");
+    }
+
+    /// Print a timing row.
+    pub fn row_time(&self, label: &str, s: &Stats) {
+        println!(
+            "{label:<44} median {:>10.2} µs   p95 {:>10.2} µs   ({} iters)",
+            s.median.as_secs_f64() * 1e6,
+            s.p95.as_secs_f64() * 1e6,
+            s.iters
+        );
+    }
+
+    /// Print a free-form metric row.
+    pub fn row_metric(&self, label: &str, value: &str) {
+        println!("{label:<44} {value}");
+    }
+
+    pub fn finish(self) {
+        println!("\nBENCH {} done", self.name);
+    }
+}
+
+/// Format a duration human-readably.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        std::env::set_var("BPDQ_BENCH_QUICK", "1");
+        let mut x = 0u64;
+        let s = bench(|| {
+            for i in 0..1000 {
+                x = x.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median <= s.p95);
+        assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(7)).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline vendor
+//! set). Supports `bpdq <subcommand> [--flag value]... [--switch]...`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` or bare `--switch`
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => switches.push(name.to_string()),
+                }
+            } else {
+                return Err(format!("unexpected positional argument `{a}`"));
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("quantize --method bpdq --bits 2 --verbose");
+        assert_eq!(a.subcommand, "quantize");
+        assert_eq!(a.get("method"), Some("bpdq"));
+        assert_eq!(a.get_usize("bits", 4).unwrap(), 2);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("eval");
+        assert_eq!(a.get_or("model", "artifacts/tiny_small.tlm"), "artifacts/tiny_small.tlm");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(["x".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "help");
+    }
+}

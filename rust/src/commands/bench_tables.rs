@@ -1,0 +1,36 @@
+//! Table/figure regeneration subcommands — thin wrappers over
+//! [`bpdq::report::harness`] (the cargo benches call the same functions,
+//! so CLI output and bench output are identical by construction).
+
+use anyhow::Result;
+use bpdq::cli::Args;
+use bpdq::report::harness::{self, HarnessCfg};
+
+fn cfg(args: &Args) -> HarnessCfg {
+    let default_model = match args.get_or("model", "small") {
+        "large" => "artifacts/tiny_large.tlm",
+        path if path.ends_with(".tlm") => path,
+        _ => "artifacts/tiny_small.tlm",
+    };
+    HarnessCfg::new(default_model, args.has("quick"))
+}
+
+pub fn table1(args: &Args) -> Result<()> {
+    harness::table1(&cfg(args)).map(|_| ())
+}
+
+pub fn table2(args: &Args) -> Result<()> {
+    harness::table2(&cfg(args)).map(|_| ())
+}
+
+pub fn table3(args: &Args) -> Result<()> {
+    harness::table3(&cfg(args))
+}
+
+pub fn fig1b(args: &Args) -> Result<()> {
+    harness::fig1b(&cfg(args)).map(|_| ())
+}
+
+pub fn fig3(args: &Args) -> Result<()> {
+    harness::fig3(&cfg(args))
+}

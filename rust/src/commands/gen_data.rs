@@ -1,0 +1,42 @@
+//! `bpdq gen-data` — write the synthetic corpus + vocab artifacts the
+//! python trainer consumes. Rust is the single source of truth for data.
+
+use anyhow::{Context, Result};
+use bpdq::cli::Args;
+use bpdq::data::corpus::{CorpusConfig, CorpusGen, Split};
+use bpdq::data::tokenizer::VOCAB;
+use std::fs;
+use std::path::Path;
+
+pub fn run(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "artifacts");
+    let train_docs = args.get_usize("train-docs", 60_000).map_err(anyhow::Error::msg)?;
+    let eval_docs = args.get_usize("eval-docs", 2_000).map_err(anyhow::Error::msg)?;
+    let calib_docs = args.get_usize("calib-docs", 1_024).map_err(anyhow::Error::msg)?;
+    let seed = args
+        .get_usize("seed", CorpusConfig::default().seed as usize)
+        .map_err(anyhow::Error::msg)? as u64;
+
+    let dir = Path::new(out);
+    fs::create_dir_all(dir).with_context(|| format!("mkdir {out}"))?;
+
+    // vocab.txt: one char per line, newline escaped.
+    let vocab_lines: String = VOCAB
+        .chars()
+        .map(|c| if c == '\n' { "\\n\n".to_string() } else { format!("{c}\n") })
+        .collect();
+    fs::write(dir.join("vocab.txt"), vocab_lines)?;
+
+    let gen = CorpusGen::new(CorpusConfig { seed, ..Default::default() });
+    for (split, n, name) in [
+        (Split::Train, train_docs, "corpus_train.txt"),
+        (Split::Eval, eval_docs, "corpus_eval.txt"),
+        (Split::Calib, calib_docs, "corpus_calib.txt"),
+    ] {
+        let text = gen.generate(split, n);
+        fs::write(dir.join(name), &text)?;
+        println!("wrote {}/{name}: {} docs, {} chars", out, n, text.len());
+    }
+    println!("gen-data done (seed={seed:#x})");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! `bpdq quantize` — quantize a `.tlm` checkpoint and report;
+//! `bpdq eval` — run the benchmark battery on a checkpoint.
+
+use anyhow::{Context, Result};
+use bpdq::cli::Args;
+use bpdq::data::{CorpusConfig, CorpusGen, Split, Tokenizer};
+use bpdq::eval::{run_battery, EvalConfig};
+use bpdq::io::tlm::TlmFile;
+use bpdq::model::pipeline::quantize_model;
+use bpdq::model::Model;
+use bpdq::quant::{BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig};
+use std::path::Path;
+
+/// Parse `--method/--bits/--group/--iters` into a QuantMethod.
+pub fn parse_method(args: &Args) -> Result<QuantMethod> {
+    let bits = args.get_usize("bits", 2).map_err(anyhow::Error::msg)? as u8;
+    let group = args.get_usize("group", 64).map_err(anyhow::Error::msg)?;
+    let iters = args.get_usize("iters", 10).map_err(anyhow::Error::msg)?;
+    let uc = UniformConfig { bits, group_size: group, act_order: !args.has("no-act-order") };
+    Ok(match args.get_or("method", "bpdq") {
+        "fp16" => QuantMethod::Fp16,
+        "rtn" => QuantMethod::Rtn(uc),
+        "gptq" => QuantMethod::Gptq(uc),
+        "awq" => QuantMethod::Awq(uc),
+        "anybcq" => QuantMethod::AnyBcq(BcqConfig { bits, group_size: group, alt_iters: 6 }),
+        "vptq" => QuantMethod::Vptq(VqConfig { bits, ..Default::default() }),
+        "bpdq" => QuantMethod::Bpdq(BpdqConfig {
+            k: bits,
+            group_size: group,
+            iters,
+            ..Default::default()
+        }),
+        other => anyhow::bail!("unknown method `{other}`"),
+    })
+}
+
+/// Load a checkpoint + the shared corpus/tokenizer context.
+pub fn load_context(model_path: &str) -> Result<(Model, CorpusGen, Tokenizer)> {
+    let tlm = TlmFile::load(Path::new(model_path))
+        .with_context(|| format!("load checkpoint {model_path}"))?;
+    let model = Model::from_tlm(&tlm)?;
+    let gen = CorpusGen::new(CorpusConfig::default());
+    let tok = Tokenizer::new();
+    anyhow::ensure!(
+        model.cfg.vocab_size == tok.vocab_size(),
+        "checkpoint vocab {} != tokenizer vocab {}",
+        model.cfg.vocab_size,
+        tok.vocab_size()
+    );
+    Ok((model, gen, tok))
+}
+
+/// Calibration token sequences (same role the paper's 1024 C4 samples
+/// play).
+pub fn calib_seqs(gen: &CorpusGen, tok: &Tokenizer, n: usize, max_len: usize) -> Vec<Vec<u32>> {
+    gen.token_docs(Split::Calib, n, tok)
+        .into_iter()
+        .map(|mut d| {
+            d.truncate(max_len);
+            d
+        })
+        .filter(|d| d.len() >= 8)
+        .collect()
+}
+
+pub fn run_quantize(args: &Args) -> Result<()> {
+    let model_path = args.get_or("model", "artifacts/tiny_small.tlm");
+    let (model, gen, tok) = load_context(model_path)?;
+    let method = parse_method(args)?;
+    let n_calib = args.get_usize("calib", 64).map_err(anyhow::Error::msg)?;
+    let calib = calib_seqs(&gen, &tok, n_calib, model.cfg.max_seq);
+
+    println!("quantizing {model_path} with {} on {} calib seqs…", method.name(), calib.len());
+    let qm = quantize_model(&model, &calib, &method)?;
+    println!(
+        "done in {:.1}s: BPW {:.3}, size {:.2} MiB (fp16 {:.2} MiB)",
+        qm.quant_secs,
+        qm.bits_per_weight(),
+        qm.size_bytes() as f64 / (1 << 20) as f64,
+        model.fp16_bytes() as f64 / (1 << 20) as f64,
+    );
+    let mean_err: f64 =
+        qm.reports.iter().map(|r| r.output_err).sum::<f64>() / qm.reports.len() as f64;
+    println!("mean per-linear output error: {mean_err:.4}");
+
+    if let Some(out) = args.get("out") {
+        qm.model.to_tlm().save(Path::new(out))?;
+        println!("wrote dequantized checkpoint to {out}");
+    }
+    Ok(())
+}
+
+pub fn run_eval(args: &Args) -> Result<()> {
+    let model_path = args.get_or("model", "artifacts/tiny_small.tlm");
+    let (model, gen, tok) = load_context(model_path)?;
+    let cfg = EvalConfig {
+        n_ppl_docs: args.get_usize("ppl-docs", 64).map_err(anyhow::Error::msg)?,
+        n_arith: args.get_usize("n-arith", 64).map_err(anyhow::Error::msg)?,
+        n_choice: args.get_usize("n-choice", 64).map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    println!("evaluating {model_path}…");
+    let s = run_battery(&model, &gen, &tok, &cfg);
+    println!("ppl (Wiki2*)        : {:.3}", s.ppl);
+    println!("arith EM (GSM8K*)   : {:.2}%", s.arith * 100.0);
+    println!("fact 4-way (ARC*)   : {:.2}%", s.fact_choice * 100.0);
+    println!("bool fact (BoolQ*)  : {:.2}%", s.bool_fact * 100.0);
+    println!("contin. (HellaS*)   : {:.2}%", s.continuation * 100.0);
+    println!("classify (TREC*)    : {:.2}%", s.classify * 100.0);
+    Ok(())
+}

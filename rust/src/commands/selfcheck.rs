@@ -1,0 +1,173 @@
+//! `bpdq selfcheck` — end-to-end artifact verification:
+//!
+//! 1. vocab artifact matches the rust tokenizer;
+//! 2. PJRT loads + runs both kernel artifacts and their outputs agree
+//!    with the native rust LUT engine on the same packed weights
+//!    (three-implementation agreement: Pallas ref ↔ AOT HLO ↔ rust LUT);
+//! 3. the decode-step artifact (if present) agrees with the native
+//!    forward of the trained checkpoint.
+
+use anyhow::{Context, Result};
+use bpdq::cli::Args;
+use bpdq::data::Tokenizer;
+use bpdq::io::tlm::TlmFile;
+use bpdq::model::Model;
+use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
+use bpdq::rng::Rng;
+use bpdq::runtime::{self, Runtime};
+use bpdq::tensor::Matrix;
+use std::path::Path;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    let mut failures = 0;
+
+    // 1. vocab sync
+    let tok = Tokenizer::new();
+    match tok.verify_artifact(&dir.join("vocab.txt")) {
+        Ok(()) => println!("[ok] vocab.txt matches rust tokenizer ({} chars)", tok.vocab_size()),
+        Err(e) => {
+            println!("[FAIL] vocab: {e:#}");
+            failures += 1;
+        }
+    }
+
+    // 2. kernel artifacts vs native LUT
+    let mut rt = Runtime::cpu()?;
+    println!("[ok] PJRT client: {}", rt.platform());
+    let (k, d_out, d_in, g) = (2usize, 128usize, 128usize, 64usize);
+    let packed = random_packed(42, d_out, d_in, g, k);
+    let mut rng = Rng::new(43);
+    let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+
+    // native
+    let mut y_native = vec![0.0f32; d_out];
+    bpdq::lut::lut_gemv(&packed, &x, &mut y_native, &mut bpdq::lut::LutScratch::default());
+
+    for name in ["bpdq_gemv", "dequant_gemv"] {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            println!("[FAIL] missing artifact {}", path.display());
+            failures += 1;
+            continue;
+        }
+        let y = run_kernel_artifact(&mut rt, &path, &packed, &x)
+            .with_context(|| name.to_string())?;
+        let max_err = y
+            .iter()
+            .zip(&y_native)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f32, f32::max);
+        if max_err < 1e-3 {
+            println!("[ok] {name}.hlo.txt matches native LUT (max rel err {max_err:.2e})");
+        } else {
+            println!("[FAIL] {name}.hlo.txt deviates (max rel err {max_err:.2e})");
+            failures += 1;
+        }
+    }
+
+    // 3. decode step artifact vs native forward
+    let ckpt = dir.join("tiny_small.tlm");
+    let step_artifact = dir.join("decode_step.hlo.txt");
+    if ckpt.exists() && step_artifact.exists() {
+        let model = Model::from_tlm(&TlmFile::load(&ckpt)?)?;
+        let cache_len: usize = std::fs::read_to_string(dir.join("decode_step.meta"))
+            .ok()
+            .and_then(|m| {
+                m.lines()
+                    .find(|l| l.starts_with("cache_len"))
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|v| v.parse().ok())
+            })
+            .unwrap_or(256);
+        let toks = [5u32, 9, 3, 14, 7];
+        let native = model.forward_full(&toks);
+        let exe = rt.load(&step_artifact)?;
+        let nl = model.cfg.n_layers;
+        let d = model.cfg.d_model;
+        let zeros = vec![0.0f32; nl * cache_len * d];
+        let dims = [nl as i64, cache_len as i64, d as i64];
+        let mut klit = runtime::literal_f32(&zeros, &dims)?;
+        let mut vlit = runtime::literal_f32(&zeros, &dims)?;
+        let mut max_err = 0.0f32;
+        for (t, &tok_id) in toks.iter().enumerate() {
+            let out = exe.run(&[
+                runtime::literal_i32(tok_id as i32),
+                runtime::literal_i32(t as i32),
+                klit,
+                vlit,
+            ])?;
+            let mut it = out.into_iter();
+            let logits = runtime::to_f32_vec(&it.next().context("logits")?)?;
+            klit = it.next().context("k")?;
+            vlit = it.next().context("v")?;
+            for v in 0..model.cfg.vocab_size {
+                let a = native.get(t, v);
+                max_err = max_err.max((logits[v] - a).abs() / (1.0 + a.abs()));
+            }
+        }
+        if max_err < 5e-3 {
+            println!("[ok] decode_step.hlo.txt matches native forward (max rel err {max_err:.2e})");
+        } else {
+            println!("[FAIL] decode_step deviates from native forward ({max_err:.2e})");
+            failures += 1;
+        }
+    } else {
+        println!("[skip] decode_step check ({} or {} missing)", ckpt.display(), step_artifact.display());
+    }
+
+    anyhow::ensure!(failures == 0, "{failures} selfcheck failure(s)");
+    println!("\nselfcheck OK");
+    Ok(())
+}
+
+/// Execute one kernel artifact on packed weights (converting to the
+/// python byte layout: (k, d_out, d_in/8) u8 + (k+1, d_out, ng) f32).
+fn run_kernel_artifact(
+    rt: &mut Runtime,
+    path: &Path,
+    packed: &BitPlanePacked,
+    x: &[f32],
+) -> Result<Vec<f32>> {
+    let (k, d_out, d_in) = (packed.k(), packed.d_out, packed.d_in);
+    let ng = packed.n_groups();
+    let mut bytes = Vec::with_capacity(k * d_out * (d_in / 8));
+    for plane in &packed.planes {
+        for r in 0..d_out {
+            let words = plane.row_words(r);
+            for c in 0..d_in / 8 {
+                bytes.push(((words[c / 4] >> (8 * (c % 4))) & 0xFF) as u8);
+            }
+        }
+    }
+    let mut coeffs = Vec::with_capacity((k + 1) * d_out * ng);
+    for c in &packed.coeffs {
+        coeffs.extend_from_slice(c.data());
+    }
+    let exe = rt.load(path)?;
+    let out = exe.run(&[
+        runtime::literal_f32(x, &[d_in as i64])?,
+        runtime::literal_u8(&bytes, &[k, d_out, d_in / 8])?,
+        runtime::literal_f32(&coeffs, &[(k + 1) as i64, d_out as i64, ng as i64])?,
+    ])?;
+    runtime::to_f32_vec(&out[0])
+}
+
+fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
+    let mut rng = Rng::new(seed);
+    let planes = (0..k)
+        .map(|_| {
+            let dense = Matrix::from_vec(
+                d_out,
+                d_in,
+                (0..d_out * d_in).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect(),
+            );
+            PackedPlane::pack(&dense)
+        })
+        .collect();
+    let ng = d_in.div_ceil(g);
+    let coeffs = (0..=k)
+        .map(|_| Matrix::from_vec(d_out, ng, (0..d_out * ng).map(|_| rng.normal() as f32).collect()))
+        .collect();
+    BitPlanePacked { d_out, d_in, group_size: g, planes, coeffs, coeff_bits: 16 }
+}

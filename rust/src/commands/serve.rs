@@ -1,0 +1,116 @@
+//! `bpdq serve` — quantize a checkpoint, start the router/worker pool on
+//! the chosen engine, push a synthetic request trace through it, and
+//! report serving metrics. The W2-G256-on-one-GPU headline (§4.2) maps
+//! to: quantize at W2-G256, report the exact packed size, and serve.
+
+use anyhow::Result;
+use bpdq::cli::Args;
+use bpdq::data::tasks;
+use bpdq::model::pipeline::quantize_model;
+use bpdq::quant::{BpdqConfig, QuantMethod};
+use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::quantize::{calib_seqs, load_context, parse_method};
+
+pub fn run(args: &Args) -> Result<()> {
+    let model_path = args.get_or("model", "artifacts/tiny_small.tlm");
+    let engine_name = args.get_or("engine", "lut");
+    let n_requests = args.get_usize("requests", 24).map_err(anyhow::Error::msg)?;
+    let n_workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+    let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
+
+    let (model, gen, tok) = load_context(model_path)?;
+    let model = Arc::new(model);
+
+    // Quantize (default BPDQ W2-G256 — the paper's extreme deployment
+    // point) unless serving fp16 natively.
+    let kind: EngineKind = match engine_name {
+        "native-fp16" => EngineKind::Native(model.clone()),
+        "pjrt" => {
+            let artifact = std::path::PathBuf::from(
+                args.get_or("artifact", "artifacts/decode_step.hlo.txt"),
+            );
+            anyhow::ensure!(artifact.exists(), "missing {}", artifact.display());
+            let cache_len = args.get_usize("cache-len", 256).map_err(anyhow::Error::msg)?;
+            EngineKind::Pjrt { model: model.clone(), artifact, cache_len }
+        }
+        "native" | "lut" => {
+            let method = if args.has("method") {
+                parse_method(args)?
+            } else {
+                QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 256, ..Default::default() })
+            };
+            let calib = calib_seqs(&gen, &tok, 48, model.cfg.max_seq);
+            println!("quantizing with {} …", method.name());
+            let qm = quantize_model(&model, &calib, &method)?;
+            println!(
+                "quantized: BPW {:.2}, packed size {:.2} MiB (fp16 {:.2} MiB)",
+                qm.bits_per_weight(),
+                qm.size_bytes() as f64 / (1 << 20) as f64,
+                model.fp16_bytes() as f64 / (1 << 20) as f64
+            );
+            let qmodel = Arc::new(qm.model.clone());
+            if engine_name == "lut" {
+                let packed: HashMap<_, _> = qm
+                    .packed
+                    .iter()
+                    .map(|(k, v)| {
+                        (
+                            k.clone(),
+                            v.as_bit_planes()
+                                .expect("BPDQ/BCQ packing required for the LUT engine")
+                                .clone(),
+                        )
+                    })
+                    .collect();
+                EngineKind::Lut(LutModel::new(qmodel, packed)?)
+            } else {
+                EngineKind::Native(qmodel)
+            }
+        }
+        other => anyhow::bail!("unknown engine `{other}` (native|native-fp16|lut|pjrt)"),
+    };
+
+    println!("starting router: {n_workers} workers, engine={engine_name}");
+    let router = Router::start(
+        RouterConfig {
+            n_workers,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            strategy: Strategy::LeastLoaded,
+        },
+        |_| kind.clone(),
+    )?;
+
+    // Request trace: few-shot arithmetic prompts (the interactive-decode
+    // workload of Table 3).
+    let trace = tasks::gen_arith(0xC0FFEE, n_requests, 2);
+    let rxs: Vec<_> = trace
+        .iter()
+        .map(|t| router.submit(tok.encode(&t.prompt), max_new))
+        .collect();
+    let mut correct = 0usize;
+    for ((_, rx), t) in rxs.into_iter().zip(&trace) {
+        let resp = rx.recv()?;
+        let text = tok.decode(&resp.tokens);
+        if text.starts_with(t.answer.as_str()) {
+            correct += 1;
+        }
+    }
+    let s = router.metrics.summary();
+    println!("\n--- serving report ---");
+    println!("requests completed : {}", s.completed);
+    println!("exact-match        : {:.1}%", 100.0 * correct as f64 / trace.len() as f64);
+    println!("tokens generated   : {}", s.tokens);
+    println!("p50 first-token    : {:.2} ms", s.p50_first_us as f64 / 1e3);
+    println!("p95 first-token    : {:.2} ms", s.p95_first_us as f64 / 1e3);
+    println!("p50 queue delay    : {:.2} ms", s.p50_queue_us as f64 / 1e3);
+    println!("mean batch size    : {:.2}", s.mean_batch);
+    println!("decode             : {:.1} µs/token", s.us_per_token);
+    println!("throughput         : {:.1} tok/s", s.tokens_per_sec);
+    router.shutdown();
+    Ok(())
+}

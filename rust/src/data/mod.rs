@@ -1,0 +1,24 @@
+//! Synthetic data substrate.
+//!
+//! The paper calibrates on C4 and evaluates on WikiText-2 / GSM8K /
+//! MATH500 / ARC-C / BoolQ / HellaSwag / MMLU / LongBench. None of those
+//! are available offline, so this module builds the closest synthetic
+//! equivalents that exercise the same code paths (DESIGN.md §3):
+//!
+//! * [`tokenizer`] — a fixed char-level tokenizer shared (byte-for-byte)
+//!   with the python trainer via `artifacts/vocab.txt`;
+//! * [`corpus`]    — a deterministic template-grammar + Zipf-vocabulary
+//!   corpus generator, with an arithmetic sub-corpus (the "reasoning"
+//!   slice) and held-out splits;
+//! * [`tasks`]     — evaluation task generators: few-shot arithmetic
+//!   exact-match (GSM8K proxy), likelihood-scored multiple choice
+//!   (ARC/BoolQ/HellaSwag/MMLU proxy), passkey retrieval + keyword
+//!   summary + classification (LongBench proxy).
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{CorpusConfig, CorpusGen, Split};
+pub use tasks::{ArithTask, ChoiceTask, LongCtxTask, TaskKind};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,129 @@
+//! Character-level tokenizer shared with the python trainer.
+//!
+//! The vocabulary is a *fixed* ASCII subset (defined here and mirrored in
+//! `python/compile/data_gen.py`); `artifacts/vocab.txt` is written by the
+//! python side at artifact-build time and [`Tokenizer::verify_artifact`]
+//! cross-checks the two definitions so rust and python can never drift.
+//!
+//! A char tokenizer (rather than BPE) keeps the tiny LM's embedding small
+//! and makes exact-match generation tasks trivially checkable; the
+//! quantization study is about weight statistics, not tokenization.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Characters the synthetic corpus can emit. Index in this string = token
+/// id. Keep in sync with `python/compile/data_gen.py::VOCAB`.
+pub const VOCAB: &str =
+    "\n abcdefghijklmnopqrstuvwxyz0123456789.,:;?!'\"()+-*/=<>[]{}@#$%&_^|~";
+
+/// Token id of the padding token (newline doubles as BOS/pad — the corpus
+/// is newline-delimited documents).
+pub const PAD_ID: u32 = 0;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    id_of: HashMap<char, u32>,
+    char_of: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let char_of: Vec<char> = VOCAB.chars().collect();
+        let id_of = char_of
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as u32))
+            .collect();
+        Self { id_of, char_of }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.char_of.len()
+    }
+
+    /// Encode a string; unknown characters map to space (never panics so
+    /// the serving path is total).
+    pub fn encode(&self, s: &str) -> Vec<u32> {
+        s.chars()
+            .map(|c| {
+                self.id_of
+                    .get(&c)
+                    .copied()
+                    .unwrap_or_else(|| self.id_of[&' '])
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.char_of
+                    .get(i as usize)
+                    .copied()
+                    .unwrap_or('\u{FFFD}')
+            })
+            .collect()
+    }
+
+    /// Check the artifact vocab file written by python matches this
+    /// definition exactly.
+    pub fn verify_artifact(&self, path: &Path) -> anyhow::Result<()> {
+        let contents = std::fs::read_to_string(path)?;
+        // File format: one char per line, escaped \n as literal "\\n".
+        let chars: Vec<char> = contents
+            .lines()
+            .map(|l| if l == "\\n" { '\n' } else { l.chars().next().unwrap_or(' ') })
+            .collect();
+        if chars != self.char_of {
+            anyhow::bail!(
+                "vocab mismatch: artifact has {} chars, tokenizer has {}",
+                chars.len(),
+                self.char_of.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new();
+        let s = "the answer is 42.\nnext line";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_maps_to_space() {
+        let t = Tokenizer::new();
+        let ids = t.encode("héllo");
+        assert_eq!(t.decode(&ids), "h llo");
+    }
+
+    #[test]
+    fn ids_dense_and_stable() {
+        let t = Tokenizer::new();
+        assert_eq!(t.encode("\n")[0], PAD_ID);
+        assert_eq!(t.vocab_size(), VOCAB.chars().count());
+        // every id decodes to exactly the vocab char
+        for (i, c) in VOCAB.chars().enumerate() {
+            assert_eq!(t.decode(&[i as u32]), c.to_string());
+        }
+    }
+
+    #[test]
+    fn out_of_range_decode_is_total() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&[9999]), "\u{FFFD}");
+    }
+}

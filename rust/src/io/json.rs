@@ -1,0 +1,160 @@
+//! Tiny JSON writer (reports & metrics only — we never parse JSON).
+
+use std::fmt::Write;
+
+/// Incremental JSON object/array builder producing compact valid JSON.
+#[derive(Default)]
+pub struct JsonWriter {
+    buf: String,
+    needs_comma: Vec<bool>,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn pre_value(&mut self) {
+        if let Some(top) = self.needs_comma.last_mut() {
+            if *top {
+                self.buf.push(',');
+            }
+            *top = true;
+        }
+    }
+
+    pub fn begin_object(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push('{');
+        self.needs_comma.push(false);
+        self
+    }
+
+    pub fn end_object(&mut self) -> &mut Self {
+        self.needs_comma.pop();
+        self.buf.push('}');
+        self
+    }
+
+    pub fn begin_array(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push('[');
+        self.needs_comma.push(false);
+        self
+    }
+
+    pub fn end_array(&mut self) -> &mut Self {
+        self.needs_comma.pop();
+        self.buf.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.pre_value();
+        Self::push_escaped(&mut self.buf, k);
+        self.buf.push(':');
+        // The following value must not emit a comma.
+        if let Some(top) = self.needs_comma.last_mut() {
+            *top = false;
+        }
+        self
+    }
+
+    pub fn string(&mut self, v: &str) -> &mut Self {
+        self.pre_value();
+        Self::push_escaped(&mut self.buf, v);
+        self
+    }
+
+    pub fn number(&mut self, v: f64) -> &mut Self {
+        self.pre_value();
+        if v.is_finite() {
+            let _ = write!(self.buf, "{v}");
+        } else {
+            // JSON has no inf/nan; stringify (ppl can overflow for AWQ-W2!)
+            Self::push_escaped(&mut self.buf, &v.to_string());
+        }
+        self
+    }
+
+    pub fn int(&mut self, v: i64) -> &mut Self {
+        self.pre_value();
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    fn push_escaped(buf: &mut String, s: &str) {
+        buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => buf.push_str("\\\""),
+                '\\' => buf.push_str("\\\\"),
+                '\n' => buf.push_str("\\n"),
+                '\t' => buf.push_str("\\t"),
+                '\r' => buf.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(buf, "\\u{:04x}", c as u32);
+                }
+                c => buf.push(c),
+            }
+        }
+        buf.push('"');
+    }
+
+    pub fn finish(self) -> String {
+        debug_assert!(self.needs_comma.is_empty(), "unbalanced json");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_with_values() {
+        let mut w = JsonWriter::new();
+        w.begin_object()
+            .key("name")
+            .string("bpdq")
+            .key("bits")
+            .int(2)
+            .key("ppl")
+            .number(8.35)
+            .key("ok")
+            .bool(true)
+            .end_object();
+        assert_eq!(w.finish(), r#"{"name":"bpdq","bits":2,"ppl":8.35,"ok":true}"#);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let mut w = JsonWriter::new();
+        w.begin_object().key("rows").begin_array();
+        for i in 0..3 {
+            w.begin_array().int(i).int(i * 2).end_array();
+        }
+        w.end_array().end_object();
+        assert_eq!(w.finish(), r#"{"rows":[[0,0],[1,2],[2,4]]}"#);
+    }
+
+    #[test]
+    fn escaping() {
+        let mut w = JsonWriter::new();
+        w.begin_object().key("s").string("a\"b\\c\nd").end_object();
+        assert_eq!(w.finish(), "{\"s\":\"a\\\"b\\\\c\\nd\"}");
+    }
+
+    #[test]
+    fn nonfinite_number_stringified() {
+        let mut w = JsonWriter::new();
+        w.begin_array().number(f64::INFINITY).end_array();
+        assert_eq!(w.finish(), r#"["inf"]"#);
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal I/O codecs (serde is not in the offline vendor set).
+//!
+//! * [`json`] — a small JSON *writer* for reports/metrics (we never need
+//!   to parse arbitrary JSON; the artifact metadata we do read uses the
+//!   line-oriented formats below).
+//! * binary helpers — little-endian readers/writers for the `.tlm`
+//!   weight format exchanged with the python trainer (see
+//!   `python/compile/export_weights.py` for the mirrored writer).
+
+pub mod json;
+pub mod tlm;
+
+use std::io::{self, Read, Write};
+
+pub fn write_u32<W: Write>(w: &mut W, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn write_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn write_f32<W: Write>(w: &mut W, v: f32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn write_f32s<W: Write>(w: &mut W, vs: &[f32]) -> io::Result<()> {
+    // Bulk byte conversion: one write syscall per slice.
+    let mut buf = Vec::with_capacity(vs.len() * 4);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+pub fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn read_f32<R: Read>(r: &mut R) -> io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub fn read_f32s<R: Read>(r: &mut R, n: usize) -> io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a length-prefixed UTF-8 string.
+pub fn write_str<W: Write>(w: &mut W, s: &str) -> io::Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())
+}
+
+pub fn read_str<R: Read>(r: &mut R) -> io::Result<String> {
+    let n = read_u32(r)? as usize;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrips() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_u64(&mut buf, u64::MAX - 7).unwrap();
+        write_f32(&mut buf, -1.5e-3).unwrap();
+        write_str(&mut buf, "héllo wörld").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_u32(&mut r).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 7);
+        assert_eq!(read_f32(&mut r).unwrap(), -1.5e-3);
+        assert_eq!(read_str(&mut r).unwrap(), "héllo wörld");
+    }
+
+    #[test]
+    fn f32_slice_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &xs).unwrap();
+        let got = read_f32s(&mut &buf[..], xs.len()).unwrap();
+        assert_eq!(xs, got);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let buf = [1u8, 2];
+        assert!(read_u32(&mut &buf[..]).is_err());
+    }
+}

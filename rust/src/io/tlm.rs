@@ -1,0 +1,188 @@
+//! `.tlm` — the tiny-LM weight interchange format.
+//!
+//! Written by `python/compile/export_weights.py` after training, read by
+//! [`crate::model`]. Layout (all little-endian):
+//!
+//! ```text
+//! magic   b"TLM1"
+//! u32 ×6  vocab_size, d_model, n_layers, n_heads, d_ff, max_seq
+//! u32     n_tensors
+//! repeat n_tensors:
+//!   str   name          (u32 length + utf-8)
+//!   u32   rows, cols    (cols == 1 for vectors)
+//!   f32[] rows*cols     (row-major)
+//! ```
+
+use super::{read_f32s, read_str, read_u32, write_f32s, write_str, write_u32};
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"TLM1";
+
+/// Model hyper-parameters carried in the header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TlmHeader {
+    pub vocab_size: u32,
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub d_ff: u32,
+    pub max_seq: u32,
+}
+
+/// A parsed checkpoint: header + named tensors.
+#[derive(Clone, Debug)]
+pub struct TlmFile {
+    pub header: TlmHeader,
+    pub tensors: BTreeMap<String, Matrix>,
+}
+
+impl TlmFile {
+    pub fn new(header: TlmHeader) -> Self {
+        Self { header, tensors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, m: Matrix) {
+        self.tensors.insert(name.to_string(), m);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Matrix> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor `{name}` missing from checkpoint"))
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        for v in [
+            self.header.vocab_size,
+            self.header.d_model,
+            self.header.n_layers,
+            self.header.n_heads,
+            self.header.d_ff,
+            self.header.max_seq,
+        ] {
+            write_u32(w, v)?;
+        }
+        write_u32(w, self.tensors.len() as u32)?;
+        for (name, m) in &self.tensors {
+            write_str(w, name)?;
+            write_u32(w, m.rows() as u32)?;
+            write_u32(w, m.cols() as u32)?;
+            write_f32s(w, m.data())?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic {magic:?}: not a .tlm file");
+        }
+        let header = TlmHeader {
+            vocab_size: read_u32(r)?,
+            d_model: read_u32(r)?,
+            n_layers: read_u32(r)?,
+            n_heads: read_u32(r)?,
+            d_ff: read_u32(r)?,
+            max_seq: read_u32(r)?,
+        };
+        let n = read_u32(r)? as usize;
+        if n > 100_000 {
+            bail!("implausible tensor count {n}");
+        }
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name = read_str(r)?;
+            let rows = read_u32(r)? as usize;
+            let cols = read_u32(r)? as usize;
+            if rows.saturating_mul(cols) > 1 << 28 {
+                bail!("implausible tensor size {rows}x{cols} for `{name}`");
+            }
+            let data = read_f32s(r, rows * cols)?;
+            tensors.insert(name, Matrix::from_vec(rows, cols, data));
+        }
+        Ok(Self { header, tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Self::read_from(&mut BufReader::new(f))
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.tensors.values().map(|m| m.rows() * m.cols()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TlmFile {
+        let header = TlmHeader {
+            vocab_size: 68,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 64,
+        };
+        let mut f = TlmFile::new(header);
+        f.insert("embed", Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]));
+        f.insert("l0.wq", Matrix::full(4, 4, 0.5));
+        f
+    }
+
+    #[test]
+    fn roundtrip() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let g = TlmFile::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(g.header, f.header);
+        assert_eq!(g.tensors.len(), 2);
+        assert_eq!(g.get("embed").unwrap().row(1), &[4., 5., 6.]);
+        assert_eq!(g.n_params(), 6 + 16);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        assert!(TlmFile::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_names_it() {
+        let f = sample();
+        let err = f.get("nonexistent").unwrap_err().to_string();
+        assert!(err.contains("nonexistent"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("bpdq_tlm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.tlm");
+        let f = sample();
+        f.save(&path).unwrap();
+        let g = TlmFile::load(&path).unwrap();
+        assert_eq!(g.header, f.header);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,29 @@
+//! # BPDQ — Bit-Plane Decomposition Quantization on a Variable Grid
+//!
+//! Full-stack reproduction of the BPDQ paper (Chen et al., ICML 2026):
+//! a post-training quantizer that replaces the fixed (shape-invariant)
+//! quantization grid with a per-group *variable grid* built from bit-planes
+//! and scalar coefficients, optimized under the Hessian-induced geometry.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — quantization pipeline, evaluation harness,
+//!   serving stack (router / batcher / KV manager / decode engine),
+//!   PJRT runtime for AOT artifacts.
+//! * **L2/L1 (python/, build-time only)** — JAX model + Pallas kernels,
+//!   lowered once to HLO text under `artifacts/`.
+
+pub mod benchkit;
+pub mod cli;
+pub mod data;
+pub mod eval;
+pub mod io;
+pub mod linalg;
+pub mod lut;
+pub mod model;
+pub mod proptest_lite;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod serving;
+pub mod tensor;

@@ -1,0 +1,501 @@
+//! Dense linear algebra for the Hessian-induced geometry.
+//!
+//! Everything the paper's optimizer needs, in f64 (the Hessian of a
+//! Zipf-skewed activation stream is badly conditioned; f32 Cholesky loses
+//! the trailing groups):
+//!
+//! * [`cholesky_lower`] — `H = L Lᵀ`,
+//! * [`inv_upper_factor`] — `U = chol(H⁻¹)` with `H⁻¹ = Uᵀ U`, the exact
+//!   factor GPTQ/BPDQ propagate errors through (paper Eq. 3–4),
+//! * triangular solves and inverses,
+//! * [`wls`] — the damped weighted least-squares solver behind the
+//!   scalar-coefficient fit (paper Eq. 6).
+
+use crate::tensor::MatrixF64;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("singular triangular factor at {0}")]
+    SingularTriangular(usize),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+pub type Result<T> = std::result::Result<T, LinalgError>;
+
+/// Lower-triangular Cholesky factor: `A = L Lᵀ`. `A` must be symmetric
+/// positive definite (upper triangle is read as the mirror of the lower).
+pub fn cholesky_lower(a: &MatrixF64) -> Result<MatrixF64> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(LinalgError::Shape(format!("{:?} not square", a.shape())));
+    }
+    let mut l = MatrixF64::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // s = A[i,j] - Σ_{k<j} L[i,k] L[j,k]
+            let mut s = a.get(i, j);
+            let li = l.row(i);
+            let lj = l.row(j);
+            for k in 0..j {
+                s -= li[k] * lj[k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return Err(LinalgError::NotPositiveDefinite(i, s));
+                }
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Invert a lower-triangular matrix in place (forward substitution per
+/// column of the identity).
+pub fn invert_lower(l: &MatrixF64) -> Result<MatrixF64> {
+    let n = l.rows();
+    let mut inv = MatrixF64::zeros(n, n);
+    for j in 0..n {
+        // Solve L x = e_j.
+        for i in j..n {
+            let mut s = if i == j { 1.0 } else { 0.0 };
+            for k in j..i {
+                s -= l.get(i, k) * inv.get(k, j);
+            }
+            let d = l.get(i, i);
+            if d == 0.0 || !d.is_finite() {
+                return Err(LinalgError::SingularTriangular(i));
+            }
+            inv.set(i, j, s / d);
+        }
+    }
+    Ok(inv)
+}
+
+/// Invert an upper-triangular matrix.
+pub fn invert_upper(u: &MatrixF64) -> Result<MatrixF64> {
+    // Uᵀ is lower; (Uᵀ)⁻¹ = (U⁻¹)ᵀ.
+    Ok(invert_lower(&u.transpose())?.transpose())
+}
+
+/// The GPTQ/BPDQ propagation factor: upper-triangular `U` with
+/// `H⁻¹ = Uᵀ U`, computed as `U = (Lᵀ)⁻¹` from `H = L Lᵀ`.
+///
+/// Derivation: `H⁻¹ = (L Lᵀ)⁻¹ = L⁻ᵀ L⁻¹ = (L⁻ᵀ)(L⁻ᵀ)ᵀ`... careful:
+/// we need `Uᵀ U` with U upper. `L⁻¹` is lower, so `H⁻¹ = L⁻ᵀ L⁻¹ =
+/// (L⁻¹)ᵀ (L⁻¹)` which is `UᵀU` with `U = L⁻¹`?? `L⁻¹` is *lower*
+/// triangular. The standard GPTQ implementation instead uses
+/// `U = cholesky(H⁻¹, upper=True)`, i.e. the upper factor `R` of
+/// `H⁻¹ = RᵀR`. We compute it directly: invert H via the Cholesky of H,
+/// then take the (upper) Cholesky of H⁻¹ by factoring the reversed
+/// matrix — equivalently via the RQ-like identity below.
+pub fn inv_upper_factor(h: &MatrixF64) -> Result<MatrixF64> {
+    let n = h.rows();
+    // H⁻¹ from Cholesky of H.
+    let l = cholesky_lower(h)?;
+    let linv = invert_lower(&l)?; // H⁻¹ = linvᵀ · linv
+    let mut hinv = MatrixF64::zeros(n, n);
+    // hinv = linvᵀ @ linv — accumulate with k-outer loop (linv rows).
+    for k in 0..n {
+        let row = linv.row(k);
+        for i in 0..n {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let x = hinv.get(i, j) + v * row[j];
+                hinv.set(i, j, x);
+            }
+        }
+    }
+    cholesky_upper(&hinv)
+}
+
+/// Upper-triangular Cholesky: `A = Uᵀ U` (U upper). Computed row-by-row
+/// from the top-left, mirroring `cholesky_lower` on the transpose order.
+pub fn cholesky_upper(a: &MatrixF64) -> Result<MatrixF64> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(LinalgError::Shape(format!("{:?} not square", a.shape())));
+    }
+    let mut u = MatrixF64::zeros(n, n);
+    for i in 0..n {
+        // diagonal
+        let mut s = a.get(i, i);
+        for k in 0..i {
+            let uki = u.get(k, i);
+            s -= uki * uki;
+        }
+        if s <= 0.0 || !s.is_finite() {
+            return Err(LinalgError::NotPositiveDefinite(i, s));
+        }
+        let uii = s.sqrt();
+        u.set(i, i, uii);
+        for j in (i + 1)..n {
+            let mut s = a.get(i, j);
+            for k in 0..i {
+                s -= u.get(k, i) * u.get(k, j);
+            }
+            u.set(i, j, s / uii);
+        }
+    }
+    Ok(u)
+}
+
+/// Solve `U x = b` with U upper triangular (back substitution).
+pub fn solve_upper(u: &MatrixF64, b: &[f64]) -> Result<Vec<f64>> {
+    let n = u.rows();
+    if b.len() != n {
+        return Err(LinalgError::Shape("solve_upper rhs".into()));
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        let row = u.row(i);
+        for j in (i + 1)..n {
+            s -= row[j] * x[j];
+        }
+        if row[i] == 0.0 {
+            return Err(LinalgError::SingularTriangular(i));
+        }
+        x[i] = s / row[i];
+    }
+    Ok(x)
+}
+
+/// Solve `L x = b` with L lower triangular (forward substitution).
+pub fn solve_lower(l: &MatrixF64, b: &[f64]) -> Result<Vec<f64>> {
+    let n = l.rows();
+    if b.len() != n {
+        return Err(LinalgError::Shape("solve_lower rhs".into()));
+    }
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for j in 0..i {
+            s -= row[j] * x[j];
+        }
+        if row[i] == 0.0 {
+            return Err(LinalgError::SingularTriangular(i));
+        }
+        x[i] = s / row[i];
+    }
+    Ok(x)
+}
+
+/// Solve `Uᵀ x = b` with U upper triangular (Uᵀ is lower ⇒ forward subst
+/// reading U's columns). Used for the `U_loc^{-T} v` products in Eq. 6.
+pub fn solve_upper_transpose(u: &MatrixF64, b: &[f64]) -> Result<Vec<f64>> {
+    let n = u.rows();
+    if b.len() != n {
+        return Err(LinalgError::Shape("solve_upper_transpose rhs".into()));
+    }
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= u.get(j, i) * x[j];
+        }
+        let d = u.get(i, i);
+        if d == 0.0 {
+            return Err(LinalgError::SingularTriangular(i));
+        }
+        x[i] = s / d;
+    }
+    Ok(x)
+}
+
+/// Damped weighted least squares: minimize `‖A c − b‖² + α‖c‖²` via the
+/// normal equations `(AᵀA + αI) c = Aᵀ b`, solved with Cholesky.
+///
+/// This is exactly the solver behind the paper's Eq. 6 once the rows have
+/// been pre-whitened by `U_loc^{-T}` (the caller does the whitening).
+pub fn wls(a: &MatrixF64, b: &[f64], damping: f64) -> Result<Vec<f64>> {
+    let (m, p) = a.shape();
+    if b.len() != m {
+        return Err(LinalgError::Shape("wls rhs".into()));
+    }
+    // Normal matrix N = AᵀA + αI (p×p, p = k+1 ≤ 9 — tiny).
+    let mut n_mat = MatrixF64::zeros(p, p);
+    for r in 0..m {
+        let row = a.row(r);
+        for i in 0..p {
+            let ri = row[i];
+            if ri == 0.0 {
+                continue;
+            }
+            for j in i..p {
+                let v = n_mat.get(i, j) + ri * row[j];
+                n_mat.set(i, j, v);
+            }
+        }
+    }
+    for i in 0..p {
+        for j in 0..i {
+            n_mat.set(i, j, n_mat.get(j, i));
+        }
+        n_mat.set(i, i, n_mat.get(i, i) + damping);
+    }
+    // rhs = Aᵀ b
+    let mut rhs = vec![0.0; p];
+    for r in 0..m {
+        let row = a.row(r);
+        let br = b[r];
+        if br == 0.0 {
+            continue;
+        }
+        for i in 0..p {
+            rhs[i] += row[i] * br;
+        }
+    }
+    let l = cholesky_lower(&n_mat)?;
+    let y = solve_lower(&l, &rhs)?;
+    solve_upper(&l.transpose(), &y)
+}
+
+/// Symmetrize + add `alpha * mean(diag) * I` damping (the GPTQ "percdamp"
+/// convention) so the Cholesky always exists.
+pub fn damp_in_place(h: &mut MatrixF64, alpha: f64) {
+    let n = h.rows();
+    let mut diag_mean = 0.0;
+    for i in 0..n {
+        diag_mean += h.get(i, i);
+    }
+    diag_mean = (diag_mean / n as f64).max(1e-12);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let s = 0.5 * (h.get(i, j) + h.get(j, i));
+            h.set(i, j, s);
+            h.set(j, i, s);
+        }
+        h.set(i, i, h.get(i, i) + alpha * diag_mean);
+    }
+    // Dead columns (channels never activated) get the damping floor too.
+    for i in 0..n {
+        if h.get(i, i) <= 0.0 {
+            h.set(i, i, alpha * diag_mean);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::matmul_f64;
+
+    fn rand_spd(rng: &mut Rng, n: usize) -> MatrixF64 {
+        // A = G Gᵀ + n*I, G ~ N(0,1)^{n×n}
+        let g = MatrixF64::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        let mut a = matmul_f64(&g, &g.transpose());
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &n in &[1, 2, 5, 16, 40] {
+            let a = rand_spd(&mut rng, n);
+            let l = cholesky_lower(&a).unwrap();
+            let rec = matmul_f64(&l, &l.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (rec.get(i, j) - a.get(i, j)).abs() < 1e-8 * (1.0 + a.get(i, j).abs()),
+                        "n={n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_upper_reconstructs() {
+        let mut rng = Rng::new(2);
+        for &n in &[1, 3, 10, 33] {
+            let a = rand_spd(&mut rng, n);
+            let u = cholesky_upper(&a).unwrap();
+            // upper triangular?
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(u.get(i, j), 0.0);
+                }
+            }
+            let rec = matmul_f64(&u.transpose(), &u);
+            for i in 0..n {
+                for j in 0..n {
+                    assert!((rec.get(i, j) - a.get(i, j)).abs() < 1e-8 * (1.0 + a.get(i, j).abs()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let a = MatrixF64::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(matches!(
+            cholesky_lower(&a),
+            Err(LinalgError::NotPositiveDefinite(_, _))
+        ));
+    }
+
+    #[test]
+    fn invert_lower_correct() {
+        let mut rng = Rng::new(3);
+        let n = 12;
+        let a = rand_spd(&mut rng, n);
+        let l = cholesky_lower(&a).unwrap();
+        let linv = invert_lower(&l).unwrap();
+        let eye = matmul_f64(&l, &linv);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((eye.get(i, j) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn inv_upper_factor_identity() {
+        // For H = I, U should satisfy UᵀU = I with U upper ⇒ U = I.
+        let n = 6;
+        let mut h = MatrixF64::zeros(n, n);
+        for i in 0..n {
+            h.set(i, i, 1.0);
+        }
+        let u = inv_upper_factor(&h).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((u.get(i, j) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn inv_upper_factor_satisfies_identity() {
+        let mut rng = Rng::new(4);
+        for &n in &[2, 8, 24] {
+            let h = rand_spd(&mut rng, n);
+            let u = inv_upper_factor(&h).unwrap();
+            // UᵀU should equal H⁻¹  ⇔  Uᵀ U H = I
+            let uu = matmul_f64(&u.transpose(), &u);
+            let prod = matmul_f64(&uu, &h);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (prod.get(i, j) - want).abs() < 1e-6,
+                        "n={n} ({i},{j}) got {}",
+                        prod.get(i, j)
+                    );
+                }
+            }
+            // strictly upper triangular below diag
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(u.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(5);
+        let n = 10;
+        let a = rand_spd(&mut rng, n);
+        let l = cholesky_lower(&a).unwrap();
+        let u = l.transpose();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x = solve_lower(&l, &b).unwrap();
+        // check L x = b
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += l.get(i, j) * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+        let y = solve_upper(&u, &b).unwrap();
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += u.get(i, j) * y[j];
+            }
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+        // Uᵀ x = b
+        let z = solve_upper_transpose(&u, &b).unwrap();
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += u.get(j, i) * z[j];
+            }
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn wls_exact_when_overdetermined_consistent() {
+        // b = A c*, damping→0 recovers c*.
+        let mut rng = Rng::new(6);
+        let (m, p) = (20, 3);
+        let a = MatrixF64::from_vec(m, p, (0..m * p).map(|_| rng.normal()).collect());
+        let cstar = [1.5, -2.0, 0.25];
+        let b: Vec<f64> = (0..m)
+            .map(|r| (0..p).map(|j| a.get(r, j) * cstar[j]).sum())
+            .collect();
+        let c = wls(&a, &b, 1e-12).unwrap();
+        for j in 0..p {
+            assert!((c[j] - cstar[j]).abs() < 1e-6, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn wls_stationarity() {
+        // Perturbing the WLS solution must not decrease the objective.
+        let mut rng = Rng::new(7);
+        let (m, p) = (30, 4);
+        let a = MatrixF64::from_vec(m, p, (0..m * p).map(|_| rng.normal()).collect());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let damping = 1e-4;
+        let c = wls(&a, &b, damping).unwrap();
+        let obj = |c: &[f64]| -> f64 {
+            let mut s = 0.0;
+            for r in 0..m {
+                let pred: f64 = (0..p).map(|j| a.get(r, j) * c[j]).sum();
+                s += (pred - b[r]).powi(2);
+            }
+            s + damping * c.iter().map(|x| x * x).sum::<f64>()
+        };
+        let base = obj(&c);
+        for j in 0..p {
+            for delta in [-1e-3, 1e-3] {
+                let mut c2 = c.clone();
+                c2[j] += delta;
+                assert!(obj(&c2) >= base - 1e-12, "perturb {j} {delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn damping_rescues_singular() {
+        let n = 5;
+        let mut h = MatrixF64::zeros(n, n); // all-zero "Hessian": dead layer
+        damp_in_place(&mut h, 1e-2);
+        // now must factor
+        assert!(cholesky_lower(&h).is_ok());
+    }
+}

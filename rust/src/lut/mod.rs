@@ -1,0 +1,247 @@
+//! Native bit-plane LUT-GEMV — the serving hot path (paper §4.3,
+//! LUT-GEMM adapted to CPU lanes).
+//!
+//! For a BPDQ/BCQ-packed layer `Ŵ = REP(C₀) + Σᵢ REP(Cᵢ)⊙Bᵢ`:
+//!
+//! ```text
+//! y_r = Σ_groups [ C₀[r,g]·S_g  +  Σᵢ Cᵢ[r,g] · (Bᵢ[r, g-cols] · x_g) ]
+//! ```
+//!
+//! The binary dot products are evaluated through a subset-sum **LUT over
+//! 8-wide activation chunks** (256 entries each, built in O(256) by Gray-
+//! style incremental sums), so decode cost is independent of the weight
+//! bit-width beyond the per-plane gather — the property that gives the
+//! paper's flat W2/W3/W4 decode latency (Table 3).
+
+use crate::quant::packing::BitPlanePacked;
+use crate::tensor::Matrix;
+
+/// Per-call workspace (reused across layers/tokens to keep the decode
+/// loop allocation-free).
+#[derive(Default)]
+pub struct LutScratch {
+    lut: Vec<f32>,
+    group_sums: Vec<f32>,
+}
+
+/// Build the subset-sum table for `x`: `lut[c*256+p] = Σ_i x[8c+i]·bit(p,i)`.
+pub fn build_lut(x: &[f32], scratch: &mut LutScratch) {
+    let n_chunks = x.len().div_ceil(8);
+    scratch.lut.resize(n_chunks * 256, 0.0);
+    for c in 0..n_chunks {
+        let base = c * 256;
+        let lut = &mut scratch.lut[base..base + 256];
+        lut[0] = 0.0;
+        // incremental: lut[p] = lut[p without lowest set bit] + x[bit]
+        for p in 1usize..256 {
+            let lsb = p & p.wrapping_neg();
+            let bit = lsb.trailing_zeros() as usize;
+            let xi = x.get(c * 8 + bit).copied().unwrap_or(0.0);
+            lut[p] = lut[p ^ lsb] + xi;
+        }
+    }
+}
+
+/// y = Ŵ x for a packed record, using the LUT algorithm.
+pub fn lut_gemv(packed: &BitPlanePacked, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
+    assert_eq!(x.len(), packed.d_in);
+    assert_eq!(y.len(), packed.d_out);
+    let g = packed.group_size;
+    let ng = packed.n_groups();
+    let k = packed.k();
+
+    build_lut(x, scratch);
+
+    // Group activation sums (bias term).
+    scratch.group_sums.resize(ng, 0.0);
+    for grp in 0..ng {
+        let c0 = grp * g;
+        let c1 = (c0 + g).min(packed.d_in);
+        scratch.group_sums[grp] = x[c0..c1].iter().sum();
+    }
+
+    let chunks_per_group = g / 8;
+    // Total byte-chunks is bounded by d_in (the packed words round up to
+    // 32-bit granularity, so `words.len()*4` can overshoot by up to 3).
+    let n_chunks = packed.d_in.div_ceil(8);
+    let lut = &scratch.lut;
+    for (r, yr) in y.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        // bias term: Σ_g c0[r,g] · S_g
+        let c0row = packed.coeffs[0].row(r);
+        for grp in 0..ng {
+            acc += c0row[grp] * scratch.group_sums[grp];
+        }
+        // plane terms via the LUT
+        for i in 0..k {
+            let words = packed.planes[i].row_words(r);
+            let crow = packed.coeffs[i + 1].row(r);
+            let mut chunk = 0usize;
+            for (grp, &cv) in crow.iter().enumerate() {
+                if cv == 0.0 {
+                    chunk += chunks_per_group;
+                    continue;
+                }
+                let mut dot = 0.0f32;
+                let chunk_end = (((grp + 1) * g).div_ceil(8)).min(n_chunks);
+                while chunk < chunk_end {
+                    let byte = (words[chunk / 4] >> (8 * (chunk % 4))) & 0xFF;
+                    dot += lut[chunk * 256 + byte as usize];
+                    chunk += 1;
+                }
+                acc += cv * dot;
+            }
+        }
+        *yr = acc;
+    }
+}
+
+/// Reference: dequantize then dense matvec (the "Torch/Triton dequant"
+/// baseline of Table 3).
+pub fn dequant_gemv(packed: &BitPlanePacked, x: &[f32]) -> Vec<f32> {
+    let w = packed.dequant();
+    crate::tensor::matvec(&w, x)
+}
+
+/// fp32 dense matvec baseline (the fp16 row of Table 3; we compute in
+/// f32 — CPU has no fp16 ALU — but charge fp16 bytes in size columns).
+pub fn dense_gemv(w: &Matrix, x: &[f32]) -> Vec<f32> {
+    crate::tensor::matvec(w, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packing::PackedPlane;
+    use crate::rng::Rng;
+
+    fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
+        let mut rng = Rng::new(seed);
+        let planes = (0..k)
+            .map(|_| {
+                let dense = Matrix::from_vec(
+                    d_out,
+                    d_in,
+                    (0..d_out * d_in).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect(),
+                );
+                PackedPlane::pack(&dense)
+            })
+            .collect();
+        let ng = d_in.div_ceil(g);
+        let coeffs = (0..=k)
+            .map(|_| {
+                Matrix::from_vec(d_out, ng, (0..d_out * ng).map(|_| rng.normal() as f32).collect())
+            })
+            .collect();
+        BitPlanePacked { d_out, d_in, group_size: g, planes, coeffs, coeff_bits: 16 }
+    }
+
+    #[test]
+    fn build_lut_subset_sums() {
+        let x: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        let mut s = LutScratch::default();
+        build_lut(&x, &mut s);
+        assert_eq!(s.lut[0], 0.0);
+        assert_eq!(s.lut[0b1], 1.0);
+        assert_eq!(s.lut[0b11], 3.0);
+        assert_eq!(s.lut[0b10000000], 8.0);
+        assert_eq!(s.lut[0xFF], 36.0);
+        // random spot-check
+        let p = 0b1010_0110usize;
+        let want: f32 = (0..8).filter(|i| (p >> i) & 1 == 1).map(|i| x[i]).sum();
+        assert_eq!(s.lut[p], want);
+    }
+
+    #[test]
+    fn lut_gemv_matches_dequant_gemv() {
+        let mut rng = Rng::new(7);
+        for &(d_out, d_in, g, k) in
+            &[(4usize, 32usize, 8usize, 1usize), (8, 64, 16, 2), (16, 128, 64, 3), (5, 96, 32, 4)]
+        {
+            let packed = random_packed(d_out as u64, d_out, d_in, g, k);
+            let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+            let want = dequant_gemv(&packed, &x);
+            let mut got = vec![0.0f32; d_out];
+            let mut scratch = LutScratch::default();
+            lut_gemv(&packed, &x, &mut got, &mut scratch);
+            for r in 0..d_out {
+                assert!(
+                    (got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()),
+                    "({d_out},{d_in},{g},{k}) row {r}: {} vs {}",
+                    got[r],
+                    want[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // Using the same scratch across shapes must not leak state.
+        let mut scratch = LutScratch::default();
+        let p1 = random_packed(1, 8, 64, 16, 2);
+        let p2 = random_packed(2, 4, 32, 8, 1);
+        let mut rng = Rng::new(8);
+        let x1: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let x2: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0; 8];
+        lut_gemv(&p1, &x1, &mut y, &mut scratch);
+        let mut y2 = vec![0.0; 4];
+        lut_gemv(&p2, &x2, &mut y2, &mut scratch);
+        let want = dequant_gemv(&p2, &x2);
+        for r in 0..4 {
+            assert!((y2[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()));
+        }
+    }
+
+    #[test]
+    fn non_multiple_of_32_d_in() {
+        // d_in=344 (the tiny-LM d_ff): 43 byte-chunks but 11 u32 words —
+        // the gather must stop at the true chunk count (regression test
+        // for an out-of-bounds on the w2 projection).
+        let mut rng = Rng::new(12);
+        for &(d_in, g) in &[(344usize, 344usize), (344, 8), (40, 8), (24, 24)] {
+            let packed = random_packed(100 + d_in as u64, 3, d_in, g, 2);
+            let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+            let want = dequant_gemv(&packed, &x);
+            let mut got = vec![0.0f32; 3];
+            lut_gemv(&packed, &x, &mut got, &mut LutScratch::default());
+            for r in 0..3 {
+                assert!(
+                    (got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()),
+                    "d_in={d_in} g={g} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn group_larger_than_d_in() {
+        // W2-G256 on a 128-wide layer: a single (short) group.
+        let packed = random_packed(55, 4, 128, 256, 2);
+        let mut rng = Rng::new(56);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let want = dequant_gemv(&packed, &x);
+        let mut got = vec![0.0f32; 4];
+        lut_gemv(&packed, &x, &mut got, &mut LutScratch::default());
+        for r in 0..4 {
+            assert!((got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()));
+        }
+    }
+
+    #[test]
+    fn zero_coefficient_fast_path() {
+        let mut p = random_packed(3, 4, 64, 16, 2);
+        // zero out plane-1 coefficients entirely
+        for v in p.coeffs[1].data_mut() {
+            *v = 0.0;
+        }
+        let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.01).collect();
+        let want = dequant_gemv(&p, &x);
+        let mut got = vec![0.0; 4];
+        lut_gemv(&p, &x, &mut got, &mut LutScratch::default());
+        for r in 0..4 {
+            assert!((got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()));
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! `bpdq` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//! * `gen-data`   — write the deterministic synthetic corpus + vocab into
+//!   `artifacts/` (consumed by the python trainer; rust is the data
+//!   source of truth);
+//! * `quantize`   — quantize a `.tlm` checkpoint with any method and save
+//!   the result + report;
+//! * `eval`       — run the benchmark battery on a checkpoint;
+//! * `table1` / `table2` / `table3` / `fig1b` / `fig3` — regenerate the
+//!   paper's tables/figures on the synthetic substrate;
+//! * `serve`      — start the serving engine on a quantized checkpoint
+//!   and run a request trace through it;
+//! * `selfcheck`  — verify artifacts (vocab sync, HLO loads, kernel
+//!   parity) end to end.
+
+use bpdq::cli::Args;
+
+mod commands {
+    pub mod bench_tables;
+    pub mod gen_data;
+    pub mod quantize;
+    pub mod selfcheck;
+    pub mod serve;
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "gen-data" => commands::gen_data::run(&args),
+        "quantize" => commands::quantize::run_quantize(&args),
+        "eval" => commands::quantize::run_eval(&args),
+        "table1" => commands::bench_tables::table1(&args),
+        "table2" => commands::bench_tables::table2(&args),
+        "table3" => commands::bench_tables::table3(&args),
+        "fig1b" => commands::bench_tables::fig1b(&args),
+        "fig3" => commands::bench_tables::fig3(&args),
+        "serve" => commands::serve::run(&args),
+        "selfcheck" => commands::selfcheck::run(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        r#"bpdq — Bit-Plane Decomposition Quantization (paper reproduction)
+
+USAGE: bpdq <SUBCOMMAND> [--flag value]...
+
+SUBCOMMANDS
+  gen-data   --out artifacts [--train-docs N] [--eval-docs N] [--calib-docs N]
+  quantize   --model <.tlm> --method <fp16|rtn|gptq|awq|anybcq|vptq|bpdq>
+             [--bits K] [--group G] [--iters N] [--out <.tlm>]
+  eval       --model <.tlm> [--n-arith N] [--n-choice N] [--ppl-docs N]
+  table1     [--model small|large] [--quick]     main quality table
+  table2     [--quick]                           + AnyBCQ/VPTQ comparison
+  table3     [--quick]                           efficiency + outlier stats
+  fig1b      [--quick]                           2-bit comparison series
+  fig3       [--quick]                           long-context suite
+  serve      --model <.tlm> [--engine native|pjrt|lut] [--requests N]
+  selfcheck                                       artifact + kernel parity
+"#
+    );
+}

@@ -1,0 +1,462 @@
+//! Transformer forward paths: full-sequence (with activation capture) and
+//! incremental KV-cache decode.
+
+use super::{rmsnorm, silu, softmax, Model, ROPE_BASE};
+use crate::tensor::{matmul_transb, matvec, Matrix};
+use std::collections::HashMap;
+
+/// Captured per-linear input activations for one block (rows = positions).
+/// Keyed by the linear name ("wq", "wo", "w1", …). Note wq/wk/wv share
+/// their input and w1/w3 share theirs; the capture stores one matrix per
+/// distinct input and the pipeline maps linears onto them.
+#[derive(Debug, Default)]
+pub struct Capture {
+    pub inputs: HashMap<&'static str, Matrix>,
+}
+
+impl Capture {
+    /// The capture key whose activations feed `linear`.
+    pub fn key_for(linear: &str) -> &'static str {
+        match linear {
+            "wq" | "wk" | "wv" => "attn_in",
+            "wo" => "attn_out",
+            "w1" | "w3" => "mlp_in",
+            "w2" => "mlp_mid",
+            _ => panic!("unknown linear {linear}"),
+        }
+    }
+
+    pub fn input_for(&self, linear: &str) -> &Matrix {
+        &self.inputs[Self::key_for(linear)]
+    }
+}
+
+/// Precomputed RoPE tables for a range of positions.
+#[derive(Clone)]
+pub struct Rope {
+    cos: Matrix, // seq × hd/2
+    sin: Matrix,
+}
+
+impl Rope {
+    pub fn new(max_pos: usize, head_dim: usize) -> Self {
+        let half = head_dim / 2;
+        let mut cos = Matrix::zeros(max_pos, half);
+        let mut sin = Matrix::zeros(max_pos, half);
+        for p in 0..max_pos {
+            for i in 0..half {
+                let theta = p as f64 / (ROPE_BASE as f64).powf(2.0 * i as f64 / head_dim as f64);
+                cos.set(p, i, theta.cos() as f32);
+                sin.set(p, i, theta.sin() as f32);
+            }
+        }
+        Self { cos, sin }
+    }
+
+    /// Apply rotate-half RoPE in place to one head vector at position p.
+    #[inline]
+    pub fn apply(&self, v: &mut [f32], p: usize) {
+        let half = v.len() / 2;
+        let (c, s) = (self.cos.row(p), self.sin.row(p));
+        for i in 0..half {
+            let a = v[i];
+            let b = v[i + half];
+            v[i] = a * c[i] - b * s[i];
+            v[i + half] = b * c[i] + a * s[i];
+        }
+    }
+}
+
+impl Model {
+    /// Token embedding lookup → (seq × d_model).
+    pub fn embed_tokens(&self, tokens: &[u32]) -> Matrix {
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(tokens.len(), d);
+        for (t, &id) in tokens.iter().enumerate() {
+            let id = (id as usize).min(self.cfg.vocab_size - 1);
+            h.row_mut(t).copy_from_slice(self.embed.row(id));
+        }
+        h
+    }
+
+    /// Run one transformer block over the whole sequence. `capture`
+    /// collects the linear inputs for Hessian accumulation.
+    pub fn block_forward(
+        &self,
+        layer: usize,
+        hidden: &Matrix,
+        rope: &Rope,
+        mut capture: Option<&mut Capture>,
+    ) -> Matrix {
+        let lw = &self.layers[layer];
+        let seq = hidden.rows();
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // ---- attention ----
+        let mut normed = Matrix::zeros(seq, d);
+        for t in 0..seq {
+            rmsnorm(hidden.row(t), &lw.norm1, normed.row_mut(t));
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("attn_in", normed.clone());
+        }
+        let mut q = matmul_transb(&normed, &lw.wq);
+        let mut k = matmul_transb(&normed, &lw.wk);
+        let v = matmul_transb(&normed, &lw.wv);
+        for t in 0..seq {
+            for h in 0..nh {
+                rope.apply(&mut q.row_mut(t)[h * hd..(h + 1) * hd], t);
+                rope.apply(&mut k.row_mut(t)[h * hd..(h + 1) * hd], t);
+            }
+        }
+        // causal attention, head-by-head
+        let mut attn_out = Matrix::zeros(seq, d);
+        let mut scores = vec![0.0f32; seq];
+        for h in 0..nh {
+            let o0 = h * hd;
+            for t in 0..seq {
+                let qrow = &q.row(t)[o0..o0 + hd];
+                for (u, sc) in scores[..=t].iter_mut().enumerate() {
+                    let krow = &k.row(u)[o0..o0 + hd];
+                    *sc = crate::tensor::dot(qrow, krow) * scale;
+                }
+                softmax(&mut scores[..=t]);
+                let orow = attn_out.row_mut(t);
+                for u in 0..=t {
+                    let w = scores[u];
+                    if w < 1e-9 {
+                        continue;
+                    }
+                    let vrow = &v.row(u)[o0..o0 + hd];
+                    for i in 0..hd {
+                        orow[o0 + i] += w * vrow[i];
+                    }
+                }
+            }
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("attn_out", attn_out.clone());
+        }
+        let proj = matmul_transb(&attn_out, &lw.wo);
+        let mut hidden2 = hidden.clone();
+        hidden2.axpy(1.0, &proj);
+
+        // ---- MLP (SwiGLU) ----
+        let mut normed2 = Matrix::zeros(seq, d);
+        for t in 0..seq {
+            rmsnorm(hidden2.row(t), &lw.norm2, normed2.row_mut(t));
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("mlp_in", normed2.clone());
+        }
+        let up = matmul_transb(&normed2, &lw.w1);
+        let gate = matmul_transb(&normed2, &lw.w3);
+        let mut mid = up;
+        for (m, g) in mid.data_mut().iter_mut().zip(gate.data()) {
+            *m *= silu(*g);
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("mlp_mid", mid.clone());
+        }
+        let down = matmul_transb(&mid, &lw.w2);
+        hidden2.axpy(1.0, &down);
+        hidden2
+    }
+
+    /// Final RMSNorm + lm_head → (seq × vocab) logits.
+    pub fn final_logits(&self, hidden: &Matrix) -> Matrix {
+        let seq = hidden.rows();
+        let d = self.cfg.d_model;
+        let mut normed = Matrix::zeros(seq, d);
+        for t in 0..seq {
+            rmsnorm(hidden.row(t), &self.norm_f, normed.row_mut(t));
+        }
+        matmul_transb(&normed, &self.lm_head)
+    }
+
+    /// Full forward: tokens → logits (seq × vocab).
+    pub fn forward_full(&self, tokens: &[u32]) -> Matrix {
+        let rope = Rope::new(tokens.len(), self.cfg.head_dim());
+        let mut h = self.embed_tokens(tokens);
+        for l in 0..self.cfg.n_layers {
+            h = self.block_forward(l, &h, &rope, None);
+        }
+        self.final_logits(&h)
+    }
+
+    /// Start an incremental decode session.
+    pub fn decode_state(&self) -> DecodeState {
+        DecodeState::new(self)
+    }
+}
+
+/// Incremental KV-cache decode (one token at a time).
+pub struct DecodeState {
+    /// per layer: cached K and V, each (pos × d_model) in head layout
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+    pos: usize,
+    rope: Rope,
+    max_seq: usize,
+}
+
+impl DecodeState {
+    pub fn new(model: &Model) -> Self {
+        // Cache capacity: 4× the training context — long-context evals
+        // (Fig. 3) run beyond max_seq on purpose.
+        let cap = model.cfg.max_seq * 4;
+        Self {
+            k: (0..model.cfg.n_layers).map(|_| Matrix::zeros(cap, model.cfg.d_model)).collect(),
+            v: (0..model.cfg.n_layers).map(|_| Matrix::zeros(cap, model.cfg.d_model)).collect(),
+            pos: 0,
+            rope: Rope::new(cap, model.cfg.head_dim()),
+            max_seq: cap,
+        }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Rewind to position 0 for reuse (the KV slab path). Stale K/V rows
+    /// beyond `pos` are never read, so no zeroing is needed.
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Cheap branch-point copy: clones only the `pos` live KV rows (the
+    /// prefix-cache trick behind fast multiple-choice scoring — score N
+    /// continuations against one shared prompt prefix).
+    pub fn fork(&self) -> DecodeState {
+        let cap = self.max_seq;
+        let mut k = Vec::with_capacity(self.k.len());
+        let mut v = Vec::with_capacity(self.v.len());
+        for (kl, vl) in self.k.iter().zip(&self.v) {
+            let d = kl.cols();
+            let mut nk = Matrix::zeros(cap, d);
+            let mut nv = Matrix::zeros(cap, d);
+            for t in 0..self.pos {
+                nk.row_mut(t).copy_from_slice(kl.row(t));
+                nv.row_mut(t).copy_from_slice(vl.row(t));
+            }
+            k.push(nk);
+            v.push(nv);
+        }
+        DecodeState { k, v, pos: self.pos, rope: self.rope.clone(), max_seq: cap }
+    }
+
+    /// Feed one token; returns the logits for the next-token distribution.
+    pub fn step(&mut self, model: &Model, token: u32) -> Vec<f32> {
+        assert!(self.pos < self.max_seq, "KV cache exhausted");
+        let cfg = &model.cfg;
+        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t = self.pos;
+
+        let id = (token as usize).min(cfg.vocab_size - 1);
+        let mut h: Vec<f32> = model.embed.row(id).to_vec();
+        let mut normed = vec![0.0f32; d];
+
+        for (l, lw) in model.layers.iter().enumerate() {
+            rmsnorm(&h, &lw.norm1, &mut normed);
+            let mut q = matvec(&lw.wq, &normed);
+            let mut kx = matvec(&lw.wk, &normed);
+            let vx = matvec(&lw.wv, &normed);
+            for hh in 0..nh {
+                self.rope.apply(&mut q[hh * hd..(hh + 1) * hd], t);
+                self.rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
+            }
+            self.k[l].row_mut(t).copy_from_slice(&kx);
+            self.v[l].row_mut(t).copy_from_slice(&vx);
+
+            let mut attn = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; t + 1];
+            for hh in 0..nh {
+                let o0 = hh * hd;
+                for u in 0..=t {
+                    scores[u] =
+                        crate::tensor::dot(&q[o0..o0 + hd], &self.k[l].row(u)[o0..o0 + hd])
+                            * scale;
+                }
+                softmax(&mut scores[..=t]);
+                for u in 0..=t {
+                    let w = scores[u];
+                    if w < 1e-9 {
+                        continue;
+                    }
+                    let vrow = &self.v[l].row(u)[o0..o0 + hd];
+                    for i in 0..hd {
+                        attn[o0 + i] += w * vrow[i];
+                    }
+                }
+            }
+            let proj = matvec(&lw.wo, &attn);
+            for (hi, p) in h.iter_mut().zip(&proj) {
+                *hi += p;
+            }
+
+            rmsnorm(&h, &lw.norm2, &mut normed);
+            let up = matvec(&lw.w1, &normed);
+            let gate = matvec(&lw.w3, &normed);
+            let mid: Vec<f32> = up.iter().zip(&gate).map(|(&u, &g)| u * silu(g)).collect();
+            let down = matvec(&lw.w2, &mid);
+            for (hi, dn) in h.iter_mut().zip(&down) {
+                *hi += dn;
+            }
+        }
+        self.pos += 1;
+        rmsnorm(&h.clone(), &model.norm_f, &mut h);
+        matvec(&model.lm_head, &h)
+    }
+}
+
+/// Greedy-decode `max_new` tokens after feeding `prompt`.
+pub fn greedy_generate(model: &Model, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut st = model.decode_state();
+    let mut logits = vec![0.0f32; model.cfg.vocab_size];
+    let budget = st.capacity().saturating_sub(2);
+    for &t in prompt.iter().take(budget) {
+        logits = st.step(model, t);
+    }
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        if st.pos() >= st.capacity() {
+            break;
+        }
+        let next = argmax(&logits) as u32;
+        out.push(next);
+        logits = st.step(model, next);
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{synthetic_model, ModelConfig};
+
+    fn tiny() -> Model {
+        synthetic_model(
+            &ModelConfig { vocab_size: 20, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_seq: 32 },
+            42,
+        )
+    }
+
+    #[test]
+    fn full_forward_shapes() {
+        let m = tiny();
+        let logits = m.forward_full(&[1, 2, 3, 4, 5]);
+        assert_eq!(logits.shape(), (5, 20));
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        // The KV-cache path must agree with the batch path exactly
+        // (up to f32 accumulation order).
+        let m = tiny();
+        let tokens = [3u32, 7, 1, 12, 5, 9];
+        let full = m.forward_full(&tokens);
+        let mut st = m.decode_state();
+        for (t, &tok) in tokens.iter().enumerate() {
+            let logits = st.step(&m, tok);
+            for v in 0..m.cfg.vocab_size {
+                let a = full.get(t, v);
+                let b = logits[v];
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                    "pos {t} vocab {v}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a future token must not change past logits.
+        let m = tiny();
+        let a = m.forward_full(&[1, 2, 3, 4]);
+        let b = m.forward_full(&[1, 2, 3, 15]);
+        for t in 0..3 {
+            for v in 0..20 {
+                assert!((a.get(t, v) - b.get(t, v)).abs() < 1e-5, "t={t}");
+            }
+        }
+        // …but it must change the last position (model is not degenerate).
+        let mut differs = false;
+        for v in 0..20 {
+            if (a.get(3, v) - b.get(3, v)).abs() > 1e-6 {
+                differs = true;
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn rope_position_dependence() {
+        // Same token at different positions → different K → different
+        // attention pattern. Check RoPE itself rotates.
+        let rope = Rope::new(8, 8);
+        let mut v0 = vec![1.0f32; 8];
+        let mut v1 = vec![1.0f32; 8];
+        rope.apply(&mut v0, 0);
+        rope.apply(&mut v1, 5);
+        assert_ne!(v0, v1);
+        // position 0 is identity
+        assert_eq!(v0, vec![1.0f32; 8]);
+        // norm preserved (rotation)
+        let n: f32 = v1.iter().map(|x| x * x).sum();
+        assert!((n - 8.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn capture_collects_all_inputs() {
+        let m = tiny();
+        let rope = Rope::new(4, m.cfg.head_dim());
+        let h = m.embed_tokens(&[1, 2, 3, 4]);
+        let mut cap = Capture::default();
+        let _ = m.block_forward(0, &h, &rope, Some(&mut cap));
+        for key in ["attn_in", "attn_out", "mlp_in", "mlp_mid"] {
+            assert!(cap.inputs.contains_key(key), "{key}");
+        }
+        assert_eq!(cap.inputs["attn_in"].shape(), (4, 16));
+        assert_eq!(cap.inputs["mlp_mid"].shape(), (4, 24));
+        // key mapping
+        assert_eq!(Capture::key_for("wk"), "attn_in");
+        assert_eq!(Capture::key_for("w2"), "mlp_mid");
+    }
+
+    #[test]
+    fn greedy_generate_deterministic() {
+        let m = tiny();
+        let a = greedy_generate(&m, &[1, 2, 3], 8);
+        let b = greedy_generate(&m, &[1, 2, 3], 8);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

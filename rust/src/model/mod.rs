@@ -1,0 +1,303 @@
+//! Decoder-only transformer LM (the evaluation substrate).
+//!
+//! Architecture — mirrored **exactly** by `python/compile/model.py` (the
+//! trainer) so `.tlm` checkpoints are interchangeable:
+//!
+//! * token embedding (no scale), learned absolute none — positions come
+//!   from RoPE (half-rotation / "rotate_half" convention, base 10000);
+//! * per block: RMSNorm(eps 1e-5) → MHA (wq,wk,wv,wo; causal) →
+//!   residual → RMSNorm → SwiGLU MLP (w1=up, w3=gate, w2=down) → residual;
+//! * final RMSNorm → lm_head (untied).
+//!
+//! The seven per-block linears (wq,wk,wv,wo,w1,w2,w3) are the
+//! quantization targets; embeddings/lm_head stay fp16 as in the paper's
+//! weight-only setting.
+//!
+//! Two forward paths:
+//! * [`Model::forward_full`] — full-sequence logits (perplexity and
+//!   likelihood-scored choice tasks), with optional per-linear activation
+//!   capture for Hessian accumulation;
+//! * [`DecodeState`] — incremental KV-cache decode used by the serving
+//!   engine and exact-match generation tasks.
+
+mod forward;
+pub mod pipeline;
+mod synth;
+
+pub use forward::{argmax, greedy_generate, Capture, DecodeState, Rope};
+pub use synth::{synthetic_checkpoint, synthetic_model};
+
+use crate::io::tlm::{TlmFile, TlmHeader};
+use crate::tensor::Matrix;
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_header(h: &TlmHeader) -> Self {
+        Self {
+            vocab_size: h.vocab_size as usize,
+            d_model: h.d_model as usize,
+            n_layers: h.n_layers as usize,
+            n_heads: h.n_heads as usize,
+            d_ff: h.d_ff as usize,
+            max_seq: h.max_seq as usize,
+        }
+    }
+
+    /// The two tiny-LM sizes used by the experiment tables ("small" ≈
+    /// 0.8M params, "large" ≈ 3.4M params) — stand-ins for the paper's
+    /// model-size axis (DESIGN.md §3).
+    pub fn tiny_small(vocab_size: usize) -> Self {
+        Self { vocab_size, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 344, max_seq: 256 }
+    }
+
+    pub fn tiny_large(vocab_size: usize) -> Self {
+        Self { vocab_size, d_model: 256, n_layers: 6, n_heads: 8, d_ff: 688, max_seq: 256 }
+    }
+}
+
+/// Names of the quantizable linears within a block, in pipeline order.
+pub const BLOCK_LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "w1", "w3", "w2"];
+
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub norm1: Vec<f32>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub norm2: Vec<f32>,
+    /// up projection (d_ff × d_model)
+    pub w1: Matrix,
+    /// down projection (d_model × d_ff)
+    pub w2: Matrix,
+    /// gate projection (d_ff × d_model)
+    pub w3: Matrix,
+}
+
+impl LayerWeights {
+    pub fn linear(&self, name: &str) -> &Matrix {
+        match name {
+            "wq" => &self.wq,
+            "wk" => &self.wk,
+            "wv" => &self.wv,
+            "wo" => &self.wo,
+            "w1" => &self.w1,
+            "w2" => &self.w2,
+            "w3" => &self.w3,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+
+    pub fn linear_mut(&mut self, name: &str) -> &mut Matrix {
+        match name {
+            "wq" => &mut self.wq,
+            "wk" => &mut self.wk,
+            "wv" => &mut self.wv,
+            "wo" => &mut self.wo,
+            "w1" => &mut self.w1,
+            "w2" => &mut self.w2,
+            "w3" => &mut self.w3,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    /// vocab × d_model
+    pub embed: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub norm_f: Vec<f32>,
+    /// vocab × d_model
+    pub lm_head: Matrix,
+}
+
+pub const RMS_EPS: f32 = 1e-5;
+pub const ROPE_BASE: f32 = 10_000.0;
+
+impl Model {
+    /// Load from a `.tlm` checkpoint written by the python trainer.
+    pub fn from_tlm(f: &TlmFile) -> Result<Self> {
+        let cfg = ModelConfig::from_header(&f.header);
+        ensure!(cfg.d_model % cfg.n_heads == 0, "d_model must divide n_heads");
+        let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+            let m = f.get(name)?;
+            ensure!(
+                m.shape() == (rows, cols),
+                "tensor {name}: expected {rows}x{cols}, got {:?}",
+                m.shape()
+            );
+            Ok(m.clone())
+        };
+        let vecr = |name: &str, len: usize| -> Result<Vec<f32>> {
+            let m = f.get(name)?;
+            ensure!(m.rows() * m.cols() == len, "tensor {name}: expected len {len}");
+            Ok(m.data().to_vec())
+        };
+        let (v, d, ff) = (cfg.vocab_size, cfg.d_model, cfg.d_ff);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                norm1: vecr(&format!("l{l}.norm1"), d)?,
+                wq: mat(&format!("l{l}.wq"), d, d)?,
+                wk: mat(&format!("l{l}.wk"), d, d)?,
+                wv: mat(&format!("l{l}.wv"), d, d)?,
+                wo: mat(&format!("l{l}.wo"), d, d)?,
+                norm2: vecr(&format!("l{l}.norm2"), d)?,
+                w1: mat(&format!("l{l}.w1"), ff, d)?,
+                w2: mat(&format!("l{l}.w2"), d, ff)?,
+                w3: mat(&format!("l{l}.w3"), ff, d)?,
+            });
+        }
+        Ok(Self {
+            cfg,
+            embed: mat("embed", v, d)?,
+            layers,
+            norm_f: vecr("norm_f", d)?,
+            lm_head: mat("lm_head", v, d)?,
+        })
+    }
+
+    /// Serialize back to `.tlm` (used to persist quantized models).
+    pub fn to_tlm(&self) -> TlmFile {
+        let c = &self.cfg;
+        let header = TlmHeader {
+            vocab_size: c.vocab_size as u32,
+            d_model: c.d_model as u32,
+            n_layers: c.n_layers as u32,
+            n_heads: c.n_heads as u32,
+            d_ff: c.d_ff as u32,
+            max_seq: c.max_seq as u32,
+        };
+        let mut f = TlmFile::new(header);
+        f.insert("embed", self.embed.clone());
+        f.insert("norm_f", Matrix::from_vec(1, c.d_model, self.norm_f.clone()));
+        f.insert("lm_head", self.lm_head.clone());
+        for (l, lw) in self.layers.iter().enumerate() {
+            f.insert(&format!("l{l}.norm1"), Matrix::from_vec(1, c.d_model, lw.norm1.clone()));
+            f.insert(&format!("l{l}.norm2"), Matrix::from_vec(1, c.d_model, lw.norm2.clone()));
+            f.insert(&format!("l{l}.wq"), lw.wq.clone());
+            f.insert(&format!("l{l}.wk"), lw.wk.clone());
+            f.insert(&format!("l{l}.wv"), lw.wv.clone());
+            f.insert(&format!("l{l}.wo"), lw.wo.clone());
+            f.insert(&format!("l{l}.w1"), lw.w1.clone());
+            f.insert(&format!("l{l}.w2"), lw.w2.clone());
+            f.insert(&format!("l{l}.w3"), lw.w3.clone());
+        }
+        f
+    }
+
+    pub fn n_params(&self) -> usize {
+        let c = &self.cfg;
+        let per_layer = 2 * c.d_model + 4 * c.d_model * c.d_model + 3 * c.d_model * c.d_ff;
+        c.vocab_size * c.d_model * 2 + c.d_model + c.n_layers * per_layer
+    }
+
+    /// Bytes of the fp16 model (the "16-bit" SIZE column).
+    pub fn fp16_bytes(&self) -> usize {
+        self.n_params() * 2
+    }
+}
+
+/// RMSNorm: x * g / rms(x).
+pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + RMS_EPS as f64).sqrt() as f32;
+    for ((o, &xv), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = xv * inv * g;
+    }
+}
+
+/// In-place softmax over a slice.
+pub fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32, -4.0]; // rms = sqrt(12.5)
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &g, &mut out);
+        let rms = (12.5f64).sqrt() as f32;
+        assert!((out[0] - 3.0 / rms).abs() < 1e-5);
+        assert!((out[1] + 4.0 / rms).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, -1000.0];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(xs[3] < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut xs = vec![1e10f32, 1e10];
+        softmax(&mut xs);
+        assert!((xs[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn silu_shape() {
+        assert!(silu(0.0).abs() < 1e-9);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn tlm_roundtrip_preserves_model() {
+        let ckpt = synthetic_checkpoint(&ModelConfig::tiny_small(68), 7);
+        let m = Model::from_tlm(&ckpt).unwrap();
+        let back = m.to_tlm();
+        let m2 = Model::from_tlm(&back).unwrap();
+        assert_eq!(m.embed, m2.embed);
+        assert_eq!(m.layers[0].wq, m2.layers[0].wq);
+        assert_eq!(m.norm_f, m2.norm_f);
+    }
+
+    #[test]
+    fn n_params_matches_tensors() {
+        let ckpt = synthetic_checkpoint(&ModelConfig::tiny_small(68), 8);
+        let m = Model::from_tlm(&ckpt).unwrap();
+        assert_eq!(m.n_params(), ckpt.n_params());
+    }
+}

@@ -1,0 +1,116 @@
+//! Synthetic checkpoints.
+//!
+//! Two uses:
+//! * unit/integration tests that need a structurally-valid model without
+//!   the python training artifact;
+//! * the "synthetic-LLM-statistics" weight generator for quantizer-only
+//!   studies (Tables 4–7 model-size sweeps): heavy-tailed (Student-t)
+//!   weights with a small set of high-magnitude **outlier channels**,
+//!   matching published LLM weight statistics (see BiLLM/AWQ analyses).
+
+use super::{Model, ModelConfig};
+use crate::io::tlm::{TlmFile, TlmHeader};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Build a random-but-realistic checkpoint for `cfg`.
+pub fn synthetic_checkpoint(cfg: &ModelConfig, seed: u64) -> TlmFile {
+    let mut rng = Rng::new(seed ^ 0x517E);
+    let header = TlmHeader {
+        vocab_size: cfg.vocab_size as u32,
+        d_model: cfg.d_model as u32,
+        n_layers: cfg.n_layers as u32,
+        n_heads: cfg.n_heads as u32,
+        d_ff: cfg.d_ff as u32,
+        max_seq: cfg.max_seq as u32,
+    };
+    let mut f = TlmFile::new(header);
+    let (v, d, ff) = (cfg.vocab_size, cfg.d_model, cfg.d_ff);
+
+    f.insert("embed", heavy_tailed(&mut rng, v, d, 0.02, 0));
+    f.insert("norm_f", ones_vec(d));
+    f.insert("lm_head", heavy_tailed(&mut rng, v, d, 0.02, 0));
+    for l in 0..cfg.n_layers {
+        // A few outlier input channels per layer (attention-sink-like).
+        let n_outlier = (d / 32).max(1);
+        f.insert(&format!("l{l}.norm1"), ones_vec(d));
+        f.insert(&format!("l{l}.norm2"), ones_vec(d));
+        let s = (1.0 / d as f64).sqrt();
+        f.insert(&format!("l{l}.wq"), heavy_tailed(&mut rng, d, d, s, n_outlier));
+        f.insert(&format!("l{l}.wk"), heavy_tailed(&mut rng, d, d, s, n_outlier));
+        f.insert(&format!("l{l}.wv"), heavy_tailed(&mut rng, d, d, s, 0));
+        f.insert(&format!("l{l}.wo"), heavy_tailed(&mut rng, d, d, s, 0));
+        f.insert(&format!("l{l}.w1"), heavy_tailed(&mut rng, ff, d, s, n_outlier));
+        f.insert(&format!("l{l}.w3"), heavy_tailed(&mut rng, ff, d, s, n_outlier));
+        let s2 = (1.0 / ff as f64).sqrt();
+        f.insert(&format!("l{l}.w2"), heavy_tailed(&mut rng, d, ff, s2, 0));
+    }
+    f
+}
+
+/// Convenience: a loaded synthetic model.
+pub fn synthetic_model(cfg: &ModelConfig, seed: u64) -> Model {
+    Model::from_tlm(&synthetic_checkpoint(cfg, seed)).expect("synthetic checkpoint is valid")
+}
+
+/// Student-t(5) weights scaled by `std`, with `n_outlier_cols` columns
+/// magnified ×8 (the salient-channel structure AWQ/BPDQ care about).
+fn heavy_tailed(rng: &mut Rng, rows: usize, cols: usize, std: f64, n_outlier_cols: usize) -> Matrix {
+    let mut m = Matrix::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| (std * rng.student_t(5.0) * 0.76) as f32).collect(),
+        // 0.76 ≈ 1/std(t₅) keeps the realized std equal to `std`
+    );
+    for _ in 0..n_outlier_cols {
+        let c = rng.below_usize(cols);
+        for r in 0..rows {
+            let v = m.get(r, c) * 8.0;
+            m.set(r, c, v);
+        }
+    }
+    m
+}
+
+fn ones_vec(d: usize) -> Matrix {
+    Matrix::full(1, d, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_as_model() {
+        let cfg = ModelConfig::tiny_small(68);
+        let m = synthetic_model(&cfg, 1);
+        assert_eq!(m.layers.len(), cfg.n_layers);
+        assert_eq!(m.embed.shape(), (68, cfg.d_model));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = ModelConfig::tiny_small(68);
+        let a = synthetic_checkpoint(&cfg, 9);
+        let b = synthetic_checkpoint(&cfg, 9);
+        assert_eq!(a.get("l0.wq").unwrap(), b.get("l0.wq").unwrap());
+        let c = synthetic_checkpoint(&cfg, 10);
+        assert_ne!(a.get("l0.wq").unwrap(), c.get("l0.wq").unwrap());
+    }
+
+    #[test]
+    fn weights_heavy_tailed_with_outliers() {
+        let cfg = ModelConfig::tiny_small(68);
+        let m = synthetic_model(&cfg, 2);
+        let w = &m.layers[0].wq;
+        // column max-to-median ratio should show outlier columns
+        let col_norms: Vec<f64> = (0..w.cols())
+            .map(|c| (0..w.rows()).map(|r| (w.get(r, c) as f64).powi(2)).sum::<f64>().sqrt())
+            .collect();
+        let mut sorted = col_norms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let max = sorted[sorted.len() - 1];
+        assert!(max / median > 3.0, "max/median = {}", max / median);
+    }
+}

@@ -1,0 +1,124 @@
+//! proptest-lite: a minimal property-testing harness.
+//!
+//! The real `proptest` crate is not in the offline vendor set, so this
+//! module provides the 10% we need: run a property over many seeded
+//! random inputs, and on failure report the seed + case index so the
+//! exact case can be replayed by construction (all our generators are
+//! deterministic functions of the [`Rng`]).
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env knobs mirror proptest's: BPDQ_PROPTEST_CASES / _SEED.
+        let cases = std::env::var("BPDQ_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(48);
+        let seed = std::env::var("BPDQ_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(DEFAULT_SEED);
+        Self { cases, seed }
+    }
+}
+
+const DEFAULT_SEED: u64 = 0x50FA_CE5;
+
+/// Run `prop` over `cfg.cases` independently seeded RNGs. `prop` returns
+/// `Err(msg)` to fail the case. Panics with seed + case on first failure
+/// (no shrinking — cases are reconstructable from the seed).
+pub fn run_prop<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{} (seed={:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    run_prop(name, Config::default(), prop);
+}
+
+/// Assert two slices are element-wise close; returns a property error
+/// with the first offending index otherwise.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x as f64 - y as f64).abs();
+        let bound = atol + rtol * (y as f64).abs();
+        if !(diff <= bound) {
+            return Err(format!("idx {i}: {x} vs {y} (|Δ|={diff:.3e} > {bound:.3e})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", Config { cases: 17, seed: 1 }, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_name() {
+        run_prop("fails", Config { cases: 5, seed: 2 }, |rng| {
+            if rng.f64() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_reports_index() {
+        let e = assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 0.0).unwrap_err();
+        assert!(e.contains("idx 1"), "{e}");
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-8], 1e-6, 0.0).is_ok());
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        run_prop("collect", Config { cases: 4, seed: 3 }, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        run_prop("collect", Config { cases: 4, seed: 3 }, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,277 @@
+//! AnyBCQ-style binary-coded quantization (Park et al., 2025) — the
+//! paper's fellow bit-plane baseline.
+//!
+//! `Ŵ_r ≈ Σᵢ aᵢ bᵢ` with `bᵢ ∈ {−1,+1}^g` and per-(row,group) scales
+//! `aᵢ`: greedy residual binarization init, then round-robin alternating
+//! refinement (codes ⇄ scales). Crucially — and this is what the paper
+//! contrasts BPDQ against — there is **no Hessian / output-aligned
+//! objective and no cross-column error propagation**; the fit is plain
+//! least squares on the weights.
+
+use super::packing::{BitPlanePacked, PackedPlane, PackedWeights};
+use super::BcqConfig;
+use crate::tensor::Matrix;
+
+pub fn quantize(w: &Matrix, cfg: BcqConfig) -> (Matrix, PackedWeights) {
+    let (d_out, d_in) = w.shape();
+    let g = cfg.group_size;
+    let k = cfg.bits as usize;
+    let ng = d_in.div_ceil(g);
+
+    // signs[i] ∈ {−1,+1}, stored dense during optimization.
+    let mut signs: Vec<Matrix> = (0..k).map(|_| Matrix::zeros(d_out, d_in)).collect();
+    let mut scales: Vec<Matrix> = (0..k).map(|_| Matrix::zeros(d_out, ng)).collect();
+
+    let mut resid = vec![0.0f32; g];
+    for r in 0..d_out {
+        for grp in 0..ng {
+            let c0 = grp * g;
+            let c1 = (c0 + g).min(d_in);
+            let gw = c1 - c0;
+            let wrow = &w.row(r)[c0..c1];
+
+            // --- greedy residual init ---
+            resid[..gw].copy_from_slice(wrow);
+            for i in 0..k {
+                let a = resid[..gw].iter().map(|v| v.abs() as f64).sum::<f64>() / gw as f64;
+                scales[i].set(r, grp, a as f32);
+                for j in 0..gw {
+                    let s = if resid[j] >= 0.0 { 1.0f32 } else { -1.0 };
+                    signs[i].set(r, c0 + j, s);
+                    resid[j] -= a as f32 * s;
+                }
+            }
+
+            // --- alternating refinement ---
+            for _ in 0..cfg.alt_iters {
+                // (1) given signs, least-squares scales: solve Gᵀ a = Gᵀ w
+                // where G[:,i] = signs_i. k ≤ 4 ⇒ tiny normal equations.
+                let mut gtg = vec![0.0f64; k * k];
+                let mut gtw = vec![0.0f64; k];
+                for j in 0..gw {
+                    for i in 0..k {
+                        let si = signs[i].get(r, c0 + j) as f64;
+                        gtw[i] += si * wrow[j] as f64;
+                        for l in i..k {
+                            gtg[i * k + l] += si * signs[l].get(r, c0 + j) as f64;
+                        }
+                    }
+                }
+                // symmetric fill + tiny ridge
+                for i in 0..k {
+                    for l in 0..i {
+                        gtg[i * k + l] = gtg[l * k + i];
+                    }
+                    gtg[i * k + i] += 1e-8;
+                }
+                if let Some(a) = solve_small(&gtg, &gtw, k) {
+                    for i in 0..k {
+                        scales[i].set(r, grp, a[i] as f32);
+                    }
+                }
+                // (2) given scales, update signs plane-by-plane greedily.
+                for i in 0..k {
+                    let ai = scales[i].get(r, grp);
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    for j in 0..gw {
+                        // residual excluding plane i
+                        let mut rj = wrow[j];
+                        for l in 0..k {
+                            if l != i {
+                                rj -= scales[l].get(r, grp) * signs[l].get(r, c0 + j);
+                            }
+                        }
+                        signs[i].set(r, c0 + j, if rj * ai >= 0.0 { 1.0 } else { -1.0 });
+                    }
+                }
+            }
+        }
+    }
+
+    // Dequant + convert ±1 planes to the {0,1} bit-plane format:
+    //   a·s = a·(2b−1) = −a + 2a·b  ⇒ c₀ = −Σᵢ aᵢ, cᵢ = 2aᵢ, bᵢ=(sᵢ+1)/2.
+    let mut deq = Matrix::zeros(d_out, d_in);
+    for r in 0..d_out {
+        for j in 0..d_in {
+            let grp = j / g;
+            let mut v = 0.0f32;
+            for i in 0..k {
+                v += scales[i].get(r, grp) * signs[i].get(r, j);
+            }
+            deq.set(r, j, v);
+        }
+    }
+    let planes: Vec<PackedPlane> = (0..k)
+        .map(|i| {
+            let b = signs[i].map(|s| if s > 0.0 { 1.0 } else { 0.0 });
+            PackedPlane::pack(&b)
+        })
+        .collect();
+    let mut coeffs: Vec<Matrix> = Vec::with_capacity(k + 1);
+    let mut c0 = Matrix::zeros(d_out, ng);
+    for r in 0..d_out {
+        for grp in 0..ng {
+            let s: f32 = (0..k).map(|i| scales[i].get(r, grp)).sum();
+            c0.set(r, grp, -s);
+        }
+    }
+    coeffs.push(c0);
+    for s in &scales {
+        coeffs.push(s.map(|a| 2.0 * a));
+    }
+    // AnyBCQ stores k scales per group (the bias is implied by the ±1
+    // format), so charge k (not k+1) coefficients: adjust by using
+    // coeff_bits scaled — simplest is to keep the (k+1) layout for the
+    // LUT kernel but charge the storage the format actually needs.
+    let packed = BitPlanePacked {
+        d_out,
+        d_in,
+        group_size: g,
+        planes,
+        coeffs,
+        // k fp16 scales per group charged over (k+1) stored tensors:
+        // 16·k/(k+1) bits each keeps total == 16·k exactly.
+        coeff_bits: 16 * k / (k + 1) + usize::from(16 * k % (k + 1) != 0),
+    };
+    (deq, PackedWeights::BitPlanes(packed))
+}
+
+/// Solve a tiny dense symmetric system via Gaussian elimination with
+/// partial pivoting. Returns None if singular.
+fn solve_small(a_in: &[f64], b_in: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut a = a_in.to_vec();
+    let mut b = b_in.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                a[r * n + j] -= f * a[col * n + j];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for j in (r + 1)..n {
+            s -= a[r * n + j] * x[j];
+        }
+        x[r] = s / a[r * n + r];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::test_util::rand_wx;
+    use crate::quant::{quantize_linear, QuantMethod, UniformConfig};
+
+    #[test]
+    fn solve_small_correct() {
+        // 2x2: [[2,1],[1,3]] x = [5, 10] → x = [1, 3]
+        let x = solve_small(&[2., 1., 1., 3.], &[5., 10.], 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+        assert!(solve_small(&[0., 0., 0., 0.], &[1., 1.], 2).is_none());
+    }
+
+    #[test]
+    fn packed_dequant_matches_dense() {
+        let (w, _x) = rand_wx(41, 8, 64, 4);
+        let (deq, packed) = quantize(&w, BcqConfig { bits: 2, group_size: 32, alt_iters: 4 });
+        if let PackedWeights::BitPlanes(p) = &packed {
+            assert!(deq.fro_dist(&p.dequant()) < 1e-4);
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn alternating_reduces_weight_error() {
+        let (w, _x) = rand_wx(42, 16, 96, 4);
+        let e0 = {
+            let (d, _) = quantize(&w, BcqConfig { bits: 2, group_size: 32, alt_iters: 0 });
+            d.fro_dist(&w)
+        };
+        let e6 = {
+            let (d, _) = quantize(&w, BcqConfig { bits: 2, group_size: 32, alt_iters: 6 });
+            d.fro_dist(&w)
+        };
+        assert!(e6 <= e0 * 1.0001, "alt {e6} > greedy {e0}");
+    }
+
+    #[test]
+    fn bcq_beats_rtn_weight_error_at_2bit() {
+        // BCQ's ±1 planes with LS scales are a strictly richer per-group
+        // family than the 4-level uniform grid for heavy-tailed rows.
+        let (w, x) = rand_wx(43, 24, 128, 32);
+        let q_b = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::AnyBcq(BcqConfig { bits: 2, group_size: 32, alt_iters: 6 }),
+        )
+        .unwrap();
+        let q_r = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Rtn(UniformConfig { bits: 2, group_size: 32, act_order: false }),
+        )
+        .unwrap();
+        assert!(
+            q_b.stats.weight_err < q_r.stats.weight_err,
+            "bcq {} !< rtn {}",
+            q_b.stats.weight_err,
+            q_r.stats.weight_err
+        );
+    }
+
+    #[test]
+    fn no_hessian_use_means_worse_output_err_than_bpdq() {
+        // The paper's Table 2 ordering at 2-bit: BPDQ < AnyBCQ on quality.
+        let (w, x) = rand_wx(44, 24, 128, 96);
+        let e_bcq = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::AnyBcq(BcqConfig { bits: 2, group_size: 64, alt_iters: 6 }),
+        )
+        .unwrap()
+        .stats
+        .output_err;
+        let e_bpdq = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Bpdq(crate::quant::BpdqConfig {
+                k: 2,
+                group_size: 64,
+                ..Default::default()
+            }),
+        )
+        .unwrap()
+        .stats
+        .output_err;
+        assert!(e_bpdq < e_bcq, "bpdq {e_bpdq} !< bcq {e_bcq}");
+    }
+}

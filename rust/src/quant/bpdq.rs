@@ -1,0 +1,555 @@
+//! BPDQ — Bit-Plane Decomposition Quantization on a variable grid.
+//!
+//! The paper's method (§3), faithfully:
+//!
+//! 1. **Variable grid init** (§3.2): per group, 8-bit RTN → bit-plane
+//!    decomposition `Z = Σ 2ⁱ Pᵢ` (Eq. 5), keep the `k` MSB planes;
+//!    then the closed-form scalar-coefficient fit (Eq. 6) — a per-row
+//!    weighted least squares whitened by `U_loc^{-T}`, damping α=1e-4.
+//! 2. **Iteration** (§3.3), ×10 per group, retaining the iterate with the
+//!    smallest group propagation error ‖E‖²_F:
+//!    * *bit-plane update*: column-wise exact enumeration of all 2ᵏ bit
+//!      vectors per element (Eqs. 7–8) with GPTQ-style error propagation
+//!      (Eqs. 3–4) inside the group;
+//!    * *coefficient refitting*: re-solve Eq. 6 with the updated planes;
+//!    * *delta correction* (Eq. 9): `ΔE·U_loc = Ŵ_old − Ŵ_new`, keeping
+//!      the propagation state consistent (Appendix B.3).
+//! 3. After the group settles, its error propagates into the remaining
+//!    columns through the global factor: `W'[:,tail] -= E·U[group,tail]`
+//!    (Eq. 32).
+//!
+//! Channel ordering uses GAR (group-aware reordering) so that groups keep
+//! their inference-time membership during scalar derivation.
+
+use super::gar::gar_perm;
+use super::gptq::invert_perm;
+use super::hessian::{HessianState, DEFAULT_HESSIAN_DAMP};
+use super::packing::{BitPlanePacked, PackedPlane, PackedWeights};
+use super::rtn::fit_affine;
+use crate::linalg::{solve_upper_transpose, wls};
+use crate::tensor::{Matrix, MatrixF64};
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BpdqConfig {
+    /// Number of non-bias bit-planes (the "W2/W3/W4" in the tables).
+    pub k: u8,
+    pub group_size: usize,
+    /// Refinement iterations per group (paper: 10 everywhere).
+    pub iters: usize,
+    /// WLS damping α (paper: 1e-4).
+    pub damping: f64,
+    /// Hessian damping (GPTQ percdamp convention).
+    pub hessian_damp: f64,
+    /// Use GAR channel reordering (paper: on).
+    pub gar: bool,
+}
+
+impl Default for BpdqConfig {
+    fn default() -> Self {
+        Self {
+            k: 2,
+            group_size: 64,
+            iters: 10,
+            damping: 1e-4,
+            hessian_damp: DEFAULT_HESSIAN_DAMP,
+            gar: true,
+        }
+    }
+}
+
+/// Quantize `w` under Hessian state `h`. Returns (dequantized weights,
+/// packed record), both in the ORIGINAL column order — the packed record
+/// is self-contained for inference (no runtime permutation; GAR keeps
+/// groups intact, see `quantize_full`).
+pub fn quantize(w: &Matrix, h: &HessianState, cfg: BpdqConfig) -> Result<(Matrix, PackedWeights)> {
+    let out = quantize_full(w, h, cfg)?;
+    Ok((out.dequant, PackedWeights::BitPlanes(out.packed)))
+}
+
+/// Full output including internals used by tests and analysis.
+pub struct BpdqOutput {
+    /// Dequantized weights, original column order.
+    pub dequant: Matrix,
+    /// Packed record, original column order (self-contained).
+    pub packed: BitPlanePacked,
+    /// Propagation-error coordinates E (d_out × d_in, processing order).
+    pub e_coords: Matrix,
+    /// The permutation used (processing order → original channel).
+    pub perm: Vec<usize>,
+}
+
+pub fn quantize_full(w: &Matrix, h: &HessianState, cfg: BpdqConfig) -> Result<BpdqOutput> {
+    let (d_out, d_in) = w.shape();
+    let g = cfg.group_size;
+    let k = cfg.k as usize;
+    assert!(k >= 1 && k <= 8, "k must be in 1..=8");
+    let ng = d_in.div_ceil(g);
+
+    let perm: Vec<usize> = if cfg.gar {
+        gar_perm(&h.diag(), g)
+    } else {
+        (0..d_in).collect()
+    };
+    let u = h.factor(cfg.hessian_damp, Some(&perm))?;
+    let mut work = w.permute_cols(&perm);
+
+    let mut dequant_p = Matrix::zeros(d_out, d_in); // processing order
+    let mut e_coords = Matrix::zeros(d_out, d_in);
+    // planes in processing order, dense (packed at the end)
+    let mut planes_dense: Vec<Matrix> = (0..k).map(|_| Matrix::zeros(d_out, d_in)).collect();
+    let mut coeffs: Vec<Matrix> = (0..=k).map(|_| Matrix::zeros(d_out, ng)).collect();
+
+    let mut scratch = GroupScratch::new(d_out, g, k);
+
+    for grp in 0..ng {
+        let s = grp * g;
+        let e = (s + g).min(d_in);
+        let gw = e - s;
+
+        // Local triangular factor of this group.
+        let mut u_loc = MatrixF64::zeros(gw, gw);
+        for i in 0..gw {
+            for j in i..gw {
+                u_loc.set(i, j, u.get(s + i, s + j));
+            }
+        }
+
+        // Working block at group entry — the fit target (Appendix B.1).
+        let w0 = work.col_block(s, e);
+
+        let gr = quantize_group(&w0, &u_loc, k, cfg.iters, cfg.damping, &mut scratch);
+
+        // Record results.
+        for r in 0..d_out {
+            for j in 0..gw {
+                dequant_p.set(r, s + j, gr.what.get(r, j));
+                e_coords.set(r, s + j, gr.e.get(r, j));
+                for i in 0..k {
+                    planes_dense[i].set(r, s + j, if gr.bits[i].get(r, j) != 0.0 { 1.0 } else { 0.0 });
+                }
+            }
+            for i in 0..=k {
+                coeffs[i].set(r, grp, gr.coeffs.get(r, i));
+            }
+        }
+
+        // Propagate the settled group's error into the tail columns
+        // (Eq. 32): W'[:,tail] -= E_group · U[group, tail].
+        if e < d_in {
+            for r in 0..d_out {
+                let erow = gr.e.row(r);
+                for (jj, &ev) in erow.iter().enumerate() {
+                    if ev == 0.0 {
+                        continue;
+                    }
+                    let urow = u.row(s + jj);
+                    let wrow = work.row_mut(r);
+                    for t in e..d_in {
+                        wrow[t] -= ev * urow[t] as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    // Re-express planes and coefficients in ORIGINAL column order so the
+    // packed record is self-contained (no inference-time permutation).
+    // This is exactly why BPDQ uses GAR instead of desc_act: processing
+    // groups coincide with original groups (within-group reorder only),
+    // so un-permuting columns keeps every group contiguous and the
+    // group-wise coefficients valid.
+    let inv = invert_perm(&perm);
+    let planes_orig: Vec<Matrix> =
+        planes_dense.iter().map(|p| p.permute_cols(&inv)).collect();
+    let mut coeffs_orig: Vec<Matrix> = (0..=k).map(|_| Matrix::zeros(d_out, ng)).collect();
+    for proc_grp in 0..ng {
+        // the original group this processing slot holds
+        let orig_grp = perm[proc_grp * g] / g;
+        for i in 0..=k {
+            for r in 0..d_out {
+                coeffs_orig[i].set(r, orig_grp, coeffs[i].get(r, proc_grp));
+            }
+        }
+    }
+    let packed = BitPlanePacked {
+        d_out,
+        d_in,
+        group_size: g,
+        planes: planes_orig.iter().map(PackedPlane::pack).collect(),
+        coeffs: coeffs_orig,
+        coeff_bits: 16,
+    };
+
+    Ok(BpdqOutput { dequant: dequant_p.permute_cols(&inv), packed, e_coords, perm })
+}
+
+/// Per-group scratch buffers (reused across groups — the quantizer inner
+/// loop allocates nothing).
+struct GroupScratch {
+    /// candidate values per row: d_out × 2^k
+    cand: Vec<f32>,
+    /// whitened target
+    b: Vec<f64>,
+    col_buf: Vec<f64>,
+}
+
+impl GroupScratch {
+    fn new(d_out: usize, g: usize, k: usize) -> Self {
+        Self {
+            cand: vec![0.0; d_out << k],
+            b: vec![0.0; g],
+            col_buf: vec![0.0; g],
+        }
+    }
+}
+
+/// Result of quantizing one group.
+struct GroupResult {
+    /// dequantized block (d_out × gw)
+    what: Matrix,
+    /// propagation error coordinates (d_out × gw)
+    e: Matrix,
+    /// k dense 0/1 planes (d_out × gw)
+    bits: Vec<Matrix>,
+    /// per-row coefficients (d_out × (k+1)), column 0 = bias
+    coeffs: Matrix,
+}
+
+/// The BPDQ inner loop for one group (see module docs).
+fn quantize_group(
+    w0: &Matrix,
+    u_loc: &MatrixF64,
+    k: usize,
+    iters: usize,
+    damping: f64,
+    scratch: &mut GroupScratch,
+) -> GroupResult {
+    let (d_out, gw) = w0.shape();
+    let nk = 1usize << k;
+
+    // ---- init: 8-bit RTN → MSB planes (§3.2) ----
+    let mut bits: Vec<Matrix> = (0..k).map(|_| Matrix::zeros(d_out, gw)).collect();
+    for r in 0..d_out {
+        let row = w0.row(r);
+        let p = fit_affine(row, 8);
+        for (j, &wv) in row.iter().enumerate() {
+            let z = super::rtn::quant_code(wv, p, 8) as u32;
+            // keep the k most significant of the 8 planes:
+            // B_i = P_{7-k+i}, i = 1..=k  (Eq. 5 / §3.2)
+            for i in 0..k {
+                let plane_idx = 7 - k + 1 + i; // P_{8-k}, …, P_7
+                if (z >> plane_idx) & 1 == 1 {
+                    bits[i].set(r, j, 1.0);
+                }
+            }
+        }
+    }
+
+    // ---- closed-form coefficient fit (Eq. 6) ----
+    let mut coeffs = fit_coeffs(w0, &bits, u_loc, damping, scratch);
+
+    // State tracked across iterations.
+    let mut best: Option<(f64, Matrix, Matrix, Vec<Matrix>, Matrix)> = None; // (err, what, e, bits, coeffs)
+
+    let mut wl = Matrix::zeros(d_out, gw);
+    let mut what = Matrix::zeros(d_out, gw);
+    let mut e = Matrix::zeros(d_out, gw);
+
+    for _iter in 0..iters.max(1) {
+        // ---- bit-plane update: column-wise exact enumeration with error
+        // propagation (Eqs. 3–4, 7–8) ----
+        wl.data_mut().copy_from_slice(w0.data());
+        // candidate table per row: v(b) = c0 + Σ cᵢ bᵢ  (Eq. 7)
+        for r in 0..d_out {
+            let crow = coeffs.row(r);
+            let cand = &mut scratch.cand[r * nk..(r + 1) * nk];
+            for (b, c) in cand.iter_mut().enumerate() {
+                let mut v = crow[0];
+                for i in 0..k {
+                    if (b >> i) & 1 == 1 {
+                        v += crow[i + 1];
+                    }
+                }
+                *c = v;
+            }
+        }
+        for j in 0..gw {
+            let ujj = u_loc.get(j, j);
+            for r in 0..d_out {
+                let wv = wl.get(r, j);
+                // argmin_b (w − v(b))²  (Eq. 8)
+                let cand = &scratch.cand[r * nk..(r + 1) * nk];
+                let mut best_b = 0usize;
+                let mut best_d = f32::INFINITY;
+                for (b, &v) in cand.iter().enumerate() {
+                    let d = (wv - v) * (wv - v);
+                    if d < best_d {
+                        best_d = d;
+                        best_b = b;
+                    }
+                }
+                let v = cand[best_b];
+                what.set(r, j, v);
+                for i in 0..k {
+                    bits[i].set(r, j, ((best_b >> i) & 1) as f32);
+                }
+                // error coordinate + in-group propagation (Eqs. 3–4)
+                let ev = ((wv - v) as f64 / ujj) as f32;
+                e.set(r, j, ev);
+                if ev != 0.0 && j + 1 < gw {
+                    let urow = u_loc.row(j);
+                    let wrow = wl.row_mut(r);
+                    for t in (j + 1)..gw {
+                        wrow[t] -= ev * urow[t] as f32;
+                    }
+                }
+            }
+        }
+
+        // ---- coefficient refitting (Eq. 6 with updated planes) ----
+        let what_old = what.clone();
+        coeffs = fit_coeffs(w0, &bits, u_loc, damping, scratch);
+        // Ŵ_new = B·c with the refit coefficients.
+        for r in 0..d_out {
+            let crow = coeffs.row(r);
+            for j in 0..gw {
+                let mut v = crow[0];
+                for i in 0..k {
+                    if bits[i].get(r, j) != 0.0 {
+                        v += crow[i + 1];
+                    }
+                }
+                what.set(r, j, v);
+            }
+        }
+
+        // ---- delta correction (Eq. 9): ΔE·U_loc = Ŵ_old − Ŵ_new ----
+        // Per row: solve x·U_loc = d  ⇔  U_locᵀ xᵀ = dᵀ (forward subst).
+        for r in 0..d_out {
+            let d: Vec<f64> = (0..gw)
+                .map(|j| (what_old.get(r, j) - what.get(r, j)) as f64)
+                .collect();
+            let dx = solve_upper_transpose(u_loc, &d).expect("u_loc nonsingular");
+            let erow = e.row_mut(r);
+            for j in 0..gw {
+                erow[j] += dx[j] as f32;
+            }
+        }
+
+        // ---- retain the best iterate by ‖E‖²_F (§3.3) ----
+        let err = e.fro_norm().powi(2);
+        if best.as_ref().map_or(true, |(be, ..)| err < *be) {
+            best = Some((err, what.clone(), e.clone(), bits.clone(), coeffs.clone()));
+        }
+    }
+
+    let (_, what, e, bits, coeffs) = best.unwrap();
+    GroupResult { what, e, bits, coeffs }
+}
+
+/// Solve Eq. 6 for every row: c_r = argmin ‖U_loc^{-T}(B_r c − w_r)‖² + α‖c‖².
+fn fit_coeffs(
+    w0: &Matrix,
+    bits: &[Matrix],
+    u_loc: &MatrixF64,
+    damping: f64,
+    scratch: &mut GroupScratch,
+) -> Matrix {
+    let (d_out, gw) = w0.shape();
+    let k = bits.len();
+    let mut coeffs = Matrix::zeros(d_out, k + 1);
+
+    // Exact-shape design matrix for this group (no per-row clone; see
+    // EXPERIMENTS.md §Perf).
+    let mut a = MatrixF64::zeros(gw, k + 1);
+    // The ones column is row-independent: whiten it once per group.
+    let ones_white =
+        solve_upper_transpose(u_loc, &vec![1.0; gw]).expect("u_loc nonsingular");
+    for j in 0..gw {
+        a.set(j, 0, ones_white[j]);
+    }
+
+    // Whiten the plane columns per row: A[:,c] = U_loc^{-T} B[:,c].
+    for r in 0..d_out {
+        for col in 1..=k {
+            for j in 0..gw {
+                scratch.col_buf[j] = if bits[col - 1].get(r, j) != 0.0 { 1.0 } else { 0.0 };
+            }
+            let white = solve_upper_transpose(u_loc, &scratch.col_buf[..gw])
+                .expect("u_loc nonsingular");
+            for j in 0..gw {
+                a.set(j, col, white[j]);
+            }
+        }
+        for j in 0..gw {
+            scratch.b[j] = w0.get(r, j) as f64;
+        }
+        let bw = solve_upper_transpose(u_loc, &scratch.b[..gw]).expect("u_loc nonsingular");
+
+        // WLS over the (gw × k+1) whitened system.
+        let c = wls(&a, &bw, damping).expect("wls solvable with damping");
+        for (i, &ci) in c.iter().enumerate() {
+            coeffs.set(r, i, ci as f32);
+        }
+    }
+    coeffs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::test_util::rand_wx;
+    use crate::quant::{quantize_linear, QuantMethod, UniformConfig};
+    use crate::tensor::matmul_f64;
+
+    fn cfg(k: u8, g: usize) -> BpdqConfig {
+        BpdqConfig { k, group_size: g, iters: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn dequant_matches_packed() {
+        // The packed record is self-contained in ORIGINAL column order.
+        let (w, x) = rand_wx(31, 8, 64, 48);
+        let h = HessianState::from_activations(&x);
+        let out = quantize_full(&w, &h, cfg(2, 32)).unwrap();
+        assert!(out.dequant.fro_dist(&out.packed.dequant()) < 1e-5);
+    }
+
+    #[test]
+    fn propagation_invariant_holds() {
+        // Global invariant (Appendix B.2/B.3): W_perm − Ŵ_perm = E · U.
+        let (w, x) = rand_wx(32, 6, 64, 48);
+        let h = HessianState::from_activations(&x);
+        let c = cfg(2, 16);
+        let out = quantize_full(&w, &h, c).unwrap();
+        let u = h.factor(c.hessian_damp, Some(&out.perm)).unwrap();
+        let w_perm = w.permute_cols(&out.perm).to_f64();
+        let inv = invert_perm(&out.perm);
+        let what_perm = out.dequant.permute_cols(&out.perm); // back to processing order? no:
+        // dequant is in original order; permuting by perm gives processing order
+        let what_perm = what_perm.to_f64();
+        let eu = matmul_f64(&out.e_coords.to_f64(), &u);
+        for r in 0..w.rows() {
+            for j in 0..w.cols() {
+                let resid = w_perm.get(r, j) - what_perm.get(r, j);
+                assert!(
+                    (resid - eu.get(r, j)).abs() < 2e-3 * (1.0 + resid.abs()),
+                    "({r},{j}): resid {resid} vs EU {}",
+                    eu.get(r, j)
+                );
+            }
+        }
+        let _ = inv;
+    }
+
+    #[test]
+    fn variable_grid_reproduces_uniform_grid() {
+        // Proposition 1 (Eq. 13): with c1=s, c2=2s the BPDQ grid equals
+        // the UINT2 grid {0,s,2s,3s} exactly.
+        use crate::quant::packing::{BitPlanePacked, PackedPlane};
+        let s = 0.37f32;
+        let b1 = Matrix::from_vec(1, 4, vec![0., 1., 0., 1.]); // LSB of 0..3
+        let b2 = Matrix::from_vec(1, 4, vec![0., 0., 1., 1.]); // MSB of 0..3
+        let rec = BitPlanePacked {
+            d_out: 1,
+            d_in: 4,
+            group_size: 4,
+            planes: vec![PackedPlane::pack(&b1), PackedPlane::pack(&b2)],
+            coeffs: vec![
+                Matrix::from_vec(1, 1, vec![0.0]),
+                Matrix::from_vec(1, 1, vec![s]),
+                Matrix::from_vec(1, 1, vec![2.0 * s]),
+            ],
+            coeff_bits: 16,
+        };
+        let w = rec.dequant();
+        assert_eq!(w.row(0), &[0.0, s, 2.0 * s, 3.0 * s]);
+    }
+
+    #[test]
+    fn bpdq_beats_gptq_at_2bit() {
+        // The headline claim (Table 1, W2 rows): variable grid + iteration
+        // beats the fixed uniform grid on the output-aligned objective.
+        let (w, x) = rand_wx(33, 32, 128, 128);
+        let e_gptq = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 64, act_order: true }),
+        )
+        .unwrap()
+        .stats
+        .output_err;
+        let e_bpdq = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(2, 64)))
+            .unwrap()
+            .stats
+            .output_err;
+        assert!(e_bpdq < e_gptq, "bpdq {e_bpdq} !< gptq {e_gptq}");
+    }
+
+    #[test]
+    fn more_iters_do_not_hurt() {
+        // Best-iterate retention makes error monotone in iteration count.
+        let (w, x) = rand_wx(34, 12, 64, 64);
+        let h = HessianState::from_activations(&x);
+        let mut last = f64::INFINITY;
+        for iters in [1usize, 3, 10] {
+            let c = BpdqConfig { iters, ..cfg(2, 32) };
+            let out = quantize_full(&w, &h, c).unwrap();
+            let err = out.e_coords.fro_norm().powi(2);
+            assert!(err <= last * 1.0001, "iters={iters}: {err} > {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn bpw_matches_paper() {
+        let (w, x) = rand_wx(35, 4, 256, 16);
+        for (k, g, want) in [(2u8, 64usize, 2.75f64), (2, 128, 2.375), (2, 256, 2.1875), (3, 64, 4.0)] {
+            let q = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(k, g))).unwrap();
+            assert!(
+                (q.bits_per_weight() - want).abs() < 1e-9,
+                "W{k}-G{g}: {}",
+                q.bits_per_weight()
+            );
+        }
+    }
+
+    #[test]
+    fn k4_more_accurate_than_k2() {
+        let (w, x) = rand_wx(36, 16, 64, 64);
+        let e2 = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(2, 32)))
+            .unwrap()
+            .stats
+            .output_err;
+        let e4 = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(4, 32)))
+            .unwrap()
+            .stats
+            .output_err;
+        assert!(e4 < e2, "k4 {e4} !< k2 {e2}");
+    }
+
+    #[test]
+    fn ragged_group_ok() {
+        let (w, x) = rand_wx(37, 4, 70, 32); // ragged final group
+        let q = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(2, 32))).unwrap();
+        assert_eq!(q.dequant.shape(), (4, 70));
+        assert!(q.stats.output_err.is_finite());
+    }
+
+    #[test]
+    fn gar_off_still_works() {
+        let (w, x) = rand_wx(38, 8, 64, 48);
+        let c = BpdqConfig { gar: false, ..cfg(2, 32) };
+        let q = quantize_linear(&w, &x, QuantMethod::Bpdq(c)).unwrap();
+        assert!(q.stats.output_err.is_finite());
+    }
+
+    #[test]
+    fn deterministic() {
+        let (w, x) = rand_wx(39, 8, 64, 48);
+        let a = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(2, 32))).unwrap();
+        let b = quantize_linear(&w, &x, QuantMethod::Bpdq(cfg(2, 32))).unwrap();
+        assert_eq!(a.dequant, b.dequant);
+    }
+}

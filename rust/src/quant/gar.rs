@@ -1,0 +1,140 @@
+//! GAR — Group-Aware Reordering (Gafni et al., 2025), the channel
+//! ordering BPDQ uses instead of GPTQ's `desc_act`.
+//!
+//! `desc_act` sorts channels globally by Hessian saliency, which scatters
+//! each quantization group across the whole layer: group parameters are
+//! then derived from channels that are not contiguous in the original
+//! weight, and inference needs a full permutation.
+//!
+//! GAR preserves **group integrity**: groups keep their original channel
+//! membership; only (a) the processing order *of groups* follows
+//! descending group saliency, and (b) channels *within* each group are
+//! ordered by descending saliency. The resulting permutation is
+//! block-structured, so group-wise scalar derivation (paper Eq. 6) always
+//! sees the channels that will actually share coefficients at inference.
+
+/// Build the GAR permutation for `d_in` channels in groups of `g`, given
+/// per-channel saliency (Hessian diagonal). Returns `perm` such that
+/// `new_col_j = old_col_{perm[j]}`, with groups contiguous: the j-th
+/// output group is an entire input group.
+pub fn gar_perm(diag: &[f64], g: usize) -> Vec<usize> {
+    let d_in = diag.len();
+    let ng = d_in.div_ceil(g);
+    // Group saliency = max of member saliencies (the channel that most
+    // constrains early processing).
+    let group_sal: Vec<f64> = (0..ng)
+        .map(|grp| {
+            let c0 = grp * g;
+            let c1 = (c0 + g).min(d_in);
+            diag[c0..c1].iter().cloned().fold(f64::MIN, f64::max)
+        })
+        .collect();
+    // A ragged final group (size < g) must stay LAST in processing order
+    // so processing-group boundaries keep coinciding with original-group
+    // boundaries (the property packing relies on to un-permute records).
+    let ragged = d_in % g != 0;
+    let sortable = if ragged { ng - 1 } else { ng };
+    let mut group_order: Vec<usize> = (0..sortable).collect();
+    group_order.sort_by(|&a, &b| {
+        group_sal[b].partial_cmp(&group_sal[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    if ragged {
+        group_order.push(ng - 1);
+    }
+
+    let mut perm = Vec::with_capacity(d_in);
+    for &grp in &group_order {
+        let c0 = grp * g;
+        let c1 = (c0 + g).min(d_in);
+        let mut members: Vec<usize> = (c0..c1).collect();
+        members.sort_by(|&a, &b| {
+            diag[b].partial_cmp(&diag[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        perm.extend(members);
+    }
+    perm
+}
+
+/// Check that a permutation preserves group integrity: every output group
+/// is a permutation of exactly one input group. (Used by tests and debug
+/// assertions.)
+pub fn preserves_groups(perm: &[usize], g: usize) -> bool {
+    let d_in = perm.len();
+    let ng = d_in.div_ceil(g);
+    for out_grp in 0..ng {
+        let c0 = out_grp * g;
+        let c1 = (c0 + g).min(d_in);
+        let mut src_groups: Vec<usize> = perm[c0..c1].iter().map(|&p| p / g).collect();
+        src_groups.dedup();
+        // Ragged tails: the last (short) input group must map to the last
+        // output slot as a unit, which the construction guarantees; here
+        // we only require that a full output group draws from one input
+        // group.
+        if src_groups.len() != 1 {
+            // allow the ragged case where group sizes differ
+            let src_set: std::collections::BTreeSet<usize> = src_groups.iter().copied().collect();
+            if src_set.len() != 1 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn is_a_permutation() {
+        let mut rng = Rng::new(1);
+        let diag: Vec<f64> = (0..96).map(|_| rng.f64() * 10.0).collect();
+        let p = gar_perm(&diag, 32);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..96).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn groups_stay_intact() {
+        let mut rng = Rng::new(2);
+        for &(d, g) in &[(128usize, 32usize), (96, 32), (64, 64), (80, 32)] {
+            let diag: Vec<f64> = (0..d).map(|_| rng.f64() * 10.0).collect();
+            let p = gar_perm(&diag, g);
+            assert!(preserves_groups(&p, g), "d={d} g={g} perm={p:?}");
+        }
+    }
+
+    #[test]
+    fn most_salient_group_first() {
+        // Saliency concentrated in the third group.
+        let mut diag = vec![1.0; 96];
+        diag[70] = 100.0;
+        let p = gar_perm(&diag, 32);
+        // First output channel must be channel 70.
+        assert_eq!(p[0], 70);
+        // And the first 32 outputs must all come from input group 2.
+        assert!(p[..32].iter().all(|&c| (64..96).contains(&c)));
+    }
+
+    #[test]
+    fn within_group_desc_order() {
+        let diag = vec![3.0, 1.0, 2.0, 9.0, 5.0, 7.0, 6.0, 8.0];
+        let p = gar_perm(&diag, 4);
+        // group 1 (channels 4..8) has max 9? no — 9.0 is channel 3 in
+        // group 0. group saliencies: g0 max=9 (ch3), g1 max=8 (ch7).
+        assert_eq!(p[..4], [3, 0, 2, 1]); // desc within group 0
+        assert_eq!(p[4..], [7, 5, 6, 4]); // desc within group 1
+    }
+
+    #[test]
+    fn desc_act_violates_group_integrity_gar_does_not() {
+        // Sanity contrast: global desc sort scrambles groups.
+        let mut rng = Rng::new(3);
+        let diag: Vec<f64> = (0..128).map(|_| rng.f64()).collect();
+        let desc = crate::quant::gptq::desc_act_perm(&diag);
+        assert!(!preserves_groups(&desc, 32));
+        assert!(preserves_groups(&gar_perm(&diag, 32), 32));
+    }
+}

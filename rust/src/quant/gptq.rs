@@ -1,0 +1,194 @@
+//! GPTQ (Frantar et al., 2022) — the paper's primary optimization-based
+//! baseline: fixed uniform grid + Hessian-aware column-wise error
+//! propagation.
+//!
+//! Per column `l` (after optional `desc_act` channel reordering):
+//! quantize on the group's affine grid, form the error coordinate
+//! `E[:,l] = (W'[:,l] − Ŵ[:,l]) / U[l,l]` (paper Eq. 3) and propagate
+//! `W'[:,l:] -= E[:,l] · U[l,l:]` (paper Eq. 4), with
+//! `U = chol(H⁻¹)` upper-triangular.
+
+use super::hessian::{HessianState, DEFAULT_HESSIAN_DAMP};
+use super::packing::{PackedWeights, UniformPacked};
+use super::rtn::{dequant_code, fit_affine, quant_code};
+use super::UniformConfig;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Descending-argsort of the Hessian diagonal (GPTQ `desc_act`).
+pub fn desc_act_perm(diag: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..diag.len()).collect();
+    idx.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Invert a permutation.
+pub fn invert_perm(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+pub fn quantize(
+    w: &Matrix,
+    h: &HessianState,
+    cfg: UniformConfig,
+) -> Result<(Matrix, PackedWeights)> {
+    let (d_out, d_in) = w.shape();
+    let g = cfg.group_size;
+    let ng = d_in.div_ceil(g);
+
+    // Channel reordering by Hessian saliency.
+    let perm: Option<Vec<usize>> = cfg.act_order.then(|| desc_act_perm(&h.diag()));
+    let u = h.factor(DEFAULT_HESSIAN_DAMP, perm.as_deref())?;
+    let mut work = match &perm {
+        Some(p) => w.permute_cols(p),
+        None => w.clone(),
+    };
+
+    let mut codes = vec![0u8; d_out * d_in];
+    let mut scales = Matrix::zeros(d_out, ng);
+    let mut zeros = vec![0u8; d_out * ng];
+    let mut deq = Matrix::zeros(d_out, d_in); // in permuted order
+    // Per-row affine params of the current group.
+    let mut params = vec![super::rtn::AffineParams { scale: 1.0, zero: 0 }; d_out];
+
+    for l in 0..d_in {
+        let grp = l / g;
+        if l % g == 0 {
+            // Derive the group grid from the *current working* weights —
+            // the standard GPTQ implementation choice.
+            let c1 = (l + g).min(d_in);
+            for r in 0..d_out {
+                let p = fit_affine(&work.row(r)[l..c1], cfg.bits);
+                params[r] = p;
+                scales.set(r, grp, p.scale);
+                zeros[r * ng + grp] = p.zero;
+            }
+        }
+        let ull = u.get(l, l);
+        // Quantize column l and propagate the error to columns l+1.. .
+        for r in 0..d_out {
+            let wv = work.get(r, l);
+            let q = quant_code(wv, params[r], cfg.bits);
+            let dv = dequant_code(q, params[r]);
+            codes[r * d_in + l] = q;
+            deq.set(r, l, dv);
+            let e = ((wv - dv) as f64 / ull) as f32;
+            if e != 0.0 {
+                let urow = u.row(l);
+                let wrow = work.row_mut(r);
+                for j in (l + 1)..d_in {
+                    wrow[j] -= e * urow[j] as f32;
+                }
+            }
+        }
+    }
+
+    // Undo the permutation for the dense dequant matrix.
+    let inv = perm.as_ref().map(|p| invert_perm(p));
+    let deq_orig = match &inv {
+        Some(ip) => deq.permute_cols(ip),
+        None => deq,
+    };
+
+    let packed = UniformPacked {
+        d_out,
+        d_in,
+        group_size: g,
+        bits: cfg.bits,
+        codes,
+        scales,
+        zeros,
+        inv_perm: inv,
+    };
+    Ok((deq_orig, PackedWeights::Uniform(packed)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::test_util::rand_wx;
+    use crate::quant::{quantize_linear, QuantMethod};
+
+    #[test]
+    fn perm_helpers() {
+        let diag = vec![1.0, 5.0, 3.0];
+        let p = desc_act_perm(&diag);
+        assert_eq!(p, vec![1, 2, 0]);
+        let inv = invert_perm(&p);
+        assert_eq!(inv, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_error() {
+        // The whole point of Hessian-aware propagation.
+        let (w, x) = rand_wx(11, 24, 128, 96);
+        let cfg = UniformConfig { bits: 3, group_size: 32, act_order: true };
+        let q_rtn = quantize_linear(&w, &x, QuantMethod::Rtn(cfg)).unwrap();
+        let q_gptq = quantize_linear(&w, &x, QuantMethod::Gptq(cfg)).unwrap();
+        assert!(
+            q_gptq.stats.output_err < q_rtn.stats.output_err,
+            "gptq {} !< rtn {}",
+            q_gptq.stats.output_err,
+            q_rtn.stats.output_err
+        );
+    }
+
+    #[test]
+    fn packed_dequant_matches_dense() {
+        let (w, x) = rand_wx(12, 8, 64, 48);
+        for act_order in [false, true] {
+            let cfg = UniformConfig { bits: 2, group_size: 32, act_order };
+            let q = quantize_linear(&w, &x, QuantMethod::Gptq(cfg)).unwrap();
+            if let PackedWeights::Uniform(p) = &q.packed {
+                assert!(
+                    q.dequant.fro_dist(&p.dequant()) < 1e-5,
+                    "act_order={act_order}"
+                );
+            } else {
+                panic!("wrong variant");
+            }
+        }
+    }
+
+    #[test]
+    fn act_order_helps_on_skewed_hessian() {
+        let (w, x) = rand_wx(13, 16, 128, 96);
+        let base = UniformConfig { bits: 2, group_size: 32, act_order: false };
+        let ordered = UniformConfig { act_order: true, ..base };
+        let e_plain = quantize_linear(&w, &x, QuantMethod::Gptq(base)).unwrap().stats.output_err;
+        let e_ord = quantize_linear(&w, &x, QuantMethod::Gptq(ordered)).unwrap().stats.output_err;
+        // On a strongly front-loaded Hessian (rand_wx has 1/(1+j) channel
+        // scales), desc_act should not hurt much and usually helps.
+        assert!(e_ord < e_plain * 1.35, "plain {e_plain} ordered {e_ord}");
+    }
+
+    #[test]
+    fn bpw_matches_paper() {
+        let (w, x) = rand_wx(14, 4, 128, 16);
+        let q = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 64, act_order: true }),
+        )
+        .unwrap();
+        assert!((q.bits_per_weight() - 2.28125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eight_bit_gptq_near_lossless() {
+        let (w, x) = rand_wx(15, 8, 64, 48);
+        let q = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Gptq(UniformConfig { bits: 8, group_size: 32, act_order: false }),
+        )
+        .unwrap();
+        // Not exactly lossless: error propagation moves working weights
+        // off-grid mid-stream, but at 8 bits the residual is tiny.
+        assert!(q.stats.weight_err < 1e-3 * w.fro_norm().powi(2), "{}", q.stats.weight_err);
+    }
+}

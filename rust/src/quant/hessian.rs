@@ -1,0 +1,199 @@
+//! Hessian estimation and the propagation factor `U = chol(H⁻¹)`.
+//!
+//! The optimization objective (paper Eq. 2) is
+//! `argmin ‖(W−Ŵ)X‖²_F = argmin tr((W−Ŵ) H (W−Ŵ)ᵀ)` with `H = XXᵀ`.
+//! GPTQ and BPDQ both work in the geometry of the upper-triangular
+//! Cholesky factor of the *inverse* Hessian (`H⁻¹ = UᵀU`), propagating
+//! per-column quantization error into not-yet-quantized columns via
+//! triangular updates (Eqs. 3–4).
+
+use crate::linalg::{damp_in_place, inv_upper_factor};
+use crate::tensor::{Matrix, MatrixF64};
+use anyhow::{Context, Result};
+
+/// GPTQ "percdamp" convention: damping added to H is `alpha * mean(diag)`.
+pub const DEFAULT_HESSIAN_DAMP: f64 = 1e-2;
+
+/// Accumulated second-order statistics for one linear layer's input.
+#[derive(Clone, Debug)]
+pub struct HessianState {
+    h: MatrixF64,
+    n_samples: usize,
+}
+
+impl HessianState {
+    pub fn new(dim: usize) -> Self {
+        Self { h: MatrixF64::zeros(dim, dim), n_samples: 0 }
+    }
+
+    /// Build directly from an activation matrix (n_samples × d_in).
+    pub fn from_activations(x: &Matrix) -> Self {
+        let mut s = Self::new(x.cols());
+        s.accumulate(x);
+        s
+    }
+
+    /// Accumulate `H += XᵀX` over a batch of rows (streaming, so
+    /// calibration never materializes all activations at once).
+    pub fn accumulate(&mut self, x: &Matrix) {
+        assert_eq!(x.cols(), self.h.rows(), "activation dim mismatch");
+        let d = x.cols();
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            for i in 0..d {
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let hrow = self.h.row_mut(i);
+                for j in 0..d {
+                    hrow[j] += xi * row[j] as f64;
+                }
+            }
+        }
+        self.n_samples += x.rows();
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h.rows()
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// The raw (undamped) Hessian.
+    pub fn matrix(&self) -> &MatrixF64 {
+        &self.h
+    }
+
+    /// Hessian diagonal — the per-channel saliency used by `desc_act`,
+    /// GAR, AWQ scaling, and VPTQ's weighted k-means.
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.dim()).map(|i| self.h.get(i, i)).collect()
+    }
+
+    /// Damped copy of H (symmetrized, `alpha·mean(diag)` added).
+    pub fn damped(&self, alpha: f64) -> MatrixF64 {
+        let mut h = self.h.clone();
+        damp_in_place(&mut h, alpha);
+        h
+    }
+
+    /// The propagation factor: upper-triangular `U` with `H⁻¹ = UᵀU`,
+    /// after applying the column permutation `perm` (channel reordering
+    /// must permute H *before* factoring — the factor is order-dependent).
+    pub fn factor(&self, alpha: f64, perm: Option<&[usize]>) -> Result<MatrixF64> {
+        let mut h = match perm {
+            Some(p) => {
+                assert_eq!(p.len(), self.dim());
+                self.h.permute_rows(p).permute_cols(p)
+            }
+            None => self.h.clone(),
+        };
+        damp_in_place(&mut h, alpha);
+        inv_upper_factor(&h).context("factor damped hessian")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::matmul_f64;
+
+    #[test]
+    fn accumulate_matches_xtx() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (20, 6);
+        let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal() as f32).collect());
+        let hs = HessianState::from_activations(&x);
+        let xf = x.to_f64();
+        let want = matmul_f64(&xf.transpose(), &xf);
+        for i in 0..d {
+            for j in 0..d {
+                assert!(
+                    (hs.matrix().get(i, j) - want.get(i, j)).abs() < 1e-6,
+                    "({i},{j})"
+                );
+            }
+        }
+        assert_eq!(hs.n_samples(), n);
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (24, 5);
+        let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal() as f32).collect());
+        let whole = HessianState::from_activations(&x);
+        let mut streamed = HessianState::new(d);
+        streamed.accumulate(&x.col_block(0, d).permute_rows(&(0..n).collect::<Vec<_>>()));
+        // chunked
+        let mut chunked = HessianState::new(d);
+        let rows: Vec<Vec<f32>> = (0..n).map(|r| x.row(r).to_vec()).collect();
+        for chunk in rows.chunks(7) {
+            let flat: Vec<f32> = chunk.iter().flatten().copied().collect();
+            chunked.accumulate(&Matrix::from_vec(chunk.len(), d, flat));
+        }
+        for i in 0..d {
+            for j in 0..d {
+                assert!((whole.matrix().get(i, j) - chunked.matrix().get(i, j)).abs() < 1e-6);
+                assert!((whole.matrix().get(i, j) - streamed.matrix().get(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn factor_is_upper_and_valid() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (40, 8);
+        let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal() as f32).collect());
+        let hs = HessianState::from_activations(&x);
+        let u = hs.factor(1e-2, None).unwrap();
+        for i in 0..d {
+            assert!(u.get(i, i) > 0.0);
+            for j in 0..i {
+                assert_eq!(u.get(i, j), 0.0);
+            }
+        }
+        // UᵀU ≈ H_damped⁻¹  ⇔  UᵀU H_damped ≈ I
+        let hd = hs.damped(1e-2);
+        let uu = matmul_f64(&u.transpose(), &u);
+        let prod = matmul_f64(&uu, &hd);
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.get(i, j) - want).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn factor_with_permutation_consistent() {
+        let mut rng = Rng::new(4);
+        let (n, d) = (30, 6);
+        let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal() as f32).collect());
+        let hs = HessianState::from_activations(&x);
+        let perm: Vec<usize> = vec![3, 1, 5, 0, 2, 4];
+        let u = hs.factor(1e-2, Some(&perm)).unwrap();
+        // should equal factoring the permuted activations directly
+        let xp = x.permute_cols(&perm);
+        let hsp = HessianState::from_activations(&xp);
+        let up = hsp.factor(1e-2, None).unwrap();
+        for i in 0..d {
+            for j in 0..d {
+                assert!((u.get(i, j) - up.get(i, j)).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn dead_channels_survive_damping() {
+        // A channel that is always zero ⇒ zero row/col in H; damping must
+        // still produce a factorable matrix.
+        let x = Matrix::from_vec(4, 3, vec![1., 0., 2., -1., 0., 1., 2., 0., 0., 1., 0., 1.]);
+        let hs = HessianState::from_activations(&x);
+        assert!(hs.factor(1e-2, None).is_ok());
+    }
+}

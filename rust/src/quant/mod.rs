@@ -1,0 +1,365 @@
+//! Post-training quantizers.
+//!
+//! The paper's contribution ([`bpdq`]) plus every baseline its evaluation
+//! compares against, all behind one entry point ([`quantize_linear`]):
+//!
+//! | method | grid | objective | paper role |
+//! |---|---|---|---|
+//! | [`rtn`]    | fixed uniform   | none (round-to-nearest)        | floor |
+//! | [`gptq`]   | fixed uniform   | Hessian-aware, per-column      | main baseline |
+//! | [`awq`]    | fixed uniform   | activation-aware scaling       | main baseline |
+//! | [`anybcq`] | binary-coded    | alternating LS, no Hessian     | bit-plane baseline |
+//! | [`vptq`]   | vector codebook | Hessian-weighted k-means       | VQ baseline |
+//! | [`bpdq`]   | **variable**    | Hessian-induced, iterative     | **the paper** |
+//!
+//! All of them consume the same [`hessian::HessianState`] built from
+//! calibration activations and produce a [`QuantizedLinear`] carrying both
+//! the dequantized weights (for evaluation forwards) and the
+//! storage-accurate [`packing`] record (for BPW / model-size accounting
+//! that mirrors the paper's tables: e.g. GPTQ-W2-G64 → 2.28 BPW,
+//! BPDQ-W2-G64 → 2.75 BPW).
+
+pub mod anybcq;
+pub mod awq;
+pub mod bpdq;
+pub mod gar;
+pub mod gptq;
+pub mod hessian;
+pub mod packing;
+pub mod rtn;
+pub mod vptq;
+
+pub use bpdq::BpdqConfig;
+pub use hessian::HessianState;
+pub use packing::{BitPlanePacked, PackedWeights, UniformPacked, VqPacked};
+
+use crate::tensor::{matmul_transb, Matrix};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Uniform-grid config shared by RTN / GPTQ / AWQ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UniformConfig {
+    pub bits: u8,
+    pub group_size: usize,
+    /// GPTQ `desc_act`: reorder channels by descending Hessian diagonal.
+    pub act_order: bool,
+}
+
+impl Default for UniformConfig {
+    fn default() -> Self {
+        Self { bits: 4, group_size: 64, act_order: true }
+    }
+}
+
+/// Binary-coded config (AnyBCQ-like baseline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BcqConfig {
+    pub bits: u8,
+    pub group_size: usize,
+    pub alt_iters: usize,
+}
+
+impl Default for BcqConfig {
+    fn default() -> Self {
+        Self { bits: 2, group_size: 64, alt_iters: 6 }
+    }
+}
+
+/// Vector-quantization config (VPTQ-like baseline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VqConfig {
+    pub bits: u8,
+    /// sub-vector dimension
+    pub vdim: usize,
+    pub kmeans_iters: usize,
+    /// fraction of columns kept in fp16 (outlier protection)
+    pub outlier_frac: f64,
+}
+
+impl Default for VqConfig {
+    fn default() -> Self {
+        Self { bits: 2, vdim: 2, kmeans_iters: 30, outlier_frac: 0.005 }
+    }
+}
+
+/// Which quantizer to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantMethod {
+    Fp16,
+    Rtn(UniformConfig),
+    Gptq(UniformConfig),
+    Awq(UniformConfig),
+    AnyBcq(BcqConfig),
+    Vptq(VqConfig),
+    Bpdq(BpdqConfig),
+}
+
+impl QuantMethod {
+    pub fn name(&self) -> String {
+        match self {
+            QuantMethod::Fp16 => "FP16".into(),
+            QuantMethod::Rtn(c) => format!("RTN-W{}-G{}", c.bits, c.group_size),
+            QuantMethod::Gptq(c) => format!("GPTQ-W{}-G{}", c.bits, c.group_size),
+            QuantMethod::Awq(c) => format!("AWQ-W{}-G{}", c.bits, c.group_size),
+            QuantMethod::AnyBcq(c) => format!("AnyBCQ-W{}-G{}", c.bits, c.group_size),
+            QuantMethod::Vptq(c) => format!("VPTQ-W{}", c.bits),
+            QuantMethod::Bpdq(c) => format!("BPDQ-W{}-G{}", c.k, c.group_size),
+        }
+    }
+}
+
+/// Per-layer quantization diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct QuantStats {
+    /// `‖(W−Ŵ)X‖²_F` — the paper's optimization objective (Eq. 2).
+    pub output_err: f64,
+    /// `‖W−Ŵ‖²_F` — plain weight error, for reference.
+    pub weight_err: f64,
+    /// Wall-clock quantization time.
+    pub secs: f64,
+}
+
+/// A quantized linear layer: dequantized weights for evaluation plus the
+/// storage-exact packed record.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub method: String,
+    pub dequant: Matrix,
+    pub packed: PackedWeights,
+    pub stats: QuantStats,
+}
+
+impl QuantizedLinear {
+    pub fn bits_per_weight(&self) -> f64 {
+        let n = (self.dequant.rows() * self.dequant.cols()) as f64;
+        self.packed.total_bits() as f64 / n
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.packed.total_bits().div_ceil(8)
+    }
+}
+
+/// Quantize one linear layer's weight `w` (d_out × d_in) given calibration
+/// activations `x` (n_samples × d_in, rows are samples).
+pub fn quantize_linear(w: &Matrix, x: &Matrix, method: QuantMethod) -> Result<QuantizedLinear> {
+    let h = HessianState::from_activations(x);
+    quantize_linear_h(w, &h, x, method)
+}
+
+/// Same but with a pre-computed Hessian (shared across layers reading the
+/// same input activations).
+pub fn quantize_linear_h(
+    w: &Matrix,
+    h: &HessianState,
+    x: &Matrix,
+    method: QuantMethod,
+) -> Result<QuantizedLinear> {
+    anyhow::ensure!(
+        w.cols() == h.dim(),
+        "weight d_in {} != hessian dim {}",
+        w.cols(),
+        h.dim()
+    );
+    let t0 = Instant::now();
+    let (dequant, packed) = match &method {
+        QuantMethod::Fp16 => {
+            let bits = w.rows() * w.cols() * 16;
+            (quantize_fp16(w), PackedWeights::Fp16 { total_bits: bits })
+        }
+        QuantMethod::Rtn(c) => rtn::quantize(w, *c),
+        QuantMethod::Gptq(c) => gptq::quantize(w, h, *c)?,
+        QuantMethod::Awq(c) => awq::quantize(w, h, *c),
+        QuantMethod::AnyBcq(c) => anybcq::quantize(w, *c),
+        QuantMethod::Vptq(c) => vptq::quantize(w, h, *c)?,
+        QuantMethod::Bpdq(c) => bpdq::quantize(w, h, *c)?,
+    };
+    let secs = t0.elapsed().as_secs_f64();
+
+    // Output-aligned error ‖(W−Ŵ)X‖²_F, computed exactly on the
+    // calibration set.
+    let mut diff = w.clone();
+    diff.axpy(-1.0, &dequant);
+    let dx = matmul_transb(x, &diff); // (n × d_out)
+    let output_err = dx.fro_norm().powi(2);
+    let weight_err = diff.fro_norm().powi(2);
+
+    Ok(QuantizedLinear {
+        method: method.name(),
+        dequant,
+        packed,
+        stats: QuantStats { output_err, weight_err, secs },
+    })
+}
+
+/// fp16 round-trip (the "16-bit baseline" row of every table).
+pub fn quantize_fp16(w: &Matrix) -> Matrix {
+    w.map(f32_to_f16_roundtrip)
+}
+
+/// Round an f32 to the nearest f16 and back (software emulation; the
+/// vendor set has no `half` crate).
+pub fn f32_to_f16_roundtrip(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan pass through
+        return x;
+    }
+    let e16 = exp - 127 + 15;
+    let h: u16 = if e16 >= 0x1F {
+        // overflow → inf
+        ((sign << 15) | 0x7C00) as u16
+    } else if e16 <= 0 {
+        // subnormal or zero
+        if e16 < -10 {
+            (sign << 15) as u16
+        } else {
+            let m = frac | 0x80_0000;
+            let shift = (14 - e16) as u32;
+            let halfway = 1u32 << (shift - 1);
+            let mut m16 = m >> shift;
+            // round-to-nearest-even
+            let rem = m & ((1 << shift) - 1);
+            if rem > halfway || (rem == halfway && (m16 & 1) == 1) {
+                m16 += 1;
+            }
+            ((sign << 15) as u16) | (m16 as u16)
+        }
+    } else {
+        let mut m16 = (frac >> 13) as u32;
+        let rem = frac & 0x1FFF;
+        let mut e = e16 as u32;
+        if rem > 0x1000 || (rem == 0x1000 && (m16 & 1) == 1) {
+            m16 += 1;
+            if m16 == 0x400 {
+                m16 = 0;
+                e += 1;
+                if e >= 0x1F {
+                    return f32::from_bits((sign << 31) | 0x7F80_0000); // inf
+                }
+            }
+        }
+        ((sign << 15) | (e << 10) | m16) as u16
+    };
+
+    // h → f32
+    let hs = (h >> 15) as u32;
+    let he = ((h >> 10) & 0x1F) as u32;
+    let hf = (h & 0x3FF) as u32;
+    let f32_bits = if he == 0 {
+        if hf == 0 {
+            hs << 31
+        } else {
+            // subnormal
+            let mut e = -1i32;
+            let mut m = hf;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            (hs << 31) | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if he == 0x1F {
+        (hs << 31) | 0x7F80_0000 | (hf << 13)
+    } else {
+        (hs << 31) | ((he + 127 - 15) << 23) | (hf << 13)
+    };
+    f32::from_bits(f32_bits)
+}
+
+/// Number of column groups for `d_in` and `g` (last group may be ragged).
+pub fn n_groups(d_in: usize, g: usize) -> usize {
+    d_in.div_ceil(g)
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    /// Random (W, X) pair with heavy-tailed weights and Zipf-skewed
+    /// per-channel activation scales — the statistics the quantizers are
+    /// designed for.
+    pub fn rand_wx(seed: u64, d_out: usize, d_in: usize, n: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::from_vec(
+            d_out,
+            d_in,
+            (0..d_out * d_in).map(|_| 0.1 * rng.student_t(5.0) as f32).collect(),
+        );
+        let scales: Vec<f32> =
+            (0..d_in).map(|j| (1.0 / (1.0 + j as f32)).sqrt() * 3.0 + 0.05).collect();
+        let x = Matrix::from_vec(
+            n,
+            d_in,
+            (0..n * d_in)
+                .map(|i| scales[i % d_in] * rng.normal() as f32)
+                .collect(),
+        );
+        (w, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_util::rand_wx;
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exactness() {
+        // Values exactly representable in f16 survive.
+        for v in [0.0f32, 1.0, -2.5, 0.09375, 65504.0, -0.000061035156] {
+            assert_eq!(f32_to_f16_roundtrip(v), v, "{v}");
+        }
+        // Values beyond f16 range overflow to inf.
+        assert!(f32_to_f16_roundtrip(1e6).is_infinite());
+        // Rounding error bounded by 2^-11 relative.
+        for v in [0.1f32, 3.14159, -777.77, 1e-4] {
+            let r = f32_to_f16_roundtrip(v);
+            assert!(((r - v) / v).abs() < 1e-3, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn f16_idempotent() {
+        let mut rng = crate::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let v = (rng.normal() * 100.0) as f32;
+            let once = f32_to_f16_roundtrip(v);
+            assert_eq!(f32_to_f16_roundtrip(once), once, "{v}");
+        }
+    }
+
+    #[test]
+    fn fp16_method_bpw_is_16() {
+        let (w, x) = rand_wx(1, 8, 32, 16);
+        let q = quantize_linear(&w, &x, QuantMethod::Fp16).unwrap();
+        assert!((q.bits_per_weight() - 16.0).abs() < 1e-9);
+        assert!(q.stats.weight_err < 1e-4);
+    }
+
+    #[test]
+    fn method_names() {
+        assert_eq!(
+            QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 64, act_order: true }).name(),
+            "GPTQ-W2-G64"
+        );
+        assert_eq!(
+            QuantMethod::Bpdq(BpdqConfig { k: 3, group_size: 128, ..Default::default() }).name(),
+            "BPDQ-W3-G128"
+        );
+    }
+
+    #[test]
+    fn n_groups_ragged() {
+        assert_eq!(n_groups(128, 64), 2);
+        assert_eq!(n_groups(130, 64), 3);
+        assert_eq!(n_groups(1, 64), 1);
+    }
+}

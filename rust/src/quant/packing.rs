@@ -1,0 +1,358 @@
+//! Storage-exact packed weight formats and BPW accounting.
+//!
+//! The paper's BPW column is reproduced bit-for-bit from these records:
+//!
+//! * uniform (GPTQ/AWQ/RTN): `b`-bit codes + per-group fp16 scale +
+//!   `b`-bit zero-point → `BPW = b + (16 + b)/g`
+//!   (GPTQ-W2-G64 → 2 + 18/64 = **2.28**, W4-G64 → **4.31**, W3-G32 →
+//!   **3.59** — exactly the table values);
+//! * bit-plane (BPDQ): `k` planes + `(k+1)` fp16 coefficients per group →
+//!   `BPW = k + 16(k+1)/g`
+//!   (BPDQ-W2-G64 → **2.75**, W2-G128 → **2.38**, W2-G256 → **2.19**,
+//!   W4-G128 → **4.63**, W3-G64 → **4.00** — exactly the table values);
+//! * binary-coded (AnyBCQ): `k` planes + `k` fp16 scales per group;
+//! * vector-quantized (VPTQ): `b·vdim`-bit codes per sub-vector + shared
+//!   codebook + fp16 outlier columns.
+//!
+//! Bit-planes are packed 32 columns per `u32` word — the layout the
+//! [`crate::lut`] GEMV kernel consumes directly.
+
+use crate::tensor::Matrix;
+
+/// One packed bit-plane: `d_out × ceil(d_in/32)` u32 words, bit `j%32` of
+/// word `j/32` = plane value at column `j`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedPlane {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub words: Vec<u32>,
+}
+
+impl PackedPlane {
+    pub fn words_per_row(&self) -> usize {
+        self.d_in.div_ceil(32)
+    }
+
+    /// Pack from a dense 0/1 matrix.
+    pub fn pack(plane: &Matrix) -> Self {
+        let (d_out, d_in) = plane.shape();
+        let wpr = d_in.div_ceil(32);
+        let mut words = vec![0u32; d_out * wpr];
+        for r in 0..d_out {
+            let row = plane.row(r);
+            for (j, &v) in row.iter().enumerate() {
+                debug_assert!(v == 0.0 || v == 1.0, "plane value {v} not binary");
+                if v != 0.0 {
+                    words[r * wpr + j / 32] |= 1 << (j % 32);
+                }
+            }
+        }
+        Self { d_out, d_in, words }
+    }
+
+    /// Unpack to a dense 0/1 matrix.
+    pub fn unpack(&self) -> Matrix {
+        let wpr = self.words_per_row();
+        let mut m = Matrix::zeros(self.d_out, self.d_in);
+        for r in 0..self.d_out {
+            let row = m.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                let w = self.words[r * wpr + j / 32];
+                *v = ((w >> (j % 32)) & 1) as f32;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn bit(&self, r: usize, j: usize) -> bool {
+        let wpr = self.words_per_row();
+        (self.words[r * wpr + j / 32] >> (j % 32)) & 1 == 1
+    }
+
+    /// Row slice of packed words (for the LUT kernel).
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u32] {
+        let wpr = self.words_per_row();
+        &self.words[r * wpr..(r + 1) * wpr]
+    }
+}
+
+/// BPDQ packed record: Ŵ = REP(C₀) + Σᵢ REP(Cᵢ) ⊙ Bᵢ  (paper Eq. 1).
+#[derive(Clone, Debug)]
+pub struct BitPlanePacked {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub group_size: usize,
+    /// k packed planes, most-significant first.
+    pub planes: Vec<PackedPlane>,
+    /// (k+1) coefficient matrices, each d_out × n_groups; index 0 is the
+    /// bias C₀.
+    pub coeffs: Vec<Matrix>,
+    /// bits charged per stored coefficient (16 = fp16, the paper's format)
+    pub coeff_bits: usize,
+}
+
+impl BitPlanePacked {
+    pub fn k(&self) -> usize {
+        self.planes.len()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.d_in.div_ceil(self.group_size)
+    }
+
+    /// Dequantize to dense f32.
+    pub fn dequant(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.d_out, self.d_in);
+        let g = self.group_size;
+        for r in 0..self.d_out {
+            let row = w.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                let grp = j / g;
+                let mut acc = self.coeffs[0].get(r, grp);
+                for (i, plane) in self.planes.iter().enumerate() {
+                    if plane.bit(r, j) {
+                        acc += self.coeffs[i + 1].get(r, grp);
+                    }
+                }
+                *v = acc;
+            }
+        }
+        w
+    }
+
+    pub fn total_bits(&self) -> usize {
+        let plane_bits = self.k() * self.d_out * self.d_in;
+        let coeff_bits = (self.k() + 1) * self.d_out * self.n_groups() * self.coeff_bits;
+        plane_bits + coeff_bits
+    }
+}
+
+/// Uniform packed record (RTN/GPTQ/AWQ): per group-row fp16 scale +
+/// b-bit zero point; codes b bits each.
+#[derive(Clone, Debug)]
+pub struct UniformPacked {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub group_size: usize,
+    pub bits: u8,
+    /// codes, row-major, one u8 per weight (stored widened; the *charged*
+    /// size is `bits` per code)
+    pub codes: Vec<u8>,
+    /// d_out × n_groups fp16 scales (stored widened)
+    pub scales: Matrix,
+    /// d_out × n_groups integer zero-points
+    pub zeros: Vec<u8>,
+    /// If the channels were permuted before quantization (desc_act), the
+    /// inverse permutation needed at inference time.
+    pub inv_perm: Option<Vec<usize>>,
+}
+
+impl UniformPacked {
+    pub fn n_groups(&self) -> usize {
+        self.d_in.div_ceil(self.group_size)
+    }
+
+    pub fn dequant(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.d_out, self.d_in);
+        let g = self.group_size;
+        let ng = self.n_groups();
+        for r in 0..self.d_out {
+            let row = w.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                let grp = j / g;
+                let s = self.scales.get(r, grp);
+                let z = self.zeros[r * ng + grp] as f32;
+                let q = self.codes[r * self.d_in + j] as f32;
+                *v = s * (q - z);
+            }
+        }
+        match &self.inv_perm {
+            Some(p) => w.permute_cols(p),
+            None => w,
+        }
+    }
+
+    pub fn total_bits(&self) -> usize {
+        let code_bits = self.d_out * self.d_in * self.bits as usize;
+        let meta_bits = self.d_out * self.n_groups() * (16 + self.bits as usize);
+        code_bits + meta_bits
+    }
+}
+
+/// VPTQ packed record: codebook indices + shared codebook + fp16 outlier
+/// columns.
+#[derive(Clone, Debug)]
+pub struct VqPacked {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub vdim: usize,
+    pub bits: u8,
+    /// codebook: (2^(bits·vdim)) × vdim entries, fp16-charged
+    pub codebook: Matrix,
+    /// per sub-vector codebook index
+    pub codes: Vec<u16>,
+    /// columns stored in fp16 (outlier protection), ascending
+    pub outlier_cols: Vec<usize>,
+    /// d_out × outlier_cols.len() fp16 values
+    pub outliers: Matrix,
+}
+
+impl VqPacked {
+    pub fn index_bits(&self) -> usize {
+        (self.bits as usize) * self.vdim
+    }
+
+    pub fn total_bits(&self) -> usize {
+        let n_sub = self.d_out * (self.d_in - self.outlier_cols.len()).div_ceil(self.vdim);
+        let code_bits = n_sub * self.index_bits();
+        let book_bits = self.codebook.rows() * self.codebook.cols() * 16;
+        let outlier_bits = self.d_out * self.outlier_cols.len() * 16
+            + self.outlier_cols.len() * 32; // column indices
+        code_bits + book_bits + outlier_bits
+    }
+}
+
+/// The tagged union every quantizer returns.
+#[derive(Clone, Debug)]
+pub enum PackedWeights {
+    Fp16 { total_bits: usize },
+    Uniform(UniformPacked),
+    BitPlanes(BitPlanePacked),
+    Vq(VqPacked),
+}
+
+impl PackedWeights {
+    pub fn total_bits(&self) -> usize {
+        match self {
+            PackedWeights::Fp16 { total_bits } => *total_bits,
+            PackedWeights::Uniform(p) => p.total_bits(),
+            PackedWeights::BitPlanes(p) => p.total_bits(),
+            PackedWeights::Vq(p) => p.total_bits(),
+        }
+    }
+
+    /// The bit-plane record, if this is one (LUT serving path).
+    pub fn as_bit_planes(&self) -> Option<&BitPlanePacked> {
+        match self {
+            PackedWeights::BitPlanes(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn plane_pack_roundtrip() {
+        let mut rng = Rng::new(1);
+        for &(r, c) in &[(3, 7), (4, 32), (5, 33), (2, 100)] {
+            let m = Matrix::from_vec(
+                r,
+                c,
+                (0..r * c).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect(),
+            );
+            let p = PackedPlane::pack(&m);
+            assert_eq!(p.unpack(), m, "{r}x{c}");
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(p.bit(i, j), m.get(i, j) == 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bpw_matches_paper_table() {
+        // Helper constructing an empty record of the right shape.
+        let rec = |k: usize, g: usize, d_out: usize, d_in: usize| BitPlanePacked {
+            d_out,
+            d_in,
+            group_size: g,
+            planes: (0..k).map(|_| PackedPlane::pack(&Matrix::zeros(d_out, d_in))).collect(),
+            coeffs: (0..k + 1).map(|_| Matrix::zeros(d_out, d_in.div_ceil(g))).collect(),
+            coeff_bits: 16,
+        };
+        let bpw = |k: usize, g: usize| {
+            let r = rec(k, g, 4, 1024);
+            r.total_bits() as f64 / (4.0 * 1024.0)
+        };
+        assert!((bpw(2, 64) - 2.75).abs() < 1e-9); // paper BPDQ-W2-G64
+        assert!((bpw(2, 128) - 2.375).abs() < 1e-9); // paper 2.38
+        assert!((bpw(2, 256) - 2.1875).abs() < 1e-9); // paper 2.19
+        assert!((bpw(3, 64) - 4.0).abs() < 1e-9); // paper 4.00
+        assert!((bpw(3, 128) - 3.5).abs() < 1e-9); // paper 3.50
+        assert!((bpw(4, 128) - 4.625).abs() < 1e-9); // paper 4.63
+    }
+
+    #[test]
+    fn uniform_bpw_matches_paper_table() {
+        let rec = |bits: u8, g: usize, d_out: usize, d_in: usize| UniformPacked {
+            d_out,
+            d_in,
+            group_size: g,
+            bits,
+            codes: vec![0; d_out * d_in],
+            scales: Matrix::zeros(d_out, d_in.div_ceil(g)),
+            zeros: vec![0; d_out * d_in.div_ceil(g)],
+            inv_perm: None,
+        };
+        let bpw = |bits: u8, g: usize| {
+            let r = rec(bits, g, 4, 1024);
+            r.total_bits() as f64 / (4.0 * 1024.0)
+        };
+        assert!((bpw(2, 64) - 2.28125).abs() < 1e-9); // paper 2.28
+        assert!((bpw(2, 32) - 2.5625).abs() < 1e-9); // paper 2.56
+        assert!((bpw(3, 32) - 3.59375).abs() < 1e-9); // paper 3.59
+        assert!((bpw(3, 64) - 3.296875).abs() < 1e-9); // paper 3.30
+        assert!((bpw(4, 64) - 4.3125).abs() < 1e-9); // paper 4.31
+    }
+
+    #[test]
+    fn bitplane_dequant_formula() {
+        // 1 row, 4 cols, g=2, k=2: Ŵ = c0 + c1·B1 + c2·B2 per group.
+        let b1 = Matrix::from_vec(1, 4, vec![1., 0., 1., 1.]);
+        let b2 = Matrix::from_vec(1, 4, vec![0., 1., 1., 0.]);
+        let rec = BitPlanePacked {
+            d_out: 1,
+            d_in: 4,
+            group_size: 2,
+            planes: vec![PackedPlane::pack(&b1), PackedPlane::pack(&b2)],
+            coeffs: vec![
+                Matrix::from_vec(1, 2, vec![0.5, -1.0]), // c0 per group
+                Matrix::from_vec(1, 2, vec![2.0, 3.0]),  // c1
+                Matrix::from_vec(1, 2, vec![10.0, 20.0]), // c2
+            ],
+            coeff_bits: 16,
+        };
+        let w = rec.dequant();
+        // col0: g0, b1=1,b2=0 → 0.5+2 = 2.5
+        // col1: g0, b1=0,b2=1 → 0.5+10 = 10.5
+        // col2: g1, b1=1,b2=1 → -1+3+20 = 22
+        // col3: g1, b1=1,b2=0 → -1+3 = 2
+        assert_eq!(w.row(0), &[2.5, 10.5, 22.0, 2.0]);
+    }
+
+    #[test]
+    fn uniform_dequant_with_perm() {
+        // 1 row, 4 cols, g=4, scale 2, zero 1, codes [0,1,2,3],
+        // quantized in permuted order [2,0,3,1].
+        let packed = UniformPacked {
+            d_out: 1,
+            d_in: 4,
+            group_size: 4,
+            bits: 2,
+            codes: vec![0, 1, 2, 3],
+            scales: Matrix::from_vec(1, 1, vec![2.0]),
+            zeros: vec![1],
+            inv_perm: Some(vec![1, 3, 0, 2]), // inverse of [2,0,3,1]
+        };
+        let w = packed.dequant();
+        // dequant codes → [-2, 0, 2, 4] in permuted space; unpermute
+        assert_eq!(w.row(0), &[0.0, 4.0, -2.0, 2.0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! RTN — per-group asymmetric round-to-nearest (the fixed uniform grid
+//! of paper Fig. 1a, no optimization). Also hosts the affine-grid helpers
+//! shared by GPTQ and AWQ.
+
+use super::packing::{PackedWeights, UniformPacked};
+use super::UniformConfig;
+use crate::tensor::Matrix;
+
+/// Affine grid parameters for one (row, group).
+#[derive(Clone, Copy, Debug)]
+pub struct AffineParams {
+    pub scale: f32,
+    pub zero: u8,
+}
+
+/// Fit asymmetric min/max affine params over a slice of weights.
+pub fn fit_affine(ws: &[f32], bits: u8) -> AffineParams {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &w in ws {
+        lo = lo.min(w);
+        hi = hi.max(w);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return AffineParams { scale: 1.0, zero: 0 };
+    }
+    // grid must contain 0 for asymmetric quant of signed weights
+    lo = lo.min(0.0);
+    hi = hi.max(0.0);
+    let scale = ((hi - lo) / qmax).max(1e-8);
+    let zero = (-lo / scale).round().clamp(0.0, qmax) as u8;
+    AffineParams { scale, zero }
+}
+
+/// Quantize one value to its code on the affine grid.
+#[inline]
+pub fn quant_code(w: f32, p: AffineParams, bits: u8) -> u8 {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    (w / p.scale + p.zero as f32).round().clamp(0.0, qmax) as u8
+}
+
+/// Dequantize a code.
+#[inline]
+pub fn dequant_code(q: u8, p: AffineParams) -> f32 {
+    p.scale * (q as f32 - p.zero as f32)
+}
+
+/// Plain RTN quantization of a weight matrix.
+pub fn quantize(w: &Matrix, cfg: UniformConfig) -> (Matrix, PackedWeights) {
+    let (d_out, d_in) = w.shape();
+    let g = cfg.group_size;
+    let ng = d_in.div_ceil(g);
+    let mut codes = vec![0u8; d_out * d_in];
+    let mut scales = Matrix::zeros(d_out, ng);
+    let mut zeros = vec![0u8; d_out * ng];
+    let mut deq = Matrix::zeros(d_out, d_in);
+
+    for r in 0..d_out {
+        for grp in 0..ng {
+            let c0 = grp * g;
+            let c1 = (c0 + g).min(d_in);
+            let p = fit_affine(&w.row(r)[c0..c1], cfg.bits);
+            scales.set(r, grp, p.scale);
+            zeros[r * ng + grp] = p.zero;
+            for j in c0..c1 {
+                let q = quant_code(w.get(r, j), p, cfg.bits);
+                codes[r * d_in + j] = q;
+                deq.set(r, j, dequant_code(q, p));
+            }
+        }
+    }
+
+    let packed = UniformPacked {
+        d_out,
+        d_in,
+        group_size: g,
+        bits: cfg.bits,
+        codes,
+        scales,
+        zeros,
+        inv_perm: None,
+    };
+    (deq, PackedWeights::Uniform(packed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::test_util::rand_wx;
+
+    #[test]
+    fn affine_covers_range() {
+        let ws = [-1.0f32, -0.2, 0.3, 0.9];
+        let p = fit_affine(&ws, 4);
+        // extremes must round-trip within one step
+        for &w in &ws {
+            let q = quant_code(w, p, 4);
+            let d = dequant_code(q, p);
+            assert!((d - w).abs() <= p.scale * 0.5 + 1e-6, "{w} -> {d}");
+        }
+    }
+
+    #[test]
+    fn grid_contains_zero() {
+        let ws = [0.5f32, 0.7, 0.9]; // all positive
+        let p = fit_affine(&ws, 2);
+        // zero must be representable: code == zero gives exactly 0
+        assert_eq!(dequant_code(p.zero, p), 0.0);
+    }
+
+    #[test]
+    fn two_bit_grid_has_four_levels() {
+        let ws = [-1.0f32, -0.3, 0.4, 1.0];
+        let p = fit_affine(&ws, 2);
+        let mut levels: Vec<i32> = ws
+            .iter()
+            .map(|&w| quant_code(w, p, 2) as i32)
+            .collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert!(levels.len() <= 4);
+        for &l in &levels {
+            assert!((0..=3).contains(&l));
+        }
+    }
+
+    #[test]
+    fn rtn_error_shrinks_with_bits() {
+        let (w, _x) = rand_wx(5, 16, 128, 4);
+        let errs: Vec<f64> = [2u8, 3, 4, 8]
+            .iter()
+            .map(|&bits| {
+                let (deq, _) =
+                    quantize(&w, UniformConfig { bits, group_size: 32, act_order: false });
+                deq.fro_dist(&w)
+            })
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+        // 8-bit RTN is near-lossless
+        assert!(errs[3] < 0.01 * w.fro_norm());
+    }
+
+    #[test]
+    fn rtn_dequant_matches_packed_dequant() {
+        let (w, _x) = rand_wx(6, 8, 96, 4);
+        let cfg = UniformConfig { bits: 3, group_size: 32, act_order: false };
+        let (deq, packed) = quantize(&w, cfg);
+        if let PackedWeights::Uniform(p) = packed {
+            assert!(deq.fro_dist(&p.dequant()) < 1e-6);
+        } else {
+            panic!("wrong packing variant");
+        }
+    }
+
+    #[test]
+    fn ragged_last_group() {
+        let (w, _x) = rand_wx(7, 4, 70, 4); // 70 = 2*32 + 6
+        let cfg = UniformConfig { bits: 4, group_size: 32, act_order: false };
+        let (deq, packed) = quantize(&w, cfg);
+        assert_eq!(deq.shape(), (4, 70));
+        if let PackedWeights::Uniform(p) = &packed {
+            assert_eq!(p.n_groups(), 3);
+            assert!(deq.fro_dist(&p.dequant()) < 1e-6);
+        }
+    }
+}

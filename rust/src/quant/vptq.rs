@@ -1,0 +1,286 @@
+//! VPTQ-style vector post-training quantization (Liu et al., 2024) —
+//! the paper's high-fidelity / high-cost VQ baseline.
+//!
+//! Per layer: (1) protect the most salient columns in fp16 (outlier
+//! protection, fraction `outlier_frac`); (2) split the remaining columns
+//! of each row into `vdim`-dimensional sub-vectors; (3) learn a shared
+//! codebook of `2^(bits·vdim)` centroids by **Hessian-diagonal-weighted
+//! k-means** (many iterations — this is where the ~40× quantization cost
+//! of Table 3 comes from); (4) assign with GPTQ-style column-block error
+//! propagation so the assignment stays output-aligned.
+
+use super::hessian::{HessianState, DEFAULT_HESSIAN_DAMP};
+use super::packing::{PackedWeights, VqPacked};
+use super::VqConfig;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+pub fn quantize(w: &Matrix, h: &HessianState, cfg: VqConfig) -> Result<(Matrix, PackedWeights)> {
+    let (d_out, d_in) = w.shape();
+    let v = cfg.vdim;
+    let n_codes = 1usize << (cfg.bits as usize * v);
+
+    // --- outlier columns: top fraction by Hessian diagonal ---
+    let diag = h.diag();
+    let n_out = ((d_in as f64 * cfg.outlier_frac).ceil() as usize).min(d_in);
+    let mut order: Vec<usize> = (0..d_in).collect();
+    order.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut outlier_cols: Vec<usize> = order[..n_out].to_vec();
+    outlier_cols.sort_unstable();
+    let is_outlier: Vec<bool> = {
+        let mut m = vec![false; d_in];
+        for &c in &outlier_cols {
+            m[c] = true;
+        }
+        m
+    };
+    let kept: Vec<usize> = (0..d_in).filter(|&c| !is_outlier[c]).collect();
+
+    // --- collect weighted training sub-vectors ---
+    // Sub-vector t of row r covers kept columns [t*v, t*v+v).
+    let n_sub_per_row = kept.len().div_ceil(v);
+    let mut subs: Vec<f32> = Vec::with_capacity(d_out * n_sub_per_row * v);
+    let mut sub_w: Vec<f64> = Vec::with_capacity(d_out * n_sub_per_row);
+    for r in 0..d_out {
+        let row = w.row(r);
+        for t in 0..n_sub_per_row {
+            let mut wt = 0.0f64;
+            for i in 0..v {
+                let idx = t * v + i;
+                let (val, dw) = if idx < kept.len() {
+                    (row[kept[idx]], diag[kept[idx]])
+                } else {
+                    (0.0, 0.0) // zero-pad ragged tail
+                };
+                subs.push(val);
+                wt += dw;
+            }
+            sub_w.push(wt.max(1e-12));
+        }
+    }
+    let n_sub = sub_w.len();
+
+    // --- weighted k-means (the expensive part) ---
+    let mut codebook = init_codebook(&subs, n_sub, v, n_codes);
+    let mut assign = vec![0u16; n_sub];
+    for _ in 0..cfg.kmeans_iters {
+        // assignment
+        for t in 0..n_sub {
+            let sv = &subs[t * v..(t + 1) * v];
+            assign[t] = nearest_code(&codebook, sv, v) as u16;
+        }
+        // update (weighted means)
+        let mut sums = vec![0.0f64; n_codes * v];
+        let mut wsum = vec![0.0f64; n_codes];
+        for t in 0..n_sub {
+            let c = assign[t] as usize;
+            let wt = sub_w[t];
+            wsum[c] += wt;
+            for i in 0..v {
+                sums[c * v + i] += wt * subs[t * v + i] as f64;
+            }
+        }
+        for c in 0..n_codes {
+            if wsum[c] > 0.0 {
+                for i in 0..v {
+                    codebook[c * v + i] = (sums[c * v + i] / wsum[c]) as f32;
+                }
+            }
+        }
+    }
+
+    // --- output-aligned assignment with block error propagation ---
+    // Process kept columns in blocks of v (a sub-vector spans v columns);
+    // after assigning a block, propagate the quantization error through
+    // the global factor U like GPTQ does per column.
+    let u = h.factor(DEFAULT_HESSIAN_DAMP, None)?;
+    let mut work = w.clone();
+    let mut deq = Matrix::zeros(d_out, d_in);
+    let mut codes = vec![0u16; d_out * n_sub_per_row];
+
+    // outlier columns: exact fp16 copy
+    let mut outliers = Matrix::zeros(d_out, n_out);
+    for (oi, &c) in outlier_cols.iter().enumerate() {
+        for r in 0..d_out {
+            let val = super::f32_to_f16_roundtrip(w.get(r, c));
+            outliers.set(r, oi, val);
+            deq.set(r, c, val);
+        }
+    }
+
+    let mut sv = vec![0.0f32; v];
+    for t in 0..n_sub_per_row {
+        let cols: Vec<usize> = (0..v).filter(|&i| t * v + i < kept.len()).map(|i| kept[t * v + i]).collect();
+        for r in 0..d_out {
+            for (i, &c) in cols.iter().enumerate() {
+                sv[i] = work.get(r, c);
+            }
+            for i in cols.len()..v {
+                sv[i] = 0.0;
+            }
+            let code = nearest_code(&codebook, &sv[..v], v);
+            codes[r * n_sub_per_row + t] = code as u16;
+            for (i, &c) in cols.iter().enumerate() {
+                let qv = codebook[code * v + i];
+                deq.set(r, c, qv);
+                // per-column propagation within and beyond the block
+                let e = ((work.get(r, c) - qv) as f64 / u.get(c, c)) as f32;
+                if e != 0.0 {
+                    let urow = u.row(c);
+                    let wrow = work.row_mut(r);
+                    for j in (c + 1)..d_in {
+                        wrow[j] -= e * urow[j] as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    // charge codebook at fp16
+    let codebook_m = Matrix::from_vec(n_codes, v, codebook);
+    let packed = VqPacked {
+        d_out,
+        d_in,
+        vdim: v,
+        bits: cfg.bits,
+        codebook: codebook_m,
+        codes,
+        outlier_cols,
+        outliers,
+    };
+    Ok((deq, PackedWeights::Vq(packed)))
+}
+
+/// k-means++-style deterministic seeding: spread over the value range.
+fn init_codebook(subs: &[f32], n_sub: usize, v: usize, n_codes: usize) -> Vec<f32> {
+    let mut codebook = vec![0.0f32; n_codes * v];
+    if n_sub == 0 {
+        return codebook;
+    }
+    // Seed c-th centroid from the sub-vector at the c-th quantile of the
+    // first-component order — deterministic and well-spread.
+    let mut order: Vec<usize> = (0..n_sub).collect();
+    order.sort_by(|&a, &b| {
+        subs[a * v]
+            .partial_cmp(&subs[b * v])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for c in 0..n_codes {
+        let t = order[(c * (n_sub - 1)) / (n_codes - 1).max(1)];
+        for i in 0..v {
+            codebook[c * v + i] = subs[t * v + i];
+        }
+    }
+    codebook
+}
+
+#[inline]
+fn nearest_code(codebook: &[f32], sv: &[f32], v: usize) -> usize {
+    let n_codes = codebook.len() / v;
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..n_codes {
+        let mut d = 0.0f32;
+        for i in 0..v {
+            let diff = sv[i] - codebook[c * v + i];
+            d += diff * diff;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::test_util::rand_wx;
+    use crate::quant::{quantize_linear, QuantMethod, UniformConfig};
+
+    #[test]
+    fn nearest_code_picks_argmin() {
+        let cb = vec![0.0, 0.0, 1.0, 1.0, -1.0, 2.0];
+        assert_eq!(nearest_code(&cb, &[0.9, 1.1], 2), 1);
+        assert_eq!(nearest_code(&cb, &[-0.8, 1.9], 2), 2);
+    }
+
+    #[test]
+    fn vptq_quality_beats_gptq_at_2bit() {
+        // Table 2 ordering: VPTQ is the quality ceiling at 2-bit.
+        let (w, x) = rand_wx(51, 24, 128, 96);
+        let e_vq = quantize_linear(&w, &x, QuantMethod::Vptq(VqConfig::default()))
+            .unwrap()
+            .stats
+            .output_err;
+        let e_gptq = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 64, act_order: true }),
+        )
+        .unwrap()
+        .stats
+        .output_err;
+        assert!(e_vq < e_gptq, "vptq {e_vq} !< gptq {e_gptq}");
+    }
+
+    #[test]
+    fn vptq_slower_than_gptq() {
+        // Table 3's cost ordering: VPTQ ≫ GPTQ (the 40× in the paper).
+        // At unit-test scale we only assert the direction vs GPTQ; the
+        // full cost ratios are measured by the table3 bench.
+        let (w, x) = rand_wx(52, 48, 128, 64);
+        let t_vq = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Vptq(VqConfig { kmeans_iters: 60, ..Default::default() }),
+        )
+        .unwrap()
+        .stats
+        .secs;
+        let t_gptq = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 64, act_order: true }),
+        )
+        .unwrap()
+        .stats
+        .secs;
+        assert!(t_vq > t_gptq, "vptq {t_vq}s !> gptq {t_gptq}s");
+    }
+
+    #[test]
+    fn outlier_columns_are_exact_fp16() {
+        let (w, x) = rand_wx(53, 8, 64, 48);
+        let cfg = VqConfig { outlier_frac: 0.1, ..Default::default() };
+        let q = quantize_linear(&w, &x, QuantMethod::Vptq(cfg)).unwrap();
+        if let PackedWeights::Vq(p) = &q.packed {
+            assert!(!p.outlier_cols.is_empty());
+            for (oi, &c) in p.outlier_cols.iter().enumerate() {
+                for r in 0..w.rows() {
+                    let want = crate::quant::f32_to_f16_roundtrip(w.get(r, c));
+                    assert_eq!(q.dequant.get(r, c), want, "outlier col {c}");
+                    assert_eq!(p.outliers.get(r, oi), want);
+                }
+            }
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn bpw_near_nominal() {
+        let (w, x) = rand_wx(54, 16, 256, 16);
+        let q = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Vptq(VqConfig { bits: 2, vdim: 2, kmeans_iters: 5, outlier_frac: 0.005 }),
+        )
+        .unwrap();
+        let bpw = q.bits_per_weight();
+        // 2 bits/weight + codebook/outlier overhead — should be within
+        // ~30% of nominal for this small layer and well under 4.
+        assert!(bpw > 2.0 && bpw < 3.2, "bpw={bpw}");
+    }
+}

@@ -1,0 +1,427 @@
+//! The experiment harness behind every table/figure reproduction.
+//!
+//! Maps paper experiments → synthetic-substrate runs (DESIGN.md §5):
+//!
+//! * [`table1`] — main quality sweep (GPTQ/AWQ/BPDQ × W4/W3/W2 × group
+//!   pairings, 7 metrics). Paper Tables 1/4/5 shape.
+//! * [`table2`] — + AnyBCQ/VPTQ/RTN and SIZE column. Paper Table 2/6/7.
+//! * [`table3`] — efficiency profile (quant cost, size, decode µs/token
+//!   per engine) + activation outlier stats. Paper Table 3.
+//! * [`fig1b`]  — 2-bit bar comparison. Paper Figure 1(b).
+//! * [`fig3`]   — long-context suite. Paper Figure 3.
+
+use super::{print_bar, print_quality_table, QualityRow};
+use crate::data::{tasks, CorpusConfig, CorpusGen, Split, Tokenizer};
+use crate::eval::{self, outliers, EvalConfig};
+use crate::io::tlm::TlmFile;
+use crate::model::pipeline::{quantize_model, QuantizedModel};
+use crate::model::Model;
+use crate::quant::{BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig};
+use crate::serving::{Engine, EngineKind, LutModel, Request};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct HarnessCfg {
+    pub model_path: PathBuf,
+    pub quick: bool,
+}
+
+impl HarnessCfg {
+    pub fn new(model_path: &str, quick: bool) -> Self {
+        Self { model_path: PathBuf::from(model_path), quick }
+    }
+
+    fn eval_cfg(&self) -> EvalConfig {
+        if self.quick {
+            EvalConfig { n_ppl_docs: 12, n_arith: 12, n_choice: 16, ..Default::default() }
+        } else {
+            EvalConfig { n_ppl_docs: 48, n_arith: 48, n_choice: 48, ..Default::default() }
+        }
+    }
+
+    fn n_calib(&self) -> usize {
+        if self.quick {
+            24
+        } else {
+            96
+        }
+    }
+}
+
+/// Load the trained checkpoint + shared data context.
+pub fn load(cfg: &HarnessCfg) -> Result<(Model, CorpusGen, Tokenizer)> {
+    let tlm = TlmFile::load(&cfg.model_path)
+        .with_context(|| format!("load {} (run `make artifacts` first)", cfg.model_path.display()))?;
+    let model = Model::from_tlm(&tlm)?;
+    Ok((model, CorpusGen::new(CorpusConfig::default()), Tokenizer::new()))
+}
+
+fn calib_seqs(gen: &CorpusGen, tok: &Tokenizer, n: usize, max_len: usize) -> Vec<Vec<u32>> {
+    gen.token_docs(Split::Calib, n, tok)
+        .into_iter()
+        .map(|mut d| {
+            d.truncate(max_len);
+            d
+        })
+        .filter(|d| d.len() >= 8)
+        .collect()
+}
+
+/// Quantize + evaluate one method; returns the table row and the
+/// quantized model for reuse.
+pub fn run_method(
+    cfg: &HarnessCfg,
+    model: &Model,
+    gen: &CorpusGen,
+    tok: &Tokenizer,
+    method: &QuantMethod,
+) -> Result<(QualityRow, Option<QuantizedModel>)> {
+    let ecfg = cfg.eval_cfg();
+    if matches!(method, QuantMethod::Fp16) {
+        let scores = eval::run_battery(model, gen, tok, &ecfg);
+        return Ok((
+            QualityRow {
+                method: "FP16 (baseline)".into(),
+                bpw: 16.0,
+                size_mib: model.fp16_bytes() as f64 / (1 << 20) as f64,
+                quant_secs: 0.0,
+                scores,
+            },
+            None,
+        ));
+    }
+    let calib = calib_seqs(gen, tok, cfg.n_calib(), model.cfg.max_seq);
+    let qm = quantize_model(model, &calib, method)?;
+    let scores = eval::run_battery(&qm.model, gen, tok, &ecfg);
+    let row = QualityRow {
+        method: method.name(),
+        bpw: qm.bits_per_weight(),
+        size_mib: qm.size_bytes() as f64 / (1 << 20) as f64,
+        quant_secs: qm.quant_secs,
+        scores,
+    };
+    Ok((row, Some(qm)))
+}
+
+fn uc(bits: u8, g: usize) -> UniformConfig {
+    UniformConfig { bits, group_size: g, act_order: true }
+}
+
+fn bp(k: u8, g: usize) -> BpdqConfig {
+    BpdqConfig { k, group_size: g, ..Default::default() }
+}
+
+/// Paper Table 1 method grid: GPTQ/AWQ at group g, BPDQ at 2g (the
+/// paper's BPW-fairness pairing).
+fn table1_methods(quick: bool) -> Vec<QuantMethod> {
+    use QuantMethod::*;
+    if quick {
+        return vec![Fp16, Gptq(uc(2, 32)), Awq(uc(2, 32)), Bpdq(bp(2, 64))];
+    }
+    vec![
+        Fp16,
+        // W4 tier
+        Gptq(uc(4, 64)),
+        Awq(uc(4, 64)),
+        Bpdq(bp(4, 128)),
+        // W3 tiers
+        Gptq(uc(3, 32)),
+        Awq(uc(3, 32)),
+        Bpdq(bp(3, 64)),
+        Gptq(uc(3, 64)),
+        Awq(uc(3, 64)),
+        Bpdq(bp(3, 128)),
+        // W2 tiers — the paper's headline regime
+        Gptq(uc(2, 32)),
+        Awq(uc(2, 32)),
+        Bpdq(bp(2, 64)),
+        Gptq(uc(2, 64)),
+        Awq(uc(2, 64)),
+        Bpdq(bp(2, 128)),
+        // extreme compression row
+        Bpdq(bp(2, 256)),
+    ]
+}
+
+pub fn table1(cfg: &HarnessCfg) -> Result<Vec<QualityRow>> {
+    let (model, gen, tok) = load(cfg)?;
+    let mut rows = Vec::new();
+    for m in table1_methods(cfg.quick) {
+        eprintln!("[table1] {} …", m.name());
+        let (row, _) = run_method(cfg, &model, &gen, &tok, &m)?;
+        rows.push(row);
+    }
+    print_quality_table(
+        "Table 1 — main quality results (synthetic tiny-LM substrate)",
+        &rows,
+    );
+    print_shape_checks(&rows);
+    Ok(rows)
+}
+
+/// The paper's qualitative claims, checked on our rows and reported.
+fn print_shape_checks(rows: &[QualityRow]) {
+    let find = |prefix: &str| rows.iter().find(|r| r.method.starts_with(prefix));
+    println!("\n-- shape checks vs paper claims --");
+    if let (Some(g), Some(a), Some(b)) =
+        (find("GPTQ-W2-G32"), find("AWQ-W2-G32"), find("BPDQ-W2-G64"))
+    {
+        println!(
+            "W2: BPDQ ppl {} < GPTQ ppl {}: {}   AWQ collapses (ppl {}): {}",
+            super::fmt_ppl(b.scores.ppl),
+            super::fmt_ppl(g.scores.ppl),
+            b.scores.ppl < g.scores.ppl,
+            super::fmt_ppl(a.scores.ppl),
+            a.scores.ppl > g.scores.ppl,
+        );
+        println!(
+            "W2 reasoning: BPDQ {:.1}% vs GPTQ {:.1}% vs AWQ {:.1}%",
+            b.scores.arith * 100.0,
+            g.scores.arith * 100.0,
+            a.scores.arith * 100.0
+        );
+    }
+    if let (Some(g), Some(b)) = (find("GPTQ-W4"), find("BPDQ-W4")) {
+        println!(
+            "W4: all methods ≈ fp16 (GPTQ ppl {}, BPDQ ppl {})",
+            super::fmt_ppl(g.scores.ppl),
+            super::fmt_ppl(b.scores.ppl)
+        );
+    }
+}
+
+/// Paper Table 2 grid: + AnyBCQ, VPTQ, RTN at the same tiers.
+pub fn table2(cfg: &HarnessCfg) -> Result<Vec<QualityRow>> {
+    use QuantMethod::*;
+    let (model, gen, tok) = load(cfg)?;
+    let grid: Vec<QuantMethod> = if cfg.quick {
+        vec![
+            Fp16,
+            Gptq(uc(2, 64)),
+            AnyBcq(BcqConfig { bits: 2, group_size: 64, alt_iters: 6 }),
+            Vptq(VqConfig { bits: 2, ..Default::default() }),
+            Bpdq(bp(2, 128)),
+        ]
+    } else {
+        vec![
+            Fp16,
+            Rtn(uc(4, 64)),
+            Gptq(uc(4, 64)),
+            Awq(uc(4, 64)),
+            AnyBcq(BcqConfig { bits: 4, group_size: 128, alt_iters: 6 }),
+            Vptq(VqConfig { bits: 4, ..Default::default() }),
+            Bpdq(bp(4, 128)),
+            Rtn(uc(3, 64)),
+            Gptq(uc(3, 64)),
+            Awq(uc(3, 64)),
+            AnyBcq(BcqConfig { bits: 3, group_size: 128, alt_iters: 6 }),
+            Vptq(VqConfig { bits: 3, ..Default::default() }),
+            Bpdq(bp(3, 128)),
+            Rtn(uc(2, 64)),
+            Gptq(uc(2, 64)),
+            Awq(uc(2, 64)),
+            AnyBcq(BcqConfig { bits: 2, group_size: 64, alt_iters: 6 }),
+            Vptq(VqConfig { bits: 2, ..Default::default() }),
+            Bpdq(bp(2, 64)),
+            Bpdq(bp(2, 128)),
+        ]
+    };
+    let mut rows = Vec::new();
+    for m in grid {
+        eprintln!("[table2] {} …", m.name());
+        let (row, _) = run_method(cfg, &model, &gen, &tok, &m)?;
+        rows.push(row);
+    }
+    print_quality_table(
+        "Table 2 — bit-plane & VQ method comparison (synthetic substrate)",
+        &rows,
+    );
+    // cost-ratio claims (paper: BPDQ ≈3× GPTQ, VPTQ ≈40×)
+    let t = |p: &str| rows.iter().find(|r| r.method.starts_with(p)).map(|r| r.quant_secs);
+    if let (Some(tg), Some(tb), Some(tv)) = (t("GPTQ-W2"), t("BPDQ-W2"), t("VPTQ-W2")) {
+        println!(
+            "\nquant-cost ratios vs GPTQ: BPDQ {:.1}× (paper ~3×), VPTQ {:.1}× (paper ~40×)",
+            tb / tg,
+            tv / tg
+        );
+    }
+    Ok(rows)
+}
+
+/// Decode latency of one engine over `n_tokens`, µs/token.
+fn decode_latency_us(kind: EngineKind, prompt: &[u32], n_tokens: usize) -> Result<f64> {
+    let mut engine = Engine::new(kind)?;
+    // warmup
+    let _ = engine.generate_batch(&[Request { id: 0, prompt: prompt.to_vec(), max_new: 2 }])?;
+    let t0 = std::time::Instant::now();
+    let r = engine.generate_batch(&[Request {
+        id: 1,
+        prompt: prompt.to_vec(),
+        max_new: n_tokens,
+    }])?;
+    let total = t0.elapsed().as_secs_f64() * 1e6;
+    Ok(total / (r[0].tokens.len() + prompt.len()) as f64)
+}
+
+/// Paper Table 3: efficiency profile + activation outlier statistics.
+pub fn table3(cfg: &HarnessCfg) -> Result<()> {
+    let (model, gen, tok) = load(cfg)?;
+    let model = Arc::new(model);
+    let calib = calib_seqs(&gen, &tok, cfg.n_calib(), model.cfg.max_seq);
+    let probes: Vec<Vec<u32>> = gen
+        .token_docs(Split::Eval, if cfg.quick { 8 } else { 32 }, &tok)
+        .into_iter()
+        .map(|mut d| {
+            d.truncate(model.cfg.max_seq);
+            d
+        })
+        .collect();
+    let n_tokens = if cfg.quick { 16 } else { 64 };
+    let prompt = tok.encode("q: 3+4=? a:");
+
+    println!("\n=== Table 3 — efficiency profile & outlier statistics ===");
+    println!(
+        "{:<22} {:>9} {:>10} {:>12} {:>12} {:>9} {:>9} {:>8} {:>8}",
+        "Model", "Cost(s)", "SIZE(MiB)", "Engine", "µs/token", "DiagR", "ΔDiagR", "Cnt10", "ΔCnt10"
+    );
+
+    let base_stats = outliers::activation_outliers(&model, &probes);
+    let fp_lat = decode_latency_us(EngineKind::Native(model.clone()), &prompt, n_tokens)?;
+    println!(
+        "{:<22} {:>9} {:>10.2} {:>12} {:>12.1} {:>9.2} {:>9} {:>8} {:>8}",
+        "FP16",
+        "-",
+        model.fp16_bytes() as f64 / (1 << 20) as f64,
+        "dense",
+        fp_lat,
+        base_stats.diag_r_p95,
+        "-",
+        base_stats.cnt10,
+        "-"
+    );
+
+    let entries: Vec<(QuantMethod, &str)> = vec![
+        (QuantMethod::Gptq(uc(2, 32)), "dequant"),
+        (QuantMethod::Vptq(VqConfig { bits: 2, ..Default::default() }), "dequant"),
+        (QuantMethod::Bpdq(bp(2, 64)), "LUT"),
+    ];
+    for (m, engine_name) in entries {
+        eprintln!("[table3] {} …", m.name());
+        let qm = quantize_model(&model, &calib, &m)?;
+        let stats = outliers::activation_outliers(&qm.model, &probes);
+        let (dr, dc) = stats.delta_vs(&base_stats);
+        let qmodel = Arc::new(qm.model.clone());
+        let lat = if engine_name == "LUT" {
+            let packed: HashMap<_, _> = qm
+                .packed
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+                .collect();
+            decode_latency_us(
+                EngineKind::Lut(LutModel::new(qmodel.clone(), packed)?),
+                &prompt,
+                n_tokens,
+            )?
+        } else {
+            decode_latency_us(EngineKind::Native(qmodel.clone()), &prompt, n_tokens)?
+        };
+        println!(
+            "{:<22} {:>9.1} {:>10.2} {:>12} {:>12.1} {:>9.2} {:>+8.1}% {:>8} {:>+7.1}%",
+            m.name(),
+            qm.quant_secs,
+            qm.size_bytes() as f64 / (1 << 20) as f64,
+            engine_name,
+            lat,
+            stats.diag_r_p95,
+            dr * 100.0,
+            stats.cnt10,
+            dc * 100.0
+        );
+    }
+    println!("\n(paper shape: GPTQ-W2 suppresses outliers strongly, BPDQ ≈ preserves;");
+    println!(" LUT decode latency ≈ flat across bit-widths and beats dequant at W2/W3)");
+    Ok(())
+}
+
+/// Paper Fig. 1(b): 2-bit method comparison, printed as bars.
+pub fn fig1b(cfg: &HarnessCfg) -> Result<Vec<QualityRow>> {
+    use QuantMethod::*;
+    let (model, gen, tok) = load(cfg)?;
+    let grid = vec![
+        Fp16,
+        Gptq(uc(2, 32)),
+        Awq(uc(2, 32)),
+        AnyBcq(BcqConfig { bits: 2, group_size: 64, alt_iters: 6 }),
+        Vptq(VqConfig { bits: 2, ..Default::default() }),
+        Bpdq(bp(2, 64)),
+    ];
+    let mut rows = Vec::new();
+    for m in grid {
+        eprintln!("[fig1b] {} …", m.name());
+        let (row, _) = run_method(cfg, &model, &gen, &tok, &m)?;
+        rows.push(row);
+    }
+    println!("\n=== Figure 1(b) — 2-bit quantization comparison (GSM8K* EM) ===");
+    let max = rows.iter().map(|r| r.scores.arith).fold(0.0, f64::max);
+    for r in &rows {
+        print_bar(&r.method, r.scores.arith, max, 40);
+    }
+    println!("\n(ppl column for the same rows)");
+    for r in &rows {
+        println!("{:<22} ppl {}", r.method, super::fmt_ppl(r.scores.ppl));
+    }
+    Ok(rows)
+}
+
+/// Paper Fig. 3: LongBench-proxy suite.
+pub fn fig3(cfg: &HarnessCfg) -> Result<()> {
+    use QuantMethod::*;
+    let (model, gen, tok) = load(cfg)?;
+    let n = if cfg.quick { 12 } else { 32 };
+    // Retrieval = keyword-classification at increasing distance (the
+    // retrieval proxy the tiny-LM can perform; the verbatim passkey task
+    // is beyond its 96-char training window — see EXPERIMENTS.md).
+    let suites = |m: &Model, label: &str| -> (f64, f64, f64, f64) {
+        let r0 = eval::choice_accuracy(m, &tok, &tasks::gen_classify_at_distance(&gen, 11, n, 0));
+        let r1 = eval::choice_accuracy(m, &tok, &tasks::gen_classify_at_distance(&gen, 12, n, 1));
+        let r2 = eval::choice_accuracy(m, &tok, &tasks::gen_classify_at_distance(&gen, 13, n, 2));
+        let class = eval::choice_accuracy(m, &tok, &tasks::gen_classify(&gen, 14, n));
+        println!(
+            "{label:<18} retrieve@0 {:>6.1}%  retrieve@1 {:>6.1}%  retrieve@2 {:>6.1}%  classify {:>6.1}%",
+            r0 * 100.0,
+            r1 * 100.0,
+            r2 * 100.0,
+            class * 100.0
+        );
+        (r0, r1, r2, class)
+    };
+
+    println!("\n=== Figure 3 — long-context suite (LongBench proxies) ===");
+    suites(&model, "FP16");
+    let calib = calib_seqs(&gen, &tok, cfg.n_calib(), model.cfg.max_seq);
+    let grid: Vec<QuantMethod> = if cfg.quick {
+        vec![Gptq(uc(2, 32)), Awq(uc(2, 32)), Bpdq(bp(2, 64))]
+    } else {
+        vec![
+            Gptq(uc(4, 64)),
+            Bpdq(bp(4, 128)),
+            Gptq(uc(3, 64)),
+            Bpdq(bp(3, 128)),
+            Gptq(uc(2, 32)),
+            Awq(uc(2, 32)),
+            Vptq(VqConfig { bits: 2, ..Default::default() }),
+            Bpdq(bp(2, 64)),
+        ]
+    };
+    for m in grid {
+        eprintln!("[fig3] {} …", m.name());
+        let qm = quantize_model(&model, &calib, &m)?;
+        suites(&qm.model, &m.name());
+    }
+    println!("\n(paper shape: at 3–4 bit all ≈ baseline; at 2-bit retrieval collapses for");
+    println!(" GPTQ/AWQ while BPDQ retains most of it; VPTQ best but costliest)");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Paper-table regeneration harness + formatting.
+//!
+//! Each `table*`/`fig*` function reproduces one table or figure of the
+//! paper on the synthetic substrate (DESIGN.md §5 maps them). They are
+//! called both by the `bpdq` CLI subcommands and by the `cargo bench`
+//! wrappers, and print rows in the paper's column order so outputs can
+//! be diffed against the paper's shape claims.
+
+pub mod harness;
+
+use crate::eval::BenchScores;
+
+/// One row of a quality table (Tables 1/2/4–7 share this shape).
+#[derive(Clone, Debug)]
+pub struct QualityRow {
+    pub method: String,
+    pub bpw: f64,
+    pub size_mib: f64,
+    pub quant_secs: f64,
+    pub scores: BenchScores,
+}
+
+/// Print a paper-shaped quality table.
+pub fn print_quality_table(title: &str, rows: &[QualityRow]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<18} {:>6} {:>9} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "Method", "BPW", "SIZE(MiB)", "Cost(s)", "Wiki2*↓", "GSM8K*↑", "ARC*↑", "BoolQ*↑", "HellaS*↑", "TREC*↑"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:>6.2} {:>9.2} {:>8.1} {:>8} {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}%",
+            r.method,
+            r.bpw,
+            r.size_mib,
+            r.quant_secs,
+            fmt_ppl(r.scores.ppl),
+            r.scores.arith * 100.0,
+            r.scores.fact_choice * 100.0,
+            r.scores.bool_fact * 100.0,
+            r.scores.continuation * 100.0,
+            r.scores.classify * 100.0,
+        );
+    }
+}
+
+/// Perplexities can explode (AWQ-W2 in the paper hits 10⁵–10⁷); print
+/// them the way the paper does.
+pub fn fmt_ppl(ppl: f64) -> String {
+    if !ppl.is_finite() {
+        "N/A".to_string()
+    } else if ppl >= 1e4 {
+        format!("{ppl:.1e}")
+    } else {
+        format!("{ppl:.2}")
+    }
+}
+
+/// Simple horizontal bar chart for figure-style output (Fig. 1b / Fig 3).
+pub fn print_bar(label: &str, value: f64, max: f64, width: usize) {
+    let frac = if max > 0.0 { (value / max).clamp(0.0, 1.0) } else { 0.0 };
+    let filled = (frac * width as f64).round() as usize;
+    println!(
+        "{label:<22} {:>6.2}% |{}{}|",
+        value * 100.0,
+        "█".repeat(filled),
+        " ".repeat(width - filled)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_formatting_matches_paper_style() {
+        assert_eq!(fmt_ppl(8.35), "8.35");
+        assert_eq!(fmt_ppl(1.5e6), "1.5e6");
+        assert_eq!(fmt_ppl(f64::INFINITY), "N/A");
+        assert_eq!(fmt_ppl(f64::NAN), "N/A");
+    }
+
+    #[test]
+    fn bar_does_not_panic_on_edges() {
+        print_bar("x", 0.0, 1.0, 20);
+        print_bar("y", 1.0, 1.0, 20);
+        print_bar("z", 0.5, 0.0, 20);
+    }
+}

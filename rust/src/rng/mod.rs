@@ -1,0 +1,321 @@
+//! Deterministic pseudo-random number generation and sampling.
+//!
+//! The offline vendor set does not include the `rand` crate, so this module
+//! provides the generators and distributions the rest of the stack needs:
+//! a SplitMix64 seeder, a xoshiro256** core generator, and samplers for
+//! uniform/normal/Student-t/Zipf distributions. Everything is fully
+//! deterministic given a seed — experiment tables are reproducible
+//! bit-for-bit across runs.
+
+mod zipf;
+
+pub use zipf::Zipf;
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+/// Reference: Steele, Lea, Flood — "Fast splittable pseudorandom number
+/// generators" (OOPSLA 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 — the workhorse generator (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s }
+    }
+
+    /// Derive an independent child stream (for per-layer / per-request
+    /// determinism regardless of call order).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1). 53-bit mantissa resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second variate omitted for
+    /// simplicity; statistics code is not on the hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with the given mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Student-t with `nu` degrees of freedom — heavy-tailed weight noise
+    /// used by the synthetic-LLM-statistics generator (LLM weights are
+    /// well-modelled by t-distributions with nu≈4–6; see e.g. BiLLM).
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        // t = Z / sqrt(ChiSq(nu)/nu); ChiSq via sum of squared normals for
+        // integral nu, via Gamma(nu/2, 2) Marsaglia-Tsang otherwise.
+        let z = self.normal();
+        let chi2 = self.gamma(nu / 2.0, 2.0);
+        z / (chi2 / nu).sqrt()
+    }
+
+    /// Gamma(shape k, scale theta), Marsaglia–Tsang squeeze method.
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        if k < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) * U^{1/k}
+            let g = self.gamma(k + 1.0, theta);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * theta;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below_usize(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below_usize(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn student_t_heavier_tails_than_normal() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let thresh = 4.0;
+        let t_tail = (0..n).filter(|_| r.student_t(4.0).abs() > thresh).count();
+        let z_tail = (0..n).filter(|_| r.normal().abs() > thresh).count();
+        assert!(t_tail > z_tail * 3, "t_tail={t_tail} z_tail={z_tail}");
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::new(17);
+        let n = 30_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += r.gamma(3.0, 2.0);
+        }
+        let mean = sum / n as f64; // expect k*theta = 6
+        assert!((mean - 6.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(19);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(23);
+        let idx = r.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(31);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,93 @@
+//! Zipf-distributed sampling for the synthetic-corpus vocabulary.
+//!
+//! Natural-language token frequencies follow a Zipf law; sampling the
+//! synthetic corpus vocabulary from Zipf(s) reproduces the rank-frequency
+//! skew that makes calibration activations (and hence the Hessian
+//! `H = XXᵀ`) realistically ill-conditioned — the regime where the
+//! paper's variable grid matters.
+
+use super::Rng;
+
+/// Zipf distribution over ranks `0..n` with exponent `s`, sampled by
+/// inverse-CDF over a precomputed cumulative table (n is small — vocab
+/// sized — so O(log n) binary search per sample is fine).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the most frequent.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_zero_most_frequent() {
+        let z = Zipf::new(100, 1.1);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+    }
+
+    #[test]
+    fn frequency_ratio_tracks_exponent() {
+        let z = Zipf::new(50, 1.0);
+        let mut rng = Rng::new(6);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // P(rank 0)/P(rank 9) should be ~10 for s=1.
+        let ratio = counts[0] as f64 / counts[9] as f64;
+        assert!((ratio - 10.0).abs() < 2.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn all_ranks_in_range() {
+        let z = Zipf::new(7, 1.3);
+        let mut rng = Rng::new(8);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 7);
+        }
+    }
+}

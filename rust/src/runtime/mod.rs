@@ -1,0 +1,136 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 / PJRT C API):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Executables are compiled once and
+//! cached by artifact path; python never runs at serving time.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its source path.
+pub struct LoadedExecutable {
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExecutable {
+    /// Execute with pre-built literals; returns the decomposed output
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("pjrt execute")?;
+        let out = result[0][0].to_literal_sync().context("fetch result")?;
+        out.to_tuple().context("decompose output tuple")
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, LoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<&LoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            self.cache
+                .insert(path.to_path_buf(), LoadedExecutable { path: path.to_path_buf(), exe });
+        }
+        Ok(&self.cache[path])
+    }
+
+    pub fn is_loaded(&self, path: &Path) -> bool {
+        self.cache.contains_key(path)
+    }
+}
+
+/// f32 slice → literal with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// u8 slice → literal with the given dims (u8 is not a `NativeType` in
+/// the crate; go through the untyped-data constructor).
+pub fn literal_u8(data: &[u8], dims: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        dims,
+        data,
+    )?)
+}
+
+/// i32 scalar literal.
+pub fn literal_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// literal → Vec<f32>.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require the PJRT shared library; they are cheap and
+    // hermetic (no artifacts needed — we synthesize HLO text inline).
+    const ADD_HLO: &str = r#"
+HloModule add1, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  p0 = f32[4]{0} parameter(0)
+  one = f32[] constant(1)
+  ones = f32[4]{0} broadcast(one), dimensions={}
+  sum = f32[4]{0} add(p0, ones)
+  ROOT out = (f32[4]{0}) tuple(sum)
+}
+"#;
+
+    #[test]
+    fn runtime_compiles_and_runs_inline_hlo() {
+        let dir = std::env::temp_dir().join("bpdq_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add1.hlo.txt");
+        std::fs::write(&path, ADD_HLO).unwrap();
+
+        let mut rt = Runtime::cpu().unwrap();
+        assert!(!rt.is_loaded(&path));
+        let out = {
+            let exe = rt.load(&path).unwrap();
+            let x = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+            exe.run(&[x]).unwrap()
+        };
+        assert!(rt.is_loaded(&path));
+        let y = to_f32_vec(&out[0]).unwrap();
+        assert_eq!(y, vec![2.0, 3.0, 4.0, 5.0]);
+
+        // cached second load returns the same executable
+        let _again = rt.load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,177 @@
+//! Dynamic batcher: collect requests into batches bounded by size and a
+//! wait window (the standard latency/throughput dial of serving papers).
+
+use super::{Request, Response};
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued request plus its response channel.
+pub struct Pending {
+    pub request: Request,
+    pub reply: Sender<Response>,
+    pub enqueued: Instant,
+}
+
+struct QueueInner {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// MPMC-ish bounded wait queue feeding one worker.
+#[derive(Clone)]
+pub struct BatchQueue {
+    inner: Arc<(Mutex<QueueInner>, Condvar)>,
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+impl BatchQueue {
+    pub fn new(max_batch: usize, window: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self {
+            inner: Arc::new((
+                Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+                Condvar::new(),
+            )),
+            max_batch,
+            window,
+        }
+    }
+
+    pub fn push(&self, p: Pending) {
+        let (m, cv) = &*self.inner;
+        let mut q = m.lock().unwrap();
+        q.items.push_back(p);
+        cv.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    /// Block until at least one request is available (or closed), then
+    /// collect up to `max_batch` requests arriving within `window`.
+    /// Returns None when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+        let (m, cv) = &*self.inner;
+        let mut q = m.lock().unwrap();
+        loop {
+            if !q.items.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+            q = cv.wait(q).unwrap();
+        }
+        // First request in hand: wait up to `window` for more.
+        let deadline = Instant::now() + self.window;
+        while q.items.len() < self.max_batch && !q.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (qq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
+            q = qq;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = q.items.len().min(self.max_batch);
+        Some(q.items.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::thread;
+
+    fn pending(id: u64) -> (Pending, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Pending {
+                request: Request { id, prompt: vec![1], max_new: 1 },
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_respect_max_size() {
+        let q = BatchQueue::new(2, Duration::from_millis(1));
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (p, rx) = pending(i);
+            q.push(p);
+            rxs.push(rx);
+        }
+        let b1 = q.next_batch().unwrap();
+        let b2 = q.next_batch().unwrap();
+        let b3 = q.next_batch().unwrap();
+        assert_eq!(b1.len(), 2);
+        assert_eq!(b2.len(), 2);
+        assert_eq!(b3.len(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn window_collects_late_arrivals() {
+        let q = BatchQueue::new(8, Duration::from_millis(200));
+        let (p, _rx) = pending(0);
+        q.push(p);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(30));
+            let (p, rx) = pending(1);
+            q2.push(p);
+            rx
+        });
+        let batch = q.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2, "late arrival inside window should join");
+    }
+
+    #[test]
+    fn close_unblocks() {
+        let q = BatchQueue::new(4, Duration::from_millis(5));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.next_batch());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let q = BatchQueue::new(3, Duration::from_millis(1));
+        let n = 20;
+        for i in 0..n {
+            let (p, _rx) = pending(i);
+            q.push(p);
+        }
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            for p in q.next_batch().unwrap() {
+                seen.push(p.request.id);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,526 @@
+//! Decode engines: native fp32, LUT bit-plane, and PJRT (AOT artifact).
+//!
+//! All three implement the same continuous-batching `generate_batch`
+//! contract so the router/batcher are engine-agnostic. Sessions within a
+//! batch are stepped round-robin (one token each per sweep), which is the
+//! scheduling shape of vLLM-style decode batching reduced to one thread.
+
+use super::{Request, Response};
+use crate::model::{argmax, rmsnorm, silu, softmax, DecodeState, Model, Rope};
+use crate::quant::packing::BitPlanePacked;
+use crate::runtime::{self, Runtime};
+use crate::tensor::{dot, matvec, Matrix};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A model whose block linears are *packed bit-planes* — the paper's
+/// deployment format. Non-linear parts (norms, embeddings, lm_head) stay
+/// dense.
+#[derive(Clone)]
+pub struct LutModel {
+    pub base: Arc<Model>,
+    /// "l{layer}.{name}" → packed record for all 7 block linears.
+    pub packed: Arc<HashMap<String, BitPlanePacked>>,
+}
+
+impl LutModel {
+    pub fn new(base: Arc<Model>, packed: HashMap<String, BitPlanePacked>) -> Result<Self> {
+        for l in 0..base.cfg.n_layers {
+            for name in crate::model::BLOCK_LINEARS {
+                anyhow::ensure!(
+                    packed.contains_key(&format!("l{l}.{name}")),
+                    "missing packed record l{l}.{name}"
+                );
+            }
+        }
+        Ok(Self { base, packed: Arc::new(packed) })
+    }
+
+}
+
+/// Which decode path a worker runs.
+#[derive(Clone)]
+pub enum EngineKind {
+    /// dense f32 matvecs over (dequantized or fp) weights
+    Native(Arc<Model>),
+    /// LUT-GEMV over packed bit-planes
+    Lut(LutModel),
+    /// PJRT execution of the AOT `decode_step.hlo.txt`
+    Pjrt { model: Arc<Model>, artifact: PathBuf, cache_len: usize },
+}
+
+/// A decode engine (one per worker thread).
+pub struct Engine {
+    kind: EngineKind,
+    runtime: Option<Runtime>,
+}
+
+impl Engine {
+    pub fn new(kind: EngineKind) -> Result<Self> {
+        let runtime = match &kind {
+            EngineKind::Pjrt { .. } => Some(Runtime::cpu()?),
+            _ => None,
+        };
+        Ok(Self { kind, runtime })
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            EngineKind::Native(_) => "native",
+            EngineKind::Lut(_) => "lut",
+            EngineKind::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Decode a batch of requests with round-robin continuous batching.
+    pub fn generate_batch(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        match &self.kind {
+            EngineKind::Native(model) => {
+                let model = model.clone();
+                self.generate_generic(reqs, |_| NativeSession::new(&model))
+            }
+            EngineKind::Lut(lm) => {
+                let lm = lm.clone();
+                self.generate_generic(reqs, |_| LutSession::new(&lm))
+            }
+            EngineKind::Pjrt { model, artifact, cache_len } => {
+                let (model, artifact, cache_len) = (model.clone(), artifact.clone(), *cache_len);
+                let rt = self.runtime.as_mut().context("pjrt runtime")?;
+                pjrt_generate(rt, &model, &artifact, cache_len, reqs)
+            }
+        }
+    }
+
+    fn generate_generic<S: Session>(
+        &self,
+        reqs: &[Request],
+        mut make: impl FnMut(&Request) -> S,
+    ) -> Result<Vec<Response>> {
+        struct Active<S> {
+            idx: usize,
+            sess: S,
+            prompt_left: std::vec::IntoIter<u32>,
+            next_token: Option<u32>,
+            out: Vec<u32>,
+            started: Instant,
+            first_tok: Option<Instant>,
+        }
+        let mut active: Vec<Active<S>> = reqs
+            .iter()
+            .enumerate()
+            .map(|(idx, r)| Active {
+                idx,
+                sess: make(r),
+                prompt_left: r.prompt.clone().into_iter(),
+                next_token: None,
+                out: Vec::new(),
+                started: Instant::now(),
+                first_tok: None,
+            })
+            .collect();
+        let mut done: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
+
+        // Round-robin sweeps: each active session advances one token per
+        // sweep (prompt prefill counts as steps too — single-token
+        // engine).
+        while !active.is_empty() {
+            let mut still = Vec::with_capacity(active.len());
+            for mut a in active {
+                let capacity_left = a.sess.capacity() - a.sess.pos();
+                let tok = a.next_token.take().or_else(|| a.prompt_left.next());
+                let logits = match tok {
+                    Some(t) if capacity_left > 0 => a.sess.step(t),
+                    _ => {
+                        // out of prompt+generation or capacity: finalize
+                        finalize(&mut done, &a, reqs);
+                        continue;
+                    }
+                };
+                if a.prompt_left.len() == 0 {
+                    // generating
+                    if a.first_tok.is_none() {
+                        a.first_tok = Some(Instant::now());
+                    }
+                    if a.out.len() < reqs[a.idx].max_new {
+                        let next = argmax(&logits) as u32;
+                        a.out.push(next);
+                        a.next_token = Some(next);
+                        still.push(a);
+                    } else {
+                        finalize(&mut done, &a, reqs);
+                    }
+                } else {
+                    still.push(a);
+                }
+            }
+            active = still;
+        }
+
+        fn finalize<S>(
+            done: &mut [Option<Response>],
+            a: &Active<S>,
+            reqs: &[Request],
+        ) {
+            let total = a.started.elapsed().as_micros() as u64;
+            let first = a
+                .first_tok
+                .map(|t| (t - a.started).as_micros() as u64)
+                .unwrap_or(total);
+            done[a.idx] = Some(Response {
+                id: reqs[a.idx].id,
+                tokens: {
+                    // drop the trailing speculative token (pushed but not
+                    // requested) if any — out is exactly what was sampled
+                    a.out.clone()
+                },
+                first_token_us: first,
+                total_us: total,
+            });
+        }
+
+        Ok(done.into_iter().map(|d| d.expect("all finalized")).collect())
+    }
+}
+
+/// One in-flight decode session.
+trait Session {
+    fn step(&mut self, token: u32) -> Vec<f32>;
+    fn pos(&self) -> usize;
+    fn capacity(&self) -> usize;
+}
+
+struct NativeSession<'m> {
+    model: &'m Model,
+    state: DecodeState,
+}
+
+impl<'m> NativeSession<'m> {
+    fn new(model: &'m Model) -> Self {
+        Self { model, state: model.decode_state() }
+    }
+}
+
+impl Session for NativeSession<'_> {
+    fn step(&mut self, token: u32) -> Vec<f32> {
+        self.state.step(self.model, token)
+    }
+    fn pos(&self) -> usize {
+        self.state.pos()
+    }
+    fn capacity(&self) -> usize {
+        self.state.capacity()
+    }
+}
+
+/// LUT decode session: same math as `DecodeState::step` with every block
+/// linear replaced by a packed LUT-GEMV.
+struct LutSession<'m> {
+    lm: &'m LutModel,
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+    pos: usize,
+    rope: Rope,
+    cap: usize,
+    scratch: crate::lut::LutScratch,
+    // reusable step buffers (decode loop is allocation-free)
+    q: Vec<f32>,
+    kx: Vec<f32>,
+    vx: Vec<f32>,
+    proj: Vec<f32>,
+    up: Vec<f32>,
+    gate: Vec<f32>,
+    mid: Vec<f32>,
+    down: Vec<f32>,
+    attn: Vec<f32>,
+    scores: Vec<f32>,
+    normed: Vec<f32>,
+}
+
+impl<'m> LutSession<'m> {
+    fn new(lm: &'m LutModel) -> Self {
+        let cfg = &lm.base.cfg;
+        let cap = cfg.max_seq * 4;
+        Self {
+            lm,
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(cap, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(cap, cfg.d_model)).collect(),
+            pos: 0,
+            rope: Rope::new(cap, cfg.head_dim()),
+            cap,
+            scratch: crate::lut::LutScratch::default(),
+            q: Vec::new(),
+            kx: Vec::new(),
+            vx: Vec::new(),
+            proj: Vec::new(),
+            up: Vec::new(),
+            gate: Vec::new(),
+            mid: Vec::new(),
+            down: Vec::new(),
+            attn: Vec::new(),
+            scores: Vec::new(),
+            normed: Vec::new(),
+        }
+    }
+
+}
+
+impl Session for LutSession<'_> {
+    fn step(&mut self, token: u32) -> Vec<f32> {
+        // Destructure so each buffer gets its own disjoint &mut borrow
+        // next to the shared `lm` borrow (allocation-free decode loop).
+        let LutSession {
+            lm,
+            k,
+            v,
+            pos,
+            rope,
+            cap,
+            scratch,
+            q,
+            kx,
+            vx,
+            proj,
+            up,
+            gate,
+            mid,
+            down,
+            attn,
+            scores,
+            normed,
+        } = self;
+        let model = &lm.base;
+        let cfg = &model.cfg;
+        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t = *pos;
+        assert!(t < *cap, "KV cache exhausted");
+        let lin = |l: usize, name: &str, x: &[f32], out: &mut Vec<f32>, scratch: &mut crate::lut::LutScratch| {
+            let rec = &lm.packed[&format!("l{l}.{name}")];
+            out.resize(rec.d_out, 0.0);
+            crate::lut::lut_gemv(rec, x, out, scratch);
+        };
+
+        let id = (token as usize).min(cfg.vocab_size - 1);
+        let mut h: Vec<f32> = model.embed.row(id).to_vec();
+        normed.resize(d, 0.0);
+        attn.resize(d, 0.0);
+        scores.resize(t + 1, 0.0);
+
+        for l in 0..cfg.n_layers {
+            let lw = &model.layers[l];
+            rmsnorm(&h, &lw.norm1, normed);
+            lin(l, "wq", normed, q, scratch);
+            lin(l, "wk", normed, kx, scratch);
+            lin(l, "wv", normed, vx, scratch);
+            for hh in 0..nh {
+                rope.apply(&mut q[hh * hd..(hh + 1) * hd], t);
+                rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
+            }
+            k[l].row_mut(t).copy_from_slice(kx);
+            v[l].row_mut(t).copy_from_slice(vx);
+
+            attn.iter_mut().for_each(|a| *a = 0.0);
+            for hh in 0..nh {
+                let o0 = hh * hd;
+                for u in 0..=t {
+                    scores[u] = dot(&q[o0..o0 + hd], &k[l].row(u)[o0..o0 + hd]) * scale;
+                }
+                softmax(&mut scores[..=t]);
+                for u in 0..=t {
+                    let w = scores[u];
+                    if w < 1e-9 {
+                        continue;
+                    }
+                    let vrow = &v[l].row(u)[o0..o0 + hd];
+                    for i in 0..hd {
+                        attn[o0 + i] += w * vrow[i];
+                    }
+                }
+            }
+            lin(l, "wo", attn, proj, scratch);
+            for (hi, p) in h.iter_mut().zip(proj.iter()) {
+                *hi += p;
+            }
+
+            rmsnorm(&h, &lw.norm2, normed);
+            lin(l, "w1", normed, up, scratch);
+            lin(l, "w3", normed, gate, scratch);
+            mid.resize(up.len(), 0.0);
+            for ((m, &u), &g) in mid.iter_mut().zip(up.iter()).zip(gate.iter()) {
+                *m = u * silu(g);
+            }
+            lin(l, "w2", mid, down, scratch);
+            for (hi, dn) in h.iter_mut().zip(down.iter()) {
+                *hi += dn;
+            }
+        }
+        *pos += 1;
+        let h_copy = h.clone();
+        rmsnorm(&h_copy, &model.norm_f, &mut h);
+        matvec(&model.lm_head, &h)
+    }
+
+    fn pos(&self) -> usize {
+        self.pos
+    }
+    fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// PJRT path: run requests sequentially through the AOT decode-step
+/// executable, threading the KV cache literals.
+fn pjrt_generate(
+    rt: &mut Runtime,
+    model: &Model,
+    artifact: &std::path::Path,
+    cache_len: usize,
+    reqs: &[Request],
+) -> Result<Vec<Response>> {
+    let nl = model.cfg.n_layers;
+    let d = model.cfg.d_model;
+    let cache_elems = nl * cache_len * d;
+    let mut out = Vec::with_capacity(reqs.len());
+
+    for r in reqs {
+        let started = Instant::now();
+        let mut first_tok = None;
+        let exe = rt.load(artifact)?;
+        let zeros = vec![0.0f32; cache_elems];
+        let mut klit = runtime::literal_f32(&zeros, &[nl as i64, cache_len as i64, d as i64])?;
+        let mut vlit = runtime::literal_f32(&zeros, &[nl as i64, cache_len as i64, d as i64])?;
+        let mut logits: Vec<f32> = Vec::new();
+        let mut pos = 0usize;
+        let budget = cache_len.saturating_sub(2);
+        for &t in r.prompt.iter().take(budget) {
+            let res = exe.run(&[
+                runtime::literal_i32(t as i32),
+                runtime::literal_i32(pos as i32),
+                klit,
+                vlit,
+            ])?;
+            let mut it = res.into_iter();
+            logits = runtime::to_f32_vec(&it.next().context("logits")?)?;
+            klit = it.next().context("kcache")?;
+            vlit = it.next().context("vcache")?;
+            pos += 1;
+        }
+        let mut tokens = Vec::with_capacity(r.max_new);
+        for _ in 0..r.max_new {
+            if pos >= cache_len {
+                break;
+            }
+            let next = argmax(&logits) as u32;
+            if first_tok.is_none() {
+                first_tok = Some(started.elapsed().as_micros() as u64);
+            }
+            tokens.push(next);
+            let res = exe.run(&[
+                runtime::literal_i32(next as i32),
+                runtime::literal_i32(pos as i32),
+                klit,
+                vlit,
+            ])?;
+            let mut it = res.into_iter();
+            logits = runtime::to_f32_vec(&it.next().context("logits")?)?;
+            klit = it.next().context("kcache")?;
+            vlit = it.next().context("vcache")?;
+            pos += 1;
+        }
+        let total = started.elapsed().as_micros() as u64;
+        out.push(Response {
+            id: r.id,
+            tokens,
+            first_token_us: first_tok.unwrap_or(total),
+            total_us: total,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{synthetic_model, ModelConfig};
+    use crate::quant::{BpdqConfig, QuantMethod};
+
+    fn tiny() -> Arc<Model> {
+        Arc::new(synthetic_model(
+            &ModelConfig { vocab_size: 20, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 32 },
+            3,
+        ))
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: (0..5).map(|t| ((t + i) % 20) as u32).collect(),
+                max_new: 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_engine_batch() {
+        let mut e = Engine::new(EngineKind::Native(tiny())).unwrap();
+        let rs = e.generate_batch(&reqs(3)).unwrap();
+        assert_eq!(rs.len(), 3);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 4);
+            assert!(r.first_token_us <= r.total_us);
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        // Continuous batching must not change results.
+        let model = tiny();
+        let mut e = Engine::new(EngineKind::Native(model.clone())).unwrap();
+        let batch = e.generate_batch(&reqs(3)).unwrap();
+        for (i, r) in reqs(3).iter().enumerate() {
+            let single = e.generate_batch(std::slice::from_ref(r)).unwrap();
+            assert_eq!(single[0].tokens, batch[i].tokens, "request {i}");
+        }
+    }
+
+    #[test]
+    fn lut_engine_matches_native_on_quantized_model() {
+        // Quantize with BPDQ, then: native decode over dequantized weights
+        // must equal LUT decode over the packed records.
+        let model = tiny();
+        let calib: Vec<Vec<u32>> =
+            (0..4).map(|i| (0..20).map(|t| ((t * 3 + i) % 20) as u32).collect()).collect();
+        let method = QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 2, gar: false, ..Default::default() });
+        let qm = crate::model::pipeline::quantize_model(&model, &calib, &method).unwrap();
+
+        let packed: HashMap<String, BitPlanePacked> = qm
+            .packed
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+            .collect();
+        let qmodel = Arc::new(qm.model.clone());
+        let mut native = Engine::new(EngineKind::Native(qmodel.clone())).unwrap();
+        let mut lut =
+            Engine::new(EngineKind::Lut(LutModel::new(qmodel, packed).unwrap())).unwrap();
+
+        let rs_native = native.generate_batch(&reqs(2)).unwrap();
+        let rs_lut = lut.generate_batch(&reqs(2)).unwrap();
+        for (a, b) in rs_native.iter().zip(&rs_lut) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn empty_prompt_generates_nothing_strange() {
+        let mut e = Engine::new(EngineKind::Native(tiny())).unwrap();
+        let r = Request { id: 9, prompt: vec![], max_new: 3 };
+        let rs = e.generate_batch(&[r]).unwrap();
+        // no prompt → no logits to sample from → zero tokens is acceptable
+        assert!(rs[0].tokens.len() <= 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! KV-cache slab — pooled decode states.
+//!
+//! Each decode session needs `n_layers × cache_len × d_model × 2` floats
+//! of KV storage; allocating that per request is the dominant allocator
+//! pressure in the decode loop. The slab keeps a free list of reset
+//! states and hands them out in LIFO order (warmest cache lines first).
+
+use crate::model::{DecodeState, Model};
+use std::sync::{Arc, Mutex};
+
+struct SlabInner {
+    free: Vec<DecodeState>,
+    created: usize,
+    reused: usize,
+}
+
+/// Thread-safe pool of [`DecodeState`]s for one model.
+#[derive(Clone)]
+pub struct KvSlab {
+    model: Arc<Model>,
+    inner: Arc<Mutex<SlabInner>>,
+    max_pooled: usize,
+}
+
+impl KvSlab {
+    pub fn new(model: Arc<Model>, max_pooled: usize) -> Self {
+        Self {
+            model,
+            inner: Arc::new(Mutex::new(SlabInner { free: Vec::new(), created: 0, reused: 0 })),
+            max_pooled,
+        }
+    }
+
+    /// Acquire a reset decode state (reused if available).
+    pub fn acquire(&self) -> DecodeState {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.free.pop() {
+            Some(mut st) => {
+                inner.reused += 1;
+                st.reset();
+                st
+            }
+            None => {
+                inner.created += 1;
+                drop(inner);
+                self.model.decode_state()
+            }
+        }
+    }
+
+    /// Return a state to the pool (dropped if the pool is full).
+    pub fn release(&self, st: DecodeState) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.free.len() < self.max_pooled {
+            inner.free.push(st);
+        }
+    }
+
+    /// (created, reused, pooled-now)
+    pub fn stats(&self) -> (usize, usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.created, inner.reused, inner.free.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{synthetic_model, ModelConfig};
+
+    fn model() -> Arc<Model> {
+        Arc::new(synthetic_model(
+            &ModelConfig { vocab_size: 12, d_model: 8, n_layers: 1, n_heads: 1, d_ff: 12, max_seq: 16 },
+            1,
+        ))
+    }
+
+    #[test]
+    fn acquire_release_reuses() {
+        let slab = KvSlab::new(model(), 4);
+        let a = slab.acquire();
+        slab.release(a);
+        let _b = slab.acquire();
+        let (created, reused, _) = slab.stats();
+        assert_eq!(created, 1);
+        assert_eq!(reused, 1);
+    }
+
+    #[test]
+    fn released_state_is_reset() {
+        let m = model();
+        let slab = KvSlab::new(m.clone(), 4);
+        let mut a = slab.acquire();
+        a.step(&m, 3);
+        a.step(&m, 5);
+        assert_eq!(a.pos(), 2);
+        slab.release(a);
+        let b = slab.acquire();
+        assert_eq!(b.pos(), 0);
+    }
+
+    #[test]
+    fn pool_bounded() {
+        let slab = KvSlab::new(model(), 2);
+        let states: Vec<_> = (0..5).map(|_| slab.acquire()).collect();
+        for s in states {
+            slab.release(s);
+        }
+        let (_, _, pooled) = slab.stats();
+        assert_eq!(pooled, 2);
+    }
+
+    #[test]
+    fn reset_state_decodes_identically() {
+        let m = model();
+        let slab = KvSlab::new(m.clone(), 2);
+        let mut a = slab.acquire();
+        let fresh: Vec<f32> = a.step(&m, 7);
+        a.step(&m, 3);
+        slab.release(a);
+        let mut b = slab.acquire(); // the same buffer, reset
+        let again = b.step(&m, 7);
+        for (x, y) in fresh.iter().zip(&again) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

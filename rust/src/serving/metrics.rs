@@ -1,0 +1,125 @@
+//! Serving metrics: queueing delay, time-to-first-token, per-token
+//! decode latency, throughput — the quantities behind Table 3's latency
+//! column and the serving example's report.
+
+use super::Response;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Default)]
+struct Inner {
+    queue_us: Vec<u64>,
+    first_token_us: Vec<u64>,
+    total_us: Vec<u64>,
+    tokens: usize,
+    batch_sizes: Vec<usize>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+#[derive(Clone)]
+pub struct Metrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    pub completed: usize,
+    pub tokens: usize,
+    pub p50_first_us: u64,
+    pub p95_first_us: u64,
+    pub p50_queue_us: u64,
+    pub mean_batch: f64,
+    pub us_per_token: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { inner: Arc::new(Mutex::new(Inner::default())) }
+    }
+
+    pub fn record(&self, r: &Response, queue_us: u64, batch_size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let now = Instant::now();
+        m.started.get_or_insert(now);
+        m.finished = Some(now);
+        m.queue_us.push(queue_us);
+        m.first_token_us.push(r.first_token_us);
+        m.total_us.push(r.total_us);
+        m.tokens += r.tokens.len();
+        m.batch_sizes.push(batch_size);
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let m = self.inner.lock().unwrap();
+        let pct = |xs: &[u64], p: f64| -> u64 {
+            if xs.is_empty() {
+                return 0;
+            }
+            let mut s = xs.to_vec();
+            s.sort_unstable();
+            s[((s.len() as f64 * p) as usize).min(s.len() - 1)]
+        };
+        let total_decode_us: u64 = m.total_us.iter().sum();
+        let wall = match (m.started, m.finished) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        LatencySummary {
+            completed: m.total_us.len(),
+            tokens: m.tokens,
+            p50_first_us: pct(&m.first_token_us, 0.5),
+            p95_first_us: pct(&m.first_token_us, 0.95),
+            p50_queue_us: pct(&m.queue_us, 0.5),
+            mean_batch: if m.batch_sizes.is_empty() {
+                0.0
+            } else {
+                m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+            },
+            us_per_token: if m.tokens == 0 {
+                0.0
+            } else {
+                total_decode_us as f64 / m.tokens as f64
+            },
+            tokens_per_sec: if wall > 0.0 { m.tokens as f64 / wall } else { f64::INFINITY },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(tokens: usize, first: u64, total: u64) -> Response {
+        Response { id: 0, tokens: vec![1; tokens], first_token_us: first, total_us: total }
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(&resp(2, i * 10, i * 20), i, 4);
+        }
+        let s = m.summary();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.tokens, 200);
+        assert!(s.p50_first_us >= 490 && s.p50_first_us <= 520, "{}", s.p50_first_us);
+        assert!(s.p95_first_us >= 940, "{}", s.p95_first_us);
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        assert!(s.us_per_token > 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes() {
+        let s = Metrics::new().summary();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p50_first_us, 0);
+    }
+}

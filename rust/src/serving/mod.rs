@@ -1,0 +1,49 @@
+//! Serving stack — the L3 coordination layer.
+//!
+//! tokio is not in the offline vendor set, so the stack is built on
+//! `std::thread` + channels, which also keeps it deterministic under
+//! test:
+//!
+//! ```text
+//! client ── submit ──► Router (round-robin / least-loaded)
+//!                         │ per-worker bounded queues
+//!                  ┌──────┴──────┐
+//!              Worker 0 …    Worker N-1      (one Engine each)
+//!                  │   Batcher: collect ≤ max_batch within window
+//!                  ▼
+//!              Engine::generate_batch — continuous-batching decode
+//!              (native fp32 / LUT bit-plane / PJRT AOT artifact)
+//! ```
+//!
+//! The LUT engine is the paper's serving contribution: per-token decode
+//! over *packed bit-planes* (no dequantized weight materialization), so
+//! the memory-bound GEMV reads `k/16`-th of the fp16 bytes (Table 3).
+
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod router;
+
+pub use engine::{Engine, EngineKind, LutModel};
+pub use metrics::{LatencySummary, Metrics};
+pub use router::{Router, RouterConfig, Strategy};
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// time from dequeue to first generated token
+    pub first_token_us: u64,
+    /// total decode time
+    pub total_us: u64,
+}

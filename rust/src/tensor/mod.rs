@@ -1,0 +1,332 @@
+//! Dense row-major matrices and the blocked matmul micro-kernels.
+//!
+//! The offline vendor set has no BLAS / ndarray, so this module is the
+//! numeric substrate for the whole stack: the transformer forward, the
+//! Hessian accumulation, and every quantizer operate on [`Mat`].
+//!
+//! Layout is row-major; the generic [`Mat<T>`] covers f32 (models) and
+//! f64 (conditioning-sensitive linear algebra). The f32 matmul uses
+//! register-tiled kernels over the K dimension (see [`matmul`]).
+
+mod ops;
+
+pub use ops::{dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa};
+
+use std::fmt;
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+pub type Matrix = Mat<f32>;
+pub type MatrixF64 = Mat<f64>;
+
+impl<T: Copy + Default> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn full(rows: usize, cols: usize, v: T) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy of the column block `[c0, c1)`.
+    pub fn col_block(&self, c0: usize, c1: usize) -> Self {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = Self::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Overwrite the column block `[c0, c0+src.cols)` with `src`.
+    pub fn set_col_block(&mut self, c0: usize, src: &Self) {
+        assert_eq!(src.rows, self.rows);
+        assert!(c0 + src.cols <= self.cols);
+        for r in 0..self.rows {
+            let dst = &mut self.data[r * self.cols + c0..r * self.cols + c0 + src.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+    }
+
+    /// Copy column `c` into a vector.
+    pub fn col(&self, c: usize) -> Vec<T> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Map every element.
+    pub fn map<F: Fn(T) -> T>(&self, f: F) -> Self {
+        Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Reorder columns: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Self {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Self::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    /// Reorder rows: `out[i, :] = self[perm[i], :]`.
+    pub fn permute_rows(&self, perm: &[usize]) -> Self {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Self::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(p));
+        }
+        out
+    }
+}
+
+impl Matrix {
+    /// Frobenius norm (f32 matrix, f64 accumulation).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// `‖self − other‖_F`.
+    pub fn fro_dist(&self, other: &Self) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Self) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Widen to f64.
+    pub fn to_f64(&self) -> MatrixF64 {
+        MatrixF64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+impl MatrixF64 {
+    /// Narrow to f32.
+    pub fn to_f32(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+impl<T: fmt::Debug + Copy + Default> fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat[{}x{}]", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for r in 0..show_r {
+            write!(f, "  ")?;
+            for c in 0..show_c {
+                write!(f, "{:?} ", self.get(r, c))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let mut m = Matrix::zeros(3, 4);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_blocked_large() {
+        let n = 70;
+        let mut m = Matrix::zeros(n, n + 13);
+        for r in 0..n {
+            for c in 0..n + 13 {
+                m.set(r, c, (r * 1000 + c) as f32);
+            }
+        }
+        let t = m.transpose();
+        for r in 0..n {
+            for c in 0..n + 13 {
+                assert_eq!(t.get(c, r), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn col_block_roundtrip() {
+        let m = Matrix::from_vec(2, 4, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let b = m.col_block(1, 3);
+        assert_eq!(b.row(0), &[2., 3.]);
+        assert_eq!(b.row(1), &[6., 7.]);
+        let mut m2 = Matrix::zeros(2, 4);
+        m2.set_col_block(1, &b);
+        assert_eq!(m2.get(0, 1), 2.0);
+        assert_eq!(m2.get(1, 2), 7.0);
+        assert_eq!(m2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn permute_cols_inverse() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let perm = vec![2, 0, 1];
+        let p = m.permute_cols(&perm);
+        assert_eq!(p.row(0), &[3., 1., 2.]);
+        // invert
+        let mut inv = vec![0usize; 3];
+        for (j, &pj) in perm.iter().enumerate() {
+            inv[pj] = j;
+        }
+        assert_eq!(p.permute_cols(&inv), m);
+    }
+
+    #[test]
+    fn fro_norms() {
+        let m = Matrix::from_vec(1, 2, vec![3., 4.]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-9);
+        let z = Matrix::zeros(1, 2);
+        assert!((m.fro_dist(&z) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Matrix::from_vec(1, 3, vec![1., 1., 1.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.row(0), &[3., 4., 5.]);
+        a.scale(0.5);
+        assert_eq!(a.row(0), &[1.5, 2., 2.5]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Matmul / matvec kernels.
+//!
+//! All kernels are written so the inner loop is a contiguous
+//! multiply-accumulate over the K dimension that LLVM auto-vectorizes.
+//! `matmul` packs nothing (matrices here are at most a few thousand wide);
+//! instead it uses an i-k-j loop order with a 4-row unroll, which is the
+//! standard cache-friendly order for row-major data.
+
+use super::{Mat, Matrix};
+
+/// `C = A @ B` (A: m×k, B: k×n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul shape mismatch: {:?} @ {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let (m, _k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    // i-k-j order: C[i, :] += A[i, kk] * B[kk, :] — unit-stride over both
+    // C and B rows, auto-vectorizes well.
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A @ Bᵀ` (A: m×k, B: n×k). This is the natural layout for linear
+/// layers stored as (d_out × d_in): `y = x @ Wᵀ`.
+pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols(),
+        b.cols(),
+        "matmul_transb shape mismatch: {:?} @ {:?}ᵀ",
+        a.shape(),
+        b.shape()
+    );
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        // 2-wide j unroll: two independent dot products share the A row
+        // stream.
+        let mut j = 0;
+        while j + 2 <= n {
+            let (b0, b1) = (b.row(j), b.row(j + 1));
+            let (mut s0, mut s1) = (0.0f32, 0.0f32);
+            for kk in 0..k {
+                let av = arow[kk];
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            j += 2;
+        }
+        if j < n {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// `y = A @ x` (A: m×k, x: k).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// `y = Aᵀ @ x` (A: m×k, x: m, y: k).
+pub fn matvec_transa(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0f32; a.cols()];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        for (yj, &aij) in y.iter_mut().zip(a.row(i)) {
+            *yj += xi * aij;
+        }
+    }
+    y
+}
+
+/// Contiguous dot product — the single hottest scalar loop in the stack.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4 independent accumulators break the FP dependency chain so LLVM
+    // vectorizes + pipelines.
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// f64 matmul for conditioning-sensitive paths (Hessian ops).
+pub fn matmul_f64(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Mat::<f64>::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for kk in 0..k {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a.get(i, kk) as f64 * b.get(kk, j) as f64;
+                }
+                c.set(i, j, s as f32);
+            }
+        }
+        c
+    }
+
+    fn rand_mat(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_vec(m, n, (0..m * n).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 4), (17, 33, 9), (64, 64, 64)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let c = matmul(&a, &b);
+            let r = naive_matmul(&a, &b);
+            assert!(c.fro_dist(&r) < 1e-3 * (1.0 + r.fro_norm()), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_transb_matches_matmul() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(2, 3, 5), (16, 31, 7), (33, 64, 65)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let c1 = matmul_transb(&a, &b);
+            let c2 = matmul(&a, &b.transpose());
+            assert!(c1.fro_dist(&c2) < 1e-4 * (1.0 + c2.fro_norm()));
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = rand_mat(&mut rng, 9, 14);
+        let x: Vec<f32> = (0..14).map(|_| rng.normal() as f32).collect();
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(14, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..9 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_transa_matches() {
+        let mut rng = Rng::new(4);
+        let a = rand_mat(&mut rng, 9, 14);
+        let x: Vec<f32> = (0..9).map(|_| rng.normal() as f32).collect();
+        let y = matvec_transa(&a, &x);
+        let yt = matvec(&a.transpose(), &x);
+        for i in 0..14 {
+            assert!((y[i] - yt[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_empty_and_odd() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        let a = vec![1.0f32; 7];
+        assert_eq!(dot(&a, &a), 7.0);
+    }
+
+    #[test]
+    fn matmul_f64_identity() {
+        let n = 8;
+        let mut eye = Mat::<f64>::zeros(n, n);
+        for i in 0..n {
+            eye.set(i, i, 1.0);
+        }
+        let mut rng = Rng::new(5);
+        let a = Mat::<f64>::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        let c = matmul_f64(&a, &eye);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((c.get(i, j) - a.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

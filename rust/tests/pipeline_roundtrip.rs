@@ -1,0 +1,119 @@
+//! Artifact-free integration tests: the whole quantize → pack → serve
+//! pipeline on synthetic models (always runnable, no `make artifacts`).
+
+use bpdq::model::pipeline::quantize_model;
+use bpdq::model::{synthetic_model, ModelConfig};
+use bpdq::quant::{BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig};
+use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn model() -> bpdq::model::Model {
+    synthetic_model(
+        &ModelConfig { vocab_size: 32, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 48 },
+        0xAB,
+    )
+}
+
+fn calib() -> Vec<Vec<u32>> {
+    (0..8).map(|i| (0..32).map(|t| ((t * 5 + i * 7) % 32) as u32).collect()).collect()
+}
+
+#[test]
+fn every_method_survives_the_pipeline() {
+    let m = model();
+    let methods = vec![
+        QuantMethod::Rtn(UniformConfig { bits: 3, group_size: 16, act_order: false }),
+        QuantMethod::Gptq(UniformConfig { bits: 3, group_size: 16, act_order: true }),
+        QuantMethod::Awq(UniformConfig { bits: 3, group_size: 16, act_order: false }),
+        QuantMethod::AnyBcq(BcqConfig { bits: 2, group_size: 16, alt_iters: 3 }),
+        QuantMethod::Vptq(VqConfig { bits: 2, vdim: 2, kmeans_iters: 8, outlier_frac: 0.01 }),
+        QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 3, ..Default::default() }),
+    ];
+    for method in methods {
+        let qm = quantize_model(&m, &calib(), &method)
+            .unwrap_or_else(|e| panic!("{} failed: {e:#}", method.name()));
+        assert_eq!(qm.reports.len(), 14, "{}", method.name());
+        assert!(qm.bits_per_weight() > 1.0 && qm.bits_per_weight() < 16.0);
+        // forward still works and is finite
+        let logits = qm.model.forward_full(&[1, 2, 3, 4]);
+        assert!(logits.data().iter().all(|v| v.is_finite()), "{}", method.name());
+    }
+}
+
+#[test]
+fn output_error_ordering_holds_on_full_model() {
+    // Sum of per-linear output errors: BPDQ < GPTQ < AWQ at 2-bit.
+    let m = model();
+    let err_of = |method: QuantMethod| -> f64 {
+        quantize_model(&m, &calib(), &method)
+            .unwrap()
+            .reports
+            .iter()
+            .map(|r| r.output_err)
+            .sum()
+    };
+    let e_bpdq =
+        err_of(QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 6, ..Default::default() }));
+    let e_gptq = err_of(QuantMethod::Gptq(UniformConfig { bits: 2, group_size: 16, act_order: true }));
+    let e_awq = err_of(QuantMethod::Awq(UniformConfig { bits: 2, group_size: 16, act_order: false }));
+    eprintln!("sum output err: bpdq={e_bpdq:.4} gptq={e_gptq:.4} awq={e_awq:.4}");
+    assert!(e_bpdq < e_gptq, "bpdq {e_bpdq} !< gptq {e_gptq}");
+    assert!(e_gptq < e_awq, "gptq {e_gptq} !< awq {e_awq}");
+}
+
+#[test]
+fn lut_serving_end_to_end_matches_native() {
+    let m = model();
+    let qm = quantize_model(
+        &m,
+        &calib(),
+        &QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 2, ..Default::default() }),
+    )
+    .unwrap();
+    let packed: HashMap<_, _> = qm
+        .packed
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+        .collect();
+    let qmodel = Arc::new(qm.model.clone());
+
+    let run = |kind: EngineKind| -> Vec<Vec<u32>> {
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 2,
+                max_batch: 3,
+                batch_window: Duration::from_millis(1),
+                strategy: Strategy::RoundRobin,
+            },
+            |_| kind.clone(),
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..6u64)
+            .map(|i| router.submit(vec![(i % 32) as u32, 3, 7], 5))
+            .collect();
+        let out = rxs.into_iter().map(|(_, rx)| rx.recv().unwrap().tokens).collect();
+        router.shutdown();
+        out
+    };
+    let native = run(EngineKind::Native(qmodel.clone()));
+    let lut = run(EngineKind::Lut(LutModel::new(qmodel, packed).unwrap()));
+    assert_eq!(native, lut, "LUT serving must reproduce native decode exactly");
+}
+
+#[test]
+fn quantized_model_size_accounting() {
+    let m = model();
+    let qm = quantize_model(
+        &m,
+        &calib(),
+        &QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 1, ..Default::default() }),
+    )
+    .unwrap();
+    // packed model strictly smaller than fp16 but nonzero
+    assert!(qm.size_bytes() > 0);
+    assert!(qm.size_bytes() < m.fp16_bytes());
+    // BPW at g=16: 2 + 3·16/16 = 5
+    assert!((qm.bits_per_weight() - 5.0).abs() < 1e-6);
+}

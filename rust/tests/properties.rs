@@ -1,0 +1,252 @@
+//! Property-based integration tests (proptest-lite): the paper's
+//! theoretical claims and the system invariants, over randomized shapes
+//! and data.
+
+use bpdq::model::{synthetic_model, ModelConfig};
+use bpdq::proptest_lite::{check, run_prop, Config};
+use bpdq::quant::bpdq::{quantize_full, BpdqConfig};
+use bpdq::quant::gar::{gar_perm, preserves_groups};
+use bpdq::quant::gptq::invert_perm;
+use bpdq::quant::packing::PackedPlane;
+use bpdq::quant::{quantize_linear, HessianState, QuantMethod, UniformConfig};
+use bpdq::rng::Rng;
+use bpdq::tensor::{matmul_f64, Matrix};
+
+fn rand_wx(rng: &mut Rng, d_out: usize, d_in: usize, n: usize) -> (Matrix, Matrix) {
+    let w = Matrix::from_vec(
+        d_out,
+        d_in,
+        (0..d_out * d_in).map(|_| 0.1 * rng.student_t(5.0) as f32).collect(),
+    );
+    let x = Matrix::from_vec(
+        n,
+        d_in,
+        (0..n * d_in)
+            .map(|i| ((1.0 / (1.0 + (i % d_in) as f64)).sqrt() * 2.0 + 0.1) as f32 * rng.normal() as f32)
+            .collect(),
+    );
+    (w, x)
+}
+
+/// Appendix B.3: after every group (including delta corrections), the
+/// global propagation invariant `(W_perm − Ŵ_perm) = E·U` holds.
+#[test]
+fn prop_bpdq_propagation_invariant() {
+    run_prop(
+        "bpdq_propagation_invariant",
+        Config { cases: 10, ..Default::default() },
+        |rng| {
+            let d_out = 2 + rng.below_usize(6);
+            let g = [8usize, 16][rng.below_usize(2)];
+            let ngroups = 1 + rng.below_usize(3);
+            let d_in = g * ngroups;
+            let n = d_in + 8 + rng.below_usize(16);
+            let (w, x) = rand_wx(rng, d_out, d_in, n);
+            let h = HessianState::from_activations(&x);
+            let cfg = BpdqConfig {
+                k: 1 + rng.below_usize(3) as u8,
+                group_size: g,
+                iters: 1 + rng.below_usize(4),
+                ..Default::default()
+            };
+            let out = quantize_full(&w, &h, cfg).map_err(|e| e.to_string())?;
+            let u = h.factor(cfg.hessian_damp, Some(&out.perm)).map_err(|e| e.to_string())?;
+            let w_perm = w.permute_cols(&out.perm).to_f64();
+            let what_perm = out.dequant.permute_cols(&out.perm).to_f64();
+            let eu = matmul_f64(&out.e_coords.to_f64(), &u);
+            for r in 0..d_out {
+                for j in 0..d_in {
+                    let resid = w_perm.get(r, j) - what_perm.get(r, j);
+                    let diff = (resid - eu.get(r, j)).abs();
+                    if diff > 5e-3 * (1.0 + resid.abs()) {
+                        return Err(format!(
+                            "invariant violated at ({r},{j}): resid={resid:.5} EU={:.5}",
+                            eu.get(r, j)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// §3.3 best-iterate retention ⇒ propagation error is non-increasing in
+/// the iteration budget.
+#[test]
+fn prop_bpdq_iters_monotone() {
+    run_prop("bpdq_iters_monotone", Config { cases: 8, ..Default::default() }, |rng| {
+        let d_out = 2 + rng.below_usize(8);
+        let d_in = 32;
+        let (w, x) = rand_wx(rng, d_out, d_in, 48);
+        let h = HessianState::from_activations(&x);
+        let mut last = f64::INFINITY;
+        for iters in [1usize, 4, 10] {
+            let cfg = BpdqConfig { k: 2, group_size: 16, iters, ..Default::default() };
+            let out = quantize_full(&w, &h, cfg).map_err(|e| e.to_string())?;
+            let err = out.e_coords.fro_norm().powi(2);
+            if err > last * 1.0001 {
+                return Err(format!("iters={iters}: {err} > {last}"));
+            }
+            last = err;
+        }
+        Ok(())
+    });
+}
+
+/// Proposition 1 corollary, behavioral form: with enough planes (k=8 ≈
+/// the full 8-bit RTN init), BPDQ's weight error is far below 2-plane
+/// BPDQ — the feasible set grows with k.
+#[test]
+fn prop_feasible_set_grows_with_k() {
+    run_prop("feasible_set_grows_with_k", Config { cases: 6, ..Default::default() }, |rng| {
+        let (w, x) = rand_wx(rng, 8, 64, 96);
+        let mut errs = Vec::new();
+        for k in [1u8, 2, 4] {
+            let q = quantize_linear(
+                &w,
+                &x,
+                QuantMethod::Bpdq(BpdqConfig { k, group_size: 32, iters: 4, ..Default::default() }),
+            )
+            .map_err(|e| e.to_string())?;
+            errs.push(q.stats.output_err);
+        }
+        if !(errs[2] < errs[1] && errs[1] < errs[0]) {
+            return Err(format!("errors not decreasing in k: {errs:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// GAR permutations are valid and group-preserving for any diag/size.
+#[test]
+fn prop_gar_valid() {
+    check("gar_valid", |rng| {
+        let g = [8usize, 16, 32][rng.below_usize(3)];
+        let ngroups = 1 + rng.below_usize(6);
+        let d_in = g * ngroups;
+        let diag: Vec<f64> = (0..d_in).map(|_| rng.f64() * 100.0).collect();
+        let perm = gar_perm(&diag, g);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        if sorted != (0..d_in).collect::<Vec<_>>() {
+            return Err("not a permutation".into());
+        }
+        if !preserves_groups(&perm, g) {
+            return Err("group integrity broken".into());
+        }
+        // inverse round-trips
+        let inv = invert_perm(&perm);
+        for (j, &p) in perm.iter().enumerate() {
+            if inv[p] != j {
+                return Err("inverse wrong".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bit-plane packing round-trips for arbitrary shapes.
+#[test]
+fn prop_plane_pack_roundtrip() {
+    check("plane_pack_roundtrip", |rng| {
+        let d_out = 1 + rng.below_usize(20);
+        let d_in = 1 + rng.below_usize(200);
+        let m = Matrix::from_vec(
+            d_out,
+            d_in,
+            (0..d_out * d_in).map(|_| if rng.coin(0.4) { 1.0 } else { 0.0 }).collect(),
+        );
+        let p = PackedPlane::pack(&m);
+        if p.unpack() != m {
+            return Err(format!("roundtrip failed for {d_out}x{d_in}"));
+        }
+        Ok(())
+    });
+}
+
+/// LUT-GEMV equals dequant-GEMV on random packed records (the serving
+/// hot path's correctness).
+#[test]
+fn prop_lut_matches_dequant() {
+    check("lut_matches_dequant", |rng| {
+        let d_out = 1 + rng.below_usize(12);
+        let g = [8usize, 16, 32][rng.below_usize(3)];
+        let d_in = g * (1 + rng.below_usize(4));
+        let k = 1 + rng.below_usize(4);
+        let (w, x) = rand_wx(rng, d_out, d_in, d_in + 8);
+        let h = HessianState::from_activations(&x);
+        let out = quantize_full(
+            &w,
+            &h,
+            BpdqConfig { k: k as u8, group_size: g, iters: 2, ..Default::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        let xv: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+        let want = bpdq::lut::dequant_gemv(&out.packed, &xv);
+        let mut got = vec![0.0f32; d_out];
+        bpdq::lut::lut_gemv(&out.packed, &xv, &mut got, &mut bpdq::lut::LutScratch::default());
+        bpdq::proptest_lite::assert_close(&got, &want, 1e-3, 1e-3)
+    });
+}
+
+/// GPTQ packed records dequantize to exactly the dense dequant matrix
+/// for random shapes, including act-order permutations.
+#[test]
+fn prop_gptq_pack_consistency() {
+    run_prop("gptq_pack_consistency", Config { cases: 12, ..Default::default() }, |rng| {
+        let d_out = 1 + rng.below_usize(10);
+        let g = [8usize, 16][rng.below_usize(2)];
+        let d_in = g * (1 + rng.below_usize(4));
+        let (w, x) = rand_wx(rng, d_out, d_in, d_in + 8);
+        let bits = [2u8, 3, 4][rng.below_usize(3)];
+        let act_order = rng.coin(0.5);
+        let q = quantize_linear(
+            &w,
+            &x,
+            QuantMethod::Gptq(UniformConfig { bits, group_size: g, act_order }),
+        )
+        .map_err(|e| e.to_string())?;
+        if let bpdq::quant::PackedWeights::Uniform(p) = &q.packed {
+            let deq = p.dequant();
+            if q.dequant.fro_dist(&deq) > 1e-4 {
+                return Err(format!("pack/dense mismatch: {}", q.dequant.fro_dist(&deq)));
+            }
+            Ok(())
+        } else {
+            Err("wrong packing variant".into())
+        }
+    });
+}
+
+/// Model decode path (KV cache) matches the batch forward for random
+/// tiny models and token streams.
+#[test]
+fn prop_decode_matches_forward() {
+    run_prop("decode_matches_forward", Config { cases: 6, ..Default::default() }, |rng| {
+        let nh = 1 + rng.below_usize(2);
+        let cfg = ModelConfig {
+            vocab_size: 10 + rng.below_usize(20),
+            d_model: nh * 8,
+            n_layers: 1 + rng.below_usize(2),
+            n_heads: nh,
+            d_ff: 16 + rng.below_usize(16),
+            max_seq: 32,
+        };
+        let m = synthetic_model(&cfg, rng.next_u64());
+        let len = 2 + rng.below_usize(8);
+        let toks: Vec<u32> = (0..len).map(|_| rng.below(cfg.vocab_size as u64) as u32).collect();
+        let full = m.forward_full(&toks);
+        let mut st = m.decode_state();
+        for (t, &tok) in toks.iter().enumerate() {
+            let logits = st.step(&m, tok);
+            for v in 0..cfg.vocab_size {
+                let a = full.get(t, v);
+                if (a - logits[v]).abs() > 2e-3 * (1.0 + a.abs()) {
+                    return Err(format!("pos {t} vocab {v}: {a} vs {}", logits[v]));
+                }
+            }
+        }
+        Ok(())
+    });
+}

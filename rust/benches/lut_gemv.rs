@@ -1,9 +1,13 @@
 //! Micro-bench: LUT-GEMV vs dequant-GEMV vs dense fp32 GEMV across
-//! bit-widths — the kernel-level basis of Table 3's latency column.
+//! bit-widths — the kernel-level basis of Table 3's latency column —
+//! plus the batched-decode comparison: one `lut_gemm` over B activation
+//! vectors vs B independent `lut_gemv` calls on the tiny-LM shapes.
 //! Paper shape to verify: LUT latency ≈ flat in k; dequant grows with
-//! k; LUT beats dequant at every k on memory-bound shapes.
+//! k; LUT beats dequant at every k on memory-bound shapes; and batched
+//! GEMM amortizes the weight fetch so per-token cost falls as B grows
+//! (target: ≥2× over independent GEMVs at B=8).
 use bpdq::benchkit::{bench, black_box, Bench};
-use bpdq::lut::{dequant_gemv, lut_gemv, LutScratch};
+use bpdq::lut::{dequant_gemv, lut_gemm, lut_gemv, LutScratch};
 use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
 use bpdq::rng::Rng;
 use bpdq::tensor::{matvec, Matrix};
@@ -28,7 +32,7 @@ fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> Bi
 }
 
 fn main() {
-    let b = Bench::new("lut_gemv — kernel latency vs bit-width");
+    let b = Bench::new("lut_gemv — kernel latency vs bit-width, GEMV vs batched GEMM");
     for &(d_out, d_in) in &[(512usize, 512usize), (1024, 1024), (2048, 2048)] {
         b.section(&format!("shape {d_out}×{d_in}, g=64"));
         let mut rng = Rng::new(1);
@@ -55,6 +59,47 @@ fn main() {
                 black_box(dequant_gemv(black_box(&packed), black_box(&x)));
             });
             b.row_time(&format!("dequant-GEMV  k={k}"), &s);
+        }
+    }
+
+    // Batched decode: one fused lut_gemm over B activation vectors vs B
+    // independent lut_gemv calls. Shapes are the tiny-LM block linears
+    // (d_model=128, d_ff=344) plus one larger square; the fused kernel
+    // gathers each row's plane words once per step instead of B times.
+    b.section("batched decode — lut_gemm vs B × lut_gemv (tiny-LM shapes, k=2, g=64)");
+    for &(d_out, d_in) in &[(128usize, 128usize), (344, 128), (128, 344), (512, 512)] {
+        let packed = random_packed(7 + d_out as u64, d_out, d_in, 64, 2);
+        let mut rng = Rng::new(11);
+        for &bsz in &[1usize, 2, 4, 8, 16] {
+            let xs: Vec<Vec<f32>> = (0..bsz)
+                .map(|_| (0..d_in).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f32>> = vec![vec![0.0f32; d_out]; bsz];
+            let mut scratch = LutScratch::default();
+            let s_gemm = bench(|| {
+                let mut yrefs: Vec<&mut [f32]> =
+                    ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                lut_gemm(black_box(&packed), black_box(&xrefs), &mut yrefs, &mut scratch);
+                black_box(&ys);
+            });
+            let mut y1 = vec![0.0f32; d_out];
+            let mut scratch1 = LutScratch::default();
+            let s_gemv = bench(|| {
+                for x in &xrefs {
+                    lut_gemv(black_box(&packed), black_box(x), &mut y1, &mut scratch1);
+                }
+                black_box(&y1);
+            });
+            let gemm_tok = s_gemm.per_iter_us() / bsz as f64;
+            let gemv_tok = s_gemv.per_iter_us() / bsz as f64;
+            b.row_metric(
+                &format!("{d_out}×{d_in}  B={bsz:<2} lut_gemm"),
+                &format!(
+                    "{gemm_tok:>8.2} µs/tok   B×lut_gemv {gemv_tok:>8.2} µs/tok   speedup ×{:.2}",
+                    gemv_tok / gemm_tok
+                ),
+            );
         }
     }
     b.finish();

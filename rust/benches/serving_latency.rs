@@ -1,5 +1,8 @@
 //! End-to-end serving bench: router + batcher + engines — decode
-//! latency and throughput per engine kind (the system half of Table 3).
+//! latency and throughput per engine kind (the system half of Table 3),
+//! including the batched-LUT scaling axis: the LUT engine is run at
+//! max_batch 1 vs 8 so the fused-sweep amortization (mean decode batch,
+//! reported from the engine metrics) is visible in tok/s.
 use bpdq::io::tlm::TlmFile;
 use bpdq::model::pipeline::quantize_model;
 use bpdq::model::{synthetic_model, Model, ModelConfig};
@@ -32,24 +35,26 @@ fn main() {
         .iter()
         .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
         .collect();
+    let lut_kind =
+        || EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap());
 
     let n_requests = if quick { 8 } else { 32 };
     let max_new = if quick { 4 } else { 12 };
     println!("\n================================================================");
     println!("BENCH serving_latency — {n_requests} requests × {max_new} new tokens");
     println!("================================================================");
-    for (name, kind) in [
-        ("native fp32 (fp16 role)", EngineKind::Native(model.clone())),
-        ("native dequantized W2", EngineKind::Native(qmodel.clone())),
-        (
-            "LUT bit-plane W2",
-            EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap()),
-        ),
-    ] {
+    let runs: Vec<(&str, EngineKind, usize)> = vec![
+        ("native fp32 (fp16 role)", EngineKind::Native(model.clone()), 4),
+        ("native dequantized W2", EngineKind::Native(qmodel.clone()), 4),
+        ("LUT bit-plane W2  B=1", lut_kind(), 1),
+        ("LUT bit-plane W2  B=4", lut_kind(), 4),
+        ("LUT bit-plane W2  B=8", lut_kind(), 8),
+    ];
+    for (name, kind, max_batch) in runs {
         let router = Router::start(
             RouterConfig {
                 n_workers: 1,
-                max_batch: 4,
+                max_batch,
                 batch_window: Duration::from_millis(1),
                 strategy: Strategy::LeastLoaded,
             },
@@ -64,11 +69,15 @@ fn main() {
         }
         let s = router.metrics.summary();
         println!(
-            "{name:<26} p50 first {:>8.2} ms   decode {:>8.1} µs/tok   {:>7.1} tok/s   mean batch {:.1}",
+            "{name:<26} p50 first {:>8.2} ms   decode {:>8.1} µs/tok   {:>7.1} tok/s   \
+             mean batch {:.1}   decode sweeps {:>5} (mean B {:.1}, max {})",
             s.p50_first_us as f64 / 1e3,
             s.us_per_token,
             s.tokens_per_sec,
-            s.mean_batch
+            s.mean_batch,
+            s.decode_sweeps,
+            s.mean_decode_batch,
+            s.max_decode_batch
         );
         router.shutdown();
     }

@@ -109,8 +109,13 @@ pub fn run(args: &Args) -> Result<()> {
     println!("p95 first-token    : {:.2} ms", s.p95_first_us as f64 / 1e3);
     println!("p50 queue delay    : {:.2} ms", s.p50_queue_us as f64 / 1e3);
     println!("mean batch size    : {:.2}", s.mean_batch);
+    println!(
+        "decode sweeps      : {} (mean batch {:.2}, max {})",
+        s.decode_sweeps, s.mean_decode_batch, s.max_decode_batch
+    );
     println!("decode             : {:.1} µs/token", s.us_per_token);
     println!("throughput         : {:.1} tok/s", s.tokens_per_sec);
+    println!("summary json       : {}", s.to_json());
     router.shutdown();
     Ok(())
 }

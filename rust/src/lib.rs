@@ -12,6 +12,11 @@
 //! * **L2/L1 (python/, build-time only)** — JAX model + Pallas kernels,
 //!   lowered once to HLO text under `artifacts/`.
 
+// The numeric kernels intentionally use index loops (parallel indexing
+// into several buffers at matching offsets); the iterator rewrites
+// clippy suggests obscure the stride arithmetic.
+#![allow(clippy::needless_range_loop)]
+
 pub mod benchkit;
 pub mod cli;
 pub mod data;

@@ -12,17 +12,32 @@
 //!   scalar-coefficient fit (paper Eq. 6).
 
 use crate::tensor::MatrixF64;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+// thiserror is not in the offline vendor set; Display/Error are hand-
+// rolled (same messages the derive produced).
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
-    #[error("singular triangular factor at {0}")]
     SingularTriangular(usize),
-    #[error("shape mismatch: {0}")]
     Shape(String),
 }
+
+impl fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(i, v) => {
+                write!(f, "matrix not positive definite at pivot {i} (value {v})")
+            }
+            LinalgError::SingularTriangular(i) => {
+                write!(f, "singular triangular factor at {i}")
+            }
+            LinalgError::Shape(s) => write!(f, "shape mismatch: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 pub type Result<T> = std::result::Result<T, LinalgError>;
 

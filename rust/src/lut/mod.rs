@@ -1,4 +1,4 @@
-//! Native bit-plane LUT-GEMV — the serving hot path (paper §4.3,
+//! Native bit-plane LUT-GEMV/GEMM — the serving hot path (paper §4.3,
 //! LUT-GEMM adapted to CPU lanes).
 //!
 //! For a BPDQ/BCQ-packed layer `Ŵ = REP(C₀) + Σᵢ REP(Cᵢ)⊙Bᵢ`:
@@ -12,88 +12,173 @@
 //! style incremental sums), so decode cost is independent of the weight
 //! bit-width beyond the per-plane gather — the property that gives the
 //! paper's flat W2/W3/W4 decode latency (Table 3).
+//!
+//! # Batched decode: why `lut_gemm`
+//!
+//! At batch size B the per-vector [`lut_gemv`] re-gathers every packed
+//! plane word (and re-reads every coefficient) B times per decode step,
+//! so batched decode is memory-bandwidth-bound on the *same weight bytes*
+//! B times over. [`lut_gemm`] instead builds one subset-sum table per
+//! activation vector (B tables, interleaved by chunk so the B entries for
+//! one gathered byte sit in adjacent cache lines) and then walks each
+//! row's plane words **once**, applying the gathered byte to all B LUTs
+//! in the inner loop. The weight fetch — the dominant term for the
+//! paper's memory-bound shapes, and exactly the term ABQ-LLM/SqueezeLLM
+//! amortize on GPU — is thus paid once per step instead of B times,
+//! driving per-token cost toward `1/B` of the weight-fetch bound.
+//!
+//! Groups need not be multiples of the 8-wide chunk: boundary chunks are
+//! masked so each group only sums its own columns (this also fixes the
+//! historical mis-stepping of the zero-coefficient skip for
+//! `group_size % 8 != 0`).
 
 use crate::quant::packing::BitPlanePacked;
 use crate::tensor::Matrix;
 
-/// Per-call workspace (reused across layers/tokens to keep the decode
-/// loop allocation-free).
+/// Per-call workspace (reused across layers/tokens/batches to keep the
+/// decode loop allocation-free).
 #[derive(Default)]
 pub struct LutScratch {
     lut: Vec<f32>,
     group_sums: Vec<f32>,
+    acc: Vec<f32>,
+    dot: Vec<f32>,
 }
 
-/// Build the subset-sum table for `x`: `lut[c*256+p] = Σ_i x[8c+i]·bit(p,i)`.
-pub fn build_lut(x: &[f32], scratch: &mut LutScratch) {
-    let n_chunks = x.len().div_ceil(8);
-    scratch.lut.resize(n_chunks * 256, 0.0);
+/// Build subset-sum tables for a batch of activation vectors, chunk-major
+/// and batch-interleaved:
+/// `lut[(c*B + b)*256 + p] = Σ_i xs[b][8c+i]·bit(p,i)`.
+///
+/// All vectors must share one length; entries past the end of a vector
+/// contribute 0 (ragged final chunk).
+pub fn build_luts(xs: &[&[f32]], scratch: &mut LutScratch) {
+    let nb = xs.len();
+    let d = xs.first().map_or(0, |x| x.len());
+    assert!(xs.iter().all(|x| x.len() == d), "batch vectors must share one length");
+    let n_chunks = d.div_ceil(8);
+    scratch.lut.resize(n_chunks * nb * 256, 0.0);
     for c in 0..n_chunks {
-        let base = c * 256;
-        let lut = &mut scratch.lut[base..base + 256];
-        lut[0] = 0.0;
-        // incremental: lut[p] = lut[p without lowest set bit] + x[bit]
-        for p in 1usize..256 {
-            let lsb = p & p.wrapping_neg();
-            let bit = lsb.trailing_zeros() as usize;
-            let xi = x.get(c * 8 + bit).copied().unwrap_or(0.0);
-            lut[p] = lut[p ^ lsb] + xi;
+        for (b, x) in xs.iter().enumerate() {
+            let base = (c * nb + b) * 256;
+            let lut = &mut scratch.lut[base..base + 256];
+            lut[0] = 0.0;
+            // incremental: lut[p] = lut[p without lowest set bit] + x[bit]
+            for p in 1usize..256 {
+                let lsb = p & p.wrapping_neg();
+                let bit = lsb.trailing_zeros() as usize;
+                let xi = x.get(c * 8 + bit).copied().unwrap_or(0.0);
+                lut[p] = lut[p ^ lsb] + xi;
+            }
         }
     }
 }
 
-/// y = Ŵ x for a packed record, using the LUT algorithm.
-pub fn lut_gemv(packed: &BitPlanePacked, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
-    assert_eq!(x.len(), packed.d_in);
-    assert_eq!(y.len(), packed.d_out);
+/// Build the subset-sum table for a single `x`:
+/// `lut[c*256+p] = Σ_i x[8c+i]·bit(p,i)`.
+pub fn build_lut(x: &[f32], scratch: &mut LutScratch) {
+    build_luts(&[x], scratch);
+}
+
+/// Batched LUT-GEMM: `ys[b] = Ŵ xs[b]` for all `b` in one pass over the
+/// packed record. Each row's plane words are gathered once and applied to
+/// every activation's LUT — decode cost per token approaches `1/B` of the
+/// weight-fetch bound as B grows.
+pub fn lut_gemm(
+    packed: &BitPlanePacked,
+    xs: &[&[f32]],
+    ys: &mut [&mut [f32]],
+    scratch: &mut LutScratch,
+) {
+    let nb = xs.len();
+    assert_eq!(ys.len(), nb, "xs/ys batch size mismatch");
+    if nb == 0 {
+        return;
+    }
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        assert_eq!(x.len(), packed.d_in);
+        assert_eq!(y.len(), packed.d_out);
+    }
     let g = packed.group_size;
     let ng = packed.n_groups();
     let k = packed.k();
-
-    build_lut(x, scratch);
-
-    // Group activation sums (bias term).
-    scratch.group_sums.resize(ng, 0.0);
-    for grp in 0..ng {
-        let c0 = grp * g;
-        let c1 = (c0 + g).min(packed.d_in);
-        scratch.group_sums[grp] = x[c0..c1].iter().sum();
-    }
-
-    let chunks_per_group = g / 8;
     // Total byte-chunks is bounded by d_in (the packed words round up to
     // 32-bit granularity, so `words.len()*4` can overshoot by up to 3).
     let n_chunks = packed.d_in.div_ceil(8);
-    let lut = &scratch.lut;
-    for (r, yr) in y.iter_mut().enumerate() {
-        let mut acc = 0.0f32;
-        // bias term: Σ_g c0[r,g] · S_g
-        let c0row = packed.coeffs[0].row(r);
-        for grp in 0..ng {
-            acc += c0row[grp] * scratch.group_sums[grp];
+
+    build_luts(xs, scratch);
+    let LutScratch { lut, group_sums, acc, dot } = scratch;
+
+    // Group activation sums (bias term), batch-interleaved per group.
+    group_sums.resize(ng * nb, 0.0);
+    for grp in 0..ng {
+        let c0 = grp * g;
+        let c1 = (c0 + g).min(packed.d_in);
+        for (b, x) in xs.iter().enumerate() {
+            group_sums[grp * nb + b] = x[c0..c1].iter().sum();
         }
-        // plane terms via the LUT
+    }
+
+    acc.resize(nb, 0.0);
+    dot.resize(nb, 0.0);
+    for r in 0..packed.d_out {
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        // bias term: Σ_g c0[r,g] · S_g, for every batch lane
+        let c0row = packed.coeffs[0].row(r);
+        for (grp, &cv) in c0row.iter().enumerate() {
+            if cv == 0.0 {
+                continue;
+            }
+            let gs = &group_sums[grp * nb..(grp + 1) * nb];
+            for (a, &s) in acc.iter_mut().zip(gs) {
+                *a += cv * s;
+            }
+        }
+        // plane terms via the LUTs
         for i in 0..k {
             let words = packed.planes[i].row_words(r);
             let crow = packed.coeffs[i + 1].row(r);
-            let mut chunk = 0usize;
             for (grp, &cv) in crow.iter().enumerate() {
                 if cv == 0.0 {
-                    chunk += chunks_per_group;
+                    // Nothing to add; the chunk range below is derived
+                    // from `grp`, so skipping is free (no running cursor
+                    // to mis-step — the historical g%8≠0 bug).
                     continue;
                 }
-                let mut dot = 0.0f32;
-                let chunk_end = (((grp + 1) * g).div_ceil(8)).min(n_chunks);
-                while chunk < chunk_end {
-                    let byte = (words[chunk / 4] >> (8 * (chunk % 4))) & 0xFF;
-                    dot += lut[chunk * 256 + byte as usize];
-                    chunk += 1;
+                let bit0 = grp * g;
+                let bit1 = ((grp + 1) * g).min(packed.d_in);
+                let c_start = bit0 / 8;
+                let c_end = bit1.div_ceil(8).min(n_chunks);
+                dot.iter_mut().for_each(|d| *d = 0.0);
+                for chunk in c_start..c_end {
+                    let mut byte = ((words[chunk / 4] >> (8 * (chunk % 4))) & 0xFF) as usize;
+                    // Mask off columns belonging to neighbouring groups
+                    // when a group boundary falls inside this chunk.
+                    let lo = bit0.saturating_sub(chunk * 8);
+                    let hi = (bit1 - chunk * 8).min(8);
+                    if lo > 0 || hi < 8 {
+                        byte &= ((1usize << hi) - 1) & !((1usize << lo) - 1);
+                    }
+                    let base = chunk * nb * 256;
+                    let luts = &lut[base..base + nb * 256];
+                    for (d, l) in dot.iter_mut().zip(luts.chunks_exact(256)) {
+                        *d += l[byte];
+                    }
                 }
-                acc += cv * dot;
+                for (a, &d) in acc.iter_mut().zip(dot.iter()) {
+                    *a += cv * d;
+                }
             }
         }
-        *yr = acc;
+        for (y, &a) in ys.iter_mut().zip(acc.iter()) {
+            y[r] = a;
+        }
     }
+}
+
+/// y = Ŵ x for a packed record, using the LUT algorithm (batch-1 case of
+/// [`lut_gemm`]; bit-identical to the batched path).
+pub fn lut_gemv(packed: &BitPlanePacked, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
+    lut_gemm(packed, &[x], &mut [y], scratch);
 }
 
 /// Reference: dequantize then dense matvec (the "Torch/Triton dequant"
@@ -136,6 +221,12 @@ mod tests {
         BitPlanePacked { d_out, d_in, group_size: g, planes, coeffs, coeff_bits: 16 }
     }
 
+    fn assert_rows_close(got: &[f32], want: &[f32], tag: &str) {
+        for (r, (&a, &b)) in got.iter().zip(want).enumerate() {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{tag} row {r}: {a} vs {b}");
+        }
+    }
+
     #[test]
     fn build_lut_subset_sums() {
         let x: Vec<f32> = (1..=8).map(|i| i as f32).collect();
@@ -153,6 +244,21 @@ mod tests {
     }
 
     #[test]
+    fn build_luts_interleaves_batches() {
+        // Two vectors: chunk-major, batch-interleaved layout.
+        let x0: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let x1: Vec<f32> = (0..16).map(|i| -(i as f32)).collect();
+        let mut s = LutScratch::default();
+        build_luts(&[&x0, &x1], &mut s);
+        // chunk 0, batch 0, pattern 0b1 → x0[0] = 0; batch 1 → -0
+        assert_eq!(s.lut[0b10], x0[1]);
+        assert_eq!(s.lut[256 + 0b10], x1[1]);
+        // chunk 1, batch 0 starts at (1*2+0)*256
+        assert_eq!(s.lut[2 * 256 + 0b1], x0[8]);
+        assert_eq!(s.lut[3 * 256 + 0b1], x1[8]);
+    }
+
+    #[test]
     fn lut_gemv_matches_dequant_gemv() {
         let mut rng = Rng::new(7);
         for &(d_out, d_in, g, k) in
@@ -164,14 +270,44 @@ mod tests {
             let mut got = vec![0.0f32; d_out];
             let mut scratch = LutScratch::default();
             lut_gemv(&packed, &x, &mut got, &mut scratch);
-            for r in 0..d_out {
-                assert!(
-                    (got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()),
-                    "({d_out},{d_in},{g},{k}) row {r}: {} vs {}",
-                    got[r],
-                    want[r]
-                );
+            assert_rows_close(&got, &want, &format!("({d_out},{d_in},{g},{k})"));
+        }
+    }
+
+    #[test]
+    fn group_size_not_multiple_of_8() {
+        // Regression: the old zero-coefficient fast path advanced the
+        // chunk cursor by g/8 (0 for g=4, 1 for g=12), corrupting every
+        // later group; and even the nonzero path summed whole chunks that
+        // straddle group boundaries. Both must now agree with dequant.
+        let mut rng = Rng::new(21);
+        for &(d_in, g) in &[(24usize, 4usize), (48, 12), (44, 12), (30, 4), (10, 3)] {
+            let packed = random_packed(300 + d_in as u64 + g as u64, 5, d_in, g, 2);
+            let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+            let want = dequant_gemv(&packed, &x);
+            let mut got = vec![0.0f32; 5];
+            lut_gemv(&packed, &x, &mut got, &mut LutScratch::default());
+            assert_rows_close(&got, &want, &format!("d_in={d_in} g={g}"));
+        }
+    }
+
+    #[test]
+    fn zero_coeff_in_middle_group_with_small_groups() {
+        // The exact shape of the historical bug: g ∈ {4, 12}, a zero
+        // coefficient in a *middle* group followed by nonzero groups.
+        for &(d_in, g) in &[(24usize, 4usize), (48, 12)] {
+            let mut p = random_packed(77 + g as u64, 4, d_in, g, 2);
+            let ng = p.n_groups();
+            assert!(ng >= 3, "test needs a middle group");
+            for r in 0..4 {
+                p.coeffs[1].set(r, 1, 0.0); // zero plane-0 coeff, group 1
+                p.coeffs[2].set(r, ng / 2, 0.0); // and a middle group of plane 1
             }
+            let x: Vec<f32> = (0..d_in).map(|i| (i as f32 * 0.37).sin()).collect();
+            let want = dequant_gemv(&p, &x);
+            let mut got = vec![0.0f32; 4];
+            lut_gemv(&p, &x, &mut got, &mut LutScratch::default());
+            assert_rows_close(&got, &want, &format!("d_in={d_in} g={g}"));
         }
     }
 
@@ -189,9 +325,7 @@ mod tests {
         let mut y2 = vec![0.0; 4];
         lut_gemv(&p2, &x2, &mut y2, &mut scratch);
         let want = dequant_gemv(&p2, &x2);
-        for r in 0..4 {
-            assert!((y2[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()));
-        }
+        assert_rows_close(&y2, &want, "scratch reuse");
     }
 
     #[test]
@@ -206,12 +340,7 @@ mod tests {
             let want = dequant_gemv(&packed, &x);
             let mut got = vec![0.0f32; 3];
             lut_gemv(&packed, &x, &mut got, &mut LutScratch::default());
-            for r in 0..3 {
-                assert!(
-                    (got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()),
-                    "d_in={d_in} g={g} row {r}"
-                );
-            }
+            assert_rows_close(&got, &want, &format!("d_in={d_in} g={g}"));
         }
     }
 
@@ -224,9 +353,7 @@ mod tests {
         let want = dequant_gemv(&packed, &x);
         let mut got = vec![0.0f32; 4];
         lut_gemv(&packed, &x, &mut got, &mut LutScratch::default());
-        for r in 0..4 {
-            assert!((got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()));
-        }
+        assert_rows_close(&got, &want, "g>d_in");
     }
 
     #[test]
@@ -240,8 +367,90 @@ mod tests {
         let want = dequant_gemv(&p, &x);
         let mut got = vec![0.0; 4];
         lut_gemv(&p, &x, &mut got, &mut LutScratch::default());
-        for r in 0..4 {
-            assert!((got[r] - want[r]).abs() < 1e-3 * (1.0 + want[r].abs()));
+        assert_rows_close(&got, &want, "zero plane");
+    }
+
+    #[test]
+    fn lut_gemm_matches_per_column_dequant() {
+        // Batched GEMM agrees with per-column dequant-GEMV for every
+        // batch lane, across B, ragged d_in, and every k.
+        let mut rng = Rng::new(41);
+        for &nb in &[1usize, 3, 8] {
+            for &(d_out, d_in, g) in
+                &[(6usize, 44usize, 12usize), (5, 100, 12), (8, 64, 16), (3, 344, 64)]
+            {
+                for k in 1..=4usize {
+                    let packed =
+                        random_packed((nb * 1000 + d_in + k) as u64, d_out, d_in, g, k);
+                    let xs: Vec<Vec<f32>> = (0..nb)
+                        .map(|_| (0..d_in).map(|_| rng.normal() as f32).collect())
+                        .collect();
+                    let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+                    let mut ys: Vec<Vec<f32>> = vec![vec![0.0; d_out]; nb];
+                    {
+                        let mut yrefs: Vec<&mut [f32]> =
+                            ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                        lut_gemm(&packed, &xrefs, &mut yrefs, &mut LutScratch::default());
+                    }
+                    for (b, x) in xs.iter().enumerate() {
+                        let want = dequant_gemv(&packed, x);
+                        assert_rows_close(
+                            &ys[b],
+                            &want,
+                            &format!("B={nb} b={b} ({d_out},{d_in},{g},{k})"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_gemm_batch_invariant() {
+        // The batched path must be bit-identical to B independent GEMVs
+        // (same operations in the same order per lane) — the engine
+        // relies on this for token-identical batched decode.
+        let packed = random_packed(91, 7, 96, 16, 3);
+        let mut rng = Rng::new(92);
+        let xs: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..96).map(|_| rng.normal() as f32).collect()).collect();
+        let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ys: Vec<Vec<f32>> = vec![vec![0.0; 7]; 5];
+        {
+            let mut yrefs: Vec<&mut [f32]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            lut_gemm(&packed, &xrefs, &mut yrefs, &mut LutScratch::default());
+        }
+        let mut scratch = LutScratch::default();
+        for (b, x) in xs.iter().enumerate() {
+            let mut y = vec![0.0f32; 7];
+            lut_gemv(&packed, x, &mut y, &mut scratch);
+            assert_eq!(y, ys[b], "lane {b} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn lut_gemm_scratch_reuse_across_mixed_shapes() {
+        // One scratch, interleaved shapes and batch sizes: no stale state.
+        let mut scratch = LutScratch::default();
+        let pa = random_packed(61, 6, 72, 24, 2);
+        let pb = random_packed(62, 3, 40, 8, 1);
+        let mut rng = Rng::new(63);
+        let mk = |rng: &mut Rng, n: usize, d: usize| -> Vec<Vec<f32>> {
+            (0..n).map(|_| (0..d).map(|_| rng.normal() as f32).collect()).collect()
+        };
+        for &(p, nb) in &[(&pa, 3usize), (&pb, 1), (&pa, 8), (&pb, 4)] {
+            let xs = mk(&mut rng, nb, p.d_in);
+            let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+            let mut ys: Vec<Vec<f32>> = vec![vec![0.0; p.d_out]; nb];
+            {
+                let mut yrefs: Vec<&mut [f32]> =
+                    ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                lut_gemm(p, &xrefs, &mut yrefs, &mut scratch);
+            }
+            for (b, x) in xs.iter().enumerate() {
+                let want = dequant_gemv(p, x);
+                assert_rows_close(&ys[b], &want, &format!("mixed B={nb} b={b}"));
+            }
         }
     }
 }

@@ -205,9 +205,7 @@ pub struct DecodeState {
 
 impl DecodeState {
     pub fn new(model: &Model) -> Self {
-        // Cache capacity: 4× the training context — long-context evals
-        // (Fig. 3) run beyond max_seq on purpose.
-        let cap = model.cfg.max_seq * 4;
+        let cap = model.decode_capacity();
         Self {
             k: (0..model.cfg.n_layers).map(|_| Matrix::zeros(cap, model.cfg.d_model)).collect(),
             v: (0..model.cfg.n_layers).map(|_| Matrix::zeros(cap, model.cfg.d_model)).collect(),

@@ -212,6 +212,15 @@ impl Model {
     pub fn fp16_bytes(&self) -> usize {
         self.n_params() * 2
     }
+
+    /// KV-cache capacity every decode session allocates: 4× the training
+    /// context, because long-context evals (Fig. 3) run beyond `max_seq`
+    /// on purpose. Single source of truth shared by [`DecodeState`] and
+    /// the serving engines' LUT sessions, so the engines cannot diverge
+    /// on truncation points or KV memory.
+    pub fn decode_capacity(&self) -> usize {
+        self.cfg.max_seq * 4
+    }
 }
 
 /// RMSNorm: x * g / rms(x).

@@ -2,10 +2,23 @@
 //!
 //! All three implement the same continuous-batching `generate_batch`
 //! contract so the router/batcher are engine-agnostic. Sessions within a
-//! batch are stepped round-robin (one token each per sweep), which is the
-//! scheduling shape of vLLM-style decode batching reduced to one thread.
+//! batch advance one token per sweep; a [`Stepper`] decides how the sweep
+//! is *executed*:
+//!
+//! * [`NativeStepper`] steps each session independently — dense matvecs
+//!   share nothing across sessions, so the pre-refactor per-session path
+//!   is kept unchanged;
+//! * [`BatchedLutStep`] fuses the sweep: one multi-LUT build per linear,
+//!   per-layer **batched** linears via [`crate::lut::lut_gemm`] (each
+//!   row's packed plane words are gathered once for all active sessions),
+//!   and per-session attention/KV. This amortizes the weight fetch across
+//!   the batch — the decode-side analogue of ABQ-LLM's batched
+//!   binary-matrix kernels — so per-token cost drops toward `1/B` of the
+//!   weight-fetch bound.
 
+use super::metrics::Metrics;
 use super::{Request, Response};
+use crate::lut::{lut_gemm, LutScratch};
 use crate::model::{argmax, rmsnorm, silu, softmax, DecodeState, Model, Rope};
 use crate::quant::packing::BitPlanePacked;
 use crate::runtime::{self, Runtime};
@@ -38,7 +51,6 @@ impl LutModel {
         }
         Ok(Self { base, packed: Arc::new(packed) })
     }
-
 }
 
 /// Which decode path a worker runs.
@@ -46,7 +58,7 @@ impl LutModel {
 pub enum EngineKind {
     /// dense f32 matvecs over (dequantized or fp) weights
     Native(Arc<Model>),
-    /// LUT-GEMV over packed bit-planes
+    /// batched LUT-GEMM over packed bit-planes
     Lut(LutModel),
     /// PJRT execution of the AOT `decode_step.hlo.txt`
     Pjrt { model: Arc<Model>, artifact: PathBuf, cache_len: usize },
@@ -56,6 +68,8 @@ pub enum EngineKind {
 pub struct Engine {
     kind: EngineKind,
     runtime: Option<Runtime>,
+    lut_step: Option<BatchedLutStep>,
+    metrics: Option<Metrics>,
 }
 
 impl Engine {
@@ -64,7 +78,11 @@ impl Engine {
             EngineKind::Pjrt { .. } => Some(Runtime::cpu()?),
             _ => None,
         };
-        Ok(Self { kind, runtime })
+        let lut_step = match &kind {
+            EngineKind::Lut(lm) => Some(BatchedLutStep::new(lm.clone())),
+            _ => None,
+        };
+        Ok(Self { kind, runtime, lut_step, metrics: None })
     }
 
     pub fn kind_name(&self) -> &'static str {
@@ -75,16 +93,25 @@ impl Engine {
         }
     }
 
-    /// Decode a batch of requests with round-robin continuous batching.
+    /// Give the engine a metrics handle so per-sweep decode batch
+    /// occupancy is recorded (the router wires this up for its workers).
+    pub fn attach_metrics(&mut self, metrics: Metrics) {
+        self.metrics = Some(metrics);
+    }
+
+    /// Decode a batch of requests with continuous batching: every active
+    /// session advances one token per sweep, and the whole sweep runs
+    /// through the engine's stepper (fused for the LUT engine).
     pub fn generate_batch(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        let metrics = self.metrics.clone();
         match &self.kind {
             EngineKind::Native(model) => {
-                let model = model.clone();
-                self.generate_generic(reqs, |_| NativeSession::new(&model))
+                let mut stepper = NativeStepper { model: model.clone() };
+                generate_generic(&mut stepper, reqs, metrics.as_ref())
             }
-            EngineKind::Lut(lm) => {
-                let lm = lm.clone();
-                self.generate_generic(reqs, |_| LutSession::new(&lm))
+            EngineKind::Lut(_) => {
+                let stepper = self.lut_step.as_mut().context("lut stepper missing")?;
+                generate_generic(stepper, reqs, metrics.as_ref())
             }
             EngineKind::Pjrt { model, artifact, cache_len } => {
                 let (model, artifact, cache_len) = (model.clone(), artifact.clone(), *cache_len);
@@ -93,120 +120,133 @@ impl Engine {
             }
         }
     }
-
-    fn generate_generic<S: Session>(
-        &self,
-        reqs: &[Request],
-        mut make: impl FnMut(&Request) -> S,
-    ) -> Result<Vec<Response>> {
-        struct Active<S> {
-            idx: usize,
-            sess: S,
-            prompt_left: std::vec::IntoIter<u32>,
-            next_token: Option<u32>,
-            out: Vec<u32>,
-            started: Instant,
-            first_tok: Option<Instant>,
-        }
-        let mut active: Vec<Active<S>> = reqs
-            .iter()
-            .enumerate()
-            .map(|(idx, r)| Active {
-                idx,
-                sess: make(r),
-                prompt_left: r.prompt.clone().into_iter(),
-                next_token: None,
-                out: Vec::new(),
-                started: Instant::now(),
-                first_tok: None,
-            })
-            .collect();
-        let mut done: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
-
-        // Round-robin sweeps: each active session advances one token per
-        // sweep (prompt prefill counts as steps too — single-token
-        // engine).
-        while !active.is_empty() {
-            let mut still = Vec::with_capacity(active.len());
-            for mut a in active {
-                let capacity_left = a.sess.capacity() - a.sess.pos();
-                let tok = a.next_token.take().or_else(|| a.prompt_left.next());
-                let logits = match tok {
-                    Some(t) if capacity_left > 0 => a.sess.step(t),
-                    _ => {
-                        // out of prompt+generation or capacity: finalize
-                        finalize(&mut done, &a, reqs);
-                        continue;
-                    }
-                };
-                if a.prompt_left.len() == 0 {
-                    // generating
-                    if a.first_tok.is_none() {
-                        a.first_tok = Some(Instant::now());
-                    }
-                    if a.out.len() < reqs[a.idx].max_new {
-                        let next = argmax(&logits) as u32;
-                        a.out.push(next);
-                        a.next_token = Some(next);
-                        still.push(a);
-                    } else {
-                        finalize(&mut done, &a, reqs);
-                    }
-                } else {
-                    still.push(a);
-                }
-            }
-            active = still;
-        }
-
-        fn finalize<S>(
-            done: &mut [Option<Response>],
-            a: &Active<S>,
-            reqs: &[Request],
-        ) {
-            let total = a.started.elapsed().as_micros() as u64;
-            let first = a
-                .first_tok
-                .map(|t| (t - a.started).as_micros() as u64)
-                .unwrap_or(total);
-            done[a.idx] = Some(Response {
-                id: reqs[a.idx].id,
-                tokens: {
-                    // drop the trailing speculative token (pushed but not
-                    // requested) if any — out is exactly what was sampled
-                    a.out.clone()
-                },
-                first_token_us: first,
-                total_us: total,
-            });
-        }
-
-        Ok(done.into_iter().map(|d| d.expect("all finalized")).collect())
-    }
 }
 
-/// One in-flight decode session.
+/// One in-flight decode session: KV state + position bookkeeping. The
+/// stepping itself belongs to the [`Stepper`] so batched engines can fuse
+/// a whole sweep.
 trait Session {
-    fn step(&mut self, token: u32) -> Vec<f32>;
     fn pos(&self) -> usize;
     fn capacity(&self) -> usize;
 }
 
-struct NativeSession<'m> {
-    model: &'m Model,
+/// Executes one sweep: each session advances by exactly one token.
+trait Stepper {
+    type Sess: Session;
+
+    fn make(&self, r: &Request) -> Self::Sess;
+
+    /// Step session `i` with `tokens[i]`; returns next-token logits per
+    /// session, in order.
+    fn step_batch(&mut self, sessions: &mut [&mut Self::Sess], tokens: &[u32]) -> Vec<Vec<f32>>;
+}
+
+/// Round-robin sweeps, engine-agnostic: collect one token per active
+/// session, hand the whole sweep to the stepper, then apply sampling /
+/// finalization per session. Prompt prefill counts as steps too —
+/// single-token engine.
+fn generate_generic<St: Stepper>(
+    stepper: &mut St,
+    reqs: &[Request],
+    metrics: Option<&Metrics>,
+) -> Result<Vec<Response>> {
+    struct Active<S> {
+        idx: usize,
+        sess: S,
+        prompt_left: std::vec::IntoIter<u32>,
+        next_token: Option<u32>,
+        out: Vec<u32>,
+        started: Instant,
+        first_tok: Option<Instant>,
+    }
+
+    fn finalize<S>(done: &mut [Option<Response>], a: &Active<S>, reqs: &[Request]) {
+        let total = a.started.elapsed().as_micros() as u64;
+        let first = a.first_tok.map(|t| (t - a.started).as_micros() as u64).unwrap_or(total);
+        done[a.idx] = Some(Response {
+            id: reqs[a.idx].id,
+            // `out` is exactly what was sampled — the trailing speculative
+            // token (fed but never requested) is never pushed.
+            tokens: a.out.clone(),
+            first_token_us: first,
+            total_us: total,
+        });
+    }
+
+    let mut active: Vec<Active<St::Sess>> = reqs
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| Active {
+            idx,
+            sess: stepper.make(r),
+            prompt_left: r.prompt.clone().into_iter(),
+            next_token: None,
+            out: Vec::new(),
+            started: Instant::now(),
+            first_tok: None,
+        })
+        .collect();
+    let mut done: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
+
+    while !active.is_empty() {
+        // Gather this sweep's (session, token) pairs; sessions with no
+        // token left (or no KV capacity) finalize instead.
+        let mut stepping: Vec<Active<St::Sess>> = Vec::with_capacity(active.len());
+        let mut tokens: Vec<u32> = Vec::with_capacity(active.len());
+        for mut a in active {
+            let capacity_left = a.sess.capacity() - a.sess.pos();
+            match a.next_token.take().or_else(|| a.prompt_left.next()) {
+                Some(t) if capacity_left > 0 => {
+                    tokens.push(t);
+                    stepping.push(a);
+                }
+                // out of prompt+generation or capacity: finalize
+                _ => finalize(&mut done, &a, reqs),
+            }
+        }
+        if stepping.is_empty() {
+            break;
+        }
+        if let Some(m) = metrics {
+            m.record_decode_sweep(stepping.len());
+        }
+
+        let logits_all = {
+            let mut refs: Vec<&mut St::Sess> = stepping.iter_mut().map(|a| &mut a.sess).collect();
+            stepper.step_batch(&mut refs, &tokens)
+        };
+        debug_assert_eq!(logits_all.len(), stepping.len());
+
+        let mut still = Vec::with_capacity(stepping.len());
+        for (mut a, logits) in stepping.into_iter().zip(logits_all) {
+            if a.prompt_left.len() == 0 {
+                // generating
+                if a.first_tok.is_none() {
+                    a.first_tok = Some(Instant::now());
+                }
+                if a.out.len() < reqs[a.idx].max_new {
+                    let next = argmax(&logits) as u32;
+                    a.out.push(next);
+                    a.next_token = Some(next);
+                    still.push(a);
+                } else {
+                    finalize(&mut done, &a, reqs);
+                }
+            } else {
+                still.push(a);
+            }
+        }
+        active = still;
+    }
+
+    Ok(done.into_iter().map(|d| d.expect("all finalized")).collect())
+}
+
+struct NativeSession {
     state: DecodeState,
 }
 
-impl<'m> NativeSession<'m> {
-    fn new(model: &'m Model) -> Self {
-        Self { model, state: model.decode_state() }
-    }
-}
-
-impl Session for NativeSession<'_> {
-    fn step(&mut self, token: u32) -> Vec<f32> {
-        self.state.step(self.model, token)
-    }
+impl Session for NativeSession {
     fn pos(&self) -> usize {
         self.state.pos()
     }
@@ -215,154 +255,38 @@ impl Session for NativeSession<'_> {
     }
 }
 
-/// LUT decode session: same math as `DecodeState::step` with every block
-/// linear replaced by a packed LUT-GEMV.
-struct LutSession<'m> {
-    lm: &'m LutModel,
+/// Independent per-session stepping — the pre-refactor decode path,
+/// bypassing the fused sweep entirely (dense matvecs have no cross-
+/// session work to share).
+struct NativeStepper {
+    model: Arc<Model>,
+}
+
+impl Stepper for NativeStepper {
+    type Sess = NativeSession;
+
+    fn make(&self, _r: &Request) -> NativeSession {
+        NativeSession { state: self.model.decode_state() }
+    }
+
+    fn step_batch(&mut self, sessions: &mut [&mut NativeSession], tokens: &[u32]) -> Vec<Vec<f32>> {
+        sessions.iter_mut().zip(tokens).map(|(s, &t)| s.state.step(&self.model, t)).collect()
+    }
+}
+
+/// LUT decode session state: per-layer KV plus position. The per-step
+/// work buffers live in [`BatchedLutStep`], shared across the batch.
+/// Capacity comes from [`Model::decode_capacity`] — the same source as
+/// [`DecodeState`] — so the LUT and native engines truncate identically
+/// and allocate identical KV memory.
+struct LutSession {
     k: Vec<Matrix>,
     v: Vec<Matrix>,
     pos: usize,
-    rope: Rope,
     cap: usize,
-    scratch: crate::lut::LutScratch,
-    // reusable step buffers (decode loop is allocation-free)
-    q: Vec<f32>,
-    kx: Vec<f32>,
-    vx: Vec<f32>,
-    proj: Vec<f32>,
-    up: Vec<f32>,
-    gate: Vec<f32>,
-    mid: Vec<f32>,
-    down: Vec<f32>,
-    attn: Vec<f32>,
-    scores: Vec<f32>,
-    normed: Vec<f32>,
 }
 
-impl<'m> LutSession<'m> {
-    fn new(lm: &'m LutModel) -> Self {
-        let cfg = &lm.base.cfg;
-        let cap = cfg.max_seq * 4;
-        Self {
-            lm,
-            k: (0..cfg.n_layers).map(|_| Matrix::zeros(cap, cfg.d_model)).collect(),
-            v: (0..cfg.n_layers).map(|_| Matrix::zeros(cap, cfg.d_model)).collect(),
-            pos: 0,
-            rope: Rope::new(cap, cfg.head_dim()),
-            cap,
-            scratch: crate::lut::LutScratch::default(),
-            q: Vec::new(),
-            kx: Vec::new(),
-            vx: Vec::new(),
-            proj: Vec::new(),
-            up: Vec::new(),
-            gate: Vec::new(),
-            mid: Vec::new(),
-            down: Vec::new(),
-            attn: Vec::new(),
-            scores: Vec::new(),
-            normed: Vec::new(),
-        }
-    }
-
-}
-
-impl Session for LutSession<'_> {
-    fn step(&mut self, token: u32) -> Vec<f32> {
-        // Destructure so each buffer gets its own disjoint &mut borrow
-        // next to the shared `lm` borrow (allocation-free decode loop).
-        let LutSession {
-            lm,
-            k,
-            v,
-            pos,
-            rope,
-            cap,
-            scratch,
-            q,
-            kx,
-            vx,
-            proj,
-            up,
-            gate,
-            mid,
-            down,
-            attn,
-            scores,
-            normed,
-        } = self;
-        let model = &lm.base;
-        let cfg = &model.cfg;
-        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
-        let scale = 1.0 / (hd as f32).sqrt();
-        let t = *pos;
-        assert!(t < *cap, "KV cache exhausted");
-        let lin = |l: usize, name: &str, x: &[f32], out: &mut Vec<f32>, scratch: &mut crate::lut::LutScratch| {
-            let rec = &lm.packed[&format!("l{l}.{name}")];
-            out.resize(rec.d_out, 0.0);
-            crate::lut::lut_gemv(rec, x, out, scratch);
-        };
-
-        let id = (token as usize).min(cfg.vocab_size - 1);
-        let mut h: Vec<f32> = model.embed.row(id).to_vec();
-        normed.resize(d, 0.0);
-        attn.resize(d, 0.0);
-        scores.resize(t + 1, 0.0);
-
-        for l in 0..cfg.n_layers {
-            let lw = &model.layers[l];
-            rmsnorm(&h, &lw.norm1, normed);
-            lin(l, "wq", normed, q, scratch);
-            lin(l, "wk", normed, kx, scratch);
-            lin(l, "wv", normed, vx, scratch);
-            for hh in 0..nh {
-                rope.apply(&mut q[hh * hd..(hh + 1) * hd], t);
-                rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
-            }
-            k[l].row_mut(t).copy_from_slice(kx);
-            v[l].row_mut(t).copy_from_slice(vx);
-
-            attn.iter_mut().for_each(|a| *a = 0.0);
-            for hh in 0..nh {
-                let o0 = hh * hd;
-                for u in 0..=t {
-                    scores[u] = dot(&q[o0..o0 + hd], &k[l].row(u)[o0..o0 + hd]) * scale;
-                }
-                softmax(&mut scores[..=t]);
-                for u in 0..=t {
-                    let w = scores[u];
-                    if w < 1e-9 {
-                        continue;
-                    }
-                    let vrow = &v[l].row(u)[o0..o0 + hd];
-                    for i in 0..hd {
-                        attn[o0 + i] += w * vrow[i];
-                    }
-                }
-            }
-            lin(l, "wo", attn, proj, scratch);
-            for (hi, p) in h.iter_mut().zip(proj.iter()) {
-                *hi += p;
-            }
-
-            rmsnorm(&h, &lw.norm2, normed);
-            lin(l, "w1", normed, up, scratch);
-            lin(l, "w3", normed, gate, scratch);
-            mid.resize(up.len(), 0.0);
-            for ((m, &u), &g) in mid.iter_mut().zip(up.iter()).zip(gate.iter()) {
-                *m = u * silu(g);
-            }
-            lin(l, "w2", mid, down, scratch);
-            for (hi, dn) in h.iter_mut().zip(down.iter()) {
-                *hi += dn;
-            }
-        }
-        *pos += 1;
-        let h_copy = h.clone();
-        rmsnorm(&h_copy, &model.norm_f, &mut h);
-        matvec(&model.lm_head, &h)
-    }
-
+impl Session for LutSession {
     fn pos(&self) -> usize {
         self.pos
     }
@@ -371,8 +295,218 @@ impl Session for LutSession<'_> {
     }
 }
 
+/// Batched LUT stepper: all active sessions advance together through one
+/// fused pass per sweep — shared multi-LUT build, per-layer batched
+/// linears ([`lut_gemm`]), per-session attention/KV. Per-slot buffers are
+/// reused across sweeps so the warm decode loop is allocation-free (save
+/// for the per-linear slice-of-refs assembly).
+struct BatchedLutStep {
+    lm: LutModel,
+    rope: Rope,
+    cap: usize,
+    scratch: LutScratch,
+    // per-slot step buffers (slot = position within the current sweep)
+    h: Vec<Vec<f32>>,
+    normed: Vec<Vec<f32>>,
+    q: Vec<Vec<f32>>,
+    kx: Vec<Vec<f32>>,
+    vx: Vec<Vec<f32>>,
+    attn: Vec<Vec<f32>>,
+    proj: Vec<Vec<f32>>,
+    up: Vec<Vec<f32>>,
+    gate: Vec<Vec<f32>>,
+    mid: Vec<Vec<f32>>,
+    down: Vec<Vec<f32>>,
+    scores: Vec<f32>,
+}
+
+impl BatchedLutStep {
+    fn new(lm: LutModel) -> Self {
+        let cap = lm.base.decode_capacity();
+        let rope = Rope::new(cap, lm.base.cfg.head_dim());
+        Self {
+            lm,
+            rope,
+            cap,
+            scratch: LutScratch::default(),
+            h: Vec::new(),
+            normed: Vec::new(),
+            q: Vec::new(),
+            kx: Vec::new(),
+            vx: Vec::new(),
+            attn: Vec::new(),
+            proj: Vec::new(),
+            up: Vec::new(),
+            gate: Vec::new(),
+            mid: Vec::new(),
+            down: Vec::new(),
+            scores: Vec::new(),
+        }
+    }
+}
+
+/// Grow a per-slot buffer pool to at least `nb` slots.
+fn ensure_slots(bufs: &mut Vec<Vec<f32>>, nb: usize) {
+    while bufs.len() < nb {
+        bufs.push(Vec::new());
+    }
+}
+
+/// One batched linear: `ys[b] = packed("l{l}.{name}") · xs[b]` for all
+/// `b < nb`, through the fused [`lut_gemm`] kernel.
+fn lin_batch(
+    lm: &LutModel,
+    l: usize,
+    name: &str,
+    xs: &[Vec<f32>],
+    nb: usize,
+    ys: &mut Vec<Vec<f32>>,
+    scratch: &mut LutScratch,
+) {
+    let rec = &lm.packed[&format!("l{l}.{name}")];
+    ensure_slots(ys, nb);
+    let xrefs: Vec<&[f32]> = xs[..nb].iter().map(|x| x.as_slice()).collect();
+    let mut yrefs: Vec<&mut [f32]> = Vec::with_capacity(nb);
+    for y in ys[..nb].iter_mut() {
+        y.resize(rec.d_out, 0.0);
+        yrefs.push(y.as_mut_slice());
+    }
+    lut_gemm(rec, &xrefs, &mut yrefs, scratch);
+}
+
+impl Stepper for BatchedLutStep {
+    type Sess = LutSession;
+
+    fn make(&self, _r: &Request) -> LutSession {
+        let cfg = &self.lm.base.cfg;
+        LutSession {
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(self.cap, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(self.cap, cfg.d_model)).collect(),
+            pos: 0,
+            cap: self.cap,
+        }
+    }
+
+    fn step_batch(&mut self, sessions: &mut [&mut LutSession], tokens: &[u32]) -> Vec<Vec<f32>> {
+        let nb = sessions.len();
+        debug_assert_eq!(tokens.len(), nb);
+        if nb == 0 {
+            return Vec::new();
+        }
+        // Arc clone so `model` does not borrow `self` (the per-slot
+        // buffers below need disjoint &mut borrows of self's fields).
+        let model = self.lm.base.clone();
+        let cfg = &model.cfg;
+        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        ensure_slots(&mut self.h, nb);
+        ensure_slots(&mut self.normed, nb);
+        ensure_slots(&mut self.attn, nb);
+        ensure_slots(&mut self.mid, nb);
+
+        for (b, (&tok, sess)) in tokens.iter().zip(sessions.iter()).enumerate() {
+            assert!(sess.pos < sess.cap, "KV cache exhausted");
+            let id = (tok as usize).min(cfg.vocab_size - 1);
+            let hb = &mut self.h[b];
+            hb.clear();
+            hb.extend_from_slice(model.embed.row(id));
+        }
+
+        for l in 0..cfg.n_layers {
+            let lw = &model.layers[l];
+
+            // ---- attention ----
+            for b in 0..nb {
+                self.normed[b].resize(d, 0.0);
+            }
+            for b in 0..nb {
+                rmsnorm(&self.h[b], &lw.norm1, &mut self.normed[b]);
+            }
+            lin_batch(&self.lm, l, "wq", &self.normed, nb, &mut self.q, &mut self.scratch);
+            lin_batch(&self.lm, l, "wk", &self.normed, nb, &mut self.kx, &mut self.scratch);
+            lin_batch(&self.lm, l, "wv", &self.normed, nb, &mut self.vx, &mut self.scratch);
+
+            for (b, sess) in sessions.iter_mut().enumerate() {
+                let t = sess.pos;
+                for hh in 0..nh {
+                    self.rope.apply(&mut self.q[b][hh * hd..(hh + 1) * hd], t);
+                    self.rope.apply(&mut self.kx[b][hh * hd..(hh + 1) * hd], t);
+                }
+                sess.k[l].row_mut(t).copy_from_slice(&self.kx[b]);
+                sess.v[l].row_mut(t).copy_from_slice(&self.vx[b]);
+
+                let attnb = &mut self.attn[b];
+                attnb.resize(d, 0.0);
+                attnb.iter_mut().for_each(|a| *a = 0.0);
+                self.scores.resize(t + 1, 0.0);
+                for hh in 0..nh {
+                    let o0 = hh * hd;
+                    for u in 0..=t {
+                        self.scores[u] =
+                            dot(&self.q[b][o0..o0 + hd], &sess.k[l].row(u)[o0..o0 + hd]) * scale;
+                    }
+                    softmax(&mut self.scores[..=t]);
+                    for u in 0..=t {
+                        let w = self.scores[u];
+                        if w < 1e-9 {
+                            continue;
+                        }
+                        let vrow = &sess.v[l].row(u)[o0..o0 + hd];
+                        for i in 0..hd {
+                            attnb[o0 + i] += w * vrow[i];
+                        }
+                    }
+                }
+            }
+
+            lin_batch(&self.lm, l, "wo", &self.attn, nb, &mut self.proj, &mut self.scratch);
+            for b in 0..nb {
+                for (hi, p) in self.h[b].iter_mut().zip(self.proj[b].iter()) {
+                    *hi += p;
+                }
+            }
+
+            // ---- MLP (SwiGLU) ----
+            for b in 0..nb {
+                rmsnorm(&self.h[b], &lw.norm2, &mut self.normed[b]);
+            }
+            lin_batch(&self.lm, l, "w1", &self.normed, nb, &mut self.up, &mut self.scratch);
+            lin_batch(&self.lm, l, "w3", &self.normed, nb, &mut self.gate, &mut self.scratch);
+            for b in 0..nb {
+                let midb = &mut self.mid[b];
+                midb.resize(self.up[b].len(), 0.0);
+                for ((m, &u), &gt) in
+                    midb.iter_mut().zip(self.up[b].iter()).zip(self.gate[b].iter())
+                {
+                    *m = u * silu(gt);
+                }
+            }
+            lin_batch(&self.lm, l, "w2", &self.mid, nb, &mut self.down, &mut self.scratch);
+            for b in 0..nb {
+                for (hi, dn) in self.h[b].iter_mut().zip(self.down[b].iter()) {
+                    *hi += dn;
+                }
+            }
+        }
+
+        let mut out = Vec::with_capacity(nb);
+        for (b, sess) in sessions.iter_mut().enumerate() {
+            sess.pos += 1;
+            let normb = &mut self.normed[b];
+            normb.resize(d, 0.0);
+            rmsnorm(&self.h[b], &model.norm_f, normb);
+            out.push(matvec(&model.lm_head, normb));
+        }
+        out
+    }
+}
+
 /// PJRT path: run requests sequentially through the AOT decode-step
-/// executable, threading the KV cache literals.
+/// executable, threading the KV cache literals. The executable is loaded
+/// (and compiled, on a cache miss) **once per batch**, not per request —
+/// reloading inside the request loop made every request pay the artifact
+/// parse/compile round-trip.
 fn pjrt_generate(
     rt: &mut Runtime,
     model: &Model,
@@ -384,11 +518,11 @@ fn pjrt_generate(
     let d = model.cfg.d_model;
     let cache_elems = nl * cache_len * d;
     let mut out = Vec::with_capacity(reqs.len());
+    let exe = rt.load(artifact)?;
 
     for r in reqs {
         let started = Instant::now();
         let mut first_tok = None;
-        let exe = rt.load(artifact)?;
         let zeros = vec![0.0f32; cache_elems];
         let mut klit = runtime::literal_f32(&zeros, &[nl as i64, cache_len as i64, d as i64])?;
         let mut vlit = runtime::literal_f32(&zeros, &[nl as i64, cache_len as i64, d as i64])?;
@@ -444,12 +578,21 @@ fn pjrt_generate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::io::tlm::TlmFile;
     use crate::model::{synthetic_model, ModelConfig};
     use crate::quant::{BpdqConfig, QuantMethod};
+    use std::path::Path;
 
     fn tiny() -> Arc<Model> {
         Arc::new(synthetic_model(
-            &ModelConfig { vocab_size: 20, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 48,
+                max_seq: 32,
+            },
             3,
         ))
     }
@@ -462,6 +605,32 @@ mod tests {
                 max_new: 4,
             })
             .collect()
+    }
+
+    /// Quantize `model` with BPDQ and build (native-on-dequant, LUT)
+    /// engines over the same weights.
+    fn quantized_engine_pair(model: Arc<Model>, group_size: usize) -> (Engine, Engine) {
+        let vocab = model.cfg.vocab_size;
+        let calib: Vec<Vec<u32>> = (0..4)
+            .map(|i| (0..20).map(|t| ((t * 3 + i) % vocab) as u32).collect())
+            .collect();
+        let method = QuantMethod::Bpdq(BpdqConfig {
+            k: 2,
+            group_size,
+            iters: 2,
+            gar: false,
+            ..Default::default()
+        });
+        let qm = crate::model::pipeline::quantize_model(&model, &calib, &method).unwrap();
+        let packed: HashMap<String, BitPlanePacked> = qm
+            .packed
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
+            .collect();
+        let qmodel = Arc::new(qm.model.clone());
+        let native = Engine::new(EngineKind::Native(qmodel.clone())).unwrap();
+        let lut = Engine::new(EngineKind::Lut(LutModel::new(qmodel, packed).unwrap())).unwrap();
+        (native, lut)
     }
 
     #[test]
@@ -491,28 +660,69 @@ mod tests {
     #[test]
     fn lut_engine_matches_native_on_quantized_model() {
         // Quantize with BPDQ, then: native decode over dequantized weights
-        // must equal LUT decode over the packed records.
-        let model = tiny();
-        let calib: Vec<Vec<u32>> =
-            (0..4).map(|i| (0..20).map(|t| ((t * 3 + i) % 20) as u32).collect()).collect();
-        let method = QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 2, gar: false, ..Default::default() });
-        let qm = crate::model::pipeline::quantize_model(&model, &calib, &method).unwrap();
-
-        let packed: HashMap<String, BitPlanePacked> = qm
-            .packed
-            .iter()
-            .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
-            .collect();
-        let qmodel = Arc::new(qm.model.clone());
-        let mut native = Engine::new(EngineKind::Native(qmodel.clone())).unwrap();
-        let mut lut =
-            Engine::new(EngineKind::Lut(LutModel::new(qmodel, packed).unwrap())).unwrap();
-
+        // must equal batched LUT decode over the packed records.
+        let (mut native, mut lut) = quantized_engine_pair(tiny(), 16);
         let rs_native = native.generate_batch(&reqs(2)).unwrap();
         let rs_lut = lut.generate_batch(&reqs(2)).unwrap();
         for (a, b) in rs_native.iter().zip(&rs_lut) {
             assert_eq!(a.tokens, b.tokens);
         }
+    }
+
+    #[test]
+    fn lut_batched_decode_parity_ragged_prompts() {
+        // The fused batched sweep must be token-identical to (a) the
+        // native engine and (b) the LUT engine run one request at a time,
+        // including with ragged prompt lengths and max_new (sessions
+        // leave the batch at different sweeps).
+        let (mut native, mut lut) = quantized_engine_pair(tiny(), 16);
+        let ragged: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: (0..(1 + 2 * i)).map(|t| ((t * 5 + i) % 20) as u32).collect(),
+                max_new: 3 + i,
+            })
+            .collect();
+        let rs_native = native.generate_batch(&ragged).unwrap();
+        let rs_batch = lut.generate_batch(&ragged).unwrap();
+        for (i, (a, b)) in rs_native.iter().zip(&rs_batch).enumerate() {
+            assert_eq!(a.tokens, b.tokens, "native vs lut, request {i}");
+            assert_eq!(b.tokens.len(), ragged[i].max_new, "request {i} length");
+        }
+        for (i, r) in ragged.iter().enumerate() {
+            let single = lut.generate_batch(std::slice::from_ref(r)).unwrap();
+            assert_eq!(single[0].tokens, rs_batch[i].tokens, "B=1 vs batched, request {i}");
+        }
+    }
+
+    #[test]
+    fn capacity_exhaustion_parity() {
+        // prompt + max_new beyond the KV capacity: both engines must
+        // truncate at exactly the same point (capacity comes from the one
+        // shared source, Model::decode_capacity).
+        let model = Arc::new(synthetic_model(
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 48,
+                max_seq: 8, // decode capacity 32
+            },
+            5,
+        ));
+        assert_eq!(model.decode_capacity(), 32);
+        let (mut native, mut lut) = quantized_engine_pair(model, 16);
+        let req = Request {
+            id: 0,
+            prompt: (0..30).map(|t| (t % 20) as u32).collect(),
+            max_new: 10,
+        };
+        let a = native.generate_batch(std::slice::from_ref(&req)).unwrap();
+        let b = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens, "truncation point diverged");
+        assert!(!a[0].tokens.is_empty(), "should have generated something");
+        assert!(a[0].tokens.len() < 10, "capacity must truncate generation");
     }
 
     #[test]
@@ -522,5 +732,39 @@ mod tests {
         let rs = e.generate_batch(&[r]).unwrap();
         // no prompt → no logits to sample from → zero tokens is acceptable
         assert!(rs[0].tokens.len() <= 3);
+    }
+
+    #[test]
+    fn pjrt_batch_matches_single_request() {
+        // PJRT engine parity across batch sizes; exercises the hoisted
+        // (once-per-batch) executable load. Skips without the real PJRT
+        // plugin or the AOT artifacts.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let artifact = dir.join("decode_step.hlo.txt");
+        let ckpt = dir.join("tiny_small.tlm");
+        if !artifact.exists() || !ckpt.exists() {
+            eprintln!("[skip] pjrt artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let model = match TlmFile::load(&ckpt).and_then(|f| Model::from_tlm(&f)) {
+            Ok(m) => Arc::new(m),
+            Err(e) => {
+                eprintln!("[skip] checkpoint unreadable: {e:#}");
+                return;
+            }
+        };
+        let kind = EngineKind::Pjrt { model, artifact, cache_len: 64 };
+        let mut e = match Engine::new(kind) {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!("[skip] PJRT plugin unavailable: {err:#}");
+                return;
+            }
+        };
+        let rs = e.generate_batch(&reqs(2)).unwrap();
+        for (i, r) in reqs(2).iter().enumerate() {
+            let single = e.generate_batch(std::slice::from_ref(r)).unwrap();
+            assert_eq!(single[0].tokens, rs[i].tokens, "request {i}");
+        }
     }
 }

@@ -1,6 +1,9 @@
 //! Serving metrics: queueing delay, time-to-first-token, per-token
-//! decode latency, throughput — the quantities behind Table 3's latency
-//! column and the serving example's report.
+//! decode latency, throughput, and decode-sweep batch occupancy — the
+//! quantities behind Table 3's latency column and the serving example's
+//! report.
+
+use crate::io::json::JsonWriter;
 
 use super::Response;
 use std::sync::{Arc, Mutex};
@@ -13,6 +16,11 @@ struct Inner {
     total_us: Vec<u64>,
     tokens: usize,
     batch_sizes: Vec<usize>,
+    // Fused-sweep occupancy (recorded by the engines): one entry of work
+    // per sweep, `batch` tokens advanced per sweep.
+    decode_sweeps: u64,
+    decode_sweep_tokens: u64,
+    max_decode_batch: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -35,9 +43,51 @@ pub struct LatencySummary {
     pub p50_first_us: u64,
     pub p95_first_us: u64,
     pub p50_queue_us: u64,
+    /// mean number of requests per engine batch (router-level batching)
     pub mean_batch: f64,
+    /// number of fused decode sweeps executed by the engines
+    pub decode_sweeps: u64,
+    /// mean sessions advanced per sweep (engine-level batching — the
+    /// lever the batched LUT-GEMM amortizes the weight fetch over)
+    pub mean_decode_batch: f64,
+    /// largest single fused sweep observed
+    pub max_decode_batch: usize,
     pub us_per_token: f64,
     pub tokens_per_sec: f64,
+}
+
+impl LatencySummary {
+    /// Compact JSON object. Every field is a plain JSON number — the
+    /// summary is constructed so non-finite values cannot appear (see
+    /// `tokens_per_sec` handling in [`Metrics::summary`]).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_object()
+            .key("completed")
+            .int(self.completed as i64)
+            .key("tokens")
+            .int(self.tokens as i64)
+            .key("p50_first_us")
+            .int(self.p50_first_us as i64)
+            .key("p95_first_us")
+            .int(self.p95_first_us as i64)
+            .key("p50_queue_us")
+            .int(self.p50_queue_us as i64)
+            .key("mean_batch")
+            .number(self.mean_batch)
+            .key("decode_sweeps")
+            .int(self.decode_sweeps as i64)
+            .key("mean_decode_batch")
+            .number(self.mean_decode_batch)
+            .key("max_decode_batch")
+            .int(self.max_decode_batch as i64)
+            .key("us_per_token")
+            .number(self.us_per_token)
+            .key("tokens_per_sec")
+            .number(self.tokens_per_sec)
+            .end_object();
+        w.finish()
+    }
 }
 
 impl Metrics {
@@ -55,6 +105,16 @@ impl Metrics {
         m.total_us.push(r.total_us);
         m.tokens += r.tokens.len();
         m.batch_sizes.push(batch_size);
+    }
+
+    /// Record one fused decode sweep advancing `batch` sessions by one
+    /// token each (called by the engines when a metrics handle is
+    /// attached).
+    pub fn record_decode_sweep(&self, batch: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.decode_sweeps += 1;
+        m.decode_sweep_tokens += batch as u64;
+        m.max_decode_batch = m.max_decode_batch.max(batch);
     }
 
     pub fn summary(&self) -> LatencySummary {
@@ -83,12 +143,22 @@ impl Metrics {
             } else {
                 m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
             },
+            decode_sweeps: m.decode_sweeps,
+            mean_decode_batch: if m.decode_sweeps == 0 {
+                0.0
+            } else {
+                m.decode_sweep_tokens as f64 / m.decode_sweeps as f64
+            },
+            max_decode_batch: m.max_decode_batch,
             us_per_token: if m.tokens == 0 {
                 0.0
             } else {
                 total_decode_us as f64 / m.tokens as f64
             },
-            tokens_per_sec: if wall > 0.0 { m.tokens as f64 / wall } else { f64::INFINITY },
+            // A zero wall clock (all completions in one Instant tick, or
+            // a single completion) must NOT produce f64::INFINITY: inf is
+            // unrepresentable in JSON and corrupted the bench reports.
+            tokens_per_sec: if wall > 0.0 { m.tokens as f64 / wall } else { 0.0 },
         }
     }
 }
@@ -121,5 +191,52 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p50_first_us, 0);
+        assert_eq!(s.decode_sweeps, 0);
+        assert_eq!(s.mean_decode_batch, 0.0);
+    }
+
+    #[test]
+    fn zero_wall_time_is_finite() {
+        // A single recorded response gives started == finished, i.e. a
+        // zero wall clock. Regression: this used to report
+        // tokens_per_sec = f64::INFINITY, which is unrepresentable in
+        // JSON and corrupted bench reports.
+        let m = Metrics::new();
+        m.record(&resp(5, 10, 50), 1, 1);
+        let s = m.summary();
+        assert!(s.tokens_per_sec.is_finite(), "tokens_per_sec must be finite");
+        assert_eq!(s.tokens_per_sec, 0.0);
+    }
+
+    #[test]
+    fn summary_is_json_serializable() {
+        let m = Metrics::new();
+        m.record(&resp(3, 10, 30), 1, 2);
+        m.record_decode_sweep(2);
+        let s = m.summary();
+        let json = s.to_json();
+        // All values must be bare JSON numbers: no inf/nan (the JSON
+        // writer stringifies non-finite values, which downstream report
+        // tooling rejects).
+        assert!(!json.contains("inf"), "{json}");
+        assert!(!json.contains("NaN"), "{json}");
+        assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+        for key in ["tokens_per_sec", "mean_decode_batch", "decode_sweeps", "us_per_token"] {
+            assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
+        }
+        // No quoted values: every field in LatencySummary is numeric.
+        assert_eq!(json.matches('"').count(), 2 * 11, "non-numeric value leaked into {json}");
+    }
+
+    #[test]
+    fn decode_sweep_occupancy() {
+        let m = Metrics::new();
+        m.record_decode_sweep(4);
+        m.record_decode_sweep(4);
+        m.record_decode_sweep(1);
+        let s = m.summary();
+        assert_eq!(s.decode_sweeps, 3);
+        assert!((s.mean_decode_batch - 3.0).abs() < 1e-9);
+        assert_eq!(s.max_decode_batch, 4);
     }
 }

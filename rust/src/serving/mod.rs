@@ -18,6 +18,12 @@
 //! The LUT engine is the paper's serving contribution: per-token decode
 //! over *packed bit-planes* (no dequantized weight materialization), so
 //! the memory-bound GEMV reads `k/16`-th of the fp16 bytes (Table 3).
+//! Since the batched-decode refactor, all LUT sessions in a batch are
+//! stepped **together** through a fused sweep (`lut_gemm`): each layer's
+//! packed plane words are gathered once per step and applied to every
+//! active session's LUT, so per-token decode cost falls toward `1/B` of
+//! the weight-fetch bound as the batch fills. The native engine keeps
+//! stepping sessions independently — dense matvecs share nothing.
 
 pub mod batcher;
 pub mod engine;

@@ -77,6 +77,9 @@ impl Router {
                         return;
                     }
                 };
+                // Engines report per-sweep decode batch occupancy into
+                // the shared metrics (mean/max decode batch in summaries).
+                engine.attach_metrics(m.clone());
                 while let Some(batch) = q.next_batch() {
                     let reqs: Vec<Request> = batch.iter().map(|p| p.request.clone()).collect();
                     let t0 = Instant::now();

@@ -1,0 +1,207 @@
+//! Minimal, dependency-free replacement for the `anyhow` crate.
+//!
+//! The offline build environment has no crates.io access, so this vendored
+//! crate provides the API subset the workspace actually uses:
+//!
+//! * [`Error`] — an opaque error value carrying a message and a context
+//!   chain (outermost first);
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a default
+//!   error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * `anyhow!`, `bail!`, `ensure!` macros;
+//! * a blanket `From<E: std::error::Error + Send + Sync + 'static>` so
+//!   `?` converts library errors, preserving their source chains.
+//!
+//! `{:#}` formatting prints the full `outer: inner: …` chain, matching
+//! the real crate's alternate Display.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus a chain of causes, outermost first.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (no source chain).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: c.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        items.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that is
+// what makes this blanket conversion coherent (same trick as the real
+// anyhow crate).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(&e);
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// The format string must be matched as `literal` (not `expr`): an expr
+// fragment forwarded to `format!` is rejected by the compiler ("format
+// argument must be a string literal").
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => { return ::std::result::Result::Err($crate::anyhow!($($t)+)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Error = Err::<(), _>(io_err()).context("loading config").unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(true).unwrap(), 7);
+        let e = inner(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let m = anyhow!("x = {}", 3);
+        assert_eq!(format!("{m}"), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("nope").is_err());
+    }
+}

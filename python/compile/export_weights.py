@@ -1,7 +1,16 @@
 """Write trained JAX params to the `.tlm` format rust loads.
 
 Byte-for-byte mirror of `rust/src/io/tlm.rs` (little-endian, see that
-module for the layout).
+module for the layout). Two header revisions:
+
+* ``TLM1`` — legacy MHA header (6 u32 fields, no ``n_kv_heads``);
+* ``TLM2`` — GQA-aware header (7 u32 fields, ``n_kv_heads`` after
+  ``n_heads``).
+
+Like the rust writer, models with ``n_kv_heads == n_heads`` (or with no
+``n_kv_heads`` in the config at all) serialize as ``TLM1`` so pre-GQA
+consumers keep working; readers accept both and default
+``n_kv_heads = n_heads`` for legacy files.
 """
 
 from __future__ import annotations
@@ -12,6 +21,10 @@ import struct
 import numpy as np
 
 MAGIC = b"TLM1"
+MAGIC_V2 = b"TLM2"
+
+_V1_KEYS = ("vocab_size", "d_model", "n_layers", "n_heads", "d_ff", "max_seq")
+_V2_KEYS = ("vocab_size", "d_model", "n_layers", "n_heads", "n_kv_heads", "d_ff", "max_seq")
 
 
 def write_tlm(path: pathlib.Path, cfg: dict, params: dict) -> None:
@@ -23,10 +36,12 @@ def write_tlm(path: pathlib.Path, cfg: dict, params: dict) -> None:
         assert a.ndim == 2, f"{name}: rank {a.ndim}"
         tensors[name] = a
 
+    n_kv = cfg.get("n_kv_heads", cfg["n_heads"])
+    gqa = n_kv != cfg["n_heads"]
     with open(path, "wb") as f:
-        f.write(MAGIC)
-        for key in ("vocab_size", "d_model", "n_layers", "n_heads", "d_ff", "max_seq"):
-            f.write(struct.pack("<I", cfg[key]))
+        f.write(MAGIC_V2 if gqa else MAGIC)
+        for key in _V2_KEYS if gqa else _V1_KEYS:
+            f.write(struct.pack("<I", cfg[key] if key != "n_kv_heads" else n_kv))
         f.write(struct.pack("<I", len(tensors)))
         for name in sorted(tensors):  # BTreeMap order on the rust side
             a = tensors[name]
@@ -40,9 +55,12 @@ def write_tlm(path: pathlib.Path, cfg: dict, params: dict) -> None:
 def read_tlm(path: pathlib.Path):
     """Reader (round-trip tests + loading checkpoints back for AOT)."""
     with open(path, "rb") as f:
-        assert f.read(4) == MAGIC, "bad magic"
-        keys = ("vocab_size", "d_model", "n_layers", "n_heads", "d_ff", "max_seq")
+        magic = f.read(4)
+        assert magic in (MAGIC, MAGIC_V2), "bad magic"
+        keys = _V2_KEYS if magic == MAGIC_V2 else _V1_KEYS
         cfg = {k: struct.unpack("<I", f.read(4))[0] for k in keys}
+        # Legacy TLM1 headers predate GQA: every head is a KV head.
+        cfg.setdefault("n_kv_heads", cfg["n_heads"])
         (n,) = struct.unpack("<I", f.read(4))
         params = {}
         for _ in range(n):

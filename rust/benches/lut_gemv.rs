@@ -6,7 +6,7 @@
 //! k; LUT beats dequant at every k on memory-bound shapes; and batched
 //! GEMM amortizes the weight fetch so per-token cost falls as B grows
 //! (target: ≥2× over independent GEMVs at B=8).
-use bpdq::benchkit::{bench, black_box, Bench};
+use bpdq::benchkit::{bench, black_box, Bench, JsonReport};
 use bpdq::lut::{dequant_gemv, lut_gemm, lut_gemv, LutScratch};
 use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
 use bpdq::rng::Rng;
@@ -67,6 +67,7 @@ fn main() {
     // (d_model=128, d_ff=344) plus one larger square; the fused kernel
     // gathers each row's plane words once per step instead of B times.
     b.section("batched decode — lut_gemm vs B × lut_gemv (tiny-LM shapes, k=2, g=64)");
+    let mut report = JsonReport::new("lut_gemv", "BENCH_lut_gemv.json");
     for &(d_out, d_in) in &[(128usize, 128usize), (344, 128), (128, 344), (512, 512)] {
         let packed = random_packed(7 + d_out as u64, d_out, d_in, 64, 2);
         let mut rng = Rng::new(11);
@@ -100,7 +101,24 @@ fn main() {
                     gemv_tok / gemm_tok
                 ),
             );
+            report.row(|w| {
+                w.begin_object()
+                    .key("d_out")
+                    .int(d_out as i64)
+                    .key("d_in")
+                    .int(d_in as i64)
+                    .key("batch")
+                    .int(bsz as i64)
+                    .key("gemm_us_per_tok")
+                    .number(gemm_tok)
+                    .key("gemv_us_per_tok")
+                    .number(gemv_tok)
+                    .key("speedup")
+                    .number(gemv_tok / gemm_tok)
+                    .end_object();
+            });
         }
     }
+    report.finish();
     b.finish();
 }

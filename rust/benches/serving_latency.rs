@@ -1,8 +1,12 @@
 //! End-to-end serving bench: router + batcher + engines — decode
 //! latency and throughput per engine kind (the system half of Table 3),
-//! including the batched-LUT scaling axis: the LUT engine is run at
-//! max_batch 1 vs 8 so the fused-sweep amortization (mean decode batch,
-//! reported from the engine metrics) is visible in tok/s.
+//! including the batched-LUT scaling axis (max_batch 1/4/8 so the
+//! fused-sweep amortization is visible in tok/s) and the GQA axis
+//! (n_kv_heads 4 → 1 on the same tiny-LM: KV bytes shrink by exactly
+//! n_heads / n_kv_heads while the fused attention sweep keeps parity).
+//! Emits `BENCH_decode.json` (tokens/sec, sweep occupancy, KV bytes) for
+//! the CI perf-trajectory artifact.
+use bpdq::benchkit::JsonReport;
 use bpdq::io::tlm::TlmFile;
 use bpdq::model::pipeline::quantize_model;
 use bpdq::model::{synthetic_model, Model, ModelConfig};
@@ -13,18 +17,13 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-fn main() {
-    let quick = std::env::var("BPDQ_BENCH_QUICK").is_ok();
-    // Use the trained checkpoint when present, else synthetic weights.
-    let model = match TlmFile::load(Path::new("artifacts/tiny_small.tlm")) {
-        Ok(f) => Model::from_tlm(&f).unwrap(),
-        Err(_) => synthetic_model(&ModelConfig::tiny_small(68), 7),
-    };
-    let model = Arc::new(model);
+/// BPDQ-quantize `model` and return (dequantized model, LUT engine kind).
+fn quantize_for_lut(model: &Arc<Model>) -> (Arc<Model>, EngineKind) {
+    let vocab = model.cfg.vocab_size;
     let calib: Vec<Vec<u32>> =
-        (0..24).map(|i| (0..64).map(|t| ((t * 7 + i * 3) % 68) as u32).collect()).collect();
+        (0..24).map(|i| (0..64).map(|t| ((t * 7 + i * 3) % vocab) as u32).collect()).collect();
     let qm = quantize_model(
-        &model,
+        model,
         &calib,
         &QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 64, ..Default::default() }),
     )
@@ -35,22 +34,41 @@ fn main() {
         .iter()
         .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
         .collect();
-    let lut_kind =
-        || EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap());
+    let kind = EngineKind::Lut(LutModel::new(qmodel.clone(), packed).unwrap());
+    (qmodel, kind)
+}
+
+fn main() {
+    let quick = std::env::var("BPDQ_BENCH_QUICK").is_ok();
+    // Use the trained checkpoint when present, else synthetic weights.
+    let model = match TlmFile::load(Path::new("artifacts/tiny_small.tlm")) {
+        Ok(f) => Model::from_tlm(&f).unwrap(),
+        Err(_) => synthetic_model(&ModelConfig::tiny_small(68), 7),
+    };
+    let model = Arc::new(model);
+    // GQA variant of the same size: 4 query heads sharing 1 kv head — the
+    // KV cache (and its bandwidth) is exactly 4× smaller.
+    let gqa_model =
+        Arc::new(synthetic_model(&ModelConfig::tiny_small(68).with_kv_heads(1), 7));
+    let (qmodel, lut_kind) = quantize_for_lut(&model);
+    let (_gqa_q, gqa_lut_kind) = quantize_for_lut(&gqa_model);
 
     let n_requests = if quick { 8 } else { 32 };
     let max_new = if quick { 4 } else { 12 };
     println!("\n================================================================");
     println!("BENCH serving_latency — {n_requests} requests × {max_new} new tokens");
     println!("================================================================");
-    let runs: Vec<(&str, EngineKind, usize)> = vec![
-        ("native fp32 (fp16 role)", EngineKind::Native(model.clone()), 4),
-        ("native dequantized W2", EngineKind::Native(qmodel.clone()), 4),
-        ("LUT bit-plane W2  B=1", lut_kind(), 1),
-        ("LUT bit-plane W2  B=4", lut_kind(), 4),
-        ("LUT bit-plane W2  B=8", lut_kind(), 8),
+    let runs: Vec<(&str, EngineKind, usize, &Arc<Model>)> = vec![
+        ("native fp32 (fp16 role)", EngineKind::Native(model.clone()), 4, &model),
+        ("native dequantized W2", EngineKind::Native(qmodel.clone()), 4, &qmodel),
+        ("LUT bit-plane W2  B=1", lut_kind.clone(), 1, &qmodel),
+        ("LUT bit-plane W2  B=4", lut_kind.clone(), 4, &qmodel),
+        ("LUT bit-plane W2  B=8", lut_kind.clone(), 8, &qmodel),
+        ("LUT W2 GQA kv=1   B=4", gqa_lut_kind.clone(), 4, &gqa_model),
+        ("LUT W2 GQA kv=1   B=8", gqa_lut_kind.clone(), 8, &gqa_model),
     ];
-    for (name, kind, max_batch) in runs {
+    let mut report = JsonReport::new("serving_latency", "BENCH_decode.json");
+    for (name, kind, max_batch, m) in runs {
         let router = Router::start(
             RouterConfig {
                 n_workers: 1,
@@ -68,18 +86,46 @@ fn main() {
             rx.recv().unwrap();
         }
         let s = router.metrics.summary();
+        let kv_bytes = m.kv_bytes_per_session();
         println!(
             "{name:<26} p50 first {:>8.2} ms   decode {:>8.1} µs/tok   {:>7.1} tok/s   \
-             mean batch {:.1}   decode sweeps {:>5} (mean B {:.1}, max {})",
+             mean batch {:.1}   decode sweeps {:>5} (mean B {:.1}, max {})   KV {:>8} B/session",
             s.p50_first_us as f64 / 1e3,
             s.us_per_token,
             s.tokens_per_sec,
             s.mean_batch,
             s.decode_sweeps,
             s.mean_decode_batch,
-            s.max_decode_batch
+            s.max_decode_batch,
+            kv_bytes
         );
+        let cfg = m.cfg;
+        report.row(|w| {
+            w.begin_object()
+                .key("name")
+                .string(name)
+                .key("max_batch")
+                .int(max_batch as i64)
+                .key("n_heads")
+                .int(cfg.n_heads as i64)
+                .key("n_kv_heads")
+                .int(cfg.n_kv_heads as i64)
+                .key("tokens_per_sec")
+                .number(s.tokens_per_sec)
+                .key("us_per_token")
+                .number(s.us_per_token)
+                .key("decode_sweeps")
+                .int(s.decode_sweeps as i64)
+                .key("mean_decode_batch")
+                .number(s.mean_decode_batch)
+                .key("max_decode_batch")
+                .int(s.max_decode_batch as i64)
+                .key("kv_bytes_per_session")
+                .int(kv_bytes as i64)
+                .end_object();
+        });
         router.shutdown();
     }
+    report.finish();
     println!("\nBENCH serving_latency done");
 }

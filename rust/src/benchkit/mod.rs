@@ -6,7 +6,9 @@
 //! (`table1_quality` etc.) use [`Bench::section`] for structured output
 //! that mirrors the paper's tables row-for-row.
 
+use crate::io::json::JsonWriter;
 use std::hint::black_box as bb;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Re-export so benches don't import std::hint directly.
@@ -125,6 +127,43 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench artifact (`BENCH_*.json`): one object
+/// `{"bench": <name>, "rows": [ ... ]}` written at [`JsonReport::finish`].
+/// CI uploads these so the decode perf trajectory (tokens/sec, sweep
+/// occupancy, KV bytes) is tracked per commit instead of scraped from
+/// bench stdout.
+pub struct JsonReport {
+    w: JsonWriter,
+    path: PathBuf,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str, path: &str) -> Self {
+        let mut w = JsonWriter::new();
+        w.begin_object().key("bench").string(bench).key("rows").begin_array();
+        Self { w, path: PathBuf::from(path) }
+    }
+
+    /// Append one row: the closure writes a full JSON value (typically
+    /// `begin_object() … end_object()`) into the open `rows` array.
+    pub fn row<F: FnOnce(&mut JsonWriter)>(&mut self, f: F) -> &mut Self {
+        f(&mut self.w);
+        self
+    }
+
+    /// Close the document and write it; prints the path so the artifact
+    /// is discoverable from bench stdout. Panics if the write fails —
+    /// the file is the bench's contract with CI, and a silent miss would
+    /// only surface one step later as a confusing upload-artifact error.
+    pub fn finish(mut self) {
+        self.w.end_array().end_object();
+        let json = self.w.finish();
+        std::fs::write(&self.path, &json)
+            .unwrap_or_else(|e| panic!("failed to write {}: {e}", self.path.display()));
+        println!("\nwrote {}", self.path.display());
+    }
+}
+
 /// Format a duration human-readably.
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -153,6 +192,25 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.median <= s.p95);
         assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn json_report_writes_valid_document() {
+        let path = std::env::temp_dir().join("bpdq_bench_report_test.json");
+        let mut rep = JsonReport::new("unit", path.to_str().unwrap());
+        rep.row(|w| {
+            w.begin_object().key("name").string("a").key("tok_s").number(12.5).end_object();
+        });
+        rep.row(|w| {
+            w.begin_object().key("name").string("b").key("tok_s").number(0.0).end_object();
+        });
+        rep.finish();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            got,
+            r#"{"bench":"unit","rows":[{"name":"a","tok_s":12.5},{"name":"b","tok_s":0}]}"#
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -198,7 +198,15 @@ mod tests {
 
     fn tiny() -> Model {
         synthetic_model(
-            &ModelConfig { vocab_size: 68, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 24, max_seq: 64 },
+            &ModelConfig {
+                vocab_size: 68,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 24,
+                max_seq: 64,
+            },
             11,
         )
     }

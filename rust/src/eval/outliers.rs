@@ -90,7 +90,15 @@ mod tests {
     #[test]
     fn stats_shape_and_positivity() {
         let m = synthetic_model(
-            &ModelConfig { vocab_size: 20, d_model: 32, n_layers: 3, n_heads: 2, d_ff: 48, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 32,
+                n_layers: 3,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 48,
+                max_seq: 32,
+            },
             3,
         );
         let s = activation_outliers(&m, &probes());
@@ -104,7 +112,15 @@ mod tests {
     #[test]
     fn identical_model_zero_delta() {
         let m = synthetic_model(
-            &ModelConfig { vocab_size: 20, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 24,
+                max_seq: 32,
+            },
             4,
         );
         let a = activation_outliers(&m, &probes());
@@ -116,7 +132,15 @@ mod tests {
     #[test]
     fn destroying_weights_changes_stats() {
         let m = synthetic_model(
-            &ModelConfig { vocab_size: 20, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 48,
+                max_seq: 32,
+            },
             5,
         );
         let base = activation_outliers(&m, &probes());

@@ -1,17 +1,27 @@
 //! `.tlm` — the tiny-LM weight interchange format.
 //!
 //! Written by `python/compile/export_weights.py` after training, read by
-//! [`crate::model`]. Layout (all little-endian):
+//! [`crate::model`]. Two header revisions (all little-endian):
 //!
 //! ```text
-//! magic   b"TLM1"
+//! magic   b"TLM1"                                        (legacy, MHA)
 //! u32 ×6  vocab_size, d_model, n_layers, n_heads, d_ff, max_seq
+//!
+//! magic   b"TLM2"                                        (GQA-aware)
+//! u32 ×7  vocab_size, d_model, n_layers, n_heads, n_kv_heads, d_ff, max_seq
+//!
+//! then, for either revision:
 //! u32     n_tensors
 //! repeat n_tensors:
 //!   str   name          (u32 length + utf-8)
 //!   u32   rows, cols    (cols == 1 for vectors)
 //!   f32[] rows*cols     (row-major)
 //! ```
+//!
+//! Reading a `TLM1` file defaults `n_kv_heads = n_heads` (every pre-GQA
+//! checkpoint is plain multi-head attention). Writing emits `TLM1` when
+//! `n_kv_heads == n_heads` — byte-identical to the legacy format — and
+//! `TLM2` only when the model actually uses grouped-query attention.
 
 use super::{read_f32s, read_str, read_u32, write_f32s, write_str, write_u32};
 use crate::tensor::Matrix;
@@ -21,6 +31,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 pub const MAGIC: &[u8; 4] = b"TLM1";
+pub const MAGIC_V2: &[u8; 4] = b"TLM2";
 
 /// Model hyper-parameters carried in the header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +40,10 @@ pub struct TlmHeader {
     pub d_model: u32,
     pub n_layers: u32,
     pub n_heads: u32,
+    /// Number of K/V heads (grouped-query attention). Equal to `n_heads`
+    /// for MHA; a proper divisor of it shrinks the KV cache by
+    /// `n_heads / n_kv_heads`.
+    pub n_kv_heads: u32,
     pub d_ff: u32,
     pub max_seq: u32,
 }
@@ -56,16 +71,26 @@ impl TlmFile {
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
-        w.write_all(MAGIC)?;
-        for v in [
-            self.header.vocab_size,
-            self.header.d_model,
-            self.header.n_layers,
-            self.header.n_heads,
-            self.header.d_ff,
-            self.header.max_seq,
-        ] {
-            write_u32(w, v)?;
+        let h = &self.header;
+        if h.n_kv_heads == h.n_heads {
+            // MHA models stay byte-identical to the legacy format.
+            w.write_all(MAGIC)?;
+            for v in [h.vocab_size, h.d_model, h.n_layers, h.n_heads, h.d_ff, h.max_seq] {
+                write_u32(w, v)?;
+            }
+        } else {
+            w.write_all(MAGIC_V2)?;
+            for v in [
+                h.vocab_size,
+                h.d_model,
+                h.n_layers,
+                h.n_heads,
+                h.n_kv_heads,
+                h.d_ff,
+                h.max_seq,
+            ] {
+                write_u32(w, v)?;
+            }
         }
         write_u32(w, self.tensors.len() as u32)?;
         for (name, m) in &self.tensors {
@@ -80,14 +105,25 @@ impl TlmFile {
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("bad magic {magic:?}: not a .tlm file");
-        }
+        let v2 = if &magic == MAGIC {
+            false
+        } else if &magic == MAGIC_V2 {
+            true
+        } else {
+            bail!("bad magic {magic:?}: not a .tlm file")
+        };
+        let vocab_size = read_u32(r)?;
+        let d_model = read_u32(r)?;
+        let n_layers = read_u32(r)?;
+        let n_heads = read_u32(r)?;
+        // Legacy TLM1 headers predate GQA: every head is a KV head.
+        let n_kv_heads = if v2 { read_u32(r)? } else { n_heads };
         let header = TlmHeader {
-            vocab_size: read_u32(r)?,
-            d_model: read_u32(r)?,
-            n_layers: read_u32(r)?,
-            n_heads: read_u32(r)?,
+            vocab_size,
+            d_model,
+            n_layers,
+            n_heads,
+            n_kv_heads,
             d_ff: read_u32(r)?,
             max_seq: read_u32(r)?,
         };
@@ -140,6 +176,7 @@ mod tests {
             d_model: 16,
             n_layers: 2,
             n_heads: 2,
+            n_kv_heads: 2,
             d_ff: 32,
             max_seq: 64,
         };
@@ -154,11 +191,44 @@ mod tests {
         let f = sample();
         let mut buf = Vec::new();
         f.write_to(&mut buf).unwrap();
+        // MHA (n_kv_heads == n_heads) serializes as legacy TLM1.
+        assert_eq!(&buf[..4], MAGIC);
         let g = TlmFile::read_from(&mut &buf[..]).unwrap();
         assert_eq!(g.header, f.header);
         assert_eq!(g.tensors.len(), 2);
         assert_eq!(g.get("embed").unwrap().row(1), &[4., 5., 6.]);
         assert_eq!(g.n_params(), 6 + 16);
+    }
+
+    #[test]
+    fn gqa_header_roundtrip_uses_v2() {
+        let mut f = sample();
+        f.header.n_heads = 4;
+        f.header.n_kv_heads = 2;
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        assert_eq!(&buf[..4], MAGIC_V2);
+        let g = TlmFile::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(g.header, f.header);
+        assert_eq!(g.header.n_kv_heads, 2);
+        assert_eq!(g.get("embed").unwrap().row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn legacy_header_defaults_kv_heads() {
+        // Hand-build a TLM1 byte stream (no n_kv_heads field): reading it
+        // must default n_kv_heads = n_heads.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        for v in [68u32, 16, 2, 4, 32, 64] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&0u32.to_le_bytes()); // n_tensors
+        let g = TlmFile::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(g.header.n_heads, 4);
+        assert_eq!(g.header.n_kv_heads, 4);
+        assert_eq!(g.header.d_ff, 32);
+        assert_eq!(g.header.max_seq, 64);
     }
 
     #[test]

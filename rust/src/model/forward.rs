@@ -2,8 +2,9 @@
 //! incremental KV-cache decode.
 
 use super::{rmsnorm, silu, softmax, Model, ROPE_BASE};
-use crate::tensor::{matmul_transb, matvec, Matrix};
+use crate::tensor::{axpy, dot, matmul_transb, matvec, Matrix};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Captured per-linear input activations for one block (rows = positions).
 /// Keyed by the linear name ("wq", "wo", "w1", …). Note wq/wk/wv share
@@ -32,7 +33,7 @@ impl Capture {
 }
 
 /// Precomputed RoPE tables for a range of positions.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct Rope {
     cos: Matrix, // seq × hd/2
     sin: Matrix,
@@ -92,10 +93,12 @@ impl Model {
         let seq = hidden.rows();
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
+        let nkv = self.cfg.n_kv_heads;
         let hd = self.cfg.head_dim();
+        let group = self.cfg.kv_group();
         let scale = 1.0 / (hd as f32).sqrt();
 
-        // ---- attention ----
+        // ---- attention (grouped-query: `group` q heads per kv head) ----
         let mut normed = Matrix::zeros(seq, d);
         for t in 0..seq {
             rmsnorm(hidden.row(t), &lw.norm1, normed.row_mut(t));
@@ -103,12 +106,14 @@ impl Model {
         if let Some(c) = capture.as_deref_mut() {
             c.inputs.insert("attn_in", normed.clone());
         }
-        let mut q = matmul_transb(&normed, &lw.wq);
-        let mut k = matmul_transb(&normed, &lw.wk);
-        let v = matmul_transb(&normed, &lw.wv);
+        let mut q = matmul_transb(&normed, &lw.wq); // seq × d_model
+        let mut k = matmul_transb(&normed, &lw.wk); // seq × kv_dim
+        let v = matmul_transb(&normed, &lw.wv); // seq × kv_dim
         for t in 0..seq {
             for h in 0..nh {
                 rope.apply(&mut q.row_mut(t)[h * hd..(h + 1) * hd], t);
+            }
+            for h in 0..nkv {
                 rope.apply(&mut k.row_mut(t)[h * hd..(h + 1) * hd], t);
             }
         }
@@ -117,23 +122,21 @@ impl Model {
         let mut scores = vec![0.0f32; seq];
         for h in 0..nh {
             let o0 = h * hd;
+            let k0 = (h / group) * hd;
             for t in 0..seq {
                 let qrow = &q.row(t)[o0..o0 + hd];
                 for (u, sc) in scores[..=t].iter_mut().enumerate() {
-                    let krow = &k.row(u)[o0..o0 + hd];
-                    *sc = crate::tensor::dot(qrow, krow) * scale;
+                    let krow = &k.row(u)[k0..k0 + hd];
+                    *sc = dot(qrow, krow) * scale;
                 }
                 softmax(&mut scores[..=t]);
-                let orow = attn_out.row_mut(t);
+                let orow = &mut attn_out.row_mut(t)[o0..o0 + hd];
                 for u in 0..=t {
                     let w = scores[u];
                     if w < 1e-9 {
                         continue;
                     }
-                    let vrow = &v.row(u)[o0..o0 + hd];
-                    for i in 0..hd {
-                        orow[o0 + i] += w * vrow[i];
-                    }
+                    axpy(w, &v.row(u)[k0..k0 + hd], orow);
                 }
             }
         }
@@ -193,24 +196,101 @@ impl Model {
     }
 }
 
+/// One layer's K (or V) cache in **head-major** layout: a contiguous
+/// `cap × head_dim` strip per kv head (`data[kvh][pos][i]`). Each head's
+/// score pass is then one dot-product sweep over a contiguous strip and
+/// the AV pass a run of contiguous [`axpy`]s — the vectorizable shape the
+/// old `(pos × d_model)` row-major cache couldn't offer once heads were
+/// strided.
+pub struct LayerKv {
+    data: Vec<f32>,
+    cap: usize,
+    hd: usize,
+    n_kv: usize,
+}
+
+impl LayerKv {
+    pub fn new(n_kv: usize, cap: usize, hd: usize) -> Self {
+        Self { data: vec![0.0; n_kv * cap * hd], cap, hd, n_kv }
+    }
+
+    /// The first `len` cached rows of kv head `kvh`, contiguous.
+    #[inline]
+    pub fn strip(&self, kvh: usize, len: usize) -> &[f32] {
+        debug_assert!(kvh < self.n_kv && len <= self.cap);
+        let o = kvh * self.cap * self.hd;
+        &self.data[o..o + len * self.hd]
+    }
+
+    /// Scatter one kv_dim-wide projection row into the per-head strips at
+    /// position `pos`.
+    #[inline]
+    pub fn store(&mut self, pos: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.n_kv * self.hd);
+        for kvh in 0..self.n_kv {
+            let o = (kvh * self.cap + pos) * self.hd;
+            self.data[o..o + self.hd].copy_from_slice(&row[kvh * self.hd..(kvh + 1) * self.hd]);
+        }
+    }
+
+    /// Copy of the live `pos`-row prefix: per head one contiguous block
+    /// copy (plus zero-fill of the never-read tail) — no full-capacity
+    /// zero-then-row-copy pass.
+    pub fn fork_prefix(&self, pos: usize) -> Self {
+        let mut data = Vec::with_capacity(self.data.len());
+        for kvh in 0..self.n_kv {
+            let o = kvh * self.cap * self.hd;
+            data.extend_from_slice(&self.data[o..o + pos * self.hd]);
+            data.resize(o + self.cap * self.hd, 0.0);
+        }
+        Self { data, cap: self.cap, hd: self.hd, n_kv: self.n_kv }
+    }
+}
+
+/// Score/softmax/AV for one query head over head-major K/V strips of
+/// `t + 1 = scores.len()` live positions: `out += softmax(K q · scale) V`.
+/// Shared by [`DecodeState::step`] and the serving engines' fused sweep.
+#[inline]
+pub fn attend_head(
+    q_h: &[f32],
+    kstrip: &[f32],
+    vstrip: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let hd = q_h.len();
+    for (u, sc) in scores.iter_mut().enumerate() {
+        *sc = dot(q_h, &kstrip[u * hd..(u + 1) * hd]) * scale;
+    }
+    softmax(scores);
+    for (u, &w) in scores.iter().enumerate() {
+        if w < 1e-9 {
+            continue;
+        }
+        axpy(w, &vstrip[u * hd..(u + 1) * hd], out);
+    }
+}
+
 /// Incremental KV-cache decode (one token at a time).
 pub struct DecodeState {
-    /// per layer: cached K and V, each (pos × d_model) in head layout
-    k: Vec<Matrix>,
-    v: Vec<Matrix>,
+    /// per layer: head-major K and V caches (see [`LayerKv`])
+    k: Vec<LayerKv>,
+    v: Vec<LayerKv>,
     pos: usize,
-    rope: Rope,
+    rope: Arc<Rope>,
     max_seq: usize,
 }
 
 impl DecodeState {
     pub fn new(model: &Model) -> Self {
         let cap = model.decode_capacity();
+        let (nkv, hd) = (model.cfg.n_kv_heads, model.cfg.head_dim());
         Self {
-            k: (0..model.cfg.n_layers).map(|_| Matrix::zeros(cap, model.cfg.d_model)).collect(),
-            v: (0..model.cfg.n_layers).map(|_| Matrix::zeros(cap, model.cfg.d_model)).collect(),
+            k: (0..model.cfg.n_layers).map(|_| LayerKv::new(nkv, cap, hd)).collect(),
+            v: (0..model.cfg.n_layers).map(|_| LayerKv::new(nkv, cap, hd)).collect(),
             pos: 0,
-            rope: Rope::new(cap, model.cfg.head_dim()),
+            rope: model.rope(),
             max_seq: cap,
         }
     }
@@ -229,71 +309,61 @@ impl DecodeState {
         self.pos = 0;
     }
 
-    /// Cheap branch-point copy: clones only the `pos` live KV rows (the
+    /// Cheap branch-point copy: clones only the `pos × kv_dim` live
+    /// prefix per layer — contiguous block copies in the head-major
+    /// layout, no full-capacity zeroing — and shares the rope table (the
     /// prefix-cache trick behind fast multiple-choice scoring — score N
     /// continuations against one shared prompt prefix).
     pub fn fork(&self) -> DecodeState {
-        let cap = self.max_seq;
-        let mut k = Vec::with_capacity(self.k.len());
-        let mut v = Vec::with_capacity(self.v.len());
-        for (kl, vl) in self.k.iter().zip(&self.v) {
-            let d = kl.cols();
-            let mut nk = Matrix::zeros(cap, d);
-            let mut nv = Matrix::zeros(cap, d);
-            for t in 0..self.pos {
-                nk.row_mut(t).copy_from_slice(kl.row(t));
-                nv.row_mut(t).copy_from_slice(vl.row(t));
-            }
-            k.push(nk);
-            v.push(nv);
+        DecodeState {
+            k: self.k.iter().map(|kl| kl.fork_prefix(self.pos)).collect(),
+            v: self.v.iter().map(|vl| vl.fork_prefix(self.pos)).collect(),
+            pos: self.pos,
+            rope: self.rope.clone(),
+            max_seq: self.max_seq,
         }
-        DecodeState { k, v, pos: self.pos, rope: self.rope.clone(), max_seq: cap }
     }
 
     /// Feed one token; returns the logits for the next-token distribution.
     pub fn step(&mut self, model: &Model, token: u32) -> Vec<f32> {
         assert!(self.pos < self.max_seq, "KV cache exhausted");
         let cfg = &model.cfg;
-        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let (d, nh, nkv, hd) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let group = cfg.kv_group();
         let scale = 1.0 / (hd as f32).sqrt();
         let t = self.pos;
 
         let id = (token as usize).min(cfg.vocab_size - 1);
         let mut h: Vec<f32> = model.embed.row(id).to_vec();
         let mut normed = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; t + 1];
 
         for (l, lw) in model.layers.iter().enumerate() {
             rmsnorm(&h, &lw.norm1, &mut normed);
-            let mut q = matvec(&lw.wq, &normed);
-            let mut kx = matvec(&lw.wk, &normed);
-            let vx = matvec(&lw.wv, &normed);
+            let mut q = matvec(&lw.wq, &normed); // d_model
+            let mut kx = matvec(&lw.wk, &normed); // kv_dim
+            let vx = matvec(&lw.wv, &normed); // kv_dim
             for hh in 0..nh {
                 self.rope.apply(&mut q[hh * hd..(hh + 1) * hd], t);
+            }
+            for hh in 0..nkv {
                 self.rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
             }
-            self.k[l].row_mut(t).copy_from_slice(&kx);
-            self.v[l].row_mut(t).copy_from_slice(&vx);
+            self.k[l].store(t, &kx);
+            self.v[l].store(t, &vx);
 
             let mut attn = vec![0.0f32; d];
-            let mut scores = vec![0.0f32; t + 1];
             for hh in 0..nh {
                 let o0 = hh * hd;
-                for u in 0..=t {
-                    scores[u] =
-                        crate::tensor::dot(&q[o0..o0 + hd], &self.k[l].row(u)[o0..o0 + hd])
-                            * scale;
-                }
-                softmax(&mut scores[..=t]);
-                for u in 0..=t {
-                    let w = scores[u];
-                    if w < 1e-9 {
-                        continue;
-                    }
-                    let vrow = &self.v[l].row(u)[o0..o0 + hd];
-                    for i in 0..hd {
-                        attn[o0 + i] += w * vrow[i];
-                    }
-                }
+                let kvh = hh / group;
+                attend_head(
+                    &q[o0..o0 + hd],
+                    self.k[l].strip(kvh, t + 1),
+                    self.v[l].strip(kvh, t + 1),
+                    scale,
+                    &mut scores,
+                    &mut attn[o0..o0 + hd],
+                );
             }
             let proj = matvec(&lw.wo, &attn);
             for (hi, p) in h.iter_mut().zip(&proj) {
@@ -310,8 +380,9 @@ impl DecodeState {
             }
         }
         self.pos += 1;
-        rmsnorm(&h.clone(), &model.norm_f, &mut h);
-        matvec(&model.lm_head, &h)
+        // Final norm into the scratch buffer — no defensive h.clone().
+        rmsnorm(&h, &model.norm_f, &mut normed);
+        matvec(&model.lm_head, &normed)
     }
 }
 
@@ -353,8 +424,22 @@ mod tests {
     use crate::model::{synthetic_model, ModelConfig};
 
     fn tiny() -> Model {
+        tiny_gqa(2)
+    }
+
+    /// 4-head tiny model with `n_kv_heads` kv heads (4 = MHA, 2 = GQA,
+    /// 1 = MQA).
+    fn tiny_gqa(n_kv_heads: usize) -> Model {
         synthetic_model(
-            &ModelConfig { vocab_size: 20, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads,
+                d_ff: 24,
+                max_seq: 32,
+            },
             42,
         )
     }
@@ -370,20 +455,53 @@ mod tests {
     #[test]
     fn decode_matches_full_forward() {
         // The KV-cache path must agree with the batch path exactly
-        // (up to f32 accumulation order).
-        let m = tiny();
-        let tokens = [3u32, 7, 1, 12, 5, 9];
-        let full = m.forward_full(&tokens);
-        let mut st = m.decode_state();
-        for (t, &tok) in tokens.iter().enumerate() {
-            let logits = st.step(&m, tok);
-            for v in 0..m.cfg.vocab_size {
-                let a = full.get(t, v);
-                let b = logits[v];
-                assert!(
-                    (a - b).abs() < 1e-3 * (1.0 + a.abs()),
-                    "pos {t} vocab {v}: {a} vs {b}"
-                );
+        // (up to f32 accumulation order) — for MHA, GQA, and MQA.
+        for n_kv in [1usize, 2, 4] {
+            let m = tiny_gqa(n_kv);
+            let tokens = [3u32, 7, 1, 12, 5, 9];
+            let full = m.forward_full(&tokens);
+            let mut st = m.decode_state();
+            for (t, &tok) in tokens.iter().enumerate() {
+                let logits = st.step(&m, tok);
+                for v in 0..m.cfg.vocab_size {
+                    let a = full.get(t, v);
+                    let b = logits[v];
+                    assert!(
+                        (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                        "n_kv {n_kv} pos {t} vocab {v}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_changes_attention_but_stays_finite() {
+        // Fewer kv heads is a different function (shared K/V), not a
+        // reparameterization — outputs must differ from MHA yet be finite.
+        let toks = [3u32, 7, 1, 12];
+        let mha = tiny_gqa(4).forward_full(&toks);
+        let mqa = tiny_gqa(1).forward_full(&toks);
+        assert!(mqa.data().iter().all(|v| v.is_finite()));
+        assert!(mha.fro_dist(&mqa) > 1e-6);
+    }
+
+    #[test]
+    fn fork_preserves_live_prefix() {
+        for n_kv in [1usize, 2, 4] {
+            let m = tiny_gqa(n_kv);
+            let prompt = [3u32, 7, 1];
+            let mut st = m.decode_state();
+            for &t in &prompt {
+                let _ = st.step(&m, t);
+            }
+            // continue on a fork vs. on the original: identical logits
+            let mut f = st.fork();
+            assert_eq!(f.pos(), st.pos());
+            let a = f.step(&m, 9);
+            let b = st.step(&m, 9);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6, "n_kv {n_kv}");
             }
         }
     }

@@ -5,7 +5,10 @@
 //!
 //! * token embedding (no scale), learned absolute none — positions come
 //!   from RoPE (half-rotation / "rotate_half" convention, base 10000);
-//! * per block: RMSNorm(eps 1e-5) → MHA (wq,wk,wv,wo; causal) →
+//! * per block: RMSNorm(eps 1e-5) → attention (wq,wk,wv,wo; causal;
+//!   grouped-query when `n_kv_heads < n_heads` — wk/wv project to
+//!   `kv_dim = n_kv_heads × head_dim` and each group of
+//!   `n_heads / n_kv_heads` query heads shares one K/V head) →
 //!   residual → RMSNorm → SwiGLU MLP (w1=up, w3=gate, w2=down) → residual;
 //! * final RMSNorm → lm_head (untied).
 //!
@@ -24,12 +27,13 @@ mod forward;
 pub mod pipeline;
 mod synth;
 
-pub use forward::{argmax, greedy_generate, Capture, DecodeState, Rope};
+pub use forward::{argmax, attend_head, greedy_generate, Capture, DecodeState, LayerKv, Rope};
 pub use synth::{synthetic_checkpoint, synthetic_model};
 
 use crate::io::tlm::{TlmFile, TlmHeader};
 use crate::tensor::Matrix;
 use anyhow::{ensure, Result};
+use std::sync::{Arc, OnceLock};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelConfig {
@@ -37,6 +41,10 @@ pub struct ModelConfig {
     pub d_model: usize,
     pub n_layers: usize,
     pub n_heads: usize,
+    /// Number of K/V heads (grouped-query attention). `n_kv_heads ==
+    /// n_heads` is plain MHA; a proper divisor shrinks wk/wv and every KV
+    /// cache by `n_heads / n_kv_heads`.
+    pub n_kv_heads: usize,
     pub d_ff: usize,
     pub max_seq: usize,
 }
@@ -46,12 +54,31 @@ impl ModelConfig {
         self.d_model / self.n_heads
     }
 
+    /// Width of the K/V projections and of one cached KV row:
+    /// `n_kv_heads × head_dim`.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Query heads sharing each K/V head.
+    pub fn kv_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Same config with `n_kv_heads` overridden (GQA variants of the
+    /// stock tiny-LM sizes for tests and benches).
+    pub fn with_kv_heads(mut self, n_kv_heads: usize) -> Self {
+        self.n_kv_heads = n_kv_heads;
+        self
+    }
+
     pub fn from_header(h: &TlmHeader) -> Self {
         Self {
             vocab_size: h.vocab_size as usize,
             d_model: h.d_model as usize,
             n_layers: h.n_layers as usize,
             n_heads: h.n_heads as usize,
+            n_kv_heads: h.n_kv_heads as usize,
             d_ff: h.d_ff as usize,
             max_seq: h.max_seq as usize,
         }
@@ -61,11 +88,27 @@ impl ModelConfig {
     /// 0.8M params, "large" ≈ 3.4M params) — stand-ins for the paper's
     /// model-size axis (DESIGN.md §3).
     pub fn tiny_small(vocab_size: usize) -> Self {
-        Self { vocab_size, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 344, max_seq: 256 }
+        Self {
+            vocab_size,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 4,
+            d_ff: 344,
+            max_seq: 256,
+        }
     }
 
     pub fn tiny_large(vocab_size: usize) -> Self {
-        Self { vocab_size, d_model: 256, n_layers: 6, n_heads: 8, d_ff: 688, max_seq: 256 }
+        Self {
+            vocab_size,
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 8,
+            n_kv_heads: 8,
+            d_ff: 688,
+            max_seq: 256,
+        }
     }
 }
 
@@ -75,9 +118,13 @@ pub const BLOCK_LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "w1", "w3", "w2"];
 #[derive(Clone, Debug)]
 pub struct LayerWeights {
     pub norm1: Vec<f32>,
+    /// query projection (d_model × d_model)
     pub wq: Matrix,
+    /// key projection (kv_dim × d_model)
     pub wk: Matrix,
+    /// value projection (kv_dim × d_model)
     pub wv: Matrix,
+    /// output projection (d_model × d_model)
     pub wo: Matrix,
     pub norm2: Vec<f32>,
     /// up projection (d_ff × d_model)
@@ -125,6 +172,10 @@ pub struct Model {
     pub norm_f: Vec<f32>,
     /// vocab × d_model
     pub lm_head: Matrix,
+    /// Lazily-built decode RoPE table, shared by every [`DecodeState`]
+    /// and LUT session of this model (built once per model, not per
+    /// session / fork).
+    rope: OnceLock<Arc<Rope>>,
 }
 
 pub const RMS_EPS: f32 = 1e-5;
@@ -135,6 +186,13 @@ impl Model {
     pub fn from_tlm(f: &TlmFile) -> Result<Self> {
         let cfg = ModelConfig::from_header(&f.header);
         ensure!(cfg.d_model % cfg.n_heads == 0, "d_model must divide n_heads");
+        ensure!(cfg.n_kv_heads > 0, "n_kv_heads must be positive");
+        ensure!(
+            cfg.n_heads % cfg.n_kv_heads == 0,
+            "n_kv_heads ({}) must divide n_heads ({})",
+            cfg.n_kv_heads,
+            cfg.n_heads
+        );
         let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
             let m = f.get(name)?;
             ensure!(
@@ -150,13 +208,14 @@ impl Model {
             Ok(m.data().to_vec())
         };
         let (v, d, ff) = (cfg.vocab_size, cfg.d_model, cfg.d_ff);
+        let kd = cfg.kv_dim();
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             layers.push(LayerWeights {
                 norm1: vecr(&format!("l{l}.norm1"), d)?,
                 wq: mat(&format!("l{l}.wq"), d, d)?,
-                wk: mat(&format!("l{l}.wk"), d, d)?,
-                wv: mat(&format!("l{l}.wv"), d, d)?,
+                wk: mat(&format!("l{l}.wk"), kd, d)?,
+                wv: mat(&format!("l{l}.wv"), kd, d)?,
                 wo: mat(&format!("l{l}.wo"), d, d)?,
                 norm2: vecr(&format!("l{l}.norm2"), d)?,
                 w1: mat(&format!("l{l}.w1"), ff, d)?,
@@ -170,6 +229,7 @@ impl Model {
             layers,
             norm_f: vecr("norm_f", d)?,
             lm_head: mat("lm_head", v, d)?,
+            rope: OnceLock::new(),
         })
     }
 
@@ -181,6 +241,7 @@ impl Model {
             d_model: c.d_model as u32,
             n_layers: c.n_layers as u32,
             n_heads: c.n_heads as u32,
+            n_kv_heads: c.n_kv_heads as u32,
             d_ff: c.d_ff as u32,
             max_seq: c.max_seq as u32,
         };
@@ -204,7 +265,9 @@ impl Model {
 
     pub fn n_params(&self) -> usize {
         let c = &self.cfg;
-        let per_layer = 2 * c.d_model + 4 * c.d_model * c.d_model + 3 * c.d_model * c.d_ff;
+        // wq + wo are d×d; wk + wv shrink to kv_dim×d under GQA.
+        let attn = 2 * c.d_model * c.d_model + 2 * c.kv_dim() * c.d_model;
+        let per_layer = 2 * c.d_model + attn + 3 * c.d_model * c.d_ff;
         c.vocab_size * c.d_model * 2 + c.d_model + c.n_layers * per_layer
     }
 
@@ -220,6 +283,21 @@ impl Model {
     /// on truncation points or KV memory.
     pub fn decode_capacity(&self) -> usize {
         self.cfg.max_seq * 4
+    }
+
+    /// KV bytes one decode session allocates:
+    /// `n_layers × cap × 2 × kv_dim × 4` bytes (K and V, f32). Under GQA
+    /// this is exactly `n_heads / n_kv_heads` smaller than the MHA cache.
+    pub fn kv_bytes_per_session(&self) -> usize {
+        self.cfg.n_layers * self.decode_capacity() * 2 * self.cfg.kv_dim() * 4
+    }
+
+    /// The decode RoPE table for this model, built once on first use and
+    /// shared (`Arc`) by every decode session and fork.
+    pub fn rope(&self) -> Arc<Rope> {
+        self.rope
+            .get_or_init(|| Arc::new(Rope::new(self.decode_capacity(), self.cfg.head_dim())))
+            .clone()
     }
 }
 
@@ -308,5 +386,43 @@ mod tests {
         let ckpt = synthetic_checkpoint(&ModelConfig::tiny_small(68), 8);
         let m = Model::from_tlm(&ckpt).unwrap();
         assert_eq!(m.n_params(), ckpt.n_params());
+    }
+
+    #[test]
+    fn gqa_roundtrip_and_param_count() {
+        let cfg = ModelConfig::tiny_small(68).with_kv_heads(2);
+        let ckpt = synthetic_checkpoint(&cfg, 11);
+        let m = Model::from_tlm(&ckpt).unwrap();
+        assert_eq!(m.cfg.kv_dim(), 64); // 2 kv heads × head_dim 32
+        assert_eq!(m.layers[0].wk.shape(), (64, 128));
+        assert_eq!(m.layers[0].wv.shape(), (64, 128));
+        assert_eq!(m.layers[0].wq.shape(), (128, 128));
+        assert_eq!(m.n_params(), ckpt.n_params());
+        let back = m.to_tlm();
+        let m2 = Model::from_tlm(&back).unwrap();
+        assert_eq!(m2.cfg, m.cfg);
+        assert_eq!(m.layers[1].wk, m2.layers[1].wk);
+    }
+
+    #[test]
+    fn kv_heads_must_divide_heads() {
+        let cfg = ModelConfig::tiny_small(68).with_kv_heads(3); // 3 ∤ 4
+        let ckpt = synthetic_checkpoint(&cfg, 1);
+        assert!(Model::from_tlm(&ckpt).is_err());
+    }
+
+    #[test]
+    fn kv_bytes_shrink_by_group_factor() {
+        let mha = synthetic_model(&ModelConfig::tiny_small(68), 3);
+        let gqa = synthetic_model(&ModelConfig::tiny_small(68).with_kv_heads(1), 3);
+        assert_eq!(mha.kv_bytes_per_session(), 4 * gqa.kv_bytes_per_session());
+    }
+
+    #[test]
+    fn rope_is_shared_across_sessions() {
+        let m = synthetic_model(&ModelConfig::tiny_small(68), 3);
+        let a = m.rope();
+        let b = m.rope();
+        assert!(Arc::ptr_eq(&a, &b));
     }
 }

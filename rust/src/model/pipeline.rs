@@ -160,7 +160,15 @@ mod tests {
 
     fn tiny_model() -> Model {
         synthetic_model(
-            &ModelConfig { vocab_size: 20, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 20,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 48,
+                max_seq: 32,
+            },
             7,
         )
     }
@@ -180,6 +188,31 @@ mod tests {
         assert!(qm.model.layers[0].wq.fro_dist(&m.layers[0].wq) > 0.0);
         // but embeddings untouched
         assert_eq!(qm.model.embed, m.embed);
+    }
+
+    #[test]
+    fn pipeline_quantizes_gqa_model() {
+        // Non-square wk/wv (kv_dim × d_model) must flow through the
+        // calibrated pipeline unchanged: same Hessian stream (attn_in is
+        // still d_model-wide), narrower output rows.
+        let cfg = ModelConfig {
+            vocab_size: 20,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 48,
+            max_seq: 32,
+        };
+        let m = synthetic_model(&cfg, 7);
+        let method = QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 2, ..Default::default() });
+        let qm = quantize_model(&m, &calib(), &method).unwrap();
+        assert_eq!(qm.reports.len(), 2 * 7);
+        assert_eq!(qm.model.layers[0].wk.shape(), (16, 32));
+        assert_eq!(qm.model.layers[0].wv.shape(), (16, 32));
+        let toks: Vec<u32> = (0..16).map(|t| (t % 20) as u32).collect();
+        let out = qm.model.forward_full(&toks);
+        assert!(out.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

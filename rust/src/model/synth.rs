@@ -21,11 +21,13 @@ pub fn synthetic_checkpoint(cfg: &ModelConfig, seed: u64) -> TlmFile {
         d_model: cfg.d_model as u32,
         n_layers: cfg.n_layers as u32,
         n_heads: cfg.n_heads as u32,
+        n_kv_heads: cfg.n_kv_heads as u32,
         d_ff: cfg.d_ff as u32,
         max_seq: cfg.max_seq as u32,
     };
     let mut f = TlmFile::new(header);
     let (v, d, ff) = (cfg.vocab_size, cfg.d_model, cfg.d_ff);
+    let kd = cfg.kv_dim();
 
     f.insert("embed", heavy_tailed(&mut rng, v, d, 0.02, 0));
     f.insert("norm_f", ones_vec(d));
@@ -37,8 +39,8 @@ pub fn synthetic_checkpoint(cfg: &ModelConfig, seed: u64) -> TlmFile {
         f.insert(&format!("l{l}.norm2"), ones_vec(d));
         let s = (1.0 / d as f64).sqrt();
         f.insert(&format!("l{l}.wq"), heavy_tailed(&mut rng, d, d, s, n_outlier));
-        f.insert(&format!("l{l}.wk"), heavy_tailed(&mut rng, d, d, s, n_outlier));
-        f.insert(&format!("l{l}.wv"), heavy_tailed(&mut rng, d, d, s, 0));
+        f.insert(&format!("l{l}.wk"), heavy_tailed(&mut rng, kd, d, s, n_outlier));
+        f.insert(&format!("l{l}.wv"), heavy_tailed(&mut rng, kd, d, s, 0));
         f.insert(&format!("l{l}.wo"), heavy_tailed(&mut rng, d, d, s, 0));
         f.insert(&format!("l{l}.w1"), heavy_tailed(&mut rng, ff, d, s, n_outlier));
         f.insert(&format!("l{l}.w3"), heavy_tailed(&mut rng, ff, d, s, n_outlier));
@@ -96,6 +98,17 @@ mod tests {
         assert_eq!(a.get("l0.wq").unwrap(), b.get("l0.wq").unwrap());
         let c = synthetic_checkpoint(&cfg, 10);
         assert_ne!(a.get("l0.wq").unwrap(), c.get("l0.wq").unwrap());
+    }
+
+    #[test]
+    fn gqa_checkpoint_has_narrow_kv() {
+        let cfg = ModelConfig::tiny_small(68).with_kv_heads(2);
+        let f = synthetic_checkpoint(&cfg, 4);
+        assert_eq!(f.get("l0.wk").unwrap().shape(), (64, 128));
+        assert_eq!(f.get("l0.wv").unwrap().shape(), (64, 128));
+        assert_eq!(f.get("l0.wq").unwrap().shape(), (128, 128));
+        let m = synthetic_model(&cfg, 4);
+        assert_eq!(m.cfg.n_kv_heads, 2);
     }
 
     #[test]

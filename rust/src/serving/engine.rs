@@ -11,18 +11,24 @@
 //! * [`BatchedLutStep`] fuses the sweep: one multi-LUT build per linear,
 //!   per-layer **batched** linears via [`crate::lut::lut_gemm`] (each
 //!   row's packed plane words are gathered once for all active sessions),
-//!   and per-session attention/KV. This amortizes the weight fetch across
-//!   the batch — the decode-side analogue of ABQ-LLM's batched
-//!   binary-matrix kernels — so per-token cost drops toward `1/B` of the
-//!   weight-fetch bound.
+//!   and a **fused attention phase**: sessions are grouped by decode
+//!   position and each layer runs one group-ordered pass over head-major
+//!   KV strips ([`crate::model::LayerKv`]) — contiguous dot/axpy sweeps
+//!   with per-(group, head) setup shared across the group, instead of
+//!   per-session strided scalar loops. Together with grouped-query
+//!   attention (KV caches are
+//!   `kv_dim`-wide, `n_heads / n_kv_heads` smaller than `d_model`) this
+//!   amortizes both the weight fetch and the KV bandwidth across the
+//!   batch — the decode-side analogue of ABQ-LLM's batched binary-matrix
+//!   kernels.
 
 use super::metrics::Metrics;
 use super::{Request, Response};
 use crate::lut::{lut_gemm, LutScratch};
-use crate::model::{argmax, rmsnorm, silu, softmax, DecodeState, Model, Rope};
+use crate::model::{argmax, attend_head, rmsnorm, silu, DecodeState, LayerKv, Model, Rope};
 use crate::quant::packing::BitPlanePacked;
 use crate::runtime::{self, Runtime};
-use crate::tensor::{dot, matvec, Matrix};
+use crate::tensor::matvec;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -274,14 +280,15 @@ impl Stepper for NativeStepper {
     }
 }
 
-/// LUT decode session state: per-layer KV plus position. The per-step
-/// work buffers live in [`BatchedLutStep`], shared across the batch.
-/// Capacity comes from [`Model::decode_capacity`] — the same source as
-/// [`DecodeState`] — so the LUT and native engines truncate identically
-/// and allocate identical KV memory.
+/// LUT decode session state: per-layer head-major KV plus position. The
+/// per-step work buffers live in [`BatchedLutStep`], shared across the
+/// batch. Capacity comes from [`Model::decode_capacity`] — the same
+/// source as [`DecodeState`] — so the LUT and native engines truncate
+/// identically and allocate identical KV memory
+/// (`n_layers × cap × 2 × kv_dim × 4` bytes).
 struct LutSession {
-    k: Vec<Matrix>,
-    v: Vec<Matrix>,
+    k: Vec<LayerKv>,
+    v: Vec<LayerKv>,
     pos: usize,
     cap: usize,
 }
@@ -302,7 +309,7 @@ impl Session for LutSession {
 /// for the per-linear slice-of-refs assembly).
 struct BatchedLutStep {
     lm: LutModel,
-    rope: Rope,
+    rope: Arc<Rope>,
     cap: usize,
     scratch: LutScratch,
     // per-slot step buffers (slot = position within the current sweep)
@@ -323,7 +330,8 @@ struct BatchedLutStep {
 impl BatchedLutStep {
     fn new(lm: LutModel) -> Self {
         let cap = lm.base.decode_capacity();
-        let rope = Rope::new(cap, lm.base.cfg.head_dim());
+        // One rope table per model, shared with every DecodeState.
+        let rope = lm.base.rope();
         Self {
             lm,
             rope,
@@ -379,9 +387,10 @@ impl Stepper for BatchedLutStep {
 
     fn make(&self, _r: &Request) -> LutSession {
         let cfg = &self.lm.base.cfg;
+        let (nkv, hd) = (cfg.n_kv_heads, cfg.head_dim());
         LutSession {
-            k: (0..cfg.n_layers).map(|_| Matrix::zeros(self.cap, cfg.d_model)).collect(),
-            v: (0..cfg.n_layers).map(|_| Matrix::zeros(self.cap, cfg.d_model)).collect(),
+            k: (0..cfg.n_layers).map(|_| LayerKv::new(nkv, self.cap, hd)).collect(),
+            v: (0..cfg.n_layers).map(|_| LayerKv::new(nkv, self.cap, hd)).collect(),
             pos: 0,
             cap: self.cap,
         }
@@ -397,7 +406,8 @@ impl Stepper for BatchedLutStep {
         // buffers below need disjoint &mut borrows of self's fields).
         let model = self.lm.base.clone();
         let cfg = &model.cfg;
-        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let (d, nh, nkv, hd) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let group = cfg.kv_group();
         let scale = 1.0 / (hd as f32).sqrt();
 
         ensure_slots(&mut self.h, nb);
@@ -413,10 +423,29 @@ impl Stepper for BatchedLutStep {
             hb.extend_from_slice(model.embed.row(id));
         }
 
+        // Group sweep slots by decode position (stable within the sweep:
+        // positions advance only at the end). Slots at equal positions
+        // share the score-buffer length, so the per-layer attention phase
+        // below runs as one uniform pass per group over the shared
+        // head-major layout — not per-session control flow.
+        let mut order: Vec<usize> = (0..nb).collect();
+        order.sort_unstable_by_key(|&b| sessions[b].pos);
+        let mut groups: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
+        let mut i = 0;
+        while i < nb {
+            let t = sessions[order[i]].pos;
+            let mut j = i + 1;
+            while j < nb && sessions[order[j]].pos == t {
+                j += 1;
+            }
+            groups.push((t, i..j));
+            i = j;
+        }
+
         for l in 0..cfg.n_layers {
             let lw = &model.layers[l];
 
-            // ---- attention ----
+            // ---- attention (GQA: `group` q heads per kv head) ----
             for b in 0..nb {
                 self.normed[b].resize(d, 0.0);
             }
@@ -431,31 +460,43 @@ impl Stepper for BatchedLutStep {
                 let t = sess.pos;
                 for hh in 0..nh {
                     self.rope.apply(&mut self.q[b][hh * hd..(hh + 1) * hd], t);
+                }
+                for hh in 0..nkv {
                     self.rope.apply(&mut self.kx[b][hh * hd..(hh + 1) * hd], t);
                 }
-                sess.k[l].row_mut(t).copy_from_slice(&self.kx[b]);
-                sess.v[l].row_mut(t).copy_from_slice(&self.vx[b]);
+                sess.k[l].store(t, &self.kx[b]);
+                sess.v[l].store(t, &self.vx[b]);
 
                 let attnb = &mut self.attn[b];
                 attnb.resize(d, 0.0);
                 attnb.iter_mut().for_each(|a| *a = 0.0);
+            }
+
+            // Batched score/softmax/AV: one pass per position group with
+            // heads walked *outside* the session loop, so the per-(group,
+            // head) setup — score length, head offset, kv-head mapping —
+            // is computed once and applied to every session in the group,
+            // and each session's work is a contiguous strip sweep
+            // (dot + axpy over `t+1 × hd`). Per-session KV strips stay
+            // independent memory, so this is the most cross-session
+            // fusion the layout admits; pooling strips into one shared
+            // slab matvec is the follow-on (ROADMAP).
+            for (t, range) in &groups {
+                let t = *t;
                 self.scores.resize(t + 1, 0.0);
                 for hh in 0..nh {
                     let o0 = hh * hd;
-                    for u in 0..=t {
-                        self.scores[u] =
-                            dot(&self.q[b][o0..o0 + hd], &sess.k[l].row(u)[o0..o0 + hd]) * scale;
-                    }
-                    softmax(&mut self.scores[..=t]);
-                    for u in 0..=t {
-                        let w = self.scores[u];
-                        if w < 1e-9 {
-                            continue;
-                        }
-                        let vrow = &sess.v[l].row(u)[o0..o0 + hd];
-                        for i in 0..hd {
-                            attnb[o0 + i] += w * vrow[i];
-                        }
+                    let kvh = hh / group;
+                    for &b in &order[range.clone()] {
+                        let sess: &LutSession = &sessions[b];
+                        attend_head(
+                            &self.q[b][o0..o0 + hd],
+                            sess.k[l].strip(kvh, t + 1),
+                            sess.v[l].strip(kvh, t + 1),
+                            scale,
+                            &mut self.scores,
+                            &mut self.attn[b][o0..o0 + hd],
+                        );
                     }
                 }
             }
@@ -514,6 +555,13 @@ fn pjrt_generate(
     cache_len: usize,
     reqs: &[Request],
 ) -> Result<Vec<Response>> {
+    // The AOT decode-step artifact predates GQA and threads a full
+    // d_model-wide KV cache; refuse grouped-query checkpoints rather than
+    // silently mis-shaping the cache literals.
+    anyhow::ensure!(
+        model.cfg.n_kv_heads == model.cfg.n_heads,
+        "PJRT decode artifact supports MHA only (n_kv_heads == n_heads)"
+    );
     let nl = model.cfg.n_layers;
     let d = model.cfg.d_model;
     let cache_elems = nl * cache_len * d;
@@ -584,12 +632,19 @@ mod tests {
     use std::path::Path;
 
     fn tiny() -> Arc<Model> {
+        tiny_gqa(4)
+    }
+
+    /// 4-head tiny model with `n_kv_heads` kv heads (4 = MHA, 2 = GQA,
+    /// 1 = MQA).
+    fn tiny_gqa(n_kv_heads: usize) -> Arc<Model> {
         Arc::new(synthetic_model(
             &ModelConfig {
                 vocab_size: 20,
                 d_model: 32,
                 n_layers: 2,
-                n_heads: 2,
+                n_heads: 4,
+                n_kv_heads,
                 d_ff: 48,
                 max_seq: 32,
             },
@@ -660,12 +715,44 @@ mod tests {
     #[test]
     fn lut_engine_matches_native_on_quantized_model() {
         // Quantize with BPDQ, then: native decode over dequantized weights
-        // must equal batched LUT decode over the packed records.
-        let (mut native, mut lut) = quantized_engine_pair(tiny(), 16);
-        let rs_native = native.generate_batch(&reqs(2)).unwrap();
-        let rs_lut = lut.generate_batch(&reqs(2)).unwrap();
-        for (a, b) in rs_native.iter().zip(&rs_lut) {
-            assert_eq!(a.tokens, b.tokens);
+        // must equal batched LUT decode over the packed records — at every
+        // kv-head count (MQA / GQA / MHA).
+        for n_kv in [1usize, 2, 4] {
+            let (mut native, mut lut) = quantized_engine_pair(tiny_gqa(n_kv), 16);
+            let rs_native = native.generate_batch(&reqs(2)).unwrap();
+            let rs_lut = lut.generate_batch(&reqs(2)).unwrap();
+            for (a, b) in rs_native.iter().zip(&rs_lut) {
+                assert_eq!(a.tokens, b.tokens, "n_kv_heads {n_kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_batched_decode_parity_ragged_prompts() {
+        // The grouped-by-position fused attention must be token-identical
+        // to the native engine and to B=1 LUT decode under GQA, with
+        // ragged prompts (several distinct position groups per sweep).
+        for n_kv in [1usize, 2] {
+            let (mut native, mut lut) = quantized_engine_pair(tiny_gqa(n_kv), 16);
+            let ragged: Vec<Request> = (0..4)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: (0..(1 + 2 * i)).map(|t| ((t * 5 + i) % 20) as u32).collect(),
+                    max_new: 3 + i,
+                })
+                .collect();
+            let rs_native = native.generate_batch(&ragged).unwrap();
+            let rs_batch = lut.generate_batch(&ragged).unwrap();
+            for (i, (a, b)) in rs_native.iter().zip(&rs_batch).enumerate() {
+                assert_eq!(a.tokens, b.tokens, "n_kv {n_kv} native vs lut, request {i}");
+            }
+            for (i, r) in ragged.iter().enumerate() {
+                let single = lut.generate_batch(std::slice::from_ref(r)).unwrap();
+                assert_eq!(
+                    single[0].tokens, rs_batch[i].tokens,
+                    "n_kv {n_kv} B=1 vs batched, request {i}"
+                );
+            }
         }
     }
 
@@ -706,6 +793,7 @@ mod tests {
                 d_model: 32,
                 n_layers: 2,
                 n_heads: 2,
+                n_kv_heads: 2,
                 d_ff: 48,
                 max_seq: 8, // decode capacity 32
             },

@@ -1,9 +1,20 @@
 //! KV-cache slab — pooled decode states.
 //!
-//! Each decode session needs `n_layers × cache_len × d_model × 2` floats
-//! of KV storage; allocating that per request is the dominant allocator
-//! pressure in the decode loop. The slab keeps a free list of reset
-//! states and hands them out in LIFO order (warmest cache lines first).
+//! Each decode session needs
+//!
+//! ```text
+//! n_layers × cap × 2 × kv_dim × 4  bytes        (K and V, f32;
+//!                                                cap = Model::decode_capacity(),
+//!                                                kv_dim = n_kv_heads × head_dim)
+//! ```
+//!
+//! of KV storage — see [`crate::model::Model::kv_bytes_per_session`].
+//! Under grouped-query attention (`n_kv_heads < n_heads`) this is exactly
+//! `n_heads / n_kv_heads` smaller than the d_model-wide MHA cache, which
+//! is the lever that lets large-batch decode fit in memory bandwidth.
+//! Allocating it per request is the dominant allocator pressure in the
+//! decode loop; the slab keeps a free list of reset states and hands them
+//! out in LIFO order (warmest cache lines first).
 
 use crate::model::{DecodeState, Model};
 use std::sync::{Arc, Mutex};
@@ -70,7 +81,15 @@ mod tests {
 
     fn model() -> Arc<Model> {
         Arc::new(synthetic_model(
-            &ModelConfig { vocab_size: 12, d_model: 8, n_layers: 1, n_heads: 1, d_ff: 12, max_seq: 16 },
+            &ModelConfig {
+                vocab_size: 12,
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 1,
+                n_kv_heads: 1,
+                d_ff: 12,
+                max_seq: 16,
+            },
             1,
         ))
     }
@@ -108,6 +127,34 @@ mod tests {
         }
         let (_, _, pooled) = slab.stats();
         assert_eq!(pooled, 2);
+    }
+
+    #[test]
+    fn gqa_slab_states_decode_and_shrink() {
+        // A slab over a GQA model hands out working states, and the
+        // per-session KV footprint shrinks by exactly n_heads/n_kv_heads.
+        let mha = Arc::new(synthetic_model(
+            &ModelConfig {
+                vocab_size: 12,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads: 4,
+                d_ff: 24,
+                max_seq: 16,
+            },
+            1,
+        ));
+        let gqa = Arc::new(synthetic_model(
+            &ModelConfig { n_kv_heads: 1, ..mha.cfg },
+            1,
+        ));
+        assert_eq!(mha.kv_bytes_per_session(), 4 * gqa.kv_bytes_per_session());
+        let slab = KvSlab::new(gqa.clone(), 2);
+        let mut st = slab.acquire();
+        let logits = st.step(&gqa, 3);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        slab.release(st);
     }
 
     #[test]

@@ -169,7 +169,15 @@ mod tests {
 
     fn engine_kind() -> EngineKind {
         EngineKind::Native(Arc::new(synthetic_model(
-            &ModelConfig { vocab_size: 16, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 24, max_seq: 32 },
+            &ModelConfig {
+                vocab_size: 16,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 24,
+                max_seq: 32,
+            },
             5,
         )))
     }

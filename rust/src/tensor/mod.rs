@@ -10,7 +10,7 @@
 
 mod ops;
 
-pub use ops::{dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa};
+pub use ops::{axpy, dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa};
 
 use std::fmt;
 

@@ -122,6 +122,17 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// `y += alpha * x` over contiguous slices — the AV-accumulation
+/// primitive of the decode attention sweep (head-major KV strips make
+/// every V row contiguous, so this auto-vectorizes).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
 /// f64 matmul for conditioning-sensitive paths (Hessian ops).
 pub fn matmul_f64(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
     assert_eq!(a.cols(), b.rows());
@@ -217,6 +228,14 @@ mod tests {
         for i in 0..14 {
             assert!((y[i] - yt[i]).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn axpy_slices() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
     }
 
     #[test]

@@ -11,7 +11,15 @@ use std::time::Duration;
 
 fn model() -> bpdq::model::Model {
     synthetic_model(
-        &ModelConfig { vocab_size: 32, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 48 },
+        &ModelConfig {
+            vocab_size: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 48,
+            max_seq: 48,
+        },
         0xAB,
     )
 }

@@ -224,12 +224,17 @@ fn prop_gptq_pack_consistency() {
 #[test]
 fn prop_decode_matches_forward() {
     run_prop("decode_matches_forward", Config { cases: 6, ..Default::default() }, |rng| {
-        let nh = 1 + rng.below_usize(2);
+        // 1, 2, or 4 query heads with a random divisor as kv-head count
+        // (exercises MQA / GQA / MHA in the same property).
+        let nh = 1 << rng.below_usize(3);
+        let divisors: Vec<usize> = (1..=nh).filter(|d| nh % d == 0).collect();
+        let nkv = divisors[rng.below_usize(divisors.len())];
         let cfg = ModelConfig {
             vocab_size: 10 + rng.below_usize(20),
             d_model: nh * 8,
             n_layers: 1 + rng.below_usize(2),
             n_heads: nh,
+            n_kv_heads: nkv,
             d_ff: 16 + rng.below_usize(16),
             max_seq: 32,
         };

@@ -1,0 +1,79 @@
+"""CI perf gate: fail on decode tokens/sec regressions.
+
+Compares the freshly-benched ``BENCH_decode.json`` against the previous
+uploaded artifact (same schema: ``{"bench": ..., "rows": [...]}`` with a
+``name`` and ``tokens_per_sec`` per row) and exits non-zero when any
+matched row regresses by more than ``--threshold`` (default 15%).
+
+Rows are matched by ``name``; rows present on only one side are
+reported but never fail the gate (configs come and go). Rows whose
+previous tokens/sec is 0 (degenerate zero-wall-clock runs) are skipped
+— a ratio against zero means nothing.
+
+Stdlib only; runs on the bare CI python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    out: dict[str, float] = {}
+    for row in doc.get("rows", []):
+        name = row.get("name")
+        tps = row.get("tokens_per_sec")
+        if isinstance(name, str) and isinstance(tps, (int, float)):
+            out[name] = float(tps)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_decode.json")
+    ap.add_argument("previous", help="previous run's BENCH_decode.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed fractional tokens/sec drop (0.15 = 15%%)")
+    args = ap.parse_args()
+
+    cur = load_rows(args.current)
+    prev = load_rows(args.previous)
+    if not prev:
+        print("[perf-gate] previous artifact has no comparable rows — skipping")
+        return 0
+
+    failures = []
+    for name in sorted(prev):
+        if name not in cur:
+            print(f"[perf-gate] row dropped (not gating): {name}")
+            continue
+        p, c = prev[name], cur[name]
+        if p <= 0.0:
+            print(f"[perf-gate] skipping zero-baseline row: {name}")
+            continue
+        ratio = c / p
+        marker = "OK "
+        if ratio < 1.0 - args.threshold:
+            marker = "REG"
+            failures.append((name, p, c, ratio))
+        print(f"[perf-gate] {marker} {name}: {p:.1f} -> {c:.1f} tok/s "
+              f"({100.0 * (ratio - 1.0):+.1f}%)")
+    for name in sorted(set(cur) - set(prev)):
+        print(f"[perf-gate] new row (not gated): {name}")
+
+    if failures:
+        print(f"\n[perf-gate] FAIL: {len(failures)} row(s) regressed more than "
+              f"{100.0 * args.threshold:.0f}%:")
+        for name, p, c, ratio in failures:
+            print(f"  {name}: {p:.1f} -> {c:.1f} tok/s ({100.0 * (ratio - 1.0):+.1f}%)")
+        return 1
+    print("\n[perf-gate] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,10 @@ compiles each once and caches the executable):
 * ``decode_step.hlo.txt``  — a full single-token decode step of the
   trained tiny_small model (weights baked in as constants), KV cache
   threaded functionally: (token, pos, kcache, vcache) → (logits, k', v').
+  Caches are ``kv_dim``-wide (GQA-aware); the sidecar ``decode_step.meta``
+  records ``kv_dim`` so the rust engine can shape its cache literals —
+  artifacts without that line predate GQA and are treated as
+  d_model-wide MHA-only by the engine.
 
 Python runs once at build time; the rust binary is self-contained after
 `make artifacts`.
@@ -71,12 +75,17 @@ def lower_kernels(out_dir: pathlib.Path, d_in=128, d_out=128, k=2, g=64):
 
 def lower_decode_step(out_dir: pathlib.Path, ckpt: pathlib.Path, cache_len=256):
     """Lower the trained model's single-token decode step with weights
-    baked in as HLO constants."""
+    baked in as HLO constants. The KV caches are ``kv_dim``-wide —
+    exactly ``n_heads // n_kv_heads`` smaller than the legacy
+    d_model-wide layout for GQA checkpoints — and the ``.meta`` sidecar
+    records the width for the rust engine."""
     cfg, raw = read_tlm(ckpt)
     params = {k: jnp.asarray(v) for k, v in raw.items()}
     mcfg = model.config(cfg["vocab_size"], cfg["d_model"], cfg["n_layers"],
-                        cfg["n_heads"], cfg["d_ff"], cfg["max_seq"])
+                        cfg["n_heads"], cfg["d_ff"], cfg["max_seq"],
+                        n_kv_heads=cfg.get("n_kv_heads"))
     nl, d = mcfg["n_layers"], mcfg["d_model"]
+    kvd = model.kv_dim(mcfg)
 
     def step(token, pos, kcache, vcache):
         return model.decode_step(params, mcfg, token, pos, kcache, vcache)
@@ -84,8 +93,8 @@ def lower_decode_step(out_dir: pathlib.Path, ckpt: pathlib.Path, cache_len=256):
     args = (
         jax.ShapeDtypeStruct((), jnp.int32),
         jax.ShapeDtypeStruct((), jnp.int32),
-        jax.ShapeDtypeStruct((nl, cache_len, d), jnp.float32),
-        jax.ShapeDtypeStruct((nl, cache_len, d), jnp.float32),
+        jax.ShapeDtypeStruct((nl, cache_len, kvd), jnp.float32),
+        jax.ShapeDtypeStruct((nl, cache_len, kvd), jnp.float32),
     )
     lowered = jax.jit(step).lower(*args)
     text = to_hlo_text(lowered)
@@ -95,8 +104,11 @@ def lower_decode_step(out_dir: pathlib.Path, ckpt: pathlib.Path, cache_len=256):
     meta.write_text(
         f"vocab_size {mcfg['vocab_size']}\nd_model {d}\nn_layers {nl}\n"
         f"cache_len {cache_len}\n"
+        f"n_heads {mcfg['n_heads']}\nn_kv_heads {mcfg['n_kv_heads']}\n"
+        f"kv_dim {kvd}\n"
     )
-    print(f"[aot] wrote {path} ({len(text)} chars, cache_len={cache_len})")
+    print(f"[aot] wrote {path} ({len(text)} chars, cache_len={cache_len}, "
+          f"kv_dim={kvd})")
 
 
 def main():

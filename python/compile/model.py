@@ -2,9 +2,11 @@
 
 Architecture contract (any change must be mirrored in rust/src/model):
   * token embedding, no scaling;
-  * per block: RMSNorm(eps 1e-5) -> causal MHA (wq,wk,wv,wo; RoPE
-    rotate-half, base 10000) -> residual -> RMSNorm -> SwiGLU
-    (w1=up, w3=gate, w2=down) -> residual;
+  * per block: RMSNorm(eps 1e-5) -> causal attention (wq,wk,wv,wo; RoPE
+    rotate-half, base 10000; grouped-query when ``n_kv_heads < n_heads``
+    — wk/wv project to ``kv_dim = n_kv_heads * head_dim`` and each group
+    of ``n_heads // n_kv_heads`` query heads shares one K/V head) ->
+    residual -> RMSNorm -> SwiGLU (w1=up, w3=gate, w2=down) -> residual;
   * final RMSNorm -> untied lm_head.
 
 Weights live in a flat dict keyed like the ``.tlm`` tensors ("embed",
@@ -25,20 +27,30 @@ ROPE_BASE = 10_000.0
 
 
 def config(vocab_size: int, d_model: int, n_layers: int, n_heads: int,
-           d_ff: int, max_seq: int) -> dict:
+           d_ff: int, max_seq: int, n_kv_heads: int | None = None) -> dict:
+    """``n_kv_heads`` defaults to ``n_heads`` (plain MHA); a proper
+    divisor turns on grouped-query attention."""
+    n_kv = n_heads if n_kv_heads is None else n_kv_heads
     assert d_model % n_heads == 0
+    assert n_kv > 0 and n_heads % n_kv == 0, \
+        f"n_kv_heads ({n_kv}) must divide n_heads ({n_heads})"
     return dict(vocab_size=vocab_size, d_model=d_model, n_layers=n_layers,
-                n_heads=n_heads, d_ff=d_ff, max_seq=max_seq)
+                n_heads=n_heads, n_kv_heads=n_kv, d_ff=d_ff, max_seq=max_seq)
 
 
-def tiny_small(vocab_size: int) -> dict:
+def tiny_small(vocab_size: int, n_kv_heads: int | None = None) -> dict:
     """≈0.8M params — mirrors ModelConfig::tiny_small."""
-    return config(vocab_size, 128, 4, 4, 344, 256)
+    return config(vocab_size, 128, 4, 4, 344, 256, n_kv_heads)
 
 
-def tiny_large(vocab_size: int) -> dict:
+def tiny_large(vocab_size: int, n_kv_heads: int | None = None) -> dict:
     """≈3.4M params — mirrors ModelConfig::tiny_large."""
-    return config(vocab_size, 256, 6, 8, 688, 256)
+    return config(vocab_size, 256, 6, 8, 688, 256, n_kv_heads)
+
+
+def kv_dim(cfg: dict) -> int:
+    """Width of the K/V projections and of one cached KV row."""
+    return cfg.get("n_kv_heads", cfg["n_heads"]) * (cfg["d_model"] // cfg["n_heads"])
 
 
 def init_params(cfg: dict, key: jax.Array) -> dict:
@@ -56,6 +68,7 @@ def init_params(cfg: dict, key: jax.Array) -> dict:
     params["lm_head"] = mat(next(ki), v, d, 0.02)
     params["norm_f"] = jnp.ones((d,), jnp.float32)
     _ = next(ki)
+    kvd = kv_dim(cfg)
     for l in range(cfg["n_layers"]):
         s = (1.0 / d) ** 0.5
         s2 = (1.0 / ff) ** 0.5
@@ -63,8 +76,8 @@ def init_params(cfg: dict, key: jax.Array) -> dict:
         params[f"l{l}.norm1"] = jnp.ones((d,), jnp.float32)
         params[f"l{l}.norm2"] = jnp.ones((d,), jnp.float32)
         params[f"l{l}.wq"] = mat(sub[0], d, d, s)
-        params[f"l{l}.wk"] = mat(sub[1], d, d, s)
-        params[f"l{l}.wv"] = mat(sub[2], d, d, s)
+        params[f"l{l}.wk"] = mat(sub[1], kvd, d, s)
+        params[f"l{l}.wv"] = mat(sub[2], kvd, d, s)
         params[f"l{l}.wo"] = mat(sub[3], d, d, s)
         params[f"l{l}.w1"] = mat(sub[4], ff, d, s)
         params[f"l{l}.w3"] = mat(sub[5], ff, d, s)
@@ -95,19 +108,28 @@ def rope_apply(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 
 
 def block_forward(params: dict, cfg: dict, l: int, h: jax.Array) -> jax.Array:
-    """h: (seq, d) -> (seq, d). Full-sequence causal block."""
+    """h: (seq, d) -> (seq, d). Full-sequence causal block (grouped-query
+    when n_kv_heads < n_heads: K/V heads are repeated across their query
+    group, matching the rust ``hh / kv_group`` head mapping)."""
     d, nh = cfg["d_model"], cfg["n_heads"]
+    nkv = cfg.get("n_kv_heads", nh)
+    grp = nh // nkv
     hd = d // nh
     seq = h.shape[0]
     p = lambda n: params[f"l{l}.{n}"]
 
     x = rmsnorm(h, p("norm1"))
     q = (x @ p("wq").T).reshape(seq, nh, hd)
-    k = (x @ p("wk").T).reshape(seq, nh, hd)
-    v = (x @ p("wv").T).reshape(seq, nh, hd)
+    k = (x @ p("wk").T).reshape(seq, nkv, hd)
+    v = (x @ p("wv").T).reshape(seq, nkv, hd)
     cos, sin = rope_tables(seq, hd)
     q = rope_apply(q, cos, sin)
     k = rope_apply(k, cos, sin)
+    if grp > 1:
+        # kv head j serves query heads j*grp .. (j+1)*grp — the same
+        # mapping as rust's kvh = hh / group.
+        k = jnp.repeat(k, grp, axis=1)
+        v = jnp.repeat(v, grp, axis=1)
     scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(hd))
     mask = jnp.tril(jnp.ones((seq, seq), bool))
     scores = jnp.where(mask[None, :, :], scores, -1e30)
@@ -157,12 +179,19 @@ def decode_step(params: dict, cfg: dict, token: jax.Array, pos: jax.Array,
     """One-token decode.
 
     token: () int32; pos: () int32;
-    kcache/vcache: (n_layers, cache_len, d_model).
+    kcache/vcache: (n_layers, cache_len, kv_dim) — ``kv_dim``-wide, so a
+    GQA checkpoint threads caches ``n_heads // n_kv_heads`` smaller than
+    the legacy d_model-wide layout (the rust engine reads the width from
+    the ``.meta`` sidecar, see aot.py).
     Returns (logits (vocab,), kcache', vcache').
     """
     d, nh = cfg["d_model"], cfg["n_heads"]
+    nkv = cfg.get("n_kv_heads", nh)
+    grp = nh // nkv
     hd = d // nh
+    kvd = nkv * hd
     cache_len = kcache.shape[1]
+    assert kcache.shape[2] == kvd, f"cache width {kcache.shape[2]} != kv_dim {kvd}"
     h = params["embed"][token]
 
     half = hd // 2
@@ -170,7 +199,7 @@ def decode_step(params: dict, cfg: dict, token: jax.Array, pos: jax.Array,
     theta = pos.astype(jnp.float32) / (ROPE_BASE ** (2.0 * i / hd))
     cos, sin = jnp.cos(theta), jnp.sin(theta)
 
-    def rot(x):  # x: (nh, hd)
+    def rot(x):  # x: (heads, hd)
         a, b = x[:, :half], x[:, half:]
         return jnp.concatenate([a * cos - b * sin, b * cos + a * sin], axis=-1)
 
@@ -178,12 +207,15 @@ def decode_step(params: dict, cfg: dict, token: jax.Array, pos: jax.Array,
         p = lambda n: params[f"l{l}.{n}"]
         x = rmsnorm(h, p("norm1"))
         q = rot((p("wq") @ x).reshape(nh, hd))
-        k = rot((p("wk") @ x).reshape(nh, hd))
-        v = (p("wv") @ x).reshape(nh, hd)
-        kcache = jax.lax.dynamic_update_slice(kcache, k.reshape(1, 1, d), (l, pos, 0))
-        vcache = jax.lax.dynamic_update_slice(vcache, v.reshape(1, 1, d), (l, pos, 0))
-        kl = kcache[l].reshape(cache_len, nh, hd)
-        vl = vcache[l].reshape(cache_len, nh, hd)
+        k = rot((p("wk") @ x).reshape(nkv, hd))
+        v = (p("wv") @ x).reshape(nkv, hd)
+        kcache = jax.lax.dynamic_update_slice(kcache, k.reshape(1, 1, kvd), (l, pos, 0))
+        vcache = jax.lax.dynamic_update_slice(vcache, v.reshape(1, 1, kvd), (l, pos, 0))
+        kl = kcache[l].reshape(cache_len, nkv, hd)
+        vl = vcache[l].reshape(cache_len, nkv, hd)
+        if grp > 1:
+            kl = jnp.repeat(kl, grp, axis=1)  # (cache_len, nh, hd)
+            vl = jnp.repeat(vl, grp, axis=1)
         scores = jnp.einsum("hd,thd->ht", q, kl) / jnp.sqrt(jnp.float32(hd))
         valid = jnp.arange(cache_len) <= pos
         scores = jnp.where(valid[None, :], scores, -1e30)

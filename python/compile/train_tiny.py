@@ -49,16 +49,18 @@ def make_batches(tokens: np.ndarray, batch: int, seq: int, rng: np.random.Genera
 
 
 def train(size: str, steps: int, batch: int, seq: int, lr: float,
-          artifacts: pathlib.Path, seed: int = 0) -> pathlib.Path:
+          artifacts: pathlib.Path, seed: int = 0,
+          n_kv_heads: int | None = None) -> pathlib.Path:
     vocab = data_io.load_vocab(artifacts)
     tokens = data_io.load_corpus_tokens(artifacts, "corpus_train.txt", vocab)
     print(f"[train] corpus: {len(tokens)} tokens, vocab {len(vocab)}")
 
-    cfg = model.tiny_small(len(vocab)) if size == "small" else model.tiny_large(len(vocab))
+    mk = model.tiny_small if size == "small" else model.tiny_large
+    cfg = mk(len(vocab), n_kv_heads)
     params = model.init_params(cfg, jax.random.PRNGKey(seed))
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"[train] size={size}: {n_params/1e6:.2f}M params, {steps} steps, "
-          f"batch {batch} × seq {seq}")
+          f"batch {batch} × seq {seq}, kv heads {cfg['n_kv_heads']}/{cfg['n_heads']}")
 
     opt = adam_init(params)
     warmup = max(20, steps // 20)
@@ -85,10 +87,14 @@ def train(size: str, steps: int, batch: int, seq: int, lr: float,
             print(f"[train] step {s:5d}  loss {float(loss):.4f}  "
                   f"({dt:.1f}s, {dt/max(1,s+1):.2f}s/step)", flush=True)
 
-    out = artifacts / f"tiny_{size}.tlm"
+    # GQA checkpoints get their own artifact name so the stock MHA
+    # tiny_{size}.tlm consumers keep working.
+    gqa = cfg["n_kv_heads"] != cfg["n_heads"]
+    stem = f"tiny_{size}_kv{cfg['n_kv_heads']}" if gqa else f"tiny_{size}"
+    out = artifacts / f"{stem}.tlm"
     write_tlm(out, cfg, params)
     # loss curve for EXPERIMENTS.md
-    curve = artifacts / f"tiny_{size}_loss.txt"
+    curve = artifacts / f"{stem}_loss.txt"
     curve.write_text("\n".join(f"{i} {l:.5f}" for i, l in enumerate(losses)) + "\n")
     print(f"[train] wrote {out} (final loss {losses[-1]:.4f})")
     return out
@@ -103,9 +109,13 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--artifacts", default="../artifacts")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-heads", type=int, default=0,
+                    help="K/V heads for grouped-query attention "
+                         "(0 = n_heads, plain MHA)")
     args = ap.parse_args()
     train(args.size, args.steps, args.batch, args.seq, args.lr,
-          pathlib.Path(args.artifacts), args.seed)
+          pathlib.Path(args.artifacts), args.seed,
+          args.kv_heads or None)
 
 
 if __name__ == "__main__":

@@ -8,9 +8,10 @@
 //! (target: ≥2× over independent GEMVs at B=8).
 use bpdq::benchkit::{bench, black_box, Bench, JsonReport};
 use bpdq::lut::{dequant_gemv, lut_gemm, lut_gemv, LutScratch};
+use bpdq::model::{attend_head, softmax};
 use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
 use bpdq::rng::Rng;
-use bpdq::tensor::{matvec, Matrix};
+use bpdq::tensor::{matvec, strip_axpys, strip_dots, Matrix};
 
 fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
     let mut rng = Rng::new(seed);
@@ -120,5 +121,65 @@ fn main() {
         }
     }
     report.finish();
+
+    // Batched attention: the fused sweep's score/softmax/AV phase as one
+    // multi-session pass over B *adjacent* strips of one slab
+    // (strip_dots/strip_axpys — the KV-arena access pattern) vs B
+    // independent attend_head walks over B scattered allocations (the
+    // pre-arena per-session path).
+    b.section("batched attention — strip kernels (one slab) vs B walks (hd=64, 256 pos)");
+    let (hd, live) = (64usize, 256usize);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut rng = Rng::new(23);
+    for &bsz in &[2usize, 4, 8] {
+        // arena-style: B strips adjacent in one slab
+        let kslab: Vec<f32> = (0..bsz * live * hd).map(|_| rng.normal() as f32).collect();
+        let vslab: Vec<f32> = (0..bsz * live * hd).map(|_| rng.normal() as f32).collect();
+        // per-session-style: B scattered heap allocations of the same data
+        let kseps: Vec<Vec<f32>> =
+            kslab.chunks_exact(live * hd).map(|c| c.to_vec()).collect();
+        let vseps: Vec<Vec<f32>> =
+            vslab.chunks_exact(live * hd).map(|c| c.to_vec()).collect();
+        let qflat: Vec<f32> = (0..bsz * hd).map(|_| rng.normal() as f32).collect();
+        let mut scores = vec![0.0f32; bsz * live];
+        let mut outs_flat = vec![0.0f32; bsz * hd];
+        let s_batched = bench(|| {
+            let kstrips: Vec<&[f32]> = kslab.chunks_exact(live * hd).collect();
+            let vstrips: Vec<&[f32]> = vslab.chunks_exact(live * hd).collect();
+            let qs: Vec<&[f32]> = qflat.chunks_exact(hd).collect();
+            strip_dots(&qs, &kstrips, hd, scale, &mut scores);
+            for sc in scores.chunks_exact_mut(live) {
+                softmax(sc);
+            }
+            outs_flat.iter_mut().for_each(|o| *o = 0.0);
+            let mut outs: Vec<&mut [f32]> = outs_flat.chunks_exact_mut(hd).collect();
+            strip_axpys(&scores, &vstrips, hd, &mut outs);
+            black_box(&outs_flat);
+        });
+        let mut score1 = vec![0.0f32; live];
+        let s_per_session = bench(|| {
+            outs_flat.iter_mut().for_each(|o| *o = 0.0);
+            for (bb, (ks, vs)) in kseps.iter().zip(&vseps).enumerate() {
+                attend_head(
+                    black_box(&qflat[bb * hd..(bb + 1) * hd]),
+                    ks,
+                    vs,
+                    scale,
+                    &mut score1,
+                    &mut outs_flat[bb * hd..(bb + 1) * hd],
+                );
+            }
+            black_box(&outs_flat);
+        });
+        let bt = s_batched.per_iter_us() / bsz as f64;
+        let pt = s_per_session.per_iter_us() / bsz as f64;
+        b.row_metric(
+            &format!("B={bsz:<2} batched strips"),
+            &format!(
+                "{bt:>8.2} µs/session   per-session walks {pt:>8.2} µs/session   ratio ×{:.2}",
+                pt / bt
+            ),
+        );
+    }
     b.finish();
 }

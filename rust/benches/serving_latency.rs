@@ -89,7 +89,8 @@ fn main() {
         let kv_bytes = m.kv_bytes_per_session();
         println!(
             "{name:<26} p50 first {:>8.2} ms   decode {:>8.1} µs/tok   {:>7.1} tok/s   \
-             mean batch {:.1}   decode sweeps {:>5} (mean B {:.1}, max {})   KV {:>8} B/session",
+             mean batch {:.1}   decode sweeps {:>5} (mean B {:.1}, max {})   KV {:>8} B/session   \
+             arena high-water {} ({:.2} MiB slab)",
             s.p50_first_us as f64 / 1e3,
             s.us_per_token,
             s.tokens_per_sec,
@@ -97,7 +98,9 @@ fn main() {
             s.decode_sweeps,
             s.mean_decode_batch,
             s.max_decode_batch,
-            kv_bytes
+            kv_bytes,
+            s.arena_high_water,
+            s.arena_bytes_resident as f64 / (1 << 20) as f64
         );
         let cfg = m.cfg;
         report.row(|w| {
@@ -122,6 +125,12 @@ fn main() {
                 .int(s.max_decode_batch as i64)
                 .key("kv_bytes_per_session")
                 .int(kv_bytes as i64)
+                .key("arena_high_water")
+                .int(s.arena_high_water as i64)
+                .key("arena_bytes_resident")
+                .int(s.arena_bytes_resident as i64)
+                .key("arena_fork_copies")
+                .int(s.arena_fork_copies as i64)
                 .end_object();
         });
         router.shutdown();

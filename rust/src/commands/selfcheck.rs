@@ -82,22 +82,23 @@ pub fn run(args: &Args) -> Result<()> {
     let step_artifact = dir.join("decode_step.hlo.txt");
     if ckpt.exists() && step_artifact.exists() {
         let model = Model::from_tlm(&TlmFile::load(&ckpt)?)?;
-        let cache_len: usize = std::fs::read_to_string(dir.join("decode_step.meta"))
-            .ok()
-            .and_then(|m| {
-                m.lines()
-                    .find(|l| l.starts_with("cache_len"))
-                    .and_then(|l| l.split_whitespace().nth(1))
-                    .and_then(|v| v.parse().ok())
-            })
-            .unwrap_or(256);
+        let meta = std::fs::read_to_string(dir.join("decode_step.meta")).unwrap_or_default();
+        let meta_field = |key: &str| -> Option<usize> {
+            meta.lines()
+                .find(|l| l.starts_with(key))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        };
+        let cache_len = meta_field("cache_len").unwrap_or(256);
+        // GQA-aware artifacts record their kv_dim; legacy ones thread a
+        // d_model-wide cache.
+        let kv_dim = meta_field("kv_dim").unwrap_or(model.cfg.d_model);
         let toks = [5u32, 9, 3, 14, 7];
         let native = model.forward_full(&toks);
         let exe = rt.load(&step_artifact)?;
         let nl = model.cfg.n_layers;
-        let d = model.cfg.d_model;
-        let zeros = vec![0.0f32; nl * cache_len * d];
-        let dims = [nl as i64, cache_len as i64, d as i64];
+        let zeros = vec![0.0f32; nl * cache_len * kv_dim];
+        let dims = [nl as i64, cache_len as i64, kv_dim as i64];
         let mut klit = runtime::literal_f32(&zeros, &dims)?;
         let mut vlit = runtime::literal_f32(&zeros, &dims)?;
         let mut max_err = 0.0f32;

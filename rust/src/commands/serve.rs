@@ -113,6 +113,13 @@ pub fn run(args: &Args) -> Result<()> {
         "decode sweeps      : {} (mean batch {:.2}, max {})",
         s.decode_sweeps, s.mean_decode_batch, s.max_decode_batch
     );
+    println!(
+        "kv arena           : {} slots in use (high water {}), {:.2} MiB resident, {} fork copies",
+        s.arena_slots_in_use,
+        s.arena_high_water,
+        s.arena_bytes_resident as f64 / (1 << 20) as f64,
+        s.arena_fork_copies
+    );
     println!("decode             : {:.1} µs/token", s.us_per_token);
     println!("throughput         : {:.1} tok/s", s.tokens_per_sec);
     println!("summary json       : {}", s.to_json());

@@ -2,6 +2,7 @@
 //! incremental KV-cache decode.
 
 use super::{rmsnorm, silu, softmax, Model, ROPE_BASE};
+use crate::serving::kv::{KvArena, KvHandle};
 use crate::tensor::{axpy, dot, matmul_transb, matvec, Matrix};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -196,60 +197,13 @@ impl Model {
     }
 }
 
-/// One layer's K (or V) cache in **head-major** layout: a contiguous
-/// `cap × head_dim` strip per kv head (`data[kvh][pos][i]`). Each head's
-/// score pass is then one dot-product sweep over a contiguous strip and
-/// the AV pass a run of contiguous [`axpy`]s — the vectorizable shape the
-/// old `(pos × d_model)` row-major cache couldn't offer once heads were
-/// strided.
-pub struct LayerKv {
-    data: Vec<f32>,
-    cap: usize,
-    hd: usize,
-    n_kv: usize,
-}
-
-impl LayerKv {
-    pub fn new(n_kv: usize, cap: usize, hd: usize) -> Self {
-        Self { data: vec![0.0; n_kv * cap * hd], cap, hd, n_kv }
-    }
-
-    /// The first `len` cached rows of kv head `kvh`, contiguous.
-    #[inline]
-    pub fn strip(&self, kvh: usize, len: usize) -> &[f32] {
-        debug_assert!(kvh < self.n_kv && len <= self.cap);
-        let o = kvh * self.cap * self.hd;
-        &self.data[o..o + len * self.hd]
-    }
-
-    /// Scatter one kv_dim-wide projection row into the per-head strips at
-    /// position `pos`.
-    #[inline]
-    pub fn store(&mut self, pos: usize, row: &[f32]) {
-        debug_assert_eq!(row.len(), self.n_kv * self.hd);
-        for kvh in 0..self.n_kv {
-            let o = (kvh * self.cap + pos) * self.hd;
-            self.data[o..o + self.hd].copy_from_slice(&row[kvh * self.hd..(kvh + 1) * self.hd]);
-        }
-    }
-
-    /// Copy of the live `pos`-row prefix: per head one contiguous block
-    /// copy (plus zero-fill of the never-read tail) — no full-capacity
-    /// zero-then-row-copy pass.
-    pub fn fork_prefix(&self, pos: usize) -> Self {
-        let mut data = Vec::with_capacity(self.data.len());
-        for kvh in 0..self.n_kv {
-            let o = kvh * self.cap * self.hd;
-            data.extend_from_slice(&self.data[o..o + pos * self.hd]);
-            data.resize(o + self.cap * self.hd, 0.0);
-        }
-        Self { data, cap: self.cap, hd: self.hd, n_kv: self.n_kv }
-    }
-}
-
 /// Score/softmax/AV for one query head over head-major K/V strips of
 /// `t + 1 = scores.len()` live positions: `out += softmax(K q · scale) V`.
-/// Shared by [`DecodeState::step`] and the serving engines' fused sweep.
+/// Used by [`DecodeState::step`]; the serving engines' fused sweep runs
+/// the same computation batched across sessions
+/// ([`crate::tensor::strip_dots`] / [`crate::tensor::strip_axpys`]),
+/// with identical per-lane accumulation order so the two paths stay
+/// token-identical.
 #[inline]
 pub fn attend_head(
     q_h: &[f32],
@@ -272,26 +226,45 @@ pub fn attend_head(
     }
 }
 
-/// Incremental KV-cache decode (one token at a time).
+/// Incremental KV-cache decode (one token at a time). KV lives in a
+/// slot of the model's pooled [`KvArena`] — the state owns only the
+/// slot handle (released back to the arena on drop), position
+/// bookkeeping, and a shared rope table.
 pub struct DecodeState {
-    /// per layer: head-major K and V caches (see [`LayerKv`])
-    k: Vec<LayerKv>,
-    v: Vec<LayerKv>,
+    arena: Arc<KvArena>,
+    /// `Some` for the whole life of the state; taken only in `drop`.
+    handle: Option<KvHandle>,
     pos: usize,
     rope: Arc<Rope>,
     max_seq: usize,
 }
 
+impl Drop for DecodeState {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.arena.release(h);
+        }
+    }
+}
+
 impl DecodeState {
+    /// Claim an arena slot. Panics with "KV arena exhausted" when the
+    /// model's arena is at its slot cap — the session-level analogue of
+    /// the per-session "KV cache exhausted" capacity assert.
     pub fn new(model: &Model) -> Self {
-        let cap = model.decode_capacity();
-        let (nkv, hd) = (model.cfg.n_kv_heads, model.cfg.head_dim());
+        let arena = model.kv_arena();
+        debug_assert_eq!(
+            arena.geom(),
+            crate::serving::kv::KvGeom::of(model),
+            "arena geometry must match the model (clones share arenas only at equal geometry)"
+        );
+        let handle = arena.acquire().expect("KV arena exhausted");
         Self {
-            k: (0..model.cfg.n_layers).map(|_| LayerKv::new(nkv, cap, hd)).collect(),
-            v: (0..model.cfg.n_layers).map(|_| LayerKv::new(nkv, cap, hd)).collect(),
+            arena,
+            handle: Some(handle),
             pos: 0,
             rope: model.rope(),
-            max_seq: cap,
+            max_seq: model.decode_capacity(),
         }
     }
 
@@ -303,21 +276,24 @@ impl DecodeState {
         self.max_seq
     }
 
-    /// Rewind to position 0 for reuse (the KV slab path). Stale K/V rows
-    /// beyond `pos` are never read, so no zeroing is needed.
+    /// Rewind to position 0 for slot reuse. Stale K/V rows beyond `pos`
+    /// are never read, so no zeroing is needed.
     pub fn reset(&mut self) {
         self.pos = 0;
     }
 
-    /// Cheap branch-point copy: clones only the `pos × kv_dim` live
-    /// prefix per layer — contiguous block copies in the head-major
-    /// layout, no full-capacity zeroing — and shares the rope table (the
-    /// prefix-cache trick behind fast multiple-choice scoring — score N
-    /// continuations against one shared prompt prefix).
+    /// Cheap branch-point copy: claims a sibling arena slot and copies
+    /// only the `pos × kv_dim` live prefix per layer — contiguous block
+    /// copies inside the slab ([`KvArena::fork`]), no full-capacity
+    /// zeroing — and shares the rope table (the prefix-cache trick
+    /// behind fast multiple-choice scoring — score N continuations
+    /// against one shared prompt prefix).
     pub fn fork(&self) -> DecodeState {
+        let src = self.handle.as_ref().expect("live decode state");
+        let handle = self.arena.fork(src, self.pos).expect("KV arena exhausted");
         DecodeState {
-            k: self.k.iter().map(|kl| kl.fork_prefix(self.pos)).collect(),
-            v: self.v.iter().map(|vl| vl.fork_prefix(self.pos)).collect(),
+            arena: self.arena.clone(),
+            handle: Some(handle),
             pos: self.pos,
             rope: self.rope.clone(),
             max_seq: self.max_seq,
@@ -337,6 +313,7 @@ impl DecodeState {
         let mut h: Vec<f32> = model.embed.row(id).to_vec();
         let mut normed = vec![0.0f32; d];
         let mut scores = vec![0.0f32; t + 1];
+        let mut kv = self.arena.view_mut(self.handle.as_mut().expect("live decode state"));
 
         for (l, lw) in model.layers.iter().enumerate() {
             rmsnorm(&h, &lw.norm1, &mut normed);
@@ -349,8 +326,8 @@ impl DecodeState {
             for hh in 0..nkv {
                 self.rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
             }
-            self.k[l].store(t, &kx);
-            self.v[l].store(t, &vx);
+            kv.store_k(l, t, &kx);
+            kv.store_v(l, t, &vx);
 
             let mut attn = vec![0.0f32; d];
             for hh in 0..nh {
@@ -358,8 +335,8 @@ impl DecodeState {
                 let kvh = hh / group;
                 attend_head(
                     &q[o0..o0 + hd],
-                    self.k[l].strip(kvh, t + 1),
-                    self.v[l].strip(kvh, t + 1),
+                    kv.k_strip(l, kvh, t + 1),
+                    kv.v_strip(l, kvh, t + 1),
                     scale,
                     &mut scores,
                     &mut attn[o0..o0 + hd],

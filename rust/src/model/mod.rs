@@ -27,10 +27,11 @@ mod forward;
 pub mod pipeline;
 mod synth;
 
-pub use forward::{argmax, attend_head, greedy_generate, Capture, DecodeState, LayerKv, Rope};
+pub use forward::{argmax, attend_head, greedy_generate, Capture, DecodeState, Rope};
 pub use synth::{synthetic_checkpoint, synthetic_model};
 
 use crate::io::tlm::{TlmFile, TlmHeader};
+use crate::serving::kv::{KvArena, KvGeom};
 use crate::tensor::Matrix;
 use anyhow::{ensure, Result};
 use std::sync::{Arc, OnceLock};
@@ -176,6 +177,10 @@ pub struct Model {
     /// and LUT session of this model (built once per model, not per
     /// session / fork).
     rope: OnceLock<Arc<Rope>>,
+    /// Lazily-built pooled KV arena ([`KvArena`]): one slab per model,
+    /// every decode session (native and LUT) addresses its KV through a
+    /// slot of this arena.
+    arena: OnceLock<Arc<KvArena>>,
 }
 
 pub const RMS_EPS: f32 = 1e-5;
@@ -230,6 +235,7 @@ impl Model {
             norm_f: vecr("norm_f", d)?,
             lm_head: mat("lm_head", v, d)?,
             rope: OnceLock::new(),
+            arena: OnceLock::new(),
         })
     }
 
@@ -285,7 +291,7 @@ impl Model {
         self.cfg.max_seq * 4
     }
 
-    /// KV bytes one decode session allocates:
+    /// KV bytes one decode session occupies — one [`KvArena`] slot:
     /// `n_layers × cap × 2 × kv_dim × 4` bytes (K and V, f32). Under GQA
     /// this is exactly `n_heads / n_kv_heads` smaller than the MHA cache.
     pub fn kv_bytes_per_session(&self) -> usize {
@@ -298,6 +304,52 @@ impl Model {
         self.rope
             .get_or_init(|| Arc::new(Rope::new(self.decode_capacity(), self.cfg.head_dim())))
             .clone()
+    }
+
+    /// Default first-segment size of the per-model KV arena (the arena
+    /// doubles from there as sessions oversubscribe it).
+    pub const DEFAULT_KV_SLOTS: usize = 4;
+
+    /// The pooled KV arena for this model: one slab whose slots back
+    /// every decode session (built once per model, shared by clones;
+    /// unbounded doubling growth unless [`Model::init_kv_arena`] ran
+    /// first). See [`crate::serving::kv::KvArena`] for layout.
+    pub fn kv_arena(&self) -> Arc<KvArena> {
+        self.arena
+            .get_or_init(|| {
+                Arc::new(KvArena::with_limit(
+                    KvGeom::of(self),
+                    Self::DEFAULT_KV_SLOTS,
+                    usize::MAX,
+                ))
+            })
+            .clone()
+    }
+
+    /// Initialize the model's KV arena with an explicit first-segment
+    /// size and slot cap — must run **before** anything touches
+    /// [`Model::kv_arena`] (a decode, an engine, a metrics hook).
+    /// Panics if an arena with a *different* cap already exists, so a
+    /// requested memory bound can never be silently dropped. Tests use
+    /// the cap to exercise exhaustion; servers use it to bound KV
+    /// memory.
+    pub fn init_kv_arena(&self, initial_slots: usize, max_slots: usize) -> Arc<KvArena> {
+        let mut created = false;
+        let arena = self
+            .arena
+            .get_or_init(|| {
+                created = true;
+                Arc::new(KvArena::with_limit(KvGeom::of(self), initial_slots, max_slots))
+            })
+            .clone();
+        assert!(
+            created || arena.max_slots() == max_slots,
+            "KV arena already initialized with a different slot cap ({} vs requested {}) — \
+             call init_kv_arena before any decode/engine touches the model",
+            arena.max_slots(),
+            max_slots
+        );
+        arena
     }
 }
 

@@ -6,29 +6,31 @@
 //! is *executed*:
 //!
 //! * [`NativeStepper`] steps each session independently — dense matvecs
-//!   share nothing across sessions, so the pre-refactor per-session path
-//!   is kept unchanged;
+//!   share nothing across sessions, so the per-session path is kept
+//!   unchanged (its KV still lives in the shared arena);
 //! * [`BatchedLutStep`] fuses the sweep: one multi-LUT build per linear,
 //!   per-layer **batched** linears via [`crate::lut::lut_gemm`] (each
 //!   row's packed plane words are gathered once for all active sessions),
-//!   and a **fused attention phase**: sessions are grouped by decode
-//!   position and each layer runs one group-ordered pass over head-major
-//!   KV strips ([`crate::model::LayerKv`]) — contiguous dot/axpy sweeps
-//!   with per-(group, head) setup shared across the group, instead of
-//!   per-session strided scalar loops. Together with grouped-query
-//!   attention (KV caches are
-//!   `kv_dim`-wide, `n_heads / n_kv_heads` smaller than `d_model`) this
-//!   amortizes both the weight fetch and the KV bandwidth across the
-//!   batch — the decode-side analogue of ABQ-LLM's batched binary-matrix
-//!   kernels.
+//!   and a **fused attention phase**: every session's KV is a slot of
+//!   the model's pooled [`KvArena`], sessions are grouped by decode
+//!   position, and each layer runs the score/softmax/AV phase as a
+//!   single multi-session pass per (layer, kv-head) —
+//!   [`crate::tensor::strip_dots`] / [`crate::tensor::strip_axpys`]
+//!   walk the arena-adjacent strips of the whole group in one
+//!   position-major sweep instead of B separate strip walks. Together
+//!   with grouped-query attention (KV caches are `kv_dim`-wide,
+//!   `n_heads / n_kv_heads` smaller than `d_model`) this amortizes both
+//!   the weight fetch and the KV bandwidth across the batch — the
+//!   decode-side analogue of ABQ-LLM's batched binary-matrix kernels.
 
+use super::kv::{KvArena, KvHandle, KvView};
 use super::metrics::Metrics;
 use super::{Request, Response};
 use crate::lut::{lut_gemm, LutScratch};
-use crate::model::{argmax, attend_head, rmsnorm, silu, DecodeState, LayerKv, Model, Rope};
+use crate::model::{argmax, rmsnorm, silu, softmax, DecodeState, Model, Rope};
 use crate::quant::packing::BitPlanePacked;
 use crate::runtime::{self, Runtime};
-use crate::tensor::matvec;
+use crate::tensor::{matvec, strip_axpys, strip_dots};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -105,12 +107,22 @@ impl Engine {
         self.metrics = Some(metrics);
     }
 
+    /// The pooled KV arena this engine's sessions draw slots from (none
+    /// for the PJRT path, which threads its cache through literals).
+    fn arena(&self) -> Option<Arc<KvArena>> {
+        match &self.kind {
+            EngineKind::Native(model) => Some(model.kv_arena()),
+            EngineKind::Lut(lm) => Some(lm.base.kv_arena()),
+            EngineKind::Pjrt { .. } => None,
+        }
+    }
+
     /// Decode a batch of requests with continuous batching: every active
     /// session advances one token per sweep, and the whole sweep runs
     /// through the engine's stepper (fused for the LUT engine).
     pub fn generate_batch(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
         let metrics = self.metrics.clone();
-        match &self.kind {
+        let out = match &self.kind {
             EngineKind::Native(model) => {
                 let mut stepper = NativeStepper { model: model.clone() };
                 generate_generic(&mut stepper, reqs, metrics.as_ref())
@@ -124,7 +136,11 @@ impl Engine {
                 let rt = self.runtime.as_mut().context("pjrt runtime")?;
                 pjrt_generate(rt, &model, &artifact, cache_len, reqs)
             }
+        };
+        if let (Some(m), Some(a)) = (&self.metrics, self.arena()) {
+            m.observe_arena(a.id(), a.stats());
         }
+        out
     }
 }
 
@@ -280,17 +296,25 @@ impl Stepper for NativeStepper {
     }
 }
 
-/// LUT decode session state: per-layer head-major KV plus position. The
+/// LUT decode session state: an arena slot handle plus position. The
 /// per-step work buffers live in [`BatchedLutStep`], shared across the
-/// batch. Capacity comes from [`Model::decode_capacity`] — the same
-/// source as [`DecodeState`] — so the LUT and native engines truncate
-/// identically and allocate identical KV memory
-/// (`n_layers × cap × 2 × kv_dim × 4` bytes).
+/// batch; the KV itself lives in the model's pooled [`KvArena`] (same
+/// arena as [`DecodeState`] — identical capacity, identical slot bytes,
+/// so the LUT and native engines truncate identically).
 struct LutSession {
-    k: Vec<LayerKv>,
-    v: Vec<LayerKv>,
+    arena: Arc<KvArena>,
+    /// `Some` for the whole life of the session; taken only in `drop`.
+    handle: Option<KvHandle>,
     pos: usize,
     cap: usize,
+}
+
+impl Drop for LutSession {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.arena.release(h);
+        }
+    }
 }
 
 impl Session for LutSession {
@@ -304,37 +328,44 @@ impl Session for LutSession {
 
 /// Batched LUT stepper: all active sessions advance together through one
 /// fused pass per sweep — shared multi-LUT build, per-layer batched
-/// linears ([`lut_gemm`]), per-session attention/KV. Per-slot buffers are
-/// reused across sweeps so the warm decode loop is allocation-free (save
-/// for the per-linear slice-of-refs assembly).
+/// linears ([`lut_gemm`]), and a score/softmax/AV phase that runs as one
+/// multi-session pass per (layer, kv-head) over arena-adjacent KV
+/// strips. Work buffers are flat `nb × width` slabs reused across
+/// sweeps, so the warm decode loop makes no per-session allocations
+/// (save for the per-phase slice-of-refs assembly).
 struct BatchedLutStep {
     lm: LutModel,
     rope: Arc<Rope>,
+    arena: Arc<KvArena>,
     cap: usize,
     scratch: LutScratch,
-    // per-slot step buffers (slot = position within the current sweep)
-    h: Vec<Vec<f32>>,
-    normed: Vec<Vec<f32>>,
-    q: Vec<Vec<f32>>,
-    kx: Vec<Vec<f32>>,
-    vx: Vec<Vec<f32>>,
-    attn: Vec<Vec<f32>>,
-    proj: Vec<Vec<f32>>,
-    up: Vec<Vec<f32>>,
-    gate: Vec<Vec<f32>>,
-    mid: Vec<Vec<f32>>,
-    down: Vec<Vec<f32>>,
+    // flat per-sweep buffers, b-major (`buf[b*width..(b+1)*width]`)
+    h: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    kx: Vec<f32>,
+    vx: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    up: Vec<f32>,
+    gate: Vec<f32>,
+    mid: Vec<f32>,
+    down: Vec<f32>,
+    // group-batched score buffer, `group_len × (t+1)`, lane-major
     scores: Vec<f32>,
 }
 
 impl BatchedLutStep {
     fn new(lm: LutModel) -> Self {
         let cap = lm.base.decode_capacity();
-        // One rope table per model, shared with every DecodeState.
+        // One rope table and one KV arena per model, shared with every
+        // DecodeState of the same model.
         let rope = lm.base.rope();
+        let arena = lm.base.kv_arena();
         Self {
             lm,
             rope,
+            arena,
             cap,
             scratch: LutScratch::default(),
             h: Vec::new(),
@@ -353,44 +384,60 @@ impl BatchedLutStep {
     }
 }
 
-/// Grow a per-slot buffer pool to at least `nb` slots.
-fn ensure_slots(bufs: &mut Vec<Vec<f32>>, nb: usize) {
-    while bufs.len() < nb {
-        bufs.push(Vec::new());
-    }
-}
-
-/// One batched linear: `ys[b] = packed("l{l}.{name}") · xs[b]` for all
-/// `b < nb`, through the fused [`lut_gemm`] kernel.
+/// One batched linear over flat b-major buffers:
+/// `ys[b*d_out..] = packed("l{l}.{name}") · xs[b*d_in..]` for every
+/// lane (`xs.len() / d_in` of them — the flat buffers are sized to
+/// exactly the sweep batch), through the fused [`lut_gemm`] kernel
+/// (which fully overwrites every output row).
 fn lin_batch(
     lm: &LutModel,
     l: usize,
     name: &str,
-    xs: &[Vec<f32>],
-    nb: usize,
-    ys: &mut Vec<Vec<f32>>,
+    xs: &[f32],
+    d_in: usize,
+    ys: &mut Vec<f32>,
     scratch: &mut LutScratch,
 ) {
     let rec = &lm.packed[&format!("l{l}.{name}")];
-    ensure_slots(ys, nb);
-    let xrefs: Vec<&[f32]> = xs[..nb].iter().map(|x| x.as_slice()).collect();
-    let mut yrefs: Vec<&mut [f32]> = Vec::with_capacity(nb);
-    for y in ys[..nb].iter_mut() {
-        y.resize(rec.d_out, 0.0);
-        yrefs.push(y.as_mut_slice());
-    }
+    debug_assert_eq!(rec.d_in, d_in);
+    debug_assert_eq!(xs.len() % d_in, 0);
+    let nb = xs.len() / d_in;
+    ys.resize(nb * rec.d_out, 0.0);
+    let xrefs: Vec<&[f32]> = xs.chunks_exact(d_in).collect();
+    let mut yrefs: Vec<&mut [f32]> = ys.chunks_exact_mut(rec.d_out).collect();
     lut_gemm(rec, &xrefs, &mut yrefs, scratch);
+}
+
+/// Carve disjoint `&mut buf[b*row_len + o0 ..][..sub_len]` sub-slices
+/// out of a flat b-major buffer for an **ascending** list of lane
+/// indices — the safe-split plumbing that lets the batched AV kernel
+/// write every session in a position group in one pass.
+fn disjoint_rows_mut<'a>(
+    buf: &'a mut [f32],
+    row_len: usize,
+    lanes: &[usize],
+    o0: usize,
+    sub_len: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut rows = buf.chunks_exact_mut(row_len);
+    let mut out = Vec::with_capacity(lanes.len());
+    let mut next = 0usize;
+    for &b in lanes {
+        debug_assert!(b >= next, "lanes must be ascending");
+        let row = rows.nth(b - next).expect("lane within buffer");
+        out.push(&mut row[o0..o0 + sub_len]);
+        next = b + 1;
+    }
+    out
 }
 
 impl Stepper for BatchedLutStep {
     type Sess = LutSession;
 
     fn make(&self, _r: &Request) -> LutSession {
-        let cfg = &self.lm.base.cfg;
-        let (nkv, hd) = (cfg.n_kv_heads, cfg.head_dim());
         LutSession {
-            k: (0..cfg.n_layers).map(|_| LayerKv::new(nkv, self.cap, hd)).collect(),
-            v: (0..cfg.n_layers).map(|_| LayerKv::new(nkv, self.cap, hd)).collect(),
+            arena: self.arena.clone(),
+            handle: Some(self.arena.acquire().expect("KV arena exhausted")),
             pos: 0,
             cap: self.cap,
         }
@@ -402,44 +449,42 @@ impl Stepper for BatchedLutStep {
         if nb == 0 {
             return Vec::new();
         }
-        // Arc clone so `model` does not borrow `self` (the per-slot
-        // buffers below need disjoint &mut borrows of self's fields).
+        // Arc clone so `model` does not borrow `self` (the flat buffers
+        // below need disjoint &mut borrows of self's fields).
         let model = self.lm.base.clone();
         let cfg = &model.cfg;
         let (d, nh, nkv, hd) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let kvd = cfg.kv_dim();
+        let dff = cfg.d_ff;
         let group = cfg.kv_group();
         let scale = 1.0 / (hd as f32).sqrt();
 
-        ensure_slots(&mut self.h, nb);
-        ensure_slots(&mut self.normed, nb);
-        ensure_slots(&mut self.attn, nb);
-        ensure_slots(&mut self.mid, nb);
-
-        for (b, (&tok, sess)) in tokens.iter().zip(sessions.iter()).enumerate() {
+        self.h.clear();
+        for (&tok, sess) in tokens.iter().zip(sessions.iter()) {
             assert!(sess.pos < sess.cap, "KV cache exhausted");
             let id = (tok as usize).min(cfg.vocab_size - 1);
-            let hb = &mut self.h[b];
-            hb.clear();
-            hb.extend_from_slice(model.embed.row(id));
+            self.h.extend_from_slice(model.embed.row(id));
         }
+        self.normed.resize(nb * d, 0.0);
 
-        // Group sweep slots by decode position (stable within the sweep:
-        // positions advance only at the end). Slots at equal positions
-        // share the score-buffer length, so the per-layer attention phase
-        // below runs as one uniform pass per group over the shared
-        // head-major layout — not per-session control flow.
+        // Group sweep lanes by decode position (stable within the sweep:
+        // positions advance only at the end). Lanes at equal positions
+        // share the score length, so each (layer, kv-head) below is one
+        // uniform batched pass per group — ascending lane order inside a
+        // group both keeps the output deterministic and lets the AV
+        // writer carve disjoint sub-slices front to back.
         let mut order: Vec<usize> = (0..nb).collect();
         order.sort_unstable_by_key(|&b| sessions[b].pos);
-        let mut groups: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
-        let mut i = 0;
-        while i < nb {
-            let t = sessions[order[i]].pos;
-            let mut j = i + 1;
-            while j < nb && sessions[order[j]].pos == t {
-                j += 1;
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &b in &order {
+            let t = sessions[b].pos;
+            match groups.last_mut() {
+                Some((gt, lanes)) if *gt == t => lanes.push(b),
+                _ => groups.push((t, vec![b])),
             }
-            groups.push((t, i..j));
-            i = j;
+        }
+        for (_, lanes) in &mut groups {
+            lanes.sort_unstable();
         }
 
         for l in 0..cfg.n_layers {
@@ -447,100 +492,116 @@ impl Stepper for BatchedLutStep {
 
             // ---- attention (GQA: `group` q heads per kv head) ----
             for b in 0..nb {
-                self.normed[b].resize(d, 0.0);
+                let (h0, h1) = (b * d, (b + 1) * d);
+                rmsnorm(&self.h[h0..h1], &lw.norm1, &mut self.normed[h0..h1]);
             }
-            for b in 0..nb {
-                rmsnorm(&self.h[b], &lw.norm1, &mut self.normed[b]);
-            }
-            lin_batch(&self.lm, l, "wq", &self.normed, nb, &mut self.q, &mut self.scratch);
-            lin_batch(&self.lm, l, "wk", &self.normed, nb, &mut self.kx, &mut self.scratch);
-            lin_batch(&self.lm, l, "wv", &self.normed, nb, &mut self.vx, &mut self.scratch);
+            lin_batch(&self.lm, l, "wq", &self.normed, d, &mut self.q, &mut self.scratch);
+            lin_batch(&self.lm, l, "wk", &self.normed, d, &mut self.kx, &mut self.scratch);
+            lin_batch(&self.lm, l, "wv", &self.normed, d, &mut self.vx, &mut self.scratch);
 
             for (b, sess) in sessions.iter_mut().enumerate() {
                 let t = sess.pos;
+                let qb = &mut self.q[b * d..(b + 1) * d];
                 for hh in 0..nh {
-                    self.rope.apply(&mut self.q[b][hh * hd..(hh + 1) * hd], t);
+                    self.rope.apply(&mut qb[hh * hd..(hh + 1) * hd], t);
                 }
+                let kxb = &mut self.kx[b * kvd..(b + 1) * kvd];
                 for hh in 0..nkv {
-                    self.rope.apply(&mut self.kx[b][hh * hd..(hh + 1) * hd], t);
+                    self.rope.apply(&mut kxb[hh * hd..(hh + 1) * hd], t);
                 }
-                sess.k[l].store(t, &self.kx[b]);
-                sess.v[l].store(t, &self.vx[b]);
-
-                let attnb = &mut self.attn[b];
-                attnb.resize(d, 0.0);
-                attnb.iter_mut().for_each(|a| *a = 0.0);
+                let mut kv = self.arena.view_mut(sess.handle.as_mut().expect("live session"));
+                kv.store_k(l, t, &self.kx[b * kvd..(b + 1) * kvd]);
+                kv.store_v(l, t, &self.vx[b * kvd..(b + 1) * kvd]);
             }
+            self.attn.clear();
+            self.attn.resize(nb * d, 0.0);
 
-            // Batched score/softmax/AV: one pass per position group with
-            // heads walked *outside* the session loop, so the per-(group,
-            // head) setup — score length, head offset, kv-head mapping —
-            // is computed once and applied to every session in the group,
-            // and each session's work is a contiguous strip sweep
-            // (dot + axpy over `t+1 × hd`). Per-session KV strips stay
-            // independent memory, so this is the most cross-session
-            // fusion the layout admits; pooling strips into one shared
-            // slab matvec is the follow-on (ROADMAP).
-            for (t, range) in &groups {
-                let t = *t;
-                self.scores.resize(t + 1, 0.0);
-                for hh in 0..nh {
-                    let o0 = hh * hd;
-                    let kvh = hh / group;
-                    for &b in &order[range.clone()] {
-                        let sess: &LutSession = &sessions[b];
-                        attend_head(
-                            &self.q[b][o0..o0 + hd],
-                            sess.k[l].strip(kvh, t + 1),
-                            sess.v[l].strip(kvh, t + 1),
-                            scale,
-                            &mut self.scores,
-                            &mut self.attn[b][o0..o0 + hd],
-                        );
+            // Batched score/softmax/AV: one multi-session pass per
+            // (position group, kv-head). All sessions in a group share
+            // the score length and the head geometry, their KV strips
+            // are slots of one arena slab (adjacent for batch-created
+            // sessions), and `strip_dots` / `strip_axpys` walk every
+            // session's strip together position-major — a genuine
+            // batched matvec over pooled memory, not B separate strip
+            // walks. Per-lane accumulation order matches `attend_head`
+            // exactly, so the fused sweep stays token-identical to B=1.
+            let arena = &self.arena;
+            let views: Vec<KvView> = sessions
+                .iter()
+                .map(|s| arena.view(s.handle.as_ref().expect("live session")))
+                .collect();
+            for (t, lanes) in &groups {
+                let (t, gl) = (*t, lanes.len());
+                self.scores.resize(gl * (t + 1), 0.0);
+                for kvh in 0..nkv {
+                    let kstrips: Vec<&[f32]> =
+                        lanes.iter().map(|&b| views[b].k_strip(l, kvh, t + 1)).collect();
+                    let vstrips: Vec<&[f32]> =
+                        lanes.iter().map(|&b| views[b].v_strip(l, kvh, t + 1)).collect();
+                    for g in 0..group {
+                        let o0 = (kvh * group + g) * hd;
+                        let qs: Vec<&[f32]> =
+                            lanes.iter().map(|&b| &self.q[b * d + o0..b * d + o0 + hd]).collect();
+                        let scores = &mut self.scores[..gl * (t + 1)];
+                        strip_dots(&qs, &kstrips, hd, scale, scores);
+                        for lane_scores in scores.chunks_exact_mut(t + 1) {
+                            softmax(lane_scores);
+                        }
+                        let mut outs =
+                            disjoint_rows_mut(&mut self.attn[..nb * d], d, lanes, o0, hd);
+                        strip_axpys(scores, &vstrips, hd, &mut outs);
                     }
                 }
             }
+            drop(views);
 
-            lin_batch(&self.lm, l, "wo", &self.attn, nb, &mut self.proj, &mut self.scratch);
-            for b in 0..nb {
-                for (hi, p) in self.h[b].iter_mut().zip(self.proj[b].iter()) {
-                    *hi += p;
-                }
+            lin_batch(&self.lm, l, "wo", &self.attn, d, &mut self.proj, &mut self.scratch);
+            for (hi, p) in self.h[..nb * d].iter_mut().zip(self.proj[..nb * d].iter()) {
+                *hi += p;
             }
 
             // ---- MLP (SwiGLU) ----
             for b in 0..nb {
-                rmsnorm(&self.h[b], &lw.norm2, &mut self.normed[b]);
+                let (h0, h1) = (b * d, (b + 1) * d);
+                rmsnorm(&self.h[h0..h1], &lw.norm2, &mut self.normed[h0..h1]);
             }
-            lin_batch(&self.lm, l, "w1", &self.normed, nb, &mut self.up, &mut self.scratch);
-            lin_batch(&self.lm, l, "w3", &self.normed, nb, &mut self.gate, &mut self.scratch);
-            for b in 0..nb {
-                let midb = &mut self.mid[b];
-                midb.resize(self.up[b].len(), 0.0);
-                for ((m, &u), &gt) in
-                    midb.iter_mut().zip(self.up[b].iter()).zip(self.gate[b].iter())
-                {
-                    *m = u * silu(gt);
-                }
+            lin_batch(&self.lm, l, "w1", &self.normed, d, &mut self.up, &mut self.scratch);
+            lin_batch(&self.lm, l, "w3", &self.normed, d, &mut self.gate, &mut self.scratch);
+            self.mid.resize(nb * dff, 0.0);
+            for ((m, &u), &gt) in self.mid[..nb * dff]
+                .iter_mut()
+                .zip(self.up[..nb * dff].iter())
+                .zip(self.gate[..nb * dff].iter())
+            {
+                *m = u * silu(gt);
             }
-            lin_batch(&self.lm, l, "w2", &self.mid, nb, &mut self.down, &mut self.scratch);
-            for b in 0..nb {
-                for (hi, dn) in self.h[b].iter_mut().zip(self.down[b].iter()) {
-                    *hi += dn;
-                }
+            lin_batch(&self.lm, l, "w2", &self.mid, dff, &mut self.down, &mut self.scratch);
+            for (hi, dn) in self.h[..nb * d].iter_mut().zip(self.down[..nb * d].iter()) {
+                *hi += dn;
             }
         }
 
         let mut out = Vec::with_capacity(nb);
         for (b, sess) in sessions.iter_mut().enumerate() {
             sess.pos += 1;
-            let normb = &mut self.normed[b];
-            normb.resize(d, 0.0);
-            rmsnorm(&self.h[b], &model.norm_f, normb);
+            let normb = &mut self.normed[b * d..(b + 1) * d];
+            rmsnorm(&self.h[b * d..(b + 1) * d], &model.norm_f, normb);
             out.push(matvec(&model.lm_head, normb));
         }
         out
     }
+}
+
+/// KV-cache width the AOT decode artifact was lowered with, from the
+/// `kv_dim` line of its sibling `.meta` file (written by
+/// `python/compile/aot.py` since the GQA-aware lowering). `None` marks a
+/// stale TLM1-era artifact that threads `d_model`-wide caches.
+fn artifact_kv_dim(artifact: &std::path::Path) -> Option<usize> {
+    let name = artifact.file_name()?.to_str()?;
+    let base = name.strip_suffix(".hlo.txt").unwrap_or(name);
+    let meta = artifact.with_file_name(format!("{base}.meta"));
+    let text = std::fs::read_to_string(meta).ok()?;
+    text.lines().find_map(|line| line.strip_prefix("kv_dim ")?.trim().parse().ok())
 }
 
 /// PJRT path: run requests sequentially through the AOT decode-step
@@ -555,16 +616,32 @@ fn pjrt_generate(
     cache_len: usize,
     reqs: &[Request],
 ) -> Result<Vec<Response>> {
-    // The AOT decode-step artifact predates GQA and threads a full
-    // d_model-wide KV cache; refuse grouped-query checkpoints rather than
-    // silently mis-shaping the cache literals.
-    anyhow::ensure!(
-        model.cfg.n_kv_heads == model.cfg.n_heads,
-        "PJRT decode artifact supports MHA only (n_kv_heads == n_heads)"
-    );
+    // GQA-aware artifacts declare their cache width (`kv_dim`) in the
+    // sibling meta file and must match the checkpoint exactly. Stale
+    // TLM1-era artifacts (no kv_dim line) thread a full d_model-wide
+    // cache, so only MHA checkpoints may use them — refuse rather than
+    // silently mis-shape the cache literals.
+    let kv_dim = match artifact_kv_dim(artifact) {
+        Some(kd) => {
+            anyhow::ensure!(
+                kd == model.cfg.kv_dim(),
+                "decode artifact kv_dim {kd} != checkpoint kv_dim {} — regenerate with \
+                 python -m compile.aot",
+                model.cfg.kv_dim()
+            );
+            kd
+        }
+        None => {
+            anyhow::ensure!(
+                model.cfg.n_kv_heads == model.cfg.n_heads,
+                "stale decode artifact (no kv_dim in meta) supports MHA only — regenerate \
+                 with python -m compile.aot for GQA checkpoints"
+            );
+            model.cfg.d_model
+        }
+    };
     let nl = model.cfg.n_layers;
-    let d = model.cfg.d_model;
-    let cache_elems = nl * cache_len * d;
+    let cache_elems = nl * cache_len * kv_dim;
     let mut out = Vec::with_capacity(reqs.len());
     let exe = rt.load(artifact)?;
 
@@ -572,8 +649,9 @@ fn pjrt_generate(
         let started = Instant::now();
         let mut first_tok = None;
         let zeros = vec![0.0f32; cache_elems];
-        let mut klit = runtime::literal_f32(&zeros, &[nl as i64, cache_len as i64, d as i64])?;
-        let mut vlit = runtime::literal_f32(&zeros, &[nl as i64, cache_len as i64, d as i64])?;
+        let shape = [nl as i64, cache_len as i64, kv_dim as i64];
+        let mut klit = runtime::literal_f32(&zeros, &shape)?;
+        let mut vlit = runtime::literal_f32(&zeros, &shape)?;
         let mut logits: Vec<f32> = Vec::new();
         let mut pos = 0usize;
         let budget = cache_len.saturating_sub(2);
@@ -811,6 +889,48 @@ mod tests {
         assert_eq!(a[0].tokens, b[0].tokens, "truncation point diverged");
         assert!(!a[0].tokens.is_empty(), "should have generated something");
         assert!(a[0].tokens.len() < 10, "capacity must truncate generation");
+    }
+
+    #[test]
+    fn arena_slot_reuse_keeps_decode_identical() {
+        // Back-to-back batches on one engine reuse the same (dirty)
+        // arena slots; results must be token-identical to the first
+        // (zero-filled-slot) run — for native and LUT, MHA and GQA.
+        for n_kv in [1usize, 4] {
+            let (mut native, mut lut) = quantized_engine_pair(tiny_gqa(n_kv), 16);
+            for engine in [&mut native, &mut lut] {
+                let first = engine.generate_batch(&reqs(3)).unwrap();
+                let second = engine.generate_batch(&reqs(3)).unwrap();
+                for (a, b) in first.iter().zip(&second) {
+                    assert_eq!(a.tokens, b.tokens, "n_kv {n_kv} {}", engine.kind_name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engines_share_one_arena_per_model() {
+        // Both engines over the same base model draw slots from the
+        // same pooled arena (its high-water mark sees both).
+        let (mut native, mut lut) = quantized_engine_pair(tiny(), 16);
+        let _ = native.generate_batch(&reqs(2)).unwrap();
+        let _ = lut.generate_batch(&reqs(3)).unwrap();
+        let a = native.arena().unwrap();
+        let b = lut.arena().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "one arena per model");
+        assert!(a.stats().high_water >= 3);
+        assert_eq!(a.stats().slots_in_use, 0, "all sessions released");
+    }
+
+    #[test]
+    #[should_panic(expected = "KV arena exhausted")]
+    fn arena_exhaustion_panics_like_capacity() {
+        // A hard slot cap below the batch size fails loudly at session
+        // creation — the arena-level analogue of "KV cache exhausted".
+        let model = tiny();
+        model.init_kv_arena(1, 1);
+        let mut e = Engine::new(EngineKind::Native(model)).unwrap();
+        let _ = e.generate_batch(&reqs(2));
     }
 
     #[test]

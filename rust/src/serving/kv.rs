@@ -1,76 +1,475 @@
-//! KV-cache slab — pooled decode states.
+//! KV arena — one pooled slab per model, shared by every decode session.
 //!
-//! Each decode session needs
+//! ## Layout
+//!
+//! The arena owns contiguous f32 slabs carved into fixed-size **slots**,
+//! one per live decode session. A slot holds the session's entire KV
+//! state:
 //!
 //! ```text
-//! n_layers × cap × 2 × kv_dim × 4  bytes        (K and V, f32;
-//!                                                cap = Model::decode_capacity(),
-//!                                                kv_dim = n_kv_heads × head_dim)
+//! bytes/slot = n_layers × 2 × n_kv_heads × cap × head_dim × 4
+//!              (K and V, f32; cap = Model::decode_capacity(),
+//!               n_kv_heads × head_dim = kv_dim — the GQA-shrunk width)
 //! ```
 //!
-//! of KV storage — see [`crate::model::Model::kv_bytes_per_session`].
-//! Under grouped-query attention (`n_kv_heads < n_heads`) this is exactly
-//! `n_heads / n_kv_heads` smaller than the d_model-wide MHA cache, which
-//! is the lever that lets large-batch decode fit in memory bandwidth.
-//! Allocating it per request is the dominant allocator pressure in the
-//! decode loop; the slab keeps a free list of reset states and hands them
-//! out in LIFO order (warmest cache lines first).
+//! laid out layer-major, then K/V, then head-major:
+//!
+//! ```text
+//! slot ─┬─ layer 0 ─┬─ K ─┬─ kv-head 0 │cap × head_dim│  ← one strip
+//!       │           │     └─ kv-head 1 │cap × head_dim│
+//!       │           └─ V ─┬─ kv-head 0 │cap × head_dim│
+//!       │                 └─ …
+//!       ├─ layer 1 ─ …
+//!       └─ layer L-1 ─ …
+//! ```
+//!
+//! Layer-major first because the decode sweep visits layers outermost —
+//! everything a layer's attention pass touches sits in one contiguous
+//! span of the slot. Head-major inside because each head's score pass is
+//! then one contiguous dot sweep and its AV pass a run of contiguous
+//! axpys (the PR-2 `LayerKv` property, now arena-wide). Making the
+//! *slots themselves* adjacent in one slab is what turns the batched
+//! serving sweep's score/AV phase into a single multi-session pass per
+//! (layer, kv-head) — [`crate::tensor::strip_dots`] /
+//! [`crate::tensor::strip_axpys`] walk every session in a position group
+//! together over arena-adjacent strips — instead of B separate strip
+//! walks over B scattered heap allocations.
+//!
+//! ## Handles and safety
+//!
+//! [`KvHandle`] is an affine token (slot index + generation; not
+//! `Clone`): at most one handle per live slot exists, handed out by
+//! [`KvArena::acquire`] and consumed by [`KvArena::release`]. Shared
+//! reads go through [`KvView`] (borrows the handle), exclusive writes
+//! through [`KvViewMut`] (borrows it mutably) — the borrow checker
+//! enforces per-slot aliasing discipline, and the only `unsafe` is the
+//! disjoint-slot slice carving, whose bounds (strip coordinates, store
+//! position, strip length, fork position) are **hard** asserts in every
+//! build profile. Handles are stamped with their arena's id and
+//! rejected by foreign arenas; generations catch stale handles
+//! ([`KvArena::is_live`], asserted on release). [`KvArena::fork`] is a
+//! slot-to-slot copy of the live
+//! `pos × head_dim` prefix of every strip — the prefix-cache trick
+//! behind fast multiple-choice scoring.
+//!
+//! ## Exhaustion and growth
+//!
+//! The arena starts empty and grows by whole slab segments (doubling,
+//! so steady state is one or two big slabs) up to `max_slots`; beyond
+//! that `acquire` returns `None` and session construction panics with
+//! "KV arena exhausted" — the same loud-failure contract as the decode
+//! capacity assert ("KV cache exhausted"). Freed slots are reused LIFO
+//! (warmest lines first), which is also what keeps concurrently active
+//! sessions in *adjacent* slots for the batched sweep.
 
-use crate::model::{DecodeState, Model};
-use std::sync::{Arc, Mutex};
+use crate::model::Model;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-struct SlabInner {
-    free: Vec<DecodeState>,
-    created: usize,
-    reused: usize,
+/// Monotonic arena id source — lets handles be checked against the
+/// arena they came from (releasing into a foreign arena would otherwise
+/// mint two live handles to one slot).
+static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Geometry of one model's KV slots — everything the arena needs to
+/// know about a model, without holding the model (no `Arc` cycle with
+/// [`Model`]'s cached arena).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvGeom {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// positions per session — `Model::decode_capacity()`
+    pub cap: usize,
 }
 
-/// Thread-safe pool of [`DecodeState`]s for one model.
-#[derive(Clone)]
-pub struct KvSlab {
-    model: Arc<Model>,
-    inner: Arc<Mutex<SlabInner>>,
-    max_pooled: usize,
-}
-
-impl KvSlab {
-    pub fn new(model: Arc<Model>, max_pooled: usize) -> Self {
+impl KvGeom {
+    pub fn of(model: &Model) -> Self {
         Self {
-            model,
-            inner: Arc::new(Mutex::new(SlabInner { free: Vec::new(), created: 0, reused: 0 })),
-            max_pooled,
+            n_layers: model.cfg.n_layers,
+            n_kv_heads: model.cfg.n_kv_heads,
+            head_dim: model.cfg.head_dim(),
+            cap: model.decode_capacity(),
         }
     }
 
-    /// Acquire a reset decode state (reused if available).
-    pub fn acquire(&self) -> DecodeState {
+    /// f32 elements per arena slot: `n_layers × 2 × n_kv_heads × cap ×
+    /// head_dim`.
+    pub fn slot_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.cap * self.head_dim
+    }
+
+    /// Bytes per slot (the per-session KV footprint —
+    /// `Model::kv_bytes_per_session`).
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_elems() * 4
+    }
+
+    /// Element offset of the (layer, K=0/V=1, kv-head) strip within a
+    /// slot. Hard-bounded: this offset feeds the raw-pointer slice
+    /// carving in the views, so out-of-range coordinates must never
+    /// reach it in any build profile.
+    #[inline]
+    fn strip_base(&self, layer: usize, which: usize, kvh: usize) -> usize {
+        assert!(
+            layer < self.n_layers && which < 2 && kvh < self.n_kv_heads,
+            "KV strip coordinates out of range"
+        );
+        ((layer * 2 + which) * self.n_kv_heads + kvh) * self.cap * self.head_dim
+    }
+}
+
+/// Affine ownership token for one arena slot. Not `Clone` — exactly one
+/// handle exists per live slot, so `&mut KvHandle` is exclusive access
+/// to the slot's memory and `&KvHandle` is shared read access.
+pub struct KvHandle {
+    slot: usize,
+    generation: u64,
+    arena_id: u64,
+    base: *mut f32,
+}
+
+// Safety: a handle's slot region is disjoint from every other live
+// handle's (arena invariant: one handle per slot), and all access goes
+// through KvView/KvViewMut whose aliasing the borrow checker enforces
+// via the handle borrow. Moving or sharing the token itself is
+// therefore safe.
+unsafe impl Send for KvHandle {}
+unsafe impl Sync for KvHandle {}
+
+impl KvHandle {
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+/// Cumulative arena counters (surfaced through `serving::metrics` into
+/// the serve summary and `BENCH_decode.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// live sessions right now
+    pub slots_in_use: usize,
+    /// most sessions ever live at once
+    pub high_water: usize,
+    /// slots ever carved out of slabs
+    pub slots_created: usize,
+    /// acquisitions served from the free list (pooling hit count)
+    pub reused: usize,
+    /// bytes of slab currently allocated
+    pub bytes_resident: usize,
+    /// slot-to-slot prefix copies performed by `fork`
+    pub fork_copies: u64,
+}
+
+struct ArenaInner {
+    /// owning slab segments; boxed so the heap buffers never move when
+    /// the segment list grows
+    segments: Vec<Box<[f32]>>,
+    /// per-slot base pointer into its segment, indexed by slot id
+    bases: Vec<*mut f32>,
+    /// bumped on release; a mismatch means a stale handle
+    generations: Vec<u64>,
+    /// LIFO free list of slot ids
+    free: Vec<usize>,
+    in_use: usize,
+    high_water: usize,
+    reused: usize,
+    fork_copies: u64,
+    bytes_resident: usize,
+}
+
+// Safety: the raw per-slot pointers are only dereferenced through
+// KvView/KvViewMut under the handle discipline; the inner bookkeeping
+// itself is only touched under the mutex.
+unsafe impl Send for ArenaInner {}
+
+/// One pooled KV slab per model. See the module docs for layout and the
+/// handle/ownership contract.
+pub struct KvArena {
+    id: u64,
+    geom: KvGeom,
+    initial_slots: usize,
+    max_slots: usize,
+    inner: Mutex<ArenaInner>,
+}
+
+impl std::fmt::Debug for KvArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvArena")
+            .field("geom", &self.geom)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl KvArena {
+    /// Arena that grows without bound (by doubling segments).
+    pub fn new(geom: KvGeom, initial_slots: usize) -> Self {
+        Self::with_limit(geom, initial_slots, usize::MAX)
+    }
+
+    /// Arena capped at `max_slots` total; `acquire` returns `None` once
+    /// every slot is live.
+    pub fn with_limit(geom: KvGeom, initial_slots: usize, max_slots: usize) -> Self {
+        assert!(initial_slots > 0, "arena needs at least one slot");
+        Self {
+            id: NEXT_ARENA_ID.fetch_add(1, Ordering::Relaxed),
+            geom,
+            initial_slots,
+            max_slots,
+            inner: Mutex::new(ArenaInner {
+                segments: Vec::new(),
+                bases: Vec::new(),
+                generations: Vec::new(),
+                free: Vec::new(),
+                in_use: 0,
+                high_water: 0,
+                reused: 0,
+                fork_copies: 0,
+                bytes_resident: 0,
+            }),
+        }
+    }
+
+    pub fn geom(&self) -> KvGeom {
+        self.geom
+    }
+
+    /// Unique id of this arena (stamped into every handle; used to key
+    /// per-arena metrics and to reject foreign handles).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Total slots this arena may ever carve (`usize::MAX` = unbounded).
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    /// A handle is only meaningful inside the arena that minted it —
+    /// releasing or viewing through a foreign arena would break the
+    /// one-handle-per-slot invariant the unsafe slice carving relies on.
+    #[inline]
+    fn check_owned(&self, h: &KvHandle) {
+        assert_eq!(h.arena_id, self.id, "KV handle used with a foreign arena");
+    }
+
+    /// Carve a fresh segment (doubling growth) into the free list.
+    fn grow(&self, inner: &mut ArenaInner) {
+        let have = inner.bases.len();
+        if have >= self.max_slots {
+            return;
+        }
+        let want = if have == 0 { self.initial_slots } else { have };
+        let add = want.min(self.max_slots - have);
+        let elems = self.geom.slot_elems();
+        let mut seg = vec![0.0f32; add * elems].into_boxed_slice();
+        let base = seg.as_mut_ptr();
+        for i in 0..add {
+            inner.bases.push(unsafe { base.add(i * elems) });
+            inner.generations.push(0);
+        }
+        // Push in reverse so LIFO pops hand out ascending slot ids —
+        // concurrently-acquired sessions land in adjacent slots.
+        for i in (0..add).rev() {
+            inner.free.push(have + i);
+        }
+        inner.bytes_resident += add * elems * 4;
+        inner.segments.push(seg);
+    }
+
+    /// Claim a slot. `None` only when the arena is at `max_slots` with
+    /// every slot live — callers turn that into a "KV arena exhausted"
+    /// panic, mirroring the decode capacity assert.
+    pub fn acquire(&self) -> Option<KvHandle> {
         let mut inner = self.inner.lock().unwrap();
-        match inner.free.pop() {
-            Some(mut st) => {
+        let slot = match inner.free.pop() {
+            Some(s) => {
                 inner.reused += 1;
-                st.reset();
-                st
+                s
             }
             None => {
-                inner.created += 1;
-                drop(inner);
-                self.model.decode_state()
+                self.grow(&mut inner);
+                inner.free.pop()?
+            }
+        };
+        inner.in_use += 1;
+        inner.high_water = inner.high_water.max(inner.in_use);
+        Some(KvHandle {
+            slot,
+            generation: inner.generations[slot],
+            arena_id: self.id,
+            base: inner.bases[slot],
+        })
+    }
+
+    /// Return a slot to the free list. The generation bump invalidates
+    /// any (buggy, unsafe-born) copy of the handle.
+    pub fn release(&self, h: KvHandle) {
+        self.check_owned(&h);
+        let mut inner = self.inner.lock().unwrap();
+        assert_eq!(inner.generations[h.slot], h.generation, "double release / stale KV handle");
+        inner.generations[h.slot] = inner.generations[h.slot].wrapping_add(1);
+        inner.in_use -= 1;
+        inner.free.push(h.slot);
+    }
+
+    /// Does `(slot, generation)` name a currently-live claim? Stale
+    /// handles (released, possibly re-acquired by someone else) answer
+    /// `false` — the reuse-after-release safety check.
+    pub fn is_live(&self, slot: usize, generation: u64) -> bool {
+        let inner = self.inner.lock().unwrap();
+        slot < inner.generations.len()
+            && inner.generations[slot] == generation
+            && !inner.free.contains(&slot)
+    }
+
+    /// Branch-point copy: claim a fresh slot and copy the live
+    /// `pos × head_dim` prefix of every (layer, K/V, head) strip from
+    /// `src` — contiguous block copies inside the slab, no zeroing of
+    /// the never-read tails.
+    pub fn fork(&self, src: &KvHandle, pos: usize) -> Option<KvHandle> {
+        self.check_owned(src);
+        // Hard bound: this arithmetic feeds raw-pointer copies below.
+        assert!(pos <= self.geom.cap, "fork position {pos} beyond slot capacity");
+        let dst = self.acquire()?;
+        let hd = self.geom.head_dim;
+        let n = pos * hd;
+        if n > 0 {
+            let strip_elems = self.geom.cap * hd;
+            for s in 0..self.geom.n_layers * 2 * self.geom.n_kv_heads {
+                let off = s * strip_elems;
+                // Safety: src is live (we hold &KvHandle, so no
+                // KvViewMut can exist) and dst was just acquired (no
+                // other reference); distinct slots never overlap.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(src.base.add(off), dst.base.add(off), n);
+                }
+            }
+        }
+        self.inner.lock().unwrap().fork_copies += 1;
+        Some(dst)
+    }
+
+    /// Shared read access to a slot's strips.
+    pub fn view<'a>(&'a self, h: &'a KvHandle) -> KvView<'a> {
+        self.check_owned(h);
+        debug_assert!(self.is_live(h.slot, h.generation), "stale KV handle");
+        KvView { base: h.base, geom: self.geom, _life: PhantomData }
+    }
+
+    /// Exclusive read/write access to a slot's strips (requires the
+    /// one-and-only handle mutably).
+    pub fn view_mut<'a>(&'a self, h: &'a mut KvHandle) -> KvViewMut<'a> {
+        self.check_owned(h);
+        debug_assert!(self.is_live(h.slot, h.generation), "stale KV handle");
+        KvViewMut { base: h.base, geom: self.geom, _life: PhantomData }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        let inner = self.inner.lock().unwrap();
+        ArenaStats {
+            slots_in_use: inner.in_use,
+            high_water: inner.high_water,
+            slots_created: inner.bases.len(),
+            reused: inner.reused,
+            bytes_resident: inner.bytes_resident,
+            fork_copies: inner.fork_copies,
+        }
+    }
+}
+
+/// Shared (read-only) borrow of one slot. Lifetime-tied to both the
+/// arena and the handle, so the slot can be neither released nor
+/// mutated while a view is out.
+pub struct KvView<'a> {
+    base: *mut f32,
+    geom: KvGeom,
+    _life: PhantomData<&'a KvHandle>,
+}
+
+impl KvView<'_> {
+    /// The first `len` cached K rows of `kvh` in `layer`, contiguous.
+    #[inline]
+    pub fn k_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
+        self.strip(layer, 0, kvh, len)
+    }
+
+    /// The first `len` cached V rows of `kvh` in `layer`, contiguous.
+    #[inline]
+    pub fn v_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
+        self.strip(layer, 1, kvh, len)
+    }
+
+    #[inline]
+    fn strip(&self, layer: usize, which: usize, kvh: usize, len: usize) -> &[f32] {
+        assert!(len <= self.geom.cap, "strip length beyond slot capacity");
+        let off = self.geom.strip_base(layer, which, kvh);
+        // Safety: within the slot (offset arithmetic hard-bounded by
+        // strip_base and the capacity assert); shared reads are fine
+        // while the handle is borrowed shared.
+        unsafe { std::slice::from_raw_parts(self.base.add(off), len * self.geom.head_dim) }
+    }
+}
+
+/// Exclusive borrow of one slot (store + read).
+pub struct KvViewMut<'a> {
+    base: *mut f32,
+    geom: KvGeom,
+    _life: PhantomData<&'a mut KvHandle>,
+}
+
+impl KvViewMut<'_> {
+    /// Scatter one `kv_dim`-wide K projection row into the per-head
+    /// strips at position `pos`.
+    #[inline]
+    pub fn store_k(&mut self, layer: usize, pos: usize, row: &[f32]) {
+        self.store(layer, 0, pos, row)
+    }
+
+    /// Scatter one `kv_dim`-wide V projection row into the per-head
+    /// strips at position `pos`.
+    #[inline]
+    pub fn store_v(&mut self, layer: usize, pos: usize, row: &[f32]) {
+        self.store(layer, 1, pos, row)
+    }
+
+    #[inline]
+    fn store(&mut self, layer: usize, which: usize, pos: usize, row: &[f32]) {
+        let hd = self.geom.head_dim;
+        assert_eq!(row.len(), self.geom.n_kv_heads * hd, "KV row width != kv_dim");
+        assert!(pos < self.geom.cap, "store position beyond slot capacity");
+        for kvh in 0..self.geom.n_kv_heads {
+            let off = self.geom.strip_base(layer, which, kvh) + pos * hd;
+            // Safety: exclusive access via the &mut handle borrow;
+            // offsets hard-bounded by the asserts above.
+            unsafe {
+                std::ptr::copy_nonoverlapping(row.as_ptr().add(kvh * hd), self.base.add(off), hd);
             }
         }
     }
 
-    /// Return a state to the pool (dropped if the pool is full).
-    pub fn release(&self, st: DecodeState) {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.free.len() < self.max_pooled {
-            inner.free.push(st);
-        }
+    #[inline]
+    pub fn k_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
+        self.strip(layer, 0, kvh, len)
     }
 
-    /// (created, reused, pooled-now)
-    pub fn stats(&self) -> (usize, usize, usize) {
-        let inner = self.inner.lock().unwrap();
-        (inner.created, inner.reused, inner.free.len())
+    #[inline]
+    pub fn v_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
+        self.strip(layer, 1, kvh, len)
+    }
+
+    #[inline]
+    fn strip(&self, layer: usize, which: usize, kvh: usize, len: usize) -> &[f32] {
+        assert!(len <= self.geom.cap, "strip length beyond slot capacity");
+        let off = self.geom.strip_base(layer, which, kvh);
+        // Safety: as in KvView::strip, but under the exclusive borrow.
+        unsafe { std::slice::from_raw_parts(self.base.add(off), len * self.geom.head_dim) }
     }
 }
 
@@ -78,6 +477,7 @@ impl KvSlab {
 mod tests {
     use super::*;
     use crate::model::{synthetic_model, ModelConfig};
+    use std::sync::Arc;
 
     fn model() -> Arc<Model> {
         Arc::new(synthetic_model(
@@ -94,45 +494,168 @@ mod tests {
         ))
     }
 
-    #[test]
-    fn acquire_release_reuses() {
-        let slab = KvSlab::new(model(), 4);
-        let a = slab.acquire();
-        slab.release(a);
-        let _b = slab.acquire();
-        let (created, reused, _) = slab.stats();
-        assert_eq!(created, 1);
-        assert_eq!(reused, 1);
+    fn geom() -> KvGeom {
+        KvGeom::of(&model())
     }
 
     #[test]
-    fn released_state_is_reset() {
+    fn slot_bytes_matches_model_formula() {
         let m = model();
-        let slab = KvSlab::new(m.clone(), 4);
-        let mut a = slab.acquire();
-        a.step(&m, 3);
-        a.step(&m, 5);
-        assert_eq!(a.pos(), 2);
-        slab.release(a);
-        let b = slab.acquire();
-        assert_eq!(b.pos(), 0);
+        assert_eq!(KvGeom::of(&m).slot_bytes(), m.kv_bytes_per_session());
     }
 
     #[test]
-    fn pool_bounded() {
-        let slab = KvSlab::new(model(), 2);
-        let states: Vec<_> = (0..5).map(|_| slab.acquire()).collect();
-        for s in states {
-            slab.release(s);
+    fn acquire_release_reuses_lifo() {
+        let arena = KvArena::new(geom(), 4);
+        let a = arena.acquire().unwrap();
+        let a_slot = a.slot();
+        arena.release(a);
+        let b = arena.acquire().unwrap();
+        assert_eq!(b.slot(), a_slot, "LIFO reuse of the warmest slot");
+        let s = arena.stats();
+        assert_eq!(s.reused, 1);
+        assert_eq!(s.slots_in_use, 1);
+        assert_eq!(s.high_water, 1);
+    }
+
+    #[test]
+    fn adjacent_acquires_get_adjacent_slots() {
+        let arena = KvArena::new(geom(), 4);
+        let hs: Vec<KvHandle> = (0..3).map(|_| arena.acquire().unwrap()).collect();
+        for (i, h) in hs.iter().enumerate() {
+            assert_eq!(h.slot(), i, "batch sessions land in adjacent slots");
         }
-        let (_, _, pooled) = slab.stats();
-        assert_eq!(pooled, 2);
+        for h in hs {
+            arena.release(h);
+        }
     }
 
     #[test]
-    fn gqa_slab_states_decode_and_shrink() {
-        // A slab over a GQA model hands out working states, and the
-        // per-session KV footprint shrinks by exactly n_heads/n_kv_heads.
+    fn grows_by_doubling_and_tracks_bytes() {
+        let g = geom();
+        let arena = KvArena::new(g, 2);
+        let hs: Vec<KvHandle> = (0..5).map(|_| arena.acquire().unwrap()).collect();
+        let s = arena.stats();
+        // segments of 2, 2, 4 slots → 8 carved for 5 live
+        assert_eq!(s.slots_created, 8);
+        assert_eq!(s.slots_in_use, 5);
+        assert_eq!(s.bytes_resident, 8 * g.slot_bytes());
+        for h in hs {
+            arena.release(h);
+        }
+        assert_eq!(arena.stats().slots_in_use, 0);
+        assert_eq!(arena.stats().high_water, 5);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_at_limit() {
+        let arena = KvArena::with_limit(geom(), 1, 2);
+        let a = arena.acquire().unwrap();
+        let b = arena.acquire().unwrap();
+        assert!(arena.acquire().is_none(), "arena at max_slots must refuse");
+        arena.release(a);
+        assert!(arena.acquire().is_some(), "released slot acquirable again");
+        arena.release(b);
+    }
+
+    #[test]
+    fn generation_invalidates_released_handles() {
+        let arena = KvArena::new(geom(), 2);
+        let a = arena.acquire().unwrap();
+        let (slot, gen) = (a.slot(), a.generation());
+        assert!(arena.is_live(slot, gen));
+        arena.release(a);
+        assert!(!arena.is_live(slot, gen), "released handle must go stale");
+        // Reuse bumps the generation: the new claim is live, the old
+        // (slot, gen) pair stays dead — reuse-after-release safety.
+        let b = arena.acquire().unwrap();
+        assert_eq!(b.slot(), slot);
+        assert_ne!(b.generation(), gen);
+        assert!(arena.is_live(b.slot(), b.generation()));
+        assert!(!arena.is_live(slot, gen));
+        arena.release(b);
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign arena")]
+    fn foreign_handle_rejected() {
+        // Releasing a handle into a different arena would mint two live
+        // handles to one slot — it must fail loudly instead.
+        let a = KvArena::new(geom(), 2);
+        let b = KvArena::new(geom(), 2);
+        let h = a.acquire().unwrap();
+        b.release(h);
+    }
+
+    #[test]
+    fn store_then_strip_roundtrip() {
+        let m = model();
+        let g = KvGeom::of(&m);
+        let arena = KvArena::new(g, 2);
+        let mut h = arena.acquire().unwrap();
+        let row: Vec<f32> = (0..g.n_kv_heads * g.head_dim).map(|i| i as f32 + 0.5).collect();
+        {
+            let mut v = arena.view_mut(&mut h);
+            v.store_k(0, 0, &row);
+            v.store_v(0, 0, &row);
+        }
+        let v = arena.view(&h);
+        assert_eq!(v.k_strip(0, 0, 1), &row[..g.head_dim]);
+        assert_eq!(v.v_strip(0, 0, 1), &row[..g.head_dim]);
+        arena.release(h);
+    }
+
+    #[test]
+    fn fork_copies_live_prefix_only() {
+        let g = KvGeom { n_layers: 2, n_kv_heads: 2, head_dim: 4, cap: 8 };
+        let arena = KvArena::new(g, 2);
+        let mut src = arena.acquire().unwrap();
+        for pos in 0..3 {
+            let row: Vec<f32> = (0..g.n_kv_heads * g.head_dim)
+                .map(|i| (pos * 100 + i) as f32)
+                .collect();
+            let mut v = arena.view_mut(&mut src);
+            for l in 0..g.n_layers {
+                v.store_k(l, pos, &row);
+                v.store_v(l, pos, &row);
+            }
+        }
+        let dst = arena.fork(&src, 3).unwrap();
+        let sv = arena.view(&src);
+        let dv = arena.view(&dst);
+        for l in 0..g.n_layers {
+            for kvh in 0..g.n_kv_heads {
+                assert_eq!(sv.k_strip(l, kvh, 3), dv.k_strip(l, kvh, 3), "l {l} kvh {kvh}");
+                assert_eq!(sv.v_strip(l, kvh, 3), dv.v_strip(l, kvh, 3), "l {l} kvh {kvh}");
+            }
+        }
+        assert_eq!(arena.stats().fork_copies, 1);
+        drop((sv, dv));
+        arena.release(src);
+        arena.release(dst);
+    }
+
+    #[test]
+    fn slab_backed_decode_matches_fresh_slot() {
+        // A reused (dirty) slot must decode token-identically to its
+        // own first (zero-filled) use — stale rows beyond pos are never
+        // read.
+        let m = model();
+        let mut a = m.decode_state();
+        let fresh: Vec<f32> = a.step(&m, 7);
+        a.step(&m, 3);
+        drop(a); // slot back to the free list, dirty
+        let mut b = m.decode_state(); // LIFO: the same slot
+        let again = b.step(&m, 7);
+        for (x, y) in fresh.iter().zip(&again) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gqa_arena_slots_decode_and_shrink() {
+        // Slots over a GQA model decode, and the per-slot KV footprint
+        // shrinks by exactly n_heads/n_kv_heads.
         let mha = Arc::new(synthetic_model(
             &ModelConfig {
                 vocab_size: 12,
@@ -145,30 +668,31 @@ mod tests {
             },
             1,
         ));
-        let gqa = Arc::new(synthetic_model(
-            &ModelConfig { n_kv_heads: 1, ..mha.cfg },
-            1,
-        ));
-        assert_eq!(mha.kv_bytes_per_session(), 4 * gqa.kv_bytes_per_session());
-        let slab = KvSlab::new(gqa.clone(), 2);
-        let mut st = slab.acquire();
+        let gqa = Arc::new(synthetic_model(&ModelConfig { n_kv_heads: 1, ..mha.cfg }, 1));
+        assert_eq!(KvGeom::of(&mha).slot_bytes(), 4 * KvGeom::of(&gqa).slot_bytes());
+        let mut st = gqa.decode_state();
         let logits = st.step(&gqa, 3);
         assert!(logits.iter().all(|v| v.is_finite()));
-        slab.release(st);
     }
 
     #[test]
-    fn reset_state_decodes_identically() {
+    fn dropping_states_returns_slots() {
         let m = model();
-        let slab = KvSlab::new(m.clone(), 2);
-        let mut a = slab.acquire();
-        let fresh: Vec<f32> = a.step(&m, 7);
-        a.step(&m, 3);
-        slab.release(a);
-        let mut b = slab.acquire(); // the same buffer, reset
-        let again = b.step(&m, 7);
-        for (x, y) in fresh.iter().zip(&again) {
-            assert!((x - y).abs() < 1e-6);
+        {
+            let _a = m.decode_state();
+            let _b = m.decode_state();
+            assert_eq!(m.kv_arena().stats().slots_in_use, 2);
         }
+        assert_eq!(m.kv_arena().stats().slots_in_use, 0);
+        assert_eq!(m.kv_arena().stats().high_water, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV arena exhausted")]
+    fn exhausted_arena_panics_like_capacity() {
+        let m = model();
+        m.init_kv_arena(1, 1); // one slot, hard cap
+        let _a = m.decode_state();
+        let _b = m.decode_state(); // no slot left → loud failure
     }
 }

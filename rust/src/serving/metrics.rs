@@ -1,11 +1,13 @@
 //! Serving metrics: queueing delay, time-to-first-token, per-token
-//! decode latency, throughput, and decode-sweep batch occupancy — the
-//! quantities behind Table 3's latency column and the serving example's
-//! report.
+//! decode latency, throughput, decode-sweep batch occupancy, and KV
+//! arena occupancy — the quantities behind Table 3's latency column and
+//! the serving example's report.
 
 use crate::io::json::JsonWriter;
 
+use super::kv::ArenaStats;
 use super::Response;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -21,6 +23,12 @@ struct Inner {
     decode_sweeps: u64,
     decode_sweep_tokens: u64,
     max_decode_batch: usize,
+    // Latest KV-arena snapshot **per arena** (keyed by `KvArena::id`).
+    // Workers may serve distinct models (distinct arenas); the summary
+    // sums across arenas so fleet KV memory is reported, not one
+    // arena's share. Each snapshot is internally monotone (the arena
+    // itself owns the counters), so latest-wins per key is exact.
+    arenas: HashMap<u64, ArenaStats>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -54,6 +62,14 @@ pub struct LatencySummary {
     pub max_decode_batch: usize,
     pub us_per_token: f64,
     pub tokens_per_sec: f64,
+    /// KV arena slots live at the last engine observation
+    pub arena_slots_in_use: usize,
+    /// most KV arena slots ever live at once
+    pub arena_high_water: usize,
+    /// bytes of pooled KV slab currently allocated
+    pub arena_bytes_resident: usize,
+    /// slot-to-slot prefix copies performed by `fork`
+    pub arena_fork_copies: u64,
 }
 
 impl LatencySummary {
@@ -85,6 +101,14 @@ impl LatencySummary {
             .number(self.us_per_token)
             .key("tokens_per_sec")
             .number(self.tokens_per_sec)
+            .key("arena_slots_in_use")
+            .int(self.arena_slots_in_use as i64)
+            .key("arena_high_water")
+            .int(self.arena_high_water as i64)
+            .key("arena_bytes_resident")
+            .int(self.arena_bytes_resident as i64)
+            .key("arena_fork_copies")
+            .int(self.arena_fork_copies as i64)
             .end_object();
         w.finish()
     }
@@ -115,6 +139,16 @@ impl Metrics {
         m.decode_sweeps += 1;
         m.decode_sweep_tokens += batch as u64;
         m.max_decode_batch = m.max_decode_batch.max(batch);
+    }
+
+    /// Record a KV-arena snapshot (called by the engines after each
+    /// batch), keyed by the arena's id. Snapshots from one arena are
+    /// internally monotone, so the latest one replaces the previous;
+    /// distinct arenas (workers over distinct models) are kept apart
+    /// and summed at summary time.
+    pub fn observe_arena(&self, arena_id: u64, s: ArenaStats) {
+        let mut m = self.inner.lock().unwrap();
+        m.arenas.insert(arena_id, s);
     }
 
     pub fn summary(&self) -> LatencySummary {
@@ -159,6 +193,12 @@ impl Metrics {
             // a single completion) must NOT produce f64::INFINITY: inf is
             // unrepresentable in JSON and corrupted the bench reports.
             tokens_per_sec: if wall > 0.0 { m.tokens as f64 / wall } else { 0.0 },
+            // Fleet totals: summed over every observed arena (distinct
+            // models on distinct workers each have their own slab).
+            arena_slots_in_use: m.arenas.values().map(|a| a.slots_in_use).sum(),
+            arena_high_water: m.arenas.values().map(|a| a.high_water).sum(),
+            arena_bytes_resident: m.arenas.values().map(|a| a.bytes_resident).sum(),
+            arena_fork_copies: m.arenas.values().map(|a| a.fork_copies).sum(),
         }
     }
 }
@@ -221,11 +261,44 @@ mod tests {
         assert!(!json.contains("inf"), "{json}");
         assert!(!json.contains("NaN"), "{json}");
         assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
-        for key in ["tokens_per_sec", "mean_decode_batch", "decode_sweeps", "us_per_token"] {
+        for key in [
+            "tokens_per_sec",
+            "mean_decode_batch",
+            "decode_sweeps",
+            "us_per_token",
+            "arena_high_water",
+            "arena_bytes_resident",
+            "arena_fork_copies",
+        ] {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
         // No quoted values: every field in LatencySummary is numeric.
-        assert_eq!(json.matches('"').count(), 2 * 11, "non-numeric value leaked into {json}");
+        assert_eq!(json.matches('"').count(), 2 * 15, "non-numeric value leaked into {json}");
+    }
+
+    #[test]
+    fn arena_observations_latest_per_arena_summed_across() {
+        let m = Metrics::new();
+        let snap = |in_use, hw, bytes, forks| ArenaStats {
+            slots_in_use: in_use,
+            high_water: hw,
+            slots_created: hw,
+            reused: 0,
+            bytes_resident: bytes,
+            fork_copies: forks,
+        };
+        // Two snapshots of the same arena: the later (monotone) one
+        // replaces the earlier.
+        m.observe_arena(1, snap(3, 3, 4096, 1));
+        m.observe_arena(1, snap(0, 3, 4096, 2));
+        // A second arena (another worker's model): summed, not maxed —
+        // fleet KV memory is the total across slabs.
+        m.observe_arena(2, snap(1, 2, 1024, 0));
+        let s = m.summary();
+        assert_eq!(s.arena_slots_in_use, 1);
+        assert_eq!(s.arena_high_water, 5);
+        assert_eq!(s.arena_bytes_resident, 5120);
+        assert_eq!(s.arena_fork_copies, 2);
     }
 
     #[test]

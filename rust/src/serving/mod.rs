@@ -22,8 +22,12 @@
 //! stepped **together** through a fused sweep (`lut_gemm`): each layer's
 //! packed plane words are gathered once per step and applied to every
 //! active session's LUT, so per-token decode cost falls toward `1/B` of
-//! the weight-fetch bound as the batch fills. The native engine keeps
-//! stepping sessions independently — dense matvecs share nothing.
+//! the weight-fetch bound as the batch fills. Every session's KV lives
+//! in a slot of the model's pooled [`kv::KvArena`] (one slab per model),
+//! so the fused sweep's score/AV phase runs as batched multi-session
+//! kernels over arena-adjacent strips. The native engine keeps stepping
+//! sessions independently — dense matvecs share nothing — but its
+//! sessions draw from the same arena.
 
 pub mod batcher;
 pub mod engine;
@@ -32,6 +36,7 @@ pub mod metrics;
 pub mod router;
 
 pub use engine::{Engine, EngineKind, LutModel};
+pub use kv::{ArenaStats, KvArena, KvGeom, KvHandle, KvView, KvViewMut};
 pub use metrics::{LatencySummary, Metrics};
 pub use router::{Router, RouterConfig, Strategy};
 

@@ -3,7 +3,14 @@
 //! The [`Router`] owns N worker threads, each with its own
 //! [`BatchQueue`] and [`Engine`]. Requests are assigned round-robin or
 //! least-loaded; responses come back on per-request channels so callers
-//! can await their own result without a central dispatcher.
+//! can await their own result without a central dispatcher. Session
+//! lifecycle is arena-backed: each request's KV is a slot of the
+//! model's pooled [`super::kv::KvArena`], claimed **up-front for every
+//! request in a batch** when the engine builds its sessions (so a
+//! capped arena must hold at least `max_batch` slots or batch
+//! construction panics) and released back to the free list when the
+//! session finalizes — the engines report per-arena occupancy into the
+//! shared [`Metrics`] after every batch.
 
 use super::batcher::{BatchQueue, Pending};
 use super::engine::{Engine, EngineKind};
@@ -202,6 +209,28 @@ mod tests {
         assert_eq!(ids.len(), 10, "no response lost/duplicated");
         let summary = router.metrics.summary();
         assert_eq!(summary.completed, 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn arena_stats_flow_through_router_metrics() {
+        // Workers observe their engines' pooled-arena occupancy into the
+        // shared metrics: after serving, the summary must show slots
+        // were claimed (high-water ≥ 1), all released, and slab bytes
+        // resident.
+        let router = Router::start(
+            RouterConfig { n_workers: 2, max_batch: 4, ..Default::default() },
+            |_| engine_kind(),
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..6).map(|i| router.submit(vec![(i % 16) as u32, 2], 2)).collect();
+        for (_, rx) in rxs {
+            rx.recv().unwrap();
+        }
+        let s = router.metrics.summary();
+        assert!(s.arena_high_water >= 1, "arena saw sessions");
+        assert_eq!(s.arena_slots_in_use, 0, "all slots released after serving");
+        assert!(s.arena_bytes_resident > 0, "slab resident bytes reported");
         router.shutdown();
     }
 

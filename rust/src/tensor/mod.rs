@@ -10,7 +10,9 @@
 
 mod ops;
 
-pub use ops::{axpy, dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa};
+pub use ops::{
+    axpy, dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa, strip_axpys, strip_dots,
+};
 
 use std::fmt;
 

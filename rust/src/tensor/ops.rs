@@ -133,6 +133,62 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Batched strided-dot over B head-major KV strips: for every live
+/// position `u` and batch lane `b`,
+///
+/// `scores[b * len + u] = scale * dot(qs[b], strips[b][u*hd .. (u+1)*hd])`
+///
+/// where `len = scores.len() / qs.len()` is the shared live length. The
+/// position loop is *outer* so all B strips are walked together — when
+/// the strips are adjacent slots of one KV arena slab, each step of the
+/// walk touches B rows a fixed stride apart, the batched-matvec access
+/// pattern the per-session loop could never produce. Per-lane numerics
+/// are identical to B independent [`dot`] sweeps (same slices, same
+/// order), so the batched serving path stays token-identical to B=1.
+pub fn strip_dots(qs: &[&[f32]], strips: &[&[f32]], hd: usize, scale: f32, scores: &mut [f32]) {
+    let nb = qs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(scores.len() % nb, 0);
+    let len = scores.len() / nb;
+    for u in 0..len {
+        let o = u * hd;
+        for b in 0..nb {
+            scores[b * len + u] = dot(qs[b], &strips[b][o..o + hd]) * scale;
+        }
+    }
+}
+
+/// Batched AV accumulation over B head-major V strips:
+///
+/// `outs[b] += Σ_u ws[b * len + u] · strips[b][u*hd .. (u+1)*hd]`
+///
+/// with `len = ws.len() / outs.len()`. Position-major walk like
+/// [`strip_dots`]; weights below 1e-9 are skipped exactly as in the
+/// per-session `attend_head` path so both orders accumulate the same
+/// f32 sums in the same order (token-identical parity).
+pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f32]]) {
+    let nb = outs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(ws.len() % nb, 0);
+    let len = ws.len() / nb;
+    for u in 0..len {
+        let o = u * hd;
+        for b in 0..nb {
+            let w = ws[b * len + u];
+            if w < 1e-9 {
+                continue;
+            }
+            axpy(w, &strips[b][o..o + hd], &mut *outs[b]);
+        }
+    }
+}
+
 /// f64 matmul for conditioning-sensitive paths (Hessian ops).
 pub fn matmul_f64(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
     assert_eq!(a.cols(), b.rows());
@@ -244,6 +300,60 @@ mod tests {
         assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
         let a = vec![1.0f32; 7];
         assert_eq!(dot(&a, &a), 7.0);
+    }
+
+    #[test]
+    fn strip_dots_matches_per_lane_dot() {
+        let mut rng = Rng::new(6);
+        let (nb, len, hd) = (3usize, 5usize, 8usize);
+        let qs_data: Vec<Vec<f32>> =
+            (0..nb).map(|_| (0..hd).map(|_| rng.normal() as f32).collect()).collect();
+        let strips_data: Vec<Vec<f32>> =
+            (0..nb).map(|_| (0..len * hd).map(|_| rng.normal() as f32).collect()).collect();
+        let qs: Vec<&[f32]> = qs_data.iter().map(|v| v.as_slice()).collect();
+        let strips: Vec<&[f32]> = strips_data.iter().map(|v| v.as_slice()).collect();
+        let mut scores = vec![0.0f32; nb * len];
+        strip_dots(&qs, &strips, hd, 0.5, &mut scores);
+        for b in 0..nb {
+            for u in 0..len {
+                let want = dot(&qs_data[b], &strips_data[b][u * hd..(u + 1) * hd]) * 0.5;
+                // bit-identical: same slices, same dot, same order
+                assert_eq!(scores[b * len + u], want, "b {b} u {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn strip_axpys_matches_per_lane_axpy() {
+        let mut rng = Rng::new(7);
+        let (nb, len, hd) = (2usize, 4usize, 8usize);
+        let strips_data: Vec<Vec<f32>> =
+            (0..nb).map(|_| (0..len * hd).map(|_| rng.normal() as f32).collect()).collect();
+        let ws: Vec<f32> =
+            (0..nb * len).map(|i| if i % 3 == 0 { 0.0 } else { 0.1 + i as f32 * 0.01 }).collect();
+        let strips: Vec<&[f32]> = strips_data.iter().map(|v| v.as_slice()).collect();
+        let mut flat = vec![0.0f32; nb * hd];
+        {
+            let mut outs: Vec<&mut [f32]> = flat.chunks_exact_mut(hd).collect();
+            strip_axpys(&ws, &strips, hd, &mut outs);
+        }
+        for b in 0..nb {
+            let mut want = vec![0.0f32; hd];
+            for u in 0..len {
+                let w = ws[b * len + u];
+                if w < 1e-9 {
+                    continue;
+                }
+                axpy(w, &strips_data[b][u * hd..(u + 1) * hd], &mut want);
+            }
+            assert_eq!(&flat[b * hd..(b + 1) * hd], want.as_slice(), "b {b}");
+        }
+    }
+
+    #[test]
+    fn strip_kernels_empty_batch() {
+        strip_dots(&[], &[], 8, 1.0, &mut []);
+        strip_axpys(&[], &[], 8, &mut []);
     }
 
     #[test]

@@ -219,6 +219,68 @@ fn prop_gptq_pack_consistency() {
     });
 }
 
+/// Arena-backed decode invariants over random tiny models: a fork
+/// continues identically to its parent, and a session decoding on a
+/// reused (dirty) arena slot matches its fresh-slot twin exactly.
+#[test]
+fn prop_arena_fork_and_slot_reuse_identical() {
+    run_prop(
+        "arena_fork_and_slot_reuse_identical",
+        Config { cases: 6, ..Default::default() },
+        |rng| {
+            let nh = 1 << rng.below_usize(3);
+            let divisors: Vec<usize> = (1..=nh).filter(|d| nh % d == 0).collect();
+            let nkv = divisors[rng.below_usize(divisors.len())];
+            let cfg = ModelConfig {
+                vocab_size: 10 + rng.below_usize(20),
+                d_model: nh * 8,
+                n_layers: 1 + rng.below_usize(2),
+                n_heads: nh,
+                n_kv_heads: nkv,
+                d_ff: 16 + rng.below_usize(16),
+                max_seq: 32,
+            };
+            let m = synthetic_model(&cfg, rng.next_u64());
+            let len = 2 + rng.below_usize(6);
+            let toks: Vec<u32> =
+                (0..len).map(|_| rng.below(cfg.vocab_size as u64) as u32).collect();
+            let cont = rng.below(cfg.vocab_size as u64) as u32;
+
+            // Decode once, recording the final logits; fork and check the
+            // fork continues exactly like the parent.
+            let mut st = m.decode_state();
+            let mut last = Vec::new();
+            for &t in &toks {
+                last = st.step(&m, t);
+            }
+            let mut f = st.fork();
+            let a = f.step(&m, cont);
+            let b = st.step(&m, cont);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if (x - y).abs() > 1e-6 {
+                    return Err(format!("fork diverged at vocab {i}: {x} vs {y}"));
+                }
+            }
+            drop(f);
+            drop(st); // both slots back to the free list, dirty
+
+            // A fresh session now reuses a dirty slot; it must replay the
+            // original decode bit-for-bit.
+            let mut st2 = m.decode_state();
+            let mut last2 = Vec::new();
+            for &t in &toks {
+                last2 = st2.step(&m, t);
+            }
+            for (i, (x, y)) in last.iter().zip(&last2).enumerate() {
+                if (x - y).abs() > 1e-6 {
+                    return Err(format!("dirty-slot replay diverged at vocab {i}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Model decode path (KV cache) matches the batch forward for random
 /// tiny models and token streams.
 #[test]

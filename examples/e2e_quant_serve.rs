@@ -19,7 +19,6 @@ use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let ckpt = Path::new("artifacts/tiny_small.tlm");
@@ -88,21 +87,16 @@ fn main() -> anyhow::Result<()> {
         ("BPDQ-W2-G256 / LUT engine", EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone())?)),
     ] {
         let router = Router::start(
-            RouterConfig {
-                n_workers: 2,
-                max_batch: 6,
-                batch_window: Duration::from_millis(2),
-                strategy: Strategy::LeastLoaded,
-            },
-            |_| kind.clone(),
+            RouterConfig { n_workers: 2, max_batch: 6, strategy: Strategy::LeastLoaded },
+            |_| Ok(kind.clone()),
         )?;
-        let rxs: Vec<_> = trace
+        let streams: Vec<_> = trace
             .iter()
             .map(|t| router.submit(tok.encode(&t.prompt), 8))
             .collect();
         let mut correct = 0;
-        for ((_, rx), t) in rxs.into_iter().zip(&trace) {
-            let resp = rx.recv()?;
+        for (s, t) in streams.into_iter().zip(&trace) {
+            let resp = s.collect()?;
             if tok.decode(&resp.tokens).starts_with(t.answer.as_str()) {
                 correct += 1;
             }

@@ -14,7 +14,6 @@ use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let tok = Tokenizer::new();
@@ -58,33 +57,30 @@ fn main() -> anyhow::Result<()> {
     // Compare routing strategies under a bursty trace.
     for strategy in [Strategy::RoundRobin, Strategy::LeastLoaded] {
         let router = Router::start(
-            RouterConfig {
-                n_workers: 3,
-                max_batch: 4,
-                batch_window: Duration::from_millis(3),
-                strategy,
-            },
-            |_| EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap()),
+            RouterConfig { n_workers: 3, max_batch: 4, strategy },
+            |_| Ok(EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap())),
         )?;
         // Burst: prompts of very different lengths (skewed load).
-        let mut rxs = Vec::new();
+        let mut streams = Vec::new();
         for i in 0..18u64 {
             let len = if i % 3 == 0 { 60 } else { 8 };
             let prompt: Vec<u32> = (0..len).map(|t| ((t * 5 + i as usize) % 68) as u32).collect();
-            rxs.push(router.submit(prompt, 6));
+            streams.push(router.submit(prompt, 6));
         }
-        for (_, rx) in rxs {
-            rx.recv()?;
+        for s in streams {
+            s.collect()?;
         }
         let s = router.metrics.summary();
         println!(
-            "{:?}: p50 queue {:.2} ms, p50 first {:.2} ms, p95 first {:.2} ms, {:.1} tok/s, mean batch {:.2}",
+            "{:?}: p50 queue {:.2} ms, p50 TTFT {:.2} ms, p95 TTFT {:.2} ms, \
+             p50 ITL {:.2} ms, {:.1} tok/s, mean sweep {:.2}",
             strategy,
             s.p50_queue_us as f64 / 1e3,
             s.p50_first_us as f64 / 1e3,
             s.p95_first_us as f64 / 1e3,
+            s.p50_itl_us as f64 / 1e3,
             s.tokens_per_sec,
-            s.mean_batch
+            s.mean_decode_batch
         );
         router.shutdown();
     }

@@ -1,14 +1,20 @@
-"""CI perf gate: fail on decode tokens/sec regressions.
+"""CI perf gate: fail on decode throughput or TTFT regressions.
 
 Compares the freshly-benched ``BENCH_decode.json`` against the previous
 uploaded artifact (same schema: ``{"bench": ..., "rows": [...]}`` with a
-``name`` and ``tokens_per_sec`` per row) and exits non-zero when any
-matched row regresses by more than ``--threshold`` (default 15%).
+``name``, ``tokens_per_sec``, and — since the streaming scheduler —
+``ttft_p95_us`` per row) and exits non-zero when any matched row:
+
+* drops tokens/sec by more than ``--threshold`` (default 15%), or
+* grows TTFT p95 by more than ``--ttft-threshold`` (default 25% —
+  looser, because tail first-token latency on tiny CI models is noisier
+  than steady-state throughput).
 
 Rows are matched by ``name``; rows present on only one side are
 reported but never fail the gate (configs come and go). Rows whose
-previous tokens/sec is 0 (degenerate zero-wall-clock runs) are skipped
-— a ratio against zero means nothing.
+previous value is 0 (degenerate zero-wall-clock runs, or artifacts
+predating the TTFT field) are skipped — a ratio against zero means
+nothing.
 
 Stdlib only; runs on the bare CI python.
 """
@@ -20,15 +26,21 @@ import json
 import sys
 
 
-def load_rows(path: str) -> dict[str, float]:
+def load_rows(path: str) -> dict[str, dict[str, float]]:
     with open(path) as f:
         doc = json.load(f)
-    out: dict[str, float] = {}
+    out: dict[str, dict[str, float]] = {}
     for row in doc.get("rows", []):
         name = row.get("name")
-        tps = row.get("tokens_per_sec")
-        if isinstance(name, str) and isinstance(tps, (int, float)):
-            out[name] = float(tps)
+        if not isinstance(name, str):
+            continue
+        vals: dict[str, float] = {}
+        for key in ("tokens_per_sec", "ttft_p95_us"):
+            v = row.get(key)
+            if isinstance(v, (int, float)):
+                vals[key] = float(v)
+        if vals:
+            out[name] = vals
     return out
 
 
@@ -38,6 +50,8 @@ def main() -> int:
     ap.add_argument("previous", help="previous run's BENCH_decode.json")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max allowed fractional tokens/sec drop (0.15 = 15%%)")
+    ap.add_argument("--ttft-threshold", type=float, default=0.25,
+                    help="max allowed fractional TTFT p95 growth (0.25 = 25%%)")
     args = ap.parse_args()
 
     cur = load_rows(args.current)
@@ -51,25 +65,44 @@ def main() -> int:
         if name not in cur:
             print(f"[perf-gate] row dropped (not gating): {name}")
             continue
-        p, c = prev[name], cur[name]
-        if p <= 0.0:
-            print(f"[perf-gate] skipping zero-baseline row: {name}")
-            continue
-        ratio = c / p
-        marker = "OK "
-        if ratio < 1.0 - args.threshold:
-            marker = "REG"
-            failures.append((name, p, c, ratio))
-        print(f"[perf-gate] {marker} {name}: {p:.1f} -> {c:.1f} tok/s "
-              f"({100.0 * (ratio - 1.0):+.1f}%)")
+
+        p_tps = prev[name].get("tokens_per_sec", 0.0)
+        c_tps = cur[name].get("tokens_per_sec", 0.0)
+        if p_tps <= 0.0:
+            print(f"[perf-gate] skipping zero-baseline tok/s row: {name}")
+        else:
+            ratio = c_tps / p_tps
+            marker = "OK "
+            if ratio < 1.0 - args.threshold:
+                marker = "REG"
+                failures.append((name, "tokens/sec", p_tps, c_tps, ratio))
+            print(f"[perf-gate] {marker} {name}: {p_tps:.1f} -> {c_tps:.1f} tok/s "
+                  f"({100.0 * (ratio - 1.0):+.1f}%)")
+
+        # TTFT p95: lower is better, so the gate fires on *growth*.
+        # Rows from artifacts predating the streaming scheduler have no
+        # ttft_p95_us — skipped until a baseline exists.
+        p_ttft = prev[name].get("ttft_p95_us", 0.0)
+        c_ttft = cur[name].get("ttft_p95_us", 0.0)
+        if p_ttft <= 0.0 or c_ttft <= 0.0:
+            print(f"[perf-gate] skipping TTFT row (no baseline): {name}")
+        else:
+            ratio = c_ttft / p_ttft
+            marker = "OK "
+            if ratio > 1.0 + args.ttft_threshold:
+                marker = "REG"
+                failures.append((name, "ttft_p95", p_ttft, c_ttft, ratio))
+            print(f"[perf-gate] {marker} {name}: {p_ttft:.0f} -> {c_ttft:.0f} us TTFT p95 "
+                  f"({100.0 * (ratio - 1.0):+.1f}%)")
+
     for name in sorted(set(cur) - set(prev)):
         print(f"[perf-gate] new row (not gated): {name}")
 
     if failures:
-        print(f"\n[perf-gate] FAIL: {len(failures)} row(s) regressed more than "
-              f"{100.0 * args.threshold:.0f}%:")
-        for name, p, c, ratio in failures:
-            print(f"  {name}: {p:.1f} -> {c:.1f} tok/s ({100.0 * (ratio - 1.0):+.1f}%)")
+        print(f"\n[perf-gate] FAIL: {len(failures)} regression(s):")
+        for name, metric, p, c, ratio in failures:
+            print(f"  {name} [{metric}]: {p:.1f} -> {c:.1f} "
+                  f"({100.0 * (ratio - 1.0):+.1f}%)")
         return 1
     print("\n[perf-gate] PASS")
     return 0

@@ -4,8 +4,12 @@
 //! fused-sweep amortization is visible in tok/s) and the GQA axis
 //! (n_kv_heads 4 → 1 on the same tiny-LM: KV bytes shrink by exactly
 //! n_heads / n_kv_heads while the fused attention sweep keeps parity).
-//! Emits `BENCH_decode.json` (tokens/sec, sweep occupancy, KV bytes) for
-//! the CI perf-trajectory artifact.
+//! Requests stream through the persistent iteration-level scheduler, so
+//! TTFT here is the real first-token-event latency and inter-token
+//! latency (ITL) is the event-to-event gap. Emits `BENCH_decode.json`
+//! (tokens/sec, TTFT p50/p95, ITL p50, sweep occupancy, KV bytes) for
+//! the CI perf-trajectory artifact — the perf gate watches both
+//! tokens/sec drops and TTFT p95 growth.
 use bpdq::benchkit::JsonReport;
 use bpdq::io::tlm::TlmFile;
 use bpdq::model::pipeline::quantize_model;
@@ -15,7 +19,6 @@ use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
 
 /// BPDQ-quantize `model` and return (dequantized model, LUT engine kind).
 fn quantize_for_lut(model: &Arc<Model>) -> (Arc<Model>, EngineKind) {
@@ -70,31 +73,27 @@ fn main() {
     let mut report = JsonReport::new("serving_latency", "BENCH_decode.json");
     for (name, kind, max_batch, m) in runs {
         let router = Router::start(
-            RouterConfig {
-                n_workers: 1,
-                max_batch,
-                batch_window: Duration::from_millis(1),
-                strategy: Strategy::LeastLoaded,
-            },
-            |_| kind.clone(),
+            RouterConfig { n_workers: 1, max_batch, strategy: Strategy::LeastLoaded },
+            |_| Ok(kind.clone()),
         )
         .unwrap();
-        let rxs: Vec<_> = (0..n_requests)
+        let streams: Vec<_> = (0..n_requests)
             .map(|i| router.submit((0..12).map(|t| ((t + i) % 68) as u32).collect(), max_new))
             .collect();
-        for (_, rx) in rxs {
-            rx.recv().unwrap();
+        for s in streams {
+            s.collect().unwrap();
         }
         let s = router.metrics.summary();
         let kv_bytes = m.kv_bytes_per_session();
         println!(
-            "{name:<26} p50 first {:>8.2} ms   decode {:>8.1} µs/tok   {:>7.1} tok/s   \
-             mean batch {:.1}   decode sweeps {:>5} (mean B {:.1}, max {})   KV {:>8} B/session   \
-             arena high-water {} ({:.2} MiB slab)",
+            "{name:<26} TTFT p50 {:>7.2} ms p95 {:>7.2} ms   ITL p50 {:>6.2} ms   \
+             decode {:>8.1} µs/tok   {:>7.1} tok/s   decode sweeps {:>5} (mean B {:.1}, max {})   \
+             KV {:>8} B/session   arena high-water {} ({:.2} MiB slab)",
             s.p50_first_us as f64 / 1e3,
+            s.p95_first_us as f64 / 1e3,
+            s.p50_itl_us as f64 / 1e3,
             s.us_per_token,
             s.tokens_per_sec,
-            s.mean_batch,
             s.decode_sweeps,
             s.mean_decode_batch,
             s.max_decode_batch,
@@ -117,6 +116,14 @@ fn main() {
                 .number(s.tokens_per_sec)
                 .key("us_per_token")
                 .number(s.us_per_token)
+                .key("ttft_p50_us")
+                .int(s.p50_first_us as i64)
+                .key("ttft_p95_us")
+                .int(s.p95_first_us as i64)
+                .key("itl_p50_us")
+                .int(s.p50_itl_us as i64)
+                .key("itl_p95_us")
+                .int(s.p95_itl_us as i64)
                 .key("decode_sweeps")
                 .int(s.decode_sweeps as i64)
                 .key("mean_decode_batch")

@@ -2,18 +2,47 @@
 //! the chosen engine, push a synthetic request trace through it, and
 //! report serving metrics. The W2-G256-on-one-GPU headline (§4.2) maps
 //! to: quantize at W2-G256, report the exact packed size, and serve.
+//!
+//! Sampling flags (`--temperature --top-k --top-p --seed --stop`) feed
+//! the per-request [`SamplingParams`]; the default (temperature 0) is
+//! greedy and token-identical to the historical behavior. `--stream`
+//! switches to the streaming smoke run: mixed `max_new` lengths through
+//! one scheduler sweep plus a mid-run cancellation, with hard checks on
+//! finish reasons, token counts, and arena-slot release — the CI gate
+//! for the iteration-level scheduler path.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use bpdq::cli::Args;
-use bpdq::data::tasks;
+use bpdq::data::{tasks, CorpusConfig, CorpusGen, Tokenizer};
 use bpdq::model::pipeline::quantize_model;
+use bpdq::model::{synthetic_model, ModelConfig};
 use bpdq::quant::{BpdqConfig, QuantMethod};
-use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use bpdq::serving::{
+    EngineKind, FinishReason, GenEvent, LutModel, Router, RouterConfig, SamplingParams, Strategy,
+};
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Duration;
 
 use super::quantize::{calib_seqs, load_context, parse_method};
+
+fn sampling_params(args: &Args, max_new: usize) -> Result<SamplingParams> {
+    let stop_tokens: Vec<u32> = match args.get("stop") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse::<u32>().with_context(|| format!("--stop: bad token `{t}`")))
+            .collect::<Result<_>>()?,
+    };
+    Ok(SamplingParams {
+        temperature: args.get_f64("temperature", 0.0).map_err(anyhow::Error::msg)? as f32,
+        top_k: args.get_usize("top-k", 0).map_err(anyhow::Error::msg)?,
+        top_p: args.get_f64("top-p", 1.0).map_err(anyhow::Error::msg)? as f32,
+        seed: args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64,
+        stop_tokens,
+        max_new,
+    })
+}
 
 pub fn run(args: &Args) -> Result<()> {
     let model_path = args.get_or("model", "artifacts/tiny_small.tlm");
@@ -21,9 +50,26 @@ pub fn run(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 24).map_err(anyhow::Error::msg)?;
     let n_workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 8).map_err(anyhow::Error::msg)?;
+    let params = sampling_params(args, max_new)?;
 
-    let (model, gen, tok) = load_context(model_path)?;
+    // A missing checkpoint falls back to synthetic weights (same shape
+    // as the trained tiny-LM) so the serving path — and the CI stream
+    // smoke — runs without `make artifacts`. A *present but unreadable*
+    // checkpoint still fails loudly.
+    let (model, gen, tok) = if std::path::Path::new(model_path).exists() {
+        load_context(model_path)?
+    } else {
+        let tok = Tokenizer::new();
+        eprintln!("({model_path} not found — serving synthetic tiny-LM weights)");
+        (
+            synthetic_model(&ModelConfig::tiny_small(tok.vocab_size()), 7),
+            CorpusGen::new(CorpusConfig::default()),
+            tok,
+        )
+    };
     let model = Arc::new(model);
+    let capacity = model.decode_capacity();
 
     // Quantize (default BPDQ W2-G256 — the paper's extreme deployment
     // point) unless serving fp16 natively.
@@ -74,41 +120,152 @@ pub fn run(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown engine `{other}` (native|native-fp16|lut|pjrt)"),
     };
 
-    println!("starting router: {n_workers} workers, engine={engine_name}");
+    println!("starting router: {n_workers} workers, engine={engine_name}, max_batch={max_batch}");
     let router = Router::start(
-        RouterConfig {
-            n_workers,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            strategy: Strategy::LeastLoaded,
-        },
-        |_| kind.clone(),
+        RouterConfig { n_workers, max_batch, strategy: Strategy::LeastLoaded },
+        |_| Ok(kind.clone()),
     )?;
+
+    if args.has("stream") {
+        stream_smoke(&router, &tok, &params, n_requests, max_new, capacity)?;
+        print_summary(&router);
+        router.shutdown();
+        return Ok(());
+    }
 
     // Request trace: few-shot arithmetic prompts (the interactive-decode
     // workload of Table 3).
     let trace = tasks::gen_arith(0xC0FFEE, n_requests, 2);
-    let rxs: Vec<_> = trace
+    let streams: Vec<_> = trace
         .iter()
-        .map(|t| router.submit(tok.encode(&t.prompt), max_new))
+        .map(|t| router.submit_with(tok.encode(&t.prompt), params.clone(), 0))
         .collect();
     let mut correct = 0usize;
-    for ((_, rx), t) in rxs.into_iter().zip(&trace) {
-        let resp = rx.recv()?;
+    for (s, t) in streams.into_iter().zip(&trace) {
+        let resp = s.collect()?;
         let text = tok.decode(&resp.tokens);
         if text.starts_with(t.answer.as_str()) {
             correct += 1;
         }
     }
-    let s = router.metrics.summary();
     println!("\n--- serving report ---");
+    println!(
+        "exact-match        : {:.1}%",
+        100.0 * correct as f64 / trace.len() as f64
+    );
+    print_summary(&router);
+    router.shutdown();
+    Ok(())
+}
+
+/// Streaming smoke: one long request and `n_requests - 1` short ones
+/// with mixed `max_new`, all submitted together; the long one is
+/// cancelled after its first token. Verifies iteration-level
+/// scheduling end-to-end: shorts complete with their exact budgets
+/// while the long one dies mid-decode, and every arena slot is
+/// released. Errors (non-zero exit) on any violation — this is the CI
+/// gate for the scheduler path.
+fn stream_smoke(
+    router: &Router,
+    tok: &Tokenizer,
+    params: &SamplingParams,
+    n_requests: usize,
+    max_new: usize,
+    capacity: usize,
+) -> Result<()> {
+    let n_requests = n_requests.max(3);
+    let trace = tasks::gen_arith(0xC0FFEE, n_requests, 2);
+    // The long request gets a budget big enough that the mid-run cancel
+    // always lands while it is still decoding.
+    let long_budget = 256.min(capacity.saturating_sub(64)).max(max_new * 8);
+    let mut budgets = Vec::with_capacity(n_requests);
+    let mut streams = Vec::with_capacity(n_requests);
+    for (i, t) in trace.iter().enumerate() {
+        let mut p = params.clone();
+        // Mixed lengths: one long stream, shorts jittered around max_new.
+        p.max_new = if i == 0 { long_budget } else { max_new + (i % 3) };
+        budgets.push(p.max_new);
+        streams.push(router.submit_with(tok.encode(&t.prompt), p, 0));
+    }
+    println!(
+        "stream smoke: {n_requests} requests (long budget {long_budget}, shorts ~{max_new}), \
+         cancelling the long one after its first token"
+    );
+
+    // Cancel the long stream once generation is demonstrably in flight.
+    match streams[0].recv() {
+        Some(GenEvent::Token { .. }) => {}
+        other => anyhow::bail!("long stream: expected a first token event, got {other:?}"),
+    }
+    streams[0].cancel();
+
+    let greedy_run = params.temperature <= 0.0 && params.stop_tokens.is_empty();
+    for (i, s) in streams.iter().enumerate() {
+        let mut n_tokens = if i == 0 { 1 } else { 0 }; // long's first token already consumed
+        let (finish, usage) = loop {
+            match s.recv() {
+                Some(GenEvent::Token { .. }) => n_tokens += 1,
+                Some(GenEvent::Done { finish_reason, usage, error }) => {
+                    if let Some(e) = error {
+                        anyhow::bail!("stream {i}: engine error: {e}");
+                    }
+                    break (finish_reason, usage);
+                }
+                None => anyhow::bail!("stream {i}: worker disconnected before Done"),
+            }
+        };
+        println!(
+            "  stream {i:>2}: {n_tokens:>3} tokens, {finish:?} at sweep {}, \
+             ttft {:.2} ms, total {:.2} ms",
+            usage.finished_sweep,
+            usage.ttft_us as f64 / 1e3,
+            usage.total_us as f64 / 1e3,
+        );
+        if i == 0 {
+            anyhow::ensure!(
+                finish == FinishReason::Cancelled,
+                "long stream must be cancelled mid-decode, finished {finish:?}"
+            );
+            anyhow::ensure!(
+                n_tokens < budgets[0],
+                "cancellation had no effect: all {n_tokens} tokens were produced"
+            );
+        } else if greedy_run {
+            anyhow::ensure!(
+                finish == FinishReason::Length && n_tokens == budgets[i],
+                "short stream {i}: expected {} tokens + Length, got {n_tokens} + {finish:?}",
+                budgets[i]
+            );
+        }
+    }
+    let m = router.metrics.summary();
+    anyhow::ensure!(
+        m.arena_slots_in_use == 0,
+        "KV arena still holds {} slots after all streams finished",
+        m.arena_slots_in_use
+    );
+    anyhow::ensure!(
+        m.cancelled == 1 && m.errored == 0 && m.completed == n_requests - 1,
+        "outcome split wrong: completed {} cancelled {} errored {} (expected {}/1/0)",
+        m.completed,
+        m.cancelled,
+        m.errored,
+        n_requests - 1
+    );
+    println!("stream smoke OK — cancellation released its slot, shorts met their budgets");
+    Ok(())
+}
+
+fn print_summary(router: &Router) {
+    let s = router.metrics.summary();
     println!("requests completed : {}", s.completed);
-    println!("exact-match        : {:.1}%", 100.0 * correct as f64 / trace.len() as f64);
+    println!("cancelled / errored: {} / {}", s.cancelled, s.errored);
     println!("tokens generated   : {}", s.tokens);
-    println!("p50 first-token    : {:.2} ms", s.p50_first_us as f64 / 1e3);
-    println!("p95 first-token    : {:.2} ms", s.p95_first_us as f64 / 1e3);
+    println!("p50 TTFT           : {:.2} ms", s.p50_first_us as f64 / 1e3);
+    println!("p95 TTFT           : {:.2} ms", s.p95_first_us as f64 / 1e3);
+    println!("p50 inter-token    : {:.2} ms", s.p50_itl_us as f64 / 1e3);
+    println!("p95 inter-token    : {:.2} ms", s.p95_itl_us as f64 / 1e3);
     println!("p50 queue delay    : {:.2} ms", s.p50_queue_us as f64 / 1e3);
-    println!("mean batch size    : {:.2}", s.mean_batch);
     println!(
         "decode sweeps      : {} (mean batch {:.2}, max {})",
         s.decode_sweeps, s.mean_decode_batch, s.max_decode_batch
@@ -123,6 +280,4 @@ pub fn run(args: &Args) -> Result<()> {
     println!("decode             : {:.1} µs/token", s.us_per_token);
     println!("throughput         : {:.1} tok/s", s.tokens_per_sec);
     println!("summary json       : {}", s.to_json());
-    router.shutdown();
-    Ok(())
 }

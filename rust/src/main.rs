@@ -76,6 +76,11 @@ SUBCOMMANDS
   fig1b      [--quick]                           2-bit comparison series
   fig3       [--quick]                           long-context suite
   serve      --model <.tlm> [--engine native|pjrt|lut] [--requests N]
+             [--workers N] [--max-batch B] [--max-new N] [--stream]
+             [--temperature T] [--top-k K] [--top-p P] [--seed S]
+             [--stop id,id,...]                streaming scheduler smoke
+                                               via --stream (cancels one
+                                               request mid-decode)
   selfcheck                                       artifact + kernel parity
 "#
     );

@@ -2,6 +2,7 @@
 //! incremental KV-cache decode.
 
 use super::{rmsnorm, silu, softmax, Model, ROPE_BASE};
+use crate::rng::Rng;
 use crate::serving::kv::{KvArena, KvHandle};
 use crate::tensor::{axpy, dot, matmul_transb, matvec, Matrix};
 use std::collections::HashMap;
@@ -395,6 +396,78 @@ pub fn argmax(xs: &[f32]) -> usize {
     bi
 }
 
+/// Seeded token sampling over next-token logits.
+///
+/// `temperature == 0` is **exactly** [`argmax`] (same first-max
+/// tie-break) — the greedy path every token-identity parity test pins.
+/// Otherwise the logits are scaled by `1/temperature`, truncated to the
+/// `top_k` highest (`0` = off) and then to the smallest nucleus whose
+/// cumulative tempered probability reaches `top_p` (`1.0` = off), and a
+/// token is drawn from the renormalized distribution using `rng` — the
+/// caller seeds one [`Rng`] per request, so identical (seed, prompt,
+/// params) streams are token-identical regardless of batching.
+///
+/// The returned logprob is of the chosen token under the **raw**
+/// (untempered, untruncated) softmax — the quantity serving APIs
+/// report. Candidate sorting is O(V log V); V is the tiny-LM vocab
+/// here, and the sort only runs on the sampled (non-greedy) path.
+pub fn sample(
+    logits: &[f32],
+    temperature: f32,
+    top_k: usize,
+    top_p: f32,
+    rng: &mut Rng,
+) -> (usize, f32) {
+    debug_assert!(!logits.is_empty());
+    let raw_max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = logits.iter().map(|&l| ((l - raw_max) as f64).exp()).sum::<f64>().ln();
+    let logprob_of = |i: usize| ((logits[i] - raw_max) as f64 - lse) as f32;
+
+    if temperature <= 0.0 {
+        let i = argmax(logits);
+        return (i, logprob_of(i));
+    }
+
+    // Candidates sorted by logit descending, index ascending on ties —
+    // deterministic truncation order.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
+    if top_k > 0 && top_k < idx.len() {
+        idx.truncate(top_k);
+    }
+    // Tempered weights over the kept candidates (max-shifted for
+    // stability; f64 so tiny temperatures don't underflow to all-zero).
+    let t_max = logits[idx[0]];
+    let mut weights: Vec<f64> =
+        idx.iter().map(|&i| (((logits[i] - t_max) / temperature) as f64).exp()).collect();
+    if top_p < 1.0 {
+        let total: f64 = weights.iter().sum();
+        let mut cum = 0.0;
+        let mut keep = weights.len();
+        for (j, w) in weights.iter().enumerate() {
+            cum += w;
+            if cum >= top_p as f64 * total {
+                keep = j + 1;
+                break;
+            }
+        }
+        idx.truncate(keep);
+        weights.truncate(keep);
+    }
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    // Walk the kept candidates; the last one absorbs any float residue.
+    let mut chosen = *idx.last().unwrap();
+    for (j, &i) in idx.iter().enumerate() {
+        u -= weights[j];
+        if u <= 0.0 {
+            chosen = i;
+            break;
+        }
+    }
+    (chosen, logprob_of(chosen))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,5 +624,75 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn sample_temp_zero_is_argmax() {
+        let logits = vec![0.1f32, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let (i, lp) = sample(&logits, 0.0, 0, 1.0, &mut rng);
+            assert_eq!(i, argmax(&logits));
+            assert!(lp <= 0.0 && lp.is_finite());
+        }
+    }
+
+    #[test]
+    fn sample_logprob_is_log_softmax() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let mut rng = Rng::new(1);
+        let (i, lp) = sample(&logits, 0.0, 0, 1.0, &mut rng);
+        assert_eq!(i, 2);
+        // log softmax of 3 over [1,2,3]
+        let expect =
+            (3.0f64 - ((1.0f64).exp() + (2.0f64).exp() + (3.0f64).exp()).ln()) as f32;
+        assert!((lp - expect).abs() < 1e-5, "{lp} vs {expect}");
+    }
+
+    #[test]
+    fn sample_top_k_one_and_tiny_top_p_are_greedy() {
+        let logits = vec![0.5f32, -0.2, 3.1, 1.0, 2.9];
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, 1.5, 1, 1.0, &mut rng).0, 2, "top_k=1");
+            assert_eq!(sample(&logits, 1.5, 0, 1e-6, &mut rng).0, 2, "tiny nucleus");
+        }
+    }
+
+    #[test]
+    fn sample_top_k_restricts_support() {
+        let logits = vec![0.0f32, 5.0, 4.8, -2.0, 1.0];
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let (i, _) = sample(&logits, 1.0, 2, 1.0, &mut rng);
+            seen.insert(i);
+            assert!(i == 1 || i == 2, "top_k=2 must only emit the two largest, got {i}");
+        }
+        assert_eq!(seen.len(), 2, "high temperature should reach both kept tokens");
+    }
+
+    #[test]
+    fn sample_seeded_streams_reproduce() {
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 7) % 5) as f32 * 0.3).collect();
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| sample(&logits, 0.9, 0, 0.95, &mut rng).0).collect()
+        };
+        assert_eq!(draw(42), draw(42), "same seed ⇒ same stream");
+        assert_ne!(draw(42), draw(43), "different seed ⇒ different stream");
+    }
+
+    #[test]
+    fn sample_uniform_logits_spread() {
+        let logits = vec![0.0f32; 8];
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 8];
+        for _ in 0..4000 {
+            counts[sample(&logits, 1.0, 0, 1.0, &mut rng).0] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 300 && c < 700, "uniform logits should sample uniformly: {counts:?}");
+        }
     }
 }

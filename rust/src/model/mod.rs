@@ -27,7 +27,7 @@ mod forward;
 pub mod pipeline;
 mod synth;
 
-pub use forward::{argmax, attend_head, greedy_generate, Capture, DecodeState, Rope};
+pub use forward::{argmax, attend_head, greedy_generate, sample, Capture, DecodeState, Rope};
 pub use synth::{synthetic_checkpoint, synthetic_model};
 
 use crate::io::tlm::{TlmFile, TlmHeader};

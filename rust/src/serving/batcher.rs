@@ -1,50 +1,164 @@
-//! Dynamic batcher: collect requests into batches bounded by size and a
-//! wait window (the standard latency/throughput dial of serving papers).
+//! Admission queue feeding one worker's scheduler.
+//!
+//! The historical `BatchQueue` collected a whole batch behind a wait
+//! window and handed it to the engine to run to completion. Under
+//! iteration-level scheduling the window is gone: the [`SubmitQueue`]
+//! is a priority-FIFO pool the scheduler drains **one request at a
+//! time, at every sweep boundary** — blocking only when it has no
+//! active sessions at all. Load accounting (`queued + in-flight`) lives
+//! here too so the router's least-loaded strategy sees work the
+//! scheduler has admitted but not yet finished.
+//!
+//! Failure is surfaced, never hung: [`SubmitQueue::close_with_error`]
+//! drains every queued request with `Done{finish_reason: Error}`, and a
+//! push to a closed queue is rejected with an immediate terminal event
+//! instead of being stranded.
 
-use super::{Request, Response};
+use super::{CancelHandle, FinishReason, GenEvent, GenRequest, Usage};
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-/// A queued request plus its response channel.
+/// A queued request plus its event channel and cancellation flag.
 pub struct Pending {
-    pub request: Request,
-    pub reply: Sender<Response>,
+    pub request: GenRequest,
+    pub events: Sender<GenEvent>,
+    pub cancel: CancelHandle,
     pub enqueued: Instant,
+}
+
+impl Pending {
+    /// Terminate this request without ever admitting it: emit the
+    /// single `Done` event (no tokens were produced).
+    pub(crate) fn reject(self, finish_reason: FinishReason, error: Option<String>) {
+        let usage = Usage {
+            prompt_tokens: self.request.prompt.len(),
+            total_us: self.enqueued.elapsed().as_micros() as u64,
+            ..Usage::default()
+        };
+        let _ = self.events.send(GenEvent::Done { finish_reason, usage, error });
+    }
 }
 
 struct QueueInner {
     items: VecDeque<Pending>,
     closed: bool,
+    /// Set by `close_with_error`: why this worker can no longer serve.
+    error: Option<String>,
+    /// Requests popped by the scheduler but not yet retired.
+    in_flight: usize,
 }
 
-/// MPMC-ish bounded wait queue feeding one worker.
+/// MPSC-ish wait queue feeding one worker's scheduler.
 #[derive(Clone)]
-pub struct BatchQueue {
+pub struct SubmitQueue {
     inner: Arc<(Mutex<QueueInner>, Condvar)>,
-    pub max_batch: usize,
-    pub window: Duration,
 }
 
-impl BatchQueue {
-    pub fn new(max_batch: usize, window: Duration) -> Self {
-        assert!(max_batch >= 1);
+impl Default for SubmitQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SubmitQueue {
+    pub fn new() -> Self {
         Self {
             inner: Arc::new((
-                Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+                Mutex::new(QueueInner {
+                    items: VecDeque::new(),
+                    closed: false,
+                    error: None,
+                    in_flight: 0,
+                }),
                 Condvar::new(),
             )),
-            max_batch,
-            window,
         }
     }
 
+    /// Enqueue a request. On a closed queue the request is rejected
+    /// immediately — `Done{Error}` if the worker died with an error,
+    /// `Done{Cancelled}` on normal shutdown — so callers always get a
+    /// terminal event, never a hang.
     pub fn push(&self, p: Pending) {
         let (m, cv) = &*self.inner;
         let mut q = m.lock().unwrap();
+        if q.closed {
+            let err = q.error.clone();
+            drop(q);
+            match err {
+                Some(e) => p.reject(FinishReason::Error, Some(e)),
+                None => p.reject(FinishReason::Cancelled, None),
+            }
+            return;
+        }
         q.items.push_back(p);
         cv.notify_one();
+    }
+
+    /// Pop the highest-priority request (FIFO within a priority), or
+    /// `None` when the queue is empty *or* closed-and-drained. Never
+    /// blocks — the scheduler uses this while it has active sessions.
+    pub fn try_pop(&self) -> Option<Pending> {
+        let (m, _) = &*self.inner;
+        let mut q = m.lock().unwrap();
+        Self::pop_best(&mut q)
+    }
+
+    /// Block until a request is available (returns it) or the queue is
+    /// closed and drained (returns `None`). The scheduler uses this
+    /// only when it has no active sessions.
+    pub fn pop_blocking(&self) -> Option<Pending> {
+        let (m, cv) = &*self.inner;
+        let mut q = m.lock().unwrap();
+        loop {
+            if let Some(p) = Self::pop_best(&mut q) {
+                return Some(p);
+            }
+            if q.closed {
+                return None;
+            }
+            q = cv.wait(q).unwrap();
+        }
+    }
+
+    fn pop_best(q: &mut QueueInner) -> Option<Pending> {
+        if q.items.is_empty() {
+            return None;
+        }
+        // Highest priority wins; the strict `>` keeps the earliest
+        // submission within a priority level (FIFO fairness). O(n)
+        // scan — admission is once per free slot per sweep, n is queue
+        // depth.
+        let mut best = 0usize;
+        let mut best_pri = q.items[0].request.priority;
+        for (i, p) in q.items.iter().enumerate().skip(1) {
+            if p.request.priority > best_pri {
+                best = i;
+                best_pri = p.request.priority;
+            }
+        }
+        let p = q.items.remove(best);
+        if p.is_some() {
+            q.in_flight += 1;
+        }
+        p
+    }
+
+    /// The scheduler retired one admitted request (any finish reason).
+    pub fn finish_one(&self) {
+        let (m, _) = &*self.inner;
+        let mut q = m.lock().unwrap();
+        q.in_flight = q.in_flight.saturating_sub(1);
+    }
+
+    /// Queued + admitted-but-unfinished requests — the router's
+    /// least-loaded signal.
+    pub fn load(&self) -> usize {
+        let (m, _) = &*self.inner;
+        let q = m.lock().unwrap();
+        q.items.len() + q.in_flight
     }
 
     pub fn len(&self) -> usize {
@@ -55,57 +169,58 @@ impl BatchQueue {
         self.len() == 0
     }
 
+    pub fn is_closed(&self) -> bool {
+        self.inner.0.lock().unwrap().closed
+    }
+
+    /// Graceful shutdown: queued requests still run to completion (the
+    /// scheduler drains before its blocking pop returns `None`); only
+    /// *new* submissions are rejected.
     pub fn close(&self) {
         let (m, cv) = &*self.inner;
         m.lock().unwrap().closed = true;
         cv.notify_all();
     }
 
-    /// Block until at least one request is available (or closed), then
-    /// collect up to `max_batch` requests arriving within `window`.
-    /// Returns None when closed and drained.
-    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+    /// Fatal shutdown: the worker can no longer serve (engine init or
+    /// sweep failure). Every queued request is rejected with
+    /// `Done{finish_reason: Error, error}` now, and future pushes are
+    /// rejected the same way.
+    pub fn close_with_error(&self, error: &str) {
         let (m, cv) = &*self.inner;
-        let mut q = m.lock().unwrap();
-        loop {
-            if !q.items.is_empty() {
-                break;
-            }
-            if q.closed {
-                return None;
-            }
-            q = cv.wait(q).unwrap();
+        let drained: Vec<Pending> = {
+            let mut q = m.lock().unwrap();
+            q.closed = true;
+            q.error = Some(error.to_string());
+            q.items.drain(..).collect()
+        };
+        cv.notify_all();
+        for p in drained {
+            p.reject(FinishReason::Error, Some(error.to_string()));
         }
-        // First request in hand: wait up to `window` for more.
-        let deadline = Instant::now() + self.window;
-        while q.items.len() < self.max_batch && !q.closed {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (qq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
-            q = qq;
-            if timeout.timed_out() {
-                break;
-            }
-        }
-        let n = q.items.len().min(self.max_batch);
-        Some(q.items.drain(..n).collect())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::serving::SamplingParams;
+    use std::sync::mpsc::{channel, Receiver};
     use std::thread;
+    use std::time::Duration;
 
-    fn pending(id: u64) -> (Pending, std::sync::mpsc::Receiver<Response>) {
+    fn pending(id: u64, priority: u8) -> (Pending, Receiver<GenEvent>) {
         let (tx, rx) = channel();
         (
             Pending {
-                request: Request { id, prompt: vec![1], max_new: 1 },
-                reply: tx,
+                request: GenRequest {
+                    id,
+                    prompt: vec![1],
+                    params: SamplingParams { max_new: 1, ..Default::default() },
+                    priority,
+                },
+                events: tx,
+                cancel: CancelHandle::new(),
                 enqueued: Instant::now(),
             },
             rx,
@@ -113,65 +228,119 @@ mod tests {
     }
 
     #[test]
-    fn batches_respect_max_size() {
-        let q = BatchQueue::new(2, Duration::from_millis(1));
+    fn fifo_within_priority() {
+        let q = SubmitQueue::new();
         let mut rxs = Vec::new();
         for i in 0..5 {
-            let (p, rx) = pending(i);
+            let (p, rx) = pending(i, 0);
             q.push(p);
             rxs.push(rx);
         }
-        let b1 = q.next_batch().unwrap();
-        let b2 = q.next_batch().unwrap();
-        let b3 = q.next_batch().unwrap();
-        assert_eq!(b1.len(), 2);
-        assert_eq!(b2.len(), 2);
-        assert_eq!(b3.len(), 1);
+        for i in 0..5 {
+            assert_eq!(q.try_pop().unwrap().request.id, i);
+        }
+        assert!(q.try_pop().is_none());
         assert!(q.is_empty());
     }
 
     #[test]
-    fn window_collects_late_arrivals() {
-        let q = BatchQueue::new(8, Duration::from_millis(200));
-        let (p, _rx) = pending(0);
-        q.push(p);
-        let q2 = q.clone();
-        let h = thread::spawn(move || {
-            thread::sleep(Duration::from_millis(30));
-            let (p, rx) = pending(1);
-            q2.push(p);
-            rx
-        });
-        let batch = q.next_batch().unwrap();
-        h.join().unwrap();
-        assert_eq!(batch.len(), 2, "late arrival inside window should join");
+    fn higher_priority_pops_first() {
+        let q = SubmitQueue::new();
+        for (id, pri) in [(0u64, 0u8), (1, 5), (2, 1), (3, 5)] {
+            let (p, _rx) = pending(id, pri);
+            q.push(p);
+        }
+        // priority 5 first (FIFO inside: 1 before 3), then 1, then 0.
+        let order: Vec<u64> = (0..4).map(|_| q.try_pop().unwrap().request.id).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
     }
 
     #[test]
-    fn close_unblocks() {
-        let q = BatchQueue::new(4, Duration::from_millis(5));
+    fn load_counts_queued_and_in_flight() {
+        let q = SubmitQueue::new();
+        let (p, _rx) = pending(0, 0);
+        q.push(p);
+        let (p, _rx2) = pending(1, 0);
+        q.push(p);
+        assert_eq!(q.load(), 2);
+        let _popped = q.try_pop().unwrap();
+        assert_eq!(q.load(), 2, "admitted request still counts toward load");
+        q.finish_one();
+        assert_eq!(q.load(), 1);
+    }
+
+    #[test]
+    fn close_unblocks_pop() {
+        let q = SubmitQueue::new();
         let q2 = q.clone();
-        let h = thread::spawn(move || q2.next_batch());
+        let h = thread::spawn(move || q2.pop_blocking());
         thread::sleep(Duration::from_millis(20));
         q.close();
         assert!(h.join().unwrap().is_none());
     }
 
     #[test]
+    fn close_drains_queued_before_none() {
+        // Graceful close: already-queued work is still handed out.
+        let q = SubmitQueue::new();
+        let (p, _rx) = pending(7, 0);
+        q.push(p);
+        q.close();
+        assert_eq!(q.pop_blocking().unwrap().request.id, 7);
+        assert!(q.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn push_after_close_rejects_with_terminal_event() {
+        let q = SubmitQueue::new();
+        q.close();
+        let (p, rx) = pending(3, 0);
+        q.push(p);
+        match rx.recv().unwrap() {
+            GenEvent::Done { finish_reason, .. } => {
+                assert_eq!(finish_reason, FinishReason::Cancelled)
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_with_error_rejects_queued_and_future() {
+        let q = SubmitQueue::new();
+        let (p, rx_queued) = pending(1, 0);
+        q.push(p);
+        q.close_with_error("engine exploded");
+        let (p, rx_late) = pending(2, 0);
+        q.push(p);
+        for rx in [rx_queued, rx_late] {
+            match rx.recv().unwrap() {
+                GenEvent::Done { finish_reason, error, .. } => {
+                    assert_eq!(finish_reason, FinishReason::Error);
+                    assert!(error.unwrap().contains("engine exploded"));
+                }
+                other => panic!("expected Done, got {other:?}"),
+            }
+        }
+        assert!(q.pop_blocking().is_none());
+    }
+
+    #[test]
     fn no_request_lost_or_duplicated() {
-        let q = BatchQueue::new(3, Duration::from_millis(1));
+        let q = SubmitQueue::new();
         let n = 20;
+        let mut rxs = Vec::new();
         for i in 0..n {
-            let (p, _rx) = pending(i);
+            let (p, rx) = pending(i, (i % 3) as u8);
             q.push(p);
+            rxs.push(rx);
         }
         let mut seen = Vec::new();
-        while !q.is_empty() {
-            for p in q.next_batch().unwrap() {
-                seen.push(p.request.id);
-            }
+        while let Some(p) = q.try_pop() {
+            seen.push(p.request.id);
+            q.finish_one();
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        assert_eq!(q.load(), 0);
     }
 }

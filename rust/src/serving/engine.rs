@@ -1,9 +1,11 @@
 //! Decode engines: native fp32, LUT bit-plane, and PJRT (AOT artifact).
 //!
-//! All three implement the same continuous-batching `generate_batch`
-//! contract so the router/batcher are engine-agnostic. Sessions within a
-//! batch advance one token per sweep; a [`Stepper`] decides how the sweep
-//! is *executed*:
+//! An [`Engine`] is one worker's decode backend. Its entry point is
+//! [`Engine::serve`]: run the persistent iteration-level scheduler
+//! ([`super::scheduler`]) over a [`SubmitQueue`] until the queue closes,
+//! streaming `GenEvent`s per request. The engine's contribution is the
+//! [`Stepper`]: how one sweep (every active session advancing one
+//! token) is *executed*:
 //!
 //! * [`NativeStepper`] steps each session independently — dense matvecs
 //!   share nothing across sessions, so the per-session path is kept
@@ -22,18 +24,34 @@
 //!   `n_heads / n_kv_heads` smaller than `d_model`) this amortizes both
 //!   the weight fetch and the KV bandwidth across the batch — the
 //!   decode-side analogue of ABQ-LLM's batched binary-matrix kernels.
+//! * [`PjrtStepper`] threads each session's KV-cache literals through
+//!   the AOT `decode_step` executable, one `run` per session per sweep
+//!   (loaded/compiled **once** per serve loop, not per request).
+//!
+//! Because a sweep is the unit of execution for every backend, sessions
+//! with different prompts, lengths, and arrival times batch freely —
+//! continuous batching falls out of the `Stepper` contract rather than
+//! being reimplemented per engine.
+//!
+//! The legacy batch-synchronous [`Engine::generate_batch`] survives as
+//! a thin wrapper: it pre-fills a queue, runs the same scheduler with
+//! `max_batch = batch.len()`, and folds each event stream into a
+//! [`Response`] — so its temp=0 output is token-identical to streaming.
 
+use super::batcher::{Pending, SubmitQueue};
 use super::kv::{KvArena, KvHandle, KvView};
 use super::metrics::Metrics;
-use super::{Request, Response};
+use super::scheduler::{run_scheduler, Session, Stepper};
+use super::{CancelHandle, GenRequest, Request, Response, SamplingParams};
 use crate::lut::{lut_gemm, LutScratch};
-use crate::model::{argmax, rmsnorm, silu, softmax, DecodeState, Model, Rope};
+use crate::model::{rmsnorm, silu, softmax, DecodeState, Model, Rope};
 use crate::quant::packing::BitPlanePacked;
-use crate::runtime::{self, Runtime};
+use crate::runtime::{self, LoadedExecutable, Runtime};
 use crate::tensor::{matvec, strip_axpys, strip_dots};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -101,8 +119,9 @@ impl Engine {
         }
     }
 
-    /// Give the engine a metrics handle so per-sweep decode batch
-    /// occupancy is recorded (the router wires this up for its workers).
+    /// Give the engine a metrics handle so the scheduler records TTFT,
+    /// inter-token latency, sweep occupancy, and arena snapshots (the
+    /// router wires this up for its workers).
     pub fn attach_metrics(&mut self, metrics: Metrics) {
         self.metrics = Some(metrics);
     }
@@ -117,151 +136,70 @@ impl Engine {
         }
     }
 
-    /// Decode a batch of requests with continuous batching: every active
-    /// session advances one token per sweep, and the whole sweep runs
-    /// through the engine's stepper (fused for the LUT engine).
-    pub fn generate_batch(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+    /// Run the persistent iteration-level scheduling loop over `queue`
+    /// until it is closed and drained: admit queued requests into free
+    /// slots (≤ `max_batch`) at every sweep boundary, advance all
+    /// active sessions one token per sweep, stream `GenEvent`s, and
+    /// retire finished / cancelled sessions immediately so their arena
+    /// slots are reused. On a stepper error every in-flight request
+    /// receives `Done{Error}` before the error is returned.
+    pub fn serve(&mut self, queue: &SubmitQueue, max_batch: usize) -> Result<()> {
         let metrics = self.metrics.clone();
-        let out = match &self.kind {
+        let arena = self.arena();
+        let res = match &self.kind {
             EngineKind::Native(model) => {
                 let mut stepper = NativeStepper { model: model.clone() };
-                generate_generic(&mut stepper, reqs, metrics.as_ref())
+                run_scheduler(&mut stepper, queue, max_batch, metrics.as_ref(), arena.as_deref())
             }
             EngineKind::Lut(_) => {
                 let stepper = self.lut_step.as_mut().context("lut stepper missing")?;
-                generate_generic(stepper, reqs, metrics.as_ref())
+                run_scheduler(stepper, queue, max_batch, metrics.as_ref(), arena.as_deref())
             }
             EngineKind::Pjrt { model, artifact, cache_len } => {
                 let (model, artifact, cache_len) = (model.clone(), artifact.clone(), *cache_len);
                 let rt = self.runtime.as_mut().context("pjrt runtime")?;
-                pjrt_generate(rt, &model, &artifact, cache_len, reqs)
+                let mut stepper = PjrtStepper::new(rt, &model, &artifact, cache_len)?;
+                run_scheduler(&mut stepper, queue, max_batch, metrics.as_ref(), None)
             }
         };
-        if let (Some(m), Some(a)) = (&self.metrics, self.arena()) {
+        if let (Some(m), Some(a)) = (&self.metrics, &arena) {
             m.observe_arena(a.id(), a.stats());
         }
-        out
-    }
-}
-
-/// One in-flight decode session: KV state + position bookkeeping. The
-/// stepping itself belongs to the [`Stepper`] so batched engines can fuse
-/// a whole sweep.
-trait Session {
-    fn pos(&self) -> usize;
-    fn capacity(&self) -> usize;
-}
-
-/// Executes one sweep: each session advances by exactly one token.
-trait Stepper {
-    type Sess: Session;
-
-    fn make(&self, r: &Request) -> Self::Sess;
-
-    /// Step session `i` with `tokens[i]`; returns next-token logits per
-    /// session, in order.
-    fn step_batch(&mut self, sessions: &mut [&mut Self::Sess], tokens: &[u32]) -> Vec<Vec<f32>>;
-}
-
-/// Round-robin sweeps, engine-agnostic: collect one token per active
-/// session, hand the whole sweep to the stepper, then apply sampling /
-/// finalization per session. Prompt prefill counts as steps too —
-/// single-token engine.
-fn generate_generic<St: Stepper>(
-    stepper: &mut St,
-    reqs: &[Request],
-    metrics: Option<&Metrics>,
-) -> Result<Vec<Response>> {
-    struct Active<S> {
-        idx: usize,
-        sess: S,
-        prompt_left: std::vec::IntoIter<u32>,
-        next_token: Option<u32>,
-        out: Vec<u32>,
-        started: Instant,
-        first_tok: Option<Instant>,
+        res
     }
 
-    fn finalize<S>(done: &mut [Option<Response>], a: &Active<S>, reqs: &[Request]) {
-        let total = a.started.elapsed().as_micros() as u64;
-        let first = a.first_tok.map(|t| (t - a.started).as_micros() as u64).unwrap_or(total);
-        done[a.idx] = Some(Response {
-            id: reqs[a.idx].id,
-            // `out` is exactly what was sampled — the trailing speculative
-            // token (fed but never requested) is never pushed.
-            tokens: a.out.clone(),
-            first_token_us: first,
-            total_us: total,
-        });
+    /// Legacy batch-synchronous API: greedy-decode a fixed batch to
+    /// completion. A thin wrapper over the event stream — the same
+    /// scheduler runs with `max_batch = reqs.len()` over a pre-filled
+    /// queue and each stream is folded into a [`Response`] — kept so
+    /// callers (report harness, tests) migrate incrementally.
+    pub fn generate_batch(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let queue = SubmitQueue::new();
+        let rxs: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let (tx, rx) = channel();
+                queue.push(Pending {
+                    request: GenRequest {
+                        id: r.id,
+                        prompt: r.prompt.clone(),
+                        params: SamplingParams { max_new: r.max_new, ..Default::default() },
+                        priority: 0,
+                    },
+                    events: tx,
+                    cancel: CancelHandle::new(),
+                    enqueued: Instant::now(),
+                });
+                (r.id, rx)
+            })
+            .collect();
+        queue.close();
+        self.serve(&queue, reqs.len())?;
+        rxs.iter().map(|(id, rx)| super::collect_events(*id, rx)).collect()
     }
-
-    let mut active: Vec<Active<St::Sess>> = reqs
-        .iter()
-        .enumerate()
-        .map(|(idx, r)| Active {
-            idx,
-            sess: stepper.make(r),
-            prompt_left: r.prompt.clone().into_iter(),
-            next_token: None,
-            out: Vec::new(),
-            started: Instant::now(),
-            first_tok: None,
-        })
-        .collect();
-    let mut done: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
-
-    while !active.is_empty() {
-        // Gather this sweep's (session, token) pairs; sessions with no
-        // token left (or no KV capacity) finalize instead.
-        let mut stepping: Vec<Active<St::Sess>> = Vec::with_capacity(active.len());
-        let mut tokens: Vec<u32> = Vec::with_capacity(active.len());
-        for mut a in active {
-            let capacity_left = a.sess.capacity() - a.sess.pos();
-            match a.next_token.take().or_else(|| a.prompt_left.next()) {
-                Some(t) if capacity_left > 0 => {
-                    tokens.push(t);
-                    stepping.push(a);
-                }
-                // out of prompt+generation or capacity: finalize
-                _ => finalize(&mut done, &a, reqs),
-            }
-        }
-        if stepping.is_empty() {
-            break;
-        }
-        if let Some(m) = metrics {
-            m.record_decode_sweep(stepping.len());
-        }
-
-        let logits_all = {
-            let mut refs: Vec<&mut St::Sess> = stepping.iter_mut().map(|a| &mut a.sess).collect();
-            stepper.step_batch(&mut refs, &tokens)
-        };
-        debug_assert_eq!(logits_all.len(), stepping.len());
-
-        let mut still = Vec::with_capacity(stepping.len());
-        for (mut a, logits) in stepping.into_iter().zip(logits_all) {
-            if a.prompt_left.len() == 0 {
-                // generating
-                if a.first_tok.is_none() {
-                    a.first_tok = Some(Instant::now());
-                }
-                if a.out.len() < reqs[a.idx].max_new {
-                    let next = argmax(&logits) as u32;
-                    a.out.push(next);
-                    a.next_token = Some(next);
-                    still.push(a);
-                } else {
-                    finalize(&mut done, &a, reqs);
-                }
-            } else {
-                still.push(a);
-            }
-        }
-        active = still;
-    }
-
-    Ok(done.into_iter().map(|d| d.expect("all finalized")).collect())
 }
 
 struct NativeSession {
@@ -287,12 +225,16 @@ struct NativeStepper {
 impl Stepper for NativeStepper {
     type Sess = NativeSession;
 
-    fn make(&self, _r: &Request) -> NativeSession {
+    fn make(&self) -> NativeSession {
         NativeSession { state: self.model.decode_state() }
     }
 
-    fn step_batch(&mut self, sessions: &mut [&mut NativeSession], tokens: &[u32]) -> Vec<Vec<f32>> {
-        sessions.iter_mut().zip(tokens).map(|(s, &t)| s.state.step(&self.model, t)).collect()
+    fn step_batch(
+        &mut self,
+        sessions: &mut [&mut NativeSession],
+        tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(sessions.iter_mut().zip(tokens).map(|(s, &t)| s.state.step(&self.model, t)).collect())
     }
 }
 
@@ -434,7 +376,7 @@ fn disjoint_rows_mut<'a>(
 impl Stepper for BatchedLutStep {
     type Sess = LutSession;
 
-    fn make(&self, _r: &Request) -> LutSession {
+    fn make(&self) -> LutSession {
         LutSession {
             arena: self.arena.clone(),
             handle: Some(self.arena.acquire().expect("KV arena exhausted")),
@@ -443,11 +385,15 @@ impl Stepper for BatchedLutStep {
         }
     }
 
-    fn step_batch(&mut self, sessions: &mut [&mut LutSession], tokens: &[u32]) -> Vec<Vec<f32>> {
+    fn step_batch(
+        &mut self,
+        sessions: &mut [&mut LutSession],
+        tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>> {
         let nb = sessions.len();
         debug_assert_eq!(tokens.len(), nb);
         if nb == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         // Arc clone so `model` does not borrow `self` (the flat buffers
         // below need disjoint &mut borrows of self's fields).
@@ -588,7 +534,7 @@ impl Stepper for BatchedLutStep {
             rmsnorm(&self.h[b * d..(b + 1) * d], &model.norm_f, normb);
             out.push(matvec(&model.lm_head, normb));
         }
-        out
+        Ok(out)
     }
 }
 
@@ -604,101 +550,112 @@ fn artifact_kv_dim(artifact: &std::path::Path) -> Option<usize> {
     text.lines().find_map(|line| line.strip_prefix("kv_dim ")?.trim().parse().ok())
 }
 
-/// PJRT path: run requests sequentially through the AOT decode-step
-/// executable, threading the KV cache literals. The executable is loaded
-/// (and compiled, on a cache miss) **once per batch**, not per request —
-/// reloading inside the request loop made every request pay the artifact
-/// parse/compile round-trip.
-fn pjrt_generate(
-    rt: &mut Runtime,
-    model: &Model,
-    artifact: &std::path::Path,
-    cache_len: usize,
-    reqs: &[Request],
-) -> Result<Vec<Response>> {
-    // GQA-aware artifacts declare their cache width (`kv_dim`) in the
-    // sibling meta file and must match the checkpoint exactly. Stale
-    // TLM1-era artifacts (no kv_dim line) thread a full d_model-wide
-    // cache, so only MHA checkpoints may use them — refuse rather than
-    // silently mis-shape the cache literals.
-    let kv_dim = match artifact_kv_dim(artifact) {
-        Some(kd) => {
-            anyhow::ensure!(
-                kd == model.cfg.kv_dim(),
-                "decode artifact kv_dim {kd} != checkpoint kv_dim {} — regenerate with \
-                 python -m compile.aot",
-                model.cfg.kv_dim()
-            );
-            kd
-        }
-        None => {
-            anyhow::ensure!(
-                model.cfg.n_kv_heads == model.cfg.n_heads,
-                "stale decode artifact (no kv_dim in meta) supports MHA only — regenerate \
-                 with python -m compile.aot for GQA checkpoints"
-            );
-            model.cfg.d_model
-        }
-    };
-    let nl = model.cfg.n_layers;
-    let cache_elems = nl * cache_len * kv_dim;
-    let mut out = Vec::with_capacity(reqs.len());
-    let exe = rt.load(artifact)?;
+/// A PJRT decode session: the KV cache travels as a pair of literals
+/// threaded through the AOT executable, one `run` per step.
+struct PjrtSession {
+    klit: xla::Literal,
+    vlit: xla::Literal,
+    pos: usize,
+    cap: usize,
+}
 
-    for r in reqs {
-        let started = Instant::now();
-        let mut first_tok = None;
-        let zeros = vec![0.0f32; cache_elems];
-        let shape = [nl as i64, cache_len as i64, kv_dim as i64];
-        let mut klit = runtime::literal_f32(&zeros, &shape)?;
-        let mut vlit = runtime::literal_f32(&zeros, &shape)?;
-        let mut logits: Vec<f32> = Vec::new();
-        let mut pos = 0usize;
-        let budget = cache_len.saturating_sub(2);
-        for &t in r.prompt.iter().take(budget) {
-            let res = exe.run(&[
-                runtime::literal_i32(t as i32),
-                runtime::literal_i32(pos as i32),
-                klit,
-                vlit,
-            ])?;
-            let mut it = res.into_iter();
-            logits = runtime::to_f32_vec(&it.next().context("logits")?)?;
-            klit = it.next().context("kcache")?;
-            vlit = it.next().context("vcache")?;
-            pos += 1;
-        }
-        let mut tokens = Vec::with_capacity(r.max_new);
-        for _ in 0..r.max_new {
-            if pos >= cache_len {
-                break;
-            }
-            let next = argmax(&logits) as u32;
-            if first_tok.is_none() {
-                first_tok = Some(started.elapsed().as_micros() as u64);
-            }
-            tokens.push(next);
-            let res = exe.run(&[
-                runtime::literal_i32(next as i32),
-                runtime::literal_i32(pos as i32),
-                klit,
-                vlit,
-            ])?;
-            let mut it = res.into_iter();
-            logits = runtime::to_f32_vec(&it.next().context("logits")?)?;
-            klit = it.next().context("kcache")?;
-            vlit = it.next().context("vcache")?;
-            pos += 1;
-        }
-        let total = started.elapsed().as_micros() as u64;
-        out.push(Response {
-            id: r.id,
-            tokens,
-            first_token_us: first_tok.unwrap_or(total),
-            total_us: total,
-        });
+impl Session for PjrtSession {
+    fn pos(&self) -> usize {
+        self.pos
     }
-    Ok(out)
+    fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// PJRT stepper: sequential AOT-executable calls per session (the
+/// artifact is single-token). The executable is loaded (and compiled,
+/// on a cache miss) **once per serve loop**, not per request —
+/// reloading inside the request loop made every request pay the
+/// artifact parse/compile round-trip.
+struct PjrtStepper<'rt> {
+    exe: &'rt LoadedExecutable,
+    nl: usize,
+    cache_len: usize,
+    kv_dim: usize,
+}
+
+impl<'rt> PjrtStepper<'rt> {
+    fn new(
+        rt: &'rt mut Runtime,
+        model: &Model,
+        artifact: &std::path::Path,
+        cache_len: usize,
+    ) -> Result<Self> {
+        // GQA-aware artifacts declare their cache width (`kv_dim`) in the
+        // sibling meta file and must match the checkpoint exactly. Stale
+        // TLM1-era artifacts (no kv_dim line) thread a full d_model-wide
+        // cache, so only MHA checkpoints may use them — refuse rather than
+        // silently mis-shape the cache literals.
+        let kv_dim = match artifact_kv_dim(artifact) {
+            Some(kd) => {
+                anyhow::ensure!(
+                    kd == model.cfg.kv_dim(),
+                    "decode artifact kv_dim {kd} != checkpoint kv_dim {} — regenerate with \
+                     python -m compile.aot",
+                    model.cfg.kv_dim()
+                );
+                kd
+            }
+            None => {
+                anyhow::ensure!(
+                    model.cfg.n_kv_heads == model.cfg.n_heads,
+                    "stale decode artifact (no kv_dim in meta) supports MHA only — regenerate \
+                     with python -m compile.aot for GQA checkpoints"
+                );
+                model.cfg.d_model
+            }
+        };
+        let exe = rt.load(artifact)?;
+        Ok(Self { exe, nl: model.cfg.n_layers, cache_len, kv_dim })
+    }
+}
+
+impl Stepper for PjrtStepper<'_> {
+    type Sess = PjrtSession;
+
+    fn make(&self) -> PjrtSession {
+        let zeros = vec![0.0f32; self.nl * self.cache_len * self.kv_dim];
+        let shape = [self.nl as i64, self.cache_len as i64, self.kv_dim as i64];
+        PjrtSession {
+            klit: runtime::literal_f32(&zeros, &shape).expect("PJRT cache literal"),
+            vlit: runtime::literal_f32(&zeros, &shape).expect("PJRT cache literal"),
+            pos: 0,
+            cap: self.cache_len,
+        }
+    }
+
+    fn step_batch(
+        &mut self,
+        sessions: &mut [&mut PjrtSession],
+        tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(sessions.len());
+        for (s, &t) in sessions.iter_mut().zip(tokens) {
+            // Move the cache literals into the call; a cheap scalar
+            // placeholder keeps the session valid if `run` fails.
+            let klit = std::mem::replace(&mut s.klit, runtime::literal_i32(0));
+            let vlit = std::mem::replace(&mut s.vlit, runtime::literal_i32(0));
+            let res = self.exe.run(&[
+                runtime::literal_i32(t as i32),
+                runtime::literal_i32(s.pos as i32),
+                klit,
+                vlit,
+            ])?;
+            let mut it = res.into_iter();
+            let logits = runtime::to_f32_vec(&it.next().context("logits")?)?;
+            s.klit = it.next().context("kcache")?;
+            s.vlit = it.next().context("vcache")?;
+            s.pos += 1;
+            out.push(logits);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -707,7 +664,9 @@ mod tests {
     use crate::io::tlm::TlmFile;
     use crate::model::{synthetic_model, ModelConfig};
     use crate::quant::{BpdqConfig, QuantMethod};
+    use crate::serving::{FinishReason, GenEvent, Usage};
     use std::path::Path;
+    use std::sync::mpsc::Receiver;
 
     fn tiny() -> Arc<Model> {
         tiny_gqa(4)
@@ -766,6 +725,44 @@ mod tests {
         (native, lut)
     }
 
+    /// Push `gen_reqs` onto a fresh queue, serve it to completion with
+    /// `max_batch`, and drain each stream.
+    fn serve_streams(
+        engine: &mut Engine,
+        gen_reqs: Vec<GenRequest>,
+        max_batch: usize,
+    ) -> Vec<(Vec<u32>, FinishReason, Usage)> {
+        let queue = SubmitQueue::new();
+        let rxs: Vec<Receiver<GenEvent>> = gen_reqs
+            .into_iter()
+            .map(|request| {
+                let (tx, rx) = channel();
+                queue.push(Pending {
+                    request,
+                    events: tx,
+                    cancel: CancelHandle::new(),
+                    enqueued: Instant::now(),
+                });
+                rx
+            })
+            .collect();
+        queue.close();
+        engine.serve(&queue, max_batch).unwrap();
+        rxs.iter()
+            .map(|rx| {
+                let mut tokens = Vec::new();
+                loop {
+                    match rx.recv().expect("stream ends with Done") {
+                        GenEvent::Token { id, .. } => tokens.push(id),
+                        GenEvent::Done { finish_reason, usage, .. } => {
+                            return (tokens, finish_reason, usage)
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
     #[test]
     fn native_engine_batch() {
         let mut e = Engine::new(EngineKind::Native(tiny())).unwrap();
@@ -788,6 +785,129 @@ mod tests {
             let single = e.generate_batch(std::slice::from_ref(r)).unwrap();
             assert_eq!(single[0].tokens, batch[i].tokens, "request {i}");
         }
+    }
+
+    #[test]
+    fn event_stream_matches_generate_batch() {
+        // Acceptance: temp=0 event-stream output is token-identical to
+        // the legacy batch wrapper for the same prompts — Native and LUT.
+        for (mut engine, label) in {
+            let (native, lut) = quantized_engine_pair(tiny(), 16);
+            [(native, "native"), (lut, "lut")]
+        } {
+            let legacy = engine.generate_batch(&reqs(3)).unwrap();
+            let gen_reqs: Vec<GenRequest> = reqs(3)
+                .iter()
+                .map(|r| GenRequest {
+                    id: r.id,
+                    prompt: r.prompt.clone(),
+                    params: SamplingParams { max_new: r.max_new, ..Default::default() },
+                    priority: 0,
+                })
+                .collect();
+            let streamed = serve_streams(&mut engine, gen_reqs, 3);
+            for (i, ((tokens, fin, usage), legacy_r)) in
+                streamed.iter().zip(&legacy).enumerate()
+            {
+                assert_eq!(tokens, &legacy_r.tokens, "{label} request {i}");
+                assert_eq!(*fin, FinishReason::Length, "{label} request {i}");
+                assert_eq!(usage.completion_tokens, tokens.len());
+                assert_eq!(usage.prompt_tokens, 5);
+            }
+        }
+    }
+
+    #[test]
+    fn mid_sweep_admission_parity_lut() {
+        // Satellite: a request admitted into a busy sweep at temp=0 must
+        // produce tokens identical to running it solo. max_batch 2 makes
+        // the join deterministic: the third request is admitted only when
+        // the second retires, while the long first is still decoding.
+        let (_, mut lut) = quantized_engine_pair(tiny(), 16);
+        let joiner_prompt: Vec<u32> = vec![2, 9, 14];
+        let solo = lut
+            .generate_batch(&[Request { id: 9, prompt: joiner_prompt.clone(), max_new: 6 }])
+            .unwrap();
+        let gen_reqs = vec![
+            GenRequest {
+                id: 0,
+                prompt: vec![1, 4],
+                params: SamplingParams { max_new: 40, ..Default::default() },
+                priority: 0,
+            },
+            GenRequest {
+                id: 1,
+                prompt: vec![7],
+                params: SamplingParams { max_new: 2, ..Default::default() },
+                priority: 0,
+            },
+            GenRequest {
+                id: 2,
+                prompt: joiner_prompt,
+                params: SamplingParams { max_new: 6, ..Default::default() },
+                priority: 0,
+            },
+        ];
+        let out = serve_streams(&mut lut, gen_reqs, 2);
+        assert_eq!(out[2].0, solo[0].tokens, "mid-sweep admission changed tokens");
+        assert!(
+            out[2].2.finished_sweep > out[1].2.finished_sweep,
+            "joiner admitted after the early request retired"
+        );
+        assert!(
+            out[2].2.finished_sweep < out[0].2.finished_sweep,
+            "joiner must finish inside the long request's decode"
+        );
+    }
+
+    #[test]
+    fn seeded_sampling_is_reproducible() {
+        let mut e = Engine::new(EngineKind::Native(tiny())).unwrap();
+        let req = |seed: u64| GenRequest {
+            id: seed,
+            prompt: vec![1, 2, 3],
+            params: SamplingParams {
+                temperature: 0.9,
+                top_k: 8,
+                top_p: 0.95,
+                seed,
+                max_new: 10,
+                ..Default::default()
+            },
+            priority: 0,
+        };
+        let a = serve_streams(&mut e, vec![req(7)], 1);
+        let b = serve_streams(&mut e, vec![req(7)], 1);
+        assert_eq!(a[0].0, b[0].0, "same seed ⇒ same stream");
+        assert_eq!(a[0].0.len(), 10);
+        assert!(a[0].0.iter().all(|&t| (t as usize) < 20), "tokens within vocab");
+    }
+
+    #[test]
+    fn stop_token_finishes_stream() {
+        // Use the first greedy token as the stop token: the stream must
+        // end immediately with Stop and emit nothing.
+        let mut e = Engine::new(EngineKind::Native(tiny())).unwrap();
+        let greedy = e
+            .generate_batch(&[Request { id: 0, prompt: vec![1, 2, 3], max_new: 4 }])
+            .unwrap();
+        let stop = greedy[0].tokens[0];
+        let out = serve_streams(
+            &mut e,
+            vec![GenRequest {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                params: SamplingParams {
+                    max_new: 4,
+                    stop_tokens: vec![stop],
+                    ..Default::default()
+                },
+                priority: 0,
+            }],
+            1,
+        );
+        assert!(out[0].0.is_empty(), "stop token must not be emitted");
+        assert_eq!(out[0].1, FinishReason::Stop);
     }
 
     #[test]
@@ -945,8 +1065,8 @@ mod tests {
     #[test]
     fn pjrt_batch_matches_single_request() {
         // PJRT engine parity across batch sizes; exercises the hoisted
-        // (once-per-batch) executable load. Skips without the real PJRT
-        // plugin or the AOT artifacts.
+        // (once-per-serve-loop) executable load. Skips without the real
+        // PJRT plugin or the AOT artifacts.
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         let artifact = dir.join("decode_step.hlo.txt");
         let ckpt = dir.join("tiny_small.tlm");

@@ -1,25 +1,70 @@
-//! Serving metrics: queueing delay, time-to-first-token, per-token
-//! decode latency, throughput, decode-sweep batch occupancy, and KV
-//! arena occupancy — the quantities behind Table 3's latency column and
-//! the serving example's report.
+//! Serving metrics: queueing delay, **real** time-to-first-token
+//! (measured when the first `Token` event is emitted, not at batch
+//! completion), inter-token latency, per-token decode latency,
+//! throughput, decode-sweep batch occupancy, and KV arena occupancy —
+//! the quantities behind Table 3's latency column and the serving
+//! example's report.
+//!
+//! The scheduler buffers per-token samples (TTFT, inter-token gaps)
+//! inside its own request state and flushes them here in **one**
+//! `record_retired` call when the request retires — the decode hot
+//! loop never takes this shared mutex per token, only per sweep
+//! (`record_decode_sweep`) and per request. Summaries are live: they
+//! can be read while a sweep is still in flight.
 
 use crate::io::json::JsonWriter;
 
 use super::kv::ArenaStats;
-use super::Response;
+use super::FinishReason;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Bounded latency-sample pool: grows to [`MAX_LATENCY_SAMPLES`], then
+/// overwrites the oldest entries ring-buffer style — a long-lived
+/// server keeps percentile memory (and the summary's sort cost)
+/// constant while tracking recent traffic.
+#[derive(Default)]
+struct Samples {
+    data: Vec<u64>,
+    cursor: usize,
+}
+
+/// Per-metric sample cap; percentiles reflect the most recent window
+/// once a server outlives it.
+const MAX_LATENCY_SAMPLES: usize = 1 << 16;
+
+impl Samples {
+    fn push(&mut self, v: u64) {
+        if self.data.len() < MAX_LATENCY_SAMPLES {
+            self.data.push(v);
+        } else {
+            self.data[self.cursor] = v;
+            self.cursor = (self.cursor + 1) % MAX_LATENCY_SAMPLES;
+        }
+    }
+}
+
 #[derive(Default)]
 struct Inner {
-    queue_us: Vec<u64>,
-    first_token_us: Vec<u64>,
-    total_us: Vec<u64>,
+    queue_us: Samples,
+    /// Submission → first emitted token, per request (real TTFT).
+    ttft_us: Samples,
+    /// Gap between consecutive token events of one request.
+    itl_us: Samples,
+    /// Total admission → retirement µs across all requests (running
+    /// sum, not samples — feeds `us_per_token` exactly regardless of
+    /// the sample window).
+    decode_us_total: u64,
+    /// Requests that ran to a normal finish (`Length` / `Stop`).
+    completed: usize,
+    /// Requests retired by cancellation.
+    cancelled: usize,
+    /// Requests retired by an engine error.
+    errored: usize,
     tokens: usize,
-    batch_sizes: Vec<usize>,
-    // Fused-sweep occupancy (recorded by the engines): one entry of work
-    // per sweep, `batch` tokens advanced per sweep.
+    // Fused-sweep occupancy (recorded by the scheduler): one entry of
+    // work per sweep, `batch` tokens advanced per sweep.
     decode_sweeps: u64,
     decode_sweep_tokens: u64,
     max_decode_batch: usize,
@@ -46,14 +91,24 @@ impl Default for Metrics {
 
 #[derive(Clone, Debug)]
 pub struct LatencySummary {
+    /// Requests that finished normally (`Length` / `Stop`).
     pub completed: usize,
+    /// Requests retired by cancellation (tokens they emitted still
+    /// count in `tokens`).
+    pub cancelled: usize,
+    /// Requests retired by an engine error.
+    pub errored: usize,
     pub tokens: usize,
+    /// p50 time-to-first-token (submission → first `Token` event).
     pub p50_first_us: u64,
+    /// p95 time-to-first-token — the streaming latency SLO.
     pub p95_first_us: u64,
+    /// p50 inter-token latency (gap between consecutive token events).
+    pub p50_itl_us: u64,
+    /// p95 inter-token latency.
+    pub p95_itl_us: u64,
     pub p50_queue_us: u64,
-    /// mean number of requests per engine batch (router-level batching)
-    pub mean_batch: f64,
-    /// number of fused decode sweeps executed by the engines
+    /// number of fused decode sweeps executed by the schedulers
     pub decode_sweeps: u64,
     /// mean sessions advanced per sweep (engine-level batching — the
     /// lever the batched LUT-GEMM amortizes the weight fetch over)
@@ -62,7 +117,7 @@ pub struct LatencySummary {
     pub max_decode_batch: usize,
     pub us_per_token: f64,
     pub tokens_per_sec: f64,
-    /// KV arena slots live at the last engine observation
+    /// KV arena slots live at the last scheduler observation
     pub arena_slots_in_use: usize,
     /// most KV arena slots ever live at once
     pub arena_high_water: usize,
@@ -81,16 +136,22 @@ impl LatencySummary {
         w.begin_object()
             .key("completed")
             .int(self.completed as i64)
+            .key("cancelled")
+            .int(self.cancelled as i64)
+            .key("errored")
+            .int(self.errored as i64)
             .key("tokens")
             .int(self.tokens as i64)
             .key("p50_first_us")
             .int(self.p50_first_us as i64)
             .key("p95_first_us")
             .int(self.p95_first_us as i64)
+            .key("p50_itl_us")
+            .int(self.p50_itl_us as i64)
+            .key("p95_itl_us")
+            .int(self.p95_itl_us as i64)
             .key("p50_queue_us")
             .int(self.p50_queue_us as i64)
-            .key("mean_batch")
-            .number(self.mean_batch)
             .key("decode_sweeps")
             .int(self.decode_sweeps as i64)
             .key("mean_decode_batch")
@@ -119,21 +180,41 @@ impl Metrics {
         Self { inner: Arc::new(Mutex::new(Inner::default())) }
     }
 
-    pub fn record(&self, r: &Response, queue_us: u64, batch_size: usize) {
+    /// A request retired. One call (and one lock) per request: the
+    /// scheduler measured TTFT at the first token *event* and buffered
+    /// the inter-token gaps as they happened, and flushes them all
+    /// here. `ttft_us` is `None` when no token was emitted.
+    pub fn record_retired(
+        &self,
+        finish: FinishReason,
+        queue_us: u64,
+        ttft_us: Option<u64>,
+        itl_us: &[u64],
+        tokens: usize,
+        decode_us: u64,
+    ) {
         let mut m = self.inner.lock().unwrap();
         let now = Instant::now();
         m.started.get_or_insert(now);
         m.finished = Some(now);
+        match finish {
+            FinishReason::Length | FinishReason::Stop => m.completed += 1,
+            FinishReason::Cancelled => m.cancelled += 1,
+            FinishReason::Error => m.errored += 1,
+        }
+        m.tokens += tokens;
+        m.decode_us_total += decode_us;
         m.queue_us.push(queue_us);
-        m.first_token_us.push(r.first_token_us);
-        m.total_us.push(r.total_us);
-        m.tokens += r.tokens.len();
-        m.batch_sizes.push(batch_size);
+        if let Some(t) = ttft_us {
+            m.ttft_us.push(t);
+        }
+        for &v in itl_us {
+            m.itl_us.push(v);
+        }
     }
 
     /// Record one fused decode sweep advancing `batch` sessions by one
-    /// token each (called by the engines when a metrics handle is
-    /// attached).
+    /// token each (called by the scheduler every iteration).
     pub fn record_decode_sweep(&self, batch: usize) {
         let mut m = self.inner.lock().unwrap();
         m.decode_sweeps += 1;
@@ -141,8 +222,8 @@ impl Metrics {
         m.max_decode_batch = m.max_decode_batch.max(batch);
     }
 
-    /// Record a KV-arena snapshot (called by the engines after each
-    /// batch), keyed by the arena's id. Snapshots from one arena are
+    /// Record a KV-arena snapshot (called by the scheduler after each
+    /// sweep), keyed by the arena's id. Snapshots from one arena are
     /// internally monotone, so the latest one replaces the previous;
     /// distinct arenas (workers over distinct models) are kept apart
     /// and summed at summary time.
@@ -161,22 +242,21 @@ impl Metrics {
             s.sort_unstable();
             s[((s.len() as f64 * p) as usize).min(s.len() - 1)]
         };
-        let total_decode_us: u64 = m.total_us.iter().sum();
+        let total_decode_us: u64 = m.decode_us_total;
         let wall = match (m.started, m.finished) {
             (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
             _ => 0.0,
         };
         LatencySummary {
-            completed: m.total_us.len(),
+            completed: m.completed,
+            cancelled: m.cancelled,
+            errored: m.errored,
             tokens: m.tokens,
-            p50_first_us: pct(&m.first_token_us, 0.5),
-            p95_first_us: pct(&m.first_token_us, 0.95),
-            p50_queue_us: pct(&m.queue_us, 0.5),
-            mean_batch: if m.batch_sizes.is_empty() {
-                0.0
-            } else {
-                m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
-            },
+            p50_first_us: pct(&m.ttft_us.data, 0.5),
+            p95_first_us: pct(&m.ttft_us.data, 0.95),
+            p50_itl_us: pct(&m.itl_us.data, 0.5),
+            p95_itl_us: pct(&m.itl_us.data, 0.95),
+            p50_queue_us: pct(&m.queue_us.data, 0.5),
             decode_sweeps: m.decode_sweeps,
             mean_decode_batch: if m.decode_sweeps == 0 {
                 0.0
@@ -207,22 +287,19 @@ impl Metrics {
 mod tests {
     use super::*;
 
-    fn resp(tokens: usize, first: u64, total: u64) -> Response {
-        Response { id: 0, tokens: vec![1; tokens], first_token_us: first, total_us: total }
-    }
-
     #[test]
     fn summary_percentiles() {
         let m = Metrics::new();
         for i in 1..=100u64 {
-            m.record(&resp(2, i * 10, i * 20), i, 4);
+            m.record_retired(FinishReason::Length, i, Some(i * 10), &[i * 2], 2, i * 20);
         }
         let s = m.summary();
         assert_eq!(s.completed, 100);
         assert_eq!(s.tokens, 200);
         assert!(s.p50_first_us >= 490 && s.p50_first_us <= 520, "{}", s.p50_first_us);
         assert!(s.p95_first_us >= 940, "{}", s.p95_first_us);
-        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        assert!(s.p50_itl_us >= 98 && s.p50_itl_us <= 104, "{}", s.p50_itl_us);
+        assert!(s.p95_itl_us >= 188, "{}", s.p95_itl_us);
         assert!(s.us_per_token > 0.0);
     }
 
@@ -231,18 +308,19 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p50_first_us, 0);
+        assert_eq!(s.p50_itl_us, 0);
         assert_eq!(s.decode_sweeps, 0);
         assert_eq!(s.mean_decode_batch, 0.0);
     }
 
     #[test]
     fn zero_wall_time_is_finite() {
-        // A single recorded response gives started == finished, i.e. a
+        // A single recorded completion gives started == finished, i.e. a
         // zero wall clock. Regression: this used to report
         // tokens_per_sec = f64::INFINITY, which is unrepresentable in
         // JSON and corrupted bench reports.
         let m = Metrics::new();
-        m.record(&resp(5, 10, 50), 1, 1);
+        m.record_retired(FinishReason::Length, 1, Some(10), &[], 5, 50);
         let s = m.summary();
         assert!(s.tokens_per_sec.is_finite(), "tokens_per_sec must be finite");
         assert_eq!(s.tokens_per_sec, 0.0);
@@ -251,7 +329,7 @@ mod tests {
     #[test]
     fn summary_is_json_serializable() {
         let m = Metrics::new();
-        m.record(&resp(3, 10, 30), 1, 2);
+        m.record_retired(FinishReason::Length, 1, Some(10), &[5, 5], 3, 30);
         m.record_decode_sweep(2);
         let s = m.summary();
         let json = s.to_json();
@@ -266,6 +344,9 @@ mod tests {
             "mean_decode_batch",
             "decode_sweeps",
             "us_per_token",
+            "p95_first_us",
+            "p50_itl_us",
+            "p95_itl_us",
             "arena_high_water",
             "arena_bytes_resident",
             "arena_fork_copies",
@@ -273,7 +354,38 @@ mod tests {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
         // No quoted values: every field in LatencySummary is numeric.
-        assert_eq!(json.matches('"').count(), 2 * 15, "non-numeric value leaked into {json}");
+        assert_eq!(json.matches('"').count(), 2 * 18, "non-numeric value leaked into {json}");
+    }
+
+    #[test]
+    fn ttft_and_itl_flushed_per_request() {
+        // 3 tokens of one request flush one TTFT sample and two ITL
+        // samples in a single record_retired call.
+        let m = Metrics::new();
+        m.record_retired(FinishReason::Length, 1, Some(100), &[10, 12], 3, 130);
+        let s = m.summary();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.tokens, 3);
+        assert_eq!(s.p50_first_us, 100);
+        assert!(s.p50_itl_us == 10 || s.p50_itl_us == 12);
+    }
+
+    #[test]
+    fn outcomes_are_split_not_lumped() {
+        // Cancelled / errored retirements must not inflate `completed`;
+        // their emitted tokens still count toward throughput.
+        let m = Metrics::new();
+        m.record_retired(FinishReason::Length, 0, Some(5), &[], 4, 40);
+        m.record_retired(FinishReason::Stop, 0, Some(5), &[], 2, 20);
+        m.record_retired(FinishReason::Cancelled, 0, Some(5), &[], 3, 30);
+        m.record_retired(FinishReason::Error, 0, None, &[], 1, 10);
+        let s = m.summary();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.errored, 1);
+        assert_eq!(s.tokens, 10);
+        // No-token retirement contributes no TTFT sample.
+        assert_eq!(s.p95_first_us, 5);
     }
 
     #[test]
@@ -299,6 +411,21 @@ mod tests {
         assert_eq!(s.arena_high_water, 5);
         assert_eq!(s.arena_bytes_resident, 5120);
         assert_eq!(s.arena_fork_copies, 2);
+    }
+
+    #[test]
+    fn latency_samples_are_bounded() {
+        // A long-lived server must not grow sample memory with total
+        // tokens served: the pools cap and recycle.
+        let mut pool = Samples::default();
+        for i in 0..(MAX_LATENCY_SAMPLES as u64 + 10) {
+            pool.push(i);
+        }
+        assert_eq!(pool.data.len(), MAX_LATENCY_SAMPLES);
+        // Oldest entries were overwritten by the newest ten.
+        assert_eq!(pool.data[0], MAX_LATENCY_SAMPLES as u64);
+        assert_eq!(pool.data[9], MAX_LATENCY_SAMPLES as u64 + 9);
+        assert_eq!(pool.data[10], 10);
     }
 
     #[test]

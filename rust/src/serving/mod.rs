@@ -5,42 +5,251 @@
 //! test:
 //!
 //! ```text
-//! client ── submit ──► Router (round-robin / least-loaded)
-//!                         │ per-worker bounded queues
-//!                  ┌──────┴──────┐
-//!              Worker 0 …    Worker N-1      (one Engine each)
-//!                  │   Batcher: collect ≤ max_batch within window
-//!                  ▼
-//!              Engine::generate_batch — continuous-batching decode
-//!              (native fp32 / LUT bit-plane / PJRT AOT artifact)
+//! client ── submit_with ──► Router (round-robin / least-loaded)
+//!     ▲                        │ per-worker SubmitQueue (priority FIFO)
+//!     │ Receiver<GenEvent>     │
+//!     │ + CancelHandle   ┌─────┴──────┐
+//!     │              Worker 0 …   Worker N-1    (one Engine each)
+//!     │                  │  Scheduler: one persistent decode sweep
+//!     └──────────────────┤    · admit queued requests into free slots
+//!        Token / Done    │      at every sweep boundary (≤ max_batch)
+//!                        ▼    · step all sessions via the Stepper
+//!              Stepper::step_batch     (native fp32 / LUT bit-plane /
+//!                                       PJRT AOT artifact)
 //! ```
+//!
+//! Scheduling is **iteration-level** (Orca / vLLM continuous batching):
+//! the worker never collects a batch up-front and runs it to completion.
+//! Instead one long-lived sweep loop admits queued requests into free
+//! batch slots at each sweep boundary, advances every active session by
+//! exactly one token, emits a [`GenEvent::Token`] per session as it is
+//! produced, and retires finished / cancelled sessions immediately so
+//! their KV-arena slots are re-admitted on the next iteration. A
+//! 512-token request therefore no longer holds 8-token requests hostage:
+//! short requests stream out and complete while long ones are still
+//! decoding.
 //!
 //! The LUT engine is the paper's serving contribution: per-token decode
 //! over *packed bit-planes* (no dequantized weight materialization), so
 //! the memory-bound GEMV reads `k/16`-th of the fp16 bytes (Table 3).
-//! Since the batched-decode refactor, all LUT sessions in a batch are
-//! stepped **together** through a fused sweep (`lut_gemm`): each layer's
-//! packed plane words are gathered once per step and applied to every
-//! active session's LUT, so per-token decode cost falls toward `1/B` of
-//! the weight-fetch bound as the batch fills. Every session's KV lives
-//! in a slot of the model's pooled [`kv::KvArena`] (one slab per model),
-//! so the fused sweep's score/AV phase runs as batched multi-session
-//! kernels over arena-adjacent strips. The native engine keeps stepping
-//! sessions independently — dense matvecs share nothing — but its
-//! sessions draw from the same arena.
+//! All LUT sessions in a sweep are stepped **together** through a fused
+//! pass (`lut_gemm`): each layer's packed plane words are gathered once
+//! per step and applied to every active session's LUT, so per-token
+//! decode cost falls toward `1/B` of the weight-fetch bound as the batch
+//! fills. Every session's KV lives in a slot of the model's pooled
+//! [`kv::KvArena`] (one slab per model), so the fused sweep's score/AV
+//! phase runs as batched multi-session kernels over arena-adjacent
+//! strips. The native engine steps sessions independently — dense
+//! matvecs share nothing — but its sessions draw from the same arena and
+//! the same scheduler loop.
+//!
+//! ## Serving API
+//!
+//! The streaming API is event-driven: a request is a [`GenRequest`]
+//! (prompt + [`SamplingParams`] + priority) and its result is a stream
+//! of [`GenEvent`]s on a per-request channel —
+//! [`GenEvent::Token`]`{id, logprob}` per generated token, then exactly
+//! one [`GenEvent::Done`]`{finish_reason, usage}`:
+//!
+//! ```ignore
+//! let stream = router.submit_with(prompt, SamplingParams {
+//!     temperature: 0.8, top_k: 40, seed: 7, max_new: 64,
+//!     ..Default::default()
+//! }, /*priority*/ 0);
+//! let cancel = stream.cancel_handle();     // cancel.cancel() from anywhere
+//! while let Some(ev) = stream.recv() {
+//!     match ev {
+//!         GenEvent::Token { id, logprob } => print_token(id, logprob),
+//!         GenEvent::Done { finish_reason, usage, .. } => report(finish_reason, usage),
+//!     }
+//! }
+//! ```
+//!
+//! * **Sampling** — `temperature == 0` is exactly `argmax` (token-
+//!   identical to the historical greedy path, which all parity tests
+//!   pin); `temperature > 0` samples from the temperature-scaled
+//!   softmax through top-k / top-p truncation, seeded per request
+//!   (`SamplingParams::seed`) so runs are reproducible.
+//! * **Cancellation** — [`CancelHandle::cancel`] retires the session at
+//!   the next sweep boundary: the KV-arena slot is released *before*
+//!   the `Done{finish_reason: Cancelled}` event is sent, so observing
+//!   `Done` guarantees the slot is free. Dropping the [`GenStream`]
+//!   (receiver) cancels implicitly on the next emitted token.
+//! * **Admission** — requests join a sweep already in flight whenever a
+//!   batch slot is free (higher [`GenRequest::priority`] first, FIFO
+//!   within a priority). Admission changes scheduling only, never
+//!   tokens: a request admitted into a busy sweep at temp=0 decodes
+//!   token-identically to running it solo.
+//!
+//! ### Migrating from `generate_batch`
+//!
+//! The historical batch-synchronous API survives as thin wrappers over
+//! the event stream so callers can migrate incrementally:
+//!
+//! * [`Router::submit`]`(prompt, max_new)` returns a [`GenStream`];
+//!   [`GenStream::collect`] blocks and folds the events into the legacy
+//!   [`Response`] (`tokens`, `first_token_us`, `total_us`). Old code
+//!   that did `let (_, rx) = router.submit(..); rx.recv()?` becomes
+//!   `router.submit(..).collect()?`.
+//! * [`Engine::generate_batch`]`(&[Request])` still decodes a fixed
+//!   batch to completion and returns `Vec<Response>` — internally it
+//!   now runs the same scheduler with `max_batch = batch.len()` over a
+//!   pre-filled queue, so its temp=0 output is token-identical to the
+//!   streaming path.
+//!
+//! Engine or worker failures are **surfaced, never hung**: a worker
+//! whose engine fails to initialize (or whose sweep errors) closes its
+//! queue with the error, every in-flight and queued request receives
+//! `Done{finish_reason: Error, error: Some(msg)}`, and `collect()`
+//! returns `Err` instead of blocking forever. A worker-thread *panic*
+//! (e.g. KV-arena exhaustion during admission) closes the queue the
+//! same way via a panic guard; requests already admitted at that
+//! instant surface as a channel disconnect — `recv()` returns `None`,
+//! `try_recv()` returns `Err(Disconnected)`, `collect()` returns
+//! `Err` — still never a hang.
 
 pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod router;
+pub(crate) mod scheduler;
 
+pub use batcher::{Pending, SubmitQueue};
 pub use engine::{Engine, EngineKind, LutModel};
 pub use kv::{ArenaStats, KvArena, KvGeom, KvHandle, KvView, KvViewMut};
 pub use metrics::{LatencySummary, Metrics};
-pub use router::{Router, RouterConfig, Strategy};
+pub use router::{GenStream, Router, RouterConfig, Strategy};
 
-/// A generation request.
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// How a generation stream should sample its tokens. The default is
+/// greedy decoding (`temperature == 0` ≡ `argmax`), which keeps every
+/// token-identical parity guarantee of the historical API.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// `0.0` = greedy argmax; `> 0` = sample from softmax(logits / T).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-probability tokens (`0` = off).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest prefix of the sorted
+    /// distribution with cumulative probability ≥ `top_p` (`1.0` = off).
+    pub top_p: f32,
+    /// Per-request RNG seed — identical (seed, prompt, params) streams
+    /// are token-identical regardless of batching.
+    pub seed: u64,
+    /// Generation stops (finish reason [`FinishReason::Stop`], stop
+    /// token not emitted) when a sampled token is in this set.
+    pub stop_tokens: Vec<u32>,
+    /// Maximum number of generated tokens ([`FinishReason::Length`]).
+    pub max_new: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            max_new: 16,
+        }
+    }
+}
+
+/// A streaming generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    /// Admission priority: higher is admitted first, FIFO within a
+    /// priority level.
+    pub priority: u8,
+}
+
+/// Why a stream finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new` tokens generated, prompt exhausted with nothing to
+    /// generate, or KV capacity reached.
+    Length,
+    /// A sampled token was in `stop_tokens`.
+    Stop,
+    /// Cancelled via [`CancelHandle`] (or the receiver was dropped).
+    Cancelled,
+    /// The engine failed; see the `error` field of [`GenEvent::Done`].
+    Error,
+}
+
+/// Per-request accounting delivered with [`GenEvent::Done`]. All
+/// timestamps are measured from submission (`enqueued`); when at least
+/// one token was emitted, `queue_us ≤ ttft_us ≤ total_us`. A stream
+/// that never emitted a token (cancelled during prefill, `max_new` 0,
+/// prefill error) reports the `ttft_us: 0` sentinel, which is *below*
+/// `queue_us` — check `completion_tokens > 0` before differencing
+/// against `ttft_us`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    /// Submission → admission into a sweep.
+    pub queue_us: u64,
+    /// Submission → first emitted token (the real TTFT; 0 if no token
+    /// was emitted).
+    pub ttft_us: u64,
+    /// Submission → `Done`.
+    pub total_us: u64,
+    /// The scheduler sweep at which the request retired — a clock-free
+    /// observable for iteration-level scheduling tests.
+    pub finished_sweep: u64,
+}
+
+/// One event on a generation stream: zero or more `Token`s, then
+/// exactly one `Done`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenEvent {
+    Token {
+        id: u32,
+        /// Log-probability of `id` under the raw (untempered) softmax.
+        logprob: f32,
+    },
+    Done {
+        finish_reason: FinishReason,
+        usage: Usage,
+        /// `Some(message)` iff `finish_reason == Error`.
+        error: Option<String>,
+    },
+}
+
+/// Cancels a request from any thread. The scheduler observes the flag
+/// at the next sweep boundary, releases the session's KV-arena slot,
+/// and emits `Done{finish_reason: Cancelled}`.
+#[derive(Clone, Debug, Default)]
+pub struct CancelHandle {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, takes effect at the next sweep
+    /// boundary — or immediately if the request is still queued).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// A generation request in the **legacy** batch-synchronous API (kept
+/// for [`Engine::generate_batch`]); greedy-decodes `max_new` tokens.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -48,13 +257,44 @@ pub struct Request {
     pub max_new: usize,
 }
 
-/// A completed generation.
+/// A completed generation in the legacy API — what
+/// [`GenStream::collect`] folds the event stream into.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<u32>,
-    /// time from dequeue to first generated token
+    /// Submission → first token event (real TTFT).
     pub first_token_us: u64,
-    /// total decode time
+    /// Submission → completion.
     pub total_us: u64,
+}
+
+/// Fold an event stream into the legacy [`Response`] shape, blocking
+/// until `Done`. `Done{Error}` and channel disconnects become `Err` so
+/// engine failures surface instead of hanging the caller.
+pub(crate) fn collect_events(
+    id: u64,
+    events: &std::sync::mpsc::Receiver<GenEvent>,
+) -> anyhow::Result<Response> {
+    let mut tokens = Vec::new();
+    loop {
+        match events.recv() {
+            Ok(GenEvent::Token { id: t, .. }) => tokens.push(t),
+            Ok(GenEvent::Done { finish_reason, usage, error }) => {
+                if finish_reason == FinishReason::Error {
+                    anyhow::bail!(
+                        "generation failed: {}",
+                        error.unwrap_or_else(|| "engine error".into())
+                    );
+                }
+                return Ok(Response {
+                    id,
+                    tokens,
+                    first_token_us: usage.ttft_us,
+                    total_us: usage.total_us,
+                });
+            }
+            Err(_) => anyhow::bail!("worker disconnected before Done"),
+        }
+    }
 }

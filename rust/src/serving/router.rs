@@ -1,27 +1,34 @@
 //! Request router + worker pool — the vLLM-router-shaped front end.
 //!
 //! The [`Router`] owns N worker threads, each with its own
-//! [`BatchQueue`] and [`Engine`]. Requests are assigned round-robin or
-//! least-loaded; responses come back on per-request channels so callers
-//! can await their own result without a central dispatcher. Session
-//! lifecycle is arena-backed: each request's KV is a slot of the
-//! model's pooled [`super::kv::KvArena`], claimed **up-front for every
-//! request in a batch** when the engine builds its sessions (so a
-//! capped arena must hold at least `max_batch` slots or batch
-//! construction panics) and released back to the free list when the
-//! session finalizes — the engines report per-arena occupancy into the
-//! shared [`Metrics`] after every batch.
+//! [`SubmitQueue`] and [`Engine`] running one persistent
+//! iteration-level scheduler ([`Engine::serve`]). Requests are assigned
+//! round-robin or least-loaded (queued + in-flight, since a worker's
+//! sweep holds admitted requests that no longer sit in its queue);
+//! events stream back on per-request channels so callers consume their
+//! own tokens without a central dispatcher. Session lifecycle is
+//! arena-backed: each admitted request's KV is a slot of the model's
+//! pooled [`super::kv::KvArena`], claimed at admission and released the
+//! moment the session retires — so slots recycle *within* a sweep, and
+//! a capped arena only ever needs `max_batch` slots per worker.
+//!
+//! Failure is surfaced, never hung: a worker whose engine fails to
+//! initialize — or whose sweep errors mid-flight — closes its queue
+//! with the error. Queued and future requests on that queue receive
+//! `Done{finish_reason: Error}` immediately, the error is recorded in
+//! [`Router::worker_errors`], and the routing strategies skip closed
+//! queues while any live worker remains.
 
-use super::batcher::{BatchQueue, Pending};
+use super::batcher::{Pending, SubmitQueue};
 use super::engine::{Engine, EngineKind};
 use super::metrics::Metrics;
-use super::{Request, Response};
+use super::{CancelHandle, GenEvent, GenRequest, Response, SamplingParams};
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -32,132 +39,212 @@ pub enum Strategy {
 #[derive(Clone)]
 pub struct RouterConfig {
     pub n_workers: usize,
+    /// Batch slots per worker sweep — the scheduler admits up to this
+    /// many concurrent sessions and back-fills retired slots at every
+    /// sweep boundary.
     pub max_batch: usize,
-    pub batch_window: Duration,
     pub strategy: Strategy,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self {
-            n_workers: 2,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            strategy: Strategy::LeastLoaded,
-        }
+        Self { n_workers: 2, max_batch: 8, strategy: Strategy::LeastLoaded }
+    }
+}
+
+/// A live request: the per-token event receiver plus its cancel handle.
+pub struct GenStream {
+    pub id: u64,
+    events: Receiver<GenEvent>,
+    cancel: CancelHandle,
+}
+
+impl GenStream {
+    pub(crate) fn new(id: u64, events: Receiver<GenEvent>, cancel: CancelHandle) -> Self {
+        Self { id, events, cancel }
+    }
+
+    /// Next event, blocking. `None` means the worker died without a
+    /// terminal event — possible only when its thread panicked
+    /// mid-sweep (every non-panic failure path emits `Done{Error}`);
+    /// treat it as end-of-stream.
+    pub fn recv(&self) -> Option<GenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking variant of [`GenStream::recv`]. `Err(Empty)` means
+    /// no event yet; `Err(Disconnected)` means the worker died without
+    /// a terminal event (thread panic) — poll loops must stop on it,
+    /// not retry.
+    pub fn try_recv(&self) -> Result<GenEvent, std::sync::mpsc::TryRecvError> {
+        self.events.try_recv()
+    }
+
+    /// Request cancellation: the scheduler retires the session (and
+    /// releases its KV slot) at the next sweep boundary, then emits
+    /// `Done{finish_reason: Cancelled}`.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clonable handle for cancelling from another thread.
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
+    }
+
+    /// Legacy-shaped completion: block until `Done`, folding the token
+    /// events into a [`Response`]. `Done{Error}` becomes `Err`.
+    pub fn collect(self) -> Result<Response> {
+        super::collect_events(self.id, &self.events)
     }
 }
 
 pub struct Router {
-    queues: Vec<BatchQueue>,
-    outstanding: Vec<Arc<AtomicUsize>>,
+    queues: Vec<SubmitQueue>,
     workers: Vec<JoinHandle<()>>,
     rr_next: AtomicU64,
     strategy: Strategy,
     pub metrics: Metrics,
     next_id: AtomicU64,
+    errors: Arc<Mutex<Vec<String>>>,
+}
+
+/// Closes a worker's queue with an error if the worker thread unwinds
+/// (e.g. a "KV arena exhausted" panic during session creation) — a
+/// panicking worker must reject its waiters like any other failure,
+/// never strand them on an open queue.
+struct CloseOnPanic {
+    queue: SubmitQueue,
+    errors: Arc<Mutex<Vec<String>>>,
+    worker: usize,
+}
+
+impl Drop for CloseOnPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let msg = format!("worker {}: panicked (see stderr)", self.worker);
+            self.errors.lock().unwrap().push(msg.clone());
+            self.queue.close_with_error(&msg);
+        }
+    }
 }
 
 impl Router {
-    /// Spawn the worker pool. `make_engine` builds one engine per worker
-    /// (engines are not Sync; each worker owns its own).
+    /// Spawn the worker pool. `make_engine` builds one engine kind per
+    /// worker (engines are not Sync; each worker owns its own). A
+    /// factory or engine-init failure does **not** fail the pool: the
+    /// dead worker's queue is closed with the error so anything routed
+    /// there gets an immediate `Done{Error}` instead of hanging, and
+    /// the error is readable via [`Router::worker_errors`].
     pub fn start(
         cfg: RouterConfig,
-        make_engine: impl Fn(usize) -> EngineKind,
+        make_engine: impl Fn(usize) -> Result<EngineKind>,
     ) -> Result<Self> {
+        anyhow::ensure!(cfg.n_workers >= 1, "router needs at least one worker");
         let metrics = Metrics::new();
+        let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
         let mut queues = Vec::new();
-        let mut outstanding = Vec::new();
         let mut workers = Vec::new();
         for w in 0..cfg.n_workers {
-            let queue = BatchQueue::new(cfg.max_batch, cfg.batch_window);
-            let out_ctr = Arc::new(AtomicUsize::new(0));
+            let queue = SubmitQueue::new();
             let kind = make_engine(w);
             let q = queue.clone();
-            let ctr = out_ctr.clone();
             let m = metrics.clone();
+            let errs = errors.clone();
+            let max_batch = cfg.max_batch;
             workers.push(std::thread::spawn(move || {
-                let mut engine = match Engine::new(kind) {
+                let _guard =
+                    CloseOnPanic { queue: q.clone(), errors: errs.clone(), worker: w };
+                let mut engine = match kind.and_then(Engine::new) {
                     Ok(e) => e,
                     Err(e) => {
-                        eprintln!("worker {w}: engine init failed: {e:#}");
+                        let msg = format!("worker {w}: engine init failed: {e:#}");
+                        eprintln!("{msg}");
+                        errs.lock().unwrap().push(msg.clone());
+                        // Close the queue with the error: requests
+                        // already routed here — and any routed later —
+                        // get Done{Error} instead of hanging forever.
+                        q.close_with_error(&msg);
                         return;
                     }
                 };
-                // Engines report per-sweep decode batch occupancy into
-                // the shared metrics (mean/max decode batch in summaries).
-                engine.attach_metrics(m.clone());
-                while let Some(batch) = q.next_batch() {
-                    let reqs: Vec<Request> = batch.iter().map(|p| p.request.clone()).collect();
-                    let t0 = Instant::now();
-                    match engine.generate_batch(&reqs) {
-                        Ok(responses) => {
-                            for (p, r) in batch.into_iter().zip(responses) {
-                                let queue_us = (t0 - p.enqueued).as_micros() as u64;
-                                m.record(&r, queue_us, reqs.len());
-                                let _ = p.reply.send(r);
-                                ctr.fetch_sub(1, Ordering::Relaxed);
-                            }
-                        }
-                        Err(e) => {
-                            eprintln!("worker {w}: batch failed: {e:#}");
-                            for p in batch {
-                                ctr.fetch_sub(1, Ordering::Relaxed);
-                                drop(p.reply); // closes the channel → caller sees error
-                            }
-                        }
-                    }
+                engine.attach_metrics(m);
+                if let Err(e) = engine.serve(&q, max_batch) {
+                    let msg = format!("worker {w}: serve loop failed: {e:#}");
+                    eprintln!("{msg}");
+                    errs.lock().unwrap().push(msg.clone());
+                    q.close_with_error(&msg);
                 }
             }));
             queues.push(queue);
-            outstanding.push(out_ctr);
         }
         Ok(Self {
             queues,
-            outstanding,
             workers,
             rr_next: AtomicU64::new(0),
             strategy: cfg.strategy,
             metrics,
             next_id: AtomicU64::new(1),
+            errors,
         })
     }
 
+    /// Errors from dead workers (engine init / sweep failures), in
+    /// arrival order.
+    pub fn worker_errors(&self) -> Vec<String> {
+        self.errors.lock().unwrap().clone()
+    }
+
     fn pick_worker(&self) -> usize {
+        // Route around dead workers while any queue is still open; if
+        // the whole pool is dead, any queue will do (the push is
+        // rejected with the worker's error).
+        let mut candidates: Vec<usize> =
+            (0..self.queues.len()).filter(|&i| !self.queues[i].is_closed()).collect();
+        if candidates.is_empty() {
+            candidates = (0..self.queues.len()).collect();
+        }
         match self.strategy {
             Strategy::RoundRobin => {
-                (self.rr_next.fetch_add(1, Ordering::Relaxed) as usize) % self.queues.len()
+                candidates[(self.rr_next.fetch_add(1, Ordering::Relaxed) as usize)
+                    % candidates.len()]
             }
             Strategy::LeastLoaded => {
-                let mut best = 0;
-                let mut best_load = usize::MAX;
-                for (i, ctr) in self.outstanding.iter().enumerate() {
-                    let load = ctr.load(Ordering::Relaxed) + self.queues[i].len();
-                    if load < best_load {
-                        best_load = load;
-                        best = i;
-                    }
-                }
-                best
+                *candidates.iter().min_by_key(|&&i| self.queues[i].load()).unwrap()
             }
         }
     }
 
-    /// Submit a request; returns the channel the response arrives on.
-    pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> (u64, Receiver<Response>) {
+    /// Submit a streaming request with explicit sampling parameters and
+    /// admission priority; returns the live event stream.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: u8,
+    ) -> GenStream {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let w = self.pick_worker();
-        self.outstanding[w].fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
+        let cancel = CancelHandle::new();
         self.queues[w].push(Pending {
-            request: Request { id, prompt, max_new },
-            reply: tx,
+            request: GenRequest { id, prompt, params, priority },
+            events: tx,
+            cancel: cancel.clone(),
             enqueued: Instant::now(),
         });
-        (id, rx)
+        GenStream::new(id, rx, cancel)
     }
 
-    /// Drain and join all workers.
+    /// Greedy-decode convenience (legacy shape): default sampling
+    /// params with the given `max_new`. `submit(..).collect()?` is the
+    /// migration of the old `submit` + `rx.recv()?` pair.
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> GenStream {
+        self.submit_with(prompt, SamplingParams { max_new, ..Default::default() }, 0)
+    }
+
+    /// Graceful shutdown: close every queue (queued requests still
+    /// finish), then join the workers.
     pub fn shutdown(self) {
         for q in &self.queues {
             q.close();
@@ -171,11 +258,13 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{synthetic_model, ModelConfig};
+    use crate::model::{synthetic_model, Model, ModelConfig};
+    use crate::serving::{FinishReason, Usage};
     use std::collections::HashSet;
+    use std::time::Duration;
 
-    fn engine_kind() -> EngineKind {
-        EngineKind::Native(Arc::new(synthetic_model(
+    fn tiny_model() -> Arc<Model> {
+        Arc::new(synthetic_model(
             &ModelConfig {
                 vocab_size: 16,
                 d_model: 16,
@@ -186,29 +275,239 @@ mod tests {
                 max_seq: 32,
             },
             5,
-        )))
+        ))
+    }
+
+    fn engine_kind() -> EngineKind {
+        EngineKind::Native(tiny_model())
+    }
+
+    /// Drain a stream into (tokens, finish_reason, usage).
+    fn drain(s: &GenStream) -> (Vec<u32>, FinishReason, Usage) {
+        let mut tokens = Vec::new();
+        loop {
+            match s.recv().expect("stream must end with Done") {
+                GenEvent::Token { id, .. } => tokens.push(id),
+                GenEvent::Done { finish_reason, usage, .. } => {
+                    return (tokens, finish_reason, usage)
+                }
+            }
+        }
     }
 
     #[test]
     fn serves_concurrent_requests() {
         let router = Router::start(
             RouterConfig { n_workers: 2, max_batch: 4, ..Default::default() },
-            |_| engine_kind(),
+            |_| Ok(engine_kind()),
         )
         .unwrap();
-        let rxs: Vec<_> = (0..10)
-            .map(|i| router.submit(vec![(i % 16) as u32, 1, 2], 3))
-            .collect();
+        let streams: Vec<_> =
+            (0..10).map(|i| router.submit(vec![(i % 16) as u32, 1, 2], 3)).collect();
         let mut ids = HashSet::new();
-        for (id, rx) in rxs {
-            let resp = rx.recv().expect("response");
+        for s in streams {
+            let id = s.id;
+            let resp = s.collect().expect("response");
             assert_eq!(resp.id, id);
             assert_eq!(resp.tokens.len(), 3);
+            assert!(resp.first_token_us <= resp.total_us);
             ids.insert(id);
         }
         assert_eq!(ids.len(), 10, "no response lost/duplicated");
         let summary = router.metrics.summary();
         assert_eq!(summary.completed, 10);
+        assert_eq!(summary.tokens, 30);
+        router.shutdown();
+    }
+
+    #[test]
+    fn engine_init_failure_closes_queue_instead_of_hanging() {
+        // Regression: a worker whose engine init fails used to return
+        // without closing its queue — requests routed there were never
+        // answered and recv() hung forever. Now every request gets
+        // Done{Error} and the error is surfaced on the router.
+        let router = Router::start(
+            RouterConfig { n_workers: 2, max_batch: 4, ..Default::default() },
+            |w| anyhow::bail!("synthetic init failure on worker {w}"),
+        )
+        .unwrap();
+        for i in 0..4 {
+            let s = router.submit(vec![i], 4);
+            let err = s.collect().expect_err("init failure must surface, not hang");
+            assert!(format!("{err:#}").contains("synthetic init failure"), "{err:#}");
+        }
+        // Both workers recorded their init error.
+        let wait_start = Instant::now();
+        while router.worker_errors().len() < 2 {
+            assert!(wait_start.elapsed() < Duration::from_secs(5), "errors never surfaced");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for e in router.worker_errors() {
+            assert!(e.contains("engine init failed"), "{e}");
+        }
+        router.shutdown(); // must not hang either
+    }
+
+    #[test]
+    fn pjrt_failure_surfaces_as_error_events() {
+        // With the offline stub, Engine::new(Pjrt) fails at client
+        // creation (init path); with a real plugin it fails in the serve
+        // loop on the missing artifact (sweep path). Either way the
+        // caller sees an error, never a hang.
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            |_| {
+                Ok(EngineKind::Pjrt {
+                    model: tiny_model(),
+                    artifact: std::path::PathBuf::from("definitely/not/a/real/artifact.hlo.txt"),
+                    cache_len: 16,
+                })
+            },
+        )
+        .unwrap();
+        let s = router.submit(vec![1, 2], 4);
+        assert!(s.collect().is_err(), "pjrt failure must surface");
+        router.shutdown();
+    }
+
+    #[test]
+    fn dead_worker_is_routed_around() {
+        let model = tiny_model();
+        let router = Router::start(
+            RouterConfig { n_workers: 2, max_batch: 4, ..Default::default() },
+            move |w| {
+                if w == 0 {
+                    anyhow::bail!("worker 0 is broken");
+                }
+                Ok(EngineKind::Native(model.clone()))
+            },
+        )
+        .unwrap();
+        // Wait for worker 0's queue to close so routing must avoid it.
+        let wait_start = Instant::now();
+        while router.worker_errors().is_empty() {
+            assert!(wait_start.elapsed() < Duration::from_secs(5), "error never surfaced");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for i in 0..6 {
+            let resp = router.submit(vec![(i % 16) as u32, 2], 2).collect();
+            assert!(resp.is_ok(), "live worker must absorb the traffic: {resp:?}");
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_rejects_waiters_instead_of_hanging() {
+        // A capped arena makes Stepper::make panic ("KV arena
+        // exhausted") when admission oversubscribes it. The worker's
+        // panic guard must close the queue so every caller gets a
+        // terminal event or a disconnect — never a hang.
+        let model = tiny_model();
+        model.init_kv_arena(1, 1);
+        let model2 = model.clone();
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            move |_| Ok(EngineKind::Native(model2.clone())),
+        )
+        .unwrap();
+        let streams: Vec<_> = (0..3).map(|i| router.submit(vec![i as u32, 1], 100)).collect();
+        for (i, s) in streams.into_iter().enumerate() {
+            assert!(s.collect().is_err(), "stream {i} must surface the worker panic");
+        }
+        let wait_start = Instant::now();
+        while router.worker_errors().is_empty() {
+            assert!(wait_start.elapsed() < Duration::from_secs(5), "panic never surfaced");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(router.worker_errors().iter().any(|e| e.contains("panicked")));
+        router.shutdown();
+    }
+
+    #[test]
+    fn cancellation_mid_generation_releases_arena_slot() {
+        // Satellite: cancelling mid-generation must release the KV slot
+        // (slots_in_use back to 0) and bump the slot's generation so
+        // stale handles can never see the next tenant's KV.
+        let model = tiny_model();
+        let arena = model.kv_arena();
+        // Probe the slot the next session will claim (LIFO free list).
+        let probe = arena.acquire().unwrap();
+        let (slot, gen_before) = (probe.slot(), probe.generation());
+        arena.release(probe);
+
+        let model2 = model.clone();
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            move |_| Ok(EngineKind::Native(model2.clone())),
+        )
+        .unwrap();
+        // A long stream (capacity 128 ≫ prompt+max_new).
+        let s = router.submit(vec![1, 2, 3], 100);
+        // Cancel only once generation is demonstrably in flight.
+        match s.recv().expect("first event") {
+            GenEvent::Token { .. } => {}
+            other => panic!("expected a token first, got {other:?}"),
+        }
+        s.cancel();
+        let (tokens, fin, usage) = drain(&s);
+        assert_eq!(fin, FinishReason::Cancelled);
+        assert!(usage.completion_tokens >= 1 && usage.completion_tokens < 100);
+        let _ = tokens;
+        // Done{Cancelled} is sent *after* the slot release, so this is
+        // race-free: nothing else is running on this router.
+        assert_eq!(arena.stats().slots_in_use, 0, "cancelled slot must be released");
+        // The slot's generation advanced past the probe's.
+        let reacquired = arena.acquire().unwrap();
+        assert_eq!(reacquired.slot(), slot, "LIFO free list hands back the same slot");
+        assert!(
+            reacquired.generation() > gen_before,
+            "generation must bump on reuse ({} !> {})",
+            reacquired.generation(),
+            gen_before
+        );
+        arena.release(reacquired);
+        // Metrics observed the post-release arena state too.
+        let m = router.metrics.summary();
+        assert_eq!(m.arena_slots_in_use, 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn short_requests_overtake_long_one() {
+        // Acceptance: with max_batch 4, one 64-token request and eight
+        // 4-token requests submitted together — every short request
+        // completes (strictly earlier sweep) while the long one is still
+        // decoding, and slot reuse keeps the arena at ≤ max_batch slots.
+        let model = tiny_model();
+        let model2 = model.clone();
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 4, ..Default::default() },
+            move |_| Ok(EngineKind::Native(model2.clone())),
+        )
+        .unwrap();
+        let long = router.submit(vec![1, 2, 3], 64);
+        let shorts: Vec<_> =
+            (0..8).map(|i| router.submit(vec![(i % 16) as u32, 5], 4)).collect();
+        let (long_tokens, long_fin, long_usage) = drain(&long);
+        assert_eq!(long_tokens.len(), 64);
+        assert_eq!(long_fin, FinishReason::Length);
+        for (i, s) in shorts.iter().enumerate() {
+            let (tokens, fin, usage) = drain(s);
+            assert_eq!(tokens.len(), 4, "short {i}");
+            assert_eq!(fin, FinishReason::Length, "short {i}");
+            assert!(
+                usage.finished_sweep < long_usage.finished_sweep,
+                "short {i} (sweep {}) must complete while the long request \
+                 (sweep {}) is still decoding",
+                usage.finished_sweep,
+                long_usage.finished_sweep
+            );
+        }
+        // All 9 requests fit through 4 slots: no arena growth beyond
+        // max_batch, every slot released at the end.
+        let stats = model.kv_arena().stats();
+        assert!(stats.high_water <= 4, "arena grew past max_batch: {}", stats.high_water);
+        assert_eq!(stats.slots_in_use, 0);
         router.shutdown();
     }
 
@@ -220,12 +519,13 @@ mod tests {
         // resident.
         let router = Router::start(
             RouterConfig { n_workers: 2, max_batch: 4, ..Default::default() },
-            |_| engine_kind(),
+            |_| Ok(engine_kind()),
         )
         .unwrap();
-        let rxs: Vec<_> = (0..6).map(|i| router.submit(vec![(i % 16) as u32, 2], 2)).collect();
-        for (_, rx) in rxs {
-            rx.recv().unwrap();
+        let streams: Vec<_> =
+            (0..6).map(|i| router.submit(vec![(i % 16) as u32, 2], 2)).collect();
+        for s in streams {
+            s.collect().unwrap();
         }
         let s = router.metrics.summary();
         assert!(s.arena_high_water >= 1, "arena saw sessions");
@@ -235,32 +535,80 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_distributes() {
+    fn streaming_metrics_populated() {
         let router = Router::start(
-            RouterConfig {
-                n_workers: 3,
-                strategy: Strategy::RoundRobin,
-                max_batch: 1,
-                batch_window: Duration::from_millis(1),
-            },
-            |_| engine_kind(),
+            RouterConfig { n_workers: 1, max_batch: 4, ..Default::default() },
+            |_| Ok(engine_kind()),
         )
         .unwrap();
-        let rxs: Vec<_> = (0..9).map(|_| router.submit(vec![1, 2], 1)).collect();
-        for (_, rx) in rxs {
-            rx.recv().unwrap();
+        let streams: Vec<_> = (0..4).map(|i| router.submit(vec![i as u32, 1], 6)).collect();
+        for s in streams {
+            s.collect().unwrap();
         }
-        // all workers saw work: max batch 1 + RR ⇒ each of 3 workers got 3
+        let m = router.metrics.summary();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.tokens, 24);
+        assert!(m.decode_sweeps > 0);
+        // Percentiles are order-consistent (values may legitimately be
+        // 0 µs on a model this tiny — gaps can land within one tick).
+        assert!(m.p95_first_us >= m.p50_first_us);
+        assert!(m.p95_itl_us >= m.p50_itl_us);
+        router.shutdown();
+    }
+
+    #[test]
+    fn round_robin_distributes() {
+        let router = Router::start(
+            RouterConfig { n_workers: 3, strategy: Strategy::RoundRobin, max_batch: 1 },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        let streams: Vec<_> = (0..9).map(|_| router.submit(vec![1, 2], 1)).collect();
+        for s in streams {
+            s.collect().unwrap();
+        }
         let s = router.metrics.summary();
         assert_eq!(s.completed, 9);
         router.shutdown();
     }
 
     #[test]
+    fn zero_workers_is_rejected_at_start() {
+        // pick_worker has no candidates with an empty pool — reject at
+        // construction instead of panicking on the first submit.
+        let res = Router::start(
+            RouterConfig { n_workers: 0, max_batch: 2, ..Default::default() },
+            |_| Ok(engine_kind()),
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
     fn shutdown_joins_cleanly() {
-        let router = Router::start(RouterConfig::default(), |_| engine_kind()).unwrap();
-        let (_, rx) = router.submit(vec![1], 2);
-        rx.recv().unwrap();
+        let router = Router::start(RouterConfig::default(), |_| Ok(engine_kind())).unwrap();
+        let s = router.submit(vec![1], 2);
+        s.collect().unwrap();
         router.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn submit_after_shutdown_path_rejects() {
+        // Closing the queues rejects later pushes with a terminal event
+        // rather than stranding them (shutdown consumes the router, so
+        // exercise via close()).
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        router.queues[0].close();
+        let s = router.submit(vec![1, 2], 3);
+        match s.recv().expect("terminal event") {
+            GenEvent::Done { finish_reason, .. } => {
+                assert_eq!(finish_reason, FinishReason::Cancelled)
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        router.shutdown();
     }
 }

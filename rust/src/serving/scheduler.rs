@@ -1,0 +1,597 @@
+//! Iteration-level scheduler: one persistent decode sweep per worker.
+//!
+//! The scheduler owns the Orca-style continuous-batching loop the
+//! module docs describe. Each iteration it:
+//!
+//! 1. retires sessions whose [`CancelHandle`](super::CancelHandle) was
+//!    flagged (slot released **before** `Done{Cancelled}` is sent);
+//! 2. admits queued requests into free batch slots (blocking on the
+//!    [`SubmitQueue`] only when *nothing* is active) — prompt prefill
+//!    starts on the very next sweep, joining whatever is in flight;
+//! 3. gathers one token per active session (prompt prefill counts as
+//!    steps — single-token engines) and hands the whole sweep to the
+//!    engine's [`Stepper`];
+//! 4. samples each generating session's logits via
+//!    [`crate::model::sample`] (seeded per request; temp=0 ≡ argmax),
+//!    emits `Token{id, logprob}` events as they are produced, and
+//!    retires finished sessions immediately so their slots are free for
+//!    the next iteration's admission.
+//!
+//! The loop is engine-agnostic: the [`Stepper`] decides whether a sweep
+//! is executed as independent per-session steps (native), one fused
+//! multi-session pass (LUT), or sequential AOT-executable calls (PJRT).
+//! A stepper error retires every in-flight session with
+//! `Done{finish_reason: Error}` — callers always observe a terminal
+//! event, never a silent drop.
+
+use super::batcher::{Pending, SubmitQueue};
+use super::kv::KvArena;
+use super::metrics::Metrics;
+use super::{FinishReason, GenEvent, Usage};
+use crate::model::sample;
+use crate::rng::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One in-flight decode session: KV state + position bookkeeping. The
+/// stepping itself belongs to the [`Stepper`] so batched engines can
+/// fuse a whole sweep.
+pub(crate) trait Session {
+    fn pos(&self) -> usize;
+    fn capacity(&self) -> usize;
+}
+
+/// Executes one sweep: each session advances by exactly one token.
+pub(crate) trait Stepper {
+    type Sess: Session;
+
+    /// Create a fresh session (claims a KV-arena slot where applicable;
+    /// panics on arena exhaustion, like the capacity assert).
+    fn make(&self) -> Self::Sess;
+
+    /// Step session `i` with `tokens[i]`; returns next-token logits per
+    /// session, in order. An `Err` poisons the whole sweep — the
+    /// scheduler retires every stepped session with `FinishReason::Error`.
+    fn step_batch(
+        &mut self,
+        sessions: &mut [&mut Self::Sess],
+        tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>>;
+}
+
+/// A request admitted into the sweep. Per-token latency samples are
+/// buffered here and flushed to the shared [`Metrics`] in one call at
+/// retirement — the decode hot loop never takes the metrics mutex per
+/// token.
+struct ActiveGen<S> {
+    p: Pending,
+    sess: S,
+    prompt_left: std::vec::IntoIter<u32>,
+    next_token: Option<u32>,
+    n_out: usize,
+    rng: Rng,
+    admitted: Instant,
+    first_tok: Option<Instant>,
+    last_tok: Option<Instant>,
+    /// Buffered inter-token gaps (µs), one per token after the first.
+    itl_us: Vec<u64>,
+}
+
+/// Retire a session: release its KV slot (dropping `sess` releases the
+/// arena handle) **before** the terminal event is sent — and snapshot
+/// the arena into the metrics in between — so a caller observing `Done`
+/// knows the slot is reusable and the metrics already reflect it.
+#[allow(clippy::too_many_arguments)]
+fn retire<S>(
+    a: ActiveGen<S>,
+    finish_reason: FinishReason,
+    error: Option<String>,
+    sweep: u64,
+    queue: &SubmitQueue,
+    metrics: Option<&Metrics>,
+    arena: Option<&KvArena>,
+) {
+    let ActiveGen { p, sess, n_out, admitted, first_tok, itl_us, .. } = a;
+    drop(sess);
+    if let (Some(m), Some(ar)) = (metrics, arena) {
+        m.observe_arena(ar.id(), ar.stats());
+    }
+    let now = Instant::now();
+    let ttft_us = first_tok.map(|t| (t - p.enqueued).as_micros() as u64);
+    let usage = Usage {
+        prompt_tokens: p.request.prompt.len(),
+        completion_tokens: n_out,
+        queue_us: (admitted - p.enqueued).as_micros() as u64,
+        ttft_us: ttft_us.unwrap_or(0),
+        total_us: (now - p.enqueued).as_micros() as u64,
+        finished_sweep: sweep,
+    };
+    let _ = p.events.send(GenEvent::Done { finish_reason, usage, error });
+    queue.finish_one();
+    if let Some(m) = metrics {
+        m.record_retired(
+            finish_reason,
+            usage.queue_us,
+            ttft_us,
+            &itl_us,
+            n_out,
+            (now - admitted).as_micros() as u64,
+        );
+    }
+}
+
+fn admit<St: Stepper>(stepper: &St, p: Pending) -> ActiveGen<St::Sess> {
+    let rng = Rng::new(p.request.params.seed);
+    let prompt_left = p.request.prompt.clone().into_iter();
+    ActiveGen {
+        sess: stepper.make(),
+        prompt_left,
+        next_token: None,
+        n_out: 0,
+        rng,
+        admitted: Instant::now(),
+        first_tok: None,
+        last_tok: None,
+        itl_us: Vec::new(),
+        p,
+    }
+}
+
+/// Run the persistent scheduling loop until the queue is closed and
+/// drained (graceful) or the stepper fails (every in-flight request is
+/// retired with `Error` first).
+pub(crate) fn run_scheduler<St: Stepper>(
+    stepper: &mut St,
+    queue: &SubmitQueue,
+    max_batch: usize,
+    metrics: Option<&Metrics>,
+    arena: Option<&KvArena>,
+) -> Result<()> {
+    let max_batch = max_batch.max(1);
+    let mut active: Vec<ActiveGen<St::Sess>> = Vec::new();
+    let mut sweep: u64 = 0;
+
+    'serve: loop {
+        // 1. Sweep-boundary cancellation: retire flagged sessions first
+        // so their slots are admissible this very iteration.
+        let mut keep = Vec::with_capacity(active.len());
+        for a in active {
+            if a.p.cancel.is_cancelled() {
+                retire(a, FinishReason::Cancelled, None, sweep, queue, metrics, arena);
+            } else {
+                keep.push(a);
+            }
+        }
+        active = keep;
+
+        // 2. Admission into free slots. Block only when idle; a busy
+        // sweep drains whatever is queued without waiting.
+        while active.len() < max_batch {
+            let next = if active.is_empty() {
+                match queue.pop_blocking() {
+                    Some(p) => p,
+                    None => break 'serve, // closed & drained, nothing active
+                }
+            } else {
+                match queue.try_pop() {
+                    Some(p) => p,
+                    None => break,
+                }
+            };
+            if next.cancel.is_cancelled() {
+                // Cancelled while still queued: terminal event, no slot.
+                let queue_us = next.enqueued.elapsed().as_micros() as u64;
+                next.reject(FinishReason::Cancelled, None);
+                queue.finish_one();
+                if let Some(m) = metrics {
+                    m.record_retired(FinishReason::Cancelled, queue_us, None, &[], 0, 0);
+                }
+                continue;
+            }
+            active.push(admit(stepper, next));
+        }
+
+        // 3. Gather this sweep's (session, token) pairs; sessions with
+        // no token left (or no KV capacity) retire instead.
+        let mut stepping: Vec<ActiveGen<St::Sess>> = Vec::with_capacity(active.len());
+        let mut tokens: Vec<u32> = Vec::with_capacity(active.len());
+        for mut a in active {
+            let capacity_left = a.sess.capacity() - a.sess.pos();
+            match a.next_token.take().or_else(|| a.prompt_left.next()) {
+                Some(t) if capacity_left > 0 => {
+                    tokens.push(t);
+                    stepping.push(a);
+                }
+                // out of prompt+generation or capacity: finalize
+                _ => retire(a, FinishReason::Length, None, sweep, queue, metrics, arena),
+            }
+        }
+        if stepping.is_empty() {
+            active = Vec::new();
+            continue;
+        }
+        if let Some(m) = metrics {
+            m.record_decode_sweep(stepping.len());
+        }
+        sweep += 1;
+
+        // 4. One fused sweep through the engine.
+        let logits_all = {
+            let mut refs: Vec<&mut St::Sess> = stepping.iter_mut().map(|a| &mut a.sess).collect();
+            stepper.step_batch(&mut refs, &tokens)
+        };
+        let logits_all = match logits_all {
+            Ok(l) => l,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for a in stepping {
+                    retire(a, FinishReason::Error, Some(msg.clone()), sweep, queue, metrics, arena);
+                }
+                return Err(e);
+            }
+        };
+        debug_assert_eq!(logits_all.len(), stepping.len());
+
+        // 5. Sample, emit token events, retire finished sessions now so
+        // their slots are re-admitted on the next iteration.
+        let mut still = Vec::with_capacity(stepping.len());
+        for (mut a, logits) in stepping.into_iter().zip(logits_all) {
+            if a.prompt_left.len() != 0 {
+                still.push(a); // prefill: logits discarded until the last prompt token
+                continue;
+            }
+            if a.n_out >= a.p.request.params.max_new {
+                // max_new == 0: the prompt was consumed but nothing may
+                // be sampled.
+                retire(a, FinishReason::Length, None, sweep, queue, metrics, arena);
+                continue;
+            }
+            let (tok, logprob) = {
+                let prm = &a.p.request.params;
+                sample(&logits, prm.temperature, prm.top_k, prm.top_p, &mut a.rng)
+            };
+            let tok = tok as u32;
+            if a.p.request.params.stop_tokens.contains(&tok) {
+                retire(a, FinishReason::Stop, None, sweep, queue, metrics, arena);
+                continue;
+            }
+            // Timestamp the emission; the gap is buffered locally and
+            // flushed to the metrics in one call at retirement.
+            let now = Instant::now();
+            if let Some(prev) = a.last_tok {
+                a.itl_us.push((now - prev).as_micros() as u64);
+            }
+            a.first_tok.get_or_insert(now);
+            a.last_tok = Some(now);
+            if a.p.events.send(GenEvent::Token { id: tok, logprob }).is_err() {
+                // Receiver gone — implicit cancellation; stop decoding
+                // for a stream nobody is reading.
+                retire(a, FinishReason::Cancelled, None, sweep, queue, metrics, arena);
+                continue;
+            }
+            a.n_out += 1;
+            if a.n_out >= a.p.request.params.max_new {
+                retire(a, FinishReason::Length, None, sweep, queue, metrics, arena);
+            } else {
+                a.next_token = Some(tok);
+                still.push(a);
+            }
+        }
+        active = still;
+
+        if let (Some(m), Some(ar)) = (metrics, arena) {
+            m.observe_arena(ar.id(), ar.stats());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{CancelHandle, GenRequest, SamplingParams};
+    use std::sync::mpsc::{channel, Receiver};
+    use std::thread;
+
+    /// Deterministic engine stand-in: the next token depends only on
+    /// (fed token, position), so output is independent of batching by
+    /// construction and the tests isolate the *scheduler's* behavior.
+    struct MockSession {
+        pos: usize,
+        cap: usize,
+    }
+
+    impl Session for MockSession {
+        fn pos(&self) -> usize {
+            self.pos
+        }
+        fn capacity(&self) -> usize {
+            self.cap
+        }
+    }
+
+    struct MockStepper {
+        vocab: usize,
+        cap: usize,
+        fail_at_sweep: Option<usize>,
+        sweeps: usize,
+    }
+
+    impl MockStepper {
+        fn new(vocab: usize, cap: usize) -> Self {
+            Self { vocab, cap, fail_at_sweep: None, sweeps: 0 }
+        }
+    }
+
+    impl Stepper for MockStepper {
+        type Sess = MockSession;
+
+        fn make(&self) -> MockSession {
+            MockSession { pos: 0, cap: self.cap }
+        }
+
+        fn step_batch(
+            &mut self,
+            sessions: &mut [&mut MockSession],
+            tokens: &[u32],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.sweeps += 1;
+            if let Some(f) = self.fail_at_sweep {
+                if self.sweeps >= f {
+                    anyhow::bail!("mock sweep failure");
+                }
+            }
+            Ok(sessions
+                .iter_mut()
+                .zip(tokens)
+                .map(|(s, &t)| {
+                    let mut logits = vec![0.0f32; self.vocab];
+                    logits[((t as usize) * 7 + s.pos * 3 + 1) % self.vocab] = 1.0;
+                    s.pos += 1;
+                    logits
+                })
+                .collect())
+        }
+    }
+
+    fn submit(
+        q: &SubmitQueue,
+        id: u64,
+        prompt: Vec<u32>,
+        max_new: usize,
+        priority: u8,
+    ) -> (Receiver<GenEvent>, CancelHandle) {
+        let (tx, rx) = channel();
+        let cancel = CancelHandle::new();
+        q.push(Pending {
+            request: GenRequest {
+                id,
+                prompt,
+                params: SamplingParams { max_new, ..Default::default() },
+                priority,
+            },
+            events: tx,
+            cancel: cancel.clone(),
+            enqueued: Instant::now(),
+        });
+        (rx, cancel)
+    }
+
+    /// Drain a stream: (tokens, finish_reason, usage, error).
+    fn drain(rx: &Receiver<GenEvent>) -> (Vec<u32>, FinishReason, Usage, Option<String>) {
+        let mut tokens = Vec::new();
+        loop {
+            match rx.recv().expect("stream must end with Done, not disconnect") {
+                GenEvent::Token { id, .. } => tokens.push(id),
+                GenEvent::Done { finish_reason, usage, error } => {
+                    return (tokens, finish_reason, usage, error)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_level_scheduling_shorts_finish_while_long_decodes() {
+        // One 64-token request + eight 4-token requests, max_batch 4:
+        // every short request must retire at an earlier sweep than the
+        // long one (which would be impossible under collect-then-run
+        // batching, where the batch drains as a unit).
+        let q = SubmitQueue::new();
+        let (long_rx, _) = submit(&q, 0, vec![1, 2], 64, 0);
+        let short_rxs: Vec<_> =
+            (1..=8).map(|i| submit(&q, i, vec![i as u32], 4, 0).0).collect();
+        q.close();
+        let mut st = MockStepper::new(17, 4096);
+        run_scheduler(&mut st, &q, 4, None, None).unwrap();
+
+        let (long_toks, long_fin, long_usage, _) = drain(&long_rx);
+        assert_eq!(long_toks.len(), 64);
+        assert_eq!(long_fin, FinishReason::Length);
+        for (i, rx) in short_rxs.iter().enumerate() {
+            let (toks, fin, usage, _) = drain(rx);
+            assert_eq!(toks.len(), 4, "short request {i}");
+            assert_eq!(fin, FinishReason::Length);
+            assert!(
+                usage.finished_sweep < long_usage.finished_sweep,
+                "short {i} finished at sweep {} but long at {} — not iteration-level",
+                usage.finished_sweep,
+                long_usage.finished_sweep
+            );
+        }
+        assert_eq!(q.load(), 0);
+    }
+
+    #[test]
+    fn mid_sweep_admission_is_token_identical_to_solo() {
+        // Deterministic mid-flight join: with max_batch 2, the third
+        // request can only be admitted once the second retires — while
+        // the first (long) is still decoding. Its tokens must equal a
+        // solo run's.
+        let solo = {
+            let q = SubmitQueue::new();
+            let (rx, _) = submit(&q, 0, vec![5, 9], 6, 0);
+            q.close();
+            run_scheduler(&mut MockStepper::new(17, 4096), &q, 1, None, None).unwrap();
+            drain(&rx).0
+        };
+
+        let q = SubmitQueue::new();
+        let (long_rx, _) = submit(&q, 0, vec![1], 40, 0);
+        let (early_rx, _) = submit(&q, 1, vec![2], 3, 0);
+        let (joiner_rx, _) = submit(&q, 2, vec![5, 9], 6, 0);
+        q.close();
+        run_scheduler(&mut MockStepper::new(17, 4096), &q, 2, None, None).unwrap();
+
+        let (long_toks, _, long_usage, _) = drain(&long_rx);
+        let (_, _, early_usage, _) = drain(&early_rx);
+        let (joined, _, joiner_usage, _) = drain(&joiner_rx);
+        assert_eq!(long_toks.len(), 40);
+        assert_eq!(joined, solo, "mid-sweep admission changed tokens");
+        assert!(
+            joiner_usage.finished_sweep > early_usage.finished_sweep,
+            "joiner was admitted after the early request retired"
+        );
+        assert!(
+            joiner_usage.finished_sweep < long_usage.finished_sweep,
+            "joiner must have run inside the long request's sweep"
+        );
+    }
+
+    #[test]
+    fn stepper_failure_emits_done_error_everywhere() {
+        let q = SubmitQueue::new();
+        let (rx_a, _) = submit(&q, 0, vec![1], 32, 0);
+        let (rx_b, _) = submit(&q, 1, vec![2], 32, 0);
+        q.close();
+        let mut st = MockStepper::new(17, 4096);
+        st.fail_at_sweep = Some(4);
+        let res = run_scheduler(&mut st, &q, 4, None, None);
+        assert!(res.is_err(), "scheduler must propagate the engine error");
+        for rx in [&rx_a, &rx_b] {
+            let (toks, fin, _, err) = drain(rx);
+            assert_eq!(fin, FinishReason::Error);
+            assert!(err.unwrap().contains("mock sweep failure"));
+            assert!(toks.len() < 32, "failure struck mid-generation");
+        }
+        assert_eq!(q.load(), 0, "failed requests still count as finished");
+    }
+
+    #[test]
+    fn cancellation_mid_generation_retires_at_sweep_boundary() {
+        let q = SubmitQueue::new();
+        let (rx, cancel) = submit(&q, 0, vec![3], 100_000, 0);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            let mut st = MockStepper::new(17, 1 << 20);
+            run_scheduler(&mut st, &q2, 2, None, None)
+        });
+        // Wait until generation is demonstrably in flight…
+        let first = rx.recv().unwrap();
+        assert!(matches!(first, GenEvent::Token { .. }));
+        // …then cancel and expect a terminal Cancelled event.
+        cancel.cancel();
+        let (more, fin, usage, _) = drain(&rx);
+        assert_eq!(fin, FinishReason::Cancelled);
+        assert!(usage.completion_tokens >= 1);
+        assert!((usage.completion_tokens as u64) < 100_000);
+        let _ = more;
+        q.close();
+        h.join().unwrap().unwrap();
+        assert_eq!(q.load(), 0);
+    }
+
+    #[test]
+    fn cancelled_while_queued_never_claims_a_slot() {
+        let q = SubmitQueue::new();
+        let (rx, cancel) = submit(&q, 0, vec![1], 8, 0);
+        cancel.cancel();
+        q.close();
+        let mut st = MockStepper::new(17, 64);
+        run_scheduler(&mut st, &q, 2, None, None).unwrap();
+        let (toks, fin, usage, _) = drain(&rx);
+        assert!(toks.is_empty());
+        assert_eq!(fin, FinishReason::Cancelled);
+        assert_eq!(usage.completion_tokens, 0);
+        assert_eq!(st.sweeps, 0, "a queued-cancelled request must not be stepped");
+    }
+
+    #[test]
+    fn priority_orders_admission() {
+        // max_batch 1 serializes the sweep: completion order == admission
+        // order == priority order (FIFO inside a priority level).
+        let q = SubmitQueue::new();
+        let (rx0, _) = submit(&q, 0, vec![1], 2, 0);
+        let (rx1, _) = submit(&q, 1, vec![2], 2, 5);
+        let (rx2, _) = submit(&q, 2, vec![3], 2, 1);
+        q.close();
+        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+        let s0 = drain(&rx0).2.finished_sweep;
+        let s1 = drain(&rx1).2.finished_sweep;
+        let s2 = drain(&rx2).2.finished_sweep;
+        assert!(s1 < s2 && s2 < s0, "expected priority order 1,2,0 — got {s1},{s2},{s0}");
+    }
+
+    #[test]
+    fn dropped_receiver_cancels_decode() {
+        let q = SubmitQueue::new();
+        let (rx, _) = submit(&q, 0, vec![1], 10_000, 0);
+        drop(rx);
+        q.close();
+        let mut st = MockStepper::new(17, 1 << 20);
+        run_scheduler(&mut st, &q, 1, None, None).unwrap();
+        // prompt (1) + first generated token whose send fails ⇒ ~2 sweeps,
+        // nowhere near max_new.
+        assert!(st.sweeps <= 3, "decode must stop for an unread stream ({} sweeps)", st.sweeps);
+        assert_eq!(q.load(), 0);
+    }
+
+    #[test]
+    fn max_new_zero_emits_done_only() {
+        let q = SubmitQueue::new();
+        let (rx, _) = submit(&q, 0, vec![1, 2, 3], 0, 0);
+        q.close();
+        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+        let (toks, fin, usage, _) = drain(&rx);
+        assert!(toks.is_empty());
+        assert_eq!(fin, FinishReason::Length);
+        assert_eq!(usage.prompt_tokens, 3);
+        assert_eq!(usage.ttft_us, 0, "no token ⇒ no TTFT");
+    }
+
+    #[test]
+    fn stop_token_finishes_without_emitting_it() {
+        // Discover the greedy stream, then re-run with its 3rd token as
+        // a stop token: the stream must end with Stop after 2 tokens.
+        let greedy = {
+            let q = SubmitQueue::new();
+            let (rx, _) = submit(&q, 0, vec![4], 6, 0);
+            q.close();
+            run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+            drain(&rx).0
+        };
+        assert_eq!(greedy.len(), 6);
+        let q = SubmitQueue::new();
+        let (tx, rx) = channel();
+        q.push(Pending {
+            request: GenRequest {
+                id: 0,
+                prompt: vec![4],
+                params: SamplingParams {
+                    max_new: 6,
+                    stop_tokens: vec![greedy[2]],
+                    ..Default::default()
+                },
+                priority: 0,
+            },
+            events: tx,
+            cancel: CancelHandle::new(),
+            enqueued: Instant::now(),
+        });
+        q.close();
+        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+        let (toks, fin, usage, _) = drain(&rx);
+        assert_eq!(toks, greedy[..2].to_vec());
+        assert_eq!(fin, FinishReason::Stop);
+        assert_eq!(usage.completion_tokens, 2);
+    }
+}

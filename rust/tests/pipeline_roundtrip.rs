@@ -7,7 +7,6 @@ use bpdq::quant::{BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig};
 use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Duration;
 
 fn model() -> bpdq::model::Model {
     synthetic_model(
@@ -89,19 +88,14 @@ fn lut_serving_end_to_end_matches_native() {
 
     let run = |kind: EngineKind| -> Vec<Vec<u32>> {
         let router = Router::start(
-            RouterConfig {
-                n_workers: 2,
-                max_batch: 3,
-                batch_window: Duration::from_millis(1),
-                strategy: Strategy::RoundRobin,
-            },
-            |_| kind.clone(),
+            RouterConfig { n_workers: 2, max_batch: 3, strategy: Strategy::RoundRobin },
+            |_| Ok(kind.clone()),
         )
         .unwrap();
-        let rxs: Vec<_> = (0..6u64)
+        let streams: Vec<_> = (0..6u64)
             .map(|i| router.submit(vec![(i % 32) as u32, 3, 7], 5))
             .collect();
-        let out = rxs.into_iter().map(|(_, rx)| rx.recv().unwrap().tokens).collect();
+        let out = streams.into_iter().map(|s| s.collect().unwrap().tokens).collect();
         router.shutdown();
         out
     };

@@ -15,7 +15,7 @@ use bpdq::io::tlm::TlmFile;
 use bpdq::model::pipeline::quantize_model;
 use bpdq::model::Model;
 use bpdq::quant::{BpdqConfig, QuantMethod};
-use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use bpdq::serving::{EngineKind, KvFormat, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -82,9 +82,23 @@ fn main() -> anyhow::Result<()> {
     let qmodel = Arc::new(qm.model.clone());
     let trace = tasks::gen_arith(0xE2E, 24, 2);
 
+    // Third serve config: same W2 weights, but the KV cache itself is
+    // stored as packed W2 bit-planes (fused-dequant attention) — the
+    // full BPDQ deployment point: quantized weights AND quantized KV.
+    let kvq_model = Arc::new(qmodel.with_kv_format(KvFormat::bit_plane(2)));
+    println!(
+        "\nKV cache: f32 {:.2} MiB/session vs W2 bit-plane {:.2} MiB/session ({:.1}x smaller)",
+        qmodel.kv_bytes_per_session() as f64 / (1 << 20) as f64,
+        kvq_model.kv_bytes_per_session() as f64 / (1 << 20) as f64,
+        qmodel.kv_bytes_per_session() as f64 / kvq_model.kv_bytes_per_session() as f64
+    );
     for (label, kind) in [
         ("fp16 / native engine", EngineKind::Native(model.clone())),
         ("BPDQ-W2-G256 / LUT engine", EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone())?)),
+        (
+            "BPDQ-W2 + KV-W2 / LUT engine",
+            EngineKind::Lut(LutModel::new(kvq_model.clone(), packed.clone())?),
+        ),
     ] {
         let router = Router::start(
             RouterConfig { n_workers: 2, max_batch: 6, strategy: Strategy::LeastLoaded },

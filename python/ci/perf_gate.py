@@ -10,11 +10,16 @@ uploaded artifact (same schema: ``{"bench": ..., "rows": [...]}`` with a
   looser, because tail first-token latency on tiny CI models is noisier
   than steady-state throughput).
 
-Rows are matched by ``name``; rows present on only one side are
-reported but never fail the gate (configs come and go). Rows whose
-previous value is 0 (degenerate zero-wall-clock runs, or artifacts
-predating the TTFT field) are skipped — a ratio against zero means
-nothing.
+Rows are matched by ``name`` **plus** the KV-cache format: since the
+quantized-KV serving path, rows carry a ``kv_bits`` field (0 = f32 KV,
+2..4 = bit-plane KV) and the match key is ``name [kvN]`` — a
+quantized-KV row can only gate against a quantized-KV baseline, so
+regressions in the f32 rows are never masked by (or blamed on) the
+packed-KV rows sharing a name, and vice versa. Rows present on only
+one side are reported but never fail the gate (configs come and go).
+Rows whose previous value is 0 (degenerate zero-wall-clock runs, or
+artifacts predating the TTFT field) are skipped — a ratio against zero
+means nothing.
 
 Stdlib only; runs on the bare CI python.
 """
@@ -34,6 +39,12 @@ def load_rows(path: str) -> dict[str, dict[str, float]]:
         name = row.get("name")
         if not isinstance(name, str):
             continue
+        # Key on (name, kv format) so f32 and quantized-KV rows gate
+        # against their own baselines only. Artifacts predating kv_bits
+        # behave as kv_bits == 0 (every row was f32 KV back then).
+        kv_bits = row.get("kv_bits")
+        if isinstance(kv_bits, (int, float)) and int(kv_bits) != 0:
+            name = f"{name} [kv{int(kv_bits)}]"
         vals: dict[str, float] = {}
         for key in ("tokens_per_sec", "ttft_p95_us"):
             v = row.get(key)

@@ -11,7 +11,10 @@ use bpdq::lut::{dequant_gemv, lut_gemm, lut_gemv, LutScratch};
 use bpdq::model::{attend_head, softmax};
 use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
 use bpdq::rng::Rng;
-use bpdq::tensor::{matvec, strip_axpys, strip_dots, Matrix};
+use bpdq::tensor::{
+    matvec, strip_axpys, strip_axpys_packed, strip_dots, strip_dots_packed, Matrix, PackedGeom,
+    PackedStrip, PackedStripMut,
+};
 
 fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
     let mut rng = Rng::new(seed);
@@ -178,6 +181,73 @@ fn main() {
             &format!(
                 "{bt:>8.2} µs/session   per-session walks {pt:>8.2} µs/session   ratio ×{:.2}",
                 pt / bt
+            ),
+        );
+    }
+    // Packed-KV strip attention: the same score/softmax/AV phase over
+    // bit-plane KV strips (fused dequant — strip_dots_packed /
+    // strip_axpys_packed) vs f32 strips. The packed walk does more ALU
+    // work per position but streams ~9× fewer bytes (W2) — on the
+    // memory-bound serving shapes the bytes are what saturate first.
+    b.section("packed-KV attention — bit-plane strips vs f32 strips (hd=64, 256 pos, B=4)");
+    let bsz = 4usize;
+    let f32_strip_bytes = live * hd * 4;
+    for &bits in &[2usize, 3, 4] {
+        let geom = PackedGeom::new(live, hd, bits, 32);
+        let mut words: Vec<Vec<u32>> = vec![vec![0u32; geom.strip_words()]; 2 * bsz];
+        let rows: Vec<Vec<f32>> =
+            (0..live).map(|_| (0..hd).map(|_| rng.normal() as f32).collect()).collect();
+        for w in words.iter_mut() {
+            let mut strip = PackedStripMut::new(geom, w);
+            for (u, row) in rows.iter().enumerate() {
+                strip.store_row(u, row);
+            }
+        }
+        let (kwords, vwords) = words.split_at(bsz);
+        let qflat: Vec<f32> = (0..bsz * hd).map(|_| rng.normal() as f32).collect();
+        let mut scores = vec![0.0f32; bsz * live];
+        let mut outs_flat = vec![0.0f32; bsz * hd];
+        let s_packed = bench(|| {
+            let kstrips: Vec<PackedStrip> =
+                kwords.iter().map(|w| PackedStrip::new(geom, w)).collect();
+            let vstrips: Vec<PackedStrip> =
+                vwords.iter().map(|w| PackedStrip::new(geom, w)).collect();
+            let qs: Vec<&[f32]> = qflat.chunks_exact(hd).collect();
+            strip_dots_packed(&qs, &kstrips, live, scale, &mut scores);
+            for sc in scores.chunks_exact_mut(live) {
+                softmax(sc);
+            }
+            outs_flat.iter_mut().for_each(|o| *o = 0.0);
+            let mut outs: Vec<&mut [f32]> = outs_flat.chunks_exact_mut(hd).collect();
+            strip_axpys_packed(&scores, &vstrips, live, &mut outs);
+            black_box(&outs_flat);
+        });
+        // f32 baseline over the same shape (built once above for B=4 is
+        // a different buffer; rebuild here so both sides are warm).
+        let kslab: Vec<f32> = (0..bsz * live * hd).map(|_| rng.normal() as f32).collect();
+        let vslab: Vec<f32> = (0..bsz * live * hd).map(|_| rng.normal() as f32).collect();
+        let s_f32 = bench(|| {
+            let kstrips: Vec<&[f32]> = kslab.chunks_exact(live * hd).collect();
+            let vstrips: Vec<&[f32]> = vslab.chunks_exact(live * hd).collect();
+            let qs: Vec<&[f32]> = qflat.chunks_exact(hd).collect();
+            strip_dots(&qs, &kstrips, hd, scale, &mut scores);
+            for sc in scores.chunks_exact_mut(live) {
+                softmax(sc);
+            }
+            outs_flat.iter_mut().for_each(|o| *o = 0.0);
+            let mut outs: Vec<&mut [f32]> = outs_flat.chunks_exact_mut(hd).collect();
+            strip_axpys(&scores, &vstrips, hd, &mut outs);
+            black_box(&outs_flat);
+        });
+        let pk = s_packed.per_iter_us() / bsz as f64;
+        let f3 = s_f32.per_iter_us() / bsz as f64;
+        let packed_bytes = geom.strip_words() * 4;
+        b.row_metric(
+            &format!("W{bits} packed strips"),
+            &format!(
+                "{pk:>8.2} µs/session   f32 strips {f3:>8.2} µs/session   time ×{:.2}   bytes/strip {packed_bytes} vs {f32_strip_bytes} (×{:.1} smaller)",
+                pk / f3,
+                f32_strip_bytes as f64 / packed_bytes as f64
             ),
         );
     }

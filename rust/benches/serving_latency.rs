@@ -3,7 +3,12 @@
 //! including the batched-LUT scaling axis (max_batch 1/4/8 so the
 //! fused-sweep amortization is visible in tok/s) and the GQA axis
 //! (n_kv_heads 4 → 1 on the same tiny-LM: KV bytes shrink by exactly
-//! n_heads / n_kv_heads while the fused attention sweep keeps parity).
+//! n_heads / n_kv_heads while the fused attention sweep keeps parity)
+//! and the quantized-KV axis (`kvq2` rows: W2 bit-plane KV strips with
+//! fused-dequant attention — ~9× fewer KV bytes per session/token,
+//! reported as real packed bytes in `kv_bytes_per_session` /
+//! `kv_bytes_per_token`; the perf gate matches these rows separately
+//! from the f32 rows via their `kv_bits` field).
 //! Requests stream through the persistent iteration-level scheduler, so
 //! TTFT here is the real first-token-event latency and inter-token
 //! latency (ITL) is the event-to-event gap. Emits `BENCH_decode.json`
@@ -15,13 +20,16 @@ use bpdq::io::tlm::TlmFile;
 use bpdq::model::pipeline::quantize_model;
 use bpdq::model::{synthetic_model, Model, ModelConfig};
 use bpdq::quant::{BpdqConfig, QuantMethod};
-use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
+use bpdq::serving::{EngineKind, KvFormat, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
-/// BPDQ-quantize `model` and return (dequantized model, LUT engine kind).
-fn quantize_for_lut(model: &Arc<Model>) -> (Arc<Model>, EngineKind) {
+/// BPDQ-quantize `model` and return (dequantized model, LUT engine
+/// kind, packed records — reusable for format-variant LutModels).
+fn quantize_for_lut(
+    model: &Arc<Model>,
+) -> (Arc<Model>, EngineKind, HashMap<String, bpdq::quant::packing::BitPlanePacked>) {
     let vocab = model.cfg.vocab_size;
     let calib: Vec<Vec<u32>> =
         (0..24).map(|i| (0..64).map(|t| ((t * 7 + i * 3) % vocab) as u32).collect()).collect();
@@ -37,8 +45,8 @@ fn quantize_for_lut(model: &Arc<Model>) -> (Arc<Model>, EngineKind) {
         .iter()
         .map(|(k, v)| (k.clone(), v.as_bit_planes().unwrap().clone()))
         .collect();
-    let kind = EngineKind::Lut(LutModel::new(qmodel.clone(), packed).unwrap());
-    (qmodel, kind)
+    let kind = EngineKind::Lut(LutModel::new(qmodel.clone(), packed.clone()).unwrap());
+    (qmodel, kind, packed)
 }
 
 fn main() {
@@ -53,8 +61,14 @@ fn main() {
     // KV cache (and its bandwidth) is exactly 4× smaller.
     let gqa_model =
         Arc::new(synthetic_model(&ModelConfig::tiny_small(68).with_kv_heads(1), 7));
-    let (qmodel, lut_kind) = quantize_for_lut(&model);
-    let (_gqa_q, gqa_lut_kind) = quantize_for_lut(&gqa_model);
+    let (qmodel, lut_kind, packed) = quantize_for_lut(&model);
+    let (_gqa_q, gqa_lut_kind, _) = quantize_for_lut(&gqa_model);
+    // Quantized-KV variant: same W2 weights (reuse the packed records —
+    // the KV format does not affect weight quantization), but the arena
+    // stores W2 bit-plane strips and attention runs the fused-dequant
+    // kernels — the KV-bandwidth axis of the bench.
+    let kvq_qmodel = Arc::new(qmodel.with_kv_format(KvFormat::bit_plane(2)));
+    let kvq_lut_kind = EngineKind::Lut(LutModel::new(kvq_qmodel.clone(), packed).unwrap());
 
     let n_requests = if quick { 8 } else { 32 };
     let max_new = if quick { 4 } else { 12 };
@@ -69,6 +83,8 @@ fn main() {
         ("LUT bit-plane W2  B=8", lut_kind.clone(), 8, &qmodel),
         ("LUT W2 GQA kv=1   B=4", gqa_lut_kind.clone(), 4, &gqa_model),
         ("LUT W2 GQA kv=1   B=8", gqa_lut_kind.clone(), 8, &gqa_model),
+        ("LUT W2 kvq2      B=4", kvq_lut_kind.clone(), 4, &kvq_qmodel),
+        ("LUT W2 kvq2      B=8", kvq_lut_kind.clone(), 8, &kvq_qmodel),
     ];
     let mut report = JsonReport::new("serving_latency", "BENCH_decode.json");
     for (name, kind, max_batch, m) in runs {
@@ -85,6 +101,10 @@ fn main() {
         }
         let s = router.metrics.summary();
         let kv_bytes = m.kv_bytes_per_session();
+        let kv_bits = match m.cfg.kv_format {
+            KvFormat::F32 => 0usize,
+            KvFormat::BitPlane { bits, .. } => bits,
+        };
         println!(
             "{name:<26} TTFT p50 {:>7.2} ms p95 {:>7.2} ms   ITL p50 {:>6.2} ms   \
              decode {:>8.1} µs/tok   {:>7.1} tok/s   decode sweeps {:>5} (mean B {:.1}, max {})   \
@@ -112,6 +132,8 @@ fn main() {
                 .int(cfg.n_heads as i64)
                 .key("n_kv_heads")
                 .int(cfg.n_kv_heads as i64)
+                .key("kv_bits")
+                .int(kv_bits as i64)
                 .key("tokens_per_sec")
                 .number(s.tokens_per_sec)
                 .key("us_per_token")
@@ -132,6 +154,8 @@ fn main() {
                 .int(s.max_decode_batch as i64)
                 .key("kv_bytes_per_session")
                 .int(kv_bytes as i64)
+                .key("kv_bytes_per_token")
+                .int(m.kv_bytes_per_token() as i64)
                 .key("arena_high_water")
                 .int(s.arena_high_water as i64)
                 .key("arena_bytes_resident")

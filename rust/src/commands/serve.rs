@@ -18,7 +18,8 @@ use bpdq::model::pipeline::quantize_model;
 use bpdq::model::{synthetic_model, ModelConfig};
 use bpdq::quant::{BpdqConfig, QuantMethod};
 use bpdq::serving::{
-    EngineKind, FinishReason, GenEvent, LutModel, Router, RouterConfig, SamplingParams, Strategy,
+    EngineKind, FinishReason, GenEvent, KvFormat, KvGeom, LutModel, Router, RouterConfig,
+    SamplingParams, Strategy,
 };
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -51,6 +52,19 @@ pub fn run(args: &Args) -> Result<()> {
     let n_workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
     let max_batch = args.get_usize("max-batch", 8).map_err(anyhow::Error::msg)?;
+    // --kv-bits {0|2|3|4}: 0 serves f32 KV (the historical layout);
+    // 2..4 store the KV cache as packed bit-planes (BPDQ grid) and run
+    // the fused-dequant attention kernels. Validated here, loudly.
+    let kv_bits = args.get_usize("kv-bits", 0).map_err(anyhow::Error::msg)?;
+    let kv_format = KvFormat::from_kv_bits(kv_bits)?;
+    // The PJRT engine threads its KV through f32 executable literals and
+    // never touches the arena — a packed format would be silently
+    // ignored, so refuse it instead of printing a misleading banner.
+    anyhow::ensure!(
+        !(engine_name == "pjrt" && kv_format.is_packed()),
+        "--kv-bits {kv_bits} is not supported by the pjrt engine (its KV travels as f32 \
+         literals) — drop the flag or use --engine lut|native"
+    );
     let params = sampling_params(args, max_new)?;
 
     // A missing checkpoint falls back to synthetic weights (same shape
@@ -68,8 +82,27 @@ pub fn run(args: &Args) -> Result<()> {
             tok,
         )
     };
+    // Apply the KV format before anything touches the model's arena
+    // (the arena's geometry is fixed at first use).
+    let model = if kv_format == KvFormat::F32 { model } else { model.with_kv_format(kv_format) };
     let model = Arc::new(model);
     let capacity = model.decode_capacity();
+    println!(
+        "kv cache: {} — {:.2} MiB/session ({} B/token){}",
+        kv_format.label(),
+        model.kv_bytes_per_session() as f64 / (1 << 20) as f64,
+        model.kv_bytes_per_token(),
+        if kv_format.is_packed() {
+            // Geometry-only: no need to clone the model's weights just
+            // to evaluate the f32 formula.
+            let f32_bytes =
+                KvGeom { format: KvFormat::F32, ..KvGeom::of(&model) }.slot_bytes();
+            let ratio = f32_bytes as f64 / model.kv_bytes_per_session() as f64;
+            format!(", {ratio:.1}x smaller than f32")
+        } else {
+            String::new()
+        }
+    );
 
     // Quantize (default BPDQ W2-G256 — the paper's extreme deployment
     // point) unless serving fp16 natively.
@@ -276,6 +309,10 @@ fn print_summary(router: &Router) {
         s.arena_high_water,
         s.arena_bytes_resident as f64 / (1 << 20) as f64,
         s.arena_fork_copies
+    );
+    println!(
+        "kv bytes/session   : {} (real packed slot bytes)",
+        s.arena_slot_bytes
     );
     println!("decode             : {:.1} µs/token", s.us_per_token);
     println!("throughput         : {:.1} tok/s", s.tokens_per_sec);

@@ -195,6 +195,7 @@ mod tests {
     use super::*;
     use crate::data::{CorpusConfig, CorpusGen};
     use crate::model::{synthetic_model, ModelConfig};
+    use crate::serving::KvFormat;
 
     fn tiny() -> Model {
         synthetic_model(
@@ -206,6 +207,7 @@ mod tests {
                 n_kv_heads: 2,
                 d_ff: 24,
                 max_seq: 64,
+                kv_format: KvFormat::F32,
             },
             11,
         )

@@ -82,6 +82,7 @@ pub fn activation_outliers(model: &Model, probes: &[Vec<u32>]) -> OutlierStats {
 mod tests {
     use super::*;
     use crate::model::{synthetic_model, ModelConfig};
+    use crate::serving::KvFormat;
 
     fn probes() -> Vec<Vec<u32>> {
         (0..4).map(|i| (0..20).map(|t| ((t * 3 + i) % 20) as u32).collect()).collect()
@@ -98,6 +99,7 @@ mod tests {
                 n_kv_heads: 2,
                 d_ff: 48,
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             },
             3,
         );
@@ -120,6 +122,7 @@ mod tests {
                 n_kv_heads: 2,
                 d_ff: 24,
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             },
             4,
         );
@@ -140,6 +143,7 @@ mod tests {
                 n_kv_heads: 2,
                 d_ff: 48,
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             },
             5,
         );

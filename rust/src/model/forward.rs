@@ -3,8 +3,10 @@
 
 use super::{rmsnorm, silu, softmax, Model, ROPE_BASE};
 use crate::rng::Rng;
-use crate::serving::kv::{KvArena, KvHandle};
-use crate::tensor::{axpy, dot, matmul_transb, matvec, Matrix};
+use crate::serving::kv::{KvArena, KvFormat, KvHandle};
+use crate::tensor::{
+    axpy, dot, matmul_transb, matvec, strip_axpys_packed, strip_dots_packed, Matrix, PackedStrip,
+};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -227,6 +229,31 @@ pub fn attend_head(
     }
 }
 
+/// [`attend_head`] over **packed** bit-plane K/V strips: identical
+/// score/softmax/AV structure, but dequantization is fused into the
+/// strip walks ([`crate::tensor::strip_dots_packed`] /
+/// [`crate::tensor::strip_axpys_packed`]) — no f32 row is ever
+/// materialized. Implemented as the batched kernels at lane count 1, so
+/// the single-session and fused multi-session packed paths accumulate
+/// bit-identically (the packed analogue of the f32 token-identity
+/// pairing between [`attend_head`] and `strip_dots`/`strip_axpys`).
+#[inline]
+pub fn attend_head_packed(
+    q_h: &[f32],
+    kstrip: PackedStrip,
+    vstrip: PackedStrip,
+    len: usize,
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(scores.len(), len);
+    strip_dots_packed(&[q_h], &[kstrip], len, scale, scores);
+    softmax(scores);
+    let mut outs: [&mut [f32]; 1] = [out];
+    strip_axpys_packed(scores, &[vstrip], len, &mut outs);
+}
+
 /// Incremental KV-cache decode (one token at a time). KV lives in a
 /// slot of the model's pooled [`KvArena`] — the state owns only the
 /// slot handle (released back to the arena on drop), position
@@ -327,6 +354,9 @@ impl DecodeState {
             for hh in 0..nkv {
                 self.rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
             }
+            // Quantization (if any) happens HERE, once per token, as the
+            // freshly-computed row is stored; the attention walk below
+            // consumes whatever the arena's format physically holds.
             kv.store_k(l, t, &kx);
             kv.store_v(l, t, &vx);
 
@@ -334,14 +364,25 @@ impl DecodeState {
             for hh in 0..nh {
                 let o0 = hh * hd;
                 let kvh = hh / group;
-                attend_head(
-                    &q[o0..o0 + hd],
-                    kv.k_strip(l, kvh, t + 1),
-                    kv.v_strip(l, kvh, t + 1),
-                    scale,
-                    &mut scores,
-                    &mut attn[o0..o0 + hd],
-                );
+                match kv.format() {
+                    KvFormat::F32 => attend_head(
+                        &q[o0..o0 + hd],
+                        kv.k_strip(l, kvh, t + 1),
+                        kv.v_strip(l, kvh, t + 1),
+                        scale,
+                        &mut scores,
+                        &mut attn[o0..o0 + hd],
+                    ),
+                    KvFormat::BitPlane { .. } => attend_head_packed(
+                        &q[o0..o0 + hd],
+                        kv.k_packed(l, kvh),
+                        kv.v_packed(l, kvh),
+                        t + 1,
+                        scale,
+                        &mut scores,
+                        &mut attn[o0..o0 + hd],
+                    ),
+                }
             }
             let proj = matvec(&lw.wo, &attn);
             for (hi, p) in h.iter_mut().zip(&proj) {
@@ -489,6 +530,7 @@ mod tests {
                 n_kv_heads,
                 d_ff: 24,
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             },
             42,
         )
@@ -553,6 +595,74 @@ mod tests {
             for (x, y) in a.iter().zip(&b) {
                 assert!((x - y).abs() < 1e-6, "n_kv {n_kv}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_kv_decode_is_finite_and_faithful() {
+        // Decoding with a bit-plane KV arena must stay finite, actually
+        // take the packed path (≠ f32 logits), and at W4 remain close
+        // to the f32-KV decode (the grid step is range/15 per row).
+        let f32_model = tiny_gqa(2);
+        let toks = [3u32, 7, 1, 12, 5];
+        let mut st = f32_model.decode_state();
+        let mut f32_logits = Vec::new();
+        for &t in &toks {
+            f32_logits = st.step(&f32_model, t);
+        }
+        for bits in [2usize, 3, 4] {
+            let qm = f32_model.with_kv_format(KvFormat::bit_plane(bits));
+            let mut st = qm.decode_state();
+            let mut logits = Vec::new();
+            for &t in &toks {
+                logits = st.step(&qm, t);
+            }
+            assert!(logits.iter().all(|v| v.is_finite()), "bits {bits}");
+            let dist: f64 = logits
+                .iter()
+                .zip(&f32_logits)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let norm: f64 =
+                f32_logits.iter().map(|&b| (b as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(dist > 1e-9, "bits {bits}: packed path was never taken");
+            if bits == 4 {
+                assert!(
+                    dist < 1.5 * (norm + 1.0),
+                    "bits {bits}: quantized-KV logits diverged wildly ({dist} vs norm {norm})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_kv_fork_and_dirty_replay_are_deterministic() {
+        // The packed encoder is deterministic and fork is a bytewise
+        // prefix copy, so (a) a fork continues bit-identically to its
+        // parent and (b) a dirty reused slot replays a decode exactly.
+        let m = tiny_gqa(2).with_kv_format(KvFormat::bit_plane(2));
+        let prompt = [3u32, 7, 1];
+        let mut st = m.decode_state();
+        let mut first = Vec::new();
+        for &t in &prompt {
+            first = st.step(&m, t);
+        }
+        let mut f = st.fork();
+        let a = f.step(&m, 9);
+        let b = st.step(&m, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "packed fork diverged");
+        }
+        drop(f);
+        drop(st); // slots back to the free list, dirty
+        let mut st2 = m.decode_state();
+        let mut replay = Vec::new();
+        for &t in &prompt {
+            replay = st2.step(&m, t);
+        }
+        for (x, y) in first.iter().zip(&replay) {
+            assert!((x - y).abs() < 1e-6, "dirty packed slot replay diverged");
         }
     }
 

@@ -27,11 +27,13 @@ mod forward;
 pub mod pipeline;
 mod synth;
 
-pub use forward::{argmax, attend_head, greedy_generate, sample, Capture, DecodeState, Rope};
+pub use forward::{
+    argmax, attend_head, attend_head_packed, greedy_generate, sample, Capture, DecodeState, Rope,
+};
 pub use synth::{synthetic_checkpoint, synthetic_model};
 
 use crate::io::tlm::{TlmFile, TlmHeader};
-use crate::serving::kv::{KvArena, KvGeom};
+use crate::serving::kv::{KvArena, KvFormat, KvGeom};
 use crate::tensor::Matrix;
 use anyhow::{ensure, Result};
 use std::sync::{Arc, OnceLock};
@@ -48,6 +50,12 @@ pub struct ModelConfig {
     pub n_kv_heads: usize,
     pub d_ff: usize,
     pub max_seq: usize,
+    /// How this model's KV arena stores strips (f32 or packed
+    /// bit-planes). Runtime serving policy, **not** part of the `.tlm`
+    /// checkpoint format — loaders default to [`KvFormat::F32`] and
+    /// callers opt in via [`ModelConfig::with_kv_format`] /
+    /// [`Model::with_kv_format`] (e.g. `serve --kv-bits`).
+    pub kv_format: KvFormat,
 }
 
 impl ModelConfig {
@@ -73,6 +81,13 @@ impl ModelConfig {
         self
     }
 
+    /// Same config with the KV storage format overridden (quantized-KV
+    /// variants for tests and benches).
+    pub fn with_kv_format(mut self, kv_format: KvFormat) -> Self {
+        self.kv_format = kv_format;
+        self
+    }
+
     pub fn from_header(h: &TlmHeader) -> Self {
         Self {
             vocab_size: h.vocab_size as usize,
@@ -82,6 +97,7 @@ impl ModelConfig {
             n_kv_heads: h.n_kv_heads as usize,
             d_ff: h.d_ff as usize,
             max_seq: h.max_seq as usize,
+            kv_format: KvFormat::F32,
         }
     }
 
@@ -97,6 +113,7 @@ impl ModelConfig {
             n_kv_heads: 4,
             d_ff: 344,
             max_seq: 256,
+            kv_format: KvFormat::F32,
         }
     }
 
@@ -109,6 +126,7 @@ impl ModelConfig {
             n_kv_heads: 8,
             d_ff: 688,
             max_seq: 256,
+            kv_format: KvFormat::F32,
         }
     }
 }
@@ -291,11 +309,36 @@ impl Model {
         self.cfg.max_seq * 4
     }
 
-    /// KV bytes one decode session occupies — one [`KvArena`] slot:
-    /// `n_layers × cap × 2 × kv_dim × 4` bytes (K and V, f32). Under GQA
-    /// this is exactly `n_heads / n_kv_heads` smaller than the MHA cache.
+    /// **Real packed** KV bytes one decode session occupies — one
+    /// [`KvArena`] slot under the model's [`KvFormat`]. For
+    /// [`KvFormat::F32`] this is the historical
+    /// `n_layers × cap × 2 × kv_dim × 4` bytes (K and V, f32); for
+    /// [`KvFormat::BitPlane`] it is the plane words plus f16
+    /// coefficients actually resident (see
+    /// [`crate::serving::kv::KvGeom::slot_bytes`]). Under GQA either
+    /// format is exactly `n_heads / n_kv_heads` smaller than its MHA
+    /// counterpart.
     pub fn kv_bytes_per_session(&self) -> usize {
-        self.cfg.n_layers * self.decode_capacity() * 2 * self.cfg.kv_dim() * 4
+        KvGeom::of(self).slot_bytes()
+    }
+
+    /// Per-token KV traffic of one session: bytes of freshly stored
+    /// K/V per decoded token (`slot_bytes / cap`) — the bandwidth
+    /// number `BENCH_decode.json` reports per row.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_bytes_per_session() / self.decode_capacity()
+    }
+
+    /// A copy of this model serving under a different KV format: same
+    /// weights, same rope table, but a **fresh, uninitialized** arena
+    /// slot (the existing arena's geometry would not match). Use this —
+    /// never mutate `cfg.kv_format` on a clone — once any decode or
+    /// engine has touched the original.
+    pub fn with_kv_format(&self, kv_format: KvFormat) -> Model {
+        let mut m = self.clone();
+        m.cfg.kv_format = kv_format;
+        m.arena = OnceLock::new();
+        m
     }
 
     /// The decode RoPE table for this model, built once on first use and
@@ -468,6 +511,27 @@ mod tests {
         let mha = synthetic_model(&ModelConfig::tiny_small(68), 3);
         let gqa = synthetic_model(&ModelConfig::tiny_small(68).with_kv_heads(1), 3);
         assert_eq!(mha.kv_bytes_per_session(), 4 * gqa.kv_bytes_per_session());
+    }
+
+    #[test]
+    fn kv_bytes_are_format_aware() {
+        let f32_model = synthetic_model(&ModelConfig::tiny_small(68), 3);
+        let q2 = f32_model.with_kv_format(KvFormat::bit_plane(2));
+        assert!(
+            f32_model.kv_bytes_per_session() >= 8 * q2.kv_bytes_per_session(),
+            "W2 KV must be ≥8× smaller: {} vs {}",
+            f32_model.kv_bytes_per_session(),
+            q2.kv_bytes_per_session()
+        );
+        assert_eq!(
+            q2.kv_bytes_per_token(),
+            q2.kv_bytes_per_session() / q2.decode_capacity()
+        );
+        // The format copy starts with a fresh arena of matching geometry.
+        let _ = f32_model.kv_arena();
+        let q2b = f32_model.with_kv_format(KvFormat::bit_plane(2));
+        assert_eq!(q2b.kv_arena().geom(), KvGeom::of(&q2b));
+        assert!(!Arc::ptr_eq(&f32_model.kv_arena(), &q2b.kv_arena()));
     }
 
     #[test]

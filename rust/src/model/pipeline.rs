@@ -157,6 +157,7 @@ mod tests {
     use super::*;
     use crate::model::{synthetic_model, ModelConfig};
     use crate::quant::{BpdqConfig, UniformConfig};
+    use crate::serving::KvFormat;
 
     fn tiny_model() -> Model {
         synthetic_model(
@@ -168,6 +169,7 @@ mod tests {
                 n_kv_heads: 2,
                 d_ff: 48,
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             },
             7,
         )
@@ -203,6 +205,7 @@ mod tests {
             n_kv_heads: 2,
             d_ff: 48,
             max_seq: 32,
+            kv_format: KvFormat::F32,
         };
         let m = synthetic_model(&cfg, 7);
         let method = QuantMethod::Bpdq(BpdqConfig { k: 2, group_size: 16, iters: 2, ..Default::default() });

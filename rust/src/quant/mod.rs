@@ -199,78 +199,14 @@ pub fn quantize_fp16(w: &Matrix) -> Matrix {
 }
 
 /// Round an f32 to the nearest f16 and back (software emulation; the
-/// vendor set has no `half` crate).
+/// vendor set has no `half` crate). The bit-level encode/decode pair
+/// lives in [`crate::tensor::kvpack`], shared with the packed-KV
+/// coefficient storage; NaN passes through unchanged.
 pub fn f32_to_f16_roundtrip(x: f32) -> f32 {
-    let bits = x.to_bits();
-    let sign = bits >> 31;
-    let exp = ((bits >> 23) & 0xFF) as i32;
-    let frac = bits & 0x7F_FFFF;
-
-    if exp == 0xFF {
-        // inf / nan pass through
+    if x.is_nan() {
         return x;
     }
-    let e16 = exp - 127 + 15;
-    let h: u16 = if e16 >= 0x1F {
-        // overflow → inf
-        ((sign << 15) | 0x7C00) as u16
-    } else if e16 <= 0 {
-        // subnormal or zero
-        if e16 < -10 {
-            (sign << 15) as u16
-        } else {
-            let m = frac | 0x80_0000;
-            let shift = (14 - e16) as u32;
-            let halfway = 1u32 << (shift - 1);
-            let mut m16 = m >> shift;
-            // round-to-nearest-even
-            let rem = m & ((1 << shift) - 1);
-            if rem > halfway || (rem == halfway && (m16 & 1) == 1) {
-                m16 += 1;
-            }
-            ((sign << 15) as u16) | (m16 as u16)
-        }
-    } else {
-        let mut m16 = (frac >> 13) as u32;
-        let rem = frac & 0x1FFF;
-        let mut e = e16 as u32;
-        if rem > 0x1000 || (rem == 0x1000 && (m16 & 1) == 1) {
-            m16 += 1;
-            if m16 == 0x400 {
-                m16 = 0;
-                e += 1;
-                if e >= 0x1F {
-                    return f32::from_bits((sign << 31) | 0x7F80_0000); // inf
-                }
-            }
-        }
-        ((sign << 15) | (e << 10) | m16) as u16
-    };
-
-    // h → f32
-    let hs = (h >> 15) as u32;
-    let he = ((h >> 10) & 0x1F) as u32;
-    let hf = (h & 0x3FF) as u32;
-    let f32_bits = if he == 0 {
-        if hf == 0 {
-            hs << 31
-        } else {
-            // subnormal
-            let mut e = -1i32;
-            let mut m = hf;
-            while m & 0x400 == 0 {
-                m <<= 1;
-                e -= 1;
-            }
-            m &= 0x3FF;
-            (hs << 31) | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
-        }
-    } else if he == 0x1F {
-        (hs << 31) | 0x7F80_0000 | (hf << 13)
-    } else {
-        (hs << 31) | ((he + 127 - 15) << 23) | (hf << 13)
-    };
-    f32::from_bits(f32_bits)
+    crate::tensor::f16_decode(crate::tensor::f16_encode(x))
 }
 
 /// Number of column groups for `d_in` and `g` (last group may be ragged).

@@ -1,39 +1,69 @@
-//! KV arena — one pooled slab per model, shared by every decode session.
+//! KV arena — one pooled slab per model, shared by every decode
+//! session, **format-generic** over how a strip is stored.
 //!
-//! ## Layout
+//! ## Formats and layout
 //!
-//! The arena owns contiguous f32 slabs carved into fixed-size **slots**,
-//! one per live decode session. A slot holds the session's entire KV
-//! state:
-//!
-//! ```text
-//! bytes/slot = n_layers × 2 × n_kv_heads × cap × head_dim × 4
-//!              (K and V, f32; cap = Model::decode_capacity(),
-//!               n_kv_heads × head_dim = kv_dim — the GQA-shrunk width)
-//! ```
-//!
-//! laid out layer-major, then K/V, then head-major:
+//! The arena owns contiguous u32-word slabs carved into fixed-size
+//! **slots**, one per live decode session. A slot holds the session's
+//! entire KV state, laid out layer-major, then K/V, then head-major:
 //!
 //! ```text
-//! slot ─┬─ layer 0 ─┬─ K ─┬─ kv-head 0 │cap × head_dim│  ← one strip
-//!       │           │     └─ kv-head 1 │cap × head_dim│
-//!       │           └─ V ─┬─ kv-head 0 │cap × head_dim│
+//! slot ─┬─ layer 0 ─┬─ K ─┬─ kv-head 0 │ one strip │
+//!       │           │     └─ kv-head 1 │ one strip │
+//!       │           └─ V ─┬─ kv-head 0 │ one strip │
 //!       │                 └─ …
 //!       ├─ layer 1 ─ …
 //!       └─ layer L-1 ─ …
 //! ```
 //!
+//! What a **strip** (`cap` positions × `head_dim` channels of one
+//! kv-head) physically is depends on the slot's [`KvFormat`]:
+//!
+//! * [`KvFormat::F32`] — `cap × head_dim` f32s, position-major; the
+//!   seed layout, bit-identical to every pre-format-generic release:
+//!
+//!   ```text
+//!   strip  = │ pos 0: hd f32 │ pos 1: hd f32 │ … │
+//!   bytes/slot = n_layers × 2 × n_kv_heads × cap × head_dim × 4
+//!   ```
+//!
+//! * [`KvFormat::BitPlane`]`{ bits, group }` — the BPDQ variable grid
+//!   applied to the cache ([`crate::tensor::kvpack`]): `bits` packed
+//!   bit-planes (bit `u·hd + j` of plane *i* = code bit of channel `j`
+//!   at position `u` — when `hd < 32` one word holds a whole
+//!   position-group) followed by per-(position, channel-group) f16
+//!   coefficients `[c₀, c₁, …, c_bits]`, so a row dequantizes as
+//!   `x̂ⱼ = c₀ + Σᵢ cᵢ·Bᵢ[j]` (paper Eq. 1):
+//!
+//!   ```text
+//!   strip  = │ plane 0 │ … │ plane bits-1 │ f16 coeffs │
+//!   words/strip = bits·⌈cap·hd/32⌉ + ⌈cap·⌈hd/group⌉·(bits+1)/2⌉
+//!   bytes/slot  = n_layers × 2 × n_kv_heads × words/strip × 4
+//!   ```
+//!
+//!   At `bits = 2, group = 32, hd = 32` a slot is **9.1× smaller**
+//!   than f32 — the decode sweep streams that many fewer bytes per
+//!   token, which is the point: attention kernels
+//!   ([`crate::tensor::strip_dots_packed`] /
+//!   [`crate::tensor::strip_axpys_packed`]) walk the plane words
+//!   directly, fusing dequantization into the score/AV passes instead
+//!   of materializing f32 rows.
+//!
+//! Quantization happens **once, at store time**: [`KvViewMut::store_k`]
+//! / [`store_v`](KvViewMut::store_v) encode the freshly-computed
+//! projection row into the slot (masked writes touching exactly that
+//! row's bits). Reads, [`KvArena::fork`], and slot reuse all operate on
+//! the packed bytes — a fork is a bytewise prefix copy with **no
+//! re-quantization**, even when the fork position lands inside a shared
+//! plane word.
+//!
 //! Layer-major first because the decode sweep visits layers outermost —
 //! everything a layer's attention pass touches sits in one contiguous
-//! span of the slot. Head-major inside because each head's score pass is
-//! then one contiguous dot sweep and its AV pass a run of contiguous
-//! axpys (the PR-2 `LayerKv` property, now arena-wide). Making the
-//! *slots themselves* adjacent in one slab is what turns the batched
-//! serving sweep's score/AV phase into a single multi-session pass per
-//! (layer, kv-head) — [`crate::tensor::strip_dots`] /
-//! [`crate::tensor::strip_axpys`] walk every session in a position group
-//! together over arena-adjacent strips — instead of B separate strip
-//! walks over B scattered heap allocations.
+//! span of the slot. Head-major inside because each head's score pass
+//! is then one contiguous strip walk. Making the *slots themselves*
+//! adjacent in one slab is what turns the batched serving sweep's
+//! score/AV phase into a single multi-session pass per (layer, kv-head)
+//! over arena-adjacent strips — in either format.
 //!
 //! ## Handles and safety
 //!
@@ -47,10 +77,7 @@
 //! position, strip length, fork position) are **hard** asserts in every
 //! build profile. Handles are stamped with their arena's id and
 //! rejected by foreign arenas; generations catch stale handles
-//! ([`KvArena::is_live`], asserted on release). [`KvArena::fork`] is a
-//! slot-to-slot copy of the live
-//! `pos × head_dim` prefix of every strip — the prefix-cache trick
-//! behind fast multiple-choice scoring.
+//! ([`KvArena::is_live`], asserted on release).
 //!
 //! ## Exhaustion and growth
 //!
@@ -63,6 +90,7 @@
 //! sessions in *adjacent* slots for the batched sweep.
 
 use crate::model::Model;
+use crate::tensor::{PackedGeom, PackedStrip, PackedStripMut};
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -71,6 +99,56 @@ use std::sync::Mutex;
 /// arena they came from (releasing into a foreign arena would otherwise
 /// mint two live handles to one slot).
 static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
+
+/// How a KV strip is stored in the arena. Runtime-only (not serialized
+/// into `.tlm` checkpoints): the same weights can serve under any
+/// format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvFormat {
+    /// Dense f32 rows — bit-identical to the pre-format-generic layout.
+    F32,
+    /// BPDQ-style packed bit-planes + per-plane f16 scalars (see the
+    /// module docs and [`crate::tensor::kvpack`]).
+    BitPlane {
+        /// planes per channel (the paper's W-axis, applied to KV)
+        bits: usize,
+        /// channels per coefficient group along `head_dim`
+        group: usize,
+    },
+}
+
+impl KvFormat {
+    /// Default coefficient-group width (channels sharing one set of
+    /// per-plane scalars).
+    pub const DEFAULT_GROUP: usize = 32;
+
+    /// Bit-plane format at `bits` with the default group width.
+    pub fn bit_plane(bits: usize) -> Self {
+        KvFormat::BitPlane { bits, group: Self::DEFAULT_GROUP }
+    }
+
+    /// Parse a `--kv-bits` CLI value: `0` = f32, `2..=4` = bit-plane at
+    /// the default group. Anything else is a loud error.
+    pub fn from_kv_bits(bits: usize) -> anyhow::Result<Self> {
+        match bits {
+            0 => Ok(KvFormat::F32),
+            2..=4 => Ok(Self::bit_plane(bits)),
+            other => anyhow::bail!("--kv-bits must be 0 (f32), 2, 3, or 4 — got {other}"),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, KvFormat::BitPlane { .. })
+    }
+
+    /// Short human label ("f32" / "kvq2g32") for summaries and benches.
+    pub fn label(&self) -> String {
+        match self {
+            KvFormat::F32 => "f32".to_string(),
+            KvFormat::BitPlane { bits, group } => format!("kvq{bits}g{group}"),
+        }
+    }
+}
 
 /// Geometry of one model's KV slots — everything the arena needs to
 /// know about a model, without holding the model (no `Arc` cycle with
@@ -82,6 +160,8 @@ pub struct KvGeom {
     pub head_dim: usize,
     /// positions per session — `Model::decode_capacity()`
     pub cap: usize,
+    /// physical strip format (f32 or packed bit-planes)
+    pub format: KvFormat,
 }
 
 impl KvGeom {
@@ -91,22 +171,42 @@ impl KvGeom {
             n_kv_heads: model.cfg.n_kv_heads,
             head_dim: model.cfg.head_dim(),
             cap: model.decode_capacity(),
+            format: model.cfg.kv_format,
         }
     }
 
-    /// f32 elements per arena slot: `n_layers × 2 × n_kv_heads × cap ×
-    /// head_dim`.
-    pub fn slot_elems(&self) -> usize {
-        self.n_layers * 2 * self.n_kv_heads * self.cap * self.head_dim
+    /// Packed-strip geometry, when the format is a bit-plane one.
+    pub fn packed(&self) -> Option<PackedGeom> {
+        match self.format {
+            KvFormat::F32 => None,
+            KvFormat::BitPlane { bits, group } => {
+                Some(PackedGeom::new(self.cap, self.head_dim, bits, group))
+            }
+        }
     }
 
-    /// Bytes per slot (the per-session KV footprint —
-    /// `Model::kv_bytes_per_session`).
+    /// u32 words per (layer, K/V, kv-head) strip under this format.
+    pub fn strip_words(&self) -> usize {
+        match self.packed() {
+            None => self.cap * self.head_dim, // one f32 per word
+            Some(pg) => pg.strip_words(),
+        }
+    }
+
+    /// u32 words per arena slot.
+    pub fn slot_words(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.strip_words()
+    }
+
+    /// **Real packed** bytes per slot (the per-session KV footprint —
+    /// `Model::kv_bytes_per_session`). Format-aware: f32 slots cost
+    /// `n_layers × 2 × kv_dim × cap × 4` bytes; bit-plane slots cost
+    /// the plane words + f16 coefficients actually resident.
     pub fn slot_bytes(&self) -> usize {
-        self.slot_elems() * 4
+        self.slot_words() * 4
     }
 
-    /// Element offset of the (layer, K=0/V=1, kv-head) strip within a
+    /// Word offset of the (layer, K=0/V=1, kv-head) strip within a
     /// slot. Hard-bounded: this offset feeds the raw-pointer slice
     /// carving in the views, so out-of-range coordinates must never
     /// reach it in any build profile.
@@ -116,7 +216,7 @@ impl KvGeom {
             layer < self.n_layers && which < 2 && kvh < self.n_kv_heads,
             "KV strip coordinates out of range"
         );
-        ((layer * 2 + which) * self.n_kv_heads + kvh) * self.cap * self.head_dim
+        ((layer * 2 + which) * self.n_kv_heads + kvh) * self.strip_words()
     }
 }
 
@@ -127,7 +227,7 @@ pub struct KvHandle {
     slot: usize,
     generation: u64,
     arena_id: u64,
-    base: *mut f32,
+    base: *mut u32,
 }
 
 // Safety: a handle's slot region is disjoint from every other live
@@ -162,6 +262,9 @@ pub struct ArenaStats {
     pub reused: usize,
     /// bytes of slab currently allocated
     pub bytes_resident: usize,
+    /// **real packed** bytes per slot under the arena's format (the
+    /// format-aware per-session KV footprint)
+    pub slot_bytes: usize,
     /// slot-to-slot prefix copies performed by `fork`
     pub fork_copies: u64,
 }
@@ -169,9 +272,9 @@ pub struct ArenaStats {
 struct ArenaInner {
     /// owning slab segments; boxed so the heap buffers never move when
     /// the segment list grows
-    segments: Vec<Box<[f32]>>,
+    segments: Vec<Box<[u32]>>,
     /// per-slot base pointer into its segment, indexed by slot id
-    bases: Vec<*mut f32>,
+    bases: Vec<*mut u32>,
     /// bumped on release; a mismatch means a stale handle
     generations: Vec<u64>,
     /// LIFO free list of slot ids
@@ -188,8 +291,8 @@ struct ArenaInner {
 // itself is only touched under the mutex.
 unsafe impl Send for ArenaInner {}
 
-/// One pooled KV slab per model. See the module docs for layout and the
-/// handle/ownership contract.
+/// One pooled KV slab per model. See the module docs for formats,
+/// layout, and the handle/ownership contract.
 pub struct KvArena {
     id: u64,
     geom: KvGeom,
@@ -267,11 +370,11 @@ impl KvArena {
         }
         let want = if have == 0 { self.initial_slots } else { have };
         let add = want.min(self.max_slots - have);
-        let elems = self.geom.slot_elems();
-        let mut seg = vec![0.0f32; add * elems].into_boxed_slice();
+        let words = self.geom.slot_words();
+        let mut seg = vec![0u32; add * words].into_boxed_slice();
         let base = seg.as_mut_ptr();
         for i in 0..add {
-            inner.bases.push(unsafe { base.add(i * elems) });
+            inner.bases.push(unsafe { base.add(i * words) });
             inner.generations.push(0);
         }
         // Push in reverse so LIFO pops hand out ascending slot ids —
@@ -279,7 +382,7 @@ impl KvArena {
         for i in (0..add).rev() {
             inner.free.push(have + i);
         }
-        inner.bytes_resident += add * elems * 4;
+        inner.bytes_resident += add * words * 4;
         inner.segments.push(seg);
     }
 
@@ -329,26 +432,54 @@ impl KvArena {
             && !inner.free.contains(&slot)
     }
 
-    /// Branch-point copy: claim a fresh slot and copy the live
-    /// `pos × head_dim` prefix of every (layer, K/V, head) strip from
-    /// `src` — contiguous block copies inside the slab, no zeroing of
-    /// the never-read tails.
+    /// Word spans `(offset, len)` within one strip that hold the live
+    /// prefix of `pos` positions — the fork copy list. F32 strips have
+    /// one dense span; packed strips have one span per plane plus the
+    /// coefficient prefix (see [`PackedGeom::prefix_spans`]).
+    fn prefix_spans(&self, pos: usize) -> Vec<(usize, usize)> {
+        match self.geom.packed() {
+            None => {
+                let n = pos * self.geom.head_dim;
+                if n == 0 {
+                    Vec::new()
+                } else {
+                    vec![(0, n)]
+                }
+            }
+            Some(pg) => pg.prefix_spans(pos),
+        }
+    }
+
+    /// Branch-point copy: claim a fresh slot and copy the live prefix
+    /// of every (layer, K/V, head) strip from `src` **bytewise** —
+    /// contiguous word copies inside the slab, no re-quantization, no
+    /// zeroing of the never-read tails. For packed strips the copied
+    /// prefix may end mid-word (a position-group shared with unwritten
+    /// positions); the masked store discipline makes the stale tail
+    /// bits harmless.
     pub fn fork(&self, src: &KvHandle, pos: usize) -> Option<KvHandle> {
         self.check_owned(src);
         // Hard bound: this arithmetic feeds raw-pointer copies below.
         assert!(pos <= self.geom.cap, "fork position {pos} beyond slot capacity");
         let dst = self.acquire()?;
-        let hd = self.geom.head_dim;
-        let n = pos * hd;
-        if n > 0 {
-            let strip_elems = self.geom.cap * hd;
+        let spans = self.prefix_spans(pos);
+        if !spans.is_empty() {
+            let strip_words = self.geom.strip_words();
             for s in 0..self.geom.n_layers * 2 * self.geom.n_kv_heads {
-                let off = s * strip_elems;
-                // Safety: src is live (we hold &KvHandle, so no
-                // KvViewMut can exist) and dst was just acquired (no
-                // other reference); distinct slots never overlap.
-                unsafe {
-                    std::ptr::copy_nonoverlapping(src.base.add(off), dst.base.add(off), n);
+                let base = s * strip_words;
+                for &(off, n) in &spans {
+                    // Safety: src is live (we hold &KvHandle, so no
+                    // KvViewMut can exist) and dst was just acquired (no
+                    // other reference); distinct slots never overlap, and
+                    // every span lies inside the strip (hard-bounded by
+                    // the geometry that computed it).
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            src.base.add(base + off),
+                            dst.base.add(base + off),
+                            n,
+                        );
+                    }
                 }
             }
         }
@@ -379,6 +510,7 @@ impl KvArena {
             slots_created: inner.bases.len(),
             reused: inner.reused,
             bytes_resident: inner.bytes_resident,
+            slot_bytes: self.geom.slot_bytes(),
             fork_copies: inner.fork_copies,
         }
     }
@@ -388,88 +520,143 @@ impl KvArena {
 /// arena and the handle, so the slot can be neither released nor
 /// mutated while a view is out.
 pub struct KvView<'a> {
-    base: *mut f32,
+    base: *mut u32,
     geom: KvGeom,
     _life: PhantomData<&'a KvHandle>,
 }
 
+/// Strip accessors shared by [`KvView`] and [`KvViewMut`] (the mut view
+/// re-exposes them so the decode step can read back what it stored
+/// under one exclusive borrow).
+macro_rules! impl_strip_readers {
+    () => {
+        /// The arena's strip format (drives kernel dispatch).
+        #[inline]
+        pub fn format(&self) -> KvFormat {
+            self.geom.format
+        }
+
+        /// The first `len` cached K rows of `kvh` in `layer`, contiguous
+        /// f32 — [`KvFormat::F32`] slots only.
+        #[inline]
+        pub fn k_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
+            self.f32_strip(layer, 0, kvh, len)
+        }
+
+        /// The first `len` cached V rows of `kvh` in `layer`, contiguous
+        /// f32 — [`KvFormat::F32`] slots only.
+        #[inline]
+        pub fn v_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
+            self.f32_strip(layer, 1, kvh, len)
+        }
+
+        /// The packed K strip of `kvh` in `layer` —
+        /// [`KvFormat::BitPlane`] slots only.
+        #[inline]
+        pub fn k_packed(&self, layer: usize, kvh: usize) -> PackedStrip<'_> {
+            self.packed_strip(layer, 0, kvh)
+        }
+
+        /// The packed V strip of `kvh` in `layer` —
+        /// [`KvFormat::BitPlane`] slots only.
+        #[inline]
+        pub fn v_packed(&self, layer: usize, kvh: usize) -> PackedStrip<'_> {
+            self.packed_strip(layer, 1, kvh)
+        }
+
+        #[inline]
+        fn f32_strip(&self, layer: usize, which: usize, kvh: usize, len: usize) -> &[f32] {
+            assert_eq!(self.geom.format, KvFormat::F32, "f32 strip read on a packed arena");
+            assert!(len <= self.geom.cap, "strip length beyond slot capacity");
+            let off = self.geom.strip_base(layer, which, kvh);
+            // Safety: within the slot (offset arithmetic hard-bounded by
+            // strip_base and the capacity assert); u32 and f32 share
+            // size/alignment, and shared reads are fine while the handle
+            // is borrowed.
+            unsafe {
+                std::slice::from_raw_parts(
+                    self.base.add(off) as *const f32,
+                    len * self.geom.head_dim,
+                )
+            }
+        }
+
+        #[inline]
+        fn packed_strip(&self, layer: usize, which: usize, kvh: usize) -> PackedStrip<'_> {
+            let pg = self.geom.packed().expect("packed strip read on an f32 arena");
+            let off = self.geom.strip_base(layer, which, kvh);
+            // Safety: the whole strip lies inside the slot (strip_base is
+            // hard-bounded and strides by strip_words).
+            let words =
+                unsafe { std::slice::from_raw_parts(self.base.add(off), pg.strip_words()) };
+            PackedStrip::new(pg, words)
+        }
+    };
+}
+
 impl KvView<'_> {
-    /// The first `len` cached K rows of `kvh` in `layer`, contiguous.
-    #[inline]
-    pub fn k_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
-        self.strip(layer, 0, kvh, len)
-    }
-
-    /// The first `len` cached V rows of `kvh` in `layer`, contiguous.
-    #[inline]
-    pub fn v_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
-        self.strip(layer, 1, kvh, len)
-    }
-
-    #[inline]
-    fn strip(&self, layer: usize, which: usize, kvh: usize, len: usize) -> &[f32] {
-        assert!(len <= self.geom.cap, "strip length beyond slot capacity");
-        let off = self.geom.strip_base(layer, which, kvh);
-        // Safety: within the slot (offset arithmetic hard-bounded by
-        // strip_base and the capacity assert); shared reads are fine
-        // while the handle is borrowed shared.
-        unsafe { std::slice::from_raw_parts(self.base.add(off), len * self.geom.head_dim) }
-    }
+    impl_strip_readers!();
 }
 
 /// Exclusive borrow of one slot (store + read).
 pub struct KvViewMut<'a> {
-    base: *mut f32,
+    base: *mut u32,
     geom: KvGeom,
     _life: PhantomData<&'a mut KvHandle>,
 }
 
 impl KvViewMut<'_> {
-    /// Scatter one `kv_dim`-wide K projection row into the per-head
-    /// strips at position `pos`.
+    impl_strip_readers!();
+
+    /// Store one `kv_dim`-wide K projection row into the per-head
+    /// strips at position `pos` — dense copy under [`KvFormat::F32`],
+    /// bit-plane quantization under [`KvFormat::BitPlane`] (this is the
+    /// once-per-token encode; nothing downstream re-quantizes).
     #[inline]
     pub fn store_k(&mut self, layer: usize, pos: usize, row: &[f32]) {
         self.store(layer, 0, pos, row)
     }
 
-    /// Scatter one `kv_dim`-wide V projection row into the per-head
-    /// strips at position `pos`.
+    /// Store one `kv_dim`-wide V projection row into the per-head
+    /// strips at position `pos` (see [`KvViewMut::store_k`]).
     #[inline]
     pub fn store_v(&mut self, layer: usize, pos: usize, row: &[f32]) {
         self.store(layer, 1, pos, row)
     }
 
-    #[inline]
     fn store(&mut self, layer: usize, which: usize, pos: usize, row: &[f32]) {
         let hd = self.geom.head_dim;
         assert_eq!(row.len(), self.geom.n_kv_heads * hd, "KV row width != kv_dim");
         assert!(pos < self.geom.cap, "store position beyond slot capacity");
-        for kvh in 0..self.geom.n_kv_heads {
-            let off = self.geom.strip_base(layer, which, kvh) + pos * hd;
-            // Safety: exclusive access via the &mut handle borrow;
-            // offsets hard-bounded by the asserts above.
-            unsafe {
-                std::ptr::copy_nonoverlapping(row.as_ptr().add(kvh * hd), self.base.add(off), hd);
+        match self.geom.packed() {
+            None => {
+                for kvh in 0..self.geom.n_kv_heads {
+                    let off = self.geom.strip_base(layer, which, kvh) + pos * hd;
+                    // Safety: exclusive access via the &mut handle borrow;
+                    // offsets hard-bounded by the asserts above.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            row.as_ptr().add(kvh * hd),
+                            self.base.add(off) as *mut f32,
+                            hd,
+                        );
+                    }
+                }
+            }
+            Some(pg) => {
+                for kvh in 0..self.geom.n_kv_heads {
+                    let off = self.geom.strip_base(layer, which, kvh);
+                    // Safety: exclusive access via the &mut handle borrow;
+                    // the strip span is hard-bounded by strip_base, and
+                    // per-head strips are disjoint.
+                    let words = unsafe {
+                        std::slice::from_raw_parts_mut(self.base.add(off), pg.strip_words())
+                    };
+                    PackedStripMut::new(pg, words)
+                        .store_row(pos, &row[kvh * hd..(kvh + 1) * hd]);
+                }
             }
         }
-    }
-
-    #[inline]
-    pub fn k_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
-        self.strip(layer, 0, kvh, len)
-    }
-
-    #[inline]
-    pub fn v_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
-        self.strip(layer, 1, kvh, len)
-    }
-
-    #[inline]
-    fn strip(&self, layer: usize, which: usize, kvh: usize, len: usize) -> &[f32] {
-        assert!(len <= self.geom.cap, "strip length beyond slot capacity");
-        let off = self.geom.strip_base(layer, which, kvh);
-        // Safety: as in KvView::strip, but under the exclusive borrow.
-        unsafe { std::slice::from_raw_parts(self.base.add(off), len * self.geom.head_dim) }
     }
 }
 
@@ -489,6 +676,7 @@ mod tests {
                 n_kv_heads: 1,
                 d_ff: 12,
                 max_seq: 16,
+                kv_format: KvFormat::F32,
             },
             1,
         ))
@@ -498,10 +686,53 @@ mod tests {
         KvGeom::of(&model())
     }
 
+    fn packed_geom(bits: usize) -> KvGeom {
+        KvGeom { format: KvFormat::bit_plane(bits), ..geom() }
+    }
+
     #[test]
     fn slot_bytes_matches_model_formula() {
         let m = model();
         assert_eq!(KvGeom::of(&m).slot_bytes(), m.kv_bytes_per_session());
+        // f32 slots keep the historical formula exactly.
+        let g = KvGeom::of(&m);
+        assert_eq!(g.slot_bytes(), g.n_layers * 2 * g.n_kv_heads * g.cap * g.head_dim * 4);
+    }
+
+    #[test]
+    fn packed_slot_bytes_shrink_8x_at_w2() {
+        // Acceptance: at bits = 2 the per-slot footprint shrinks ≥ 8×
+        // vs f32 on the bench geometry (head_dim 32).
+        let f32_geom = KvGeom {
+            n_layers: 4,
+            n_kv_heads: 4,
+            head_dim: 32,
+            cap: 1024,
+            format: KvFormat::F32,
+        };
+        let q2 = KvGeom { format: KvFormat::bit_plane(2), ..f32_geom };
+        assert!(
+            f32_geom.slot_bytes() >= 8 * q2.slot_bytes(),
+            "W2 slot must be ≥8× smaller: f32 {} vs packed {}",
+            f32_geom.slot_bytes(),
+            q2.slot_bytes()
+        );
+        // Monotone in bits, and every packed format beats f32.
+        let q3 = KvGeom { format: KvFormat::bit_plane(3), ..f32_geom };
+        let q4 = KvGeom { format: KvFormat::bit_plane(4), ..f32_geom };
+        assert!(q2.slot_bytes() < q3.slot_bytes() && q3.slot_bytes() < q4.slot_bytes());
+        assert!(q4.slot_bytes() * 3 < f32_geom.slot_bytes());
+    }
+
+    #[test]
+    fn kv_bits_cli_validation() {
+        assert_eq!(KvFormat::from_kv_bits(0).unwrap(), KvFormat::F32);
+        assert_eq!(
+            KvFormat::from_kv_bits(2).unwrap(),
+            KvFormat::BitPlane { bits: 2, group: KvFormat::DEFAULT_GROUP }
+        );
+        assert!(KvFormat::from_kv_bits(1).is_err());
+        assert!(KvFormat::from_kv_bits(5).is_err());
     }
 
     #[test]
@@ -540,6 +771,7 @@ mod tests {
         assert_eq!(s.slots_created, 8);
         assert_eq!(s.slots_in_use, 5);
         assert_eq!(s.bytes_resident, 8 * g.slot_bytes());
+        assert_eq!(s.slot_bytes, g.slot_bytes());
         for h in hs {
             arena.release(h);
         }
@@ -606,8 +838,76 @@ mod tests {
     }
 
     #[test]
+    fn packed_store_then_dequant_roundtrip() {
+        // Arena-level pack→unpack: stored rows dequantize back within
+        // one grid step, across layers, heads, K and V.
+        for bits in [2usize, 3, 4] {
+            let g = KvGeom {
+                n_layers: 2,
+                n_kv_heads: 2,
+                head_dim: 8,
+                cap: 8,
+                format: KvFormat::BitPlane { bits, group: 8 },
+            };
+            let arena = KvArena::new(g, 2);
+            let mut h = arena.acquire().unwrap();
+            let kvd = g.n_kv_heads * g.head_dim;
+            let rows: Vec<Vec<f32>> = (0..3)
+                .map(|p| (0..kvd).map(|i| ((p * 31 + i * 7) % 13) as f32 * 0.21 - 1.0).collect())
+                .collect();
+            {
+                let mut v = arena.view_mut(&mut h);
+                for (p, row) in rows.iter().enumerate() {
+                    for l in 0..g.n_layers {
+                        v.store_k(l, p, row);
+                        v.store_v(l, p, row);
+                    }
+                }
+            }
+            let v = arena.view(&h);
+            let levels = ((1usize << bits) - 1) as f32;
+            let mut out = vec![0.0f32; g.head_dim];
+            for l in 0..g.n_layers {
+                for kvh in 0..g.n_kv_heads {
+                    for (p, row) in rows.iter().enumerate() {
+                        let want = &row[kvh * g.head_dim..(kvh + 1) * g.head_dim];
+                        let mn = want.iter().cloned().fold(f32::INFINITY, f32::min);
+                        let mx = want.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let step = (mx - mn) / levels;
+                        for (strip, which) in [(v.k_packed(l, kvh), "K"), (v.v_packed(l, kvh), "V")]
+                        {
+                            strip.dequant_row(p, &mut out);
+                            for (j, (&a, &b)) in want.iter().zip(&out).enumerate() {
+                                assert!(
+                                    (a - b).abs() <= step * 1.001 + 5e-3,
+                                    "bits {bits} {which} l {l} kvh {kvh} p {p} j {j}: {a} vs {b}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            arena.release(h);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "f32 strip read on a packed arena")]
+    fn f32_read_on_packed_arena_fails_loudly() {
+        let arena = KvArena::new(packed_geom(2), 1);
+        let h = arena.acquire().unwrap();
+        let _ = arena.view(&h).k_strip(0, 0, 1);
+    }
+
+    #[test]
     fn fork_copies_live_prefix_only() {
-        let g = KvGeom { n_layers: 2, n_kv_heads: 2, head_dim: 4, cap: 8 };
+        let g = KvGeom {
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 4,
+            cap: 8,
+            format: KvFormat::F32,
+        };
         let arena = KvArena::new(g, 2);
         let mut src = arena.acquire().unwrap();
         for pos in 0..3 {
@@ -633,6 +933,129 @@ mod tests {
         drop((sv, dv));
         arena.release(src);
         arena.release(dst);
+    }
+
+    #[test]
+    fn packed_fork_mid_group_is_bytewise_and_decodes_identically() {
+        // Satellite: fork at a position *inside* a plane-word
+        // position-group (head_dim 4 → 8 positions share each word).
+        // The packed prefix is copied bytewise (no re-quantization);
+        // after both sessions store the same continuation rows they
+        // dequantize identically — and the released slot is reused with
+        // a bumped generation.
+        let g = KvGeom {
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 4,
+            cap: 16,
+            format: KvFormat::BitPlane { bits: 2, group: 4 },
+        };
+        let arena = KvArena::new(g, 2);
+        let mut src = arena.acquire().unwrap();
+        let kvd = g.n_kv_heads * g.head_dim;
+        let row = |p: usize| -> Vec<f32> {
+            (0..kvd).map(|i| ((p * 17 + i * 5) % 11) as f32 * 0.3 - 1.5).collect()
+        };
+        for p in 0..3 {
+            let mut v = arena.view_mut(&mut src);
+            for l in 0..g.n_layers {
+                v.store_k(l, p, &row(p));
+                v.store_v(l, p, &row(p));
+            }
+        }
+        // Fork at pos 3 — mid-word for hd=4 (word holds positions 0..8).
+        let mut dst = arena.fork(&src, 3).unwrap();
+        // Prefix is byte-identical: dequantized rows 0..3 match exactly
+        // (no re-quantization happened).
+        {
+            let sv = arena.view(&src);
+            let dv = arena.view(&dst);
+            let mut a = vec![0.0f32; g.head_dim];
+            let mut b = vec![0.0f32; g.head_dim];
+            for l in 0..g.n_layers {
+                for kvh in 0..g.n_kv_heads {
+                    for p in 0..3 {
+                        sv.k_packed(l, kvh).dequant_row(p, &mut a);
+                        dv.k_packed(l, kvh).dequant_row(p, &mut b);
+                        assert_eq!(a, b, "K l {l} kvh {kvh} p {p}");
+                        sv.v_packed(l, kvh).dequant_row(p, &mut a);
+                        dv.v_packed(l, kvh).dequant_row(p, &mut b);
+                        assert_eq!(a, b, "V l {l} kvh {kvh} p {p}");
+                    }
+                }
+            }
+        }
+        // Both sessions continue with the same rows (3, 4): the shared
+        // plane word is masked-rewritten in each slot independently and
+        // the results stay identical.
+        for p in 3..5 {
+            for h in [&mut src, &mut dst] {
+                let mut v = arena.view_mut(h);
+                for l in 0..g.n_layers {
+                    v.store_k(l, p, &row(p));
+                    v.store_v(l, p, &row(p));
+                }
+            }
+        }
+        {
+            let sv = arena.view(&src);
+            let dv = arena.view(&dst);
+            let mut a = vec![0.0f32; g.head_dim];
+            let mut b = vec![0.0f32; g.head_dim];
+            for l in 0..g.n_layers {
+                for kvh in 0..g.n_kv_heads {
+                    for p in 0..5 {
+                        sv.k_packed(l, kvh).dequant_row(p, &mut a);
+                        dv.k_packed(l, kvh).dequant_row(p, &mut b);
+                        assert_eq!(a, b, "post-continue K l {l} kvh {kvh} p {p}");
+                    }
+                }
+            }
+        }
+        assert_eq!(arena.stats().fork_copies, 1);
+        // Generation bump + slot reuse: releasing the fork frees its
+        // slot for the next acquire, under a new generation.
+        let (fslot, fgen) = (dst.slot(), dst.generation());
+        arena.release(dst);
+        assert!(!arena.is_live(fslot, fgen), "released fork handle must go stale");
+        let again = arena.acquire().unwrap();
+        assert_eq!(again.slot(), fslot, "LIFO reuse of the fork's slot");
+        assert_ne!(again.generation(), fgen, "reuse bumps the generation");
+        arena.release(again);
+        arena.release(src);
+    }
+
+    #[test]
+    fn packed_dirty_slot_reuse_decodes_like_fresh() {
+        // A reused (dirty) packed slot must dequantize stored rows
+        // exactly like its first (zero-filled) use — masked stores
+        // overwrite every bit they later read.
+        let g = packed_geom(2);
+        let arena = KvArena::new(g, 1);
+        let kvd = g.n_kv_heads * g.head_dim;
+        let row: Vec<f32> = (0..kvd).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut fresh = vec![0.0f32; g.head_dim];
+        let mut reused = vec![0.0f32; g.head_dim];
+        {
+            let mut h = arena.acquire().unwrap();
+            {
+                let mut v = arena.view_mut(&mut h);
+                v.store_k(0, 0, &row);
+                v.store_k(0, 1, &row); // extra position → dirt beyond pos 0
+            }
+            arena.view(&h).k_packed(0, 0).dequant_row(0, &mut fresh);
+            arena.release(h);
+        }
+        {
+            let mut h = arena.acquire().unwrap(); // LIFO: the same dirty slot
+            {
+                let mut v = arena.view_mut(&mut h);
+                v.store_k(0, 0, &row);
+            }
+            arena.view(&h).k_packed(0, 0).dequant_row(0, &mut reused);
+            arena.release(h);
+        }
+        assert_eq!(fresh, reused);
     }
 
     #[test]
@@ -665,6 +1088,7 @@ mod tests {
                 n_kv_heads: 4,
                 d_ff: 24,
                 max_seq: 16,
+                kv_format: KvFormat::F32,
             },
             1,
         ));

@@ -123,6 +123,10 @@ pub struct LatencySummary {
     pub arena_high_water: usize,
     /// bytes of pooled KV slab currently allocated
     pub arena_bytes_resident: usize,
+    /// **real packed** bytes one session's KV slot occupies under its
+    /// arena's format (the largest across observed arenas — per-slot
+    /// footprints are per-model, so summing would be meaningless)
+    pub arena_slot_bytes: usize,
     /// slot-to-slot prefix copies performed by `fork`
     pub arena_fork_copies: u64,
 }
@@ -168,6 +172,8 @@ impl LatencySummary {
             .int(self.arena_high_water as i64)
             .key("arena_bytes_resident")
             .int(self.arena_bytes_resident as i64)
+            .key("arena_slot_bytes")
+            .int(self.arena_slot_bytes as i64)
             .key("arena_fork_copies")
             .int(self.arena_fork_copies as i64)
             .end_object();
@@ -278,6 +284,7 @@ impl Metrics {
             arena_slots_in_use: m.arenas.values().map(|a| a.slots_in_use).sum(),
             arena_high_water: m.arenas.values().map(|a| a.high_water).sum(),
             arena_bytes_resident: m.arenas.values().map(|a| a.bytes_resident).sum(),
+            arena_slot_bytes: m.arenas.values().map(|a| a.slot_bytes).max().unwrap_or(0),
             arena_fork_copies: m.arenas.values().map(|a| a.fork_copies).sum(),
         }
     }
@@ -349,12 +356,13 @@ mod tests {
             "p95_itl_us",
             "arena_high_water",
             "arena_bytes_resident",
+            "arena_slot_bytes",
             "arena_fork_copies",
         ] {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
         // No quoted values: every field in LatencySummary is numeric.
-        assert_eq!(json.matches('"').count(), 2 * 18, "non-numeric value leaked into {json}");
+        assert_eq!(json.matches('"').count(), 2 * 19, "non-numeric value leaked into {json}");
     }
 
     #[test]
@@ -397,6 +405,7 @@ mod tests {
             slots_created: hw,
             reused: 0,
             bytes_resident: bytes,
+            slot_bytes: bytes / 2,
             fork_copies: forks,
         };
         // Two snapshots of the same arena: the later (monotone) one
@@ -410,6 +419,7 @@ mod tests {
         assert_eq!(s.arena_slots_in_use, 1);
         assert_eq!(s.arena_high_water, 5);
         assert_eq!(s.arena_bytes_resident, 5120);
+        assert_eq!(s.arena_slot_bytes, 2048, "largest per-slot footprint across arenas");
         assert_eq!(s.arena_fork_copies, 2);
     }
 

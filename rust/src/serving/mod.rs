@@ -39,9 +39,11 @@
 //! fills. Every session's KV lives in a slot of the model's pooled
 //! [`kv::KvArena`] (one slab per model), so the fused sweep's score/AV
 //! phase runs as batched multi-session kernels over arena-adjacent
-//! strips. The native engine steps sessions independently — dense
-//! matvecs share nothing — but its sessions draw from the same arena and
-//! the same scheduler loop.
+//! strips — in the arena's [`kv::KvFormat`]: f32 strips, or packed
+//! bit-plane strips (`serve --kv-bits`) consumed by fused-dequant
+//! kernels with quantization paid once at store time. The native engine
+//! steps sessions independently — dense matvecs share nothing — but its
+//! sessions draw from the same arena and the same scheduler loop.
 //!
 //! ## Serving API
 //!
@@ -117,7 +119,7 @@ pub(crate) mod scheduler;
 
 pub use batcher::{Pending, SubmitQueue};
 pub use engine::{Engine, EngineKind, LutModel};
-pub use kv::{ArenaStats, KvArena, KvGeom, KvHandle, KvView, KvViewMut};
+pub use kv::{ArenaStats, KvArena, KvFormat, KvGeom, KvHandle, KvView, KvViewMut};
 pub use metrics::{LatencySummary, Metrics};
 pub use router::{GenStream, Router, RouterConfig, Strategy};
 

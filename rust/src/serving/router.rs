@@ -259,6 +259,7 @@ impl Router {
 mod tests {
     use super::*;
     use crate::model::{synthetic_model, Model, ModelConfig};
+    use crate::serving::KvFormat;
     use crate::serving::{FinishReason, Usage};
     use std::collections::HashSet;
     use std::time::Duration;
@@ -273,6 +274,7 @@ mod tests {
                 n_kv_heads: 2,
                 d_ff: 24,
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             },
             5,
         ))

@@ -1,0 +1,474 @@
+//! Bit-plane packed KV strips — the BPDQ variable grid applied to the
+//! KV cache.
+//!
+//! A **strip** is one (layer, K/V, kv-head) region of a KV arena slot:
+//! `cap` positions × `hd` channels. The f32 format stores it as
+//! `cap × hd` floats; this module defines the packed alternative the
+//! format-generic arena ([`crate::serving::kv::KvFormat::BitPlane`])
+//! stores instead:
+//!
+//! ```text
+//! strip = [ plane 0 | plane 1 | … | plane bits-1 | coefficients ]
+//!
+//! plane i   : ceil(cap·hd / 32) u32 words, bit (u·hd + j) = i-th code
+//!             bit of channel j at position u — positions are packed
+//!             back-to-back at *bit* granularity, so when hd < 32 a
+//!             single word holds a whole group of positions (the
+//!             "position-group" sharing that makes small-head test
+//!             models cheap too);
+//! coeffs    : cap × n_groups × (bits+1) f16 values, position-major,
+//!             two per u32 word: for position u and channel group g,
+//!             [c₀, c₁, …, c_bits] — the per-plane scalars of the
+//!             BPDQ grid  x̂ⱼ = c₀ + Σᵢ cᵢ·Bᵢ[j]   (paper Eq. 1).
+//! ```
+//!
+//! The row encoder quantizes one freshly-computed K/V head-row at store
+//! time (uniform `2^bits`-level grid per channel group, then a
+//! mean-residual refit of `c₀` — the cheapest point on the paper's
+//! variable-grid axis, chosen so the max-abs error stays provably
+//! bounded by one grid step). Because every coefficient is a free
+//! per-plane scalar in the *format*, richer encoders (alternating
+//! refits, salience-split planes à la BiLLM) can drop in without a
+//! layout change.
+//!
+//! Writes are masked read-modify-writes touching exactly the stored
+//! row's bits, so strips tolerate dirty (reused / forked) memory: bits
+//! of a position are never read before that position was stored, and
+//! storing clears them first. That is what lets
+//! [`crate::serving::kv::KvArena::fork`] copy a live prefix *bytewise*
+//! — including a partial word shared with not-yet-written positions —
+//! with no re-quantization.
+
+/// Round an f32 to IEEE 754 binary16 bits (round-to-nearest-even).
+pub fn f16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan map to f16 inf / nan
+        let payload: u16 = if frac == 0 { 0 } else { 0x200 | (((frac >> 13) as u16) & 0x3FF) };
+        return ((sign << 15) as u16) | 0x7C00 | payload;
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        // overflow → inf
+        ((sign << 15) | 0x7C00) as u16
+    } else if e16 <= 0 {
+        // subnormal or zero
+        if e16 < -10 {
+            (sign << 15) as u16
+        } else {
+            let m = frac | 0x80_0000;
+            let shift = (14 - e16) as u32;
+            let halfway = 1u32 << (shift - 1);
+            let mut m16 = m >> shift;
+            // round-to-nearest-even
+            let rem = m & ((1 << shift) - 1);
+            if rem > halfway || (rem == halfway && (m16 & 1) == 1) {
+                m16 += 1;
+            }
+            ((sign << 15) as u16) | (m16 as u16)
+        }
+    } else {
+        let mut m16 = (frac >> 13) as u32;
+        let rem = frac & 0x1FFF;
+        let mut e = e16 as u32;
+        if rem > 0x1000 || (rem == 0x1000 && (m16 & 1) == 1) {
+            m16 += 1;
+            if m16 == 0x400 {
+                m16 = 0;
+                e += 1;
+                if e >= 0x1F {
+                    return ((sign << 15) | 0x7C00) as u16; // inf
+                }
+            }
+        }
+        ((sign << 15) | (e << 10) | m16) as u16
+    }
+}
+
+/// Decode IEEE 754 binary16 bits to f32.
+pub fn f16_decode(h: u16) -> f32 {
+    let hs = (h >> 15) as u32;
+    let he = ((h >> 10) & 0x1F) as u32;
+    let hf = (h & 0x3FF) as u32;
+    let f32_bits = if he == 0 {
+        if hf == 0 {
+            hs << 31
+        } else {
+            // subnormal
+            let mut e = -1i32;
+            let mut m = hf;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            (hs << 31) | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if he == 0x1F {
+        (hs << 31) | 0x7F80_0000 | (hf << 13)
+    } else {
+        (hs << 31) | ((he + 127 - 15) << 23) | (hf << 13)
+    };
+    f32::from_bits(f32_bits)
+}
+
+/// Geometry of one packed strip: `cap` positions × `hd` channels at
+/// `bits` planes, with `group` channels per coefficient group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackedGeom {
+    pub cap: usize,
+    pub hd: usize,
+    pub bits: usize,
+    /// channels per coefficient group, clamped to `min(hd, 64)` at
+    /// construction (64 bounds the encoder's stack scratch)
+    pub group: usize,
+}
+
+impl PackedGeom {
+    pub fn new(cap: usize, hd: usize, bits: usize, group: usize) -> Self {
+        assert!(hd > 0 && cap > 0, "empty strip geometry");
+        assert!((1..=8).contains(&bits), "KV bit-plane count {bits} out of range 1..=8");
+        assert!(group > 0, "coefficient group must be positive");
+        Self { cap, hd, bits, group: group.min(hd).min(64) }
+    }
+
+    /// Coefficient groups per position (`hd / group`, last one ragged).
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.hd.div_ceil(self.group)
+    }
+
+    /// u32 words per plane sub-region (`cap · hd` bits, rounded up).
+    #[inline]
+    pub fn plane_words(&self) -> usize {
+        (self.cap * self.hd).div_ceil(32)
+    }
+
+    /// f16 coefficients per position: `(bits + 1)` per group.
+    #[inline]
+    pub fn coeffs_per_pos(&self) -> usize {
+        self.n_groups() * (self.bits + 1)
+    }
+
+    /// u32 words of the coefficient region (two f16 per word).
+    #[inline]
+    pub fn coeff_words(&self) -> usize {
+        (self.cap * self.coeffs_per_pos()).div_ceil(2)
+    }
+
+    /// Word offset of the coefficient region within the strip.
+    #[inline]
+    pub fn coeff_base(&self) -> usize {
+        self.bits * self.plane_words()
+    }
+
+    /// Total u32 words of one packed strip.
+    #[inline]
+    pub fn strip_words(&self) -> usize {
+        self.coeff_base() + self.coeff_words()
+    }
+
+    /// Word spans `(offset, len)` of the live prefix of `pos` positions
+    /// — the bytewise copy list for `fork`. Spans may include trailing
+    /// bits/halves of position `pos` itself when it shares a word; the
+    /// masked store discipline makes those stale bits harmless.
+    pub fn prefix_spans(&self, pos: usize) -> Vec<(usize, usize)> {
+        assert!(pos <= self.cap, "prefix beyond strip capacity");
+        let mut spans = Vec::with_capacity(self.bits + 1);
+        let pw = self.plane_words();
+        let plane_prefix = (pos * self.hd).div_ceil(32);
+        if plane_prefix > 0 {
+            for i in 0..self.bits {
+                spans.push((i * pw, plane_prefix));
+            }
+        }
+        let coeff_prefix = (pos * self.coeffs_per_pos()).div_ceil(2);
+        if coeff_prefix > 0 {
+            spans.push((self.coeff_base(), coeff_prefix));
+        }
+        spans
+    }
+
+    #[inline]
+    fn coeff_index(&self, u: usize, g: usize, c: usize) -> usize {
+        debug_assert!(u < self.cap && g < self.n_groups() && c <= self.bits);
+        (u * self.n_groups() + g) * (self.bits + 1) + c
+    }
+}
+
+/// Read one f16 (index `idx` in the half-word stream) out of packed
+/// coefficient words.
+#[inline]
+fn get_half(words: &[u32], idx: usize) -> f32 {
+    let w = words[idx / 2];
+    let h = if idx % 2 == 0 { (w & 0xFFFF) as u16 } else { (w >> 16) as u16 };
+    f16_decode(h)
+}
+
+/// Write one f16 into the half-word stream (read-modify-write of the
+/// containing u32, so neighbours survive).
+#[inline]
+fn set_half(words: &mut [u32], idx: usize, v: f32) {
+    let h = f16_encode(v) as u32;
+    let w = &mut words[idx / 2];
+    if idx % 2 == 0 {
+        *w = (*w & 0xFFFF_0000) | h;
+    } else {
+        *w = (*w & 0x0000_FFFF) | (h << 16);
+    }
+}
+
+/// Shared read view of one packed strip (`strip_words` u32s).
+#[derive(Clone, Copy)]
+pub struct PackedStrip<'a> {
+    pub geom: PackedGeom,
+    pub words: &'a [u32],
+}
+
+impl<'a> PackedStrip<'a> {
+    pub fn new(geom: PackedGeom, words: &'a [u32]) -> Self {
+        assert_eq!(words.len(), geom.strip_words(), "packed strip length mismatch");
+        Self { geom, words }
+    }
+
+    /// Words of plane `i` (bit `u·hd + j` = code bit of channel `j` at
+    /// position `u`).
+    #[inline]
+    pub fn plane(&self, i: usize) -> &'a [u32] {
+        let pw = self.geom.plane_words();
+        let words: &'a [u32] = self.words;
+        &words[i * pw..(i + 1) * pw]
+    }
+
+    /// Coefficient `c` (0 = bias c₀, `1..=bits` = plane scalars) of
+    /// channel group `g` at position `u`.
+    #[inline]
+    pub fn coeff(&self, u: usize, g: usize, c: usize) -> f32 {
+        get_half(&self.words[self.geom.coeff_base()..], self.geom.coeff_index(u, g, c))
+    }
+
+    /// Dequantize position `u` into `out` (`hd` wide):
+    /// `x̂ⱼ = c₀ + Σᵢ cᵢ·Bᵢ[j]` per group.
+    pub fn dequant_row(&self, u: usize, out: &mut [f32]) {
+        let g = &self.geom;
+        assert_eq!(out.len(), g.hd);
+        for grp in 0..g.n_groups() {
+            let lo = grp * g.group;
+            let hi = (lo + g.group).min(g.hd);
+            let c0 = self.coeff(u, grp, 0);
+            for v in out[lo..hi].iter_mut() {
+                *v = c0;
+            }
+            for i in 0..g.bits {
+                let ci = self.coeff(u, grp, 1 + i);
+                let plane = self.plane(i);
+                for (j, v) in out[lo..hi].iter_mut().enumerate() {
+                    let bp = u * g.hd + lo + j;
+                    if (plane[bp / 32] >> (bp % 32)) & 1 == 1 {
+                        *v += ci;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Exclusive write view of one packed strip.
+pub struct PackedStripMut<'a> {
+    pub geom: PackedGeom,
+    pub words: &'a mut [u32],
+}
+
+impl<'a> PackedStripMut<'a> {
+    pub fn new(geom: PackedGeom, words: &'a mut [u32]) -> Self {
+        assert_eq!(words.len(), geom.strip_words(), "packed strip length mismatch");
+        Self { geom, words }
+    }
+
+    #[inline]
+    pub fn as_strip(&self) -> PackedStrip<'_> {
+        PackedStrip { geom: self.geom, words: &*self.words }
+    }
+
+    /// Quantize and store one `hd`-wide row at position `u`. Per channel
+    /// group: a uniform `2^bits`-level grid over `[min, max]`, decomposed
+    /// into bit-planes (`cᵢ = step·2ⁱ`), then `c₀` refit by the mean
+    /// residual — max abs error ≤ one grid `step` before f16 rounding of
+    /// the coefficients. Writes are masked to exactly this row's bits.
+    pub fn store_row(&mut self, u: usize, x: &[f32]) {
+        let g = self.geom;
+        assert_eq!(x.len(), g.hd, "row width != head_dim");
+        assert!(u < g.cap, "store position beyond strip capacity");
+        let levels = ((1u32 << g.bits) - 1) as f32;
+        let pw = g.plane_words();
+        let cb = g.coeff_base();
+        for grp in 0..g.n_groups() {
+            let lo = grp * g.group;
+            let hi = (lo + g.group).min(g.hd);
+            let xs = &x[lo..hi];
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in xs {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let step = if mx > mn { (mx - mn) / levels } else { 0.0 };
+            let inv_step = if step > 0.0 { 1.0 / step } else { 0.0 };
+            // Codes + mean residual (the c₀ refit that makes the grid
+            // "variable": it centres the error instead of flooring it).
+            let mut resid_sum = 0.0f32;
+            let mut codes = [0u32; 64];
+            debug_assert!(xs.len() <= 64, "coefficient group wider than 64 channels");
+            for (j, &v) in xs.iter().enumerate() {
+                let q = ((v - mn) * inv_step).round().clamp(0.0, levels) as u32;
+                codes[j] = q;
+                resid_sum += v - (mn + step * q as f32);
+            }
+            let c0 = mn + resid_sum / xs.len() as f32;
+            set_half(&mut self.words[cb..], g.coeff_index(u, grp, 0), c0);
+            for i in 0..g.bits {
+                set_half(
+                    &mut self.words[cb..],
+                    g.coeff_index(u, grp, 1 + i),
+                    step * (1u32 << i) as f32,
+                );
+            }
+            // Masked plane writes: clear-then-set exactly this row's bits.
+            for i in 0..g.bits {
+                let plane = &mut self.words[i * pw..(i + 1) * pw];
+                for (j, &q) in codes[..xs.len()].iter().enumerate() {
+                    let bp = u * g.hd + lo + j;
+                    let mask = 1u32 << (bp % 32);
+                    if (q >> i) & 1 == 1 {
+                        plane[bp / 32] |= mask;
+                    } else {
+                        plane[bp / 32] &= !mask;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn f16_helpers_roundtrip_and_bound() {
+        for v in [0.0f32, 1.0, -2.5, 0.333, 65504.0, -65504.0, 1e-4] {
+            let r = f16_decode(f16_encode(v));
+            assert!((r - v).abs() <= v.abs() * 1e-3 + 1e-7, "{v} -> {r}");
+        }
+        assert!(f16_decode(f16_encode(1e6)).is_infinite());
+        assert!(f16_decode(f16_encode(f32::NAN)).is_nan());
+        // idempotent
+        let once = f16_decode(f16_encode(0.1));
+        assert_eq!(f16_decode(f16_encode(once)), once);
+    }
+
+    #[test]
+    fn geometry_word_counts() {
+        // hd=32: one word per (position, plane); coeffs 3 per pos → 2 words/pos… padded once.
+        let g = PackedGeom::new(4, 32, 2, 32);
+        assert_eq!(g.n_groups(), 1);
+        assert_eq!(g.plane_words(), 4);
+        assert_eq!(g.coeffs_per_pos(), 3);
+        assert_eq!(g.coeff_words(), 6);
+        assert_eq!(g.strip_words(), 2 * 4 + 6);
+        // hd=4: 8 positions share one plane word (the position-group).
+        let g = PackedGeom::new(16, 4, 3, 8);
+        assert_eq!(g.group, 4, "group clamps to hd");
+        assert_eq!(g.plane_words(), 2);
+        assert_eq!(g.strip_words(), 3 * 2 + (16 * 4).div_ceil(2));
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_grid_step() {
+        // Property: pack→unpack max abs error ≤ one grid step per group
+        // (plus f16 coefficient rounding) at bits ∈ {2, 3, 4}.
+        let mut rng = Rng::new(42);
+        for &bits in &[2usize, 3, 4] {
+            for &(hd, group) in &[(32usize, 32usize), (8, 8), (48, 16)] {
+                let geom = PackedGeom::new(6, hd, bits, group);
+                let mut words = vec![0u32; geom.strip_words()];
+                let mut strip = PackedStripMut::new(geom, &mut words);
+                let rows: Vec<Vec<f32>> = (0..6)
+                    .map(|_| (0..hd).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                for (u, row) in rows.iter().enumerate() {
+                    strip.store_row(u, row);
+                }
+                let view = strip.as_strip();
+                let levels = ((1usize << bits) - 1) as f32;
+                let mut out = vec![0.0f32; hd];
+                for (u, row) in rows.iter().enumerate() {
+                    view.dequant_row(u, &mut out);
+                    for grp in 0..geom.n_groups() {
+                        let lo = grp * geom.group;
+                        let hi = (lo + geom.group).min(hd);
+                        let mn = row[lo..hi].iter().cloned().fold(f32::INFINITY, f32::min);
+                        let mx = row[lo..hi].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let step = (mx - mn) / levels;
+                        let maxabs = mx.abs().max(mn.abs());
+                        for j in lo..hi {
+                            let err = (row[j] - out[j]).abs();
+                            assert!(
+                                err <= step * 1.001 + 2e-3 * (maxabs + 1.0),
+                                "bits {bits} hd {hd} u {u} j {j}: err {err} step {step}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_group_is_exact() {
+        let geom = PackedGeom::new(2, 8, 2, 8);
+        let mut words = vec![0u32; geom.strip_words()];
+        let mut strip = PackedStripMut::new(geom, &mut words);
+        strip.store_row(0, &[1.5f32; 8]);
+        let mut out = vec![0.0f32; 8];
+        strip.as_strip().dequant_row(0, &mut out);
+        for v in out {
+            assert_eq!(v, 1.5, "constant rows survive exactly (1.5 is f16-exact)");
+        }
+    }
+
+    #[test]
+    fn masked_store_leaves_neighbours_intact() {
+        // hd=4 → 8 positions per plane word: storing position 3 must not
+        // disturb already-stored position 2 sharing the same word.
+        let geom = PackedGeom::new(16, 4, 2, 4);
+        let mut words = vec![0xFFFF_FFFFu32; geom.strip_words()]; // dirty slab
+        let mut strip = PackedStripMut::new(geom, &mut words);
+        let a = [0.5f32, -1.0, 2.0, 0.0];
+        let b = [3.0f32, 3.0, -3.0, 1.0];
+        strip.store_row(2, &a);
+        let mut before = vec![0.0f32; 4];
+        strip.as_strip().dequant_row(2, &mut before);
+        strip.store_row(3, &b);
+        let mut after = vec![0.0f32; 4];
+        strip.as_strip().dequant_row(2, &mut after);
+        assert_eq!(before, after, "neighbour position changed by a masked store");
+    }
+
+    #[test]
+    fn prefix_spans_cover_exactly_the_prefix() {
+        let geom = PackedGeom::new(16, 4, 2, 4);
+        // pos 3 of hd=4: 12 bits → 1 word per plane; 3×3 coeffs → 5 words.
+        let spans = geom.prefix_spans(3);
+        assert_eq!(spans, vec![(0, 1), (geom.plane_words(), 1), (geom.coeff_base(), 5)]);
+        assert!(geom.prefix_spans(0).is_empty());
+        let full = geom.prefix_spans(16);
+        let covered: usize = full.iter().map(|&(_, n)| n).sum();
+        assert_eq!(covered, geom.strip_words(), "full prefix covers the whole strip");
+    }
+}

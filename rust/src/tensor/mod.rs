@@ -8,10 +8,13 @@
 //! f64 (conditioning-sensitive linear algebra). The f32 matmul uses
 //! register-tiled kernels over the K dimension (see [`matmul`]).
 
+pub mod kvpack;
 mod ops;
 
+pub use kvpack::{f16_decode, f16_encode, PackedGeom, PackedStrip, PackedStripMut};
 pub use ops::{
-    axpy, dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa, strip_axpys, strip_dots,
+    axpy, dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa, strip_axpys,
+    strip_axpys_packed, strip_dots, strip_dots_packed,
 };
 
 use std::fmt;

@@ -6,6 +6,7 @@
 //! instead it uses an i-k-j loop order with a 4-row unroll, which is the
 //! standard cache-friendly order for row-major data.
 
+use super::kvpack::PackedStrip;
 use super::{Mat, Matrix};
 
 /// `C = A @ B` (A: m×k, B: k×n).
@@ -189,6 +190,160 @@ pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f
     }
 }
 
+/// `Σ q[j]` over the set bits of a plane bit-span `[start, start + n)`
+/// (`q[j]` pairs with bit `start + j`) — the popcount-style partial dot
+/// of the fused-dequant score kernel.
+#[inline]
+fn fold_set_bits(plane: &[u32], start: usize, n: usize, q: &[f32]) -> f32 {
+    debug_assert!(q.len() >= n);
+    let mut acc = 0.0f32;
+    let mut j = 0;
+    while j < n {
+        let bp = start + j;
+        let off = bp % 32;
+        let take = (32 - off).min(n - j);
+        let mask = if take == 32 { u32::MAX } else { (1u32 << take) - 1 };
+        let mut m = (plane[bp / 32] >> off) & mask;
+        while m != 0 {
+            let t = m.trailing_zeros() as usize;
+            acc += q[j + t];
+            m &= m - 1;
+        }
+        j += take;
+    }
+    acc
+}
+
+/// `out[j] += add` over the set bits of a plane bit-span — the AV-side
+/// twin of [`fold_set_bits`].
+#[inline]
+fn scatter_set_bits(plane: &[u32], start: usize, n: usize, add: f32, out: &mut [f32]) {
+    debug_assert!(out.len() >= n);
+    let mut j = 0;
+    while j < n {
+        let bp = start + j;
+        let off = bp % 32;
+        let take = (32 - off).min(n - j);
+        let mask = if take == 32 { u32::MAX } else { (1u32 << take) - 1 };
+        let mut m = (plane[bp / 32] >> off) & mask;
+        while m != 0 {
+            let t = m.trailing_zeros() as usize;
+            out[j + t] += add;
+            m &= m - 1;
+        }
+        j += take;
+    }
+}
+
+/// Fused-dequant variant of [`strip_dots`] over **packed** bit-plane KV
+/// strips: for every live position `u < len` and batch lane `b`,
+///
+/// `scores[b*len + u] = scale * dot(qs[b], dequant(strips[b], u))`
+///
+/// evaluated without materializing the dequantized row — per channel
+/// group the bias term is `c₀ · Σ q` (group q-sums precomputed once per
+/// call) and each plane contributes `cᵢ ×` a popcount-style partial dot
+/// over its set bits. The position loop stays *outer* exactly like the
+/// f32 kernel, so lanes of one group are walked together and the f32
+/// path's token-identity guarantees are untouched (this kernel only
+/// runs when the arena stores packed strips).
+pub fn strip_dots_packed(
+    qs: &[&[f32]],
+    strips: &[PackedStrip],
+    len: usize,
+    scale: f32,
+    scores: &mut [f32],
+) {
+    let nb = qs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(scores.len(), nb * len);
+    let geom = strips[0].geom;
+    let (hd, bits, group, ng) = (geom.hd, geom.bits, geom.group, geom.n_groups());
+    // Per-(lane, group) activation sums — the c₀ bias partner, computed
+    // once and reused at every position. Stack-allocated in the common
+    // case so the packed score kernel stays as allocation-free as its
+    // f32 twin inside the decode hot loop (heap fallback only for huge
+    // batch × group-count products).
+    let mut qsums_stack = [0.0f32; 64];
+    let mut qsums_heap: Vec<f32>;
+    let qsums: &mut [f32] = if nb * ng <= qsums_stack.len() {
+        &mut qsums_stack[..nb * ng]
+    } else {
+        qsums_heap = vec![0.0f32; nb * ng];
+        &mut qsums_heap
+    };
+    for (b, q) in qs.iter().enumerate() {
+        debug_assert_eq!(q.len(), hd);
+        for g in 0..ng {
+            let lo = g * group;
+            let hi = (lo + group).min(hd);
+            qsums[b * ng + g] = q[lo..hi].iter().sum();
+        }
+    }
+    for u in 0..len {
+        for b in 0..nb {
+            let st = &strips[b];
+            debug_assert_eq!(st.geom, geom);
+            let mut s = 0.0f32;
+            for g in 0..ng {
+                let lo = g * group;
+                let hi = (lo + group).min(hd);
+                s += st.coeff(u, g, 0) * qsums[b * ng + g];
+                for i in 0..bits {
+                    let pd = fold_set_bits(st.plane(i), u * hd + lo, hi - lo, &qs[b][lo..hi]);
+                    s += st.coeff(u, g, 1 + i) * pd;
+                }
+            }
+            scores[b * len + u] = s * scale;
+        }
+    }
+}
+
+/// Fused-dequant variant of [`strip_axpys`] over packed V strips:
+///
+/// `outs[b] += Σ_u ws[b*len + u] · dequant(strips[b], u)`
+///
+/// — per group the bias adds `w·c₀` to every channel and each plane
+/// scatters `w·cᵢ` onto its set bits. Position-major walk and the same
+/// `< 1e-9` weight skip as the f32 kernel, so the packed single-session
+/// and batched paths accumulate identically to each other.
+pub fn strip_axpys_packed(ws: &[f32], strips: &[PackedStrip], len: usize, outs: &mut [&mut [f32]]) {
+    let nb = outs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(ws.len(), nb * len);
+    for u in 0..len {
+        for b in 0..nb {
+            let w = ws[b * len + u];
+            if w < 1e-9 {
+                continue;
+            }
+            let st = &strips[b];
+            let geom = st.geom;
+            let (hd, bits, group) = (geom.hd, geom.bits, geom.group);
+            let out = &mut *outs[b];
+            debug_assert_eq!(out.len(), hd);
+            for g in 0..geom.n_groups() {
+                let lo = g * group;
+                let hi = (lo + group).min(hd);
+                let base = w * st.coeff(u, g, 0);
+                for v in out[lo..hi].iter_mut() {
+                    *v += base;
+                }
+                for i in 0..bits {
+                    let add = w * st.coeff(u, g, 1 + i);
+                    scatter_set_bits(st.plane(i), u * hd + lo, hi - lo, add, &mut out[lo..hi]);
+                }
+            }
+        }
+    }
+}
+
 /// f64 matmul for conditioning-sensitive paths (Hessian ops).
 pub fn matmul_f64(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
     assert_eq!(a.cols(), b.rows());
@@ -354,6 +509,129 @@ mod tests {
     fn strip_kernels_empty_batch() {
         strip_dots(&[], &[], 8, 1.0, &mut []);
         strip_axpys(&[], &[], 8, &mut []);
+        strip_dots_packed(&[], &[], 4, 1.0, &mut []);
+        strip_axpys_packed(&[], &[], 4, &mut []);
+    }
+
+    /// Build `nb` packed strips of `len` random rows each; returns the
+    /// strips' backing words (the tests read back via `dequant_row`).
+    fn packed_fixture(
+        rng: &mut Rng,
+        nb: usize,
+        len: usize,
+        geom: crate::tensor::kvpack::PackedGeom,
+    ) -> Vec<Vec<u32>> {
+        use crate::tensor::kvpack::PackedStripMut;
+        let mut words = vec![vec![0u32; geom.strip_words()]; nb];
+        for w in words.iter_mut() {
+            let mut strip = PackedStripMut::new(geom, w);
+            for u in 0..len {
+                let row: Vec<f32> = (0..geom.hd).map(|_| rng.normal() as f32).collect();
+                strip.store_row(u, &row);
+            }
+        }
+        words
+    }
+
+    #[test]
+    fn strip_dots_packed_matches_dequant_reference() {
+        use crate::tensor::kvpack::{PackedGeom, PackedStrip};
+        let mut rng = Rng::new(8);
+        let geom = PackedGeom::new(10, 8, 2, 4);
+        let (nb, len) = (3usize, 7usize);
+        let words = packed_fixture(&mut rng, nb, 10, geom);
+        let strips: Vec<PackedStrip> =
+            words.iter().map(|w| PackedStrip::new(geom, w)).collect();
+        let qs_data: Vec<Vec<f32>> =
+            (0..nb).map(|_| (0..geom.hd).map(|_| rng.normal() as f32).collect()).collect();
+        let qs: Vec<&[f32]> = qs_data.iter().map(|v| v.as_slice()).collect();
+        let mut scores = vec![0.0f32; nb * len];
+        strip_dots_packed(&qs, &strips, len, 0.5, &mut scores);
+        let mut row = vec![0.0f32; geom.hd];
+        for b in 0..nb {
+            for u in 0..len {
+                strips[b].dequant_row(u, &mut row);
+                let want = dot(&qs_data[b], &row) * 0.5;
+                let got = scores[b * len + u];
+                assert!(
+                    (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "b {b} u {u}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strip_axpys_packed_matches_dequant_reference() {
+        use crate::tensor::kvpack::{PackedGeom, PackedStrip};
+        let mut rng = Rng::new(9);
+        let geom = PackedGeom::new(10, 8, 3, 8);
+        let (nb, len) = (2usize, 6usize);
+        let words = packed_fixture(&mut rng, nb, 10, geom);
+        let strips: Vec<PackedStrip> =
+            words.iter().map(|w| PackedStrip::new(geom, w)).collect();
+        let ws: Vec<f32> =
+            (0..nb * len).map(|i| if i % 3 == 0 { 0.0 } else { 0.05 + i as f32 * 0.01 }).collect();
+        let mut flat = vec![0.0f32; nb * geom.hd];
+        {
+            let mut outs: Vec<&mut [f32]> = flat.chunks_exact_mut(geom.hd).collect();
+            strip_axpys_packed(&ws, &strips, len, &mut outs);
+        }
+        let mut row = vec![0.0f32; geom.hd];
+        for b in 0..nb {
+            let mut want = vec![0.0f32; geom.hd];
+            for u in 0..len {
+                let w = ws[b * len + u];
+                if w < 1e-9 {
+                    continue;
+                }
+                strips[b].dequant_row(u, &mut row);
+                axpy(w, &row, &mut want);
+            }
+            for (j, (&got, &wv)) in flat[b * geom.hd..(b + 1) * geom.hd]
+                .iter()
+                .zip(&want)
+                .enumerate()
+            {
+                assert!((got - wv).abs() < 1e-4 * (1.0 + wv.abs()), "b {b} j {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_kernels_batched_match_single_lane() {
+        // The batched packed kernels must agree bit-for-bit with nb=1
+        // calls per lane — the packed analogue of the f32 token-identity
+        // guarantee (same walk order, same accumulators).
+        use crate::tensor::kvpack::{PackedGeom, PackedStrip};
+        let mut rng = Rng::new(10);
+        let geom = PackedGeom::new(8, 8, 2, 8);
+        let (nb, len) = (3usize, 5usize);
+        let words = packed_fixture(&mut rng, nb, 8, geom);
+        let strips: Vec<PackedStrip> =
+            words.iter().map(|w| PackedStrip::new(geom, w)).collect();
+        let qs_data: Vec<Vec<f32>> =
+            (0..nb).map(|_| (0..geom.hd).map(|_| rng.normal() as f32).collect()).collect();
+        let qs: Vec<&[f32]> = qs_data.iter().map(|v| v.as_slice()).collect();
+        let mut scores = vec![0.0f32; nb * len];
+        strip_dots_packed(&qs, &strips, len, 0.25, &mut scores);
+        let ws: Vec<f32> = (0..nb * len).map(|i| 0.01 + (i % 7) as f32 * 0.03).collect();
+        let mut flat = vec![0.0f32; nb * geom.hd];
+        {
+            let mut outs: Vec<&mut [f32]> = flat.chunks_exact_mut(geom.hd).collect();
+            strip_axpys_packed(&ws, &strips, len, &mut outs);
+        }
+        for b in 0..nb {
+            let mut solo_scores = vec![0.0f32; len];
+            strip_dots_packed(&[qs_data[b].as_slice()], &[strips[b]], len, 0.25, &mut solo_scores);
+            assert_eq!(&scores[b * len..(b + 1) * len], solo_scores.as_slice(), "b {b}");
+            let mut solo_out = vec![0.0f32; geom.hd];
+            {
+                let mut outs: Vec<&mut [f32]> = vec![solo_out.as_mut_slice()];
+                strip_axpys_packed(&ws[b * len..(b + 1) * len], &[strips[b]], len, &mut outs);
+            }
+            assert_eq!(&flat[b * geom.hd..(b + 1) * geom.hd], solo_out.as_slice(), "b {b}");
+        }
     }
 
     #[test]

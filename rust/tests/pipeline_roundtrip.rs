@@ -3,6 +3,7 @@
 
 use bpdq::model::pipeline::quantize_model;
 use bpdq::model::{synthetic_model, ModelConfig};
+use bpdq::serving::KvFormat;
 use bpdq::quant::{BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig};
 use bpdq::serving::{EngineKind, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
@@ -18,6 +19,7 @@ fn model() -> bpdq::model::Model {
             n_kv_heads: 2,
             d_ff: 48,
             max_seq: 48,
+            kv_format: KvFormat::F32,
         },
         0xAB,
     )

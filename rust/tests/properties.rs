@@ -10,6 +10,7 @@ use bpdq::quant::gptq::invert_perm;
 use bpdq::quant::packing::PackedPlane;
 use bpdq::quant::{quantize_linear, HessianState, QuantMethod, UniformConfig};
 use bpdq::rng::Rng;
+use bpdq::serving::KvFormat;
 use bpdq::tensor::{matmul_f64, Matrix};
 
 fn rand_wx(rng: &mut Rng, d_out: usize, d_in: usize, n: usize) -> (Matrix, Matrix) {
@@ -239,6 +240,7 @@ fn prop_arena_fork_and_slot_reuse_identical() {
                 n_kv_heads: nkv,
                 d_ff: 16 + rng.below_usize(16),
                 max_seq: 32,
+                kv_format: KvFormat::F32,
             };
             let m = synthetic_model(&cfg, rng.next_u64());
             let len = 2 + rng.below_usize(6);
@@ -299,6 +301,7 @@ fn prop_decode_matches_forward() {
             n_kv_heads: nkv,
             d_ff: 16 + rng.below_usize(16),
             max_seq: 32,
+            kv_format: KvFormat::F32,
         };
         let m = synthetic_model(&cfg, rng.next_u64());
         let len = 2 + rng.below_usize(8);
@@ -316,4 +319,123 @@ fn prop_decode_matches_forward() {
         }
         Ok(())
     });
+}
+
+/// The KV bit-plane encoder's grid-step guarantee, over random strips:
+/// pack -> unpack of any stored row errs by at most one grid step per
+/// coefficient group (plus f16 coefficient rounding), at every
+/// supported bit-width and for ragged channel groups.
+#[test]
+fn prop_kv_bitplane_roundtrip_bounded_by_grid_step() {
+    use bpdq::tensor::{PackedGeom, PackedStripMut};
+    run_prop(
+        "kv_bitplane_roundtrip_bounded_by_grid_step",
+        Config { cases: 12, ..Default::default() },
+        |rng| {
+            let bits = [2usize, 3, 4][rng.below_usize(3)];
+            let hd = [4usize, 8, 32, 48][rng.below_usize(4)];
+            let group = [4usize, 8, 16, 32][rng.below_usize(4)];
+            let cap = 2 + rng.below_usize(14);
+            let len = 1 + rng.below_usize(cap);
+            let geom = PackedGeom::new(cap, hd, bits, group);
+            let mut words = vec![0u32; geom.strip_words()];
+            let mut strip = PackedStripMut::new(geom, &mut words);
+            let rows: Vec<Vec<f32>> = (0..len)
+                .map(|_| (0..hd).map(|_| rng.normal() as f32 * 2.0).collect())
+                .collect();
+            for (u, row) in rows.iter().enumerate() {
+                strip.store_row(u, row);
+            }
+            let view = strip.as_strip();
+            let levels = ((1usize << bits) - 1) as f32;
+            let mut out = vec![0.0f32; hd];
+            for (u, row) in rows.iter().enumerate() {
+                view.dequant_row(u, &mut out);
+                for grp in 0..geom.n_groups() {
+                    let lo = grp * geom.group;
+                    let hi = (lo + geom.group).min(hd);
+                    let mn = row[lo..hi].iter().cloned().fold(f32::INFINITY, f32::min);
+                    let mx = row[lo..hi].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let step = (mx - mn) / levels;
+                    let maxabs = mx.abs().max(mn.abs());
+                    for j in lo..hi {
+                        let err = (row[j] - out[j]).abs();
+                        if err > step * 1.001 + 2e-3 * (maxabs + 1.0) {
+                            return Err(format!(
+                                "bits {bits} hd {hd} g {group} u {u} j {j}: err {err} > step {step}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Packed-KV arena decode invariants over random tiny models: forks
+/// continue bit-identically to their parent (bytewise prefix copy + a
+/// deterministic store-time encoder) and dirty-slot reuse replays a
+/// decode exactly — the quantized-KV twin of
+/// `prop_arena_fork_and_slot_reuse_identical`.
+#[test]
+fn prop_packed_arena_fork_and_slot_reuse_identical() {
+    run_prop(
+        "packed_arena_fork_and_slot_reuse_identical",
+        Config { cases: 4, ..Default::default() },
+        |rng| {
+            let nh = 1 << rng.below_usize(3);
+            let divisors: Vec<usize> = (1..=nh).filter(|d| nh % d == 0).collect();
+            let nkv = divisors[rng.below_usize(divisors.len())];
+            let bits = [2usize, 3, 4][rng.below_usize(3)];
+            let cfg = ModelConfig {
+                vocab_size: 10 + rng.below_usize(20),
+                d_model: nh * 8,
+                n_layers: 1 + rng.below_usize(2),
+                n_heads: nh,
+                n_kv_heads: nkv,
+                d_ff: 16 + rng.below_usize(16),
+                max_seq: 32,
+                kv_format: KvFormat::bit_plane(bits),
+            };
+            let m = synthetic_model(&cfg, rng.next_u64());
+            let len = 2 + rng.below_usize(6);
+            let toks: Vec<u32> =
+                (0..len).map(|_| rng.below(cfg.vocab_size as u64) as u32).collect();
+            let cont = rng.below(cfg.vocab_size as u64) as u32;
+
+            let mut st = m.decode_state();
+            let mut last = Vec::new();
+            for &t in &toks {
+                last = st.step(&m, t);
+            }
+            if last.iter().any(|v| !v.is_finite()) {
+                return Err("packed decode produced non-finite logits".into());
+            }
+            let mut f = st.fork();
+            let a = f.step(&m, cont);
+            let b = st.step(&m, cont);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if (x - y).abs() > 1e-6 {
+                    return Err(format!("packed fork diverged at vocab {i}: {x} vs {y}"));
+                }
+            }
+            drop(f);
+            drop(st); // both slots back to the free list, dirty
+
+            let mut st2 = m.decode_state();
+            let mut last2 = Vec::new();
+            for &t in &toks {
+                last2 = st2.step(&m, t);
+            }
+            for (i, (x, y)) in last.iter().zip(&last2).enumerate() {
+                if (x - y).abs() > 1e-6 {
+                    return Err(format!(
+                        "dirty packed-slot replay diverged at vocab {i}: {x} vs {y}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }

@@ -1,0 +1,602 @@
+//! Hand-rolled, dependency-free Rust lexer for the `lint` pass.
+//!
+//! This is deliberately *not* a full parser: the lint rules only need a
+//! faithful answer to "is this byte code, comment, or literal?", plus
+//! item-level structure (function boundaries, `unsafe` spans). The
+//! lexer produces a **blanked** copy of the source — same byte length,
+//! same newlines, but with every comment and every string/char-literal
+//! *content* replaced by spaces — so downstream pattern scans can never
+//! false-positive on text inside a doc comment or a format string.
+//!
+//! Handled correctly (and covered by self-tests below):
+//! * line comments `//`, doc comments `///` / `//!`
+//! * nested block comments `/* /* */ */`
+//! * string literals with escapes (`"a\"b"`), byte strings `b"…"`
+//! * raw strings `r"…"`, `r#"…"#` (any `#` count), `br#"…"#`
+//! * char literals (`'x'`, `'\''`, `'\u{1F600}'`, `b'x'`) vs lifetimes
+//!   (`'a`, `'static`, `'_`)
+//! * function items: name, signature offset, brace-matched body span
+//!   (a `;` inside `-> [u8; 4]` does not terminate the signature)
+//! * `unsafe` blocks / `unsafe impl` sites with brace-matched spans
+
+/// One comment, line-accurate. `text` is everything after the `//`
+/// (so doc comments keep their leading `/` or `!`), or the interior of
+/// a `/* … */` block.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line of the comment's first character.
+    pub line: usize,
+    pub text: String,
+    /// True for `/* … */` comments (which may span lines).
+    pub block: bool,
+}
+
+/// A `fn` item found in the blanked source.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Byte offset of the `fn` keyword.
+    pub sig_start: usize,
+    /// 1-based line of the `fn` keyword.
+    pub sig_line: usize,
+    /// Byte span `[start, end]` of the body braces (inclusive of both
+    /// braces), or `None` for a bodiless trait-method signature.
+    pub body: Option<(usize, usize)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnsafeKind {
+    /// `unsafe { … }` expression/block.
+    Block,
+    /// `unsafe impl … for … { … }`.
+    Impl,
+    /// `unsafe fn` / `unsafe trait` / anything else keyword-adjacent.
+    Other,
+}
+
+/// One occurrence of the `unsafe` keyword in real code.
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub kind: UnsafeKind,
+    /// Byte offset of the `unsafe` keyword.
+    pub at: usize,
+    /// 1-based line of the keyword.
+    pub line: usize,
+    /// Brace-matched span of the block/impl body, when present.
+    pub span: Option<(usize, usize)>,
+}
+
+/// Lexed view of one source file.
+pub struct SourceModel {
+    pub path: String,
+    pub src: String,
+    /// Same length as `src`; comments and literal contents are spaces.
+    pub blanked: String,
+    pub comments: Vec<Comment>,
+    pub fns: Vec<FnItem>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    line_starts: Vec<usize>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Index of the `}` matching the `{` at `open` (depth-counted), or the
+/// last byte if unbalanced.
+fn match_brace(b: &[u8], open: usize) -> usize {
+    debug_assert!(b[open] == b'{');
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len().saturating_sub(1)
+}
+
+impl SourceModel {
+    pub fn parse(path: &str, src: &str) -> SourceModel {
+        let (blanked, comments) = blank(src);
+        let line_starts = {
+            let mut ls = vec![0usize];
+            for (i, byte) in src.bytes().enumerate() {
+                if byte == b'\n' {
+                    ls.push(i + 1);
+                }
+            }
+            ls
+        };
+        let mut m = SourceModel {
+            path: path.to_string(),
+            src: src.to_string(),
+            blanked,
+            comments,
+            fns: Vec::new(),
+            unsafe_sites: Vec::new(),
+            line_starts,
+        };
+        m.fns = scan_fns(&m.blanked, &m);
+        m.unsafe_sites = scan_unsafe(&m.blanked, &m);
+        m
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, byte: usize) -> usize {
+        match self.line_starts.binary_search(&byte) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Byte offset where `line` (1-based) starts.
+    pub fn line_start(&self, line: usize) -> usize {
+        self.line_starts[(line - 1).min(self.line_starts.len() - 1)]
+    }
+
+    /// Original source text of `line` (1-based), without the newline.
+    pub fn line_text(&self, line: usize) -> &str {
+        let s = self.line_start(line);
+        let e = self
+            .line_starts
+            .get(line)
+            .map(|&x| x.saturating_sub(1))
+            .unwrap_or(self.src.len());
+        &self.src[s..e.max(s)]
+    }
+
+    /// Blanked text of `line` (1-based) — comments already spaces.
+    pub fn blanked_line(&self, line: usize) -> &str {
+        let s = self.line_start(line);
+        let e = self
+            .line_starts
+            .get(line)
+            .map(|&x| x.saturating_sub(1))
+            .unwrap_or(self.blanked.len());
+        &self.blanked[s..e.max(s)]
+    }
+
+    /// The line comment (or block comment) starting on `line`, if any.
+    pub fn comment_on(&self, line: usize) -> Option<&Comment> {
+        self.comments.iter().find(|c| c.line == line)
+    }
+
+    /// All `//!` inner-doc text, joined — the module doc header.
+    pub fn module_doc(&self) -> String {
+        let mut out = String::new();
+        for c in &self.comments {
+            if !c.block && c.text.starts_with('!') {
+                out.push_str(&c.text[1..]);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Innermost fn whose body span contains `byte`.
+    pub fn enclosing_fn(&self, byte: usize) -> Option<&FnItem> {
+        self.fns
+            .iter()
+            .filter(|f| matches!(f.body, Some((s, e)) if s <= byte && byte <= e))
+            .max_by_key(|f| f.body.unwrap().0)
+    }
+
+    /// True if `byte` falls inside any `unsafe { … }` block span.
+    pub fn in_unsafe_block(&self, byte: usize) -> bool {
+        self.unsafe_sites
+            .iter()
+            .any(|u| matches!(u.span, Some((s, e)) if u.kind == UnsafeKind::Block && s <= byte && byte <= e))
+    }
+}
+
+/// Produce the blanked copy and the comment list.
+fn blank(src: &str) -> (String, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: src[start..j].to_string(), block: false });
+            for slot in out.iter_mut().take(j).skip(i) {
+                *slot = b' ';
+            }
+            i = j;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let inner_end = if j >= i + 4 { j - 2 } else { i + 2 };
+            comments.push(Comment {
+                line: start_line,
+                text: src[i + 2..inner_end].to_string(),
+                block: true,
+            });
+            for k in i..j {
+                if out[k] != b'\n' {
+                    out[k] = b' ';
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw string (r"…", r#"…"#, br#"…"#).
+        if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i + 1;
+            if c == b'b' && j < n && b[j] == b'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw_prefix = j > i + 1 || c == b'r';
+            if is_raw_prefix && j < n && b[j] == b'"' {
+                // Scan for `"` followed by `hashes` hash marks.
+                let mut k = j + 1;
+                'raw: while k < n {
+                    if b[k] == b'\n' {
+                        line += 1;
+                        k += 1;
+                        continue;
+                    }
+                    if b[k] == b'"' {
+                        let mut h = 0usize;
+                        while h < hashes && k + 1 + h < n && b[k + 1 + h] == b'#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            k += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    out[k] = b' ';
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+            // Not a raw string — fall through to the default advance so
+            // identifiers starting with r/b are walked normally.
+        }
+        // Plain or byte string literal with escapes.
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n && b[j] != b'"' {
+                if b[j] == b'\\' && j + 1 < n {
+                    out[j] = b' ';
+                    j += 1; // the escaped byte
+                    if b[j] == b'\n' {
+                        line += 1; // line-continuation escape
+                    } else {
+                        out[j] = b' ';
+                    }
+                    j += 1;
+                    continue;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                } else {
+                    out[j] = b' ';
+                }
+                j += 1;
+            }
+            i = if j < n { j + 1 } else { j };
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: '\n', '\'', '\u{…}'.
+                let mut j = i + 2;
+                if j < n && b[j] == b'u' {
+                    j += 1;
+                    if j < n && b[j] == b'{' {
+                        while j < n && b[j] != b'}' {
+                            j += 1;
+                        }
+                        j += 1;
+                    }
+                } else {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    for slot in out.iter_mut().take(j).skip(i + 1) {
+                        *slot = b' ';
+                    }
+                    i = j + 1;
+                    continue;
+                }
+                i += 1;
+                continue;
+            }
+            // 'X' where X is one (possibly multi-byte) char and the
+            // next char is the closing quote → char literal; otherwise
+            // it is a lifetime and we leave it alone.
+            if let Some(ch) = src[i + 1..].chars().next() {
+                let w = ch.len_utf8();
+                if ch != '\'' && i + 1 + w < n && b[i + 1 + w] == b'\'' {
+                    for slot in out.iter_mut().take(i + 1 + w).skip(i + 1) {
+                        *slot = b' ';
+                    }
+                    i = i + 2 + w;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    // out was built from valid UTF-8 and every replacement is ASCII
+    // space applied to whole multi-byte sequences, so this cannot fail.
+    (String::from_utf8(out).expect("blanked source is valid UTF-8"), comments)
+}
+
+/// Find every `fn` item in the blanked source. Scanning resumes just
+/// past each opening brace, so nested fns are recorded too (innermost
+/// resolution happens in [`SourceModel::enclosing_fn`]).
+fn scan_fns(blanked: &str, m: &SourceModel) -> Vec<FnItem> {
+    let b = blanked.as_bytes();
+    let n = b.len();
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let word_ok = b[i] == b'f'
+            && b[i + 1] == b'n'
+            && (i == 0 || !is_ident(b[i - 1]))
+            && (i + 2 == n || !is_ident(b[i + 2]));
+        if !word_ok {
+            i += 1;
+            continue;
+        }
+        let sig_start = i;
+        let mut j = i + 2;
+        while j < n && (b[j] as char).is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < n && is_ident(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            // `fn(` — a fn-pointer type, not an item.
+            i += 2;
+            continue;
+        }
+        let name = blanked[name_start..j].to_string();
+        // Scan the signature for the body `{` or a terminating `;`,
+        // tracking paren/bracket depth so `-> [u8; 4]` and default
+        // const-generic args never end the signature early.
+        let mut depth = 0i32;
+        let mut k = j;
+        let mut body = None;
+        while k < n {
+            match b[k] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b';' if depth == 0 => break,
+                b'{' if depth == 0 => {
+                    body = Some((k, match_brace(b, k)));
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        fns.push(FnItem { name, sig_start, sig_line: m.line_of(sig_start), body });
+        // Resume just inside the body (nested items get their own
+        // entries) or after the signature terminator.
+        i = match body {
+            Some((open, _)) => open + 1,
+            None => k.max(j),
+        };
+    }
+    fns
+}
+
+/// Find every `unsafe` keyword in the blanked source.
+fn scan_unsafe(blanked: &str, m: &SourceModel) -> Vec<UnsafeSite> {
+    let b = blanked.as_bytes();
+    let n = b.len();
+    let pat = b"unsafe";
+    let mut sites = Vec::new();
+    let mut i = 0usize;
+    while i + pat.len() <= n {
+        if &b[i..i + pat.len()] != pat
+            || (i > 0 && is_ident(b[i - 1]))
+            || (i + pat.len() < n && is_ident(b[i + pat.len()]))
+        {
+            i += 1;
+            continue;
+        }
+        let mut j = i + pat.len();
+        while j < n && (b[j] as char).is_ascii_whitespace() {
+            j += 1;
+        }
+        let (kind, span) = if j < n && b[j] == b'{' {
+            (UnsafeKind::Block, Some((j, match_brace(b, j))))
+        } else if blanked[j..].starts_with("impl") {
+            // The impl body braces, for completeness.
+            let open = blanked[j..].find('{').map(|o| j + o);
+            (UnsafeKind::Impl, open.map(|o| (o, match_brace(b, o))))
+        } else {
+            (UnsafeKind::Other, None)
+        };
+        sites.push(UnsafeSite { kind, at: i, line: m.line_of(i), span });
+        i += pat.len();
+    }
+    sites
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_are_blanked_and_recorded() {
+        let m = SourceModel::parse("t.rs", "let x = 1; // unsafe trailing\nlet y = 2;\n");
+        assert!(!m.blanked.contains("unsafe"));
+        assert_eq!(m.comments.len(), 1);
+        assert_eq!(m.comments[0].line, 1);
+        assert!(m.comments[0].text.contains("unsafe trailing"));
+        assert!(m.unsafe_sites.is_empty());
+        assert_eq!(m.blanked.len(), m.src.len());
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn after() {}\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert!(!m.blanked.contains("outer"));
+        assert!(!m.blanked.contains("still"));
+        assert_eq!(m.fns.len(), 1);
+        assert_eq!(m.fns[0].name, "after");
+        assert!(m.comments[0].block);
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        let src = "let s = r#\"unsafe { fn fake() {} } \"# ;\nlet t = r\"also unsafe\";\nlet u = br##\"double \"# hash\"##;\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert!(!m.blanked.contains("unsafe"));
+        assert!(!m.blanked.contains("fake"));
+        assert!(!m.blanked.contains("hash"));
+        assert!(m.fns.is_empty());
+        assert!(m.unsafe_sites.is_empty());
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_the_literal() {
+        let src = "let s = \"a\\\" // not a comment\"; let live = 1;\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert!(!m.blanked.contains("not a comment"));
+        assert!(m.blanked.contains("let live"));
+        assert!(m.comments.is_empty());
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let q = '\\''; let b = b'{'; let u = '\\u{41}'; 'x' }\n";
+        let m = SourceModel::parse("t.rs", src);
+        // The '{' char literal must not look like an open brace: the fn
+        // body must still brace-match to the real closing brace.
+        assert_eq!(m.fns.len(), 1);
+        let (s, e) = m.fns[0].body.unwrap();
+        assert_eq!(&m.src[s..=s], "{");
+        assert_eq!(&m.src[e..=e], "}");
+        assert_eq!(e, src.trim_end().len() - 1);
+        // Lifetimes survive blanking (harmless), literal contents do not.
+        assert!(m.blanked.contains("'a"));
+        assert!(!m.blanked.contains("u{41}"));
+    }
+
+    #[test]
+    fn fn_signature_scan_ignores_array_semicolons() {
+        let src = "fn id(x: [u8; 4]) -> [u8; 4] { x }\nfn trait_sig(y: usize) -> [u8; 2];\nfn last() {}\n";
+        let m = SourceModel::parse("t.rs", src);
+        let names: Vec<&str> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["id", "trait_sig", "last"]);
+        assert!(m.fns[0].body.is_some());
+        assert!(m.fns[1].body.is_none());
+        assert!(m.fns[2].body.is_some());
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_items() {
+        let src = "type Hook = fn(usize) -> usize;\nfn real(h: fn(usize) -> usize) -> usize { h(1) }\n";
+        let m = SourceModel::parse("t.rs", src);
+        let names: Vec<&str> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["real"]);
+    }
+
+    #[test]
+    fn nested_fns_resolve_innermost() {
+        let src = "fn outer() {\n    fn inner(v: usize) -> usize { v + 1 }\n    inner(2);\n}\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert_eq!(m.fns.len(), 2);
+        let at = src.find("v + 1").unwrap();
+        assert_eq!(m.enclosing_fn(at).unwrap().name, "inner");
+        let at2 = src.find("inner(2)").unwrap();
+        assert_eq!(m.enclosing_fn(at2).unwrap().name, "outer");
+    }
+
+    #[test]
+    fn unsafe_sites_and_spans() {
+        let src = "unsafe impl Send for T {}\nfn f(p: *const f32) -> f32 {\n    unsafe { *p.add(1) }\n}\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert_eq!(m.unsafe_sites.len(), 2);
+        assert_eq!(m.unsafe_sites[0].kind, UnsafeKind::Impl);
+        assert_eq!(m.unsafe_sites[0].line, 1);
+        assert_eq!(m.unsafe_sites[1].kind, UnsafeKind::Block);
+        assert_eq!(m.unsafe_sites[1].line, 3);
+        let at = src.find(".add(").unwrap();
+        assert!(m.in_unsafe_block(at));
+        assert!(!m.in_unsafe_block(src.find("Send").unwrap()));
+    }
+
+    #[test]
+    fn unsafe_word_boundaries() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\nlet not_unsafe_here = 1;\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert!(m.unsafe_sites.is_empty());
+    }
+
+    #[test]
+    fn module_doc_collects_inner_doc_lines() {
+        let src = "//! Top docs.\n//! aliasing: one handle per slot.\nfn f() {}\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert!(m.module_doc().contains("aliasing: one handle"));
+    }
+
+    #[test]
+    fn line_of_and_line_text() {
+        let src = "alpha\nbeta\ngamma\n";
+        let m = SourceModel::parse("t.rs", src);
+        assert_eq!(m.line_of(0), 1);
+        assert_eq!(m.line_of(6), 2);
+        assert_eq!(m.line_text(2), "beta");
+        assert_eq!(m.line_text(3), "gamma");
+    }
+}

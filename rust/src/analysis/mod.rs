@@ -1,0 +1,262 @@
+//! Project-native static analysis — the `bpdq lint` subcommand.
+//!
+//! The container this crate grows in has no rustc/clippy/miri, so the
+//! invariants the serving stack's performance rests on (alloc-free
+//! decode kernels, lock-free sweep loop, disciplined `unsafe` strip
+//! carving) are enforced by a self-contained pass in the crate itself —
+//! the same vendoring-free philosophy as [`crate::proptest_lite`].
+//!
+//! * [`lexer`] — hand-rolled Rust lexer: a "blanked" source view
+//!   (comments + literal contents → spaces), fn items with brace-matched
+//!   body spans, `unsafe` sites.
+//! * [`rules`] — the five rules L1–L5 and the `// lint: hot` /
+//!   `// lint: sweep` marker contract.
+//! * this module — the plain-text allowlist (`rust/lint.toml`) so every
+//!   intentional exception is explicit, justified, and reviewed, plus
+//!   the source-tree walk the CLI drives.
+//!
+//! Allowlist format, parsed by hand (no toml dep):
+//!
+//! ```text
+//! # comment lines and blanks are skipped
+//! L2 tensor/ops.rs strip_dots_packed   # cold heap fallback above 64 groups
+//! L3 lut/mod.rs *                      # entry asserts guard silent corruption
+//! ```
+//!
+//! Three whitespace-separated fields — rule ID, path *suffix*, fn name
+//! (`*` matches any, and module-scope findings) — then a mandatory
+//! `# reason`. An entry suppresses a finding when the rule matches, the
+//! finding's path ends with the path field, and the fn matches. Unused
+//! entries are reported as warnings so the file cannot rot.
+
+pub mod lexer;
+pub mod rules;
+
+pub use lexer::SourceModel;
+pub use rules::{lint_source, Finding, Rule, REGISTRY};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One parsed allowlist entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    /// Path suffix, matched against `Finding::path` with `ends_with`.
+    pub path: String,
+    /// Fn name, or `*` for any (including module scope `-`).
+    pub func: String,
+    pub reason: String,
+    /// 1-based line in the allowlist file, for diagnostics.
+    pub line: usize,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule
+            && f.path.ends_with(&self.path)
+            && (self.func == "*" || self.func == f.func)
+    }
+}
+
+/// Parse the plain-text allowlist. Every entry must carry a `# reason`.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let known: Vec<&str> = REGISTRY.iter().map(|r| r.id).collect();
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (spec, reason) = match line.split_once('#') {
+            Some((s, r)) => (s.trim(), r.trim()),
+            None => {
+                return Err(format!(
+                    "allowlist line {line_no}: entry without a `# reason` justification"
+                ))
+            }
+        };
+        if reason.is_empty() {
+            return Err(format!("allowlist line {line_no}: empty `# reason`"));
+        }
+        let mut parts = spec.split_whitespace();
+        let (rule, path, func) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(r), Some(p), Some(f), None) => (r, p, f),
+            _ => {
+                return Err(format!(
+                    "allowlist line {line_no}: expected `RULE path-suffix fn  # reason`, got `{line}`"
+                ))
+            }
+        };
+        if !known.contains(&rule) {
+            return Err(format!(
+                "allowlist line {line_no}: unknown rule `{rule}` (known: {})",
+                known.join(", ")
+            ));
+        }
+        out.push(AllowEntry {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            func: func.to_string(),
+            reason: reason.to_string(),
+            line: line_no,
+        });
+    }
+    Ok(out)
+}
+
+/// Split findings into (kept, suppressed); the bool vec marks which
+/// allowlist entries matched at least one finding.
+pub fn apply_allowlist(
+    findings: Vec<Finding>,
+    entries: &[AllowEntry],
+) -> (Vec<Finding>, Vec<Finding>, Vec<bool>) {
+    let mut used = vec![false; entries.len()];
+    let mut kept = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in findings {
+        match entries.iter().position(|e| e.matches(&f)) {
+            Some(i) => {
+                used[i] = true;
+                suppressed.push(f);
+            }
+            None => kept.push(f),
+        }
+    }
+    (kept, suppressed, used)
+}
+
+/// Recursively collect every `.rs` file under `root`, sorted for
+/// deterministic reports.
+pub fn walk_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        for entry in fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root`; findings are pre-allowlist.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for path in walk_rs_files(root)? {
+        let src = fs::read_to_string(&path)?;
+        let label = path.to_string_lossy().to_string();
+        findings.extend(lint_source(&label, &src));
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, path: &str, func: &str) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line: 1,
+            func: func.to_string(),
+            msg: String::new(),
+            excerpt: String::new(),
+        }
+    }
+
+    #[test]
+    fn allowlist_parses_entries_comments_and_blanks() {
+        let text = "# header comment\n\nL2 tensor/ops.rs strip_dots_packed  # cold fallback\nL3 lut/mod.rs *  # entry asserts\n";
+        let entries = parse_allowlist(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].rule, "L2");
+        assert_eq!(entries[0].func, "strip_dots_packed");
+        assert_eq!(entries[0].reason, "cold fallback");
+        assert_eq!(entries[1].func, "*");
+        assert_eq!(entries[1].line, 4);
+    }
+
+    #[test]
+    fn allowlist_rejects_missing_or_empty_reason() {
+        assert!(parse_allowlist("L2 a.rs f\n").is_err());
+        assert!(parse_allowlist("L2 a.rs f #   \n").is_err());
+    }
+
+    #[test]
+    fn allowlist_rejects_unknown_rule_and_bad_arity() {
+        assert!(parse_allowlist("L9 a.rs f  # nope\n").is_err());
+        assert!(parse_allowlist("L2 a.rs  # missing fn field\n").is_err());
+        assert!(parse_allowlist("L2 a.rs f extra  # too many\n").is_err());
+    }
+
+    #[test]
+    fn apply_allowlist_matches_suffix_and_wildcard() {
+        let entries = parse_allowlist(
+            "L2 tensor/ops.rs strip_dots_packed  # cold fallback\nL3 lut/mod.rs *  # asserts\n",
+        )
+        .unwrap();
+        let findings = vec![
+            finding("L2", "rust/src/tensor/ops.rs", "strip_dots_packed"),
+            finding("L2", "rust/src/tensor/ops.rs", "other_fn"),
+            finding("L3", "rust/src/lut/mod.rs", "anything"),
+        ];
+        let (kept, suppressed, used) = apply_allowlist(findings, &entries);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].func, "other_fn");
+        assert_eq!(suppressed.len(), 2);
+        assert_eq!(used, vec![true, true]);
+    }
+
+    #[test]
+    fn apply_allowlist_reports_unused_entries() {
+        let entries = parse_allowlist("L4 nowhere.rs *  # stale\n").unwrap();
+        let (kept, suppressed, used) = apply_allowlist(vec![], &entries);
+        assert!(kept.is_empty() && suppressed.is_empty());
+        assert_eq!(used, vec![false]);
+    }
+
+    #[test]
+    fn rule_must_match_exactly() {
+        let entries = parse_allowlist("L2 ops.rs f  # reason\n").unwrap();
+        let (kept, _, _) = apply_allowlist(vec![finding("L3", "x/ops.rs", "f")], &entries);
+        assert_eq!(kept.len(), 1);
+    }
+
+    /// The crate's own tree must lint clean modulo the checked-in
+    /// allowlist — the same gate `bpdq lint` and the CI lint job
+    /// enforce, run under tier-1 so a hot-path or SAFETY regression
+    /// fails `cargo test` before it ever reaches CI.
+    #[test]
+    fn own_source_tree_is_lint_clean() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_tree(&manifest.join("src")).expect("walk crate sources");
+        let text = fs::read_to_string(manifest.join("lint.toml")).expect("read rust/lint.toml");
+        let entries = parse_allowlist(&text).expect("allowlist parses");
+        let (kept, _suppressed, used) = apply_allowlist(findings, &entries);
+        assert!(
+            kept.is_empty(),
+            "lint violations in the tree:\n{}",
+            kept.iter()
+                .map(|f| format!("{}:{}: [{}] ({}) {}", f.path, f.line, f.rule, f.func, f.msg))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        for (e, u) in entries.iter().zip(&used) {
+            assert!(
+                *u,
+                "unused allowlist entry at lint.toml:{} ({} {} {})",
+                e.line, e.rule, e.path, e.func
+            );
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! The lint-rule registry: five project-native invariants, machine-checked.
+//!
+//! | Rule | Invariant |
+//! |------|-----------|
+//! | `L1` | every `unsafe` block / `unsafe impl` is preceded by a `// SAFETY:` comment |
+//! | `L2` | no heap allocation in functions marked `// lint: hot` |
+//! | `L3` | no `.unwrap()` / `.expect(` / `panic!` / non-debug asserts in hot- or sweep-marked functions |
+//! | `L4` | no `.lock()` / `Mutex` / `RwLock` in hot- or sweep-marked functions |
+//! | `L5` | every `from_raw_parts` / pointer `.add(` sits inside an `unsafe` block, in a file with an `//! aliasing:` protocol header |
+//!
+//! Markers are plain comments attached to the **next** `fn` item:
+//! `// lint: hot` opts a function into L2+L3+L4 (the per-token decode
+//! path: zero allocation, zero panics, zero locks); `// lint: sweep`
+//! opts into L3+L4 only (the scheduler sweep loop may size buffers but
+//! must never panic or take a shared lock per iteration).
+//!
+//! The analysis is textual and per-function — it does not chase calls,
+//! so a hot function calling an allocating helper is not caught unless
+//! the helper is itself marked. That is the deliberate trade for a
+//! dependency-free pass that runs with no toolchain; reviews still own
+//! the call graph.
+
+use super::lexer::{SourceModel, UnsafeKind};
+
+/// One rule violation (pre-allowlist).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule ID: "L1".."L5".
+    pub rule: &'static str,
+    /// Path label the file was lexed under.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Enclosing fn name, or "-" at module scope.
+    pub func: String,
+    /// What went wrong, human-oriented.
+    pub msg: String,
+    /// The trimmed source line.
+    pub excerpt: String,
+}
+
+/// A registered rule.
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub run: fn(&SourceModel, &mut Vec<Finding>),
+}
+
+pub const REGISTRY: &[Rule] = &[
+    Rule { id: "L1", summary: "unsafe block/impl requires a // SAFETY: comment", run: rule_l1 },
+    Rule { id: "L2", summary: "no heap allocation in `// lint: hot` functions", run: rule_l2 },
+    Rule { id: "L3", summary: "no unwrap/expect/panic/assert in hot or sweep functions", run: rule_l3 },
+    Rule { id: "L4", summary: "no lock acquisition in hot or sweep functions", run: rule_l4 },
+    Rule { id: "L5", summary: "raw-pointer calls need an unsafe block and an //! aliasing: header", run: rule_l5 },
+];
+
+/// Lex `src` and run every registered rule over it.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let m = SourceModel::parse(path, src);
+    let mut out = Vec::new();
+    for rule in REGISTRY {
+        (rule.run)(&m, &mut out);
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+// ---------------------------------------------------------------- markers
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Marker {
+    Hot,
+    Sweep,
+}
+
+/// `(fn index, marker)` for every `// lint: hot|sweep` comment. A
+/// marker attaches to the first fn whose signature starts after it.
+fn marked_fns(m: &SourceModel) -> Vec<(usize, Marker)> {
+    let mut out = Vec::new();
+    for c in &m.comments {
+        let marker = match c.text.trim() {
+            "lint: hot" => Marker::Hot,
+            "lint: sweep" => Marker::Sweep,
+            _ => continue,
+        };
+        let at = m.line_start(c.line);
+        if let Some(idx) = m
+            .fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.sig_start >= at)
+            .min_by_key(|(_, f)| f.sig_start)
+            .map(|(i, _)| i)
+        {
+            out.push((idx, marker));
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------- pattern scans
+
+/// `(pattern, needs_nonident_prev)`. Patterns starting with `.` or `:`
+/// are self-delimiting; identifier-led patterns additionally require a
+/// non-identifier byte before them, which is what lets `debug_assert!`
+/// pass an `assert!(` scan.
+type Pat = (&'static str, bool);
+
+const L2_PATTERNS: &[Pat] = &[
+    ("vec!", true),
+    ("Vec::new", true),
+    (".to_vec(", false),
+    (".collect(", false),
+    (".collect::", false),
+    ("Box::new", true),
+    ("String::from", true),
+    ("format!", true),
+];
+
+const L3_PATTERNS: &[Pat] = &[
+    (".unwrap()", false),
+    (".expect(", false),
+    ("panic!", true),
+    ("assert!(", true),
+    ("assert_eq!(", true),
+    ("assert_ne!(", true),
+    ("unreachable!", true),
+    ("todo!", true),
+];
+
+const L4_PATTERNS: &[Pat] = &[(".lock(", false), ("Mutex", true), ("RwLock", true)];
+
+const L5_PATTERNS: &[Pat] = &[("from_raw_parts", true), (".add(", false)];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All `(byte offset, pattern)` hits in `blanked[lo..hi]`.
+fn scan_range(blanked: &str, lo: usize, hi: usize, pats: &[Pat]) -> Vec<(usize, &'static str)> {
+    let hay = blanked.as_bytes();
+    let mut hits = Vec::new();
+    for &(pat, ident_led) in pats {
+        let p = pat.as_bytes();
+        if hi < lo + p.len() {
+            continue;
+        }
+        for off in lo..=hi - p.len() {
+            if &hay[off..off + p.len()] != p {
+                continue;
+            }
+            if ident_led && off > 0 && is_ident(hay[off - 1]) {
+                continue;
+            }
+            hits.push((off, pat));
+        }
+    }
+    hits
+}
+
+fn excerpt(m: &SourceModel, line: usize) -> String {
+    m.line_text(line).trim().chars().take(96).collect()
+}
+
+fn func_at(m: &SourceModel, byte: usize) -> String {
+    m.enclosing_fn(byte).map(|f| f.name.clone()).unwrap_or_else(|| "-".to_string())
+}
+
+// ------------------------------------------------------------------ L1
+
+/// Is the `unsafe` on `line` covered by a `// SAFETY:` comment — on the
+/// same line, or in the contiguous run of comment / blank / attribute
+/// lines directly above? Any code line breaks the run, so consecutive
+/// `unsafe impl`s each need their own comment.
+fn has_safety_comment(m: &SourceModel, line: usize) -> bool {
+    if let Some(c) = m.comment_on(line) {
+        if c.text.contains("SAFETY:") {
+            return true;
+        }
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        if let Some(c) = m.comment_on(l) {
+            if c.text.contains("SAFETY:") {
+                return true;
+            }
+            if m.blanked_line(l).trim().is_empty() {
+                continue; // pure comment line — keep walking up
+            }
+            return false; // trailing comment on a code line
+        }
+        let code = m.blanked_line(l).trim();
+        if code.is_empty() || code.starts_with("#[") || code.starts_with("#![") {
+            continue; // blank line or attribute
+        }
+        return false;
+    }
+    false
+}
+
+fn rule_l1(m: &SourceModel, out: &mut Vec<Finding>) {
+    for site in &m.unsafe_sites {
+        if has_safety_comment(m, site.line) {
+            continue;
+        }
+        let what = match site.kind {
+            UnsafeKind::Block => "unsafe block",
+            UnsafeKind::Impl => "unsafe impl",
+            UnsafeKind::Other => "unsafe item",
+        };
+        out.push(Finding {
+            rule: "L1",
+            path: m.path.clone(),
+            line: site.line,
+            func: func_at(m, site.at),
+            msg: format!("{what} without a preceding // SAFETY: comment"),
+            excerpt: excerpt(m, site.line),
+        });
+    }
+}
+
+// --------------------------------------------------------------- L2–L4
+
+fn body_scan_rule(
+    m: &SourceModel,
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    pats: &[Pat],
+    include_sweep: bool,
+    msg: &str,
+) {
+    let mut seen = std::collections::HashSet::new();
+    for (idx, marker) in marked_fns(m) {
+        if marker == Marker::Sweep && !include_sweep {
+            continue;
+        }
+        if !seen.insert(idx) {
+            continue;
+        }
+        let f = &m.fns[idx];
+        let (lo, hi) = match f.body {
+            Some(span) => span,
+            None => continue,
+        };
+        for (off, pat) in scan_range(&m.blanked, lo, hi, pats) {
+            let line = m.line_of(off);
+            out.push(Finding {
+                rule,
+                path: m.path.clone(),
+                line,
+                func: func_at(m, off),
+                msg: format!("{msg}: `{pat}` in `{}` (marked `// lint: {}`)", f.name, match marker {
+                    Marker::Hot => "hot",
+                    Marker::Sweep => "sweep",
+                }),
+                excerpt: excerpt(m, line),
+            });
+        }
+    }
+}
+
+fn rule_l2(m: &SourceModel, out: &mut Vec<Finding>) {
+    // Hot only: the sweep loop may size its admission buffers.
+    body_scan_rule(m, out, "L2", L2_PATTERNS, false, "heap allocation");
+}
+
+fn rule_l3(m: &SourceModel, out: &mut Vec<Finding>) {
+    body_scan_rule(m, out, "L3", L3_PATTERNS, true, "panic path");
+}
+
+fn rule_l4(m: &SourceModel, out: &mut Vec<Finding>) {
+    body_scan_rule(m, out, "L4", L4_PATTERNS, true, "lock acquisition");
+}
+
+// ------------------------------------------------------------------ L5
+
+fn rule_l5(m: &SourceModel, out: &mut Vec<Finding>) {
+    let hits = scan_range(&m.blanked, 0, m.blanked.len(), L5_PATTERNS);
+    for &(off, pat) in &hits {
+        if m.in_unsafe_block(off) {
+            continue;
+        }
+        let line = m.line_of(off);
+        out.push(Finding {
+            rule: "L5",
+            path: m.path.clone(),
+            line,
+            func: func_at(m, off),
+            msg: format!("raw-pointer call `{pat}` outside an unsafe block"),
+            excerpt: excerpt(m, line),
+        });
+    }
+    if !hits.is_empty() && !m.module_doc().contains("aliasing:") {
+        out.push(Finding {
+            rule: "L5",
+            path: m.path.clone(),
+            line: 1,
+            func: "-".to_string(),
+            msg: "file uses raw-pointer strip carving but declares no `//! aliasing:` protocol header".to_string(),
+            excerpt: excerpt(m, 1),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- L1
+
+    #[test]
+    fn l1_fires_on_uncommented_unsafe_block() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(rules_of(&f).contains(&"L1"), "{f:?}");
+        let hit = f.iter().find(|x| x.rule == "L1").unwrap();
+        assert_eq!(hit.line, 2);
+        assert_eq!(hit.func, "f");
+    }
+
+    #[test]
+    fn l1_clean_with_safety_comment_and_attributes() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller upholds validity.\n    #[allow(clippy::all)]\n    unsafe { *p }\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(!rules_of(&f).contains(&"L1"), "{f:?}");
+    }
+
+    #[test]
+    fn l1_same_line_comment_counts() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p } // SAFETY: valid by construction\n}\n";
+        assert!(!rules_of(&lint_source("t.rs", src)).contains(&"L1"));
+    }
+
+    #[test]
+    fn l1_consecutive_unsafe_impls_each_need_a_comment() {
+        let src = "// SAFETY: T owns its data.\nunsafe impl Send for T {}\nunsafe impl Sync for T {}\n";
+        let f = lint_source("t.rs", src);
+        let l1: Vec<_> = f.iter().filter(|x| x.rule == "L1").collect();
+        assert_eq!(l1.len(), 1, "{f:?}");
+        assert_eq!(l1[0].line, 3); // the Sync impl is uncovered
+    }
+
+    #[test]
+    fn l1_safety_in_string_or_doc_mention_does_not_count() {
+        // The word SAFETY inside a *string literal* above the unsafe
+        // block is blanked and is not a comment — must still fire.
+        let src = "fn f(p: *const u8) -> u8 {\n    let _s = \"SAFETY: not a comment\";\n    unsafe { *p }\n}\n";
+        assert!(rules_of(&lint_source("t.rs", src)).contains(&"L1"));
+    }
+
+    // ---- L2
+
+    #[test]
+    fn l2_fires_on_alloc_in_hot_fn() {
+        let src = "// lint: hot\nfn kernel(n: usize) -> usize {\n    let v = vec![0u8; n];\n    let w: Vec<usize> = (0..n).collect();\n    v.len() + w.len()\n}\n";
+        let f = lint_source("t.rs", src);
+        let l2: Vec<_> = f.iter().filter(|x| x.rule == "L2").collect();
+        assert_eq!(l2.len(), 2, "{f:?}");
+        assert!(l2.iter().all(|x| x.func == "kernel"));
+    }
+
+    #[test]
+    fn l2_clean_unmarked_fn_and_clean_hot_fn() {
+        let src = "fn cold(n: usize) -> Vec<u8> {\n    vec![0u8; n]\n}\n// lint: hot\nfn hot(acc: &mut [f32], x: &[f32]) {\n    for (a, &b) in acc.iter_mut().zip(x) { *a += b; }\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(!rules_of(&f).contains(&"L2"), "{f:?}");
+    }
+
+    #[test]
+    fn l2_marker_attaches_to_next_fn_only() {
+        let src = "// lint: hot\nfn first(x: &mut [f32]) { x[0] = 1.0; }\nfn second(n: usize) -> Vec<u8> { vec![0; n] }\n";
+        let f = lint_source("t.rs", src);
+        assert!(!rules_of(&f).contains(&"L2"), "{f:?}");
+    }
+
+    #[test]
+    fn l2_sweep_marker_allows_allocation() {
+        let src = "// lint: sweep\nfn sweep_loop(n: usize) -> Vec<u8> { Vec::with_capacity(n) }\n";
+        assert!(!rules_of(&lint_source("t.rs", src)).contains(&"L2"));
+    }
+
+    // ---- L3
+
+    #[test]
+    fn l3_fires_on_unwrap_and_assert_in_hot_fn() {
+        let src = "// lint: hot\nfn kernel(x: Option<usize>, n: usize) -> usize {\n    assert!(n > 0, \"n\");\n    x.unwrap()\n}\n";
+        let f = lint_source("t.rs", src);
+        let l3: Vec<_> = f.iter().filter(|x| x.rule == "L3").collect();
+        assert_eq!(l3.len(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn l3_debug_assert_is_allowed() {
+        let src = "// lint: hot\nfn kernel(a: &[f32], b: &[f32]) -> f32 {\n    debug_assert_eq!(a.len(), b.len());\n    debug_assert!(!a.is_empty());\n    a[0] + b[0]\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(!rules_of(&f).contains(&"L3"), "{f:?}");
+    }
+
+    #[test]
+    fn l3_applies_to_sweep_marker_too() {
+        let src = "// lint: sweep\nfn sweep_loop(x: Option<usize>) -> usize { x.expect(\"x\") }\n";
+        let f = lint_source("t.rs", src);
+        assert!(rules_of(&f).contains(&"L3"), "{f:?}");
+    }
+
+    // ---- L4
+
+    #[test]
+    fn l4_fires_on_lock_in_hot_fn() {
+        let src = "// lint: hot\nfn kernel(m: &std::sync::Mutex<usize>) -> usize {\n    *m.lock().unwrap()\n}\n";
+        let f = lint_source("t.rs", src);
+        // Mutex in the signature is outside the body; `.lock(` inside fires.
+        assert!(f.iter().any(|x| x.rule == "L4" && x.line == 3), "{f:?}");
+    }
+
+    #[test]
+    fn l4_clean_unmarked_fn_may_lock() {
+        let src = "fn cold(m: &std::sync::Mutex<usize>) -> usize { *m.lock().unwrap() }\n";
+        assert!(!rules_of(&lint_source("t.rs", src)).contains(&"L4"));
+    }
+
+    // ---- L5
+
+    #[test]
+    fn l5_fires_outside_unsafe_block() {
+        let src = "//! aliasing: one handle per slot.\nfn f(p: *const f32) -> *const f32 {\n    p.add(1)\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(f.iter().any(|x| x.rule == "L5" && x.line == 3), "{f:?}");
+    }
+
+    #[test]
+    fn l5_fires_on_missing_aliasing_header() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // SAFETY: in-bounds by construction.\n    unsafe { *p.add(1) }\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(
+            f.iter().any(|x| x.rule == "L5" && x.msg.contains("aliasing")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn l5_clean_with_header_and_unsafe() {
+        let src = "//! aliasing: one handle per slot; see kv.rs.\nfn f(p: *const f32) -> f32 {\n    // SAFETY: in-bounds by construction.\n    unsafe { *p.add(1) }\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(!rules_of(&f).contains(&"L5"), "{f:?}");
+    }
+
+    #[test]
+    fn l5_fetch_add_is_not_a_pointer_add() {
+        let src = "fn f(c: &std::sync::atomic::AtomicUsize) -> usize {\n    c.fetch_add(1, std::sync::atomic::Ordering::Relaxed)\n}\n";
+        let f = lint_source("t.rs", src);
+        assert!(!rules_of(&f).contains(&"L5"), "{f:?}");
+    }
+
+    // ---- registry
+
+    #[test]
+    fn registry_ids_are_unique_and_complete() {
+        let ids: Vec<&str> = REGISTRY.iter().map(|r| r.id).collect();
+        assert_eq!(ids, ["L1", "L2", "L3", "L4", "L5"]);
+    }
+}

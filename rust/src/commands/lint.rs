@@ -1,0 +1,92 @@
+//! `bpdq lint` — run the project-native static-analysis pass
+//! ([`bpdq::analysis`]) over `rust/src/**/*.rs` and fail on findings.
+//!
+//! Flags:
+//! * `--root <dir>`   source root to walk (default: `rust/src`, or `src`
+//!   when invoked from inside `rust/`)
+//! * `--config <file>` allowlist path (default: `lint.toml` next to the
+//!   source root's parent, i.e. `rust/lint.toml`)
+//! * `--list-rules`   print the rule registry and exit
+
+use anyhow::{bail, Context, Result};
+use bpdq::analysis::{apply_allowlist, lint_source, parse_allowlist, walk_rs_files, REGISTRY};
+use bpdq::cli::Args;
+use std::fs;
+use std::path::PathBuf;
+
+pub fn run(args: &Args) -> Result<()> {
+    if args.has("list-rules") {
+        for rule in REGISTRY {
+            println!("{:4} {}", rule.id, rule.summary);
+        }
+        return Ok(());
+    }
+
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => default_root()?,
+    };
+    let config = match args.get("config") {
+        Some(c) => PathBuf::from(c),
+        None => root.parent().unwrap_or(&root).join("lint.toml"),
+    };
+
+    let entries = if config.is_file() {
+        let text = fs::read_to_string(&config)
+            .with_context(|| format!("read allowlist {}", config.display()))?;
+        parse_allowlist(&text).map_err(anyhow::Error::msg)?
+    } else {
+        Vec::new()
+    };
+
+    let files = walk_rs_files(&root)
+        .with_context(|| format!("walk source root {}", root.display()))?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let src =
+            fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        findings.extend(lint_source(&path.to_string_lossy(), &src));
+    }
+
+    let (kept, suppressed, used) = apply_allowlist(findings, &entries);
+
+    for f in &kept {
+        println!("{}:{}: [{}] ({}) {}", f.path, f.line, f.rule, f.func, f.msg);
+        println!("    {}", f.excerpt);
+    }
+    for (entry, ok) in entries.iter().zip(&used) {
+        if !ok {
+            println!(
+                "warning: unused allowlist entry at {}:{} ({} {} {})",
+                config.display(),
+                entry.line,
+                entry.rule,
+                entry.path,
+                entry.func
+            );
+        }
+    }
+    println!(
+        "lint: {} file(s), {} finding(s), {} allowlisted",
+        files.len(),
+        kept.len(),
+        suppressed.len()
+    );
+    if !kept.is_empty() {
+        bail!("lint: {} violation(s)", kept.len());
+    }
+    Ok(())
+}
+
+/// Resolve the source root relative to the working directory: the CI
+/// job and the verify recipe both run from the workspace root, where
+/// the tree lives at `rust/src`; `src` covers running from `rust/`.
+fn default_root() -> Result<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    bail!("no source root found (looked for rust/src and src); pass --root <dir>")
+}

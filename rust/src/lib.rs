@@ -11,12 +11,21 @@
 //!   PJRT runtime for AOT artifacts.
 //! * **L2/L1 (python/, build-time only)** — JAX model + Pallas kernels,
 //!   lowered once to HLO text under `artifacts/`.
+//!
+//! The hot-path and unsafe-aliasing invariants the serving stack relies
+//! on are machine-checked by `bpdq lint` (the [`analysis`] module); see
+//! `serving`'s "Static analysis" docs for the marker contract.
 
 // The numeric kernels intentionally use index loops (parallel indexing
 // into several buffers at matching offsets); the iterator rewrites
 // clippy suggests obscure the stride arithmetic.
 #![allow(clippy::needless_range_loop)]
+// Every unsafe operation inside an unsafe fn must still sit in its own
+// `unsafe { }` block so lint rule L1 sees (and demands a SAFETY comment
+// on) each one.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod data;

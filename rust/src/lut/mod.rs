@@ -51,6 +51,7 @@ pub struct LutScratch {
 ///
 /// All vectors must share one length; entries past the end of a vector
 /// contribute 0 (ragged final chunk).
+// lint: hot
 pub fn build_luts(xs: &[&[f32]], scratch: &mut LutScratch) {
     let nb = xs.len();
     let d = xs.first().map_or(0, |x| x.len());
@@ -83,6 +84,7 @@ pub fn build_lut(x: &[f32], scratch: &mut LutScratch) {
 /// packed record. Each row's plane words are gathered once and applied to
 /// every activation's LUT — decode cost per token approaches `1/B` of the
 /// weight-fetch bound as B grows.
+// lint: hot
 pub fn lut_gemm(
     packed: &BitPlanePacked,
     xs: &[&[f32]],
@@ -177,6 +179,7 @@ pub fn lut_gemm(
 
 /// y = Ŵ x for a packed record, using the LUT algorithm (batch-1 case of
 /// [`lut_gemm`]; bit-identical to the batched path).
+// lint: hot
 pub fn lut_gemv(packed: &BitPlanePacked, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
     lut_gemm(packed, &[x], &mut [y], scratch);
 }

@@ -12,13 +12,16 @@
 //! * `serve`      — start the serving engine on a quantized checkpoint
 //!   and run a request trace through it;
 //! * `selfcheck`  — verify artifacts (vocab sync, HLO loads, kernel
-//!   parity) end to end.
+//!   parity) end to end;
+//! * `lint`       — project-native static analysis: hot-path and
+//!   unsafe-aliasing invariants (rules L1–L5, see `bpdq::analysis`).
 
 use bpdq::cli::Args;
 
 mod commands {
     pub mod bench_tables;
     pub mod gen_data;
+    pub mod lint;
     pub mod quantize;
     pub mod selfcheck;
     pub mod serve;
@@ -43,6 +46,7 @@ fn main() {
         "fig3" => commands::bench_tables::fig3(&args),
         "serve" => commands::serve::run(&args),
         "selfcheck" => commands::selfcheck::run(&args),
+        "lint" => commands::lint::run(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -83,6 +87,11 @@ SUBCOMMANDS
                                                via --stream (cancels one
                                                request mid-decode)
   selfcheck                                       artifact + kernel parity
+  lint       [--root rust/src] [--config rust/lint.toml] [--list-rules]
+                                                  static analysis (L1..L5):
+                                                  SAFETY comments, alloc/
+                                                  panic/lock-free hot paths,
+                                                  unsafe aliasing protocol
 "#
     );
 }

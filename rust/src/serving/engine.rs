@@ -358,13 +358,22 @@ fn lin_batch(
     lut_gemm(rec, &xrefs, &mut yrefs, scratch);
 }
 
-/// The per-(position-group, kv-head) strip collection of the fused
-/// attention phase, by arena format — K strips first, V strips second.
-/// Keeping both formats behind one enum lets the score/softmax/AV group
-/// loop exist exactly once (only the kernel calls dispatch).
-enum GroupStrips<'v> {
-    F32(Vec<&'v [f32]>, Vec<&'v [f32]>),
-    Packed(Vec<PackedStrip<'v>>, Vec<PackedStrip<'v>>),
+/// Reusable slice-collection scratch for [`fused_attention`]: the
+/// q-row / K-strip / V-strip ref vectors the strip kernels consume,
+/// refilled per (position group, kv-head) with `clear()` + `extend()`.
+/// The non-hot caller constructs it (one allocation site, outside the
+/// marked phase); inside the phase the vectors only grow to the group
+/// width once and are reused after that. Which side is populated — f32
+/// refs or packed strips — follows the arena's [`KvFormat`]; the group
+/// loop itself is shared, so the two formats can never diverge in
+/// control flow (only the kernel invocations dispatch).
+#[derive(Default)]
+struct StripRefs<'v> {
+    qs: Vec<&'v [f32]>,
+    ks: Vec<&'v [f32]>,
+    vs: Vec<&'v [f32]>,
+    ksp: Vec<PackedStrip<'v>>,
+    vsp: Vec<PackedStrip<'v>>,
 }
 
 /// Carve disjoint `&mut buf[b*row_len + o0 ..][..sub_len]` sub-slices
@@ -388,6 +397,84 @@ fn disjoint_rows_mut<'a>(
         next = b + 1;
     }
     out
+}
+
+/// One layer's batched score/softmax/AV phase: a single multi-session
+/// pass per (position group, kv-head). All sessions in a group share
+/// the score length and the head geometry, their KV strips are slots of
+/// one arena slab (adjacent for batch-created sessions), and the strip
+/// kernels walk every session's strip together position-major — a
+/// genuine batched matvec over pooled memory, not B separate strip
+/// walks. The pass dispatches on the arena's format: f32 strips go
+/// through [`strip_dots`] / [`strip_axpys`] (per-lane accumulation
+/// order matches `attend_head` exactly, so the fused sweep stays
+/// token-identical to B=1); packed bit-plane strips go through the
+/// fused-dequant twins [`strip_dots_packed`] / [`strip_axpys_packed`],
+/// which consume the plane words the session step stored —
+/// quantization happened once, at store time, never here.
+///
+/// Hot contract (`bpdq lint` L2–L4): the caller resolves every handle
+/// (`views`) and owns the [`StripRefs`] scratch, so this phase itself
+/// performs no allocation, panic-path call, or locking in steady state.
+// lint: hot
+#[allow(clippy::too_many_arguments)]
+fn fused_attention<'v>(
+    format: KvFormat,
+    groups: &[(usize, Vec<usize>)],
+    views: &'v [KvView<'v>],
+    l: usize,
+    nkv: usize,
+    group: usize,
+    hd: usize,
+    d: usize,
+    scale: f32,
+    q: &'v [f32],
+    attn: &mut [f32],
+    scores_buf: &mut Vec<f32>,
+    refs: &mut StripRefs<'v>,
+) {
+    for (t, lanes) in groups {
+        let (t, gl) = (*t, lanes.len());
+        scores_buf.resize(gl * (t + 1), 0.0);
+        for kvh in 0..nkv {
+            match format {
+                KvFormat::F32 => {
+                    refs.ks.clear();
+                    refs.ks.extend(lanes.iter().map(|&b| views[b].k_strip(l, kvh, t + 1)));
+                    refs.vs.clear();
+                    refs.vs.extend(lanes.iter().map(|&b| views[b].v_strip(l, kvh, t + 1)));
+                }
+                KvFormat::BitPlane { .. } => {
+                    refs.ksp.clear();
+                    refs.ksp.extend(lanes.iter().map(|&b| views[b].k_packed(l, kvh)));
+                    refs.vsp.clear();
+                    refs.vsp.extend(lanes.iter().map(|&b| views[b].v_packed(l, kvh)));
+                }
+            }
+            for g in 0..group {
+                let o0 = (kvh * group + g) * hd;
+                refs.qs.clear();
+                refs.qs.extend(lanes.iter().map(|&b| &q[b * d + o0..b * d + o0 + hd]));
+                let scores = &mut scores_buf[..gl * (t + 1)];
+                match format {
+                    KvFormat::F32 => strip_dots(&refs.qs, &refs.ks, hd, scale, scores),
+                    KvFormat::BitPlane { .. } => {
+                        strip_dots_packed(&refs.qs, &refs.ksp, t + 1, scale, scores)
+                    }
+                }
+                for lane_scores in scores.chunks_exact_mut(t + 1) {
+                    softmax(lane_scores);
+                }
+                let mut outs = disjoint_rows_mut(attn, d, lanes, o0, hd);
+                match format {
+                    KvFormat::F32 => strip_axpys(scores, &refs.vs, hd, &mut outs),
+                    KvFormat::BitPlane { .. } => {
+                        strip_axpys_packed(scores, &refs.vsp, t + 1, &mut outs)
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl Stepper for BatchedLutStep {
@@ -479,72 +566,32 @@ impl Stepper for BatchedLutStep {
             self.attn.clear();
             self.attn.resize(nb * d, 0.0);
 
-            // Batched score/softmax/AV: one multi-session pass per
-            // (position group, kv-head). All sessions in a group share
-            // the score length and the head geometry, their KV strips
-            // are slots of one arena slab (adjacent for batch-created
-            // sessions), and the strip kernels walk every session's
-            // strip together position-major — a genuine batched matvec
-            // over pooled memory, not B separate strip walks. The pass
-            // dispatches on the arena's format: f32 strips go through
-            // `strip_dots` / `strip_axpys` (per-lane accumulation order
-            // matches `attend_head` exactly, so the fused sweep stays
-            // token-identical to B=1); packed bit-plane strips go
-            // through the fused-dequant twins `strip_dots_packed` /
-            // `strip_axpys_packed`, which consume the plane words the
-            // session step stored — quantization happened once, at
-            // store time, never here.
+            // Batched score/softmax/AV — see [`fused_attention`]. The
+            // handle resolution (fallible `expect`) and the scratch
+            // construction happen here, outside the hot-marked phase.
             let format = self.arena.geom().format;
             let arena = &self.arena;
             let views: Vec<KvView> = sessions
                 .iter()
                 .map(|s| arena.view(s.handle.as_ref().expect("live session")))
                 .collect();
-            for (t, lanes) in &groups {
-                let (t, gl) = (*t, lanes.len());
-                self.scores.resize(gl * (t + 1), 0.0);
-                for kvh in 0..nkv {
-                    // One strips collection per format; the group loop
-                    // (qs assembly, softmax, AV carving) is shared so the
-                    // two formats can never diverge in control flow —
-                    // only the kernel invocations differ.
-                    let strips = match format {
-                        KvFormat::F32 => GroupStrips::F32(
-                            lanes.iter().map(|&b| views[b].k_strip(l, kvh, t + 1)).collect(),
-                            lanes.iter().map(|&b| views[b].v_strip(l, kvh, t + 1)).collect(),
-                        ),
-                        KvFormat::BitPlane { .. } => GroupStrips::Packed(
-                            lanes.iter().map(|&b| views[b].k_packed(l, kvh)).collect(),
-                            lanes.iter().map(|&b| views[b].v_packed(l, kvh)).collect(),
-                        ),
-                    };
-                    for g in 0..group {
-                        let o0 = (kvh * group + g) * hd;
-                        let qs: Vec<&[f32]> = lanes
-                            .iter()
-                            .map(|&b| &self.q[b * d + o0..b * d + o0 + hd])
-                            .collect();
-                        let scores = &mut self.scores[..gl * (t + 1)];
-                        match &strips {
-                            GroupStrips::F32(ks, _) => strip_dots(&qs, ks, hd, scale, scores),
-                            GroupStrips::Packed(ks, _) => {
-                                strip_dots_packed(&qs, ks, t + 1, scale, scores)
-                            }
-                        }
-                        for lane_scores in scores.chunks_exact_mut(t + 1) {
-                            softmax(lane_scores);
-                        }
-                        let mut outs =
-                            disjoint_rows_mut(&mut self.attn[..nb * d], d, lanes, o0, hd);
-                        match &strips {
-                            GroupStrips::F32(_, vs) => strip_axpys(scores, vs, hd, &mut outs),
-                            GroupStrips::Packed(_, vs) => {
-                                strip_axpys_packed(scores, vs, t + 1, &mut outs)
-                            }
-                        }
-                    }
-                }
-            }
+            let mut strip_refs = StripRefs::default();
+            fused_attention(
+                format,
+                &groups,
+                &views,
+                l,
+                nkv,
+                group,
+                hd,
+                d,
+                scale,
+                &self.q,
+                &mut self.attn[..nb * d],
+                &mut self.scores,
+                &mut strip_refs,
+            );
+            drop(strip_refs);
             drop(views);
 
             lin_batch(&self.lm, l, "wo", &self.attn, d, &mut self.proj, &mut self.scratch);

@@ -109,6 +109,36 @@
 //! instant surface as a channel disconnect — `recv()` returns `None`,
 //! `try_recv()` returns `Err(Disconnected)`, `collect()` returns
 //! `Err` — still never a hang.
+//!
+//! ## Static analysis
+//!
+//! The serving stack's performance and soundness invariants are
+//! machine-checked by `bpdq lint` ([`crate::analysis`]), which runs in
+//! CI and in `cargo test`. The contract is marker-driven:
+//!
+//! * `// lint: hot` on a `fn` opts it into rules **L2+L3+L4** — no
+//!   heap allocation, no panic paths (`unwrap`/`expect`/`panic!`/hard
+//!   asserts; `debug_assert*` is fine), no lock acquisition. Marked:
+//!   the strip kernels ([`crate::tensor`]), the kvpack encode/decode
+//!   path ([`crate::tensor::kvpack`]), the LUT-GEMM kernels
+//!   ([`crate::lut`]), and the engine's `fused_attention` phase.
+//!   Anything these functions need allocated or checked fallibly, the
+//!   *caller* provides (scratch structs, resolved handles) — that is
+//!   the shape the marker enforces.
+//! * `// lint: sweep` opts into **L3+L4** only: the scheduler's
+//!   `run_scheduler` loop may size per-sweep buffers but must never
+//!   panic or take a lock mid-sweep (a panic strands every in-flight
+//!   stream).
+//! * Rules **L1** (every `unsafe` needs a `// SAFETY:` comment) and
+//!   **L5** (raw-pointer calls only inside `unsafe` blocks, in files
+//!   declaring an `//! aliasing:` protocol header) need no markers —
+//!   they hold tree-wide, and in this stack all such code lives in
+//!   [`kv`].
+//!
+//! Intentional exceptions carry a one-line justification in
+//! `rust/lint.toml`; unused allowlist entries are reported so the file
+//! cannot rot. The analysis is textual and per-function (it does not
+//! chase calls) — reviews still own the call graph.
 
 pub mod batcher;
 pub mod engine;

@@ -140,6 +140,13 @@ fn admit<St: Stepper>(stepper: &St, p: Pending) -> ActiveGen<St::Sess> {
 /// Run the persistent scheduling loop until the queue is closed and
 /// drained (graceful) or the stepper fails (every in-flight request is
 /// retired with `Error` first).
+///
+/// Sweep contract (`bpdq lint` L3/L4): this loop must never panic or
+/// block on a lock mid-sweep — a panic here strands every in-flight
+/// stream without a `Done` event, and a lock would stall all sessions
+/// at once. Allocation is fine (per-sweep vectors), hence `sweep`, not
+/// `hot`.
+// lint: sweep
 pub(crate) fn run_scheduler<St: Stepper>(
     stepper: &mut St,
     queue: &SubmitQueue,

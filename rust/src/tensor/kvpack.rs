@@ -40,6 +40,7 @@
 //! with no re-quantization.
 
 /// Round an f32 to IEEE 754 binary16 bits (round-to-nearest-even).
+// lint: hot
 pub fn f16_encode(x: f32) -> u16 {
     let bits = x.to_bits();
     let sign = bits >> 31;
@@ -90,6 +91,7 @@ pub fn f16_encode(x: f32) -> u16 {
 }
 
 /// Decode IEEE 754 binary16 bits to f32.
+// lint: hot
 pub fn f16_decode(h: u16) -> f32 {
     let hs = (h >> 15) as u32;
     let he = ((h >> 10) & 0x1F) as u32;
@@ -202,6 +204,7 @@ impl PackedGeom {
 
 /// Read one f16 (index `idx` in the half-word stream) out of packed
 /// coefficient words.
+// lint: hot
 #[inline]
 fn get_half(words: &[u32], idx: usize) -> f32 {
     let w = words[idx / 2];
@@ -211,6 +214,7 @@ fn get_half(words: &[u32], idx: usize) -> f32 {
 
 /// Write one f16 into the half-word stream (read-modify-write of the
 /// containing u32, so neighbours survive).
+// lint: hot
 #[inline]
 fn set_half(words: &mut [u32], idx: usize, v: f32) {
     let h = f16_encode(v) as u32;
@@ -237,6 +241,7 @@ impl<'a> PackedStrip<'a> {
 
     /// Words of plane `i` (bit `u·hd + j` = code bit of channel `j` at
     /// position `u`).
+    // lint: hot
     #[inline]
     pub fn plane(&self, i: usize) -> &'a [u32] {
         let pw = self.geom.plane_words();
@@ -246,6 +251,7 @@ impl<'a> PackedStrip<'a> {
 
     /// Coefficient `c` (0 = bias c₀, `1..=bits` = plane scalars) of
     /// channel group `g` at position `u`.
+    // lint: hot
     #[inline]
     pub fn coeff(&self, u: usize, g: usize, c: usize) -> f32 {
         get_half(&self.words[self.geom.coeff_base()..], self.geom.coeff_index(u, g, c))
@@ -253,9 +259,12 @@ impl<'a> PackedStrip<'a> {
 
     /// Dequantize position `u` into `out` (`hd` wide):
     /// `x̂ⱼ = c₀ + Σᵢ cᵢ·Bᵢ[j]` per group.
+    // lint: hot
     pub fn dequant_row(&self, u: usize, out: &mut [f32]) {
         let g = &self.geom;
-        assert_eq!(out.len(), g.hd);
+        // Width mismatches still fault loudly via the bounds-checked
+        // slice indexing below; no hard assert in the per-token path.
+        debug_assert_eq!(out.len(), g.hd);
         for grp in 0..g.n_groups() {
             let lo = grp * g.group;
             let hi = (lo + g.group).min(g.hd);
@@ -299,10 +308,14 @@ impl<'a> PackedStripMut<'a> {
     /// into bit-planes (`cᵢ = step·2ⁱ`), then `c₀` refit by the mean
     /// residual — max abs error ≤ one grid `step` before f16 rounding of
     /// the coefficients. Writes are masked to exactly this row's bits.
+    // lint: hot
     pub fn store_row(&mut self, u: usize, x: &[f32]) {
         let g = self.geom;
-        assert_eq!(x.len(), g.hd, "row width != head_dim");
-        assert!(u < g.cap, "store position beyond strip capacity");
+        // Shape violations still fault loudly via bounds-checked plane/
+        // coeff indexing; the arena's store() keeps the hard protocol
+        // asserts at the slot boundary.
+        debug_assert_eq!(x.len(), g.hd, "row width != head_dim");
+        debug_assert!(u < g.cap, "store position beyond strip capacity");
         let levels = ((1u32 << g.bits) - 1) as f32;
         let pw = g.plane_words();
         let cb = g.coeff_base();

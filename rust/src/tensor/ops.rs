@@ -99,6 +99,7 @@ pub fn matvec_transa(a: &Matrix, x: &[f32]) -> Vec<f32> {
 }
 
 /// Contiguous dot product — the single hottest scalar loop in the stack.
+// lint: hot
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -126,6 +127,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// `y += alpha * x` over contiguous slices — the AV-accumulation
 /// primitive of the decode attention sweep (head-major KV strips make
 /// every V row contiguous, so this auto-vectorizes).
+// lint: hot
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -146,6 +148,7 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// pattern the per-session loop could never produce. Per-lane numerics
 /// are identical to B independent [`dot`] sweeps (same slices, same
 /// order), so the batched serving path stays token-identical to B=1.
+// lint: hot
 pub fn strip_dots(qs: &[&[f32]], strips: &[&[f32]], hd: usize, scale: f32, scores: &mut [f32]) {
     let nb = qs.len();
     debug_assert_eq!(strips.len(), nb);
@@ -170,6 +173,7 @@ pub fn strip_dots(qs: &[&[f32]], strips: &[&[f32]], hd: usize, scale: f32, score
 /// [`strip_dots`]; weights below 1e-9 are skipped exactly as in the
 /// per-session `attend_head` path so both orders accumulate the same
 /// f32 sums in the same order (token-identical parity).
+// lint: hot
 pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f32]]) {
     let nb = outs.len();
     debug_assert_eq!(strips.len(), nb);
@@ -193,6 +197,7 @@ pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f
 /// `Σ q[j]` over the set bits of a plane bit-span `[start, start + n)`
 /// (`q[j]` pairs with bit `start + j`) — the popcount-style partial dot
 /// of the fused-dequant score kernel.
+// lint: hot
 #[inline]
 fn fold_set_bits(plane: &[u32], start: usize, n: usize, q: &[f32]) -> f32 {
     debug_assert!(q.len() >= n);
@@ -216,6 +221,7 @@ fn fold_set_bits(plane: &[u32], start: usize, n: usize, q: &[f32]) -> f32 {
 
 /// `out[j] += add` over the set bits of a plane bit-span — the AV-side
 /// twin of [`fold_set_bits`].
+// lint: hot
 #[inline]
 fn scatter_set_bits(plane: &[u32], start: usize, n: usize, add: f32, out: &mut [f32]) {
     debug_assert!(out.len() >= n);
@@ -247,6 +253,7 @@ fn scatter_set_bits(plane: &[u32], start: usize, n: usize, add: f32, out: &mut [
 /// f32 kernel, so lanes of one group are walked together and the f32
 /// path's token-identity guarantees are untouched (this kernel only
 /// runs when the arena stores packed strips).
+// lint: hot
 pub fn strip_dots_packed(
     qs: &[&[f32]],
     strips: &[PackedStrip],
@@ -310,6 +317,7 @@ pub fn strip_dots_packed(
 /// scatters `w·cᵢ` onto its set bits. Position-major walk and the same
 /// `< 1e-9` weight skip as the f32 kernel, so the packed single-session
 /// and batched paths accumulate identically to each other.
+// lint: hot
 pub fn strip_axpys_packed(ws: &[f32], strips: &[PackedStrip], len: usize, outs: &mut [&mut [f32]]) {
     let nb = outs.len();
     debug_assert_eq!(strips.len(), nb);

@@ -21,6 +21,16 @@ Rows whose previous value is 0 (degenerate zero-wall-clock runs, or
 artifacts predating the TTFT field) are skipped — a ratio against zero
 means nothing.
 
+Since the SIMD dispatch layer, the gate also (optionally) compares the
+per-kernel-family bench ``BENCH_kernels.json`` via ``--kernels-current``
+/ ``--kernels-previous``. Kernel rows are keyed by
+``(family, kv_bits, tier)`` and gate on ``us_per_iter`` — lower is
+better, so the gate fires when time *grows* by more than
+``--kernels-threshold`` (default 15%). A missing or unreadable previous
+kernels file is skipped gracefully (the artifact predates the bench);
+a missing *current* file while ``--kernels-current`` was passed is an
+error — the bench was supposed to run.
+
 Stdlib only; runs on the bare CI python.
 """
 
@@ -55,6 +65,61 @@ def load_rows(path: str) -> dict[str, dict[str, float]]:
     return out
 
 
+def load_kernel_rows(path: str) -> dict[str, float]:
+    """``BENCH_kernels.json`` rows keyed ``family [kvN] @tier`` ->
+    ``us_per_iter``. Rows without the full key or a positive time are
+    dropped (they cannot be gated meaningfully)."""
+    with open(path) as f:
+        doc = json.load(f)
+    out: dict[str, float] = {}
+    for row in doc.get("rows", []):
+        family = row.get("family")
+        tier = row.get("tier")
+        us = row.get("us_per_iter")
+        if not (isinstance(family, str) and isinstance(tier, str)):
+            continue
+        if not isinstance(us, (int, float)) or us <= 0.0:
+            continue
+        kv_bits = row.get("kv_bits")
+        kv = int(kv_bits) if isinstance(kv_bits, (int, float)) else 0
+        out[f"{family} [kv{kv}] @{tier}"] = float(us)
+    return out
+
+
+def gate_kernels(current: str, previous: str, threshold: float,
+                 failures: list) -> None:
+    """Compare kernel-family rows; append regressions to ``failures``.
+
+    The previous artifact may simply not contain the kernels file yet
+    (bench landed after the last main run) — that skips. The *current*
+    file must exist: the caller only passes ``--kernels-current`` when
+    the bench ran in this job.
+    """
+    cur = load_kernel_rows(current)
+    try:
+        prev = load_kernel_rows(previous)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[perf-gate] no previous kernels baseline ({e}) — skipping")
+        return
+    if not prev:
+        print("[perf-gate] previous kernels artifact has no comparable rows — skipping")
+        return
+    for name in sorted(prev):
+        if name not in cur:
+            print(f"[perf-gate] kernel row dropped (not gating): {name}")
+            continue
+        p, c = prev[name], cur[name]
+        ratio = c / p
+        marker = "OK "
+        if ratio > 1.0 + threshold:
+            marker = "REG"
+            failures.append((name, "us_per_iter", p, c, ratio))
+        print(f"[perf-gate] {marker} {name}: {p:.2f} -> {c:.2f} us/iter "
+              f"({100.0 * (ratio - 1.0):+.1f}%)")
+    for name in sorted(set(cur) - set(prev)):
+        print(f"[perf-gate] new kernel row (not gated): {name}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_decode.json")
@@ -63,15 +128,30 @@ def main() -> int:
                     help="max allowed fractional tokens/sec drop (0.15 = 15%%)")
     ap.add_argument("--ttft-threshold", type=float, default=0.25,
                     help="max allowed fractional TTFT p95 growth (0.25 = 25%%)")
+    ap.add_argument("--kernels-current", default=None,
+                    help="fresh BENCH_kernels.json (optional)")
+    ap.add_argument("--kernels-previous", default=None,
+                    help="previous run's BENCH_kernels.json (optional)")
+    ap.add_argument("--kernels-threshold", type=float, default=0.15,
+                    help="max allowed fractional us/iter growth per kernel "
+                         "family (0.15 = 15%%)")
     args = ap.parse_args()
 
     cur = load_rows(args.current)
     prev = load_rows(args.previous)
-    if not prev:
-        print("[perf-gate] previous artifact has no comparable rows — skipping")
-        return 0
-
     failures = []
+    if args.kernels_current and args.kernels_previous:
+        gate_kernels(args.kernels_current, args.kernels_previous,
+                     args.kernels_threshold, failures)
+    if not prev:
+        print("[perf-gate] previous artifact has no comparable rows — skipping decode gate")
+        if failures:
+            print(f"\n[perf-gate] FAIL: {len(failures)} regression(s):")
+            for name, metric, p, c, ratio in failures:
+                print(f"  {name} [{metric}]: {p:.1f} -> {c:.1f} "
+                      f"({100.0 * (ratio - 1.0):+.1f}%)")
+            return 1
+        return 0
     for name in sorted(prev):
         if name not in cur:
             print(f"[perf-gate] row dropped (not gating): {name}")

@@ -1,0 +1,242 @@
+//! Per-kernel-family SIMD dispatch bench: every decode-hot kernel at
+//! the scalar tier vs the detected SIMD tier, same inputs, same shapes.
+//! Emits `BENCH_kernels.json` — one row per (family, kv_bits, tier) —
+//! the artifact the CI perf gate tracks for per-family regressions.
+//!
+//! Families:
+//!   - `lut_gemm`           batched LUT-GEMM weight kernel (k = kv_bits)
+//!   - `packed_strip_dots`  table-driven bit-plane QK^T scores
+//!   - `packed_strip_axpys` masked-blend bit-plane AV accumulate
+//!   - `packed_attn`        dots + softmax + axpys fused phase
+//!   - `f32_strip_dots` / `f32_strip_axpys` the f32 KV twins (kv_bits 0)
+//!   - `rmsnorm` / `softmax` the per-step epilogues (kv_bits 0)
+//!
+//! The headline acceptance shape is `packed_attn` at len=512: the
+//! table-driven path replaces the serial per-bit `m &= m-1` walk with
+//! eight independent 256-entry lookups per plane row.
+use bpdq::benchkit::{bench, black_box, Bench, JsonReport};
+use bpdq::lut::{lut_gemm_with_tier, LutScratch};
+use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
+use bpdq::rng::Rng;
+use bpdq::tensor::simd::{
+    rmsnorm_t, softmax_t, strip_axpys_packed_t, strip_axpys_t, strip_dots_packed_t, strip_dots_t,
+};
+use bpdq::tensor::{Matrix, PackedGeom, PackedStrip, PackedStripMut, SimdScratch, SimdTier};
+
+const LEN: usize = 512; // KV positions — the acceptance shape (len ≥ 512)
+const HD: usize = 64; // head dim
+const B: usize = 4; // batch lanes
+const D: usize = 512; // epilogue vector width
+
+fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
+    let mut rng = Rng::new(seed);
+    let planes = (0..k)
+        .map(|_| {
+            let dense = Matrix::from_vec(
+                d_out,
+                d_in,
+                (0..d_out * d_in).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect(),
+            );
+            PackedPlane::pack(&dense)
+        })
+        .collect();
+    let ng = d_in.div_ceil(g);
+    let coeffs = (0..=k)
+        .map(|_| Matrix::from_vec(d_out, ng, (0..d_out * ng).map(|_| rng.normal() as f32).collect()))
+        .collect();
+    BitPlanePacked { d_out, d_in, group_size: g, planes, coeffs, coeff_bits: 16 }
+}
+
+/// One benchmarked row: runs `f` at `tier`, prints it, records it in
+/// the report, and returns µs/iter so callers can compute speedups.
+#[allow(clippy::too_many_arguments)]
+fn run_row(
+    b: &Bench,
+    report: &mut JsonReport,
+    family: &str,
+    kv_bits: usize,
+    tier: SimdTier,
+    scalar_us: Option<f64>,
+    mut f: impl FnMut(),
+) -> f64 {
+    let s = bench(&mut f);
+    let us = s.per_iter_us();
+    let speedup = scalar_us.map_or(1.0, |base| base / us);
+    b.row_metric(
+        &format!("{family:<18} kv_bits={kv_bits} {:<6}", tier.label()),
+        &format!("{us:>9.2} µs/iter   ×{speedup:.2} vs scalar"),
+    );
+    report.row(|w| {
+        w.begin_object()
+            .key("family")
+            .string(family)
+            .key("kv_bits")
+            .int(kv_bits as i64)
+            .key("tier")
+            .string(tier.label())
+            .key("us_per_iter")
+            .number(us)
+            .key("speedup_vs_scalar")
+            .number(speedup)
+            .end_object();
+    });
+    us
+}
+
+fn main() {
+    let detected = SimdTier::detect();
+    let tiers: Vec<SimdTier> = if detected == SimdTier::Scalar {
+        vec![SimdTier::Scalar]
+    } else {
+        vec![SimdTier::Scalar, detected]
+    };
+    let b = Bench::new(&format!(
+        "kernels — per-family scalar vs SIMD dispatch (detected tier: {})",
+        detected.label()
+    ));
+    let mut report = JsonReport::new("kernels", "BENCH_kernels.json");
+    let mut rng = Rng::new(41);
+
+    // --- packed KV families, per bit-width -----------------------------
+    for &bits in &[2usize, 3, 4] {
+        b.section(&format!("packed KV strips — W{bits}, len={LEN}, hd={HD}, B={B}"));
+        let geom = PackedGeom::new(LEN, HD, bits, 32);
+        let mut words: Vec<Vec<u32>> = vec![vec![0u32; geom.strip_words()]; 2 * B];
+        let rows: Vec<Vec<f32>> =
+            (0..LEN).map(|_| (0..HD).map(|_| rng.normal() as f32).collect()).collect();
+        for w in words.iter_mut() {
+            let mut strip = PackedStripMut::new(geom, w);
+            for (u, row) in rows.iter().enumerate() {
+                strip.store_row(u, row);
+            }
+        }
+        let (kwords, vwords) = words.split_at(B);
+        let kstrips: Vec<PackedStrip> = kwords.iter().map(|w| PackedStrip::new(geom, w)).collect();
+        let vstrips: Vec<PackedStrip> = vwords.iter().map(|w| PackedStrip::new(geom, w)).collect();
+        let qflat: Vec<f32> = (0..B * HD).map(|_| rng.normal() as f32).collect();
+        let scale = 1.0 / (HD as f32).sqrt();
+        let mut scores = vec![0.0f32; B * LEN];
+        let mut outs_flat = vec![0.0f32; B * HD];
+        let mut simd = SimdScratch::default();
+
+        // scores for the axpys family: realistic softmax weights
+        let mut ws = vec![0.0f32; B * LEN];
+        {
+            let qs: Vec<&[f32]> = qflat.chunks_exact(HD).collect();
+            strip_dots_packed_t(SimdTier::Scalar, &qs, &kstrips, LEN, scale, &mut ws, &mut simd);
+            for sc in ws.chunks_exact_mut(LEN) {
+                softmax_t(SimdTier::Scalar, sc);
+            }
+        }
+
+        let mut base = [0.0f64; 3]; // per-family scalar µs
+        for &tier in &tiers {
+            let sc = if tier == SimdTier::Scalar { None } else { Some(base[0]) };
+            base[0] = run_row(&b, &mut report, "packed_strip_dots", bits, tier, sc, || {
+                let qs: Vec<&[f32]> = qflat.chunks_exact(HD).collect();
+                strip_dots_packed_t(tier, &qs, &kstrips, LEN, scale, &mut scores, &mut simd);
+                black_box(&scores);
+            });
+            let sc = if tier == SimdTier::Scalar { None } else { Some(base[1]) };
+            base[1] = run_row(&b, &mut report, "packed_strip_axpys", bits, tier, sc, || {
+                outs_flat.iter_mut().for_each(|o| *o = 0.0);
+                let mut outs: Vec<&mut [f32]> = outs_flat.chunks_exact_mut(HD).collect();
+                strip_axpys_packed_t(tier, &ws, &vstrips, LEN, &mut outs);
+                black_box(&outs_flat);
+            });
+            let sc = if tier == SimdTier::Scalar { None } else { Some(base[2]) };
+            base[2] = run_row(&b, &mut report, "packed_attn", bits, tier, sc, || {
+                let qs: Vec<&[f32]> = qflat.chunks_exact(HD).collect();
+                strip_dots_packed_t(tier, &qs, &kstrips, LEN, scale, &mut scores, &mut simd);
+                for sc in scores.chunks_exact_mut(LEN) {
+                    softmax_t(tier, sc);
+                }
+                outs_flat.iter_mut().for_each(|o| *o = 0.0);
+                let mut outs: Vec<&mut [f32]> = outs_flat.chunks_exact_mut(HD).collect();
+                strip_axpys_packed_t(tier, &scores, &vstrips, LEN, &mut outs);
+                black_box(&outs_flat);
+            });
+        }
+    }
+
+    // --- LUT-GEMM weight kernel, per bit-width -------------------------
+    for &k in &[2usize, 3, 4] {
+        b.section(&format!("lut_gemm — 512×512, k={k}, g=64, B={B}"));
+        let packed = random_packed(17 + k as u64, 512, 512, 64, k);
+        let xs: Vec<Vec<f32>> =
+            (0..B).map(|_| (0..512).map(|_| rng.normal() as f32).collect()).collect();
+        let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f32>> = vec![vec![0.0f32; 512]; B];
+        let mut scratch = LutScratch::default();
+        let mut scalar_us = None;
+        for &tier in &tiers {
+            let us = run_row(&b, &mut report, "lut_gemm", k, tier, scalar_us, || {
+                let mut yrefs: Vec<&mut [f32]> = ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                lut_gemm_with_tier(tier, black_box(&packed), &xrefs, &mut yrefs, &mut scratch);
+                black_box(&ys);
+            });
+            scalar_us.get_or_insert(us);
+        }
+    }
+
+    // --- f32 KV strip twins --------------------------------------------
+    b.section(&format!("f32 KV strips — len={LEN}, hd={HD}, B={B}"));
+    let kslab: Vec<f32> = (0..B * LEN * HD).map(|_| rng.normal() as f32).collect();
+    let vslab: Vec<f32> = (0..B * LEN * HD).map(|_| rng.normal() as f32).collect();
+    let qflat: Vec<f32> = (0..B * HD).map(|_| rng.normal() as f32).collect();
+    let scale = 1.0 / (HD as f32).sqrt();
+    let mut scores = vec![0.0f32; B * LEN];
+    let mut outs_flat = vec![0.0f32; B * HD];
+    let mut ws = vec![0.0f32; B * LEN];
+    {
+        let kstrips: Vec<&[f32]> = kslab.chunks_exact(LEN * HD).collect();
+        let qs: Vec<&[f32]> = qflat.chunks_exact(HD).collect();
+        strip_dots_t(SimdTier::Scalar, &qs, &kstrips, HD, scale, &mut ws);
+        for sc in ws.chunks_exact_mut(LEN) {
+            softmax_t(SimdTier::Scalar, sc);
+        }
+    }
+    let mut base = [0.0f64; 2];
+    for &tier in &tiers {
+        let sc = if tier == SimdTier::Scalar { None } else { Some(base[0]) };
+        base[0] = run_row(&b, &mut report, "f32_strip_dots", 0, tier, sc, || {
+            let kstrips: Vec<&[f32]> = kslab.chunks_exact(LEN * HD).collect();
+            let qs: Vec<&[f32]> = qflat.chunks_exact(HD).collect();
+            strip_dots_t(tier, &qs, &kstrips, HD, scale, &mut scores);
+            black_box(&scores);
+        });
+        let sc = if tier == SimdTier::Scalar { None } else { Some(base[1]) };
+        base[1] = run_row(&b, &mut report, "f32_strip_axpys", 0, tier, sc, || {
+            let vstrips: Vec<&[f32]> = vslab.chunks_exact(LEN * HD).collect();
+            outs_flat.iter_mut().for_each(|o| *o = 0.0);
+            let mut outs: Vec<&mut [f32]> = outs_flat.chunks_exact_mut(HD).collect();
+            strip_axpys_t(tier, &ws, &vstrips, HD, &mut outs);
+            black_box(&outs_flat);
+        });
+    }
+
+    // --- per-step epilogues --------------------------------------------
+    b.section(&format!("epilogues — rmsnorm/softmax, d={D}"));
+    let x: Vec<f32> = (0..D).map(|_| rng.normal() as f32).collect();
+    let gain: Vec<f32> = (0..D).map(|_| 1.0 + 0.01 * rng.normal() as f32).collect();
+    let mut out = vec![0.0f32; D];
+    let logits: Vec<f32> = (0..D).map(|_| 4.0 * rng.normal() as f32).collect();
+    let mut buf = vec![0.0f32; D];
+    let mut base = [0.0f64; 2];
+    for &tier in &tiers {
+        let sc = if tier == SimdTier::Scalar { None } else { Some(base[0]) };
+        base[0] = run_row(&b, &mut report, "rmsnorm", 0, tier, sc, || {
+            rmsnorm_t(tier, black_box(&x), &gain, 1e-5, &mut out);
+            black_box(&out);
+        });
+        let sc = if tier == SimdTier::Scalar { None } else { Some(base[1]) };
+        base[1] = run_row(&b, &mut report, "softmax", 0, tier, sc, || {
+            buf.copy_from_slice(&logits);
+            softmax_t(tier, &mut buf);
+            black_box(&buf);
+        });
+    }
+
+    report.finish();
+    b.finish();
+}

@@ -13,7 +13,7 @@ use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
 use bpdq::rng::Rng;
 use bpdq::tensor::{
     matvec, strip_axpys, strip_axpys_packed, strip_dots, strip_dots_packed, Matrix, PackedGeom,
-    PackedStrip, PackedStripMut,
+    PackedStrip, PackedStripMut, SimdScratch,
 };
 
 fn random_packed(seed: u64, d_out: usize, d_in: usize, g: usize, k: usize) -> BitPlanePacked {
@@ -71,6 +71,7 @@ fn main() {
     // (d_model=128, d_ff=344) plus one larger square; the fused kernel
     // gathers each row's plane words once per step instead of B times.
     b.section("batched decode — lut_gemm vs B × lut_gemv (tiny-LM shapes, k=2, g=64)");
+    let simd_tier = bpdq::tensor::simd::active().label();
     let mut report = JsonReport::new("lut_gemv", "BENCH_lut_gemv.json");
     for &(d_out, d_in) in &[(128usize, 128usize), (344, 128), (128, 344), (512, 512)] {
         let packed = random_packed(7 + d_out as u64, d_out, d_in, 64, 2);
@@ -119,6 +120,8 @@ fn main() {
                     .number(gemv_tok)
                     .key("speedup")
                     .number(gemv_tok / gemm_tok)
+                    .key("simd_tier")
+                    .string(simd_tier)
                     .end_object();
             });
         }
@@ -207,13 +210,14 @@ fn main() {
         let qflat: Vec<f32> = (0..bsz * hd).map(|_| rng.normal() as f32).collect();
         let mut scores = vec![0.0f32; bsz * live];
         let mut outs_flat = vec![0.0f32; bsz * hd];
+        let mut simd = SimdScratch::default();
         let s_packed = bench(|| {
             let kstrips: Vec<PackedStrip> =
                 kwords.iter().map(|w| PackedStrip::new(geom, w)).collect();
             let vstrips: Vec<PackedStrip> =
                 vwords.iter().map(|w| PackedStrip::new(geom, w)).collect();
             let qs: Vec<&[f32]> = qflat.chunks_exact(hd).collect();
-            strip_dots_packed(&qs, &kstrips, live, scale, &mut scores);
+            strip_dots_packed(&qs, &kstrips, live, scale, &mut scores, &mut simd);
             for sc in scores.chunks_exact_mut(live) {
                 softmax(sc);
             }

@@ -162,6 +162,8 @@ fn main() {
                 .int(s.arena_bytes_resident as i64)
                 .key("arena_fork_copies")
                 .int(s.arena_fork_copies as i64)
+                .key("simd_tier")
+                .string(s.simd_tier)
                 .end_object();
         });
         router.shutdown();

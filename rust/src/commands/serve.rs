@@ -46,6 +46,14 @@ fn sampling_params(args: &Args, max_new: usize) -> Result<SamplingParams> {
 }
 
 pub fn run(args: &Args) -> Result<()> {
+    // --simd {auto|scalar|avx2|neon}: pin the kernel dispatch tier.
+    // Must run before anything touches a kernel — the tier latches on
+    // first use. Unknown or host-unsupported tiers fail loudly here;
+    // there is no silent fallback.
+    if let Some(spec) = args.get("simd") {
+        let tier = bpdq::tensor::SimdTier::parse(spec).map_err(anyhow::Error::msg)?;
+        bpdq::tensor::simd::set_tier(tier).map_err(anyhow::Error::msg)?;
+    }
     let model_path = args.get_or("model", "artifacts/tiny_small.tlm");
     let engine_name = args.get_or("engine", "lut");
     let n_requests = args.get_usize("requests", 24).map_err(anyhow::Error::msg)?;
@@ -153,6 +161,7 @@ pub fn run(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown engine `{other}` (native|native-fp16|lut|pjrt)"),
     };
 
+    println!("simd kernels: {}", bpdq::tensor::simd::active().label());
     println!("starting router: {n_workers} workers, engine={engine_name}, max_batch={max_batch}");
     let router = Router::start(
         RouterConfig { n_workers, max_batch, strategy: Strategy::LeastLoaded },
@@ -316,5 +325,6 @@ fn print_summary(router: &Router) {
     );
     println!("decode             : {:.1} µs/token", s.us_per_token);
     println!("throughput         : {:.1} tok/s", s.tokens_per_sec);
+    println!("simd tier          : {}", s.simd_tier);
     println!("summary json       : {}", s.to_json());
 }

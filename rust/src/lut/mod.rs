@@ -91,6 +91,21 @@ pub fn lut_gemm(
     ys: &mut [&mut [f32]],
     scratch: &mut LutScratch,
 ) {
+    lut_gemm_with_tier(crate::tensor::simd::active(), packed, xs, ys, scratch);
+}
+
+/// [`lut_gemm`] with an explicit SIMD tier, for parity tests and benches
+/// that need to force a tier regardless of the process-wide dispatch latch.
+/// The tier only affects the per-chunk LUT gather; every accumulation is
+/// per-lane and order-preserving, so all tiers are bit-identical.
+// lint: hot
+pub fn lut_gemm_with_tier(
+    tier: crate::tensor::SimdTier,
+    packed: &BitPlanePacked,
+    xs: &[&[f32]],
+    ys: &mut [&mut [f32]],
+    scratch: &mut LutScratch,
+) {
     let nb = xs.len();
     assert_eq!(ys.len(), nb, "xs/ys batch size mismatch");
     if nb == 0 {
@@ -162,9 +177,7 @@ pub fn lut_gemm(
                     }
                     let base = chunk * nb * 256;
                     let luts = &lut[base..base + nb * 256];
-                    for (d, l) in dot.iter_mut().zip(luts.chunks_exact(256)) {
-                        *d += l[byte];
-                    }
+                    crate::tensor::simd::lut_gather_add(tier, luts, byte, dot);
                 }
                 for (a, &d) in acc.iter_mut().zip(dot.iter()) {
                     *a += cv * d;

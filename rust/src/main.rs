@@ -82,6 +82,7 @@ SUBCOMMANDS
   serve      --model <.tlm> [--engine native|pjrt|lut] [--requests N]
              [--workers N] [--max-batch B] [--max-new N] [--stream]
              [--kv-bits 0|2|3|4] (0 = f32 KV; 2..4 = packed bit-plane KV)
+             [--simd auto|scalar|avx2|neon] (kernel tier; also BPDQ_SIMD)
              [--temperature T] [--top-k K] [--top-p P] [--seed S]
              [--stop id,id,...]                streaming scheduler smoke
                                                via --stream (cancels one

@@ -6,6 +6,7 @@ use crate::rng::Rng;
 use crate::serving::kv::{KvArena, KvFormat, KvHandle};
 use crate::tensor::{
     axpy, dot, matmul_transb, matvec, strip_axpys_packed, strip_dots_packed, Matrix, PackedStrip,
+    SimdScratch,
 };
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -238,6 +239,7 @@ pub fn attend_head(
 /// bit-identically (the packed analogue of the f32 token-identity
 /// pairing between [`attend_head`] and `strip_dots`/`strip_axpys`).
 #[inline]
+#[allow(clippy::too_many_arguments)]
 pub fn attend_head_packed(
     q_h: &[f32],
     kstrip: PackedStrip,
@@ -246,9 +248,10 @@ pub fn attend_head_packed(
     scale: f32,
     scores: &mut [f32],
     out: &mut [f32],
+    simd: &mut SimdScratch,
 ) {
     debug_assert_eq!(scores.len(), len);
-    strip_dots_packed(&[q_h], &[kstrip], len, scale, scores);
+    strip_dots_packed(&[q_h], &[kstrip], len, scale, scores, simd);
     softmax(scores);
     let mut outs: [&mut [f32]; 1] = [out];
     strip_axpys_packed(scores, &[vstrip], len, &mut outs);
@@ -265,6 +268,9 @@ pub struct DecodeState {
     pos: usize,
     rope: Arc<Rope>,
     max_seq: usize,
+    /// Subset-sum table workspace for the packed attention kernels
+    /// (unused for f32 KV; never cloned on fork — tables are per-call).
+    simd: SimdScratch,
 }
 
 impl Drop for DecodeState {
@@ -293,6 +299,7 @@ impl DecodeState {
             pos: 0,
             rope: model.rope(),
             max_seq: model.decode_capacity(),
+            simd: SimdScratch::default(),
         }
     }
 
@@ -325,6 +332,7 @@ impl DecodeState {
             pos: self.pos,
             rope: self.rope.clone(),
             max_seq: self.max_seq,
+            simd: SimdScratch::default(),
         }
     }
 
@@ -381,6 +389,7 @@ impl DecodeState {
                         scale,
                         &mut scores,
                         &mut attn[o0..o0 + hd],
+                        &mut self.simd,
                     ),
                 }
             }

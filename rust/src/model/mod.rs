@@ -396,28 +396,18 @@ impl Model {
     }
 }
 
-/// RMSNorm: x * g / rms(x).
+/// RMSNorm: x * g / rms(x). Dispatches through `tensor::simd` (scalar
+/// reference: `tensor::ops::rmsnorm`).
+#[inline]
 pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(x.len(), gain.len());
-    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
-    let inv = 1.0 / (ms + RMS_EPS as f64).sqrt() as f32;
-    for ((o, &xv), &g) in out.iter_mut().zip(x).zip(gain) {
-        *o = xv * inv * g;
-    }
+    crate::tensor::rmsnorm(x, gain, RMS_EPS, out);
 }
 
-/// In-place softmax over a slice.
+/// In-place softmax over a slice. Dispatches through `tensor::simd`
+/// (value-exact across tiers; scalar reference: `tensor::ops::softmax`).
+#[inline]
 pub fn softmax(xs: &mut [f32]) {
-    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
-    for x in xs.iter_mut() {
-        *x = (*x - max).exp();
-        sum += *x;
-    }
-    let inv = 1.0 / sum;
-    for x in xs.iter_mut() {
-        *x *= inv;
-    }
+    crate::tensor::softmax(xs);
 }
 
 /// SiLU activation.

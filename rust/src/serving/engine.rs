@@ -303,6 +303,8 @@ struct BatchedLutStep {
     down: Vec<f32>,
     // group-batched score buffer, `group_len × (t+1)`, lane-major
     scores: Vec<f32>,
+    // per-call SIMD table scratch for the packed-KV attention kernels
+    simd: crate::tensor::SimdScratch,
 }
 
 impl BatchedLutStep {
@@ -330,6 +332,7 @@ impl BatchedLutStep {
             mid: Vec::new(),
             down: Vec::new(),
             scores: Vec::new(),
+            simd: crate::tensor::SimdScratch::default(),
         }
     }
 }
@@ -432,6 +435,7 @@ fn fused_attention<'v>(
     attn: &mut [f32],
     scores_buf: &mut Vec<f32>,
     refs: &mut StripRefs<'v>,
+    simd: &mut crate::tensor::SimdScratch,
 ) {
     for (t, lanes) in groups {
         let (t, gl) = (*t, lanes.len());
@@ -459,7 +463,7 @@ fn fused_attention<'v>(
                 match format {
                     KvFormat::F32 => strip_dots(&refs.qs, &refs.ks, hd, scale, scores),
                     KvFormat::BitPlane { .. } => {
-                        strip_dots_packed(&refs.qs, &refs.ksp, t + 1, scale, scores)
+                        strip_dots_packed(&refs.qs, &refs.ksp, t + 1, scale, scores, simd)
                     }
                 }
                 for lane_scores in scores.chunks_exact_mut(t + 1) {
@@ -590,6 +594,7 @@ impl Stepper for BatchedLutStep {
                 &mut self.attn[..nb * d],
                 &mut self.scores,
                 &mut strip_refs,
+                &mut self.simd,
             );
             drop(strip_refs);
             drop(views);

@@ -129,12 +129,14 @@ pub struct LatencySummary {
     pub arena_slot_bytes: usize,
     /// slot-to-slot prefix copies performed by `fork`
     pub arena_fork_copies: u64,
+    /// active SIMD dispatch tier label (`"scalar"` / `"avx2"` / `"neon"`)
+    pub simd_tier: &'static str,
 }
 
 impl LatencySummary {
-    /// Compact JSON object. Every field is a plain JSON number — the
-    /// summary is constructed so non-finite values cannot appear (see
-    /// `tokens_per_sec` handling in [`Metrics::summary`]).
+    /// Compact JSON object. Every field but `simd_tier` is a plain JSON
+    /// number — the summary is constructed so non-finite values cannot
+    /// appear (see `tokens_per_sec` handling in [`Metrics::summary`]).
     pub fn to_json(&self) -> String {
         let mut w = JsonWriter::new();
         w.begin_object()
@@ -176,6 +178,8 @@ impl LatencySummary {
             .int(self.arena_slot_bytes as i64)
             .key("arena_fork_copies")
             .int(self.arena_fork_copies as i64)
+            .key("simd_tier")
+            .string(self.simd_tier)
             .end_object();
         w.finish()
     }
@@ -286,6 +290,7 @@ impl Metrics {
             arena_bytes_resident: m.arenas.values().map(|a| a.bytes_resident).sum(),
             arena_slot_bytes: m.arenas.values().map(|a| a.slot_bytes).max().unwrap_or(0),
             arena_fork_copies: m.arenas.values().map(|a| a.fork_copies).sum(),
+            simd_tier: crate::tensor::simd::active().label(),
         }
     }
 }
@@ -358,11 +363,13 @@ mod tests {
             "arena_bytes_resident",
             "arena_slot_bytes",
             "arena_fork_copies",
+            "simd_tier",
         ] {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
-        // No quoted values: every field in LatencySummary is numeric.
-        assert_eq!(json.matches('"').count(), 2 * 19, "non-numeric value leaked into {json}");
+        // 20 quoted keys plus the one quoted value (`simd_tier` — every
+        // other field is numeric and must serialize unquoted).
+        assert_eq!(json.matches('"').count(), 2 * 20 + 2, "non-numeric value leaked into {json}");
     }
 
     #[test]

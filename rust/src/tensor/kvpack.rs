@@ -226,6 +226,27 @@ fn set_half(words: &mut [u32], idx: usize, v: f32) {
     }
 }
 
+/// Byte-granular plane view: the 8 plane bits starting at bit position
+/// `bp` (bit `t` of the result = plane bit `bp + t`). This is the unit
+/// the table-driven SIMD kernels consume — one subset-sum table lookup
+/// per extracted byte instead of a per-bit `trailing_zeros` walk. Plane
+/// rows start at `u·hd`, which is not byte-aligned for odd `hd`, so the
+/// straddling case reads two words; bits past the end of the plane read
+/// as zero (callers mask to their span anyway).
+// lint: hot
+#[inline]
+pub fn plane_byte(plane: &[u32], bp: usize) -> usize {
+    let w = bp >> 5;
+    let off = bp & 31;
+    if off <= 24 {
+        ((plane[w] >> off) & 0xFF) as usize
+    } else {
+        let w0 = plane[w] as u64;
+        let w1 = plane.get(w + 1).copied().unwrap_or(0) as u64;
+        (((w0 | (w1 << 32)) >> off) & 0xFF) as usize
+    }
+}
+
 /// Shared read view of one packed strip (`strip_words` u32s).
 #[derive(Clone, Copy)]
 pub struct PackedStrip<'a> {

@@ -7,14 +7,44 @@
 //! Layout is row-major; the generic [`Mat<T>`] covers f32 (models) and
 //! f64 (conditioning-sensitive linear algebra). The f32 matmul uses
 //! register-tiled kernels over the K dimension (see [`matmul`]).
+//!
+//! # SIMD dispatch & numerics policy
+//!
+//! Decode-path kernels (`dot`/`axpy`, the f32 and packed strip
+//! dots/axpys, `rmsnorm`/`softmax`, the `lut_gemm` gather) are
+//! re-exported from [`simd`], which selects a dispatch tier
+//! (`scalar`/`avx2`/`neon`) **once per process**: CPU feature probes by
+//! default, overridable via `BPDQ_SIMD={auto|scalar|avx2|neon}` or
+//! `serve --simd`. An invalid or unsupported tier fails loudly (env →
+//! panic, flag → error) — never a silent fallback. The scalar kernels
+//! in `ops` remain the semantic reference; every dispatched kernel has
+//! a `*_t` twin taking an explicit tier so parity tests and benches can
+//! force each tier on one host.
+//!
+//! Parity contract per kernel family (asserted in
+//! `tests/simd_parity.rs`):
+//!
+//! * **Bit-exact** — packed strip dots/axpys (the subset-sum tables
+//!   store the same ascending-order f32 chains as the chunked scalar
+//!   fold; scatters update channels independently with identical IEEE
+//!   ops), `axpy` / f32 strip axpys (per-element mul + add, no
+//!   reassociation, skip mask replicated verbatim), and the LUT-GEMM
+//!   gather (per-lane adds).
+//! * **Value-exact** — `softmax` (the vectorized max is an associative
+//!   reduction; exp + sum + scale stay scalar verbatim).
+//! * **Tolerance-bounded** — `dot` / f32 strip dots (reassociated f32
+//!   reduction) and `rmsnorm` (reassociated f64 sum of squares only;
+//!   the f32 epilogue is per-element identical).
 
 pub mod kvpack;
-mod ops;
+pub mod ops;
+pub mod simd;
 
-pub use kvpack::{f16_decode, f16_encode, PackedGeom, PackedStrip, PackedStripMut};
-pub use ops::{
-    axpy, dot, matmul, matmul_f64, matmul_transb, matvec, matvec_transa, strip_axpys,
-    strip_axpys_packed, strip_dots, strip_dots_packed,
+pub use kvpack::{f16_decode, f16_encode, plane_byte, PackedGeom, PackedStrip, PackedStripMut};
+pub use ops::{matmul, matmul_f64, matmul_transb, matvec_transa};
+pub use simd::{
+    axpy, dot, matvec, rmsnorm, softmax, strip_axpys, strip_axpys_packed, strip_dots,
+    strip_dots_packed, SimdScratch, SimdTier,
 };
 
 use std::fmt;

@@ -173,6 +173,13 @@ pub fn strip_dots(qs: &[&[f32]], strips: &[&[f32]], hd: usize, scale: f32, score
 /// [`strip_dots`]; weights below 1e-9 are skipped exactly as in the
 /// per-session `attend_head` path so both orders accumulate the same
 /// f32 sums in the same order (token-identical parity).
+///
+/// The `w < 1e-9` skip assumes weights are **softmax outputs** (always
+/// `>= 0`): it is a "contributes nothing at f32 precision" cutoff, not
+/// a magnitude test, and a negative weight would be silently dropped.
+/// That contract is asserted in debug builds, and the SIMD twin in
+/// `tensor::simd` replicates this exact comparison so the skip mask is
+/// bit-identical across tiers.
 // lint: hot
 pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f32]]) {
     let nb = outs.len();
@@ -186,6 +193,7 @@ pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f
         let o = u * hd;
         for b in 0..nb {
             let w = ws[b * len + u];
+            debug_assert!(w >= 0.0, "strip_axpys weights must be softmax outputs (got {w})");
             if w < 1e-9 {
                 continue;
             }
@@ -194,26 +202,36 @@ pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f
     }
 }
 
-/// `Σ q[j]` over the set bits of a plane bit-span `[start, start + n)`
-/// (`q[j]` pairs with bit `start + j`) — the popcount-style partial dot
-/// of the fused-dequant score kernel.
+/// `Σ q[j]` over the set bits of channels `[lo, hi)` of the plane row
+/// starting at bit `row0` (`q` is the full `hd`-wide activation row;
+/// `q[j]` pairs with plane bit `row0 + j`) — the popcount-style partial
+/// dot of the fused-dequant score kernel.
+///
+/// Accumulation is *chunked at absolute channel multiples of 8*: each
+/// 8-channel chunk folds its set bits ascending into a fresh
+/// sub-accumulator (starting from 0.0), and the chunk sums are added in
+/// chunk order. This is exactly the chain shape of the table-driven
+/// SIMD path (`tensor::simd`), whose 256-entry subset-sum tables store
+/// ascending-order chains per byte — so the scalar reference and the
+/// table kernels are bit-exact twins, not merely close (see the
+/// "SIMD dispatch & numerics policy" notes in `tensor/mod.rs`).
 // lint: hot
 #[inline]
-fn fold_set_bits(plane: &[u32], start: usize, n: usize, q: &[f32]) -> f32 {
-    debug_assert!(q.len() >= n);
+fn fold_set_bits(plane: &[u32], row0: usize, lo: usize, hi: usize, q: &[f32]) -> f32 {
+    debug_assert!(q.len() >= hi);
     let mut acc = 0.0f32;
-    let mut j = 0;
-    while j < n {
-        let bp = start + j;
-        let off = bp % 32;
-        let take = (32 - off).min(n - j);
-        let mask = if take == 32 { u32::MAX } else { (1u32 << take) - 1 };
-        let mut m = (plane[bp / 32] >> off) & mask;
+    let mut j = lo;
+    while j < hi {
+        let c = j >> 3;
+        let take = ((c + 1) * 8).min(hi) - j;
+        let mut m = super::kvpack::plane_byte(plane, row0 + j) & ((1usize << take) - 1);
+        let mut sub = 0.0f32;
         while m != 0 {
             let t = m.trailing_zeros() as usize;
-            acc += q[j + t];
+            sub += q[j + t];
             m &= m - 1;
         }
+        acc += sub;
         j += take;
     }
     acc
@@ -300,7 +318,7 @@ pub fn strip_dots_packed(
                 let hi = (lo + group).min(hd);
                 s += st.coeff(u, g, 0) * qsums[b * ng + g];
                 for i in 0..bits {
-                    let pd = fold_set_bits(st.plane(i), u * hd + lo, hi - lo, &qs[b][lo..hi]);
+                    let pd = fold_set_bits(st.plane(i), u * hd, lo, hi, qs[b]);
                     s += st.coeff(u, g, 1 + i) * pd;
                 }
             }
@@ -315,8 +333,9 @@ pub fn strip_dots_packed(
 ///
 /// — per group the bias adds `w·c₀` to every channel and each plane
 /// scatters `w·cᵢ` onto its set bits. Position-major walk and the same
-/// `< 1e-9` weight skip as the f32 kernel, so the packed single-session
-/// and batched paths accumulate identically to each other.
+/// `< 1e-9` weight skip as the f32 kernel (softmax outputs only — see
+/// [`strip_axpys`]), so the packed single-session and batched paths
+/// accumulate identically to each other.
 // lint: hot
 pub fn strip_axpys_packed(ws: &[f32], strips: &[PackedStrip], len: usize, outs: &mut [&mut [f32]]) {
     let nb = outs.len();
@@ -328,6 +347,7 @@ pub fn strip_axpys_packed(ws: &[f32], strips: &[PackedStrip], len: usize, outs: 
     for u in 0..len {
         for b in 0..nb {
             let w = ws[b * len + u];
+            debug_assert!(w >= 0.0, "strip_axpys_packed weights must be softmax outputs (got {w})");
             if w < 1e-9 {
                 continue;
             }
@@ -349,6 +369,38 @@ pub fn strip_axpys_packed(ws: &[f32], strips: &[PackedStrip], len: usize, outs: 
                 }
             }
         }
+    }
+}
+
+/// RMSNorm scalar reference: `out = x * gain / rms(x)`, with the mean
+/// square accumulated in f64 (conditioning) and the epilogue entirely
+/// per-element in f32. The SIMD tiers reassociate only the f64 sum of
+/// squares; the epilogue is copied verbatim, so the tier difference is
+/// bounded by the f64 reduction's reassociation error alone.
+// lint: hot
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    for ((o, &xv), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = xv * inv * g;
+    }
+}
+
+/// In-place softmax scalar reference. The max pass is an associative
+/// reduction (vectorizing it is value-exact); the exp + sum pass stays
+/// scalar in every tier so softmax outputs are identical across tiers.
+// lint: hot
+pub fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
     }
 }
 

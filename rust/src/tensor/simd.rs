@@ -1,0 +1,1038 @@
+//! Runtime-dispatched SIMD kernel layer — the facade in front of the
+//! scalar reference kernels in [`super::ops`].
+//!
+//! A [`SimdTier`] is selected **once** per process (cached in a
+//! `OnceLock`): by default via CPU feature probes
+//! (`is_x86_feature_detected!("avx2")` on x86_64, baseline NEON on
+//! aarch64), overridable with the `BPDQ_SIMD={auto|scalar|avx2|neon}`
+//! env var or `serve --simd`. Requesting a tier the host cannot run is
+//! a **loud failure** (panic for the env var, `Err` for the flag) —
+//! never a silent fallback — so bench artifacts and parity tests always
+//! know which kernels actually ran.
+//!
+//! Every dispatched kernel has a `*_t` twin taking an explicit tier so
+//! tests and benches can force each tier on one host. The scalar
+//! reference in `ops` is the semantic ground truth; the parity contract
+//! per kernel family is spelled out in `tensor/mod.rs` ("SIMD dispatch
+//! & numerics policy").
+//!
+//! The packed-KV kernels do not use per-bit intrinsics at all: they
+//! apply the LUT-GEMM subset-sum trick to plane bytes — one 256-entry
+//! partial-dot table per 8-channel chunk, built once per call, then one
+//! table lookup per (plane, chunk) instead of a `trailing_zeros` walk.
+//! Tables store ascending-bit-order f32 chains, which makes them
+//! bit-exact against the chunked scalar fold (see `ops::fold_set_bits`).
+
+use super::kvpack::{plane_byte, PackedStrip};
+use super::{ops, Matrix};
+use std::sync::OnceLock;
+
+/// Kernel dispatch tier. `Scalar` is always supported; `Avx2`/`Neon`
+/// are only constructible (via [`SimdTier::parse`] / [`set_tier`] /
+/// [`SimdTier::detect`]) on hosts that can actually execute them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable lowercase name — used in bench JSON rows, the serve
+    /// banner, and `LatencySummary`.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Parse a tier spec (`auto|scalar|avx2|neon`). `auto` resolves to
+    /// [`SimdTier::detect`]. Unknown names and tiers the host cannot
+    /// execute are errors — an unsupported tier must fail loudly here,
+    /// not fall back at dispatch time.
+    pub fn parse(spec: &str) -> Result<SimdTier, String> {
+        let tier = match spec {
+            "auto" => return Ok(SimdTier::detect()),
+            "scalar" => SimdTier::Scalar,
+            "avx2" => SimdTier::Avx2,
+            "neon" => SimdTier::Neon,
+            _ => {
+                return Err(format!(
+                    "unknown SIMD tier `{spec}` (expected auto|scalar|avx2|neon)"
+                ))
+            }
+        };
+        if !tier.is_supported() {
+            return Err(format!("SIMD tier `{spec}` is not supported on this host"));
+        }
+        Ok(tier)
+    }
+
+    /// Can this host execute the tier's kernels?
+    pub fn is_supported(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            SimdTier::Avx2 => x86_has_avx2(),
+            SimdTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Probe the host: AVX2 if detected, NEON on aarch64 (baseline
+    /// feature), scalar otherwise.
+    pub fn detect() -> SimdTier {
+        if SimdTier::Avx2.is_supported() {
+            SimdTier::Avx2
+        } else if SimdTier::Neon.is_supported() {
+            SimdTier::Neon
+        } else {
+            SimdTier::Scalar
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn x86_has_avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn x86_has_avx2() -> bool {
+    false
+}
+
+static ACTIVE: OnceLock<SimdTier> = OnceLock::new();
+
+/// The process-wide tier, resolved once on first use: `BPDQ_SIMD` if
+/// set (an invalid or unsupported value panics — requesting a specific
+/// tier and silently getting another would invalidate every artifact
+/// that records it), else [`SimdTier::detect`].
+pub fn active() -> SimdTier {
+    *ACTIVE.get_or_init(|| match std::env::var("BPDQ_SIMD") {
+        Ok(spec) => match SimdTier::parse(&spec) {
+            Ok(tier) => tier,
+            Err(e) => panic!("BPDQ_SIMD: {e}"),
+        },
+        Err(_) => SimdTier::detect(),
+    })
+}
+
+/// Pin the process-wide tier (the `serve --simd` path; takes precedence
+/// over `BPDQ_SIMD` because it runs before any kernel dispatches).
+/// Errors if the tier is unsupported on this host or if dispatch
+/// already latched a different tier.
+pub fn set_tier(tier: SimdTier) -> Result<(), String> {
+    if !tier.is_supported() {
+        return Err(format!(
+            "SIMD tier `{}` is not supported on this host",
+            tier.label()
+        ));
+    }
+    let got = *ACTIVE.get_or_init(|| tier);
+    if got == tier {
+        Ok(())
+    } else {
+        Err(format!(
+            "SIMD tier already pinned to `{}` — set it before any kernel runs",
+            got.label()
+        ))
+    }
+}
+
+/// Reusable workspace for the table-driven packed kernels: the
+/// per-lane subset-sum tables (`ceil(hd/8) × 256` entries) and the
+/// per-group activation sums. Owned by whoever drives a decode loop
+/// (`DecodeState`, `BatchedLutStep`, benches) so the hot path stays
+/// allocation-free after warmup (`resize` reuses capacity).
+#[derive(Debug, Default)]
+pub struct SimdScratch {
+    lut: Vec<f32>,
+    qsums: Vec<f32>,
+}
+
+/// Positions below this length skip the table path even on SIMD tiers:
+/// building the subset-sum tables costs `ceil(hd/8) × 256` adds per
+/// lane, which only amortizes once enough positions reuse them. Values
+/// are bit-identical either way (the chunked scalar fold is the table
+/// path's twin), so this threshold is purely a cost model.
+const PACKED_TABLE_MIN_LEN: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Dispatched kernels (active-tier wrappers + explicit-tier `_t` twins)
+// ---------------------------------------------------------------------------
+
+/// Dispatched contiguous dot product.
+// lint: hot
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_t(active(), a, b)
+}
+
+/// [`dot`] at an explicit tier. Tolerance-bounded vs the scalar
+/// reference (SIMD tiers reassociate the reduction).
+// lint: hot
+#[inline]
+pub fn dot_t(tier: SimdTier, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(tier.is_supported());
+    match tier {
+        SimdTier::Scalar => ops::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 tier is only constructible on hosts where
+        // `is_x86_feature_detected!("avx2")` reported support, so the
+        // target feature is present at every dispatch site.
+        SimdTier::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline aarch64 target feature; the fn is
+        // unsafe only for uniformity with the avx2 twin.
+        SimdTier::Neon => unsafe { neon::dot(a, b) },
+        // Tiers foreign to this ISA are rejected by `is_supported`
+        // before they can reach dispatch; keep the scalar reference as
+        // the statically-complete arm.
+        _ => ops::dot(a, b),
+    }
+}
+
+/// Dispatched `y += alpha * x`.
+// lint: hot
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_t(active(), alpha, x, y)
+}
+
+/// [`axpy`] at an explicit tier. Bit-exact across tiers: every element
+/// is one mul + one add with no reassociation, so the vector lanes
+/// perform the identical IEEE ops.
+// lint: hot
+#[inline]
+pub fn axpy_t(tier: SimdTier, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert!(tier.is_supported());
+    match tier {
+        SimdTier::Scalar => ops::axpy(alpha, x, y),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only constructible when the host supports it.
+        SimdTier::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline aarch64 feature.
+        SimdTier::Neon => unsafe { neon::axpy(alpha, x, y) },
+        _ => ops::axpy(alpha, x, y),
+    }
+}
+
+/// Dispatched batched f32 strip dots (see [`ops::strip_dots`]).
+// lint: hot
+pub fn strip_dots(qs: &[&[f32]], strips: &[&[f32]], hd: usize, scale: f32, scores: &mut [f32]) {
+    strip_dots_t(active(), qs, strips, hd, scale, scores)
+}
+
+/// [`strip_dots`] at an explicit tier: the scalar loop structure with
+/// every row dot dispatched. Tolerance-bounded like [`dot_t`].
+// lint: hot
+pub fn strip_dots_t(
+    tier: SimdTier,
+    qs: &[&[f32]],
+    strips: &[&[f32]],
+    hd: usize,
+    scale: f32,
+    scores: &mut [f32],
+) {
+    if tier == SimdTier::Scalar {
+        ops::strip_dots(qs, strips, hd, scale, scores);
+        return;
+    }
+    let nb = qs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(scores.len() % nb, 0);
+    let len = scores.len() / nb;
+    for u in 0..len {
+        let o = u * hd;
+        for b in 0..nb {
+            scores[b * len + u] = dot_t(tier, qs[b], &strips[b][o..o + hd]) * scale;
+        }
+    }
+}
+
+/// Dispatched batched f32 strip axpys (see [`ops::strip_axpys`]).
+// lint: hot
+pub fn strip_axpys(ws: &[f32], strips: &[&[f32]], hd: usize, outs: &mut [&mut [f32]]) {
+    strip_axpys_t(active(), ws, strips, hd, outs)
+}
+
+/// [`strip_axpys`] at an explicit tier. Bit-exact across tiers: the
+/// `w < 1e-9` softmax-weight skip is replicated verbatim (same
+/// comparison, same walk order) and [`axpy_t`] is per-element exact.
+// lint: hot
+pub fn strip_axpys_t(
+    tier: SimdTier,
+    ws: &[f32],
+    strips: &[&[f32]],
+    hd: usize,
+    outs: &mut [&mut [f32]],
+) {
+    if tier == SimdTier::Scalar {
+        ops::strip_axpys(ws, strips, hd, outs);
+        return;
+    }
+    let nb = outs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(ws.len() % nb, 0);
+    let len = ws.len() / nb;
+    for u in 0..len {
+        let o = u * hd;
+        for b in 0..nb {
+            let w = ws[b * len + u];
+            debug_assert!(w >= 0.0, "strip_axpys weights must be softmax outputs (got {w})");
+            if w < 1e-9 {
+                continue;
+            }
+            axpy_t(tier, w, &strips[b][o..o + hd], &mut *outs[b]);
+        }
+    }
+}
+
+/// Dispatched fused-dequant packed strip dots (see
+/// [`ops::strip_dots_packed`]). `scratch` holds the subset-sum tables;
+/// callers that loop (engines, decode states) should reuse one.
+// lint: hot
+pub fn strip_dots_packed(
+    qs: &[&[f32]],
+    strips: &[PackedStrip],
+    len: usize,
+    scale: f32,
+    scores: &mut [f32],
+    scratch: &mut SimdScratch,
+) {
+    strip_dots_packed_t(active(), qs, strips, len, scale, scores, scratch)
+}
+
+/// [`strip_dots_packed`] at an explicit tier. **Bit-exact** across
+/// tiers: on SIMD tiers each plane's partial dot is one table lookup
+/// per 8-channel chunk, and the tables store the same ascending-order
+/// f32 chains the chunked scalar fold accumulates.
+// lint: hot
+pub fn strip_dots_packed_t(
+    tier: SimdTier,
+    qs: &[&[f32]],
+    strips: &[PackedStrip],
+    len: usize,
+    scale: f32,
+    scores: &mut [f32],
+    scratch: &mut SimdScratch,
+) {
+    debug_assert!(tier.is_supported());
+    if tier == SimdTier::Scalar || len < PACKED_TABLE_MIN_LEN {
+        ops::strip_dots_packed(qs, strips, len, scale, scores);
+        return;
+    }
+    let nb = qs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(scores.len(), nb * len);
+    let geom = strips[0].geom;
+    let (hd, bits, group, ng) = (geom.hd, geom.bits, geom.group, geom.n_groups());
+    let n_chunks = hd.div_ceil(8);
+    scratch.lut.resize(n_chunks * 256, 0.0);
+    scratch.qsums.resize(ng, 0.0);
+    // Lane-outer (unlike the position-outer scalar walk) so one lane's
+    // tables stay hot; per-(b, u) scores are independent, so the loop
+    // order cannot change any value.
+    for b in 0..nb {
+        let st = &strips[b];
+        debug_assert_eq!(st.geom, geom);
+        let q = qs[b];
+        debug_assert_eq!(q.len(), hd);
+        build_chunk_tables(q, n_chunks, &mut scratch.lut);
+        for g in 0..ng {
+            let lo = g * group;
+            let hi = (lo + group).min(hd);
+            scratch.qsums[g] = q[lo..hi].iter().sum();
+        }
+        for u in 0..len {
+            let row0 = u * hd;
+            let mut s = 0.0f32;
+            for g in 0..ng {
+                let lo = g * group;
+                let hi = (lo + group).min(hd);
+                s += st.coeff(u, g, 0) * scratch.qsums[g];
+                for i in 0..bits {
+                    let plane = st.plane(i);
+                    let mut pd = 0.0f32;
+                    let mut j = lo;
+                    while j < hi {
+                        let c = j >> 3;
+                        let take = ((c + 1) * 8).min(hi) - j;
+                        let byte = plane_byte(plane, row0 + j) & ((1usize << take) - 1);
+                        // Shift maps extracted bit t (channel j + t) to
+                        // table bit (j - 8c) + t, pairing it with
+                        // q[8c + (j - 8c) + t] = q[j + t].
+                        pd += scratch.lut[c * 256 + (byte << (j - c * 8))];
+                        j += take;
+                    }
+                    s += st.coeff(u, g, 1 + i) * pd;
+                }
+            }
+            scores[b * len + u] = s * scale;
+        }
+    }
+}
+
+/// Dispatched fused-dequant packed strip axpys (see
+/// [`ops::strip_axpys_packed`]).
+// lint: hot
+pub fn strip_axpys_packed(
+    ws: &[f32],
+    strips: &[PackedStrip],
+    len: usize,
+    outs: &mut [&mut [f32]],
+) {
+    strip_axpys_packed_t(active(), ws, strips, len, outs)
+}
+
+/// [`strip_axpys_packed`] at an explicit tier. **Bit-exact** across
+/// tiers: channels are updated independently (blend-masked vector adds
+/// on full 8-channel chunks, a bit walk on ragged edges), the per-lane
+/// position order is unchanged, and the `w < 1e-9` softmax-weight skip
+/// is replicated verbatim.
+// lint: hot
+pub fn strip_axpys_packed_t(
+    tier: SimdTier,
+    ws: &[f32],
+    strips: &[PackedStrip],
+    len: usize,
+    outs: &mut [&mut [f32]],
+) {
+    debug_assert!(tier.is_supported());
+    if tier == SimdTier::Scalar {
+        ops::strip_axpys_packed(ws, strips, len, outs);
+        return;
+    }
+    let nb = outs.len();
+    debug_assert_eq!(strips.len(), nb);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(ws.len(), nb * len);
+    // Lane-outer like the packed dots: each out row still sees
+    // positions in ascending order, so its f32 accumulation sequence is
+    // identical to the position-outer scalar walk.
+    for b in 0..nb {
+        let st = &strips[b];
+        let geom = st.geom;
+        let (hd, bits, group) = (geom.hd, geom.bits, geom.group);
+        let out = &mut *outs[b];
+        debug_assert_eq!(out.len(), hd);
+        for u in 0..len {
+            let w = ws[b * len + u];
+            debug_assert!(w >= 0.0, "strip_axpys_packed weights must be softmax (got {w})");
+            if w < 1e-9 {
+                continue;
+            }
+            let row0 = u * hd;
+            for g in 0..geom.n_groups() {
+                let lo = g * group;
+                let hi = (lo + group).min(hd);
+                let base = w * st.coeff(u, g, 0);
+                for v in out[lo..hi].iter_mut() {
+                    *v += base;
+                }
+                for i in 0..bits {
+                    let add = w * st.coeff(u, g, 1 + i);
+                    let plane = st.plane(i);
+                    let mut j = lo;
+                    while j < hi {
+                        let c = j >> 3;
+                        let take = ((c + 1) * 8).min(hi) - j;
+                        let byte = plane_byte(plane, row0 + j) & ((1usize << take) - 1);
+                        if take == 8 {
+                            scatter_add8_t(tier, &mut out[j..j + 8], byte, add);
+                        } else {
+                            let mut m = byte;
+                            while m != 0 {
+                                let t = m.trailing_zeros() as usize;
+                                out[j + t] += add;
+                                m &= m - 1;
+                            }
+                        }
+                        j += take;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatched RMSNorm (see [`ops::rmsnorm`]).
+// lint: hot
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
+    rmsnorm_t(active(), x, gain, eps, out)
+}
+
+/// [`rmsnorm`] at an explicit tier. Tolerance-bounded: only the f64
+/// sum of squares reassociates; the f32 epilogue is per-element
+/// identical to the scalar reference.
+// lint: hot
+pub fn rmsnorm_t(tier: SimdTier, x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
+    if tier == SimdTier::Scalar {
+        ops::rmsnorm(x, gain, eps, out);
+        return;
+    }
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = sumsq_t(tier, x) / x.len() as f64;
+    let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    for ((o, &xv), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = xv * inv * g;
+    }
+}
+
+/// Dispatched in-place softmax (see [`ops::softmax`]).
+// lint: hot
+pub fn softmax(xs: &mut [f32]) {
+    softmax_t(active(), xs)
+}
+
+/// [`softmax`] at an explicit tier. **Value-exact** across tiers: the
+/// vectorized max is an associative reduction (any association yields
+/// the same maximum) and the exp + sum + scale passes are the scalar
+/// reference verbatim.
+// lint: hot
+pub fn softmax_t(tier: SimdTier, xs: &mut [f32]) {
+    if tier == SimdTier::Scalar {
+        ops::softmax(xs);
+        return;
+    }
+    let max = max_t(tier, xs);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Dispatched matvec: every row through [`dot_t`] with the tier
+/// hoisted out of the row loop (decode-path linears and the lm_head).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let tier = active();
+    debug_assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot_t(tier, a.row(i), x)).collect()
+}
+
+/// `dot[b] += luts[b*256 + byte]` for every LUT lane — the gather +
+/// accumulate inner step of `lut_gemm`. **Bit-exact** across tiers:
+/// lanes are independent and the vector add performs the identical
+/// per-lane IEEE op. AVX2 uses a hardware gather for blocks of 8
+/// lanes; NEON has no gather, so it shares the scalar loop.
+// lint: hot
+#[inline]
+pub fn lut_gather_add(tier: SimdTier, luts: &[f32], byte: usize, dot: &mut [f32]) {
+    debug_assert!(byte < 256);
+    debug_assert!(luts.len() >= dot.len() * 256);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only constructible when the host supports it;
+        // the gather indices are bounded by the debug-asserted
+        // `luts.len() >= dot.len() * 256` contract (checked again
+        // inside via slice indexing on the scalar tail).
+        SimdTier::Avx2 if dot.len() >= 8 => unsafe { avx2::lut_gather_add(luts, byte, dot) },
+        _ => {
+            for (d, l) in dot.iter_mut().zip(luts.chunks_exact(256)) {
+                *d += l[byte];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Internal helpers
+// ---------------------------------------------------------------------------
+
+/// Build the per-chunk subset-sum tables over one activation row:
+/// `lut[c*256 + p] = Σ_{t ∈ bits(p)} q[8c + t]`, accumulated in
+/// **ascending bit order from 0.0** (remove-highest-bit recursion), so
+/// every entry is the exact chain the chunked scalar fold would
+/// compute for the same byte.
+// lint: hot
+fn build_chunk_tables(q: &[f32], n_chunks: usize, lut: &mut [f32]) {
+    debug_assert_eq!(lut.len(), n_chunks * 256);
+    for c in 0..n_chunks {
+        let t = &mut lut[c * 256..(c + 1) * 256];
+        t[0] = 0.0;
+        for hi_bit in 0..8usize {
+            let qv = q.get(c * 8 + hi_bit).copied().unwrap_or(0.0);
+            let w = 1usize << hi_bit;
+            for p in 0..w {
+                t[w + p] = t[p] + qv;
+            }
+        }
+    }
+}
+
+/// `out[t] += add` for every set bit `t` of `byte` over one aligned
+/// 8-channel chunk (`out.len() >= 8`). Vector tiers blend-mask the add
+/// so untouched lanes keep their exact bit patterns.
+// lint: hot
+#[inline]
+fn scatter_add8_t(tier: SimdTier, out: &mut [f32], byte: usize, add: f32) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only constructible when the host supports it;
+        // callers pass `out.len() >= 8` (debug-asserted inside).
+        SimdTier::Avx2 => unsafe { avx2::scatter_add8(out, byte, add) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline aarch64 feature.
+        SimdTier::Neon => unsafe { neon::scatter_add8(out, byte, add) },
+        _ => {
+            let mut m = byte;
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                out[t] += add;
+                m &= m - 1;
+            }
+        }
+    }
+}
+
+/// f64 sum of squares of an f32 slice (the rmsnorm reduction).
+// lint: hot
+#[inline]
+fn sumsq_t(tier: SimdTier, x: &[f32]) -> f64 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only constructible when the host supports it.
+        SimdTier::Avx2 => unsafe { avx2::sumsq_f64(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline aarch64 feature.
+        SimdTier::Neon => unsafe { neon::sumsq_f64(x) },
+        _ => x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>(),
+    }
+}
+
+/// Maximum element (softmax max pass; `NEG_INFINITY` identity).
+// lint: hot
+#[inline]
+fn max_t(tier: SimdTier, xs: &[f32]) -> f32 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only constructible when the host supports it.
+        SimdTier::Avx2 => unsafe { avx2::max(xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline aarch64 feature.
+        SimdTier::Neon => unsafe { neon::max(xs) },
+        _ => xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 intrinsics
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    // Every fn here is `unsafe fn` with one whole-body `unsafe` block:
+    // the pointer loads/stores are genuinely unsafe on every toolchain,
+    // while the register-only intrinsics flipped to safe-in-context
+    // when `#[target_feature]` calls did — `allow(unused_unsafe)` keeps
+    // both compiler generations warning-free under `-D warnings`.
+
+    /// 8-lane dot product, single accumulator + scalar tail.
+    // lint: hot
+    // SAFETY: callers must guarantee the host supports AVX2 (dispatch
+    // only constructs the Avx2 tier after feature detection). All
+    // memory access is unaligned loads fully inside the two slices.
+    #[allow(unused_unsafe)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: every load reads 8 in-bounds f32s from a
+        // `chunks_exact(8)` subslice; the tail is safe indexing.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut ia = a.chunks_exact(8);
+            let mut ib = b.chunks_exact(8);
+            for (ca, cb) in (&mut ia).zip(&mut ib) {
+                let va = _mm256_loadu_ps(ca.as_ptr());
+                let vb = _mm256_loadu_ps(cb.as_ptr());
+                // mul + add (not FMA) so the per-lane ops match the
+                // scalar reference's rounding.
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            }
+            let lo = _mm256_castps256_ps128(acc);
+            let hi = _mm256_extractf128_ps::<1>(acc);
+            let s4 = _mm_add_ps(lo, hi);
+            let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+            let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<0b01>(s2, s2));
+            let mut s = _mm_cvtss_f32(s1);
+            for (&xa, &xb) in ia.remainder().iter().zip(ib.remainder()) {
+                s += xa * xb;
+            }
+            s
+        }
+    }
+
+    /// 8-lane `y += alpha * x` (bit-exact: per-element mul + add).
+    // lint: hot
+    // SAFETY: callers must guarantee AVX2 (dispatch-gated); all loads
+    // and stores stay inside the two slices.
+    #[allow(unused_unsafe)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: loads/stores cover 8 in-bounds f32s per
+        // `chunks_exact(_mut)(8)` subslice; the tail is safe indexing.
+        unsafe {
+            let va = _mm256_set1_ps(alpha);
+            let mut ix = x.chunks_exact(8);
+            let mut iy = y.chunks_exact_mut(8);
+            for (cx, cy) in (&mut ix).zip(&mut iy) {
+                let vy = _mm256_loadu_ps(cy.as_ptr());
+                let vx = _mm256_loadu_ps(cx.as_ptr());
+                _mm256_storeu_ps(cy.as_mut_ptr(), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            }
+            for (&xv, yv) in ix.remainder().iter().zip(iy.into_remainder()) {
+                *yv += alpha * xv;
+            }
+        }
+    }
+
+    /// f64 sum of squares of an f32 slice, 4 lanes at a time.
+    // lint: hot
+    // SAFETY: callers must guarantee AVX2 (dispatch-gated); loads stay
+    // inside `x`.
+    #[allow(unused_unsafe)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sumsq_f64(x: &[f32]) -> f64 {
+        // SAFETY: each load reads 4 in-bounds f32s from a
+        // `chunks_exact(4)` subslice; the tail is safe iteration.
+        unsafe {
+            let mut acc = _mm256_setzero_pd();
+            let mut it = x.chunks_exact(4);
+            for c in &mut it {
+                let v = _mm256_cvtps_pd(_mm_loadu_ps(c.as_ptr()));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+            }
+            let lo = _mm256_castpd256_pd128(acc);
+            let hi = _mm256_extractf128_pd::<1>(acc);
+            let s2 = _mm_add_pd(lo, hi);
+            let s1 = _mm_add_sd(s2, _mm_unpackhi_pd(s2, s2));
+            let mut s = _mm_cvtsd_f64(s1);
+            for &v in it.remainder() {
+                s += (v as f64) * (v as f64);
+            }
+            s
+        }
+    }
+
+    /// Maximum element (associative reduction — value-exact).
+    // lint: hot
+    // SAFETY: callers must guarantee AVX2 (dispatch-gated); loads stay
+    // inside `xs`.
+    #[allow(unused_unsafe)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max(xs: &[f32]) -> f32 {
+        // SAFETY: each load reads 8 in-bounds f32s from a
+        // `chunks_exact(8)` subslice; the tail is safe iteration.
+        unsafe {
+            let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+            let mut it = xs.chunks_exact(8);
+            for c in &mut it {
+                acc = _mm256_max_ps(acc, _mm256_loadu_ps(c.as_ptr()));
+            }
+            let lo = _mm256_castps256_ps128(acc);
+            let hi = _mm256_extractf128_ps::<1>(acc);
+            let m4 = _mm_max_ps(lo, hi);
+            let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+            let m1 = _mm_max_ss(m2, _mm_shuffle_ps::<0b01>(m2, m2));
+            let mut m = _mm_cvtss_f32(m1);
+            for &v in it.remainder() {
+                m = m.max(v);
+            }
+            m
+        }
+    }
+
+    /// Masked `out[t] += add` over the 8 bits of `byte`. The blend
+    /// keeps unselected lanes' original bit patterns, so channels with
+    /// a clear bit are untouched exactly as in the scalar walk.
+    // lint: hot
+    // SAFETY: callers must guarantee AVX2 (dispatch-gated) and
+    // `out.len() >= 8` (debug-asserted).
+    #[allow(unused_unsafe)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_add8(out: &mut [f32], byte: usize, add: f32) {
+        debug_assert!(out.len() >= 8);
+        // SAFETY: the load and store touch the first 8 f32s of `out`,
+        // in bounds per the length contract above.
+        unsafe {
+            let bits = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+            let sel = _mm256_set1_epi32(byte as i32);
+            let mask = _mm256_castsi256_ps(_mm256_cmpeq_epi32(_mm256_and_si256(sel, bits), bits));
+            let cur = _mm256_loadu_ps(out.as_ptr());
+            let upd = _mm256_add_ps(cur, _mm256_set1_ps(add));
+            _mm256_storeu_ps(out.as_mut_ptr(), _mm256_blendv_ps(cur, upd, mask));
+        }
+    }
+
+    /// `dot[b] += luts[b*256 + byte]` via hardware gather over blocks
+    /// of 8 LUT lanes, scalar remainder.
+    // lint: hot
+    // SAFETY: callers must guarantee AVX2 (dispatch-gated) and
+    // `luts.len() >= dot.len() * 256` with `byte < 256`, so every
+    // gathered index is in bounds.
+    #[allow(unused_unsafe)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut_gather_add(luts: &[f32], byte: usize, dot: &mut [f32]) {
+        debug_assert!(byte < 256);
+        debug_assert!(luts.len() >= dot.len() * 256);
+        // SAFETY: gather indices are `blk*256 + byte + 256*lane` with
+        // `blk + 8 <= dot.len()`, all below `luts.len()` per the
+        // contract above; `dot` loads/stores are in-bounds subslices.
+        unsafe {
+            let strides = _mm256_setr_epi32(0, 256, 512, 768, 1024, 1280, 1536, 1792);
+            let nb = dot.len();
+            let mut blk = 0usize;
+            while blk + 8 <= nb {
+                let base = _mm256_set1_epi32((blk * 256 + byte) as i32);
+                let idx = _mm256_add_epi32(base, strides);
+                let vals = _mm256_i32gather_ps::<4>(luts.as_ptr(), idx);
+                let cur = _mm256_loadu_ps(dot[blk..].as_ptr());
+                _mm256_storeu_ps(dot[blk..].as_mut_ptr(), _mm256_add_ps(cur, vals));
+                blk += 8;
+            }
+            for b in blk..nb {
+                dot[b] += luts[b * 256 + byte];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON intrinsics (aarch64 — NEON is a baseline target feature there)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    // Mirrors of the avx2 module at 4-lane width; `unsafe fn` for
+    // uniformity with the avx2 twins (NEON itself is baseline on
+    // aarch64), same whole-body-unsafe + `allow(unused_unsafe)` shape
+    // for toolchain-generation robustness.
+
+    /// 4-lane dot product.
+    // lint: hot
+    // SAFETY: loads stay inside the two slices; NEON is baseline.
+    #[allow(unused_unsafe)]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: each load reads 4 in-bounds f32s from a
+        // `chunks_exact(4)` subslice.
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            let mut ia = a.chunks_exact(4);
+            let mut ib = b.chunks_exact(4);
+            for (ca, cb) in (&mut ia).zip(&mut ib) {
+                let va = vld1q_f32(ca.as_ptr());
+                let vb = vld1q_f32(cb.as_ptr());
+                // mul + add (not vfmaq) to match scalar rounding.
+                acc = vaddq_f32(acc, vmulq_f32(va, vb));
+            }
+            let mut s = vaddvq_f32(acc);
+            for (&xa, &xb) in ia.remainder().iter().zip(ib.remainder()) {
+                s += xa * xb;
+            }
+            s
+        }
+    }
+
+    /// 4-lane `y += alpha * x` (bit-exact: per-element mul + add).
+    // lint: hot
+    // SAFETY: loads/stores stay inside the two slices; NEON is baseline.
+    #[allow(unused_unsafe)]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: each load/store covers 4 in-bounds f32s from a
+        // `chunks_exact(_mut)(4)` subslice.
+        unsafe {
+            let va = vdupq_n_f32(alpha);
+            let mut ix = x.chunks_exact(4);
+            let mut iy = y.chunks_exact_mut(4);
+            for (cx, cy) in (&mut ix).zip(&mut iy) {
+                let vy = vld1q_f32(cy.as_ptr());
+                let vx = vld1q_f32(cx.as_ptr());
+                vst1q_f32(cy.as_mut_ptr(), vaddq_f32(vy, vmulq_f32(va, vx)));
+            }
+            for (&xv, yv) in ix.remainder().iter().zip(iy.into_remainder()) {
+                *yv += alpha * xv;
+            }
+        }
+    }
+
+    /// f64 sum of squares, 2 lanes at a time.
+    // lint: hot
+    // SAFETY: loads stay inside `x`; NEON is baseline.
+    #[allow(unused_unsafe)]
+    pub unsafe fn sumsq_f64(x: &[f32]) -> f64 {
+        // SAFETY: each load reads 2 in-bounds f32s from a
+        // `chunks_exact(2)` subslice.
+        unsafe {
+            let mut acc = vdupq_n_f64(0.0);
+            let mut it = x.chunks_exact(2);
+            for c in &mut it {
+                let v = vcvt_f64_f32(vld1_f32(c.as_ptr()));
+                acc = vaddq_f64(acc, vmulq_f64(v, v));
+            }
+            let mut s = vaddvq_f64(acc);
+            for &v in it.remainder() {
+                s += (v as f64) * (v as f64);
+            }
+            s
+        }
+    }
+
+    /// Maximum element (associative reduction — value-exact).
+    // lint: hot
+    // SAFETY: loads stay inside `xs`; NEON is baseline.
+    #[allow(unused_unsafe)]
+    pub unsafe fn max(xs: &[f32]) -> f32 {
+        // SAFETY: each load reads 4 in-bounds f32s from a
+        // `chunks_exact(4)` subslice.
+        unsafe {
+            let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+            let mut it = xs.chunks_exact(4);
+            for c in &mut it {
+                acc = vmaxq_f32(acc, vld1q_f32(c.as_ptr()));
+            }
+            let mut m = vmaxvq_f32(acc);
+            for &v in it.remainder() {
+                m = m.max(v);
+            }
+            m
+        }
+    }
+
+    /// Masked `out[t] += add` over the 8 bits of `byte`, two 4-lane
+    /// halves; `vbslq` keeps unselected lanes' exact bit patterns.
+    // lint: hot
+    // SAFETY: callers pass `out.len() >= 8` (debug-asserted); NEON is
+    // baseline.
+    #[allow(unused_unsafe)]
+    pub unsafe fn scatter_add8(out: &mut [f32], byte: usize, add: f32) {
+        debug_assert!(out.len() >= 8);
+        // SAFETY: loads/stores touch out[0..4] and out[4..8], in
+        // bounds per the length contract above.
+        unsafe {
+            let bits_lo: [u32; 4] = [1, 2, 4, 8];
+            let bits_hi: [u32; 4] = [16, 32, 64, 128];
+            let sel = vdupq_n_u32(byte as u32);
+            let va = vdupq_n_f32(add);
+            let m_lo = vtstq_u32(sel, vld1q_u32(bits_lo.as_ptr()));
+            let cur_lo = vld1q_f32(out.as_ptr());
+            vst1q_f32(out.as_mut_ptr(), vbslq_f32(m_lo, vaddq_f32(cur_lo, va), cur_lo));
+            let m_hi = vtstq_u32(sel, vld1q_u32(bits_hi.as_ptr()));
+            let cur_hi = vld1q_f32(out[4..].as_ptr());
+            vst1q_f32(out[4..].as_mut_ptr(), vbslq_f32(m_hi, vaddq_f32(cur_hi, va), cur_hi));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rejects_unknown_and_unsupported() {
+        assert!(SimdTier::parse("bogus").is_err());
+        assert!(SimdTier::parse("").is_err());
+        for tier in [SimdTier::Avx2, SimdTier::Neon] {
+            if !tier.is_supported() {
+                assert!(SimdTier::parse(tier.label()).is_err());
+                assert!(set_tier(tier).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn parse_auto_resolves_to_supported() {
+        let t = SimdTier::parse("auto").unwrap();
+        assert!(t.is_supported());
+        assert_eq!(t, SimdTier::detect());
+        assert_eq!(SimdTier::parse("scalar").unwrap(), SimdTier::Scalar);
+    }
+
+    #[test]
+    fn active_is_supported_and_stable() {
+        let t = active();
+        assert!(t.is_supported());
+        assert_eq!(active(), t);
+        // Re-pinning the already-active tier is fine; it only errors on
+        // a conflicting tier.
+        assert!(set_tier(t).is_ok());
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for tier in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon] {
+            if tier.is_supported() {
+                assert_eq!(SimdTier::parse(tier.label()).unwrap(), tier);
+            }
+        }
+    }
+
+    #[test]
+    fn detected_tier_dot_close_to_scalar() {
+        let tier = SimdTier::detect();
+        let a: Vec<f32> = (0..137).map(|i| ((i * 37 % 101) as f32 - 50.0) / 25.0).collect();
+        let b: Vec<f32> = (0..137).map(|i| ((i * 53 % 97) as f32 - 48.0) / 24.0).collect();
+        let s = dot_t(SimdTier::Scalar, &a, &b);
+        let v = dot_t(tier, &a, &b);
+        assert!((s - v).abs() <= 1e-4 * s.abs().max(1.0), "{s} vs {v}");
+    }
+
+    #[test]
+    fn detected_tier_axpy_bit_exact() {
+        let tier = SimdTier::detect();
+        let x: Vec<f32> = (0..61).map(|i| ((i * 29 % 83) as f32 - 41.0) / 17.0).collect();
+        let mut y0: Vec<f32> = (0..61).map(|i| ((i * 31 % 89) as f32 - 44.0) / 19.0).collect();
+        let mut y1 = y0.clone();
+        axpy_t(SimdTier::Scalar, 0.37, &x, &mut y0);
+        axpy_t(tier, 0.37, &x, &mut y1);
+        assert_eq!(y0, y1);
+    }
+
+    #[test]
+    fn detected_tier_softmax_value_exact() {
+        let tier = SimdTier::detect();
+        let mut a: Vec<f32> = (0..45).map(|i| ((i * 7 % 23) as f32 - 11.0) / 3.0).collect();
+        let mut b = a.clone();
+        softmax_t(SimdTier::Scalar, &mut a);
+        softmax_t(tier, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lut_gather_add_matches_scalar() {
+        let tier = SimdTier::detect();
+        let nb = 11;
+        let luts: Vec<f32> = (0..nb * 256).map(|i| ((i * 13 % 47) as f32 - 23.0) / 7.0).collect();
+        for byte in [0usize, 1, 5, 127, 200, 255] {
+            let mut d0: Vec<f32> = (0..nb).map(|i| i as f32 * 0.25).collect();
+            let mut d1 = d0.clone();
+            lut_gather_add(SimdTier::Scalar, &luts, byte, &mut d0);
+            lut_gather_add(tier, &luts, byte, &mut d1);
+            assert_eq!(d0, d1, "byte {byte}");
+        }
+    }
+}

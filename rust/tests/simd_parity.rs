@@ -1,0 +1,317 @@
+//! SIMD-vs-scalar parity per kernel family, tier forced explicitly.
+//!
+//! Every test drives the `_t` entry points (`dot_t`, `strip_dots_packed_t`,
+//! …) so each tier is exercised regardless of what `BPDQ_SIMD` or the
+//! process-wide dispatch latch says. Hosts without a SIMD tier skip with
+//! a note (`SimdTier::detect() == Scalar`) instead of silently passing —
+//! the CI ubuntu fleet always has AVX2, so the skips only fire on exotic
+//! local hosts.
+//!
+//! Parity contract (see `tensor/mod.rs` "SIMD dispatch & numerics
+//! policy"):
+//! * bit-exact (`assert_eq!`): packed strip dots/axpys (table-driven
+//!   subset-sum chunks reproduce the scalar ascending-bit fold
+//!   exactly), axpy / f32 strip axpys (per-element mul+add, no FMA),
+//!   the LUT-GEMM byte gather, and softmax (its max is associative and
+//!   the exp/sum/scale epilogue is the scalar code verbatim).
+//! * tolerance-bounded: dot / f32 strip dots (the reduction
+//!   reassociates in lanes) and rmsnorm (f64 sum of squares
+//!   reassociates; the f32 epilogue is per-element identical).
+//!
+//! Shapes deliberately ragged: head dims off the vector width
+//! (13, 80), odd lengths straddling the packed-table cutoff
+//! (`PACKED_TABLE_MIN_LEN = 16`), channel groups that don't divide the
+//! head dim, and batch sizes 1/3/8.
+
+use bpdq::rng::Rng;
+use bpdq::tensor::simd::{
+    axpy_t, dot_t, rmsnorm_t, softmax_t, strip_axpys_packed_t, strip_axpys_t,
+    strip_dots_packed_t, strip_dots_t,
+};
+use bpdq::tensor::{PackedGeom, PackedStrip, PackedStripMut, SimdScratch, SimdTier};
+
+const HDS: [usize; 4] = [8, 13, 32, 80];
+const LENS: [usize; 4] = [5, 17, 33, 129]; // 5 < table cutoff < the rest
+const BATCHES: [usize; 3] = [1, 3, 8];
+const BITS: [usize; 3] = [2, 3, 4];
+
+/// The SIMD tier to test against scalar, or `None` (with a note) when
+/// the host only has the scalar tier.
+fn simd_tier() -> Option<SimdTier> {
+    let t = SimdTier::detect();
+    if t == SimdTier::Scalar {
+        eprintln!("note: host has no SIMD tier — parity test skipped");
+        None
+    } else {
+        Some(t)
+    }
+}
+
+fn normals(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn tier_parse_and_support_are_loud() {
+    assert!(SimdTier::parse("bogus").is_err());
+    assert!(SimdTier::parse("").is_err());
+    // `auto` always resolves to something the host supports.
+    let auto = SimdTier::parse("auto").unwrap();
+    assert!(auto.is_supported());
+    assert!(SimdTier::Scalar.is_supported());
+    // At most one of avx2/neon is supported on any real host; the
+    // unsupported one must be reported as such, not silently accepted.
+    assert!(!(SimdTier::Avx2.is_supported() && SimdTier::Neon.is_supported()));
+}
+
+#[test]
+fn dot_parity_tolerance() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(101);
+    for &n in &[0usize, 1, 7, 8, 15, 16, 31, 33, 100, 257] {
+        let a = normals(&mut rng, n);
+        let b = normals(&mut rng, n);
+        let scalar = dot_t(SimdTier::Scalar, &a, &b);
+        let simd = dot_t(tier, &a, &b);
+        assert!(rel_close(scalar, simd, 1e-5), "n {n}: {scalar} vs {simd}");
+    }
+}
+
+#[test]
+fn axpy_parity_bit_exact() {
+    let mut rng = Rng::new(102);
+    let Some(tier) = simd_tier() else { return };
+    for &n in &[1usize, 7, 8, 15, 33, 129] {
+        let x = normals(&mut rng, n);
+        let y0 = normals(&mut rng, n);
+        let alpha = rng.normal() as f32;
+        let mut ys = y0.clone();
+        axpy_t(SimdTier::Scalar, alpha, &x, &mut ys);
+        let mut yv = y0.clone();
+        axpy_t(tier, alpha, &x, &mut yv);
+        assert_eq!(ys, yv, "n {n}");
+    }
+}
+
+#[test]
+fn f32_strip_dots_parity_tolerance() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(103);
+    for &hd in &HDS {
+        for &nb in &BATCHES {
+            let len = 21usize;
+            let qs_data: Vec<Vec<f32>> = (0..nb).map(|_| normals(&mut rng, hd)).collect();
+            let strips_data: Vec<Vec<f32>> =
+                (0..nb).map(|_| normals(&mut rng, len * hd)).collect();
+            let qs: Vec<&[f32]> = qs_data.iter().map(|v| v.as_slice()).collect();
+            let strips: Vec<&[f32]> = strips_data.iter().map(|v| v.as_slice()).collect();
+            let mut ss = vec![0.0f32; nb * len];
+            strip_dots_t(SimdTier::Scalar, &qs, &strips, hd, 0.5, &mut ss);
+            let mut sv = vec![0.0f32; nb * len];
+            strip_dots_t(tier, &qs, &strips, hd, 0.5, &mut sv);
+            for (i, (&a, &b)) in ss.iter().zip(&sv).enumerate() {
+                assert!(rel_close(a, b, 1e-5), "hd {hd} nb {nb} i {i}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_strip_axpys_parity_bit_exact() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(104);
+    for &hd in &HDS {
+        for &nb in &BATCHES {
+            let len = 19usize;
+            let strips_data: Vec<Vec<f32>> =
+                (0..nb).map(|_| normals(&mut rng, len * hd)).collect();
+            let strips: Vec<&[f32]> = strips_data.iter().map(|v| v.as_slice()).collect();
+            // Mix sub-threshold weights in so the `w < 1e-9` skip mask
+            // is exercised on both sides.
+            let ws: Vec<f32> = (0..nb * len)
+                .map(|i| if i % 4 == 0 { 0.0 } else { 0.01 + (i % 11) as f32 * 0.02 })
+                .collect();
+            let mut fs = vec![0.0f32; nb * hd];
+            {
+                let mut outs: Vec<&mut [f32]> = fs.chunks_exact_mut(hd).collect();
+                strip_axpys_t(SimdTier::Scalar, &ws, &strips, hd, &mut outs);
+            }
+            let mut fv = vec![0.0f32; nb * hd];
+            {
+                let mut outs: Vec<&mut [f32]> = fv.chunks_exact_mut(hd).collect();
+                strip_axpys_t(tier, &ws, &strips, hd, &mut outs);
+            }
+            assert_eq!(fs, fv, "hd {hd} nb {nb}");
+        }
+    }
+}
+
+/// Build `nb` packed strips of `len` random rows (same recipe as the
+/// ops unit fixture).
+fn packed_fixture(rng: &mut Rng, nb: usize, len: usize, geom: PackedGeom) -> Vec<Vec<u32>> {
+    let mut words = vec![vec![0u32; geom.strip_words()]; nb];
+    for w in words.iter_mut() {
+        let mut strip = PackedStripMut::new(geom, w);
+        for u in 0..len {
+            let row = normals(rng, geom.hd);
+            strip.store_row(u, &row);
+        }
+    }
+    words
+}
+
+#[test]
+fn packed_strip_dots_parity_bit_exact() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(105);
+    for &hd in &HDS {
+        for &bits in &BITS {
+            // Ragged and aligned channel groups (7 never divides the
+            // head dims above; `hd` makes one whole-row group).
+            for &group in &[7usize, 8, 32, 64] {
+                for &len in &LENS {
+                    for &nb in &BATCHES {
+                        let geom = PackedGeom::new(len, hd, bits, group);
+                        let words = packed_fixture(&mut rng, nb, len, geom);
+                        let strips: Vec<PackedStrip> =
+                            words.iter().map(|w| PackedStrip::new(geom, w)).collect();
+                        let qs_data: Vec<Vec<f32>> =
+                            (0..nb).map(|_| normals(&mut rng, hd)).collect();
+                        let qs: Vec<&[f32]> = qs_data.iter().map(|v| v.as_slice()).collect();
+                        let mut ss = vec![0.0f32; nb * len];
+                        let mut scr = SimdScratch::default();
+                        strip_dots_packed_t(
+                            SimdTier::Scalar,
+                            &qs,
+                            &strips,
+                            len,
+                            0.25,
+                            &mut ss,
+                            &mut scr,
+                        );
+                        let mut sv = vec![0.0f32; nb * len];
+                        strip_dots_packed_t(tier, &qs, &strips, len, 0.25, &mut sv, &mut scr);
+                        assert_eq!(ss, sv, "hd {hd} bits {bits} group {group} len {len} nb {nb}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_strip_axpys_parity_bit_exact() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(106);
+    for &hd in &HDS {
+        for &bits in &BITS {
+            for &group in &[7usize, 32] {
+                for &len in &LENS {
+                    for &nb in &BATCHES {
+                        let geom = PackedGeom::new(len, hd, bits, group);
+                        let words = packed_fixture(&mut rng, nb, len, geom);
+                        let strips: Vec<PackedStrip> =
+                            words.iter().map(|w| PackedStrip::new(geom, w)).collect();
+                        let ws: Vec<f32> = (0..nb * len)
+                            .map(|i| if i % 5 == 0 { 0.0 } else { 0.01 + (i % 9) as f32 * 0.03 })
+                            .collect();
+                        let mut fs = vec![0.0f32; nb * hd];
+                        {
+                            let mut outs: Vec<&mut [f32]> = fs.chunks_exact_mut(hd).collect();
+                            strip_axpys_packed_t(SimdTier::Scalar, &ws, &strips, len, &mut outs);
+                        }
+                        let mut fv = vec![0.0f32; nb * hd];
+                        {
+                            let mut outs: Vec<&mut [f32]> = fv.chunks_exact_mut(hd).collect();
+                            strip_axpys_packed_t(tier, &ws, &strips, len, &mut outs);
+                        }
+                        assert_eq!(fs, fv, "hd {hd} bits {bits} group {group} len {len} nb {nb}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rmsnorm_parity_tolerance() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(107);
+    for &d in &[8usize, 13, 80, 257] {
+        let x = normals(&mut rng, d);
+        let gain: Vec<f32> = (0..d).map(|_| 1.0 + 0.05 * rng.normal() as f32).collect();
+        let mut os = vec![0.0f32; d];
+        rmsnorm_t(SimdTier::Scalar, &x, &gain, 1e-5, &mut os);
+        let mut ov = vec![0.0f32; d];
+        rmsnorm_t(tier, &x, &gain, 1e-5, &mut ov);
+        for (i, (&a, &b)) in os.iter().zip(&ov).enumerate() {
+            assert!(rel_close(a, b, 1e-6), "d {d} i {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn softmax_parity_value_exact() {
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(108);
+    for &d in &[1usize, 7, 8, 33, 129] {
+        let logits: Vec<f32> = (0..d).map(|_| 6.0 * rng.normal() as f32).collect();
+        let mut xs = logits.clone();
+        softmax_t(SimdTier::Scalar, &mut xs);
+        let mut xv = logits.clone();
+        softmax_t(tier, &mut xv);
+        // The max reduction is associative (same value whatever the
+        // lane order) and the exp/sum/scale epilogue is the scalar
+        // code verbatim, so the tiers agree exactly.
+        assert_eq!(xs, xv, "d {d}");
+    }
+}
+
+#[test]
+fn lut_gemm_parity_bit_exact() {
+    use bpdq::lut::{lut_gemm_with_tier, LutScratch};
+    use bpdq::quant::packing::{BitPlanePacked, PackedPlane};
+    use bpdq::tensor::Matrix;
+    let Some(tier) = simd_tier() else { return };
+    let mut rng = Rng::new(109);
+    // 68×52: ragged against both the 8-wide chunk grid and the
+    // batch-gather width; group 24 splits chunks mid-byte.
+    let (d_out, d_in, g, k) = (68usize, 52usize, 24usize, 3usize);
+    let planes: Vec<PackedPlane> = (0..k)
+        .map(|_| {
+            let dense = Matrix::from_vec(
+                d_out,
+                d_in,
+                (0..d_out * d_in).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect(),
+            );
+            PackedPlane::pack(&dense)
+        })
+        .collect();
+    let ng = d_in.div_ceil(g);
+    let coeffs: Vec<Matrix> = (0..=k)
+        .map(|_| Matrix::from_vec(d_out, ng, normals(&mut rng, d_out * ng)))
+        .collect();
+    let packed = BitPlanePacked { d_out, d_in, group_size: g, planes, coeffs, coeff_bits: 16 };
+    for &nb in &BATCHES {
+        let xs_data: Vec<Vec<f32>> = (0..nb).map(|_| normals(&mut rng, d_in)).collect();
+        let xs: Vec<&[f32]> = xs_data.iter().map(|v| v.as_slice()).collect();
+        let mut scratch = LutScratch::default();
+        let mut ys_s = vec![vec![0.0f32; d_out]; nb];
+        {
+            let mut yrefs: Vec<&mut [f32]> = ys_s.iter_mut().map(|y| y.as_mut_slice()).collect();
+            lut_gemm_with_tier(SimdTier::Scalar, &packed, &xs, &mut yrefs, &mut scratch);
+        }
+        let mut ys_v = vec![vec![0.0f32; d_out]; nb];
+        {
+            let mut yrefs: Vec<&mut [f32]> = ys_v.iter_mut().map(|y| y.as_mut_slice()).collect();
+            lut_gemm_with_tier(tier, &packed, &xs, &mut yrefs, &mut scratch);
+        }
+        // The gather reads table entries per lane in the same order and
+        // adds them into per-lane accumulators — no reassociation.
+        assert_eq!(ys_s, ys_v, "nb {nb}");
+    }
+}

@@ -21,6 +21,20 @@ Rows whose previous value is 0 (degenerate zero-wall-clock runs, or
 artifacts predating the TTFT field) are skipped — a ratio against zero
 means nothing.
 
+A **missing or unreadable previous artifact** is a loud skip, not an
+error: the very first run on a branch (or a wiped artifact store) has
+no baseline, and failing the gate there would block every bootstrap.
+The *current* file must always load — the bench just ran.
+
+Since the prefix cache, the Zipf section of the bench emits paired
+``… cold`` / ``… warm`` rows (same prompts, cache off vs on). Besides
+gating each against its own baseline like any other row, the gate
+compares them **within the current artifact**: a warm (cache-hit) row's
+TTFT p50 must stay below its cold twin's within ``--hit-ttft-margin``
+(default 25% headroom) — a cache hit that doesn't beat cold prefill
+means the borrow path regressed, and no historical baseline is needed
+to see it.
+
 Since the SIMD dispatch layer, the gate also (optionally) compares the
 per-kernel-family bench ``BENCH_kernels.json`` via ``--kernels-current``
 / ``--kernels-previous``. Kernel rows are keyed by
@@ -56,7 +70,7 @@ def load_rows(path: str) -> dict[str, dict[str, float]]:
         if isinstance(kv_bits, (int, float)) and int(kv_bits) != 0:
             name = f"{name} [kv{int(kv_bits)}]"
         vals: dict[str, float] = {}
-        for key in ("tokens_per_sec", "ttft_p95_us"):
+        for key in ("tokens_per_sec", "ttft_p95_us", "ttft_p50_us"):
             v = row.get(key)
             if isinstance(v, (int, float)):
                 vals[key] = float(v)
@@ -120,6 +134,37 @@ def gate_kernels(current: str, previous: str, threshold: float,
         print(f"[perf-gate] new kernel row (not gated): {name}")
 
 
+def gate_cache_hit(cur: dict[str, dict[str, float]], margin: float,
+                   failures: list) -> None:
+    """Within-artifact hit-vs-cold TTFT check for the Zipf rows.
+
+    Pairs every ``… warm`` row with its ``… cold`` twin (the ``[kvN]``
+    suffix rides along, so packed-KV pairs match packed-KV pairs) and
+    fails when the warm TTFT p50 exceeds cold × (1 + margin). Needs no
+    previous artifact — both rows come from the same bench run.
+    """
+    for name in sorted(cur):
+        if " warm" not in name:
+            continue
+        cold_name = name.replace(" warm", " cold")
+        cold = cur.get(cold_name)
+        if cold is None:
+            print(f"[perf-gate] warm row has no cold twin (not gating): {name}")
+            continue
+        c_warm = cur[name].get("ttft_p50_us", 0.0)
+        c_cold = cold.get("ttft_p50_us", 0.0)
+        if c_warm <= 0.0 or c_cold <= 0.0:
+            print(f"[perf-gate] skipping hit-TTFT pair (no p50 data): {name}")
+            continue
+        ratio = c_warm / c_cold
+        marker = "OK "
+        if ratio > 1.0 + margin:
+            marker = "REG"
+            failures.append((name, "hit_vs_cold_ttft_p50", c_cold, c_warm, ratio))
+        print(f"[perf-gate] {marker} {name}: cache-hit TTFT p50 {c_warm:.0f} us "
+              f"vs cold {c_cold:.0f} us ({100.0 * (ratio - 1.0):+.1f}%)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_decode.json")
@@ -135,11 +180,23 @@ def main() -> int:
     ap.add_argument("--kernels-threshold", type=float, default=0.15,
                     help="max allowed fractional us/iter growth per kernel "
                          "family (0.15 = 15%%)")
+    ap.add_argument("--hit-ttft-margin", type=float, default=0.25,
+                    help="headroom for the within-run cache-hit TTFT check: "
+                         "warm p50 may exceed cold p50 by this fraction "
+                         "(0.25 = 25%%)")
     args = ap.parse_args()
 
     cur = load_rows(args.current)
-    prev = load_rows(args.previous)
+    try:
+        prev = load_rows(args.previous)
+    except (OSError, json.JSONDecodeError) as e:
+        # First run on a branch / wiped artifact store: no baseline to
+        # gate against. Skip loudly rather than erroring — the
+        # within-run checks below still apply.
+        print(f"[perf-gate] no previous decode baseline ({e}) — skipping decode gate")
+        prev = {}
     failures = []
+    gate_cache_hit(cur, args.hit_ttft_margin, failures)
     if args.kernels_current and args.kernels_previous:
         gate_kernels(args.kernels_current, args.kernels_previous,
                      args.kernels_threshold, failures)

@@ -15,11 +15,19 @@
 //! (tokens/sec, TTFT p50/p95, ITL p50, sweep occupancy, KV bytes) for
 //! the CI perf-trajectory artifact — the perf gate watches both
 //! tokens/sec drops and TTFT p95 growth.
+//!
+//! A final Zipf prompt-popularity section replays the same request
+//! sequence — prompts drawn Zipf(s=1.1) from a pool sharing a
+//! page-aligned system stem — against a cold router and a
+//! `--prefix-cache` router, asserts token parity, and emits
+//! `zipf prefix …` rows (cache hit rate, shared-page ratio, borrowed
+//! KV bytes, hit-vs-cold TTFT) for the perf gate's cache-hit axis.
 use bpdq::benchkit::JsonReport;
 use bpdq::io::tlm::TlmFile;
 use bpdq::model::pipeline::quantize_model;
 use bpdq::model::{synthetic_model, Model, ModelConfig};
 use bpdq::quant::{BpdqConfig, QuantMethod};
+use bpdq::rng::{Rng, Zipf};
 use bpdq::serving::{EngineKind, KvFormat, LutModel, Router, RouterConfig, Strategy};
 use std::collections::HashMap;
 use std::path::Path;
@@ -89,7 +97,12 @@ fn main() {
     let mut report = JsonReport::new("serving_latency", "BENCH_decode.json");
     for (name, kind, max_batch, m) in runs {
         let router = Router::start(
-            RouterConfig { n_workers: 1, max_batch, strategy: Strategy::LeastLoaded },
+            RouterConfig {
+                n_workers: 1,
+                max_batch,
+                strategy: Strategy::LeastLoaded,
+                prefix_cache: false,
+            },
             |_| Ok(kind.clone()),
         )
         .unwrap();
@@ -167,6 +180,159 @@ fn main() {
                 .end_object();
         });
         router.shutdown();
+    }
+
+    // ------------------------------------------------------------------
+    // Zipf prompt-popularity section — the prefix-cache axis. A pool of
+    // prompts shares a 32-token system stem (exactly one default KV
+    // page, so the cache shares it without a copy-on-write split) and
+    // request popularity follows Zipf(s = 1.1): a few prompts dominate,
+    // which is the regime where a radix prefix cache pays. The same
+    // sampled sequence runs against a cold router (cache off) and a
+    // warm router (cache on, stem published once up front); warm must
+    // decode token-identically while prefilling only the un-cached
+    // suffix. Rows carry cache hit rate, borrowed prompt tokens/bytes,
+    // the mid-flight shared-page ratio, and TTFT — the perf gate reads
+    // the warm rows' TTFT against these cold baselines.
+    let zipf_reqs = if quick { 12 } else { 24 };
+    let stem: Vec<u32> = (0..32).map(|t| ((t * 5 + 3) % 68) as u32).collect();
+    let pool: Vec<Vec<u32>> = (0..6)
+        .map(|i| {
+            let mut p = stem.clone();
+            p.extend([((20 + i * 7) % 68) as u32, ((11 + i * 13) % 68) as u32]);
+            p
+        })
+        .collect();
+    let zipf = Zipf::new(pool.len(), 1.1);
+    let mut rng = Rng::new(0xB0D4);
+    let picks: Vec<usize> = (0..zipf_reqs).map(|_| zipf.sample(&mut rng)).collect();
+    println!(
+        "\n---- Zipf prefix-cache section: {zipf_reqs} requests over {} prompts, \
+         stem {} tokens ----",
+        pool.len(),
+        stem.len()
+    );
+    let variants: [(&str, &EngineKind, &Arc<Model>); 2] =
+        [("zipf prefix f32", &lut_kind, &qmodel), ("zipf prefix kvq2", &kvq_lut_kind, &kvq_qmodel)];
+    for (vname, vkind, vm) in variants {
+        let mut cold_tokens: Vec<Vec<u32>> = Vec::new();
+        for warm in [false, true] {
+            let kind = vkind.clone();
+            let router = Router::start(
+                RouterConfig {
+                    n_workers: 1,
+                    max_batch: 4,
+                    strategy: Strategy::LeastLoaded,
+                    prefix_cache: warm,
+                },
+                move |_| Ok(kind.clone()),
+            )
+            .unwrap();
+            if warm {
+                // Publish the shared stem as its own radix node first:
+                // lookups follow whole edges only, so every pool prompt
+                // full-edge matches the stem instead of diverging
+                // inside a longer first-request edge.
+                router.submit(stem.clone(), 1).collect().unwrap();
+            }
+            let streams: Vec<_> =
+                picks.iter().map(|&p| router.submit(pool[p].clone(), max_new)).collect();
+            let mut tokens = Vec::with_capacity(streams.len());
+            let mut mid = None;
+            for (i, s) in streams.into_iter().enumerate() {
+                tokens.push(s.collect().unwrap().tokens);
+                if i == zipf_reqs / 2 {
+                    // Mid-flight snapshot: later sessions are still
+                    // borrowing stem pages, so shared-page counts are
+                    // visible here (at drain every refcount is 1).
+                    mid = Some(router.metrics.summary());
+                }
+            }
+            let s = router.metrics.summary();
+            router.shutdown();
+            if warm {
+                assert_eq!(
+                    tokens, cold_tokens,
+                    "{vname}: warm decode must be token-identical to cold"
+                );
+            } else {
+                cold_tokens = tokens;
+            }
+            let mid = mid.unwrap_or_else(|| s.clone());
+            let hit_rate = if s.prefix_lookups > 0 {
+                s.prefix_hits as f64 / s.prefix_lookups as f64
+            } else {
+                0.0
+            };
+            let shared_ratio = if mid.arena_pages_in_use > 0 {
+                mid.arena_pages_shared as f64 / mid.arena_pages_in_use as f64
+            } else {
+                0.0
+            };
+            let borrowed_tokens_per_session = s.prefix_hit_tokens as f64 / zipf_reqs as f64;
+            let borrowed_bytes_per_session =
+                (borrowed_tokens_per_session * vm.kv_bytes_per_token() as f64) as i64;
+            let name = if warm { format!("{vname} warm") } else { format!("{vname} cold") };
+            println!(
+                "{name:<26} TTFT p50 {:>7.2} ms p95 {:>7.2} ms   hit rate {:>4.2} \
+                 ({} tokens borrowed)   shared pages {}/{} mid-flight   COW copies {}",
+                s.p50_first_us as f64 / 1e3,
+                s.p95_first_us as f64 / 1e3,
+                hit_rate,
+                s.prefix_hit_tokens,
+                mid.arena_pages_shared,
+                mid.arena_pages_in_use,
+                s.arena_cow_copies,
+            );
+            let cfg = vm.cfg;
+            report.row(|w| {
+                w.begin_object()
+                    .key("name")
+                    .string(&name)
+                    .key("max_batch")
+                    .int(4)
+                    .key("n_heads")
+                    .int(cfg.n_heads as i64)
+                    .key("n_kv_heads")
+                    .int(cfg.n_kv_heads as i64)
+                    .key("kv_bits")
+                    .int(match cfg.kv_format {
+                        KvFormat::F32 => 0,
+                        KvFormat::BitPlane { bits, .. } => bits as i64,
+                    })
+                    .key("tokens_per_sec")
+                    .number(s.tokens_per_sec)
+                    .key("us_per_token")
+                    .number(s.us_per_token)
+                    .key("ttft_p50_us")
+                    .int(s.p50_first_us as i64)
+                    .key("ttft_p95_us")
+                    .int(s.p95_first_us as i64)
+                    .key("itl_p50_us")
+                    .int(s.p50_itl_us as i64)
+                    .key("itl_p95_us")
+                    .int(s.p95_itl_us as i64)
+                    .key("cache_hit_rate")
+                    .number(hit_rate)
+                    .key("prefix_hit_tokens")
+                    .int(s.prefix_hit_tokens as i64)
+                    .key("shared_page_ratio")
+                    .number(shared_ratio)
+                    .key("arena_pages_shared")
+                    .int(mid.arena_pages_shared as i64)
+                    .key("arena_pages_in_use")
+                    .int(mid.arena_pages_in_use as i64)
+                    .key("arena_cow_copies")
+                    .int(s.arena_cow_copies as i64)
+                    .key("kv_bytes_per_session")
+                    .int(vm.kv_bytes_per_session() as i64)
+                    .key("kv_bytes_borrowed_per_session")
+                    .int(borrowed_bytes_per_session)
+                    .key("simd_tier")
+                    .string(s.simd_tier)
+                    .end_object();
+            });
+        }
     }
     report.finish();
     println!("\nBENCH serving_latency done");

@@ -65,6 +65,18 @@ pub fn run(args: &Args) -> Result<()> {
     // the fused-dequant attention kernels. Validated here, loudly.
     let kv_bits = args.get_usize("kv-bits", 0).map_err(anyhow::Error::msg)?;
     let kv_format = KvFormat::from_kv_bits(kv_bits)?;
+    // --kv-page N: positions per arena page (the paging granularity of
+    // slot growth, prefix sharing, and COW). --prefix-cache turns on
+    // the per-worker radix prefix cache over those pages.
+    let kv_page =
+        args.get_usize("kv-page", bpdq::model::Model::DEFAULT_KV_PAGE).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(kv_page >= 1, "--kv-page must be at least 1 position");
+    let prefix_cache = args.has("prefix-cache");
+    anyhow::ensure!(
+        !(engine_name == "pjrt" && prefix_cache),
+        "--prefix-cache is not supported by the pjrt engine (its KV travels as literals, \
+         not pooled arena pages) — drop the flag or use --engine lut|native"
+    );
     // The PJRT engine threads its KV through f32 executable literals and
     // never touches the arena — a packed format would be silently
     // ignored, so refuse it instead of printing a misleading banner.
@@ -93,6 +105,7 @@ pub fn run(args: &Args) -> Result<()> {
     // Apply the KV format before anything touches the model's arena
     // (the arena's geometry is fixed at first use).
     let model = if kv_format == KvFormat::F32 { model } else { model.with_kv_format(kv_format) };
+    let model = if kv_page == model.kv_page { model } else { model.with_kv_page(kv_page) };
     let model = Arc::new(model);
     let capacity = model.decode_capacity();
     println!(
@@ -111,6 +124,16 @@ pub fn run(args: &Args) -> Result<()> {
             String::new()
         }
     );
+    {
+        let geom = KvGeom::of(&model);
+        println!(
+            "kv pages: {} positions/page, {} pages/slot ({} B/page), prefix cache {}",
+            geom.page_positions,
+            geom.pages_per_slot(),
+            geom.page_bytes(),
+            if prefix_cache { "on" } else { "off" }
+        );
+    }
 
     // Quantize (default BPDQ W2-G256 — the paper's extreme deployment
     // point) unless serving fp16 natively.
@@ -164,12 +187,29 @@ pub fn run(args: &Args) -> Result<()> {
     println!("simd kernels: {}", bpdq::tensor::simd::active().label());
     println!("starting router: {n_workers} workers, engine={engine_name}, max_batch={max_batch}");
     let router = Router::start(
-        RouterConfig { n_workers, max_batch, strategy: Strategy::LeastLoaded },
+        RouterConfig { n_workers, max_batch, strategy: Strategy::LeastLoaded, prefix_cache },
         |_| Ok(kind.clone()),
     )?;
 
     if args.has("stream") {
         stream_smoke(&router, &tok, &params, n_requests, max_new, capacity)?;
+        if prefix_cache {
+            // Cache-off reference router over the same engine kind (and
+            // the same pooled arena): the warm router's outputs must be
+            // token-identical to this cold path.
+            let cold = Router::start(
+                RouterConfig {
+                    n_workers: 1,
+                    max_batch,
+                    strategy: Strategy::LeastLoaded,
+                    prefix_cache: false,
+                },
+                |_| Ok(kind.clone()),
+            )?;
+            let res = prefix_smoke(&router, &cold, &tok, &params);
+            cold.shutdown();
+            res?;
+        }
         print_summary(&router);
         router.shutdown();
         return Ok(());
@@ -298,6 +338,70 @@ fn stream_smoke(
     Ok(())
 }
 
+/// Prefix-cache smoke (`--stream --prefix-cache`): two requests sharing
+/// a system prompt are decoded cold (cache-off router) and then twice
+/// through the warm router. Hard-fails on any token mismatch vs the
+/// cold run, on the cache never hitting, on undrained sessions, or on
+/// page residency growing across identical rounds (a page leak).
+fn prefix_smoke(
+    warm: &Router,
+    cold: &Router,
+    tok: &Tokenizer,
+    params: &SamplingParams,
+) -> Result<()> {
+    let sys = tok.encode("17+25=42 9+3=12 ");
+    let mk = |user: &str| {
+        let mut p = sys.clone();
+        p.extend(tok.encode(user));
+        p
+    };
+    let prompts = [mk("11+7="), mk("8+6=")];
+    println!(
+        "prefix smoke: 2 requests sharing a {}-token system prompt, cold vs warm x2",
+        sys.len()
+    );
+    let cold_tokens: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| cold.submit_with(p.clone(), params.clone(), 0).collect().map(|r| r.tokens))
+        .collect::<Result<_>>()?;
+    let mut pages_after_round = Vec::new();
+    for round in 0..2 {
+        for (i, p) in prompts.iter().enumerate() {
+            let resp = warm.submit_with(p.clone(), params.clone(), 0).collect()?;
+            anyhow::ensure!(
+                resp.tokens == cold_tokens[i],
+                "prefix smoke: round {round} request {i} diverged from the cold run \
+                 ({:?} vs {:?})",
+                resp.tokens,
+                cold_tokens[i]
+            );
+        }
+        let m = warm.metrics.summary();
+        anyhow::ensure!(
+            m.arena_slots_in_use == 0,
+            "prefix smoke: sessions not drained after round {round}"
+        );
+        pages_after_round.push(m.arena_pages_in_use);
+    }
+    let m = warm.metrics.summary();
+    anyhow::ensure!(
+        m.prefix_hits >= 2,
+        "prefix smoke: repeated shared-prefix prompts never hit the cache ({} hits)",
+        m.prefix_hits
+    );
+    anyhow::ensure!(
+        pages_after_round[1] <= pages_after_round[0],
+        "prefix smoke: page residency grew across identical rounds ({} -> {}) — leaked pages",
+        pages_after_round[0],
+        pages_after_round[1]
+    );
+    println!(
+        "prefix smoke OK — {} hits, {} prompt tokens borrowed, {} pages resident at drain",
+        m.prefix_hits, m.prefix_hit_tokens, m.arena_pages_in_use
+    );
+    Ok(())
+}
+
 fn print_summary(router: &Router) {
     let s = router.metrics.summary();
     println!("requests completed : {}", s.completed);
@@ -318,6 +422,14 @@ fn print_summary(router: &Router) {
         s.arena_high_water,
         s.arena_bytes_resident as f64 / (1 << 20) as f64,
         s.arena_fork_copies
+    );
+    println!(
+        "kv pages           : {} in use ({} shared), {} COW copies",
+        s.arena_pages_in_use, s.arena_pages_shared, s.arena_cow_copies
+    );
+    println!(
+        "prefix cache       : {} lookups, {} hits, {} prompt tokens borrowed",
+        s.prefix_lookups, s.prefix_hits, s.prefix_hit_tokens
     );
     println!(
         "kv bytes/session   : {} (real packed slot bytes)",

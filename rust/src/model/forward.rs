@@ -4,6 +4,7 @@
 use super::{rmsnorm, silu, softmax, Model, ROPE_BASE};
 use crate::rng::Rng;
 use crate::serving::kv::{KvArena, KvFormat, KvHandle};
+use crate::serving::prefix::PrefixCache;
 use crate::tensor::{
     axpy, dot, matmul_transb, matvec, strip_axpys_packed, strip_dots_packed, Matrix, PackedStrip,
     SimdScratch,
@@ -311,29 +312,61 @@ impl DecodeState {
         self.max_seq
     }
 
+    /// `(id, generation)` of every arena page this session references
+    /// ([`KvHandle::page_ids`]) — the observable the resurrection and
+    /// leak property tests key on.
+    pub fn page_ids(&self) -> Vec<(u32, u64)> {
+        self.handle.as_ref().expect("live decode state").page_ids()
+    }
+
     /// Rewind to position 0 for slot reuse. Stale K/V rows beyond `pos`
     /// are never read, so no zeroing is needed.
     pub fn reset(&mut self) {
         self.pos = 0;
     }
 
-    /// Cheap branch-point copy: claims a sibling arena slot and copies
-    /// only the `pos × kv_dim` live prefix per layer — contiguous block
-    /// copies inside the slab ([`KvArena::fork`]), no full-capacity
-    /// zeroing — and shares the rope table (the prefix-cache trick
-    /// behind fast multiple-choice scoring — score N continuations
-    /// against one shared prompt prefix).
-    pub fn fork(&self) -> DecodeState {
-        let src = self.handle.as_ref().expect("live decode state");
-        let handle = self.arena.fork(src, self.pos).expect("KV arena exhausted");
+    /// Cheap branch point: claims a sibling session whose page table
+    /// *shares* this one's live-prefix pages — [`KvArena::fork`] is a
+    /// pure refcount bump, no byte copy; the first divergent store on
+    /// either side copy-on-writes only its own page. Shares the rope
+    /// table (the prefix-cache trick behind fast multiple-choice
+    /// scoring — score N continuations against one shared prompt
+    /// prefix). `&mut` because sharing marks this session's prefix
+    /// pages copy-on-write in its own table.
+    pub fn fork(&mut self) -> DecodeState {
+        let pos = self.pos;
+        let src = self.handle.as_mut().expect("live decode state");
+        let handle = self.arena.fork(src, pos).expect("KV arena exhausted");
         DecodeState {
             arena: self.arena.clone(),
             handle: Some(handle),
-            pos: self.pos,
+            pos,
             rope: self.rope.clone(),
             max_seq: self.max_seq,
             simd: SimdScratch::default(),
         }
+    }
+
+    /// Borrow a cached token prefix ([`PrefixCache::match_and_borrow`]):
+    /// imports the matched pages read-only and fast-forwards this
+    /// session to the matched position. Returns how many prompt tokens
+    /// are now resident — the caller feeds only `prompt[matched..]`.
+    /// Must run before any token is fed.
+    pub fn prefix_attach(&mut self, cache: &PrefixCache, prompt: &[u32]) -> usize {
+        assert_eq!(self.pos, 0, "prefix_attach on a session that already decoded");
+        let h = self.handle.as_mut().expect("live decode state");
+        let matched = cache.match_and_borrow(prompt, h);
+        self.pos = matched;
+        matched
+    }
+
+    /// Publish this session's prompt pages into `cache` (refcount
+    /// bumps, never byte copies). Call once the full prompt has been
+    /// fed; idempotent for already-cached prompts.
+    pub fn prefix_publish(&mut self, cache: &PrefixCache, prompt: &[u32]) {
+        assert!(self.pos >= prompt.len(), "prefix_publish before the prompt was fully fed");
+        let h = self.handle.as_mut().expect("live decode state");
+        cache.insert(prompt, h);
     }
 
     /// Feed one token; returns the logits for the next-token distribution.
@@ -349,6 +382,7 @@ impl DecodeState {
         let mut h: Vec<f32> = model.embed.row(id).to_vec();
         let mut normed = vec![0.0f32; d];
         let mut scores = vec![0.0f32; t + 1];
+        let pp = self.arena.geom().page_positions;
         let mut kv = self.arena.view_mut(self.handle.as_mut().expect("live decode state"));
 
         for (l, lw) in model.layers.iter().enumerate() {
@@ -368,29 +402,68 @@ impl DecodeState {
             kv.store_k(l, t, &kx);
             kv.store_v(l, t, &vx);
 
+            // Attention walks the session's *page runs*: a strip is a
+            // page table, not one contiguous region. Per-position order
+            // is identical to the monolithic walk (scores page by page,
+            // one softmax over all live positions, AV page by page), so
+            // paging never changes logits.
             let mut attn = vec![0.0f32; d];
+            let len = t + 1;
             for hh in 0..nh {
                 let o0 = hh * hd;
                 let kvh = hh / group;
-                match kv.format() {
-                    KvFormat::F32 => attend_head(
-                        &q[o0..o0 + hd],
-                        kv.k_strip(l, kvh, t + 1),
-                        kv.v_strip(l, kvh, t + 1),
-                        scale,
-                        &mut scores,
-                        &mut attn[o0..o0 + hd],
-                    ),
-                    KvFormat::BitPlane { .. } => attend_head_packed(
-                        &q[o0..o0 + hd],
-                        kv.k_packed(l, kvh),
-                        kv.v_packed(l, kvh),
-                        t + 1,
-                        scale,
-                        &mut scores,
-                        &mut attn[o0..o0 + hd],
-                        &mut self.simd,
-                    ),
+                let q_h = &q[o0..o0 + hd];
+                let (mut p0, mut pg) = (0usize, 0usize);
+                while p0 < len {
+                    let plen = (len - p0).min(pp);
+                    let sc = &mut scores[p0..p0 + plen];
+                    match kv.format() {
+                        KvFormat::F32 => {
+                            let kpage = kv.k_page(l, kvh, pg);
+                            for (u, s) in sc.iter_mut().enumerate() {
+                                *s = dot(q_h, &kpage[u * hd..(u + 1) * hd]) * scale;
+                            }
+                        }
+                        KvFormat::BitPlane { .. } => strip_dots_packed(
+                            &[q_h],
+                            &[kv.k_page_packed(l, kvh, pg)],
+                            plen,
+                            scale,
+                            sc,
+                            &mut self.simd,
+                        ),
+                    }
+                    p0 += plen;
+                    pg += 1;
+                }
+                softmax(&mut scores[..len]);
+                let out = &mut attn[o0..o0 + hd];
+                let (mut p0, mut pg) = (0usize, 0usize);
+                while p0 < len {
+                    let plen = (len - p0).min(pp);
+                    let sc = &scores[p0..p0 + plen];
+                    match kv.format() {
+                        KvFormat::F32 => {
+                            let vpage = kv.v_page(l, kvh, pg);
+                            for (u, &w) in sc.iter().enumerate() {
+                                if w < 1e-9 {
+                                    continue;
+                                }
+                                axpy(w, &vpage[u * hd..(u + 1) * hd], out);
+                            }
+                        }
+                        KvFormat::BitPlane { .. } => {
+                            let mut outs: [&mut [f32]; 1] = [&mut *out];
+                            strip_axpys_packed(
+                                sc,
+                                &[kv.v_page_packed(l, kvh, pg)],
+                                plen,
+                                &mut outs,
+                            );
+                        }
+                    }
+                    p0 += plen;
+                    pg += 1;
                 }
             }
             let proj = matvec(&lw.wo, &attn);
@@ -672,6 +745,71 @@ mod tests {
         }
         for (x, y) in first.iter().zip(&replay) {
             assert!((x - y).abs() < 1e-6, "dirty packed slot replay diverged");
+        }
+    }
+
+    #[test]
+    fn page_size_never_changes_logits() {
+        // Only the addressing changes with `kv_page` — same math, same
+        // per-position order — so a 2-position-page decode must be
+        // bit-identical to the default page size, f32 and packed.
+        for fmt in [KvFormat::F32, KvFormat::bit_plane(2)] {
+            let m = tiny_gqa(2).with_kv_format(fmt);
+            let mp = m.with_kv_page(2);
+            let toks = [3u32, 7, 1, 12, 5, 9, 2];
+            let mut a = m.decode_state();
+            let mut b = mp.decode_state();
+            for &tk in &toks {
+                assert_eq!(a.step(&m, tk), b.step(&mp, tk), "{fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_hit_decodes_token_identical_to_cold() {
+        // The ISSUE parity bar: a cache-hit session continues
+        // token-identically to a cold one at every kv_bits — shared
+        // pages travel bytewise, never re-quantized.
+        for bits in [0usize, 2, 3, 4] {
+            let m = if bits == 0 {
+                tiny_gqa(2)
+            } else {
+                tiny_gqa(2).with_kv_format(KvFormat::bit_plane(bits))
+            }
+            .with_kv_page(2); // small pages exercise page boundaries
+            let cache = PrefixCache::new(m.kv_arena());
+            let prompt = [3u32, 7, 1, 12, 5];
+
+            // Cold: full prefill, publish, greedy continuation.
+            let mut cold = m.decode_state();
+            let mut logits = Vec::new();
+            for &tk in &prompt {
+                logits = cold.step(&m, tk);
+            }
+            cold.prefix_publish(&cache, &prompt);
+            let mut cold_tokens = Vec::new();
+            for _ in 0..6 {
+                let next = argmax(&logits) as u32;
+                cold_tokens.push(next);
+                logits = cold.step(&m, next);
+            }
+            drop(cold); // cache refs alone keep the prefix alive
+
+            // Warm: borrow the cached prefix, feed only the suffix.
+            let mut warm = m.decode_state();
+            let matched = warm.prefix_attach(&cache, &prompt);
+            assert_eq!(matched, prompt.len() - 1, "bits {bits}");
+            let mut logits = Vec::new();
+            for &tk in &prompt[matched..] {
+                logits = warm.step(&m, tk);
+            }
+            let mut warm_tokens = Vec::new();
+            for _ in 0..6 {
+                let next = argmax(&logits) as u32;
+                warm_tokens.push(next);
+                logits = warm.step(&m, next);
+            }
+            assert_eq!(warm_tokens, cold_tokens, "bits {bits}: cache hit diverged from cold");
         }
     }
 

@@ -199,6 +199,12 @@ pub struct Model {
     /// every decode session (native and LUT) addresses its KV through a
     /// slot of this arena.
     arena: OnceLock<Arc<KvArena>>,
+    /// Positions per KV arena page (`serve --kv-page`). Runtime serving
+    /// policy like `cfg.kv_format` — not part of the `.tlm` format.
+    /// Clamped to `1..=decode_capacity()` by [`KvGeom::of`]; the
+    /// default [`Model::DEFAULT_KV_PAGE`] divides every `max_seq × 4`
+    /// capacity, keeping slots byte-identical to the pre-paging layout.
+    pub kv_page: usize,
 }
 
 pub const RMS_EPS: f32 = 1e-5;
@@ -254,6 +260,7 @@ impl Model {
             lm_head: mat("lm_head", v, d)?,
             rope: OnceLock::new(),
             arena: OnceLock::new(),
+            kv_page: Self::DEFAULT_KV_PAGE,
         })
     }
 
@@ -341,6 +348,17 @@ impl Model {
         m
     }
 
+    /// A copy of this model with a different KV page size (positions
+    /// per arena page, `serve --kv-page`). Same fresh-arena contract as
+    /// [`Model::with_kv_format`].
+    pub fn with_kv_page(&self, kv_page: usize) -> Model {
+        assert!(kv_page > 0, "KV page must hold at least one position");
+        let mut m = self.clone();
+        m.kv_page = kv_page;
+        m.arena = OnceLock::new();
+        m
+    }
+
     /// The decode RoPE table for this model, built once on first use and
     /// shared (`Arc`) by every decode session and fork.
     pub fn rope(&self) -> Arc<Rope> {
@@ -352,6 +370,12 @@ impl Model {
     /// Default first-segment size of the per-model KV arena (the arena
     /// doubles from there as sessions oversubscribe it).
     pub const DEFAULT_KV_SLOTS: usize = 4;
+
+    /// Default positions per KV page. Divides every `max_seq × 4`
+    /// decode capacity (max_seq is a power-of-two multiple of 8
+    /// everywhere), so the default paged slot is byte-identical to the
+    /// historical monolithic slot.
+    pub const DEFAULT_KV_PAGE: usize = 32;
 
     /// The pooled KV arena for this model: one slab whose slots back
     /// every decode session (built once per model, shared by clones;

@@ -18,8 +18,14 @@
 //!   position, and each layer runs the score/softmax/AV phase as a
 //!   single multi-session pass per (layer, kv-head) —
 //!   [`crate::tensor::strip_dots`] / [`crate::tensor::strip_axpys`]
-//!   walk the arena-adjacent strips of the whole group in one
-//!   position-major sweep instead of B separate strip walks. The phase
+//!   walk the whole group together in one position-major sweep instead
+//!   of B separate strip walks. Since the arena is *paged*, the sweep
+//!   runs page run by page run: each lane contributes its own page for
+//!   the run (cache-hit sessions may point at pages shared with other
+//!   sessions through the prefix cache), scores are scattered into a
+//!   lane-major `(t+1)`-wide buffer, and AV accumulates across runs in
+//!   ascending position order — the exact accumulation order of the
+//!   monolithic sweep, so paging is invisible to tokens. The phase
 //!   dispatches on the arena's [`KvFormat`]: packed bit-plane strips go
 //!   through the fused-dequant kernels
 //!   ([`crate::tensor::strip_dots_packed`] /
@@ -47,6 +53,7 @@
 use super::batcher::{Pending, SubmitQueue};
 use super::kv::{KvArena, KvFormat, KvHandle, KvView};
 use super::metrics::Metrics;
+use super::prefix::{register_reclaimer, PrefixCache};
 use super::scheduler::{run_scheduler, Session, Stepper};
 use super::{CancelHandle, GenRequest, Request, Response, SamplingParams};
 use crate::lut::{lut_gemm, LutScratch};
@@ -104,6 +111,7 @@ pub struct Engine {
     runtime: Option<Runtime>,
     lut_step: Option<BatchedLutStep>,
     metrics: Option<Metrics>,
+    prefix_cache: Option<Arc<PrefixCache>>,
 }
 
 impl Engine {
@@ -116,7 +124,30 @@ impl Engine {
             EngineKind::Lut(lm) => Some(BatchedLutStep::new(lm.clone())),
             _ => None,
         };
-        Ok(Self { kind, runtime, lut_step, metrics: None })
+        Ok(Self { kind, runtime, lut_step, metrics: None, prefix_cache: None })
+    }
+
+    /// Build and wire a radix prefix cache over this engine's KV arena
+    /// (`serve --prefix-cache`): admission borrows cached prompt-prefix
+    /// pages read-only, prefill completion publishes them, and the
+    /// cache's LRU evictor is registered as the arena's under-pressure
+    /// reclaimer. Idempotent; a no-op for the PJRT path (its cache
+    /// travels as literals, not arena pages).
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix_cache.is_some() {
+            return;
+        }
+        if let Some(arena) = self.arena() {
+            let cache = Arc::new(PrefixCache::new(arena));
+            register_reclaimer(cache.arena(), &cache);
+            self.prefix_cache = Some(cache);
+        }
+    }
+
+    /// The prefix cache wired by [`Engine::enable_prefix_cache`], if any
+    /// (for stats readout; sessions reach it through the scheduler).
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix_cache.as_ref()
     }
 
     pub fn kind_name(&self) -> &'static str {
@@ -154,24 +185,42 @@ impl Engine {
     pub fn serve(&mut self, queue: &SubmitQueue, max_batch: usize) -> Result<()> {
         let metrics = self.metrics.clone();
         let arena = self.arena();
+        let cache = self.prefix_cache.clone();
         let res = match &self.kind {
             EngineKind::Native(model) => {
                 let mut stepper = NativeStepper { model: model.clone() };
-                run_scheduler(&mut stepper, queue, max_batch, metrics.as_ref(), arena.as_deref())
+                run_scheduler(
+                    &mut stepper,
+                    queue,
+                    max_batch,
+                    metrics.as_ref(),
+                    arena.as_deref(),
+                    cache.as_deref(),
+                )
             }
             EngineKind::Lut(_) => {
                 let stepper = self.lut_step.as_mut().context("lut stepper missing")?;
-                run_scheduler(stepper, queue, max_batch, metrics.as_ref(), arena.as_deref())
+                run_scheduler(
+                    stepper,
+                    queue,
+                    max_batch,
+                    metrics.as_ref(),
+                    arena.as_deref(),
+                    cache.as_deref(),
+                )
             }
             EngineKind::Pjrt { model, artifact, cache_len } => {
                 let (model, artifact, cache_len) = (model.clone(), artifact.clone(), *cache_len);
                 let rt = self.runtime.as_mut().context("pjrt runtime")?;
                 let mut stepper = PjrtStepper::new(rt, &model, &artifact, cache_len)?;
-                run_scheduler(&mut stepper, queue, max_batch, metrics.as_ref(), None)
+                run_scheduler(&mut stepper, queue, max_batch, metrics.as_ref(), None, None)
             }
         };
         if let (Some(m), Some(a)) = (&self.metrics, &arena) {
             m.observe_arena(a.id(), a.stats());
+        }
+        if let (Some(m), Some(c)) = (&self.metrics, &cache) {
+            m.observe_prefix(c.id(), c.stats());
         }
         res
     }
@@ -220,6 +269,14 @@ impl Session for NativeSession {
     }
     fn capacity(&self) -> usize {
         self.state.capacity()
+    }
+    fn prefix_match(&mut self, cache: &PrefixCache, prompt: &[u32]) -> usize {
+        self.state.prefix_attach(cache, prompt)
+    }
+    fn prefix_publish(&mut self, cache: &PrefixCache, prompt: &[u32]) {
+        if self.state.pos() >= prompt.len() {
+            self.state.prefix_publish(cache, prompt);
+        }
     }
 }
 
@@ -274,6 +331,20 @@ impl Session for LutSession {
     fn capacity(&self) -> usize {
         self.cap
     }
+    fn prefix_match(&mut self, cache: &PrefixCache, prompt: &[u32]) -> usize {
+        let h = self.handle.as_mut().expect("live session");
+        let matched = cache.match_and_borrow(prompt, h);
+        self.pos = matched;
+        matched
+    }
+    fn prefix_publish(&mut self, cache: &PrefixCache, prompt: &[u32]) {
+        // Guard: publication is only sound once every prompt position is
+        // stored (the scheduler calls this at prefill completion, so the
+        // check is belt-and-braces against future call sites).
+        if self.pos >= prompt.len() {
+            cache.insert(prompt, self.handle.as_mut().expect("live session"));
+        }
+    }
 }
 
 /// Batched LUT stepper: all active sessions advance together through one
@@ -303,6 +374,10 @@ struct BatchedLutStep {
     down: Vec<f32>,
     // group-batched score buffer, `group_len × (t+1)`, lane-major
     scores: Vec<f32>,
+    // per-page-run staging slice, `group_len × plen`, lane-major — the
+    // strip kernels see one page run at a time, scores are scattered
+    // into / gathered out of `scores` around each kernel call
+    pscores: Vec<f32>,
     // per-call SIMD table scratch for the packed-KV attention kernels
     simd: crate::tensor::SimdScratch,
 }
@@ -332,6 +407,7 @@ impl BatchedLutStep {
             mid: Vec::new(),
             down: Vec::new(),
             scores: Vec::new(),
+            pscores: Vec::new(),
             simd: crate::tensor::SimdScratch::default(),
         }
     }
@@ -362,8 +438,9 @@ fn lin_batch(
 }
 
 /// Reusable slice-collection scratch for [`fused_attention`]: the
-/// q-row / K-strip / V-strip ref vectors the strip kernels consume,
-/// refilled per (position group, kv-head) with `clear()` + `extend()`.
+/// q-row / K-page / V-page ref vectors the strip kernels consume,
+/// refilled per (position group, kv-head, page run) with `clear()` +
+/// `extend()`.
 /// The non-hot caller constructs it (one allocation site, outside the
 /// marked phase); inside the phase the vectors only grow to the group
 /// width once and are reused after that. Which side is populated — f32
@@ -403,22 +480,29 @@ fn disjoint_rows_mut<'a>(
 }
 
 /// One layer's batched score/softmax/AV phase: a single multi-session
-/// pass per (position group, kv-head). All sessions in a group share
-/// the score length and the head geometry, their KV strips are slots of
-/// one arena slab (adjacent for batch-created sessions), and the strip
-/// kernels walk every session's strip together position-major — a
-/// genuine batched matvec over pooled memory, not B separate strip
-/// walks. The pass dispatches on the arena's format: f32 strips go
-/// through [`strip_dots`] / [`strip_axpys`] (per-lane accumulation
-/// order matches `attend_head` exactly, so the fused sweep stays
-/// token-identical to B=1); packed bit-plane strips go through the
-/// fused-dequant twins [`strip_dots_packed`] / [`strip_axpys_packed`],
-/// which consume the plane words the session step stored —
-/// quantization happened once, at store time, never here.
+/// pass per (position group, kv-head), iterated **page run by page
+/// run** over the paged arena. All sessions in a group share the score
+/// length and the head geometry; for each run `[p0, p0+plen)` every
+/// lane contributes *its own* page `pg` (a private page of its slot, or
+/// a page shared through the prefix cache — the reader does not care),
+/// and the strip kernels walk the whole group together position-major
+/// within the run. Per-run scores land lane-major in `pscores`
+/// (`gl × plen`) and are scattered into `scores_buf` (`gl × (t+1)`);
+/// after the per-lane softmax the AV walk re-gathers each run's weights
+/// and accumulates page by page in ascending position order — exactly
+/// the accumulation order of a monolithic strip walk, so paging (and
+/// page sharing) never changes tokens. The pass dispatches on the
+/// arena's format: f32 pages go through [`strip_dots`] /
+/// [`strip_axpys`]; packed bit-plane pages through the fused-dequant
+/// twins [`strip_dots_packed`] / [`strip_axpys_packed`], which consume
+/// the plane words the session step stored — quantization happened
+/// once, at store time, never here.
 ///
 /// Hot contract (`bpdq lint` L2–L4): the caller resolves every handle
 /// (`views`) and owns the [`StripRefs`] scratch, so this phase itself
-/// performs no allocation, panic-path call, or locking in steady state.
+/// performs no allocation, panic-path call, or locking in steady state
+/// (the ref vectors and staging buffers reach their high-water length
+/// on the first sweep and are reused after that).
 // lint: hot
 #[allow(clippy::too_many_arguments)]
 fn fused_attention<'v>(
@@ -431,50 +515,78 @@ fn fused_attention<'v>(
     hd: usize,
     d: usize,
     scale: f32,
+    pp: usize,
     q: &'v [f32],
     attn: &mut [f32],
     scores_buf: &mut Vec<f32>,
+    pscores: &mut Vec<f32>,
     refs: &mut StripRefs<'v>,
     simd: &mut crate::tensor::SimdScratch,
 ) {
     for (t, lanes) in groups {
         let (t, gl) = (*t, lanes.len());
-        scores_buf.resize(gl * (t + 1), 0.0);
+        let len = t + 1;
+        scores_buf.resize(gl * len, 0.0);
         for kvh in 0..nkv {
-            match format {
-                KvFormat::F32 => {
-                    refs.ks.clear();
-                    refs.ks.extend(lanes.iter().map(|&b| views[b].k_strip(l, kvh, t + 1)));
-                    refs.vs.clear();
-                    refs.vs.extend(lanes.iter().map(|&b| views[b].v_strip(l, kvh, t + 1)));
-                }
-                KvFormat::BitPlane { .. } => {
-                    refs.ksp.clear();
-                    refs.ksp.extend(lanes.iter().map(|&b| views[b].k_packed(l, kvh)));
-                    refs.vsp.clear();
-                    refs.vsp.extend(lanes.iter().map(|&b| views[b].v_packed(l, kvh)));
-                }
-            }
             for g in 0..group {
                 let o0 = (kvh * group + g) * hd;
                 refs.qs.clear();
                 refs.qs.extend(lanes.iter().map(|&b| &q[b * d + o0..b * d + o0 + hd]));
-                let scores = &mut scores_buf[..gl * (t + 1)];
-                match format {
-                    KvFormat::F32 => strip_dots(&refs.qs, &refs.ks, hd, scale, scores),
-                    KvFormat::BitPlane { .. } => {
-                        strip_dots_packed(&refs.qs, &refs.ksp, t + 1, scale, scores, simd)
+                // scores, one page run at a time
+                let (mut p0, mut pg) = (0usize, 0usize);
+                while p0 < len {
+                    let plen = (len - p0).min(pp);
+                    pscores.resize(gl * plen, 0.0);
+                    match format {
+                        KvFormat::F32 => {
+                            refs.ks.clear();
+                            refs.ks.extend(
+                                lanes.iter().map(|&b| &views[b].k_page(l, kvh, pg)[..plen * hd]),
+                            );
+                            strip_dots(&refs.qs, &refs.ks, hd, scale, pscores);
+                        }
+                        KvFormat::BitPlane { .. } => {
+                            refs.ksp.clear();
+                            refs.ksp
+                                .extend(lanes.iter().map(|&b| views[b].k_page_packed(l, kvh, pg)));
+                            strip_dots_packed(&refs.qs, &refs.ksp, plen, scale, pscores, simd);
+                        }
                     }
+                    for (lane, run) in pscores.chunks_exact(plen).enumerate() {
+                        scores_buf[lane * len + p0..lane * len + p0 + plen].copy_from_slice(run);
+                    }
+                    p0 += plen;
+                    pg += 1;
                 }
-                for lane_scores in scores.chunks_exact_mut(t + 1) {
+                for lane_scores in scores_buf[..gl * len].chunks_exact_mut(len) {
                     softmax(lane_scores);
                 }
+                // AV, accumulated across page runs in position order
                 let mut outs = disjoint_rows_mut(attn, d, lanes, o0, hd);
-                match format {
-                    KvFormat::F32 => strip_axpys(scores, &refs.vs, hd, &mut outs),
-                    KvFormat::BitPlane { .. } => {
-                        strip_axpys_packed(scores, &refs.vsp, t + 1, &mut outs)
+                let (mut p0, mut pg) = (0usize, 0usize);
+                while p0 < len {
+                    let plen = (len - p0).min(pp);
+                    pscores.resize(gl * plen, 0.0);
+                    for (lane, run) in pscores.chunks_exact_mut(plen).enumerate() {
+                        run.copy_from_slice(&scores_buf[lane * len + p0..lane * len + p0 + plen]);
                     }
+                    match format {
+                        KvFormat::F32 => {
+                            refs.vs.clear();
+                            refs.vs.extend(
+                                lanes.iter().map(|&b| &views[b].v_page(l, kvh, pg)[..plen * hd]),
+                            );
+                            strip_axpys(pscores, &refs.vs, hd, &mut outs);
+                        }
+                        KvFormat::BitPlane { .. } => {
+                            refs.vsp.clear();
+                            refs.vsp
+                                .extend(lanes.iter().map(|&b| views[b].v_page_packed(l, kvh, pg)));
+                            strip_axpys_packed(pscores, &refs.vsp, plen, &mut outs);
+                        }
+                    }
+                    p0 += plen;
+                    pg += 1;
                 }
             }
         }
@@ -574,6 +686,7 @@ impl Stepper for BatchedLutStep {
             // handle resolution (fallible `expect`) and the scratch
             // construction happen here, outside the hot-marked phase.
             let format = self.arena.geom().format;
+            let pp = self.arena.geom().page_positions;
             let arena = &self.arena;
             let views: Vec<KvView> = sessions
                 .iter()
@@ -590,9 +703,11 @@ impl Stepper for BatchedLutStep {
                 hd,
                 d,
                 scale,
+                pp,
                 &self.q,
                 &mut self.attn[..nb * d],
                 &mut self.scores,
+                &mut self.pscores,
                 &mut strip_refs,
                 &mut self.simd,
             );
@@ -1161,6 +1276,94 @@ mod tests {
                 "quantized-KV B=1 vs batched, request {i}"
             );
         }
+    }
+
+    #[test]
+    fn prefix_cache_hit_is_token_identical_all_kv_bits() {
+        // Tentpole parity bar: a cache-hit session (prompt prefix
+        // borrowed from the radix cache, only the suffix prefilled) must
+        // decode token-identically to a cold session — at f32 KV and at
+        // every packed kv_bits. kv_page 2 forces the borrowed prefix to
+        // span multiple pages, and the extended prompt exercises borrow
+        // + first-divergent-store COW end to end.
+        for bits in [0usize, 2, 3, 4] {
+            let base = if bits == 0 {
+                Arc::new(tiny_gqa(2).with_kv_page(2))
+            } else {
+                Arc::new(tiny_gqa(2).with_kv_format(KvFormat::bit_plane(bits)).with_kv_page(2))
+            };
+            let (_, mut lut) = quantized_engine_pair(base, 16);
+            let req = Request { id: 0, prompt: vec![3, 7, 1, 12, 5], max_new: 6 };
+            let ext = Request { id: 1, prompt: vec![3, 7, 1, 12, 5, 9, 2], max_new: 4 };
+            let cold = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+            let cold_ext = lut.generate_batch(std::slice::from_ref(&ext)).unwrap();
+            lut.enable_prefix_cache();
+            let warm1 = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+            let warm2 = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+            let warm_ext = lut.generate_batch(std::slice::from_ref(&ext)).unwrap();
+            assert_eq!(warm1[0].tokens, cold[0].tokens, "bits {bits}: publishing run diverged");
+            assert_eq!(warm2[0].tokens, cold[0].tokens, "bits {bits}: cache-hit run diverged");
+            assert_eq!(
+                warm_ext[0].tokens, cold_ext[0].tokens,
+                "bits {bits}: extended-prompt hit diverged"
+            );
+            let st = lut.prefix_cache().unwrap().stats();
+            assert!(st.hits >= 2, "bits {bits}: expected cache hits, got {st:?}");
+            assert!(st.hit_tokens >= 9, "bits {bits}: {st:?}");
+            let arena = lut.arena().unwrap().stats();
+            assert_eq!(arena.slots_in_use, 0, "bits {bits}: sessions must drain");
+            assert!(arena.pages_in_use > 0, "bits {bits}: cache retains prefix pages");
+            assert!(
+                arena.cow_copies >= 1,
+                "bits {bits}: extended prompt must COW its first divergent page"
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_cache_native_engine_parity() {
+        // Same bar through the native (per-session DecodeState) path.
+        let model = Arc::new(tiny_gqa(2).with_kv_page(2));
+        let mut e = Engine::new(EngineKind::Native(model)).unwrap();
+        let req = Request { id: 0, prompt: vec![1, 4, 9, 2], max_new: 5 };
+        let cold = e.generate_batch(std::slice::from_ref(&req)).unwrap();
+        e.enable_prefix_cache();
+        let _publish = e.generate_batch(std::slice::from_ref(&req)).unwrap();
+        let warm = e.generate_batch(std::slice::from_ref(&req)).unwrap();
+        assert_eq!(warm[0].tokens, cold[0].tokens, "native cache-hit run diverged");
+        let st = e.prefix_cache().unwrap().stats();
+        assert!(st.hits >= 1 && st.hit_tokens >= 3, "{st:?}");
+    }
+
+    #[test]
+    fn prefix_cache_shared_prompts_batch_together() {
+        // Several concurrent sessions sharing one published prefix must
+        // batch in the fused sweep (each lane contributing the *same*
+        // shared pages) and still match their solo decodes.
+        let base = Arc::new(tiny_gqa(2).with_kv_format(KvFormat::bit_plane(2)).with_kv_page(2));
+        let (_, mut lut) = quantized_engine_pair(base, 16);
+        let mk = |id: u64, extra: &[u32]| {
+            let mut prompt = vec![3, 7, 1, 12];
+            prompt.extend_from_slice(extra);
+            Request { id, prompt, max_new: 4 }
+        };
+        let batch = vec![mk(0, &[5]), mk(1, &[9, 2]), mk(2, &[11])];
+        let solo: Vec<_> = batch
+            .iter()
+            .map(|r| lut.generate_batch(std::slice::from_ref(r)).unwrap().remove(0))
+            .collect();
+        lut.enable_prefix_cache();
+        // Publish the shared stem as its own node (lookup follows full
+        // edge matches only), then serve all three concurrently: every
+        // warm lane borrows the same two stem pages.
+        let stem = Request { id: 9, prompt: vec![3, 7, 1, 12], max_new: 1 };
+        let _ = lut.generate_batch(std::slice::from_ref(&stem)).unwrap();
+        let warm = lut.generate_batch(&batch).unwrap();
+        for (i, (w, s)) in warm.iter().zip(&solo).enumerate() {
+            assert_eq!(w.tokens, s.tokens, "shared-prefix lane {i} diverged");
+        }
+        let st = lut.prefix_cache().unwrap().stats();
+        assert!(st.hits >= 3, "all warm lanes must hit: {st:?}");
     }
 
     #[test]

@@ -1,114 +1,115 @@
-//! KV arena — one pooled slab per model, shared by every decode
-//! session, **format-generic** over how a strip is stored.
+//! Paged, pooled KV-cache arena — one page pool per model, shared by
+//! every decode session, with refcounted copy-on-write pages.
 //!
-//! ## Formats and layout
+//! ## Memory model (paged layout)
 //!
-//! The arena owns contiguous u32-word slabs carved into fixed-size
-//! **slots**, one per live decode session. A slot holds the session's
-//! entire KV state, laid out layer-major, then K/V, then head-major:
+//! The unit of allocation is a **page**: a self-contained mini-strip of
+//! `page_positions` (`pp`) decode positions for one (layer, K/V,
+//! kv-head) **strip**. A session's cache is a *page table* — an
+//! `n_strips × n_pages` array of `Option<PageRef>` — not a contiguous
+//! slot:
 //!
 //! ```text
-//! slot ─┬─ layer 0 ─┬─ K ─┬─ kv-head 0 │ one strip │
-//!       │           │     └─ kv-head 1 │ one strip │
-//!       │           └─ V ─┬─ kv-head 0 │ one strip │
-//!       │                 └─ …
-//!       ├─ layer 1 ─ …
-//!       └─ layer L-1 ─ …
+//! session handle ── table[strip s · n_pages + page p] ──► PageRef { id, gen, base, shared }
+//!                                                                 │
+//! arena page pool:  [ page 0 │ page 1 │ … ]  ◄────────────────────┘  (rc, gen per page)
+//!
+//! strip index  s = layer·(2·n_kv_heads) + which·n_kv_heads + kv_head
+//! page index   p = position / pp        (u = position % pp inside the page)
 //! ```
 //!
-//! What a **strip** (`cap` positions × `head_dim` channels of one
-//! kv-head) physically is depends on the slot's [`KvFormat`]:
+//! Per-format page layout (`page_words` u32 words each):
 //!
-//! * [`KvFormat::F32`] — `cap × head_dim` f32s, position-major; the
-//!   seed layout, bit-identical to every pre-format-generic release:
+//! * [`KvFormat::F32`] — `pp × head_dim` f32s, position-major;
+//!   word-aligned by construction.
+//! * [`KvFormat::BitPlane`]`{bits, group}` — one packed strip of `pp`
+//!   positions ([`crate::tensor::PackedGeom::for_page`]): `bits` planes
+//!   of `⌈pp·hd/32⌉` words, then `pp × ⌈hd/group⌉ × (bits+1)` f16
+//!   coefficients two-per-word. Pages therefore align to plane-word
+//!   *and* coefficient-span boundaries — a page dequantizes in
+//!   isolation, so KV quantization and paging compose: sharing or
+//!   copying a page never re-quantizes, the variable-grid encoding
+//!   travels with the page bytes.
 //!
-//!   ```text
-//!   strip  = │ pos 0: hd f32 │ pos 1: hd f32 │ … │
-//!   bytes/slot = n_layers × 2 × n_kv_heads × cap × head_dim × 4
-//!   ```
+//! Every page of a slot has the same `page_words`, so
+//! `slot_bytes = n_strips × n_pages × page_words × 4`; with the default
+//! `pp = 32` (and `pp | cap`, which holds for every `max_seq × 4`
+//! capacity) this is byte-identical to the pre-paging monolithic slot.
 //!
-//! * [`KvFormat::BitPlane`]`{ bits, group }` — the BPDQ variable grid
-//!   applied to the cache ([`crate::tensor::kvpack`]): `bits` packed
-//!   bit-planes (bit `u·hd + j` of plane *i* = code bit of channel `j`
-//!   at position `u` — when `hd < 32` one word holds a whole
-//!   position-group) followed by per-(position, channel-group) f16
-//!   coefficients `[c₀, c₁, …, c_bits]`, so a row dequantizes as
-//!   `x̂ⱼ = c₀ + Σᵢ cᵢ·Bᵢ[j]` (paper Eq. 1):
+//! ## Refcount lifecycle and copy-on-write
 //!
-//!   ```text
-//!   strip  = │ plane 0 │ … │ plane bits-1 │ f16 coeffs │
-//!   words/strip = bits·⌈cap·hd/32⌉ + ⌈cap·⌈hd/group⌉·(bits+1)/2⌉
-//!   bytes/slot  = n_layers × 2 × n_kv_heads × words/strip × 4
-//!   ```
+//! Pages are refcounted. Holders are (a) session page tables
+//! ([`KvHandle`]) and (b) prefix-cache radix nodes
+//! ([`crate::serving::prefix`]):
 //!
-//!   At `bits = 2, group = 32, hd = 32` a slot is **9.1× smaller**
-//!   than f32 — the decode sweep streams that many fewer bytes per
-//!   token, which is the point: attention kernels
-//!   ([`crate::tensor::strip_dots_packed`] /
-//!   [`crate::tensor::strip_axpys_packed`]) walk the plane words
-//!   directly, fusing dequantization into the score/AV passes instead
-//!   of materializing f32 rows.
+//! * **alloc** — first store into a (strip, page): rc 0 → 1, the
+//!   storing handle owns it (`shared == false`). Dirty reused memory is
+//!   fine: f32 rows are fully overwritten and packed stores are masked
+//!   read-modify-writes that never read bits they didn't store.
+//! * **share** — [`KvArena::fork`] / [`KvArena::export_prefix`] /
+//!   [`KvArena::import_prefix`]: rc += 1 and every table entry
+//!   referencing the page flips to `shared == true`. `fork()` is a pure
+//!   refcount bump over the live prefix — no byte copy.
+//! * **copy-on-write** — store into a `shared` page: if rc == 1 the
+//!   holder is the sole owner again and reclaims the page in place
+//!   (flips `shared` off, no copy); otherwise a fresh page is
+//!   allocated, the page copied **bytewise** (no re-quantization), the
+//!   old ref dropped, and `cow_copies` counts it.
+//! * **release** — handle drop / cache eviction: rc -= 1; at 0 the
+//!   page's generation bumps and it returns to the LIFO free list.
+//!   [`KvArena::page_is_live`] answers `false` for the old generation
+//!   forever — a freed page can never be resurrected.
 //!
-//! Quantization happens **once, at store time**: [`KvViewMut::store_k`]
-//! / [`store_v`](KvViewMut::store_v) encode the freshly-computed
-//! projection row into the slot (masked writes touching exactly that
-//! row's bits). Reads, [`KvArena::fork`], and slot reuse all operate on
-//! the packed bytes — a fork is a bytewise prefix copy with **no
-//! re-quantization**, even when the fork position lands inside a shared
-//! plane word.
+//! ## Growth, pressure, exhaustion
 //!
-//! Layer-major first because the decode sweep visits layers outermost —
-//! everything a layer's attention pass touches sits in one contiguous
-//! span of the slot. Head-major inside because each head's score pass
-//! is then one contiguous strip walk. Making the *slots themselves*
-//! adjacent in one slab is what turns the batched serving sweep's
-//! score/AV phase into a single multi-session pass per (layer, kv-head)
-//! over arena-adjacent strips — in either format.
+//! The pool grows by whole-slot page batches (doubling, like the old
+//! slab), so `bytes_resident` stays a multiple of `slot_bytes`.
+//! [`KvArena::with_limit`] caps live *sessions* at `max_slots`
+//! (`acquire`/`fork` return `None` there — admission control) and page
+//! growth at `max_slots` slots' worth. When a store needs a page, the
+//! free list is empty, and growth is capped, the arena calls the
+//! registered **reclaimer** ([`KvArena::set_reclaimer`] — the prefix
+//! cache's LRU leaf evictor) with no arena lock held; if nothing can be
+//! freed it panics `"KV arena exhausted"`, the same loud-failure
+//! contract as before.
 //!
 //! ## Handles and safety
 //!
-//! aliasing: one live [`KvHandle`] per slot — every raw-pointer carve
-//! in this file derives from a handle borrow, distinct slots never
-//! overlap, and all offsets are hard-asserted. This header is the
-//! protocol declaration `bpdq lint` rule L5 anchors to.
+//! aliasing: one writable owner per page — a page is written only
+//! through a table entry with `shared == false`, at most one such entry
+//! exists across all live handles (ownership transfers only through
+//! COW, which mints a fresh page), and `shared` pages are read-only
+//! everywhere, so shared `&[u32]` reads never coexist with a `&mut`
+//! carve. Every raw-pointer carve derives from a `PageRef.base` whose
+//! page this handle holds a refcount on; distinct page ids map to
+//! disjoint `page_words` spans inside segments that never move or
+//! free; and all strip/page/position coordinates are hard-asserted at
+//! the boundary. This header is the protocol declaration `bpdq lint`
+//! rule L5 anchors to.
 //!
-//! [`KvHandle`] is an affine token (slot index + generation; not
-//! `Clone`): at most one handle per live slot exists, handed out by
-//! [`KvArena::acquire`] and consumed by [`KvArena::release`]. Shared
-//! reads go through [`KvView`] (borrows the handle), exclusive writes
-//! through [`KvViewMut`] (borrows it mutably). The invariants, keyed
-//! by the `bpdq lint` rule that machine-checks each:
+//! [`KvHandle`] is an affine token (not `Clone`): shared reads go
+//! through [`KvView`] (borrows it), exclusive stores through
+//! [`KvViewMut`] (borrows it mutably), and the borrow checker enforces
+//! per-handle aliasing discipline. The invariants, keyed by the
+//! `bpdq lint` rule that machine-checks each:
 //!
 //! | Rule | What it pins down here |
 //! |------|------------------------|
 //! | `L1` | every `unsafe` block/impl below carries a `// SAFETY:` comment naming the invariant it leans on |
-//! | `L2`–`L4` | the arena is deliberately *not* hot code: locking (`inner` mutex) and the hard protocol asserts live here at the slot boundary, so the marked decode kernels ([`crate::tensor`], the engine's `fused_attention`) never allocate, panic, or lock |
-//! | `L5` | raw-pointer carving (`from_raw_parts*`, `.add`) appears only inside `unsafe` blocks, under this header's protocol: one handle per live slot means distinct slots never alias; strip coordinates, store position, strip length, and fork position are **hard** asserts in every build profile |
+//! | `L2`–`L4` | the arena is deliberately *not* hot code: locks and hard protocol asserts live here at the page boundary (alloc / COW / share / release), so the steady-state store fast path (owned page) and the marked decode kernels never allocate, panic, or lock |
+//! | `L5` | raw-pointer carving (`from_raw_parts*`, `.add`, `copy_nonoverlapping`) appears only inside `unsafe` blocks, under this header's protocol: one writable owner per page, refcount-held liveness, disjoint page spans |
 //!
 //! Handles are stamped with their arena's id and rejected by foreign
-//! arenas (`check_owned`); generations catch stale handles
-//! ([`KvArena::is_live`], asserted on release). The borrow checker
-//! enforces per-slot aliasing discipline through the view borrows.
-//!
-//! ## Exhaustion and growth
-//!
-//! The arena starts empty and grows by whole slab segments (doubling,
-//! so steady state is one or two big slabs) up to `max_slots`; beyond
-//! that `acquire` returns `None` and session construction panics with
-//! "KV arena exhausted" — the same loud-failure contract as the decode
-//! capacity assert ("KV cache exhausted"). Freed slots are reused LIFO
-//! (warmest lines first), which is also what keeps concurrently active
-//! sessions in *adjacent* slots for the batched sweep.
+//! arenas (`check_owned`); per-page generations catch stale references
+//! (asserted on every release and import).
 
 use crate::model::Model;
 use crate::tensor::{PackedGeom, PackedStrip, PackedStripMut};
-use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Monotonic arena id source — lets handles be checked against the
-/// arena they came from (releasing into a foreign arena would otherwise
-/// mint two live handles to one slot).
+/// arena they came from (a foreign release would corrupt refcounts).
 static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
 
 /// How a KV strip is stored in the arena. Runtime-only (not serialized
@@ -161,9 +162,9 @@ impl KvFormat {
     }
 }
 
-/// Geometry of one model's KV slots — everything the arena needs to
-/// know about a model, without holding the model (no `Arc` cycle with
-/// [`Model`]'s cached arena).
+/// Geometry of one model's KV: strip grid, capacity, page size, and
+/// storage format — everything the arena needs without holding the
+/// model (no `Arc` cycle with [`Model`]'s cached arena).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KvGeom {
     pub n_layers: usize,
@@ -171,150 +172,290 @@ pub struct KvGeom {
     pub head_dim: usize,
     /// positions per session — `Model::decode_capacity()`
     pub cap: usize,
+    /// positions per page (`pp`); clamped to `1..=cap` at construction
+    pub page_positions: usize,
     /// physical strip format (f32 or packed bit-planes)
     pub format: KvFormat,
 }
 
 impl KvGeom {
     pub fn of(model: &Model) -> Self {
+        let cap = model.decode_capacity();
         Self {
             n_layers: model.cfg.n_layers,
             n_kv_heads: model.cfg.n_kv_heads,
             head_dim: model.cfg.head_dim(),
-            cap: model.decode_capacity(),
+            cap,
+            page_positions: model.kv_page.clamp(1, cap),
             format: model.cfg.kv_format,
         }
     }
 
-    /// Packed-strip geometry, when the format is a bit-plane one.
-    pub fn packed(&self) -> Option<PackedGeom> {
+    /// Packed geometry of ONE PAGE (a `page_positions`-long strip);
+    /// `None` under [`KvFormat::F32`].
+    pub fn packed_page(&self) -> Option<PackedGeom> {
         match self.format {
             KvFormat::F32 => None,
             KvFormat::BitPlane { bits, group } => {
-                Some(PackedGeom::new(self.cap, self.head_dim, bits, group))
+                Some(PackedGeom::for_page(self.page_positions, self.head_dim, bits, group))
             }
         }
     }
 
-    /// u32 words per (layer, K/V, kv-head) strip under this format.
-    pub fn strip_words(&self) -> usize {
-        match self.packed() {
-            None => self.cap * self.head_dim, // one f32 per word
+    /// Pages per strip: `⌈cap / pp⌉`.
+    #[inline]
+    pub fn n_pages(&self) -> usize {
+        self.cap.div_ceil(self.page_positions)
+    }
+
+    /// Strips per session: `n_layers × {K,V} × n_kv_heads`.
+    #[inline]
+    pub fn n_strips(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads
+    }
+
+    /// u32 words per page (uniform across the slot).
+    pub fn page_words(&self) -> usize {
+        match self.packed_page() {
+            None => self.page_positions * self.head_dim, // one f32 per word
             Some(pg) => pg.strip_words(),
         }
     }
 
-    /// u32 words per arena slot.
-    pub fn slot_words(&self) -> usize {
-        self.n_layers * 2 * self.n_kv_heads * self.strip_words()
-    }
-
-    /// **Real packed** bytes per slot (the per-session KV footprint —
-    /// `Model::kv_bytes_per_session`). Format-aware: f32 slots cost
-    /// `n_layers × 2 × kv_dim × cap × 4` bytes; bit-plane slots cost
-    /// the plane words + f16 coefficients actually resident.
-    pub fn slot_bytes(&self) -> usize {
-        self.slot_words() * 4
-    }
-
-    /// Word offset of the (layer, K=0/V=1, kv-head) strip within a
-    /// slot. Hard-bounded: this offset feeds the raw-pointer slice
-    /// carving in the views, so out-of-range coordinates must never
-    /// reach it in any build profile.
+    /// Bytes per page — the sharing/eviction granularity.
     #[inline]
-    fn strip_base(&self, layer: usize, which: usize, kvh: usize) -> usize {
+    pub fn page_bytes(&self) -> usize {
+        self.page_words() * 4
+    }
+
+    /// Pages one session needs at full capacity.
+    #[inline]
+    pub fn pages_per_slot(&self) -> usize {
+        self.n_strips() * self.n_pages()
+    }
+
+    /// **Real packed** bytes of one full session's KV (the per-session
+    /// footprint — `Model::kv_bytes_per_session`). "Slot" is kept for
+    /// continuity with the pre-paging arena; a session only *resides*
+    /// this much once it has stored into every page, and shared pages
+    /// are counted once pool-wide, not per session.
+    pub fn slot_bytes(&self) -> usize {
+        self.pages_per_slot() * self.page_bytes()
+    }
+
+    /// Flat strip index within a page table. Hard-bounded: this feeds
+    /// the raw-pointer carving in the views, so out-of-range
+    /// coordinates must never reach it in any build profile.
+    #[inline]
+    fn strip_index(&self, layer: usize, which: usize, kvh: usize) -> usize {
         assert!(
             layer < self.n_layers && which < 2 && kvh < self.n_kv_heads,
             "KV strip coordinates out of range"
         );
-        ((layer * 2 + which) * self.n_kv_heads + kvh) * self.strip_words()
+        (layer * 2 + which) * self.n_kv_heads + kvh
     }
 }
 
-/// Affine ownership token for one arena slot. Not `Clone` — exactly one
-/// handle exists per live slot, so `&mut KvHandle` is exclusive access
-/// to the slot's memory and `&KvHandle` is shared read access.
-pub struct KvHandle {
-    slot: usize,
-    generation: u64,
-    arena_id: u64,
+/// One page-table entry: which pool page backs (strip, page-index),
+/// plus the sharing bit that drives COW.
+#[derive(Clone, Copy)]
+struct PageRef {
+    id: u32,
+    gen: u64,
     base: *mut u32,
+    /// `true` ⇒ another holder may reference this page: read-only until
+    /// reclaimed in place (rc back to 1) or copied on write.
+    shared: bool,
 }
 
-// SAFETY: sending the handle moves exclusive ownership of its slot to
-// another thread — the slot region is disjoint from every other live
-// handle's (arena invariant: one handle per slot), and all access goes
-// through KvView/KvViewMut whose aliasing the borrow checker enforces
-// via the handle borrow. The raw `base` pointer is just a pre-resolved
-// address; it is never dereferenced except under those views.
+/// Affine handle to one session's KV pages. Not `Clone` — `&mut
+/// KvHandle` is exclusive write access to its owned pages and
+/// `&KvHandle` is shared read access; sharing goes through
+/// [`KvArena::fork`] or the prefix-cache lending API, which bump
+/// refcounts and flip entries to `shared`.
+pub struct KvHandle {
+    arena_id: u64,
+    n_pages: usize,
+    table: Box<[Option<PageRef>]>,
+}
+
+// SAFETY: sending the handle moves its page table to another thread —
+// the arena's refcounts keep every referenced page alive, `shared`
+// pages are never written through any handle, and non-shared pages are
+// written only through `&mut` access to THIS handle (aliasing header),
+// so no aliased writes can arise from the move. The raw base pointers
+// are pre-resolved addresses, only dereferenced under the views.
 unsafe impl Send for KvHandle {}
-// SAFETY: `&KvHandle` grants only shared *read* access to the slot
-// (KvView); concurrent shared reads of disjoint-or-identical words are
-// race-free, and any mutation requires `&mut KvHandle`, which the
-// borrow checker makes exclusive across threads.
+// SAFETY: `&KvHandle` grants only shared *read* access to referenced
+// pages (KvView); concurrent shared reads are race-free, and mutation
+// requires `&mut KvHandle`, which the borrow checker makes exclusive.
 unsafe impl Sync for KvHandle {}
 
 impl KvHandle {
-    pub fn slot(&self) -> usize {
-        self.slot
+    /// Pages currently referenced by this handle (lazily grown: 0 after
+    /// `acquire`, one per touched (strip, page) after stores).
+    pub fn page_count(&self) -> usize {
+        self.table.iter().flatten().count()
     }
 
-    pub fn generation(&self) -> u64 {
-        self.generation
+    /// Referenced pages flagged shared (lent to / borrowed from the
+    /// prefix cache or a fork).
+    pub fn shared_page_count(&self) -> usize {
+        self.table.iter().flatten().filter(|p| p.shared).count()
+    }
+
+    /// `(id, generation)` of every referenced page, table order — the
+    /// observable the resurrection/leak tests key on.
+    pub fn page_ids(&self) -> Vec<(u32, u64)> {
+        self.table.iter().flatten().map(|p| (p.id, p.gen)).collect()
     }
 }
 
-/// Cumulative arena counters (surfaced through `serving::metrics` into
-/// the serve summary and `BENCH_decode.json`).
+/// Point-in-time arena counters (surfaced through `serving::metrics`
+/// into the serve summary and `BENCH_decode.json`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ArenaStats {
     /// live sessions right now
     pub slots_in_use: usize,
     /// most sessions ever live at once
     pub high_water: usize,
-    /// slots ever carved out of slabs
+    /// cumulative session admissions (acquires + forks)
     pub slots_created: usize,
-    /// acquisitions served from the free list (pooling hit count)
+    /// page allocations served from the free list (pooling hit count)
     pub reused: usize,
-    /// bytes of slab currently allocated
+    /// bytes of slab currently backing the page pool
     pub bytes_resident: usize,
-    /// **real packed** bytes per slot under the arena's format (the
-    /// format-aware per-session KV footprint)
+    /// **real packed** bytes per full session under the arena's format
     pub slot_bytes: usize,
-    /// slot-to-slot prefix copies performed by `fork`
+    /// `fork()` operations — refcount bumps now, not byte copies (the
+    /// copies divergence later pays are `cow_copies`)
     pub fork_copies: u64,
+    /// copy-on-write page copies (first divergent store into a page
+    /// that still had other holders)
+    pub cow_copies: u64,
+    /// pages with rc ≥ 1
+    pub pages_in_use: usize,
+    /// pages with rc ≥ 2 (physically shared right now)
+    pub pages_shared: usize,
+    /// most pages ever live at once
+    pub pages_high_water: usize,
+    /// bytes per page (the sharing/eviction granularity)
+    pub page_bytes: usize,
 }
 
 struct ArenaInner {
     /// owning slab segments; boxed so the heap buffers never move when
-    /// the segment list grows
+    /// the segment list grows — page base pointers stay valid forever
     segments: Vec<Box<[u32]>>,
-    /// per-slot base pointer into its segment, indexed by slot id
+    /// per-page base pointer into its segment, indexed by page id
     bases: Vec<*mut u32>,
-    /// bumped on release; a mismatch means a stale handle
-    generations: Vec<u64>,
-    /// LIFO free list of slot ids
-    free: Vec<usize>,
-    in_use: usize,
-    high_water: usize,
+    /// per-page refcount (0 = on the free list)
+    rc: Vec<u32>,
+    /// per-page generation, bumped when the page is freed; a mismatch
+    /// means a stale reference
+    gen: Vec<u64>,
+    /// LIFO free list of page ids (warmest lines first)
+    free: Vec<u32>,
+    sessions: usize,
+    session_high_water: usize,
+    sessions_created: usize,
     reused: usize,
-    fork_copies: u64,
+    fork_ops: u64,
+    cow_copies: u64,
     bytes_resident: usize,
+    pages_in_use: usize,
+    pages_high_water: usize,
 }
 
-// SAFETY: the raw per-slot pointers are only dereferenced through
+// SAFETY: the raw per-page pointers are only dereferenced through
 // KvView/KvViewMut under the handle discipline (never through
-// ArenaInner itself); the inner bookkeeping is only touched under the
-// arena mutex, and the `Box<[u32]>` segments it owns are Send.
+// ArenaInner itself); the bookkeeping is only touched under the arena
+// mutex, and the `Box<[u32]>` segments it owns are Send.
 unsafe impl Send for ArenaInner {}
 
-/// One pooled KV slab per model. See the module docs for formats,
-/// layout, and the handle/ownership contract.
+impl ArenaInner {
+    /// Carve `add_slots` slots' worth of fresh pages into the free
+    /// list. Pushed in reverse so LIFO pops hand out ascending ids —
+    /// a batch-filled session lands in adjacent pages.
+    fn grow(&mut self, geom: &KvGeom, add_slots: usize) {
+        let pw = geom.page_words();
+        let count = add_slots * geom.pages_per_slot();
+        let mut seg = vec![0u32; count * pw].into_boxed_slice();
+        let base = seg.as_mut_ptr();
+        let first = self.bases.len() as u32;
+        for i in 0..count {
+            // SAFETY: `i < count` and the segment holds exactly
+            // `count * pw` words, so the offset stays inside the fresh
+            // allocation; the boxed slice is pushed onto `segments`
+            // below and never dropped or moved, so the carved page
+            // bases remain valid for the arena's lifetime.
+            self.bases.push(unsafe { base.add(i * pw) });
+            self.rc.push(0);
+            self.gen.push(1);
+        }
+        for id in (first..first + count as u32).rev() {
+            self.free.push(id);
+        }
+        self.bytes_resident += count * pw * 4;
+        self.segments.push(seg);
+    }
+
+    /// Pop a free page (rc 0 → 1), growing within the slot cap. `None`
+    /// when the free list is empty and growth is exhausted — the caller
+    /// escalates to the reclaimer.
+    fn try_alloc(&mut self, geom: &KvGeom, initial_slots: usize, max_slots: usize) -> Option<u32> {
+        if self.free.is_empty() {
+            let pps = geom.pages_per_slot();
+            let have = self.bases.len() / pps;
+            let want = if have == 0 {
+                initial_slots.min(max_slots)
+            } else {
+                have.min(max_slots.saturating_sub(have)) // doubling, capped
+            };
+            if want == 0 {
+                return None;
+            }
+            self.grow(geom, want);
+        }
+        let id = self.free.pop()?;
+        let i = id as usize;
+        assert_eq!(self.rc[i], 0, "free KV page with live refcount");
+        self.rc[i] = 1;
+        self.reused += usize::from(self.gen[i] > 1); // gen 1 = first life
+        self.pages_in_use += 1;
+        self.pages_high_water = self.pages_high_water.max(self.pages_in_use);
+        Some(id)
+    }
+
+    /// Drop one reference; at rc 0 the generation bumps and the page
+    /// returns to the free list. Returns whether the page was freed.
+    fn release_ref(&mut self, id: u32, gen: u64) -> bool {
+        let i = id as usize;
+        assert!(self.gen[i] == gen && self.rc[i] > 0, "double release / stale KV page ref");
+        self.rc[i] -= 1;
+        if self.rc[i] == 0 {
+            self.gen[i] += 1;
+            self.free.push(id);
+            self.pages_in_use -= 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Reclaim hook: asked to free at least N pages, returns how many it
+/// actually freed. Registered by the prefix cache's LRU evictor.
+type Reclaimer = Box<dyn Fn(usize) -> usize + Send + Sync>;
+
+/// One pooled, paged KV arena per model. See the module docs for the
+/// layout, refcount lifecycle, and ownership contract.
 pub struct KvArena {
     id: u64,
     geom: KvGeom,
     initial_slots: usize,
     max_slots: usize,
+    reclaim: Mutex<Option<Reclaimer>>,
     inner: Mutex<ArenaInner>,
 }
 
@@ -328,13 +469,15 @@ impl std::fmt::Debug for KvArena {
 }
 
 impl KvArena {
-    /// Arena that grows without bound (by doubling segments).
+    /// Arena whose page pool grows without bound (by doubling).
     pub fn new(geom: KvGeom, initial_slots: usize) -> Self {
         Self::with_limit(geom, initial_slots, usize::MAX)
     }
 
-    /// Arena capped at `max_slots` total; `acquire` returns `None` once
-    /// every slot is live.
+    /// Arena capped at `max_slots` concurrent sessions and `max_slots`
+    /// slots' worth of pages; `acquire`/`fork` return `None` at the
+    /// session cap, page pressure beyond the pool cap escalates to the
+    /// reclaimer and then panics "KV arena exhausted".
     pub fn with_limit(geom: KvGeom, initial_slots: usize, max_slots: usize) -> Self {
         assert!(initial_slots > 0, "arena needs at least one slot");
         Self {
@@ -342,16 +485,22 @@ impl KvArena {
             geom,
             initial_slots,
             max_slots,
+            reclaim: Mutex::new(None),
             inner: Mutex::new(ArenaInner {
                 segments: Vec::new(),
                 bases: Vec::new(),
-                generations: Vec::new(),
+                rc: Vec::new(),
+                gen: Vec::new(),
                 free: Vec::new(),
-                in_use: 0,
-                high_water: 0,
+                sessions: 0,
+                session_high_water: 0,
+                sessions_created: 0,
                 reused: 0,
-                fork_copies: 0,
+                fork_ops: 0,
+                cow_copies: 0,
                 bytes_resident: 0,
+                pages_in_use: 0,
+                pages_high_water: 0,
             }),
         }
     }
@@ -360,198 +509,279 @@ impl KvArena {
         self.geom
     }
 
-    /// Unique id of this arena (stamped into every handle; used to key
-    /// per-arena metrics and to reject foreign handles).
+    /// Unique id of this arena (used to key per-arena metrics and to
+    /// reject foreign handles).
     pub fn id(&self) -> u64 {
         self.id
     }
 
-    /// Total slots this arena may ever carve (`usize::MAX` = unbounded).
+    /// Session cap (`usize::MAX` = unbounded).
     pub fn max_slots(&self) -> usize {
         self.max_slots
     }
 
+    /// Register the under-pressure page reclaimer (the prefix cache's
+    /// LRU leaf evictor). Invoked with **no** arena lock held, so it
+    /// may re-enter through [`Self::release_page_refs`].
+    pub fn set_reclaimer(&self, f: impl Fn(usize) -> usize + Send + Sync + 'static) {
+        *self.reclaim.lock().unwrap() = Some(Box::new(f));
+    }
+
     /// A handle is only meaningful inside the arena that minted it —
-    /// releasing or viewing through a foreign arena would break the
-    /// one-handle-per-slot invariant the unsafe slice carving relies on.
+    /// foreign refcount traffic would corrupt the page pool.
     #[inline]
     fn check_owned(&self, h: &KvHandle) {
         assert_eq!(h.arena_id, self.id, "KV handle used with a foreign arena");
     }
 
-    /// Carve a fresh segment (doubling growth) into the free list.
-    fn grow(&self, inner: &mut ArenaInner) {
-        let have = inner.bases.len();
-        if have >= self.max_slots {
-            return;
-        }
-        let want = if have == 0 { self.initial_slots } else { have };
-        let add = want.min(self.max_slots - have);
-        let words = self.geom.slot_words();
-        let mut seg = vec![0u32; add * words].into_boxed_slice();
-        let base = seg.as_mut_ptr();
-        for i in 0..add {
-            // SAFETY: `i < add` and the segment holds exactly
-            // `add * words` words, so `base + i*words` stays inside the
-            // allocation; the boxed slice is pushed onto `segments`
-            // below and never moves (the box owns a stable heap
-            // buffer), so the carved slot bases remain valid for the
-            // arena's lifetime.
-            inner.bases.push(unsafe { base.add(i * words) });
-            inner.generations.push(0);
-        }
-        // Push in reverse so LIFO pops hand out ascending slot ids —
-        // concurrently-acquired sessions land in adjacent slots.
-        for i in (0..add).rev() {
-            inner.free.push(have + i);
-        }
-        inner.bytes_resident += add * words * 4;
-        inner.segments.push(seg);
-    }
-
-    /// Claim a slot. `None` only when the arena is at `max_slots` with
-    /// every slot live — callers turn that into a "KV arena exhausted"
-    /// panic, mirroring the decode capacity assert.
+    /// Admit a new session with an empty page table. Pages are
+    /// allocated lazily at first store per (strip, page); `None` once
+    /// `max_slots` sessions are live — callers turn that into the
+    /// "KV arena exhausted" panic, mirroring the capacity assert.
     pub fn acquire(&self) -> Option<KvHandle> {
         let mut inner = self.inner.lock().unwrap();
-        let slot = match inner.free.pop() {
-            Some(s) => {
-                inner.reused += 1;
-                s
-            }
-            None => {
-                self.grow(&mut inner);
-                inner.free.pop()?
-            }
-        };
-        inner.in_use += 1;
-        inner.high_water = inner.high_water.max(inner.in_use);
+        if inner.sessions >= self.max_slots {
+            return None;
+        }
+        inner.sessions += 1;
+        inner.sessions_created += 1;
+        inner.session_high_water = inner.session_high_water.max(inner.sessions);
         Some(KvHandle {
-            slot,
-            generation: inner.generations[slot],
             arena_id: self.id,
-            base: inner.bases[slot],
+            n_pages: self.geom.n_pages(),
+            table: vec![None; self.geom.pages_per_slot()].into_boxed_slice(),
         })
     }
 
-    /// Return a slot to the free list. The generation bump invalidates
-    /// any (buggy, unsafe-born) copy of the handle.
+    /// Allocate one page, escalating to the reclaimer under pressure.
+    /// Panics "KV arena exhausted" when nothing can be freed.
+    fn alloc_page(&self) -> (u32, u64, *mut u32) {
+        loop {
+            {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(id) = inner.try_alloc(&self.geom, self.initial_slots, self.max_slots) {
+                    let i = id as usize;
+                    return (id, inner.gen[i], inner.bases[i]);
+                }
+            }
+            // Pressure path: the arena lock is NOT held here — the
+            // reclaimer (prefix-cache eviction) re-enters through
+            // release_page_refs.
+            let freed = match &*self.reclaim.lock().unwrap() {
+                Some(f) => f(self.geom.pages_per_slot()),
+                None => 0,
+            };
+            if freed == 0 {
+                panic!("KV arena exhausted");
+            }
+        }
+    }
+
+    /// Copy-on-write resolution for a `shared` table entry: reclaim in
+    /// place when this handle is the sole remaining holder (no copy),
+    /// else copy the page **bytewise** into a fresh one — packed pages
+    /// are position-contiguous words, so no re-quantization happens.
+    fn cow(&self, pr: &mut PageRef) -> *mut u32 {
+        {
+            let inner = self.inner.lock().unwrap();
+            let i = pr.id as usize;
+            debug_assert_eq!(inner.gen[i], pr.gen, "COW of a stale page ref");
+            if inner.rc[i] == 1 {
+                // Sole holder: no concurrent rc increment is possible
+                // (sharing a page requires an existing ref, and ours is
+                // the only one), so the flip is race-free.
+                drop(inner);
+                pr.shared = false;
+                return pr.base;
+            }
+        }
+        let (id, gen, base) = self.alloc_page();
+        // SAFETY: the source page is alive (this handle holds one of
+        // its ≥ 2 refs) and read-only (shared ⇒ nobody writes it); the
+        // destination is a fresh page referenced by nothing else; and
+        // distinct page ids map to disjoint `page_words` spans, so the
+        // ranges cannot overlap.
+        unsafe {
+            std::ptr::copy_nonoverlapping(pr.base as *const u32, base, self.geom.page_words());
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.cow_copies += 1;
+        inner.release_ref(pr.id, pr.gen);
+        *pr = PageRef { id, gen, base, shared: false };
+        base
+    }
+
+    /// Branch-point share: a new session referencing `src`'s pages
+    /// covering positions `0..pos` — a pure refcount bump (both sides'
+    /// entries flip to `shared`; the first divergent store pays one
+    /// page COW). `None` at the session cap.
+    pub fn fork(&self, src: &mut KvHandle, pos: usize) -> Option<KvHandle> {
+        self.check_owned(src);
+        assert!(pos <= self.geom.cap, "fork position {pos} beyond slot capacity");
+        let mut inner = self.inner.lock().unwrap();
+        if inner.sessions >= self.max_slots {
+            return None;
+        }
+        inner.sessions += 1;
+        inner.sessions_created += 1;
+        inner.session_high_water = inner.session_high_water.max(inner.sessions);
+        inner.fork_ops += 1;
+        let np = self.geom.n_pages();
+        let need = pos.div_ceil(self.geom.page_positions);
+        let mut table = vec![None; src.table.len()].into_boxed_slice();
+        for s in 0..self.geom.n_strips() {
+            for p in 0..need {
+                let idx = s * np + p;
+                if let Some(pr) = &mut src.table[idx] {
+                    inner.rc[pr.id as usize] += 1;
+                    pr.shared = true;
+                    table[idx] = Some(PageRef { shared: true, ..*pr });
+                }
+            }
+        }
+        Some(KvHandle { arena_id: self.id, n_pages: np, table })
+    }
+
+    /// Retire a session: drop one ref per referenced page (freeing the
+    /// ones that hit rc 0, with a generation bump) and release the
+    /// session slot.
     pub fn release(&self, h: KvHandle) {
         self.check_owned(&h);
         let mut inner = self.inner.lock().unwrap();
-        assert_eq!(inner.generations[h.slot], h.generation, "double release / stale KV handle");
-        inner.generations[h.slot] = inner.generations[h.slot].wrapping_add(1);
-        inner.in_use -= 1;
-        inner.free.push(h.slot);
+        for pr in h.table.iter().flatten() {
+            inner.release_ref(pr.id, pr.gen);
+        }
+        assert!(inner.sessions > 0, "double session release");
+        inner.sessions -= 1;
     }
 
-    /// Does `(slot, generation)` name a currently-live claim? Stale
-    /// handles (released, possibly re-acquired by someone else) answer
-    /// `false` — the reuse-after-release safety check.
-    pub fn is_live(&self, slot: usize, generation: u64) -> bool {
+    /// Does `(id, gen)` name a currently-live page generation? Freed
+    /// generations answer `false` forever — the resurrection check.
+    pub fn page_is_live(&self, id: u32, gen: u64) -> bool {
         let inner = self.inner.lock().unwrap();
-        slot < inner.generations.len()
-            && inner.generations[slot] == generation
-            && !inner.free.contains(&slot)
+        let i = id as usize;
+        i < inner.rc.len() && inner.gen[i] == gen && inner.rc[i] > 0
     }
 
-    /// Word spans `(offset, len)` within one strip that hold the live
-    /// prefix of `pos` positions — the fork copy list. F32 strips have
-    /// one dense span; packed strips have one span per plane plus the
-    /// coefficient prefix (see [`PackedGeom::prefix_spans`]).
-    fn prefix_spans(&self, pos: usize) -> Vec<(usize, usize)> {
-        match self.geom.packed() {
-            None => {
-                let n = pos * self.geom.head_dim;
-                if n == 0 {
-                    Vec::new()
-                } else {
-                    vec![(0, n)]
-                }
-            }
-            Some(pg) => pg.prefix_spans(pos),
+    /// Current refcount of page `(id, gen)`, 0 for freed generations.
+    /// The prefix cache's evictor compares this against its own per-page
+    /// ref tally to tell cache-internal sharing (evicting cascades and
+    /// eventually frees) from session borrows (evicting frees nothing
+    /// and only destroys future hits).
+    pub fn page_refs(&self, id: u32, gen: u64) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let i = id as usize;
+        if i < inner.rc.len() && inner.gen[i] == gen {
+            inner.rc[i]
+        } else {
+            0
         }
     }
 
-    /// Branch-point copy: claim a fresh slot and copy the live prefix
-    /// of every (layer, K/V, head) strip from `src` **bytewise** —
-    /// contiguous word copies inside the slab, no re-quantization, no
-    /// zeroing of the never-read tails. For packed strips the copied
-    /// prefix may end mid-word (a position-group shared with unwritten
-    /// positions); the masked store discipline makes the stale tail
-    /// bits harmless.
-    pub fn fork(&self, src: &KvHandle, pos: usize) -> Option<KvHandle> {
-        self.check_owned(src);
-        // Hard bound: this arithmetic feeds raw-pointer copies below.
-        assert!(pos <= self.geom.cap, "fork position {pos} beyond slot capacity");
-        let dst = self.acquire()?;
-        let spans = self.prefix_spans(pos);
-        if !spans.is_empty() {
-            let strip_words = self.geom.strip_words();
-            for s in 0..self.geom.n_layers * 2 * self.geom.n_kv_heads {
-                let base = s * strip_words;
-                for &(off, n) in &spans {
-                    // SAFETY: src is live (we hold &KvHandle, so no
-                    // KvViewMut can exist) and dst was just acquired (no
-                    // other reference); distinct slots never overlap, and
-                    // every span lies inside the strip (hard-bounded by
-                    // the geometry that computed it).
-                    unsafe {
-                        std::ptr::copy_nonoverlapping(
-                            src.base.add(base + off),
-                            dst.base.add(base + off),
-                            n,
-                        );
-                    }
-                }
+    /// Lend the pages covering `h`'s positions `0..pos` to an external
+    /// holder (a prefix-cache node): rc += 1 per page, the handle's
+    /// entries flip to `shared`, and the returned strip-major
+    /// `(id, gen)` list — `n_strips × ⌈pos/pp⌉` entries — is the
+    /// holder's receipt (drop it with [`Self::release_page_refs`]).
+    /// Every covered page must have been stored (the donor prefilled
+    /// through `pos`).
+    pub fn export_prefix(&self, h: &mut KvHandle, pos: usize) -> Vec<(u32, u64)> {
+        self.check_owned(h);
+        assert!(pos <= self.geom.cap, "export position beyond slot capacity");
+        let mut inner = self.inner.lock().unwrap();
+        let np = self.geom.n_pages();
+        let need = pos.div_ceil(self.geom.page_positions);
+        let mut out = Vec::with_capacity(self.geom.n_strips() * need);
+        for s in 0..self.geom.n_strips() {
+            for p in 0..need {
+                let pr = h.table[s * np + p].as_mut().expect("export of an unstored KV page");
+                inner.rc[pr.id as usize] += 1;
+                pr.shared = true;
+                out.push((pr.id, pr.gen));
             }
         }
-        self.inner.lock().unwrap().fork_copies += 1;
-        Some(dst)
+        out
     }
 
-    /// Shared read access to a slot's strips.
+    /// Borrow cached pages into a fresh handle: positions `0..pos` of
+    /// every strip resolve to `pages` (an [`Self::export_prefix`]-shaped
+    /// list), rc += 1 per page, entries marked `shared` — the first
+    /// divergent store COWs. Panics on a freed generation: the cache
+    /// must only lend refs it still holds.
+    pub fn import_prefix(&self, h: &mut KvHandle, pages: &[(u32, u64)], pos: usize) {
+        self.check_owned(h);
+        assert!(pos <= self.geom.cap, "import position beyond slot capacity");
+        let np = self.geom.n_pages();
+        let need = pos.div_ceil(self.geom.page_positions);
+        assert_eq!(pages.len(), self.geom.n_strips() * need, "borrowed page list shape");
+        let mut inner = self.inner.lock().unwrap();
+        let mut it = pages.iter();
+        for s in 0..self.geom.n_strips() {
+            for p in 0..need {
+                let &(id, gen) = it.next().expect("length checked above");
+                let i = id as usize;
+                assert!(inner.gen[i] == gen && inner.rc[i] > 0, "import of a freed KV page");
+                inner.rc[i] += 1;
+                debug_assert!(h.table[s * np + p].is_none(), "import over a populated entry");
+                h.table[s * np + p] =
+                    Some(PageRef { id, gen, base: inner.bases[i], shared: true });
+            }
+        }
+    }
+
+    /// rc += 1 on each listed page — a cache node cloning part of
+    /// another node's coverage (radix split). All refs must be live.
+    pub fn page_ref_inc(&self, pages: &[(u32, u64)]) {
+        let mut inner = self.inner.lock().unwrap();
+        for &(id, gen) in pages {
+            let i = id as usize;
+            assert!(inner.gen[i] == gen && inner.rc[i] > 0, "ref-inc of a freed KV page");
+            inner.rc[i] += 1;
+        }
+    }
+
+    /// Drop external refs (cache node release / eviction); returns how
+    /// many pages hit rc 0 and went back to the free list.
+    pub fn release_page_refs(&self, pages: &[(u32, u64)]) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        pages.iter().filter(|&&(id, gen)| inner.release_ref(id, gen)).count()
+    }
+
+    /// Shared read access to a session's pages.
     pub fn view<'a>(&'a self, h: &'a KvHandle) -> KvView<'a> {
         self.check_owned(h);
-        debug_assert!(self.is_live(h.slot, h.generation), "stale KV handle");
-        KvView { base: h.base, geom: self.geom, _life: PhantomData }
+        KvView { geom: self.geom, handle: h }
     }
 
-    /// Exclusive read/write access to a slot's strips (requires the
-    /// one-and-only handle mutably).
+    /// Exclusive store access (with COW resolution through the arena).
     pub fn view_mut<'a>(&'a self, h: &'a mut KvHandle) -> KvViewMut<'a> {
         self.check_owned(h);
-        debug_assert!(self.is_live(h.slot, h.generation), "stale KV handle");
-        KvViewMut { base: h.base, geom: self.geom, _life: PhantomData }
+        KvViewMut { arena: self, geom: self.geom, handle: h }
     }
 
     pub fn stats(&self) -> ArenaStats {
         let inner = self.inner.lock().unwrap();
         ArenaStats {
-            slots_in_use: inner.in_use,
-            high_water: inner.high_water,
-            slots_created: inner.bases.len(),
+            slots_in_use: inner.sessions,
+            high_water: inner.session_high_water,
+            slots_created: inner.sessions_created,
             reused: inner.reused,
             bytes_resident: inner.bytes_resident,
             slot_bytes: self.geom.slot_bytes(),
-            fork_copies: inner.fork_copies,
+            fork_copies: inner.fork_ops,
+            cow_copies: inner.cow_copies,
+            pages_in_use: inner.pages_in_use,
+            pages_shared: inner.rc.iter().filter(|&&rc| rc >= 2).count(),
+            pages_high_water: inner.pages_high_water,
+            page_bytes: self.geom.page_bytes(),
         }
     }
 }
 
-/// Shared (read-only) borrow of one slot. Lifetime-tied to both the
-/// arena and the handle, so the slot can be neither released nor
-/// mutated while a view is out.
-pub struct KvView<'a> {
-    base: *mut u32,
-    geom: KvGeom,
-    _life: PhantomData<&'a KvHandle>,
-}
-
-/// Strip accessors shared by [`KvView`] and [`KvViewMut`] (the mut view
-/// re-exposes them so the decode step can read back what it stored
-/// under one exclusive borrow).
-macro_rules! impl_strip_readers {
+/// Per-page read accessors shared by [`KvView`] and [`KvViewMut`] (the
+/// mut view re-exposes them so the decode step can read back what it
+/// stored under one exclusive borrow).
+macro_rules! impl_page_readers {
     () => {
         /// The arena's strip format (drives kernel dispatch).
         #[inline]
@@ -559,125 +789,154 @@ macro_rules! impl_strip_readers {
             self.geom.format
         }
 
-        /// The first `len` cached K rows of `kvh` in `layer`, contiguous
-        /// f32 — [`KvFormat::F32`] slots only.
         #[inline]
-        pub fn k_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
-            self.f32_strip(layer, 0, kvh, len)
+        fn page_ref(&self, layer: usize, which: usize, kvh: usize, page: usize) -> &PageRef {
+            assert!(page < self.geom.n_pages(), "KV page index out of range");
+            let idx = self.geom.strip_index(layer, which, kvh) * self.handle.n_pages + page;
+            self.handle.table[idx].as_ref().expect("KV page read before first store")
         }
 
-        /// The first `len` cached V rows of `kvh` in `layer`, contiguous
-        /// f32 — [`KvFormat::F32`] slots only.
+        /// Page `page` of the K strip of `kvh` in `layer`: the page's
+        /// `pp × head_dim` f32s — [`KvFormat::F32`] arenas only.
         #[inline]
-        pub fn v_strip(&self, layer: usize, kvh: usize, len: usize) -> &[f32] {
-            self.f32_strip(layer, 1, kvh, len)
+        pub fn k_page(&self, layer: usize, kvh: usize, page: usize) -> &[f32] {
+            self.f32_page(layer, 0, kvh, page)
         }
 
-        /// The packed K strip of `kvh` in `layer` —
-        /// [`KvFormat::BitPlane`] slots only.
+        /// Page `page` of the V strip (see [`Self::k_page`]).
         #[inline]
-        pub fn k_packed(&self, layer: usize, kvh: usize) -> PackedStrip<'_> {
-            self.packed_strip(layer, 0, kvh)
+        pub fn v_page(&self, layer: usize, kvh: usize, page: usize) -> &[f32] {
+            self.f32_page(layer, 1, kvh, page)
         }
 
-        /// The packed V strip of `kvh` in `layer` —
-        /// [`KvFormat::BitPlane`] slots only.
+        /// Packed page `page` of the K strip — one self-contained
+        /// `pp`-position strip, [`KvFormat::BitPlane`] arenas only.
         #[inline]
-        pub fn v_packed(&self, layer: usize, kvh: usize) -> PackedStrip<'_> {
-            self.packed_strip(layer, 1, kvh)
+        pub fn k_page_packed(&self, layer: usize, kvh: usize, page: usize) -> PackedStrip<'_> {
+            self.packed_page(layer, 0, kvh, page)
+        }
+
+        /// Packed page `page` of the V strip.
+        #[inline]
+        pub fn v_page_packed(&self, layer: usize, kvh: usize, page: usize) -> PackedStrip<'_> {
+            self.packed_page(layer, 1, kvh, page)
         }
 
         #[inline]
-        fn f32_strip(&self, layer: usize, which: usize, kvh: usize, len: usize) -> &[f32] {
+        fn f32_page(&self, layer: usize, which: usize, kvh: usize, page: usize) -> &[f32] {
             assert_eq!(self.geom.format, KvFormat::F32, "f32 strip read on a packed arena");
-            assert!(len <= self.geom.cap, "strip length beyond slot capacity");
-            let off = self.geom.strip_base(layer, which, kvh);
-            // SAFETY: within the slot (offset arithmetic hard-bounded by
-            // strip_base and the capacity assert); u32 and f32 share
-            // size/alignment, and shared reads are fine while the handle
-            // is borrowed.
+            let pr = self.page_ref(layer, which, kvh, page);
+            // SAFETY: the page is alive for this borrow (the handle
+            // holds a refcount on it, and the handle is borrowed by
+            // this view); u32 and f32 share size/alignment; and no
+            // `&mut` can coexist — shared pages are never written,
+            // owned pages only through `&mut` access to the same handle
+            // this borrow freezes (aliasing header).
             unsafe {
-                std::slice::from_raw_parts(
-                    self.base.add(off) as *const f32,
-                    len * self.geom.head_dim,
-                )
+                std::slice::from_raw_parts(pr.base as *const f32, self.geom.page_words())
             }
         }
 
         #[inline]
-        fn packed_strip(&self, layer: usize, which: usize, kvh: usize) -> PackedStrip<'_> {
-            let pg = self.geom.packed().expect("packed strip read on an f32 arena");
-            let off = self.geom.strip_base(layer, which, kvh);
-            // SAFETY: the whole strip lies inside the slot (strip_base is
-            // hard-bounded and strides by strip_words).
-            let words = unsafe {
-                std::slice::from_raw_parts(self.base.add(off), pg.strip_words())
-            };
+        fn packed_page(&self, layer: usize, which: usize, kvh: usize, page: usize) -> PackedStrip<'_> {
+            let pg = self.geom.packed_page().expect("packed strip read on an f32 arena");
+            let pr = self.page_ref(layer, which, kvh, page);
+            // SAFETY: as in `f32_page` — refcount-held liveness,
+            // disjoint page spans, no coexisting `&mut` per the
+            // aliasing header; the slice is exactly the page span.
+            let words =
+                unsafe { std::slice::from_raw_parts(pr.base as *const u32, pg.strip_words()) };
             PackedStrip::new(pg, words)
         }
     };
 }
 
-impl KvView<'_> {
-    impl_strip_readers!();
+/// Shared (read-only) borrow of one session's pages. Lifetime-tied to
+/// both the arena and the handle, so no page can be released or
+/// mutated out from under a reader.
+pub struct KvView<'a> {
+    geom: KvGeom,
+    handle: &'a KvHandle,
 }
 
-/// Exclusive borrow of one slot (store + read).
+impl KvView<'_> {
+    impl_page_readers!();
+}
+
+/// Exclusive borrow of one session's pages (store + read). Stores
+/// resolve ownership per page: owned → lock-free in-place write,
+/// missing → allocate, shared → copy-on-write through the arena.
 pub struct KvViewMut<'a> {
-    base: *mut u32,
+    arena: &'a KvArena,
     geom: KvGeom,
-    _life: PhantomData<&'a mut KvHandle>,
+    handle: &'a mut KvHandle,
 }
 
 impl KvViewMut<'_> {
-    impl_strip_readers!();
+    impl_page_readers!();
 
-    /// Store one `kv_dim`-wide K projection row into the per-head
-    /// strips at position `pos` — dense copy under [`KvFormat::F32`],
-    /// bit-plane quantization under [`KvFormat::BitPlane`] (this is the
-    /// once-per-token encode; nothing downstream re-quantizes).
+    /// Writable base of (strip, page): the fast path — an entry this
+    /// handle already owns — touches no lock.
+    fn ensure_owned(&mut self, strip: usize, page: usize) -> *mut u32 {
+        let arena = self.arena;
+        let idx = strip * self.handle.n_pages + page;
+        match &mut self.handle.table[idx] {
+            Some(pr) if !pr.shared => pr.base,
+            Some(pr) => arena.cow(pr),
+            slot @ None => {
+                let (id, gen, base) = arena.alloc_page();
+                *slot = Some(PageRef { id, gen, base, shared: false });
+                base
+            }
+        }
+    }
+
+    /// Store one `kv_dim`-wide K projection row at position `pos` —
+    /// dense copy under [`KvFormat::F32`], bit-plane quantization under
+    /// [`KvFormat::BitPlane`] (the once-per-token encode; nothing
+    /// downstream re-quantizes).
     #[inline]
     pub fn store_k(&mut self, layer: usize, pos: usize, row: &[f32]) {
         self.store(layer, 0, pos, row)
     }
 
-    /// Store one `kv_dim`-wide V projection row into the per-head
-    /// strips at position `pos` (see [`KvViewMut::store_k`]).
+    /// Store one `kv_dim`-wide V projection row at position `pos` (see
+    /// [`KvViewMut::store_k`]).
     #[inline]
     pub fn store_v(&mut self, layer: usize, pos: usize, row: &[f32]) {
         self.store(layer, 1, pos, row)
     }
 
     fn store(&mut self, layer: usize, which: usize, pos: usize, row: &[f32]) {
-        let hd = self.geom.head_dim;
-        assert_eq!(row.len(), self.geom.n_kv_heads * hd, "KV row width != kv_dim");
-        assert!(pos < self.geom.cap, "store position beyond slot capacity");
-        match self.geom.packed() {
-            None => {
-                for kvh in 0..self.geom.n_kv_heads {
-                    let off = self.geom.strip_base(layer, which, kvh) + pos * hd;
-                    // SAFETY: exclusive access via the &mut handle borrow;
-                    // offsets hard-bounded by the asserts above.
+        let g = self.geom;
+        let hd = g.head_dim;
+        assert_eq!(row.len(), g.n_kv_heads * hd, "KV row width != kv_dim");
+        assert!(pos < g.cap, "store position beyond slot capacity");
+        let (page, u) = (pos / g.page_positions, pos % g.page_positions);
+        for kvh in 0..g.n_kv_heads {
+            let strip = g.strip_index(layer, which, kvh);
+            let base = self.ensure_owned(strip, page);
+            let head = &row[kvh * hd..(kvh + 1) * hd];
+            match g.packed_page() {
+                None => {
+                    // SAFETY: `base` is a live page this handle owns
+                    // non-shared (ensure_owned), written only through
+                    // this `&mut` borrow (aliasing header); `u < pp` so
+                    // the row span stays inside the page's pp·hd words.
                     unsafe {
                         std::ptr::copy_nonoverlapping(
-                            row.as_ptr().add(kvh * hd),
-                            self.base.add(off) as *mut f32,
+                            head.as_ptr(),
+                            (base as *mut f32).add(u * hd),
                             hd,
                         );
                     }
                 }
-            }
-            Some(pg) => {
-                for kvh in 0..self.geom.n_kv_heads {
-                    let off = self.geom.strip_base(layer, which, kvh);
-                    // SAFETY: exclusive access via the &mut handle borrow;
-                    // the strip span is hard-bounded by strip_base, and
-                    // per-head strips are disjoint.
-                    let words = unsafe {
-                        std::slice::from_raw_parts_mut(self.base.add(off), pg.strip_words())
-                    };
-                    PackedStripMut::new(pg, words)
-                        .store_row(pos, &row[kvh * hd..(kvh + 1) * hd]);
+                Some(pg) => {
+                    // SAFETY: same ownership/liveness argument; the
+                    // slice is exactly the page's strip_words span.
+                    let words =
+                        unsafe { std::slice::from_raw_parts_mut(base, pg.strip_words()) };
+                    PackedStripMut::new(pg, words).store_row(u, head);
                 }
             }
         }
@@ -710,28 +969,45 @@ mod tests {
         KvGeom::of(&model())
     }
 
-    fn packed_geom(bits: usize) -> KvGeom {
-        KvGeom { format: KvFormat::bit_plane(bits), ..geom() }
+    /// Tiny multi-page geometry: pp = 2, cap = 8, one (layer, kv-head)
+    /// pair → 2 strips × 4 pages = 8 pages per slot.
+    fn paged_geom(format: KvFormat) -> KvGeom {
+        KvGeom {
+            n_layers: 1,
+            n_kv_heads: 1,
+            head_dim: 8,
+            cap: 8,
+            page_positions: 2,
+            format,
+        }
+    }
+
+    fn row(seed: usize, hd: usize) -> Vec<f32> {
+        (0..hd).map(|j| ((seed * 7 + j * 3) % 13) as f32 * 0.25 - 1.0).collect()
     }
 
     #[test]
     fn slot_bytes_matches_model_formula() {
         let m = model();
-        assert_eq!(KvGeom::of(&m).slot_bytes(), m.kv_bytes_per_session());
-        // f32 slots keep the historical formula exactly.
         let g = KvGeom::of(&m);
+        assert_eq!(g.page_positions, 32, "default kv_page");
+        assert_eq!(g.n_pages(), 2);
+        assert_eq!(g.slot_bytes(), m.kv_bytes_per_session());
+        // Paged f32 slots keep the historical formula exactly.
         assert_eq!(g.slot_bytes(), g.n_layers * 2 * g.n_kv_heads * g.cap * g.head_dim * 4);
     }
 
     #[test]
     fn packed_slot_bytes_shrink_8x_at_w2() {
         // Acceptance: at bits = 2 the per-slot footprint shrinks ≥ 8×
-        // vs f32 on the bench geometry (head_dim 32).
+        // vs f32 on the bench geometry (head_dim 32) — paging must not
+        // cost bytes.
         let f32_geom = KvGeom {
             n_layers: 4,
             n_kv_heads: 4,
             head_dim: 32,
             cap: 1024,
+            page_positions: 32,
             format: KvFormat::F32,
         };
         let q2 = KvGeom { format: KvFormat::bit_plane(2), ..f32_geom };
@@ -741,6 +1017,11 @@ mod tests {
             f32_geom.slot_bytes(),
             q2.slot_bytes()
         );
+        // Pages are independent packed strips of pp positions; at the
+        // default pp the paged slot is byte-identical to the monolithic
+        // packed strip layout.
+        let mono = PackedGeom::new(1024, 32, 2, 32).strip_words();
+        assert_eq!(q2.n_pages() * q2.page_words(), mono);
         // Monotone in bits, and every packed format beats f32.
         let q3 = KvGeom { format: KvFormat::bit_plane(3), ..f32_geom };
         let q4 = KvGeom { format: KvFormat::bit_plane(4), ..f32_geom };
@@ -760,47 +1041,53 @@ mod tests {
     }
 
     #[test]
-    fn acquire_release_reuses_lifo() {
-        let arena = KvArena::new(geom(), 4);
-        let a = arena.acquire().unwrap();
-        let a_slot = a.slot();
-        arena.release(a);
-        let b = arena.acquire().unwrap();
-        assert_eq!(b.slot(), a_slot, "LIFO reuse of the warmest slot");
-        let s = arena.stats();
-        assert_eq!(s.reused, 1);
-        assert_eq!(s.slots_in_use, 1);
-        assert_eq!(s.high_water, 1);
+    fn lazy_pages_and_lifo_reuse() {
+        let arena = KvArena::new(paged_geom(KvFormat::F32), 2);
+        let mut h = arena.acquire().unwrap();
+        assert_eq!(h.page_count(), 0, "acquire allocates no pages");
+        arena.view_mut(&mut h).store_k(0, 0, &row(1, 8));
+        assert_eq!(h.page_count(), 1);
+        arena.view_mut(&mut h).store_k(0, 1, &row(2, 8));
+        assert_eq!(h.page_count(), 1, "positions 0 and 1 share a pp=2 page");
+        arena.view_mut(&mut h).store_k(0, 2, &row(3, 8));
+        assert_eq!(h.page_count(), 2);
+        let ids = h.page_ids();
+        arena.release(h);
+        // LIFO: the next session's first page reuses a freed one.
+        let mut h2 = arena.acquire().unwrap();
+        arena.view_mut(&mut h2).store_k(0, 0, &row(4, 8));
+        let reused_id = h2.page_ids()[0].0;
+        assert!(ids.iter().any(|&(id, _)| id == reused_id), "freed page not reused");
+        assert!(arena.stats().reused >= 1);
+        arena.release(h2);
     }
 
     #[test]
-    fn adjacent_acquires_get_adjacent_slots() {
-        let arena = KvArena::new(geom(), 4);
-        let hs: Vec<KvHandle> = (0..3).map(|_| arena.acquire().unwrap()).collect();
-        for (i, h) in hs.iter().enumerate() {
-            assert_eq!(h.slot(), i, "batch sessions land in adjacent slots");
-        }
-        for h in hs {
-            arena.release(h);
-        }
-    }
-
-    #[test]
-    fn grows_by_doubling_and_tracks_bytes() {
-        let g = geom();
+    fn grows_in_whole_slot_units_and_tracks_bytes() {
+        let g = paged_geom(KvFormat::F32);
         let arena = KvArena::new(g, 2);
-        let hs: Vec<KvHandle> = (0..5).map(|_| arena.acquire().unwrap()).collect();
-        let s = arena.stats();
-        // segments of 2, 2, 4 slots → 8 carved for 5 live
-        assert_eq!(s.slots_created, 8);
-        assert_eq!(s.slots_in_use, 5);
-        assert_eq!(s.bytes_resident, 8 * g.slot_bytes());
-        assert_eq!(s.slot_bytes, g.slot_bytes());
-        for h in hs {
+        assert_eq!(arena.stats().bytes_resident, 0, "no slab before first store");
+        let mut hs: Vec<KvHandle> = (0..5).map(|_| arena.acquire().unwrap()).collect();
+        for (i, h) in hs.iter_mut().enumerate() {
+            for pos in 0..g.cap {
+                arena.view_mut(h).store_k(0, pos, &row(i + pos, 8));
+                arena.view_mut(h).store_v(0, pos, &row(i + pos + 1, 8));
+            }
+        }
+        let st = arena.stats();
+        assert_eq!(st.slots_in_use, 5);
+        assert_eq!(st.high_water, 5);
+        assert_eq!(st.pages_in_use, 5 * g.pages_per_slot());
+        // Segments of 2, 2, 4 slots' pages → 8 slots resident for 5
+        // full sessions; growth stays whole-slot so the modulus holds.
+        assert_eq!(st.bytes_resident, 8 * g.slot_bytes());
+        assert_eq!(st.bytes_resident % st.slot_bytes, 0);
+        assert_eq!(st.slot_bytes, g.slot_bytes());
+        for h in hs.drain(..) {
             arena.release(h);
         }
+        assert_eq!(arena.stats().pages_in_use, 0);
         assert_eq!(arena.stats().slots_in_use, 0);
-        assert_eq!(arena.stats().high_water, 5);
     }
 
     #[test]
@@ -810,33 +1097,54 @@ mod tests {
         let b = arena.acquire().unwrap();
         assert!(arena.acquire().is_none(), "arena at max_slots must refuse");
         arena.release(a);
-        assert!(arena.acquire().is_some(), "released slot acquirable again");
+        assert!(arena.acquire().is_some(), "released session acquirable again");
         arena.release(b);
     }
 
     #[test]
-    fn generation_invalidates_released_handles() {
-        let arena = KvArena::new(geom(), 2);
-        let a = arena.acquire().unwrap();
-        let (slot, gen) = (a.slot(), a.generation());
-        assert!(arena.is_live(slot, gen));
-        arena.release(a);
-        assert!(!arena.is_live(slot, gen), "released handle must go stale");
-        // Reuse bumps the generation: the new claim is live, the old
-        // (slot, gen) pair stays dead — reuse-after-release safety.
-        let b = arena.acquire().unwrap();
-        assert_eq!(b.slot(), slot);
-        assert_ne!(b.generation(), gen);
-        assert!(arena.is_live(b.slot(), b.generation()));
-        assert!(!arena.is_live(slot, gen));
-        arena.release(b);
+    #[should_panic(expected = "KV arena exhausted")]
+    fn page_pool_exhaustion_panics() {
+        // 1-session cap = 1 slot of pages. Fill the session, lend every
+        // page to a (never-evicting) cache, then diverge: the first COW
+        // needs a page the pool cannot provide.
+        let g = paged_geom(KvFormat::F32);
+        let arena = KvArena::with_limit(g, 1, 1);
+        let mut h = arena.acquire().unwrap();
+        for pos in 0..g.cap {
+            arena.view_mut(&mut h).store_k(0, pos, &row(pos, 8));
+            arena.view_mut(&mut h).store_v(0, pos, &row(pos, 8));
+        }
+        let _cached = arena.export_prefix(&mut h, g.cap);
+        arena.view_mut(&mut h).store_k(0, 0, &row(99, 8));
+    }
+
+    #[test]
+    fn generation_invalidates_freed_pages() {
+        let g = paged_geom(KvFormat::F32);
+        let arena = KvArena::new(g, 1);
+        let mut h = arena.acquire().unwrap();
+        arena.view_mut(&mut h).store_k(0, 0, &row(1, 8));
+        let (id, gen) = h.page_ids()[0];
+        assert!(arena.page_is_live(id, gen));
+        arena.release(h);
+        assert!(!arena.page_is_live(id, gen), "freed generation must go stale");
+        // Reuse bumps the generation: the new life is live, the old
+        // (id, gen) pair stays dead — resurrection safety.
+        let mut h2 = arena.acquire().unwrap();
+        arena.view_mut(&mut h2).store_k(0, 0, &row(2, 8));
+        let (id2, gen2) = h2.page_ids()[0];
+        assert_eq!(id2, id, "LIFO hands the freed page back");
+        assert_ne!(gen2, gen, "reuse must bump the generation");
+        assert!(arena.page_is_live(id2, gen2));
+        assert!(!arena.page_is_live(id, gen));
+        arena.release(h2);
     }
 
     #[test]
     #[should_panic(expected = "foreign arena")]
     fn foreign_handle_rejected() {
-        // Releasing a handle into a different arena would mint two live
-        // handles to one slot — it must fail loudly instead.
+        // Refcount traffic against a foreign arena would corrupt both
+        // pools — it must fail loudly instead.
         let a = KvArena::new(geom(), 2);
         let b = KvArena::new(geom(), 2);
         let h = a.acquire().unwrap();
@@ -844,33 +1152,38 @@ mod tests {
     }
 
     #[test]
-    fn store_then_strip_roundtrip() {
-        let m = model();
-        let g = KvGeom::of(&m);
-        let arena = KvArena::new(g, 2);
+    fn store_then_page_read_roundtrip() {
+        let g = paged_geom(KvFormat::F32);
+        let arena = KvArena::new(g, 1);
         let mut h = arena.acquire().unwrap();
-        let row: Vec<f32> = (0..g.n_kv_heads * g.head_dim).map(|i| i as f32 + 0.5).collect();
-        {
-            let mut v = arena.view_mut(&mut h);
-            v.store_k(0, 0, &row);
-            v.store_v(0, 0, &row);
+        for pos in 0..5 {
+            arena.view_mut(&mut h).store_k(0, pos, &row(pos, 8));
+            arena.view_mut(&mut h).store_v(0, pos, &row(pos + 9, 8));
         }
         let v = arena.view(&h);
-        assert_eq!(v.k_strip(0, 0, 1), &row[..g.head_dim]);
-        assert_eq!(v.v_strip(0, 0, 1), &row[..g.head_dim]);
+        for pos in 0..5 {
+            let (pg, u) = (pos / g.page_positions, pos % g.page_positions);
+            assert_eq!(&v.k_page(0, 0, pg)[u * 8..(u + 1) * 8], &row(pos, 8)[..], "K pos {pos}");
+            assert_eq!(
+                &v.v_page(0, 0, pg)[u * 8..(u + 1) * 8],
+                &row(pos + 9, 8)[..],
+                "V pos {pos}"
+            );
+        }
         arena.release(h);
     }
 
     #[test]
     fn packed_store_then_dequant_roundtrip() {
-        // Arena-level pack→unpack: stored rows dequantize back within
-        // one grid step, across layers, heads, K and V.
+        // Arena-level pack→unpack across pages: stored rows dequantize
+        // back within one grid step, across layers, heads, K and V.
         for bits in [2usize, 3, 4] {
             let g = KvGeom {
                 n_layers: 2,
                 n_kv_heads: 2,
                 head_dim: 8,
                 cap: 8,
+                page_positions: 2,
                 format: KvFormat::BitPlane { bits, group: 8 },
             };
             let arena = KvArena::new(g, 2);
@@ -898,9 +1211,12 @@ mod tests {
                         let mn = want.iter().cloned().fold(f32::INFINITY, f32::min);
                         let mx = want.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                         let step = (mx - mn) / levels;
-                        for (strip, which) in [(v.k_packed(l, kvh), "K"), (v.v_packed(l, kvh), "V")]
-                        {
-                            strip.dequant_row(p, &mut out);
+                        let (pg, u) = (p / g.page_positions, p % g.page_positions);
+                        for (strip, which) in [
+                            (v.k_page_packed(l, kvh, pg), "K"),
+                            (v.v_page_packed(l, kvh, pg), "V"),
+                        ] {
+                            strip.dequant_row(u, &mut out);
                             for (j, (&a, &b)) in want.iter().zip(&out).enumerate() {
                                 assert!(
                                     (a - b).abs() <= step * 1.001 + 5e-3,
@@ -918,181 +1234,211 @@ mod tests {
     #[test]
     #[should_panic(expected = "f32 strip read on a packed arena")]
     fn f32_read_on_packed_arena_fails_loudly() {
-        let arena = KvArena::new(packed_geom(2), 1);
-        let h = arena.acquire().unwrap();
-        let _ = arena.view(&h).k_strip(0, 0, 1);
+        let g = paged_geom(KvFormat::bit_plane(2));
+        let arena = KvArena::new(g, 1);
+        let mut h = arena.acquire().unwrap();
+        arena.view_mut(&mut h).store_k(0, 0, &row(0, 8));
+        let _ = arena.view(&h).k_page(0, 0, 0);
     }
 
     #[test]
-    fn fork_copies_live_prefix_only() {
+    fn fork_shares_pages_without_copy() {
+        let g = paged_geom(KvFormat::F32);
+        let arena = KvArena::new(g, 1);
+        let mut src = arena.acquire().unwrap();
+        for pos in 0..4 {
+            arena.view_mut(&mut src).store_k(0, pos, &row(pos, 8));
+            arena.view_mut(&mut src).store_v(0, pos, &row(pos, 8));
+        }
+        let before = arena.stats().pages_in_use;
+        let dst = arena.fork(&mut src, 4).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.pages_in_use, before, "fork must not allocate pages");
+        assert_eq!(st.fork_copies, 1);
+        assert_eq!(st.cow_copies, 0);
+        assert_eq!(st.pages_shared, before, "every live page now shared");
+        assert_eq!(dst.page_ids(), src.page_ids(), "same physical pages");
+        assert_eq!(src.shared_page_count(), src.page_count());
+        // Reads see identical bytes through both handles.
+        let (sv, dv) = (arena.view(&src), arena.view(&dst));
+        for pg in 0..2 {
+            assert_eq!(sv.k_page(0, 0, pg), dv.k_page(0, 0, pg), "page {pg}");
+            assert_eq!(sv.v_page(0, 0, pg), dv.v_page(0, 0, pg), "page {pg}");
+        }
+        arena.release(dst);
+        arena.release(src);
+        assert_eq!(arena.stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn cow_on_divergent_store_and_in_place_reclaim() {
+        let g = paged_geom(KvFormat::F32);
+        let arena = KvArena::new(g, 1);
+        let mut src = arena.acquire().unwrap();
+        for pos in 0..2 {
+            arena.view_mut(&mut src).store_k(0, pos, &row(pos, 8));
+            arena.view_mut(&mut src).store_v(0, pos, &row(pos, 8));
+        }
+        let mut dst = arena.fork(&mut src, 2).unwrap();
+        // Divergent store through src: the page is still referenced by
+        // dst, so src pays one bytewise page copy; dst sees nothing.
+        let dst_k_before = arena.view(&dst).k_page(0, 0, 0).to_vec();
+        arena.view_mut(&mut src).store_k(0, 0, &row(42, 8));
+        let st = arena.stats();
+        assert_eq!(st.cow_copies, 1, "first divergent store pays one page copy");
+        assert_eq!(arena.view(&dst).k_page(0, 0, 0), &dst_k_before[..], "COW left sharer intact");
+        assert_eq!(&arena.view(&src).k_page(0, 0, 0)[..8], &row(42, 8)[..]);
+        assert_eq!(
+            &arena.view(&src).k_page(0, 0, 0)[8..16],
+            &row(1, 8)[..],
+            "COW copied the untouched neighbour position bytewise"
+        );
+        // Release the sharer: remaining shared pages reclaim in place
+        // on the next store (rc back to 1 ⇒ no copy).
+        arena.release(dst);
+        let cows = arena.stats().cow_copies;
+        arena.view_mut(&mut src).store_v(0, 0, &row(43, 8));
+        assert_eq!(arena.stats().cow_copies, cows, "sole owner reclaims without copying");
+        arena.release(src);
+    }
+
+    #[test]
+    fn packed_fork_cow_mid_group_decodes_identically() {
+        // hd = 4 ⇒ several positions share one plane word; pp = 4 keeps
+        // a whole position-group in one page. Fork mid-word, diverge,
+        // and check the sharer's rows survive COW bit-exactly — the
+        // copy is bytewise, no re-quantization.
         let g = KvGeom {
-            n_layers: 2,
-            n_kv_heads: 2,
+            n_layers: 1,
+            n_kv_heads: 1,
             head_dim: 4,
             cap: 8,
-            format: KvFormat::F32,
-        };
-        let arena = KvArena::new(g, 2);
-        let mut src = arena.acquire().unwrap();
-        for pos in 0..3 {
-            let row: Vec<f32> = (0..g.n_kv_heads * g.head_dim)
-                .map(|i| (pos * 100 + i) as f32)
-                .collect();
-            let mut v = arena.view_mut(&mut src);
-            for l in 0..g.n_layers {
-                v.store_k(l, pos, &row);
-                v.store_v(l, pos, &row);
-            }
-        }
-        let dst = arena.fork(&src, 3).unwrap();
-        let sv = arena.view(&src);
-        let dv = arena.view(&dst);
-        for l in 0..g.n_layers {
-            for kvh in 0..g.n_kv_heads {
-                assert_eq!(sv.k_strip(l, kvh, 3), dv.k_strip(l, kvh, 3), "l {l} kvh {kvh}");
-                assert_eq!(sv.v_strip(l, kvh, 3), dv.v_strip(l, kvh, 3), "l {l} kvh {kvh}");
-            }
-        }
-        assert_eq!(arena.stats().fork_copies, 1);
-        drop((sv, dv));
-        arena.release(src);
-        arena.release(dst);
-    }
-
-    #[test]
-    fn packed_fork_mid_group_is_bytewise_and_decodes_identically() {
-        // Satellite: fork at a position *inside* a plane-word
-        // position-group (head_dim 4 → 8 positions share each word).
-        // The packed prefix is copied bytewise (no re-quantization);
-        // after both sessions store the same continuation rows they
-        // dequantize identically — and the released slot is reused with
-        // a bumped generation.
-        let g = KvGeom {
-            n_layers: 2,
-            n_kv_heads: 2,
-            head_dim: 4,
-            cap: 16,
+            page_positions: 4,
             format: KvFormat::BitPlane { bits: 2, group: 4 },
         };
-        let arena = KvArena::new(g, 2);
+        let arena = KvArena::new(g, 1);
         let mut src = arena.acquire().unwrap();
-        let kvd = g.n_kv_heads * g.head_dim;
-        let row = |p: usize| -> Vec<f32> {
-            (0..kvd).map(|i| ((p * 17 + i * 5) % 11) as f32 * 0.3 - 1.5).collect()
-        };
-        for p in 0..3 {
-            let mut v = arena.view_mut(&mut src);
-            for l in 0..g.n_layers {
-                v.store_k(l, p, &row(p));
-                v.store_v(l, p, &row(p));
-            }
+        for pos in 0..3 {
+            arena.view_mut(&mut src).store_k(0, pos, &row(pos, 4));
+            arena.view_mut(&mut src).store_v(0, pos, &row(pos, 4));
         }
-        // Fork at pos 3 — mid-word for hd=4 (word holds positions 0..8).
-        let mut dst = arena.fork(&src, 3).unwrap();
-        // Prefix is byte-identical: dequantized rows 0..3 match exactly
-        // (no re-quantization happened).
-        {
-            let sv = arena.view(&src);
-            let dv = arena.view(&dst);
-            let mut a = vec![0.0f32; g.head_dim];
-            let mut b = vec![0.0f32; g.head_dim];
-            for l in 0..g.n_layers {
-                for kvh in 0..g.n_kv_heads {
-                    for p in 0..3 {
-                        sv.k_packed(l, kvh).dequant_row(p, &mut a);
-                        dv.k_packed(l, kvh).dequant_row(p, &mut b);
-                        assert_eq!(a, b, "K l {l} kvh {kvh} p {p}");
-                        sv.v_packed(l, kvh).dequant_row(p, &mut a);
-                        dv.v_packed(l, kvh).dequant_row(p, &mut b);
-                        assert_eq!(a, b, "V l {l} kvh {kvh} p {p}");
-                    }
-                }
-            }
+        let mut dst = arena.fork(&mut src, 3).unwrap();
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        // Parent stores position 3 — same plane word as 0..3 → COW.
+        arena.view_mut(&mut src).store_k(0, 3, &row(33, 4));
+        assert_eq!(arena.stats().cow_copies, 1);
+        for pos in 0..3 {
+            arena.view(&dst).k_page_packed(0, 0, 0).dequant_row(pos, &mut a);
+            arena.view(&src).k_page_packed(0, 0, 0).dequant_row(pos, &mut b);
+            assert_eq!(a, b, "shared prefix diverged at pos {pos}");
         }
-        // Both sessions continue with the same rows (3, 4): the shared
-        // plane word is masked-rewritten in each slot independently and
-        // the results stay identical.
-        for p in 3..5 {
-            for h in [&mut src, &mut dst] {
-                let mut v = arena.view_mut(h);
-                for l in 0..g.n_layers {
-                    v.store_k(l, p, &row(p));
-                    v.store_v(l, p, &row(p));
-                }
-            }
-        }
-        {
-            let sv = arena.view(&src);
-            let dv = arena.view(&dst);
-            let mut a = vec![0.0f32; g.head_dim];
-            let mut b = vec![0.0f32; g.head_dim];
-            for l in 0..g.n_layers {
-                for kvh in 0..g.n_kv_heads {
-                    for p in 0..5 {
-                        sv.k_packed(l, kvh).dequant_row(p, &mut a);
-                        dv.k_packed(l, kvh).dequant_row(p, &mut b);
-                        assert_eq!(a, b, "post-continue K l {l} kvh {kvh} p {p}");
-                    }
-                }
-            }
-        }
-        assert_eq!(arena.stats().fork_copies, 1);
-        // Generation bump + slot reuse: releasing the fork frees its
-        // slot for the next acquire, under a new generation.
-        let (fslot, fgen) = (dst.slot(), dst.generation());
+        // The sharer continues independently — masked stores land on
+        // its own (reclaimed-in-place) copy.
+        arena.view_mut(&mut dst).store_k(0, 3, &row(77, 4));
+        arena.view(&src).k_page_packed(0, 0, 0).dequant_row(3, &mut a);
+        arena.view(&dst).k_page_packed(0, 0, 0).dequant_row(3, &mut b);
+        assert_ne!(a, b, "divergent tails must not alias");
         arena.release(dst);
-        assert!(!arena.is_live(fslot, fgen), "released fork handle must go stale");
-        let again = arena.acquire().unwrap();
-        assert_eq!(again.slot(), fslot, "LIFO reuse of the fork's slot");
-        assert_ne!(again.generation(), fgen, "reuse bumps the generation");
-        arena.release(again);
         arena.release(src);
     }
 
     #[test]
-    fn packed_dirty_slot_reuse_decodes_like_fresh() {
-        // A reused (dirty) packed slot must dequantize stored rows
-        // exactly like its first (zero-filled) use — masked stores
+    fn packed_dirty_page_reuse_decodes_like_fresh() {
+        // A reused (dirty) packed page must dequantize stored rows
+        // exactly like its first (zero-filled) life — masked stores
         // overwrite every bit they later read.
-        let g = packed_geom(2);
+        let g = KvGeom {
+            page_positions: 2,
+            format: KvFormat::BitPlane { bits: 2, group: 8 },
+            ..paged_geom(KvFormat::F32)
+        };
         let arena = KvArena::new(g, 1);
-        let kvd = g.n_kv_heads * g.head_dim;
-        let row: Vec<f32> = (0..kvd).map(|i| (i as f32 * 0.37).sin()).collect();
-        let mut fresh = vec![0.0f32; g.head_dim];
-        let mut reused = vec![0.0f32; g.head_dim];
+        let mut fresh = vec![0.0f32; 8];
+        let mut reused = vec![0.0f32; 8];
         {
             let mut h = arena.acquire().unwrap();
-            {
-                let mut v = arena.view_mut(&mut h);
-                v.store_k(0, 0, &row);
-                v.store_k(0, 1, &row); // extra position → dirt beyond pos 0
+            for pos in 0..g.cap {
+                arena.view_mut(&mut h).store_k(0, pos, &row(pos + 5, 8));
             }
-            arena.view(&h).k_packed(0, 0).dequant_row(0, &mut fresh);
-            arena.release(h);
+            arena.view(&h).k_page_packed(0, 0, 0).dequant_row(0, &mut fresh);
+            arena.release(h); // pages back to the free list, dirty
         }
         {
-            let mut h = arena.acquire().unwrap(); // LIFO: the same dirty slot
-            {
-                let mut v = arena.view_mut(&mut h);
-                v.store_k(0, 0, &row);
-            }
-            arena.view(&h).k_packed(0, 0).dequant_row(0, &mut reused);
+            let mut h = arena.acquire().unwrap();
+            arena.view_mut(&mut h).store_k(0, 0, &row(5, 8)); // dirty page
+            arena.view(&h).k_page_packed(0, 0, 0).dequant_row(0, &mut reused);
             arena.release(h);
         }
-        assert_eq!(fresh, reused);
+        assert_eq!(fresh, reused, "dirty page reuse changed a stored row");
+    }
+
+    #[test]
+    fn export_import_borrow_roundtrip() {
+        let g = paged_geom(KvFormat::F32);
+        let arena = KvArena::new(g, 1);
+        let mut donor = arena.acquire().unwrap();
+        for pos in 0..4 {
+            arena.view_mut(&mut donor).store_k(0, pos, &row(pos, 8));
+            arena.view_mut(&mut donor).store_v(0, pos, &row(pos, 8));
+        }
+        let cached = arena.export_prefix(&mut donor, 4);
+        assert_eq!(cached.len(), g.n_strips() * 2, "2 pages per strip at pp=2, pos 4");
+        assert_eq!(donor.shared_page_count(), donor.page_count());
+        // Donor dies; the cache refs keep every page alive.
+        arena.release(donor);
+        assert!(cached.iter().all(|&(id, gen)| arena.page_is_live(id, gen)));
+        // A fresh session borrows them read-only.
+        let mut borrower = arena.acquire().unwrap();
+        arena.import_prefix(&mut borrower, &cached, 4);
+        assert_eq!(borrower.page_count(), cached.len());
+        assert_eq!(&arena.view(&borrower).k_page(0, 0, 1)[..8], &row(2, 8)[..]);
+        // Divergence at pos 2 COWs; the cached page is untouched.
+        arena.view_mut(&mut borrower).store_k(0, 2, &row(99, 8));
+        assert_eq!(arena.stats().cow_copies, 1);
+        arena.release(borrower);
+        // Cache eviction: pages free exactly once, generations die.
+        let freed = arena.release_page_refs(&cached);
+        assert_eq!(freed, cached.len());
+        assert!(cached.iter().all(|&(id, gen)| !arena.page_is_live(id, gen)));
+        assert_eq!(arena.stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn reclaimer_frees_pages_under_pressure() {
+        let g = paged_geom(KvFormat::F32);
+        let arena = Arc::new(KvArena::with_limit(g, 1, 1));
+        let mut donor = arena.acquire().unwrap();
+        for pos in 0..g.cap {
+            arena.view_mut(&mut donor).store_k(0, pos, &row(pos, 8));
+            arena.view_mut(&mut donor).store_v(0, pos, &row(pos, 8));
+        }
+        // The whole 1-slot pool is cache-held after the donor dies.
+        let cached = Arc::new(Mutex::new(Some(arena.export_prefix(&mut donor, g.cap))));
+        arena.release(donor);
+        let (a2, c2) = (arena.clone(), cached.clone());
+        arena.set_reclaimer(move |_need| match c2.lock().unwrap().take() {
+            Some(pages) => a2.release_page_refs(&pages),
+            None => 0,
+        });
+        // A new session's store needs a page only eviction can supply.
+        let mut h = arena.acquire().unwrap();
+        arena.view_mut(&mut h).store_k(0, 0, &row(1, 8));
+        assert!(cached.lock().unwrap().is_none(), "reclaimer must have run");
+        arena.release(h);
+        assert_eq!(arena.stats().pages_in_use, 0);
     }
 
     #[test]
     fn slab_backed_decode_matches_fresh_slot() {
-        // A reused (dirty) slot must decode token-identically to its
-        // own first (zero-filled) use — stale rows beyond pos are never
-        // read.
+        // A reused (dirty) session must decode token-identically to its
+        // own first (zero-filled) use — stale data is never read.
         let m = model();
         let mut a = m.decode_state();
         let fresh: Vec<f32> = a.step(&m, 7);
         a.step(&m, 3);
-        drop(a); // slot back to the free list, dirty
-        let mut b = m.decode_state(); // LIFO: the same slot
+        drop(a); // pages back to the free list, dirty
+        let mut b = m.decode_state();
         let again = b.step(&m, 7);
         for (x, y) in fresh.iter().zip(&again) {
             assert!((x - y).abs() < 1e-6);
@@ -1139,53 +1485,68 @@ mod tests {
     #[should_panic(expected = "KV arena exhausted")]
     fn exhausted_arena_panics_like_capacity() {
         let m = model();
-        m.init_kv_arena(1, 1); // one slot, hard cap
+        m.init_kv_arena(1, 1); // one session, hard cap
         let _a = m.decode_state();
-        let _b = m.decode_state(); // no slot left → loud failure
+        let _b = m.decode_state(); // no session slot left → loud failure
     }
 
-    /// One step of the handle-protocol state machine, chosen by index
+    /// One step of the page-protocol state machine, chosen by index
     /// from the ops available in the current state (see
-    /// `handle_protocol_exhaustive_interleavings`).
+    /// `page_protocol_exhaustive_interleavings`).
     #[derive(Clone, Copy, Debug)]
     enum ProtoOp {
-        /// `acquire()` — may refuse (`None`) at `max_slots`.
+        /// `acquire()` — may refuse (`None`) at the session cap.
         Acquire,
-        /// `release(live[i])` — the handle becomes a *ghost*: a
-        /// `(slot, generation)` pair a buggy unsafe-born copy could
-        /// still be holding.
+        /// `release(live[i])` — every page ref dropped; freed pages
+        /// become *ghosts*: `(id, gen)` pairs that must stay dead.
         Release(usize),
-        /// `fork(&live[i], 1)` — branch-point copy; may refuse at
-        /// `max_slots`.
+        /// `fork(&mut live[i], 2)` — refcount-bump share of page 0 of
+        /// each populated strip; may refuse at the session cap.
         Fork(usize),
-        /// store a row through `view_mut(&mut live[i])` and read it
-        /// back through `view(&live[i])`.
-        Store(usize),
+        /// store a K row at the position — allocates the page on first
+        /// touch, COWs (or reclaims in place) a shared page.
+        Store(usize, usize),
+        /// cache-style external refs on all of `live[i]`'s pages
+        /// (`page_ref_inc`) — models a prefix-cache node taking them.
+        Borrow(usize),
+        /// drop every cache-held ref (`release_page_refs`) — models LRU
+        /// eviction; newly freed pages become ghosts.
+        Evict,
     }
 
-    fn proto_ops(n_live: usize) -> Vec<ProtoOp> {
+    fn proto_ops(live: &[KvHandle], n_cache: usize) -> Vec<ProtoOp> {
         let mut ops = vec![ProtoOp::Acquire];
-        for i in 0..n_live {
+        for (i, h) in live.iter().enumerate() {
             ops.push(ProtoOp::Release(i));
             ops.push(ProtoOp::Fork(i));
-            ops.push(ProtoOp::Store(i));
+            ops.push(ProtoOp::Store(i, 0));
+            ops.push(ProtoOp::Store(i, 2));
+            if h.page_count() > 0 {
+                ops.push(ProtoOp::Borrow(i));
+            }
+        }
+        if n_cache > 0 {
+            ops.push(ProtoOp::Evict);
         }
         ops
     }
 
-    /// Replay one choice sequence from a fresh two-slot arena, checking
-    /// after every op that (a) every live handle answers `is_live`,
-    /// (b) every ghost answers `!is_live` — `is_live` must catch every
-    /// use-after-release, including slot reuse under a new generation.
+    /// Replay one choice sequence from a fresh two-session arena,
+    /// checking after every op that (a) every page a live handle
+    /// references is live, (b) every ghost stays dead (generation
+    /// check — no freed page resurrects), (c) session accounting
+    /// matches; then drain everything and check for page leaks.
     /// Returns the branching factor of the final state, or `None` if a
-    /// choice index exceeded the ops available (prune that subtree).
+    /// choice index exceeded the available ops (prune that subtree).
     fn proto_replay(g: KvGeom, choices: &[usize]) -> Option<usize> {
         let arena = KvArena::with_limit(g, 1, 2);
         let mut live: Vec<KvHandle> = Vec::new();
-        let mut ghosts: Vec<(usize, u64)> = Vec::new();
-        let row: Vec<f32> = (0..g.n_kv_heads * g.head_dim).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let mut cache: Vec<(u32, u64)> = Vec::new();
+        let mut ghosts: Vec<(u32, u64)> = Vec::new();
+        let row: Vec<f32> =
+            (0..g.n_kv_heads * g.head_dim).map(|i| i as f32 * 0.5 - 1.0).collect();
         for &c in choices {
-            let ops = proto_ops(live.len());
+            let ops = proto_ops(&live, cache.len());
             let &op = ops.get(c)?;
             match op {
                 ProtoOp::Acquire => {
@@ -1195,37 +1556,54 @@ mod tests {
                 }
                 ProtoOp::Release(i) => {
                     let h = live.remove(i);
-                    ghosts.push((h.slot(), h.generation()));
+                    let ids = h.page_ids();
                     arena.release(h);
+                    ghosts.extend(ids.into_iter().filter(|&(id, gen)| !arena.page_is_live(id, gen)));
                 }
                 ProtoOp::Fork(i) => {
-                    if let Some(h) = arena.fork(&live[i], 1) {
+                    if let Some(h) = arena.fork(&mut live[i], 2) {
                         live.push(h);
                     }
                 }
-                ProtoOp::Store(i) => {
-                    arena.view_mut(&mut live[i]).store_k(0, 0, &row);
-                    if g.format == KvFormat::F32 {
-                        assert_eq!(arena.view(&live[i]).k_strip(0, 0, 1), &row[..g.head_dim]);
-                    }
+                ProtoOp::Store(i, pos) => {
+                    arena.view_mut(&mut live[i]).store_k(0, pos, &row);
+                }
+                ProtoOp::Borrow(i) => {
+                    let ids = live[i].page_ids();
+                    arena.page_ref_inc(&ids);
+                    cache.extend(ids);
+                }
+                ProtoOp::Evict => {
+                    let refs = std::mem::take(&mut cache);
+                    arena.release_page_refs(&refs);
+                    ghosts.extend(refs.into_iter().filter(|&(id, gen)| !arena.page_is_live(id, gen)));
                 }
             }
             for h in &live {
+                for (id, gen) in h.page_ids() {
+                    assert!(
+                        arena.page_is_live(id, gen),
+                        "live handle references dead page ({id}, {gen}) after {op:?}"
+                    );
+                }
+            }
+            for &(id, gen) in &ghosts {
                 assert!(
-                    arena.is_live(h.slot(), h.generation()),
-                    "live handle ({}, {}) not live after {op:?}",
-                    h.slot(),
-                    h.generation()
+                    !arena.page_is_live(id, gen),
+                    "freed page ({id}, {gen}) resurrected after {op:?}"
                 );
             }
-            for &(s, gen) in &ghosts {
-                assert!(
-                    !arena.is_live(s, gen),
-                    "use-after-release: ghost ({s}, {gen}) still live after {op:?}"
-                );
-            }
+            assert_eq!(arena.stats().slots_in_use, live.len(), "session drift after {op:?}");
         }
-        Some(proto_ops(live.len()).len())
+        let branches = proto_ops(&live, cache.len()).len();
+        // Drain + leak check: releasing everything empties the pool.
+        arena.release_page_refs(&cache);
+        for h in live.drain(..) {
+            arena.release(h);
+        }
+        assert_eq!(arena.stats().pages_in_use, 0, "page leak after drain");
+        assert_eq!(arena.stats().slots_in_use, 0);
+        Some(branches)
     }
 
     fn proto_dfs(g: KvGeom, depth_left: usize, choices: &mut Vec<usize>, n_seqs: &mut usize) {
@@ -1241,24 +1619,39 @@ mod tests {
         }
     }
 
+    /// Tiny proto geometry: 2 strips × 2 pages (pp = 2, cap = 4), so a
+    /// depth-5 sequence can allocate at most 5 pages against a pool cap
+    /// of 8 — exhaustion can't fire spuriously mid-protocol.
+    fn proto_geom(format: KvFormat) -> KvGeom {
+        KvGeom {
+            n_layers: 1,
+            n_kv_heads: 1,
+            head_dim: 4,
+            cap: 4,
+            page_positions: 2,
+            format,
+        }
+    }
+
     #[test]
-    fn handle_protocol_exhaustive_interleavings() {
-        // Every acquire/release/fork/store interleaving up to 6 ops
-        // over a two-slot f32 arena, each replayed from scratch. The
-        // affine-handle protocol (one live handle per slot; generations
-        // kill stale pairs) must hold at every intermediate state.
+    fn page_protocol_exhaustive_interleavings() {
+        // Every acquire/release/fork/store/borrow/evict interleaving up
+        // to 5 ops over a two-session paged arena, each replayed from
+        // scratch. The page protocol (refcount-held liveness, COW on
+        // shared stores, generation-killed ghosts, no leaks at drain)
+        // must hold at every intermediate state.
         let mut n = 0;
-        proto_dfs(geom(), 6, &mut Vec::new(), &mut n);
+        proto_dfs(proto_geom(KvFormat::F32), 5, &mut Vec::new(), &mut n);
         assert!(n > 1000, "interleaving space unexpectedly small: {n} sequences");
     }
 
     #[test]
-    fn handle_protocol_exhaustive_interleavings_packed() {
-        // Same state machine over a packed (bit-plane) arena: fork's
-        // bytewise mid-word prefix copy and the masked packed stores
-        // must uphold the identical protocol.
+    fn page_protocol_exhaustive_interleavings_packed() {
+        // Same state machine over a packed arena: bytewise page COW of
+        // mid-word prefixes and masked packed stores must uphold the
+        // identical protocol.
         let mut n = 0;
-        proto_dfs(packed_geom(2), 5, &mut Vec::new(), &mut n);
+        proto_dfs(proto_geom(KvFormat::BitPlane { bits: 2, group: 4 }), 4, &mut Vec::new(), &mut n);
         assert!(n > 300, "interleaving space unexpectedly small: {n} sequences");
     }
 }

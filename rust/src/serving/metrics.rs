@@ -15,6 +15,7 @@
 use crate::io::json::JsonWriter;
 
 use super::kv::ArenaStats;
+use super::prefix::PrefixStats;
 use super::FinishReason;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -74,6 +75,9 @@ struct Inner {
     // arena's share. Each snapshot is internally monotone (the arena
     // itself owns the counters), so latest-wins per key is exact.
     arenas: HashMap<u64, ArenaStats>,
+    // Latest prefix-cache snapshot per cache (keyed by `PrefixCache::id`),
+    // same latest-wins-per-key / sum-across-keys convention as `arenas`.
+    prefixes: HashMap<u64, PrefixStats>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -129,6 +133,20 @@ pub struct LatencySummary {
     pub arena_slot_bytes: usize,
     /// slot-to-slot prefix copies performed by `fork`
     pub arena_fork_copies: u64,
+    /// KV pages currently referenced (by sessions and/or prefix-cache
+    /// nodes) at the last observation
+    pub arena_pages_in_use: usize,
+    /// KV pages referenced by more than one owner (prefix-cache nodes
+    /// and/or borrowing sessions) at the last observation
+    pub arena_pages_shared: usize,
+    /// copy-on-write page copies triggered by stores into shared pages
+    pub arena_cow_copies: u64,
+    /// prefix-cache admission lookups
+    pub prefix_lookups: u64,
+    /// admissions that borrowed a non-empty cached prefix
+    pub prefix_hits: u64,
+    /// prompt tokens skipped at prefill thanks to borrowed prefixes
+    pub prefix_hit_tokens: u64,
     /// active SIMD dispatch tier label (`"scalar"` / `"avx2"` / `"neon"`)
     pub simd_tier: &'static str,
 }
@@ -178,6 +196,18 @@ impl LatencySummary {
             .int(self.arena_slot_bytes as i64)
             .key("arena_fork_copies")
             .int(self.arena_fork_copies as i64)
+            .key("arena_pages_in_use")
+            .int(self.arena_pages_in_use as i64)
+            .key("arena_pages_shared")
+            .int(self.arena_pages_shared as i64)
+            .key("arena_cow_copies")
+            .int(self.arena_cow_copies as i64)
+            .key("prefix_lookups")
+            .int(self.prefix_lookups as i64)
+            .key("prefix_hits")
+            .int(self.prefix_hits as i64)
+            .key("prefix_hit_tokens")
+            .int(self.prefix_hit_tokens as i64)
             .key("simd_tier")
             .string(self.simd_tier)
             .end_object();
@@ -242,6 +272,13 @@ impl Metrics {
         m.arenas.insert(arena_id, s);
     }
 
+    /// Record a prefix-cache snapshot, keyed by the cache's id — same
+    /// latest-wins / sum-across-keys convention as [`Metrics::observe_arena`].
+    pub fn observe_prefix(&self, cache_id: u64, s: PrefixStats) {
+        let mut m = self.inner.lock().unwrap();
+        m.prefixes.insert(cache_id, s);
+    }
+
     pub fn summary(&self) -> LatencySummary {
         let m = self.inner.lock().unwrap();
         let pct = |xs: &[u64], p: f64| -> u64 {
@@ -290,6 +327,12 @@ impl Metrics {
             arena_bytes_resident: m.arenas.values().map(|a| a.bytes_resident).sum(),
             arena_slot_bytes: m.arenas.values().map(|a| a.slot_bytes).max().unwrap_or(0),
             arena_fork_copies: m.arenas.values().map(|a| a.fork_copies).sum(),
+            arena_pages_in_use: m.arenas.values().map(|a| a.pages_in_use).sum(),
+            arena_pages_shared: m.arenas.values().map(|a| a.pages_shared).sum(),
+            arena_cow_copies: m.arenas.values().map(|a| a.cow_copies).sum(),
+            prefix_lookups: m.prefixes.values().map(|p| p.lookups).sum(),
+            prefix_hits: m.prefixes.values().map(|p| p.hits).sum(),
+            prefix_hit_tokens: m.prefixes.values().map(|p| p.hit_tokens).sum(),
             simd_tier: crate::tensor::simd::active().label(),
         }
     }
@@ -363,13 +406,19 @@ mod tests {
             "arena_bytes_resident",
             "arena_slot_bytes",
             "arena_fork_copies",
+            "arena_pages_in_use",
+            "arena_pages_shared",
+            "arena_cow_copies",
+            "prefix_lookups",
+            "prefix_hits",
+            "prefix_hit_tokens",
             "simd_tier",
         ] {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
-        // 20 quoted keys plus the one quoted value (`simd_tier` — every
+        // 26 quoted keys plus the one quoted value (`simd_tier` — every
         // other field is numeric and must serialize unquoted).
-        assert_eq!(json.matches('"').count(), 2 * 20 + 2, "non-numeric value leaked into {json}");
+        assert_eq!(json.matches('"').count(), 2 * 26 + 2, "non-numeric value leaked into {json}");
     }
 
     #[test]
@@ -414,6 +463,11 @@ mod tests {
             bytes_resident: bytes,
             slot_bytes: bytes / 2,
             fork_copies: forks,
+            cow_copies: forks * 2,
+            pages_in_use: in_use * 4,
+            pages_shared: in_use,
+            pages_high_water: hw * 4,
+            page_bytes: bytes / 8,
         };
         // Two snapshots of the same arena: the later (monotone) one
         // replaces the earlier.
@@ -428,6 +482,28 @@ mod tests {
         assert_eq!(s.arena_bytes_resident, 5120);
         assert_eq!(s.arena_slot_bytes, 2048, "largest per-slot footprint across arenas");
         assert_eq!(s.arena_fork_copies, 2);
+        assert_eq!(s.arena_pages_in_use, 4);
+        assert_eq!(s.arena_pages_shared, 1);
+        assert_eq!(s.arena_cow_copies, 4);
+    }
+
+    #[test]
+    fn prefix_observations_latest_per_cache_summed_across() {
+        let m = Metrics::new();
+        let snap = |lookups, hits, hit_tokens| PrefixStats {
+            lookups,
+            hits,
+            hit_tokens,
+            insertions: 1,
+            evictions: 0,
+        };
+        m.observe_prefix(1, snap(2, 1, 8));
+        m.observe_prefix(1, snap(5, 3, 24)); // later snapshot replaces
+        m.observe_prefix(2, snap(1, 1, 4)); // second worker's cache: summed
+        let s = m.summary();
+        assert_eq!(s.prefix_lookups, 6);
+        assert_eq!(s.prefix_hits, 4);
+        assert_eq!(s.prefix_hit_tokens, 28);
     }
 
     #[test]

@@ -110,6 +110,31 @@
 //! `try_recv()` returns `Err(Disconnected)`, `collect()` returns
 //! `Err` — still never a hang.
 //!
+//! ## Prefix cache
+//!
+//! Serving real traffic means serving a handful of hot system prompts
+//! to millions of sessions. With the arena paged ([`kv::KvArena`]:
+//! fixed-size position-block pages per (layer, K/V, kv-head) strip,
+//! refcounted with copy-on-write), the stack shares that work through
+//! an SGLang-style **radix prefix cache** ([`prefix::PrefixCache`],
+//! `serve --prefix-cache`):
+//!
+//! * At **admission** the scheduler walks the radix tree over the
+//!   request's prompt tokens; the matched prefix's pages are borrowed
+//!   into the new session read-only, and only the cache-miss *suffix*
+//!   is prefilled — cache-hit TTFT drops to near one sweep.
+//! * At **prefill completion** the session publishes its prompt pages
+//!   into the tree (refcount bumps, never byte copies; an edge splits
+//!   when two prompts diverge inside it).
+//! * A borrower's first **divergent store** copy-on-writes its own
+//!   page; cached bytes are immutable while referenced. Decode is
+//!   Markovian in (KV bytes, position, fed token) and shared pages
+//!   travel bytewise — never re-quantized — so a cache-hit session
+//!   decodes **token-identical** to a cold one at every `kv_bits`.
+//! * Under pool pressure the arena calls the cache's LRU leaf evictor
+//!   ([`kv::KvArena::set_reclaimer`]): cache memory yields to live
+//!   sessions automatically, loudly panicking only when truly out.
+//!
 //! ## Static analysis
 //!
 //! The serving stack's performance and soundness invariants are
@@ -144,6 +169,7 @@ pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod prefix;
 pub mod router;
 pub(crate) mod scheduler;
 
@@ -151,6 +177,7 @@ pub use batcher::{Pending, SubmitQueue};
 pub use engine::{Engine, EngineKind, LutModel};
 pub use kv::{ArenaStats, KvArena, KvFormat, KvGeom, KvHandle, KvView, KvViewMut};
 pub use metrics::{LatencySummary, Metrics};
+pub use prefix::{PrefixCache, PrefixStats};
 pub use router::{GenStream, Router, RouterConfig, Strategy};
 
 use std::sync::atomic::{AtomicBool, Ordering};

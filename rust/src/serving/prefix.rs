@@ -1,0 +1,603 @@
+//! Radix-tree prefix cache — token-prefix sharing over refcounted KV
+//! pages.
+//!
+//! An SGLang-style radix tree over token sequences: each node's edge is
+//! a token run, and each node owns **refcounted KV pages** covering its
+//! full prefix (`n_strips × ⌈len/pp⌉` page refs, strip-major — exactly
+//! the shape [`KvArena::export_prefix`] produces). The cache turns
+//! O(sessions × prompt_len) KV into O(distinct prefixes):
+//!
+//! * **Admission** ([`PrefixCache::match_and_borrow`]) walks the tree
+//!   along full edge matches and lends the deepest node's pages to the
+//!   new session read-only ([`KvArena::import_prefix`]). The session
+//!   resumes decode at the matched position — only the cache-miss
+//!   suffix is prefilled, which is what collapses cache-hit TTFT.
+//! * **Publication** ([`PrefixCache::insert`]) runs once per session at
+//!   prefill completion: the prompt's pages are exported into a new
+//!   leaf (splitting an edge mid-run when two prompts diverge inside
+//!   it; the split node re-refs the shared prefix of the child's
+//!   pages — a pure refcount bump, like everything here).
+//! * **Divergence** costs nothing at cache level: a borrower's first
+//!   store into a shared page copy-on-writes *in its own table*; the
+//!   cached page is immutable for as long as any node refs it.
+//! * **Eviction** ([`PrefixCache::evict`]) drops least-recently-used
+//!   leaves until enough pages came free; it is registered as the
+//!   arena's reclaimer ([`KvArena::set_reclaimer`]), so cache memory
+//!   yields to live sessions under pressure automatically.
+//!
+//! Correctness leans on decode being Markovian in (KV bytes, position,
+//! fed token): the donor stored these pages from the identical token
+//! prefix with the deterministic store-time encoder, so a borrower's
+//! continuation is **token-identical** to a cold session — at every
+//! `kv_bits`, since pages are shared as bytes and never re-quantized.
+//!
+//! Lock order: the cache mutex is always taken **before** the arena's
+//! inner mutex (every arena call here locks internally). The arena
+//! invokes the reclaimer with no lock held, so eviction re-entering
+//! [`KvArena::release_page_refs`] cannot deadlock.
+
+use super::kv::{KvArena, KvHandle};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Point-in-time cache counters (surfaced through `serving::metrics`
+/// into the serve summary and the Zipf bench rows).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// admission lookups
+    pub lookups: u64,
+    /// lookups that borrowed a non-empty prefix
+    pub hits: u64,
+    /// prompt tokens served from cache (prefill work avoided)
+    pub hit_tokens: u64,
+    /// leaves published (distinct cached prefixes, cumulative)
+    pub insertions: u64,
+    /// leaves evicted under memory pressure
+    pub evictions: u64,
+}
+
+struct Node {
+    /// edge label: the token run from the parent to this node
+    tokens: Vec<u32>,
+    /// total prefix length covered by this node (sum of edges root→here)
+    len: usize,
+    parent: usize,
+    children: Vec<usize>,
+    /// refcounted page receipts covering positions `0..len`,
+    /// strip-major (`n_strips × ⌈len/pp⌉`, the `export_prefix` shape)
+    pages: Vec<(u32, u64)>,
+    /// logical LRU clock stamp of the last borrow/publish touch
+    last_use: u64,
+}
+
+struct CacheInner {
+    /// slab of nodes; index 0 is the (empty, page-less) root
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    clock: u64,
+    lookups: u64,
+    hits: u64,
+    hit_tokens: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl CacheInner {
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("dangling radix node index")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("dangling radix node index")
+    }
+
+    fn add_node(&mut self, n: Node) -> usize {
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(n);
+                i
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Walk from the root along **full** edge matches only (splits
+    /// happen on insert, never on lookup). Returns the deepest node and
+    /// the number of prompt tokens it covers.
+    fn descend(&self, prompt: &[u32]) -> (usize, usize) {
+        let (mut cur, mut pos) = (0usize, 0usize);
+        'walk: loop {
+            for &c in &self.node(cur).children {
+                let edge = &self.node(c).tokens;
+                if prompt.len() - pos >= edge.len() && prompt[pos..pos + edge.len()] == edge[..] {
+                    cur = c;
+                    pos += edge.len();
+                    continue 'walk;
+                }
+            }
+            return (cur, pos);
+        }
+    }
+}
+
+/// The strip-major sublist of `pages` covering the first `need` pages
+/// of each strip (a node lending or re-reffing a *prefix* of another
+/// node's coverage).
+fn prefix_pages(
+    pages: &[(u32, u64)],
+    node_pps: usize,
+    need: usize,
+    n_strips: usize,
+) -> Vec<(u32, u64)> {
+    assert!(need <= node_pps, "prefix wider than the node's coverage");
+    let mut out = Vec::with_capacity(n_strips * need);
+    for s in 0..n_strips {
+        out.extend_from_slice(&pages[s * node_pps..s * node_pps + need]);
+    }
+    out
+}
+
+/// One radix prefix cache per engine, lending pages out of that
+/// engine's [`KvArena`]. See the module docs.
+pub struct PrefixCache {
+    id: u64,
+    arena: Arc<KvArena>,
+    inner: Mutex<CacheInner>,
+}
+
+impl PrefixCache {
+    pub fn new(arena: Arc<KvArena>) -> Self {
+        let root = Node {
+            tokens: Vec::new(),
+            len: 0,
+            parent: 0,
+            children: Vec::new(),
+            pages: Vec::new(),
+            last_use: 0,
+        };
+        Self {
+            id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
+            arena,
+            inner: Mutex::new(CacheInner {
+                nodes: vec![Some(root)],
+                free_nodes: Vec::new(),
+                clock: 0,
+                lookups: 0,
+                hits: 0,
+                hit_tokens: 0,
+                insertions: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Unique id (keys per-cache metrics, like `KvArena::id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn arena(&self) -> &Arc<KvArena> {
+        &self.arena
+    }
+
+    /// Admission-time lookup: find the deepest cached node whose prefix
+    /// the prompt extends, borrow its pages into `h` read-only, and
+    /// return how many prompt positions are now resident (the session
+    /// resumes at that position). At most `prompt.len() - 1` — at least
+    /// one prompt token must still be fed to produce first logits.
+    /// Returns 0 (and imports nothing) on a miss.
+    pub fn match_and_borrow(&self, prompt: &[u32], h: &mut KvHandle) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        inner.lookups += 1;
+        if prompt.len() < 2 {
+            return 0;
+        }
+        let (node_idx, _) = inner.descend(prompt);
+        if node_idx == 0 {
+            return 0;
+        }
+        let geom = self.arena.geom();
+        let pp = geom.page_positions;
+        let node_len = inner.node(node_idx).len;
+        let matched = node_len.min(prompt.len() - 1);
+        if matched == 0 {
+            return 0;
+        }
+        let need = matched.div_ceil(pp);
+        let lend = prefix_pages(
+            &inner.node(node_idx).pages,
+            node_len.div_ceil(pp),
+            need,
+            geom.n_strips(),
+        );
+        // The node holds live refs on every lent page, so the import
+        // cannot observe a freed generation (cache lock held across).
+        self.arena.import_prefix(h, &lend, matched);
+        inner.hits += 1;
+        inner.hit_tokens += matched as u64;
+        let stamp = inner.tick();
+        inner.node_mut(node_idx).last_use = stamp;
+        matched
+    }
+
+    /// Publication at prefill completion: `h` has stored positions
+    /// `0..prompt.len()` — export the prompt's pages into the tree,
+    /// splitting an existing edge if the prompt diverges inside it.
+    /// Idempotent for already-cached prompts (touches LRU only).
+    pub fn insert(&self, prompt: &[u32], h: &mut KvHandle) {
+        if prompt.len() < 2 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let geom = self.arena.geom();
+        let pp = geom.page_positions;
+        let (mut at, mut pos) = inner.descend(prompt);
+        if pos == prompt.len() {
+            let stamp = inner.tick();
+            inner.node_mut(at).last_use = stamp;
+            return;
+        }
+        // Does some child share a partial edge prefix with the rest of
+        // the prompt? (Full matches were consumed by descend.)
+        let rest = &prompt[pos..];
+        let partial = inner.node(at).children.iter().copied().find_map(|c| {
+            let edge = &inner.node(c).tokens;
+            let k = edge.iter().zip(rest).take_while(|(a, b)| a == b).count();
+            (k > 0).then_some((c, k))
+        });
+        if let Some((child, k)) = partial {
+            // Split: mid takes the shared k tokens and a refcount-bumped
+            // prefix of the child's pages; the child keeps its suffix.
+            let mid_len = inner.node(at).len + k;
+            let mid_pages = prefix_pages(
+                &inner.node(child).pages,
+                inner.node(child).len.div_ceil(pp),
+                mid_len.div_ceil(pp),
+                geom.n_strips(),
+            );
+            self.arena.page_ref_inc(&mid_pages);
+            let stamp = inner.tick();
+            let mid = inner.add_node(Node {
+                tokens: rest[..k].to_vec(),
+                len: mid_len,
+                parent: at,
+                children: vec![child],
+                pages: mid_pages,
+                last_use: stamp,
+            });
+            let at_children = &mut inner.node_mut(at).children;
+            let slot = at_children.iter().position(|&c| c == child).expect("child under parent");
+            at_children[slot] = mid;
+            let child_node = inner.node_mut(child);
+            child_node.tokens.drain(..k);
+            child_node.parent = mid;
+            at = mid;
+            pos += k;
+            if pos == prompt.len() {
+                return; // the split node covers the prompt exactly
+            }
+        }
+        // Publish the divergent tail as a new leaf owning the prompt's
+        // full page list.
+        let pages = self.arena.export_prefix(h, prompt.len());
+        let stamp = inner.tick();
+        let leaf = inner.add_node(Node {
+            tokens: prompt[pos..].to_vec(),
+            len: prompt.len(),
+            parent: at,
+            children: Vec::new(),
+            pages,
+            last_use: stamp,
+        });
+        inner.node_mut(at).children.push(leaf);
+        inner.insertions += 1;
+    }
+
+    /// LRU leaf eviction: drop least-recently-used leaves until at
+    /// least `want_pages` pages returned to the free list (or no
+    /// evictable leaf remains). Registered as the arena's reclaimer, so
+    /// this runs exactly when a store cannot get a page any other way.
+    /// Returns the number of pages actually freed.
+    ///
+    /// Leaves whose pages are *all* borrowed outside the cache (live
+    /// sessions) are skipped, not evicted: dropping the cache's refs on
+    /// them frees nothing for the allocator — `freed` would never
+    /// advance and the loop would devour the whole tree, hot leaves
+    /// included, while reporting 0. Pages shared only *within* the tree
+    /// (a split node re-reffing its child's pages) don't pin a victim:
+    /// evicting it cascades — the ancestor becomes an evictable leaf
+    /// and the shared pages free on a later round. Session-pinned
+    /// leaves become evictable again once their borrowers retire.
+    pub fn evict(&self, want_pages: usize) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut freed = 0usize;
+        while freed < want_pages {
+            // Per-page tally of refs held by tree nodes; a page whose
+            // arena refcount exceeds this is borrowed by a session.
+            let mut tree_refs: HashMap<(u32, u64), usize> = HashMap::new();
+            for n in inner.nodes.iter().flatten() {
+                for &p in &n.pages {
+                    *tree_refs.entry(p).or_insert(0) += 1;
+                }
+            }
+            let victim = inner
+                .nodes
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.children.is_empty())
+                .filter(|(_, n)| {
+                    n.pages
+                        .iter()
+                        .any(|&(id, gen)| self.arena.page_refs(id, gen) == tree_refs[&(id, gen)])
+                })
+                .min_by_key(|(_, n)| n.last_use)
+                .map(|(i, _)| i);
+            let Some(i) = victim else { break };
+            let node = inner.nodes[i].take().expect("victim exists");
+            inner.free_nodes.push(i);
+            let siblings = &mut inner.node_mut(node.parent).children;
+            siblings.retain(|&c| c != i);
+            // A session borrowing these pages keeps them alive through
+            // its own refs; eviction only drops the cache's.
+            freed += self.arena.release_page_refs(&node.pages);
+            inner.evictions += 1;
+        }
+        freed
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let inner = self.inner.lock().unwrap();
+        PrefixStats {
+            lookups: inner.lookups,
+            hits: inner.hits,
+            hit_tokens: inner.hit_tokens,
+            insertions: inner.insertions,
+            evictions: inner.evictions,
+        }
+    }
+
+    /// Live cached prefixes (non-root nodes) — observability only.
+    pub fn node_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.iter().flatten().count().saturating_sub(1)
+    }
+}
+
+impl Drop for PrefixCache {
+    fn drop(&mut self) {
+        let inner = self.inner.get_mut().unwrap();
+        for node in inner.nodes.iter().flatten() {
+            self.arena.release_page_refs(&node.pages);
+        }
+    }
+}
+
+/// Wire `cache` in as `arena`'s under-pressure reclaimer. Holds only a
+/// `Weak` — the arena must not keep its cache alive (the cache already
+/// holds the arena).
+pub fn register_reclaimer(arena: &KvArena, cache: &Arc<PrefixCache>) {
+    let weak = Arc::downgrade(cache);
+    arena.set_reclaimer(move |need| weak.upgrade().map_or(0, |c| c.evict(need)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::kv::{KvFormat, KvGeom};
+
+    /// pp = 2, cap = 8, one (layer, kv-head) pair → 2 strips.
+    fn arena(max_slots: usize) -> Arc<KvArena> {
+        let g = KvGeom {
+            n_layers: 1,
+            n_kv_heads: 1,
+            head_dim: 8,
+            cap: 8,
+            page_positions: 2,
+            format: KvFormat::F32,
+        };
+        Arc::new(KvArena::with_limit(g, 1, max_slots))
+    }
+
+    fn row(seed: usize) -> Vec<f32> {
+        (0..8).map(|j| ((seed * 7 + j * 3) % 13) as f32 * 0.25 - 1.0).collect()
+    }
+
+    /// Simulate a donor prefill: store K/V rows keyed by token value at
+    /// every prompt position, so page bytes are a pure function of the
+    /// token prefix (like a real deterministic model).
+    fn prefill(a: &KvArena, h: &mut KvHandle, prompt: &[u32]) {
+        for (pos, &t) in prompt.iter().enumerate() {
+            a.view_mut(h).store_k(0, pos, &row(t as usize));
+            a.view_mut(h).store_v(0, pos, &row(t as usize + 100));
+        }
+    }
+
+    #[test]
+    fn miss_then_publish_then_hit() {
+        let a = arena(8);
+        let cache = PrefixCache::new(a.clone());
+        let prompt = [5u32, 6, 7, 8];
+
+        // Cold: miss, prefill, publish.
+        let mut donor = a.acquire().unwrap();
+        assert_eq!(cache.match_and_borrow(&prompt, &mut donor), 0);
+        prefill(&a, &mut donor, &prompt);
+        cache.insert(&prompt, &mut donor);
+        a.release(donor); // cache refs outlive the donor
+
+        // Hit: the full prompt minus the last (must-feed) token.
+        let mut hit = a.acquire().unwrap();
+        let matched = cache.match_and_borrow(&prompt, &mut hit);
+        assert_eq!(matched, 3, "borrow up to prompt.len() - 1");
+        assert_eq!(hit.page_count(), 2 * 2, "2 pages per strip cover positions 0..3");
+        assert_eq!(hit.shared_page_count(), hit.page_count(), "borrowed pages are read-only");
+        // Borrowed bytes are exactly the donor's stores.
+        assert_eq!(&a.view(&hit).k_page(0, 0, 0)[..8], &row(5)[..]);
+        assert_eq!(&a.view(&hit).v_page(0, 0, 1)[..8], &row(7 + 100)[..]);
+
+        // A longer prompt extending the cached prefix matches all of it.
+        let mut ext = a.acquire().unwrap();
+        let longer = [5u32, 6, 7, 8, 9, 10];
+        assert_eq!(cache.match_and_borrow(&longer, &mut ext), 4);
+
+        let st = cache.stats();
+        assert_eq!((st.lookups, st.hits, st.insertions), (3, 2, 1));
+        assert_eq!(st.hit_tokens, 3 + 4);
+        a.release(hit);
+        a.release(ext);
+    }
+
+    #[test]
+    fn divergent_prompt_splits_the_edge() {
+        let a = arena(8);
+        let cache = PrefixCache::new(a.clone());
+        let p1 = [1u32, 2, 3, 4];
+        let p2 = [1u32, 2, 9, 9];
+
+        let mut d1 = a.acquire().unwrap();
+        prefill(&a, &mut d1, &p1);
+        cache.insert(&p1, &mut d1);
+        a.release(d1);
+
+        // p2 diverges inside p1's edge → split at [1, 2]; p2 publishes
+        // its own leaf. Positions 0..2 of both prompts share pages.
+        let mut d2 = a.acquire().unwrap();
+        let m = cache.match_and_borrow(&p2, &mut d2);
+        assert_eq!(m, 0, "lookup never splits: partial edge is a miss");
+        prefill(&a, &mut d2, &p2);
+        cache.insert(&p2, &mut d2);
+        a.release(d2);
+        assert_eq!(cache.node_count(), 3, "mid + two divergent leaves");
+
+        // Both full prompts now hit, through the split node.
+        let mut h1 = a.acquire().unwrap();
+        assert_eq!(cache.match_and_borrow(&p1, &mut h1), 3);
+        let mut h2 = a.acquire().unwrap();
+        assert_eq!(cache.match_and_borrow(&p2, &mut h2), 3);
+        // And a prompt stopping exactly at the split point hits it too.
+        let mut h3 = a.acquire().unwrap();
+        assert_eq!(cache.match_and_borrow(&[1u32, 2, 7], &mut h3), 2);
+        for h in [h1, h2, h3] {
+            a.release(h);
+        }
+    }
+
+    #[test]
+    fn borrower_divergence_cows_not_corrupts() {
+        let a = arena(8);
+        let cache = PrefixCache::new(a.clone());
+        let prompt = [3u32, 4, 5, 6];
+        let mut donor = a.acquire().unwrap();
+        prefill(&a, &mut donor, &prompt);
+        cache.insert(&prompt, &mut donor);
+        a.release(donor);
+
+        let mut b = a.acquire().unwrap();
+        let m = cache.match_and_borrow(&prompt, &mut b);
+        assert_eq!(m, 3);
+        // The borrower's continuation store at pos 3 lands in borrowed
+        // page 1 → COW; cached bytes stay intact for the next hit.
+        a.view_mut(&mut b).store_k(0, 3, &row(999));
+        assert_eq!(a.stats().cow_copies, 1);
+        a.release(b);
+
+        let mut b2 = a.acquire().unwrap();
+        cache.match_and_borrow(&prompt, &mut b2);
+        assert_eq!(
+            &a.view(&b2).k_page(0, 0, 1)[..8],
+            &row(5)[..],
+            "cached page must not see the borrower's divergence"
+        );
+        a.release(b2);
+    }
+
+    #[test]
+    fn lru_eviction_frees_pages_and_keeps_hot_leaves() {
+        let a = arena(8);
+        let cache = PrefixCache::new(a.clone());
+        let cold = [1u32, 2, 3, 4];
+        let hot = [7u32, 8, 9, 10];
+        for p in [&cold, &hot] {
+            let mut d = a.acquire().unwrap();
+            prefill(&a, &mut d, p);
+            cache.insert(p, &mut d);
+            a.release(d);
+        }
+        // Touch `hot` so `cold` is the LRU leaf.
+        let mut t = a.acquire().unwrap();
+        cache.match_and_borrow(&hot, &mut t);
+        a.release(t);
+
+        let before = a.stats().pages_in_use;
+        let freed = cache.evict(1);
+        assert!(freed > 0);
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(a.stats().pages_in_use, before - freed);
+        // The cold prefix is gone, the hot one still hits.
+        let mut h = a.acquire().unwrap();
+        assert_eq!(cache.match_and_borrow(&cold, &mut h), 0);
+        assert_eq!(cache.match_and_borrow(&hot, &mut h), 3);
+        a.release(h);
+    }
+
+    #[test]
+    fn reclaimer_evicts_under_store_pressure() {
+        // 1-slot pool: a cached prompt owns every page; wiring the
+        // cache as reclaimer lets the next session's stores evict it
+        // instead of panicking.
+        let a = arena(1);
+        let cache = Arc::new(PrefixCache::new(a.clone()));
+        register_reclaimer(&a, &cache);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let mut d = a.acquire().unwrap();
+        prefill(&a, &mut d, &prompt);
+        cache.insert(&prompt, &mut d);
+        a.release(d);
+        assert!(a.stats().pages_in_use > 0, "cache holds the pool");
+
+        let mut h = a.acquire().unwrap();
+        prefill(&a, &mut h, &prompt); // needs the whole pool back
+        assert!(cache.stats().evictions >= 1, "pressure must evict, not panic");
+        a.release(h);
+        assert_eq!(a.stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn drop_releases_every_cache_ref() {
+        let a = arena(8);
+        let prompt = [2u32, 4, 6, 8];
+        {
+            let cache = PrefixCache::new(a.clone());
+            let mut d = a.acquire().unwrap();
+            prefill(&a, &mut d, &prompt);
+            cache.insert(&prompt, &mut d);
+            a.release(d);
+            assert!(a.stats().pages_in_use > 0);
+        }
+        assert_eq!(a.stats().pages_in_use, 0, "cache drop leaked page refs");
+    }
+
+    #[test]
+    fn short_prompts_never_cached() {
+        let a = arena(8);
+        let cache = PrefixCache::new(a.clone());
+        let mut h = a.acquire().unwrap();
+        assert_eq!(cache.match_and_borrow(&[5u32], &mut h), 0);
+        prefill(&a, &mut h, &[5u32]);
+        cache.insert(&[5u32], &mut h);
+        assert_eq!(cache.node_count(), 0, "single-token prompts are not worth a node");
+        a.release(h);
+    }
+}

@@ -44,11 +44,17 @@ pub struct RouterConfig {
     /// sweep boundary.
     pub max_batch: usize,
     pub strategy: Strategy,
+    /// Enable the per-worker radix prefix cache (`serve
+    /// --prefix-cache`): repeated prompt prefixes are borrowed from
+    /// refcounted KV pages instead of being re-prefilled. Off by
+    /// default — caching holds pages resident between requests, which
+    /// a memory-capped deployment may not want.
+    pub prefix_cache: bool,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { n_workers: 2, max_batch: 8, strategy: Strategy::LeastLoaded }
+        Self { n_workers: 2, max_batch: 8, strategy: Strategy::LeastLoaded, prefix_cache: false }
     }
 }
 
@@ -152,6 +158,7 @@ impl Router {
             let m = metrics.clone();
             let errs = errors.clone();
             let max_batch = cfg.max_batch;
+            let prefix_cache = cfg.prefix_cache;
             workers.push(std::thread::spawn(move || {
                 let _guard =
                     CloseOnPanic { queue: q.clone(), errors: errs.clone(), worker: w };
@@ -169,6 +176,9 @@ impl Router {
                     }
                 };
                 engine.attach_metrics(m);
+                if prefix_cache {
+                    engine.enable_prefix_cache();
+                }
                 if let Err(e) = engine.serve(&q, max_batch) {
                     let msg = format!("worker {w}: serve loop failed: {e:#}");
                     eprintln!("{msg}");
@@ -426,16 +436,27 @@ mod tests {
     }
 
     #[test]
-    fn cancellation_mid_generation_releases_arena_slot() {
+    fn cancellation_mid_generation_releases_arena_pages() {
         // Satellite: cancelling mid-generation must release the KV slot
-        // (slots_in_use back to 0) and bump the slot's generation so
-        // stale handles can never see the next tenant's KV.
+        // (slots_in_use back to 0) and free its pages with a generation
+        // bump, so a stale page ref can never see the next tenant's KV.
         let model = tiny_model();
         let arena = model.kv_arena();
-        // Probe the slot the next session will claim (LIFO free list).
-        let probe = arena.acquire().unwrap();
-        let (slot, gen_before) = (probe.slot(), probe.generation());
+        // Probe: materialize a page, note its (id, generation), release
+        // — the freed page must read as dead forever after.
+        let mut probe = arena.acquire().unwrap();
+        let row = vec![0.5f32; 16];
+        {
+            let mut v = arena.view_mut(&mut probe);
+            v.store_k(0, 0, &row);
+            v.store_v(0, 0, &row);
+        }
+        let probe_pages = probe.page_ids();
+        assert!(!probe_pages.is_empty(), "stores must materialize pages");
         arena.release(probe);
+        for &(id, gen) in &probe_pages {
+            assert!(!arena.page_is_live(id, gen), "released page {id} must be dead");
+        }
 
         let model2 = model.clone();
         let router = Router::start(
@@ -457,17 +478,9 @@ mod tests {
         let _ = tokens;
         // Done{Cancelled} is sent *after* the slot release, so this is
         // race-free: nothing else is running on this router.
-        assert_eq!(arena.stats().slots_in_use, 0, "cancelled slot must be released");
-        // The slot's generation advanced past the probe's.
-        let reacquired = arena.acquire().unwrap();
-        assert_eq!(reacquired.slot(), slot, "LIFO free list hands back the same slot");
-        assert!(
-            reacquired.generation() > gen_before,
-            "generation must bump on reuse ({} !> {})",
-            reacquired.generation(),
-            gen_before
-        );
-        arena.release(reacquired);
+        let stats = arena.stats();
+        assert_eq!(stats.slots_in_use, 0, "cancelled slot must be released");
+        assert_eq!(stats.pages_in_use, 0, "cancelled session's pages must be freed");
         // Metrics observed the post-release arena state too.
         let m = router.metrics.summary();
         assert_eq!(m.arena_slots_in_use, 0);
@@ -537,6 +550,35 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_config_wires_workers_and_keeps_tokens() {
+        // `prefix_cache: true` enables the radix cache on every worker:
+        // repeated prompts must hit it (visible in the live metrics
+        // summary) and decode exactly as they do without it.
+        let cold = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        let baseline = cold.submit(vec![1, 2, 3, 4], 5).collect().unwrap();
+        cold.shutdown();
+
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, prefix_cache: true, ..Default::default() },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        for round in 0..3 {
+            let resp = router.submit(vec![1, 2, 3, 4], 5).collect().unwrap();
+            assert_eq!(resp.tokens, baseline.tokens, "round {round}: cache hit changed tokens");
+        }
+        let m = router.metrics.summary();
+        assert!(m.prefix_lookups >= 3, "every admission consults the cache: {m:?}");
+        assert!(m.prefix_hits >= 1, "repeated prompt must hit the cache: {m:?}");
+        assert!(m.prefix_hit_tokens >= 3, "{m:?}");
+        router.shutdown();
+    }
+
+    #[test]
     fn streaming_metrics_populated() {
         let router = Router::start(
             RouterConfig { n_workers: 1, max_batch: 4, ..Default::default() },
@@ -561,7 +603,12 @@ mod tests {
     #[test]
     fn round_robin_distributes() {
         let router = Router::start(
-            RouterConfig { n_workers: 3, strategy: Strategy::RoundRobin, max_batch: 1 },
+            RouterConfig {
+                n_workers: 3,
+                strategy: Strategy::RoundRobin,
+                max_batch: 1,
+                prefix_cache: false,
+            },
             |_| Ok(engine_kind()),
         )
         .unwrap();

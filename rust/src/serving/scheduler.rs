@@ -27,6 +27,7 @@
 use super::batcher::{Pending, SubmitQueue};
 use super::kv::KvArena;
 use super::metrics::Metrics;
+use super::prefix::PrefixCache;
 use super::{FinishReason, GenEvent, Usage};
 use crate::model::sample;
 use crate::rng::Rng;
@@ -39,6 +40,18 @@ use std::time::Instant;
 pub(crate) trait Session {
     fn pos(&self) -> usize;
     fn capacity(&self) -> usize;
+
+    /// Borrow a cached prompt prefix at admission (see
+    /// [`PrefixCache::match_and_borrow`]); returns how many prompt
+    /// tokens are already resident so the scheduler prefills only the
+    /// suffix. Engines without prefix support keep the default miss.
+    fn prefix_match(&mut self, _cache: &PrefixCache, _prompt: &[u32]) -> usize {
+        0
+    }
+
+    /// Publish this session's prompt pages into the cache once the full
+    /// prompt has been fed. Default: not supported, no-op.
+    fn prefix_publish(&mut self, _cache: &PrefixCache, _prompt: &[u32]) {}
 }
 
 /// Executes one sweep: each session advances by exactly one token.
@@ -75,6 +88,9 @@ struct ActiveGen<S> {
     last_tok: Option<Instant>,
     /// Buffered inter-token gaps (µs), one per token after the first.
     itl_us: Vec<u64>,
+    /// Whether this session's prompt pages were published to the prefix
+    /// cache (exactly once, at prefill completion).
+    published: bool,
 }
 
 /// Retire a session: release its KV slot (dropping `sess` releases the
@@ -120,11 +136,25 @@ fn retire<S>(
     }
 }
 
-fn admit<St: Stepper>(stepper: &St, p: Pending) -> ActiveGen<St::Sess> {
+fn admit<St: Stepper>(
+    stepper: &St,
+    p: Pending,
+    cache: Option<&PrefixCache>,
+) -> ActiveGen<St::Sess> {
     let rng = Rng::new(p.request.params.seed);
-    let prompt_left = p.request.prompt.clone().into_iter();
+    let mut sess = stepper.make();
+    let mut prompt_left = p.request.prompt.clone().into_iter();
+    if let Some(c) = cache {
+        // Prefix-cache admission: borrow the matched pages and skip the
+        // resident prompt tokens — only the cache-miss suffix is
+        // prefilled (this is where cache-hit TTFT collapses).
+        let matched = sess.prefix_match(c, &p.request.prompt);
+        if matched > 0 {
+            let _ = prompt_left.nth(matched - 1);
+        }
+    }
     ActiveGen {
-        sess: stepper.make(),
+        sess,
         prompt_left,
         next_token: None,
         n_out: 0,
@@ -133,6 +163,7 @@ fn admit<St: Stepper>(stepper: &St, p: Pending) -> ActiveGen<St::Sess> {
         first_tok: None,
         last_tok: None,
         itl_us: Vec::new(),
+        published: false,
         p,
     }
 }
@@ -153,6 +184,7 @@ pub(crate) fn run_scheduler<St: Stepper>(
     max_batch: usize,
     metrics: Option<&Metrics>,
     arena: Option<&KvArena>,
+    cache: Option<&PrefixCache>,
 ) -> Result<()> {
     let max_batch = max_batch.max(1);
     let mut active: Vec<ActiveGen<St::Sess>> = Vec::new();
@@ -195,7 +227,7 @@ pub(crate) fn run_scheduler<St: Stepper>(
                 }
                 continue;
             }
-            active.push(admit(stepper, next));
+            active.push(admit(stepper, next, cache));
         }
 
         // 3. Gather this sweep's (session, token) pairs; sessions with
@@ -247,6 +279,15 @@ pub(crate) fn run_scheduler<St: Stepper>(
                 still.push(a); // prefill: logits discarded until the last prompt token
                 continue;
             }
+            if !a.published {
+                // Prefill just completed: publish the prompt's pages
+                // (refcount bumps only) before any generated token can
+                // overwrite the page holding the last prompt position.
+                if let Some(c) = cache {
+                    a.sess.prefix_publish(c, &a.p.request.prompt);
+                }
+                a.published = true;
+            }
             if a.n_out >= a.p.request.params.max_new {
                 // max_new == 0: the prompt was consumed but nothing may
                 // be sampled.
@@ -288,6 +329,9 @@ pub(crate) fn run_scheduler<St: Stepper>(
 
         if let (Some(m), Some(ar)) = (metrics, arena) {
             m.observe_arena(ar.id(), ar.stats());
+        }
+        if let (Some(m), Some(c)) = (metrics, cache) {
+            m.observe_prefix(c.id(), c.stats());
         }
     }
     Ok(())
@@ -409,7 +453,7 @@ mod tests {
             (1..=8).map(|i| submit(&q, i, vec![i as u32], 4, 0).0).collect();
         q.close();
         let mut st = MockStepper::new(17, 4096);
-        run_scheduler(&mut st, &q, 4, None, None).unwrap();
+        run_scheduler(&mut st, &q, 4, None, None, None).unwrap();
 
         let (long_toks, long_fin, long_usage, _) = drain(&long_rx);
         assert_eq!(long_toks.len(), 64);
@@ -438,7 +482,7 @@ mod tests {
             let q = SubmitQueue::new();
             let (rx, _) = submit(&q, 0, vec![5, 9], 6, 0);
             q.close();
-            run_scheduler(&mut MockStepper::new(17, 4096), &q, 1, None, None).unwrap();
+            run_scheduler(&mut MockStepper::new(17, 4096), &q, 1, None, None, None).unwrap();
             drain(&rx).0
         };
 
@@ -447,7 +491,7 @@ mod tests {
         let (early_rx, _) = submit(&q, 1, vec![2], 3, 0);
         let (joiner_rx, _) = submit(&q, 2, vec![5, 9], 6, 0);
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 4096), &q, 2, None, None).unwrap();
+        run_scheduler(&mut MockStepper::new(17, 4096), &q, 2, None, None, None).unwrap();
 
         let (long_toks, _, long_usage, _) = drain(&long_rx);
         let (_, _, early_usage, _) = drain(&early_rx);
@@ -472,7 +516,7 @@ mod tests {
         q.close();
         let mut st = MockStepper::new(17, 4096);
         st.fail_at_sweep = Some(4);
-        let res = run_scheduler(&mut st, &q, 4, None, None);
+        let res = run_scheduler(&mut st, &q, 4, None, None, None);
         assert!(res.is_err(), "scheduler must propagate the engine error");
         for rx in [&rx_a, &rx_b] {
             let (toks, fin, _, err) = drain(rx);
@@ -490,7 +534,7 @@ mod tests {
         let q2 = q.clone();
         let h = thread::spawn(move || {
             let mut st = MockStepper::new(17, 1 << 20);
-            run_scheduler(&mut st, &q2, 2, None, None)
+            run_scheduler(&mut st, &q2, 2, None, None, None)
         });
         // Wait until generation is demonstrably in flight…
         let first = rx.recv().unwrap();
@@ -514,7 +558,7 @@ mod tests {
         cancel.cancel();
         q.close();
         let mut st = MockStepper::new(17, 64);
-        run_scheduler(&mut st, &q, 2, None, None).unwrap();
+        run_scheduler(&mut st, &q, 2, None, None, None).unwrap();
         let (toks, fin, usage, _) = drain(&rx);
         assert!(toks.is_empty());
         assert_eq!(fin, FinishReason::Cancelled);
@@ -531,7 +575,7 @@ mod tests {
         let (rx1, _) = submit(&q, 1, vec![2], 2, 5);
         let (rx2, _) = submit(&q, 2, vec![3], 2, 1);
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
         let s0 = drain(&rx0).2.finished_sweep;
         let s1 = drain(&rx1).2.finished_sweep;
         let s2 = drain(&rx2).2.finished_sweep;
@@ -545,7 +589,7 @@ mod tests {
         drop(rx);
         q.close();
         let mut st = MockStepper::new(17, 1 << 20);
-        run_scheduler(&mut st, &q, 1, None, None).unwrap();
+        run_scheduler(&mut st, &q, 1, None, None, None).unwrap();
         // prompt (1) + first generated token whose send fails ⇒ ~2 sweeps,
         // nowhere near max_new.
         assert!(st.sweeps <= 3, "decode must stop for an unread stream ({} sweeps)", st.sweeps);
@@ -557,7 +601,7 @@ mod tests {
         let q = SubmitQueue::new();
         let (rx, _) = submit(&q, 0, vec![1, 2, 3], 0, 0);
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
         let (toks, fin, usage, _) = drain(&rx);
         assert!(toks.is_empty());
         assert_eq!(fin, FinishReason::Length);
@@ -573,7 +617,7 @@ mod tests {
             let q = SubmitQueue::new();
             let (rx, _) = submit(&q, 0, vec![4], 6, 0);
             q.close();
-            run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+            run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
             drain(&rx).0
         };
         assert_eq!(greedy.len(), 6);
@@ -595,7 +639,7 @@ mod tests {
             enqueued: Instant::now(),
         });
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None).unwrap();
+        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
         let (toks, fin, usage, _) = drain(&rx);
         assert_eq!(toks, greedy[..2].to_vec());
         assert_eq!(fin, FinishReason::Stop);

@@ -38,6 +38,15 @@
 //! [`crate::serving::kv::KvArena::fork`] copy a live prefix *bytewise*
 //! — including a partial word shared with not-yet-written positions —
 //! with no re-quantization.
+//!
+//! **Pages compose with packing.** The paged arena stores each
+//! (layer, K/V, kv-head) strip as fixed-size *pages* of `pp` positions,
+//! and a packed page is simply a self-contained strip with `cap = pp`
+//! ([`PackedGeom::for_page`]): its planes and coefficients are
+//! page-local, so page boundaries land on plane-word *and*
+//! coefficient-span boundaries by construction. A page dequantizes in
+//! isolation and can be shared or copied bytewise between sessions —
+//! the variable-grid encoding travels with the page, never re-quantized.
 
 /// Round an f32 to IEEE 754 binary16 bits (round-to-nearest-even).
 // lint: hot
@@ -136,6 +145,18 @@ impl PackedGeom {
         assert!((1..=8).contains(&bits), "KV bit-plane count {bits} out of range 1..=8");
         assert!(group > 0, "coefficient group must be positive");
         Self { cap, hd, bits, group: group.min(hd).min(64) }
+    }
+
+    /// Geometry of one packed KV **page**: a self-contained mini-strip
+    /// of `pp` positions. Identical math to [`PackedGeom::new`] with
+    /// `cap = pp` — the named constructor documents the composition
+    /// contract (module docs): because every page carries its own
+    /// planes and coefficient region, page-granular addressing needs no
+    /// cross-page bit arithmetic, and [`PackedGeom::prefix_spans`] of a
+    /// *page* stays entirely inside that page's words.
+    pub fn for_page(pp: usize, hd: usize, bits: usize, group: usize) -> Self {
+        assert!(pp > 0, "empty KV page");
+        Self::new(pp, hd, bits, group)
     }
 
     /// Coefficient groups per position (`hd / group`, last one ragged).
@@ -492,6 +513,26 @@ mod tests {
         let mut after = vec![0.0f32; 4];
         strip.as_strip().dequant_row(2, &mut after);
         assert_eq!(before, after, "neighbour position changed by a masked store");
+    }
+
+    #[test]
+    fn page_geometry_composes_with_strip_geometry() {
+        // A page is a strip with cap = pp; with pp | cap and pp·hd a
+        // word multiple (the serving default: pp 32, hd ≥ 32 even), the
+        // paged plane region is word-for-word the monolithic one.
+        let mono = PackedGeom::new(1024, 32, 2, 32);
+        let page = PackedGeom::for_page(32, 32, 2, 32);
+        assert_eq!(page, PackedGeom::new(32, 32, 2, 32));
+        let n_pages = 1024 / 32;
+        assert_eq!(n_pages * page.strip_words(), mono.strip_words());
+        // Ragged case (pp·hd not a word multiple): pages still
+        // self-contain — per-page spans never cross a page boundary.
+        let small = PackedGeom::for_page(4, 4, 3, 4);
+        for pos in 0..=4 {
+            for (off, len) in small.prefix_spans(pos) {
+                assert!(off + len <= small.strip_words());
+            }
+        }
     }
 
     #[test]

@@ -90,7 +90,12 @@ fn lut_serving_end_to_end_matches_native() {
 
     let run = |kind: EngineKind| -> Vec<Vec<u32>> {
         let router = Router::start(
-            RouterConfig { n_workers: 2, max_batch: 3, strategy: Strategy::RoundRobin },
+            RouterConfig {
+                n_workers: 2,
+                max_batch: 3,
+                strategy: Strategy::RoundRobin,
+                prefix_cache: false,
+            },
             |_| Ok(kind.clone()),
         )
         .unwrap();

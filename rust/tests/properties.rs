@@ -10,8 +10,11 @@ use bpdq::quant::gptq::invert_perm;
 use bpdq::quant::packing::PackedPlane;
 use bpdq::quant::{quantize_linear, HessianState, QuantMethod, UniformConfig};
 use bpdq::rng::Rng;
-use bpdq::serving::KvFormat;
+use bpdq::serving::prefix::register_reclaimer;
+use bpdq::serving::{KvFormat, PrefixCache};
 use bpdq::tensor::{matmul_f64, Matrix};
+use std::collections::HashSet;
+use std::sync::Arc;
 
 fn rand_wx(rng: &mut Rng, d_out: usize, d_in: usize, n: usize) -> (Matrix, Matrix) {
     let w = Matrix::from_vec(
@@ -276,6 +279,174 @@ fn prop_arena_fork_and_slot_reuse_identical() {
             for (i, (x, y)) in last.iter().zip(&last2).enumerate() {
                 if (x - y).abs() > 1e-6 {
                     return Err(format!("dirty-slot replay diverged at vocab {i}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Prefix-cache lifecycle invariants under random interleavings of
+/// admit-with-shared-prefix / greedy-decode / cancel / evict, on both
+/// f32 and packed-W2 arenas with tiny pages (1–3 positions, so every
+/// prompt spans page transitions):
+///
+/// * **parity** — a session that borrowed cached prefix pages emits
+///   greedy tokens identical to its cold (cache-less) twin, no matter
+///   what the other sessions / the evictor did around it;
+/// * **no resurrection** — once a page generation `(id, gen)` has been
+///   observed dead, it never answers live again and never reappears in
+///   any live session's page table (frees recycle the id under a new
+///   generation, so a stale import would be visible here);
+/// * **no leaks** — after dropping every session and evicting the whole
+///   tree, the arena is back to zero pages and zero slots.
+#[test]
+fn prop_prefix_cache_interleavings_parity_no_resurrection() {
+    use bpdq::model::{argmax, DecodeState};
+    run_prop(
+        "prefix_cache_interleavings_parity_no_resurrection",
+        Config { cases: 4, ..Default::default() },
+        |rng| {
+            for bits in [0usize, 2] {
+                let nh = 1 << rng.below_usize(2);
+                let divisors: Vec<usize> = (1..=nh).filter(|d| nh % d == 0).collect();
+                let nkv = divisors[rng.below_usize(divisors.len())];
+                let cfg = ModelConfig {
+                    vocab_size: 10 + rng.below_usize(20),
+                    d_model: nh * 8,
+                    n_layers: 1 + rng.below_usize(2),
+                    n_heads: nh,
+                    n_kv_heads: nkv,
+                    d_ff: 16 + rng.below_usize(16),
+                    max_seq: 32,
+                    kv_format: if bits == 0 { KvFormat::F32 } else { KvFormat::bit_plane(bits) },
+                };
+                let m = synthetic_model(&cfg, rng.next_u64()).with_kv_page(1 + rng.below_usize(3));
+                let arena = m.kv_arena();
+                let cache = Arc::new(PrefixCache::new(arena.clone()));
+                register_reclaimer(&arena, &cache);
+
+                // Prompt pool: a shared stem plus short divergent suffixes.
+                let stem: Vec<u32> = (0..3 + rng.below_usize(3))
+                    .map(|_| rng.below(cfg.vocab_size as u64) as u32)
+                    .collect();
+                let pool: Vec<Vec<u32>> = (0..3)
+                    .map(|_| {
+                        let mut p = stem.clone();
+                        for _ in 0..1 + rng.below_usize(2) {
+                            p.push(rng.below(cfg.vocab_size as u64) as u32);
+                        }
+                        p
+                    })
+                    .collect();
+                let decode_n = 3 + rng.below_usize(3);
+
+                // Cold oracle: greedy continuation per prompt, no cache.
+                let oracle: Vec<Vec<u32>> = pool
+                    .iter()
+                    .map(|p| {
+                        let mut st = m.decode_state();
+                        let mut logits = Vec::new();
+                        for &t in p {
+                            logits = st.step(&m, t);
+                        }
+                        let mut toks = Vec::new();
+                        for _ in 0..decode_n {
+                            let tok = argmax(&logits) as u32;
+                            toks.push(tok);
+                            logits = st.step(&m, tok);
+                        }
+                        toks
+                    })
+                    .collect();
+
+                let mut live: Vec<(DecodeState, usize, usize, Vec<f32>)> = Vec::new();
+                let mut seen: HashSet<(u32, u64)> = HashSet::new();
+                let mut ghosts: HashSet<(u32, u64)> = HashSet::new();
+                for _ in 0..16 {
+                    match rng.below(4) {
+                        0 if live.len() < 3 => {
+                            // Admit: borrow whatever prefix is cached,
+                            // prefill the rest, publish.
+                            let pi = rng.below_usize(pool.len());
+                            let p = &pool[pi];
+                            let mut st = m.decode_state();
+                            let matched = st.prefix_attach(&cache, p);
+                            if matched >= p.len() {
+                                return Err(format!(
+                                    "match_and_borrow returned {matched} for a \
+                                     {}-token prompt (must leave one to feed)",
+                                    p.len()
+                                ));
+                            }
+                            let mut logits = Vec::new();
+                            for &t in &p[matched..] {
+                                logits = st.step(&m, t);
+                            }
+                            st.prefix_publish(&cache, p);
+                            live.push((st, pi, 0, logits));
+                        }
+                        1 if !live.is_empty() => {
+                            // One greedy decode step on a random live
+                            // session; its token must match the oracle.
+                            let i = rng.below_usize(live.len());
+                            let (st, pi, emitted, logits) = &mut live[i];
+                            if *emitted < decode_n {
+                                let tok = argmax(logits) as u32;
+                                if tok != oracle[*pi][*emitted] {
+                                    return Err(format!(
+                                        "bits {bits} prompt {pi} token {emitted}: cached \
+                                         session emitted {tok}, cold twin {}",
+                                        oracle[*pi][*emitted]
+                                    ));
+                                }
+                                *logits = st.step(&m, tok);
+                                *emitted += 1;
+                            }
+                        }
+                        2 if !live.is_empty() => {
+                            // Cancel a session mid-decode.
+                            let i = rng.below_usize(live.len());
+                            drop(live.swap_remove(i));
+                        }
+                        _ => {
+                            // Pressure the cache's reclaimer.
+                            cache.evict(1 + rng.below_usize(3));
+                        }
+                    }
+                    // Invariant sweep: no live session references a dead
+                    // generation, and dead generations stay dead.
+                    for (st, ..) in &live {
+                        for p in st.page_ids() {
+                            if ghosts.contains(&p) {
+                                return Err(format!(
+                                    "bits {bits}: freed page {p:?} resurrected into a \
+                                     live session's table"
+                                ));
+                            }
+                            seen.insert(p);
+                        }
+                    }
+                    for &(id, gen) in &seen {
+                        let alive = arena.page_is_live(id, gen);
+                        if !alive {
+                            ghosts.insert((id, gen));
+                        } else if ghosts.contains(&(id, gen)) {
+                            return Err(format!(
+                                "bits {bits}: page ({id}, {gen}) answered live after being \
+                                 observed dead"
+                            ));
+                        }
+                    }
+                }
+                drop(live);
+                cache.evict(usize::MAX / 2);
+                let st = arena.stats();
+                if st.slots_in_use != 0 || st.pages_in_use != 0 {
+                    return Err(format!(
+                        "bits {bits}: leak at drain — {} slots, {} pages still in use",
+                        st.slots_in_use, st.pages_in_use
+                    ));
                 }
             }
             Ok(())

@@ -2,6 +2,24 @@
 //! the output-aligned error — the 30-second tour of the library.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! From here, the 60-second tour of the serving stack — a real HTTP/SSE
+//! endpoint over the quantized engine, and a wire-level load test:
+//!
+//! ```text
+//! # terminal 1: quantize W2-G256, serve over HTTP/SSE (+ raw BPQ1)
+//! cargo run --release -- serve --listen 127.0.0.1:8090 \
+//!     --engine lut --kv-bits 2 --prefix-cache
+//!
+//! # terminal 2: stream tokens with any HTTP client …
+//! curl -N -X POST http://127.0.0.1:8090/v1/generate \
+//!     -H 'Content-Type: application/json' \
+//!     -d '{"prompt":"17+25=","max_new":8}'
+//!
+//! # … or replay Zipf traffic and measure goodput/TTFT/ITL on the wire
+//! cargo run --release -- loadgen --addr 127.0.0.1:8090 \
+//!     --requests 64 --concurrency 8 --drain
+//! ```
 
 use bpdq::quant::{
     quantize_linear, BcqConfig, BpdqConfig, QuantMethod, UniformConfig, VqConfig,

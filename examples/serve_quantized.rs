@@ -4,6 +4,17 @@
 //!
 //! Run after `make artifacts`:
 //! `cargo run --release --example serve_quantized`
+//!
+//! This example drives the router in-process. The same stack serves
+//! over real sockets via `bpdq serve --listen host:port` — `POST
+//! /v1/generate` streams SSE token events (`GET /healthz`, `GET
+//! /metrics`, `POST /admin/drain` ride along, plus a length-prefixed
+//! raw protocol for dependency-free clients), with admission control
+//! under `--deadline-budget-us` and graceful drain. `bpdq loadgen`
+//! replays Zipf-distributed wire traffic against it and reports
+//! goodput, TTFT/ITL percentiles, rejection rate, and cache hit rate;
+//! see the `## Front door` section of `bpdq::serving` for the wire
+//! contract.
 
 use bpdq::data::{CorpusConfig, CorpusGen, Split, Tokenizer};
 use bpdq::io::tlm::TlmFile;

@@ -45,6 +45,17 @@ kernels file is skipped gracefully (the artifact predates the bench);
 a missing *current* file while ``--kernels-current`` was passed is an
 error — the bench was supposed to run.
 
+Since the HTTP/SSE front door, the gate also (optionally) compares
+wire-level loadgen artifacts (``BENCH_serve_load.json`` and friends)
+via repeatable ``--serve-load-current`` / ``--serve-load-previous``
+pairs, matched by position. Serve-load rows are keyed like decode rows
+(``name [kvN]``) and gate on two axes: ``goodput_tok_s`` drops like
+tokens/sec (more than ``--threshold`` fails), and ``rejection_rate``
+gates on **absolute** growth — more than ``--rejection-margin`` above
+the previous rate fails — because ratios against a near-zero rejection
+rate are meaningless. A missing previous serve-load file is a loud
+skip, same as every other baseline here.
+
 Stdlib only; runs on the bare CI python.
 """
 
@@ -134,6 +145,82 @@ def gate_kernels(current: str, previous: str, threshold: float,
         print(f"[perf-gate] new kernel row (not gated): {name}")
 
 
+def load_serve_rows(path: str) -> dict[str, dict[str, float]]:
+    """Loadgen artifact rows keyed ``name [kvN]`` -> goodput/rejection."""
+    with open(path) as f:
+        doc = json.load(f)
+    out: dict[str, dict[str, float]] = {}
+    for row in doc.get("rows", []):
+        name = row.get("name")
+        if not isinstance(name, str):
+            continue
+        kv_bits = row.get("kv_bits")
+        if isinstance(kv_bits, (int, float)) and int(kv_bits) != 0:
+            name = f"{name} [kv{int(kv_bits)}]"
+        vals: dict[str, float] = {}
+        for key in ("goodput_tok_s", "rejection_rate"):
+            v = row.get(key)
+            if isinstance(v, (int, float)):
+                vals[key] = float(v)
+        if vals:
+            out[name] = vals
+    return out
+
+
+def gate_serve_load(current: str, previous: str, threshold: float,
+                    rejection_margin: float, failures: list) -> None:
+    """Compare one pair of wire-level loadgen artifacts.
+
+    Goodput gates like tokens/sec (fractional drop beyond ``threshold``
+    fails); rejection rate gates on absolute growth beyond
+    ``rejection_margin``, because a baseline rate of (near) zero makes
+    any ratio meaningless. A missing or unreadable previous file is a
+    loud skip — the first run after the loadgen landed has no baseline.
+    The current file must load: the caller only passes it when the
+    loadgen ran in this job.
+    """
+    cur = load_serve_rows(current)
+    try:
+        prev = load_serve_rows(previous)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[perf-gate] no previous serve-load baseline ({e}) — skipping")
+        return
+    if not prev:
+        print("[perf-gate] previous serve-load artifact has no comparable "
+              "rows — skipping")
+        return
+    for name in sorted(prev):
+        if name not in cur:
+            print(f"[perf-gate] serve-load row dropped (not gating): {name}")
+            continue
+        p_good = prev[name].get("goodput_tok_s", 0.0)
+        c_good = cur[name].get("goodput_tok_s", 0.0)
+        if p_good <= 0.0:
+            print(f"[perf-gate] skipping zero-baseline goodput row: {name}")
+        else:
+            ratio = c_good / p_good
+            marker = "OK "
+            if ratio < 1.0 - threshold:
+                marker = "REG"
+                failures.append((name, "goodput_tok_s", p_good, c_good, ratio))
+            print(f"[perf-gate] {marker} {name}: {p_good:.1f} -> {c_good:.1f} "
+                  f"goodput tok/s ({100.0 * (ratio - 1.0):+.1f}%)")
+        p_rr = prev[name].get("rejection_rate")
+        c_rr = cur[name].get("rejection_rate")
+        if p_rr is None or c_rr is None:
+            print(f"[perf-gate] skipping rejection-rate row (no data): {name}")
+            continue
+        marker = "OK "
+        if c_rr > p_rr + rejection_margin:
+            marker = "REG"
+            failures.append((name, "rejection_rate", p_rr, c_rr,
+                             (1.0 + c_rr) / (1.0 + p_rr)))
+        print(f"[perf-gate] {marker} {name}: rejection rate {p_rr:.2f} -> "
+              f"{c_rr:.2f} (+{rejection_margin:.2f} allowed)")
+    for name in sorted(set(cur) - set(prev)):
+        print(f"[perf-gate] new serve-load row (not gated): {name}")
+
+
 def gate_cache_hit(cur: dict[str, dict[str, float]], margin: float,
                    failures: list) -> None:
     """Within-artifact hit-vs-cold TTFT check for the Zipf rows.
@@ -184,6 +271,14 @@ def main() -> int:
                     help="headroom for the within-run cache-hit TTFT check: "
                          "warm p50 may exceed cold p50 by this fraction "
                          "(0.25 = 25%%)")
+    ap.add_argument("--serve-load-current", action="append", default=[],
+                    help="fresh BENCH_serve_*.json (repeatable; paired by "
+                         "position with --serve-load-previous)")
+    ap.add_argument("--serve-load-previous", action="append", default=[],
+                    help="previous run's BENCH_serve_*.json (repeatable)")
+    ap.add_argument("--rejection-margin", type=float, default=0.15,
+                    help="max allowed absolute rejection-rate growth for "
+                         "serve-load rows (0.15 = 15 points)")
     args = ap.parse_args()
 
     cur = load_rows(args.current)
@@ -200,6 +295,13 @@ def main() -> int:
     if args.kernels_current and args.kernels_previous:
         gate_kernels(args.kernels_current, args.kernels_previous,
                      args.kernels_threshold, failures)
+    if len(args.serve_load_current) != len(args.serve_load_previous):
+        print("[perf-gate] serve-load current/previous counts differ — "
+              "pairing by position, extras skipped")
+    for sl_cur, sl_prev in zip(args.serve_load_current,
+                               args.serve_load_previous):
+        gate_serve_load(sl_cur, sl_prev, args.threshold,
+                        args.rejection_margin, failures)
     if not prev:
         print("[perf-gate] previous artifact has no comparable rows — skipping decode gate")
         if failures:

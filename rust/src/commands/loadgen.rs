@@ -1,0 +1,626 @@
+//! `bpdq loadgen` — wire-level load generator for `serve --listen`.
+//!
+//! Replays a Zipf-distributed prompt workload (a hot head of shared
+//! prompts over a common stem — the traffic shape prefix caching is
+//! built for) against a live server over real sockets, measuring
+//! client-side TTFT/ITL from SSE (or raw-protocol) frame arrival
+//! times. Emits a `BENCH_serve_load.json` artifact (goodput, latency
+//! percentiles, rejection rate, cache hit rate) for the CI perf gate,
+//! and optionally:
+//!
+//! * `--drain` — post `/admin/drain` when done, so a CI leg can `wait`
+//!   on the serve process and check its leak gates;
+//! * `--verify-inprocess` — rebuild the *identical* engine from the
+//!   same flags ([`super::serve::build_setup`]) and require every
+//!   accepted stream's wire tokens to match in-process decoding;
+//! * `--require-all` / `--expect-rejections` — hard gates for the
+//!   parity and overload CI legs.
+
+use anyhow::{Context, Result};
+use bpdq::benchkit::JsonReport;
+use bpdq::cli::Args;
+use bpdq::data::Tokenizer;
+use bpdq::io::json::{JsonValue, JsonWriter};
+use bpdq::rng::{Rng, Zipf};
+use bpdq::serving::net::server::RAW_MAGIC;
+use bpdq::serving::{Router, RouterConfig, Strategy};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::serve::{build_setup, sampling_params, ServeSetup};
+
+/// One precomputed request: prompt token ids + per-request overrides.
+struct Spec {
+    tokens: Vec<u32>,
+    max_new: usize,
+    seed: u64,
+}
+
+/// What one wire request amounted to.
+#[derive(Clone)]
+enum Outcome {
+    /// Stream completed; latencies are client-observed arrival times.
+    Ok { tokens: Vec<u32>, ttft_us: u64, itl_us: Vec<u64> },
+    /// The server said no (429 overload, 503 drain/pool-full, 4xx).
+    Rejected { status: u16 },
+    /// Transport-level failure — always a bug somewhere; always fatal.
+    Failed(String),
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let addr = resolve_addr(args)?;
+    let n_requests = args.get_usize("requests", 64).map_err(anyhow::Error::msg)?.max(1);
+    let concurrency = args.get_usize("concurrency", 8).map_err(anyhow::Error::msg)?.max(1);
+    let pool = args.get_usize("pool", 16).map_err(anyhow::Error::msg)?.max(1);
+    let zipf_s = args.get_f64("zipf-s", 1.1).map_err(anyhow::Error::msg)?;
+    let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64;
+    let raw = args.has("raw");
+    let out_path = args.get_or("out", "BENCH_serve_load.json").to_string();
+    let name = args.get_or("name", "serve_load").to_string();
+
+    wait_ready(&addr, Duration::from_secs(15))?;
+    let specs = Arc::new(build_specs(n_requests, pool, zipf_s, max_new, seed));
+    println!(
+        "loadgen: {n_requests} requests over {concurrency} conns to {addr} ({} wire, \
+         zipf s={zipf_s} over {pool} prompts)",
+        if raw { "raw" } else { "http/sse" }
+    );
+
+    let t0 = Instant::now();
+    let outcomes = fire(&addr, &specs, concurrency, raw)?;
+    let wall = t0.elapsed();
+
+    // Scrape server-side counters before draining the server away.
+    let server_metrics = fetch_metrics(&addr).ok();
+    if args.has("drain") {
+        post_drain(&addr)?;
+        println!("drain requested — server is finishing in-flight streams");
+    }
+    if args.has("verify-inprocess") {
+        verify_inprocess(args, &specs, &outcomes)?;
+    }
+
+    let agg = aggregate(&outcomes);
+    anyhow::ensure!(
+        agg.failures.is_empty(),
+        "{} transport failures, first: {}",
+        agg.failures.len(),
+        agg.failures[0]
+    );
+    let goodput = agg.tokens as f64 / wall.as_secs_f64().max(1e-9);
+    let rejection_rate = agg.rejected as f64 / n_requests as f64;
+    let (hits, lookups, srv) = summarize_server(server_metrics.as_ref());
+    let cache_hit_rate = if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 };
+
+    println!("\n--- loadgen report ---");
+    println!("accepted / rejected: {} / {} (of {n_requests})", agg.accepted, agg.rejected);
+    if !agg.rejected_by.is_empty() {
+        let parts: Vec<String> =
+            agg.rejected_by.iter().map(|(s, n)| format!("{n} x {s}")).collect();
+        println!("rejections         : {}", parts.join(", "));
+    }
+    println!(
+        "goodput            : {goodput:.1} tok/s ({} tokens in {:.2} s)",
+        agg.tokens,
+        wall.as_secs_f64()
+    );
+    println!(
+        "TTFT p50 / p95     : {:.2} / {:.2} ms",
+        pct(&agg.ttft_us, 0.5) as f64 / 1e3,
+        pct(&agg.ttft_us, 0.95) as f64 / 1e3
+    );
+    println!(
+        "ITL  p50 / p95     : {:.2} / {:.2} ms",
+        pct(&agg.itl_us, 0.5) as f64 / 1e3,
+        pct(&agg.itl_us, 0.95) as f64 / 1e3
+    );
+    println!("prefix cache       : {hits}/{lookups} hits ({:.0}%)", 100.0 * cache_hit_rate);
+    println!("server counters    : {srv}");
+
+    let kv_bits = args.get_usize("kv-bits", 0).map_err(anyhow::Error::msg)?;
+    let mut rep = JsonReport::new("serve_load", &out_path);
+    rep.row(|w| {
+        w.begin_object()
+            .key("name")
+            .string(&name)
+            .key("requests")
+            .int(n_requests as i64)
+            .key("concurrency")
+            .int(concurrency as i64)
+            .key("accepted")
+            .int(agg.accepted as i64)
+            .key("rejected")
+            .int(agg.rejected as i64)
+            .key("rejection_rate")
+            .number(rejection_rate)
+            .key("goodput_tok_s")
+            .number(goodput)
+            .key("ttft_p50_us")
+            .int(pct(&agg.ttft_us, 0.5) as i64)
+            .key("ttft_p95_us")
+            .int(pct(&agg.ttft_us, 0.95) as i64)
+            .key("itl_p50_us")
+            .int(pct(&agg.itl_us, 0.5) as i64)
+            .key("itl_p95_us")
+            .int(pct(&agg.itl_us, 0.95) as i64)
+            .key("cache_hit_rate")
+            .number(cache_hit_rate)
+            .key("kv_bits")
+            .int(kv_bits as i64)
+            .end_object();
+    });
+    rep.finish();
+
+    if args.has("require-all") {
+        anyhow::ensure!(
+            agg.accepted == n_requests,
+            "--require-all: only {}/{n_requests} streams completed ({} rejected)",
+            agg.accepted,
+            agg.rejected
+        );
+    }
+    if args.has("expect-rejections") {
+        anyhow::ensure!(
+            agg.rejected > 0 && agg.accepted > 0,
+            "--expect-rejections: wanted both rejections and completions, got {} / {}",
+            agg.accepted,
+            agg.rejected
+        );
+    }
+    Ok(())
+}
+
+/// `--addr host:port`, or poll `--addr-file` until a `serve --listen`
+/// process publishes its bound address there.
+fn resolve_addr(args: &Args) -> Result<String> {
+    if let Some(a) = args.get("addr") {
+        return Ok(a.to_string());
+    }
+    let path = args.get("addr-file").context("loadgen needs --addr or --addr-file")?;
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let text = text.trim();
+            if !text.is_empty() {
+                return Ok(text.to_string());
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "timed out waiting for --addr-file {path} to appear"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The request mix: every prompt shares a 24-token stem (prefix-cache
+/// bait), prompts are reused Zipf-fashion (rank 0 hottest), and each
+/// request carries its own seed so the server's per-request sampling
+/// state is exercised.
+fn build_specs(n: usize, pool: usize, zipf_s: f64, max_new: usize, seed: u64) -> Vec<Spec> {
+    let vocab = Tokenizer::new().vocab_size();
+    let stem: Vec<u32> = (0..24usize).map(|t| ((t * 5 + 3) % vocab) as u32).collect();
+    let prompts: Vec<Vec<u32>> = (0..pool)
+        .map(|i| {
+            let mut p = stem.clone();
+            p.extend((0..4 + i % 3).map(|j| ((i * 7 + j * 11 + 5) % vocab) as u32));
+            p
+        })
+        .collect();
+    let zipf = Zipf::new(pool, zipf_s);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Spec {
+            tokens: prompts[zipf.sample(&mut rng)].clone(),
+            max_new,
+            seed: seed.wrapping_add(i as u64),
+        })
+        .collect()
+}
+
+/// Poll `GET /healthz` until the server answers any HTTP status —
+/// except `degraded`, which means a worker is already dead and every
+/// generate would hang or error; fail fast instead.
+fn wait_ready(addr: &str, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(mut s) = connect(addr) {
+            let probe = b"GET /healthz HTTP/1.1\r\nHost: loadgen\r\n\r\n";
+            let mut text = String::new();
+            if s.write_all(probe).is_ok()
+                && s.read_to_string(&mut text).is_ok()
+                && text.starts_with("HTTP/1.1")
+            {
+                anyhow::ensure!(
+                    !text.contains(r#""status":"degraded""#),
+                    "server at {addr} is degraded: {text}"
+                );
+                return Ok(());
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "no server answered /healthz at {addr} within {timeout:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Claim-by-atomic-counter work distribution over `concurrency`
+/// threads; every request records exactly one outcome slot.
+fn fire(
+    addr: &str,
+    specs: &Arc<Vec<Spec>>,
+    concurrency: usize,
+    raw: bool,
+) -> Result<Vec<Outcome>> {
+    let next = Arc::new(AtomicUsize::new(0));
+    let slots = Arc::new(Mutex::new(vec![None::<Outcome>; specs.len()]));
+    let mut workers = Vec::new();
+    for _ in 0..concurrency.min(specs.len()) {
+        let (addr, specs) = (addr.to_string(), specs.clone());
+        let (next, slots) = (next.clone(), slots.clone());
+        workers.push(std::thread::spawn(move || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            let Some(spec) = specs.get(i) else { break };
+            let o = if raw { run_raw(&addr, spec) } else { run_http(&addr, spec) };
+            slots.lock().unwrap()[i] = Some(o);
+        }));
+    }
+    for w in workers {
+        w.join().map_err(|_| anyhow::anyhow!("a loadgen worker thread panicked"))?;
+    }
+    let slots = Arc::try_unwrap(slots)
+        .map_err(|_| anyhow::anyhow!("loadgen workers still hold the result slots"))?
+        .into_inner()
+        .map_err(|_| anyhow::anyhow!("result slots poisoned"))?;
+    Ok(slots
+        .into_iter()
+        .map(|o| o.unwrap_or_else(|| Outcome::Failed("request was never run".to_string())))
+        .collect())
+}
+
+fn connect(addr: &str) -> Result<TcpStream, String> {
+    let s = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(Duration::from_secs(120)));
+    let _ = s.set_write_timeout(Some(Duration::from_secs(120)));
+    Ok(s)
+}
+
+/// The generate body; always `tokens` + `max_new` + `seed` so replays
+/// are tokenizer-independent and the in-process verify is exact.
+fn request_body(spec: &Spec) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_object().key("tokens").begin_array();
+    for &t in &spec.tokens {
+        w.int(t as i64);
+    }
+    w.end_array().key("max_new").int(spec.max_new as i64).key("seed").int(spec.seed as i64);
+    w.end_object();
+    w.finish()
+}
+
+fn run_http(addr: &str, spec: &Spec) -> Outcome {
+    let body = request_body(spec);
+    let mut s = match connect(addr) {
+        Ok(s) => s,
+        Err(e) => return Outcome::Failed(e),
+    };
+    let req = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    if let Err(e) = s.write_all(req.as_bytes()) {
+        return Outcome::Failed(format!("write: {e}"));
+    }
+    read_sse(&mut s)
+}
+
+/// Read an SSE response, stamping each token event as it arrives so
+/// TTFT/ITL reflect what a real client observes (not server-side time).
+fn read_sse(s: &mut TcpStream) -> Outcome {
+    let start = Instant::now();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let body_at = loop {
+        if let Some(i) = find(&buf, b"\r\n\r\n") {
+            break i + 4;
+        }
+        match s.read(&mut tmp) {
+            Ok(0) => return Outcome::Failed("eof before response headers".to_string()),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) => return Outcome::Failed(format!("read: {e}")),
+        }
+    };
+    let status = parse_status(&buf[..body_at]);
+    if status != 200 {
+        return Outcome::Rejected { status };
+    }
+    let mut tokens = Vec::new();
+    let mut stamps = Vec::new();
+    let mut done = None;
+    let mut pos = body_at;
+    'read: loop {
+        while let Some(i) = find(&buf[pos..], b"\n\n") {
+            let now = Instant::now();
+            let chunk = &buf[pos..pos + i];
+            match parse_event(chunk) {
+                Event::Token(id) => {
+                    tokens.push(id);
+                    stamps.push(now);
+                }
+                Event::Done { error } => {
+                    done = Some(error);
+                    break 'read;
+                }
+                Event::Other => {}
+            }
+            pos += i + 2;
+        }
+        match s.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) => return Outcome::Failed(format!("read: {e}")),
+        }
+    }
+    finish_outcome(start, tokens, stamps, done)
+}
+
+fn run_raw(addr: &str, spec: &Spec) -> Outcome {
+    let body = request_body(spec);
+    let mut s = match connect(addr) {
+        Ok(s) => s,
+        Err(e) => return Outcome::Failed(e),
+    };
+    let mut req = Vec::with_capacity(8 + body.len());
+    req.extend_from_slice(RAW_MAGIC);
+    req.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    req.extend_from_slice(body.as_bytes());
+    if let Err(e) = s.write_all(&req) {
+        return Outcome::Failed(format!("write: {e}"));
+    }
+    let start = Instant::now();
+    let mut tokens = Vec::new();
+    let mut stamps = Vec::new();
+    loop {
+        let mut len4 = [0u8; 4];
+        if let Err(e) = s.read_exact(&mut len4) {
+            return Outcome::Failed(format!("frame header: {e}"));
+        }
+        // A pool-full connect is answered with an HTTP 503 even on a
+        // raw-protocol socket (the server has not seen the magic yet) —
+        // classify it instead of misreading "HTTP" as a frame length.
+        if &len4 == b"HTTP" {
+            return Outcome::Rejected { status: 503 };
+        }
+        let n = u32::from_le_bytes(len4) as usize;
+        if n > 1 << 20 {
+            return Outcome::Failed(format!("oversized frame ({n} bytes)"));
+        }
+        let mut frame = vec![0u8; n];
+        if let Err(e) = s.read_exact(&mut frame) {
+            return Outcome::Failed(format!("frame body: {e}"));
+        }
+        let now = Instant::now();
+        let decoded = std::str::from_utf8(&frame).ok().and_then(|t| JsonValue::parse(t).ok());
+        let Some(v) = decoded else {
+            return Outcome::Failed("unparseable frame".to_string());
+        };
+        match v.get("type").and_then(JsonValue::as_str) {
+            Some("token" | "done") => {
+                let Some(inner) = v.get("frame") else {
+                    return Outcome::Failed("frame payload missing".to_string());
+                };
+                match event_from_json(inner) {
+                    Event::Token(id) => {
+                        tokens.push(id);
+                        stamps.push(now);
+                    }
+                    Event::Done { error } => {
+                        return finish_outcome(start, tokens, stamps, Some(error));
+                    }
+                    Event::Other => {
+                        return Outcome::Failed("unclassifiable frame".to_string());
+                    }
+                }
+            }
+            Some("error") => {
+                let status = v.get("status").and_then(JsonValue::as_u64).unwrap_or(0) as u16;
+                return Outcome::Rejected { status };
+            }
+            _ => return Outcome::Failed("unknown frame type".to_string()),
+        }
+    }
+}
+
+/// Fold the stream's collected events into an [`Outcome`].
+fn finish_outcome(
+    start: Instant,
+    tokens: Vec<u32>,
+    stamps: Vec<Instant>,
+    done: Option<Option<String>>,
+) -> Outcome {
+    let Some(error) = done else {
+        return Outcome::Failed("stream ended without a done event".to_string());
+    };
+    if let Some(e) = error {
+        return Outcome::Failed(format!("server stream error: {e}"));
+    }
+    if tokens.is_empty() {
+        return Outcome::Failed("done event with no tokens".to_string());
+    }
+    let ttft_us = stamps[0].duration_since(start).as_micros() as u64;
+    let itl_us = stamps.windows(2).map(|w| w[1].duration_since(w[0]).as_micros() as u64).collect();
+    Outcome::Ok { tokens, ttft_us, itl_us }
+}
+
+enum Event {
+    Token(u32),
+    /// Terminal event; payload is the server-reported error, if any.
+    Done { error: Option<String> },
+    Other,
+}
+
+/// One SSE chunk (`event:`/`data:` lines between blank lines); chunks
+/// without a `data:` line (keep-alive comments) classify as Other.
+fn parse_event(chunk: &[u8]) -> Event {
+    let Ok(text) = std::str::from_utf8(chunk) else { return Event::Other };
+    let Some(data) = text.lines().find_map(|l| l.strip_prefix("data: ")) else {
+        return Event::Other;
+    };
+    let Ok(v) = JsonValue::parse(data) else { return Event::Other };
+    event_from_json(&v)
+}
+
+/// Classify a decoded event payload (shared by SSE and raw framing —
+/// the raw protocol nests the same objects under `frame`).
+fn event_from_json(v: &JsonValue) -> Event {
+    if let Some(id) = v.get("id").and_then(JsonValue::as_u64) {
+        return Event::Token(id as u32);
+    }
+    if v.get("finish_reason").is_some() {
+        let error = v.get("error").and_then(JsonValue::as_str).map(str::to_string);
+        return Event::Done { error };
+    }
+    Event::Other
+}
+
+fn parse_status(head: &[u8]) -> u16 {
+    std::str::from_utf8(head)
+        .ok()
+        .and_then(|t| t.split_whitespace().nth(1))
+        .and_then(|code| code.parse().ok())
+        .unwrap_or(0)
+}
+
+/// First byte offset of `needle` in `haystack`.
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn fetch_metrics(addr: &str) -> Result<JsonValue> {
+    let mut s = connect(addr).map_err(anyhow::Error::msg)?;
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: loadgen\r\n\r\n")?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    let body = text.split("\r\n\r\n").nth(1).context("metrics response had no body")?;
+    JsonValue::parse(body).map_err(anyhow::Error::msg)
+}
+
+fn post_drain(addr: &str) -> Result<()> {
+    let mut s = connect(addr).map_err(anyhow::Error::msg)?;
+    s.write_all(b"POST /admin/drain HTTP/1.1\r\nHost: loadgen\r\nContent-Length: 0\r\n\r\n")?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    anyhow::ensure!(text.starts_with("HTTP/1.1 200"), "drain was refused: {text}");
+    Ok(())
+}
+
+/// Pull (prefix_hits, prefix_lookups, counter line) out of a
+/// `/metrics` response body.
+fn summarize_server(metrics: Option<&JsonValue>) -> (u64, u64, String) {
+    let Some(summary) = metrics.and_then(|m| m.get("summary")) else {
+        return (0, 0, "unavailable".to_string());
+    };
+    let g = |k: &str| summary.get(k).and_then(JsonValue::as_u64).unwrap_or(0);
+    let line = format!(
+        "accepted {}, rejected_429 {}, cancelled_by_disconnect {}, drained {}",
+        g("accepted"),
+        g("rejected_429"),
+        g("cancelled_by_disconnect"),
+        g("drained")
+    );
+    (g("prefix_hits"), g("prefix_lookups"), line)
+}
+
+struct Agg {
+    accepted: usize,
+    rejected: usize,
+    rejected_by: Vec<(u16, usize)>,
+    failures: Vec<String>,
+    tokens: usize,
+    ttft_us: Vec<u64>,
+    itl_us: Vec<u64>,
+}
+
+fn aggregate(outcomes: &[Outcome]) -> Agg {
+    let mut agg = Agg {
+        accepted: 0,
+        rejected: 0,
+        rejected_by: Vec::new(),
+        failures: Vec::new(),
+        tokens: 0,
+        ttft_us: Vec::new(),
+        itl_us: Vec::new(),
+    };
+    for o in outcomes {
+        match o {
+            Outcome::Ok { tokens, ttft_us, itl_us } => {
+                agg.accepted += 1;
+                agg.tokens += tokens.len();
+                agg.ttft_us.push(*ttft_us);
+                agg.itl_us.extend_from_slice(itl_us);
+            }
+            Outcome::Rejected { status } => {
+                agg.rejected += 1;
+                match agg.rejected_by.iter_mut().find(|(s, _)| *s == *status) {
+                    Some((_, n)) => *n += 1,
+                    None => agg.rejected_by.push((*status, 1)),
+                }
+            }
+            Outcome::Failed(e) => agg.failures.push(e.clone()),
+        }
+    }
+    agg.ttft_us.sort_unstable();
+    agg.itl_us.sort_unstable();
+    agg
+}
+
+/// Percentile over a sorted sample set (nearest-rank).
+fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let i = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
+/// Rebuild the engine a `serve` process with these flags is running
+/// ([`build_setup`] is shared, flag for flag) and require every
+/// accepted stream's wire tokens to be identical to in-process
+/// decoding — the end-to-end parity gate behind the CI smoke.
+fn verify_inprocess(args: &Args, specs: &[Spec], outcomes: &[Outcome]) -> Result<()> {
+    println!("\nrebuilding the engine in-process to verify wire tokens …");
+    let ServeSetup { kind, .. } = build_setup(args)?;
+    let router = Router::start(
+        RouterConfig {
+            n_workers: 1,
+            max_batch: 4,
+            strategy: Strategy::LeastLoaded,
+            prefix_cache: false,
+        },
+        move |_| Ok(kind.clone()),
+    )?;
+    let mut checked = 0usize;
+    for (i, (spec, o)) in specs.iter().zip(outcomes).enumerate() {
+        let Outcome::Ok { tokens, .. } = o else { continue };
+        let mut params = sampling_params(args, spec.max_new)?;
+        params.seed = spec.seed;
+        let want = router.submit_with(spec.tokens.clone(), params, 0).collect()?.tokens;
+        anyhow::ensure!(
+            *tokens == want,
+            "request {i}: wire tokens diverge from in-process decode ({tokens:?} vs {want:?})"
+        );
+        checked += 1;
+    }
+    router.shutdown();
+    anyhow::ensure!(checked > 0, "--verify-inprocess: no accepted streams to check");
+    println!("verify OK — {checked} streams token-identical to in-process decode");
+    Ok(())
+}

@@ -15,18 +15,18 @@ use anyhow::{Context, Result};
 use bpdq::cli::Args;
 use bpdq::data::{tasks, CorpusConfig, CorpusGen, Tokenizer};
 use bpdq::model::pipeline::quantize_model;
-use bpdq::model::{synthetic_model, ModelConfig};
+use bpdq::model::{synthetic_model, Model, ModelConfig};
 use bpdq::quant::{BpdqConfig, QuantMethod};
 use bpdq::serving::{
     EngineKind, FinishReason, GenEvent, KvFormat, KvGeom, LutModel, Router, RouterConfig,
-    SamplingParams, Strategy,
+    SamplingParams, Server, ServerConfig, Strategy,
 };
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::quantize::{calib_seqs, load_context, parse_method};
 
-fn sampling_params(args: &Args, max_new: usize) -> Result<SamplingParams> {
+pub(crate) fn sampling_params(args: &Args, max_new: usize) -> Result<SamplingParams> {
     let stop_tokens: Vec<u32> = match args.get("stop") {
         None => Vec::new(),
         Some(spec) => spec
@@ -45,7 +45,21 @@ fn sampling_params(args: &Args, max_new: usize) -> Result<SamplingParams> {
     })
 }
 
-pub fn run(args: &Args) -> Result<()> {
+/// Everything the serving entrypoints share: the loaded (or synthetic)
+/// model with its KV format applied, the quantized engine, and the
+/// tokenizer — built from the same flags everywhere, so
+/// `bpdq loadgen --verify-inprocess` can reconstruct the *identical*
+/// engine a `serve --listen` process is running and compare wire tokens
+/// against in-process decoding.
+pub(crate) struct ServeSetup {
+    pub kind: EngineKind,
+    pub model: Arc<Model>,
+    pub tok: Tokenizer,
+    pub engine_name: String,
+    pub prefix_cache: bool,
+}
+
+pub(crate) fn build_setup(args: &Args) -> Result<ServeSetup> {
     // --simd {auto|scalar|avx2|neon}: pin the kernel dispatch tier.
     // Must run before anything touches a kernel — the tier latches on
     // first use. Unknown or host-unsupported tiers fail loudly here;
@@ -56,10 +70,6 @@ pub fn run(args: &Args) -> Result<()> {
     }
     let model_path = args.get_or("model", "artifacts/tiny_small.tlm");
     let engine_name = args.get_or("engine", "lut");
-    let n_requests = args.get_usize("requests", 24).map_err(anyhow::Error::msg)?;
-    let n_workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
-    let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
-    let max_batch = args.get_usize("max-batch", 8).map_err(anyhow::Error::msg)?;
     // --kv-bits {0|2|3|4}: 0 serves f32 KV (the historical layout);
     // 2..4 store the KV cache as packed bit-planes (BPDQ grid) and run
     // the fused-dequant attention kernels. Validated here, loudly.
@@ -85,8 +95,6 @@ pub fn run(args: &Args) -> Result<()> {
         "--kv-bits {kv_bits} is not supported by the pjrt engine (its KV travels as f32 \
          literals) — drop the flag or use --engine lut|native"
     );
-    let params = sampling_params(args, max_new)?;
-
     // A missing checkpoint falls back to synthetic weights (same shape
     // as the trained tiny-LM) so the serving path — and the CI stream
     // smoke — runs without `make artifacts`. A *present but unreadable*
@@ -107,7 +115,6 @@ pub fn run(args: &Args) -> Result<()> {
     let model = if kv_format == KvFormat::F32 { model } else { model.with_kv_format(kv_format) };
     let model = if kv_page == model.kv_page { model } else { model.with_kv_page(kv_page) };
     let model = Arc::new(model);
-    let capacity = model.decode_capacity();
     println!(
         "kv cache: {} — {:.2} MiB/session ({} B/token){}",
         kv_format.label(),
@@ -183,6 +190,17 @@ pub fn run(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown engine `{other}` (native|native-fp16|lut|pjrt)"),
     };
+    Ok(ServeSetup { kind, model, tok, engine_name: engine_name.to_string(), prefix_cache })
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let ServeSetup { kind, model, tok, engine_name, prefix_cache } = build_setup(args)?;
+    let n_requests = args.get_usize("requests", 24).map_err(anyhow::Error::msg)?;
+    let n_workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+    let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 8).map_err(anyhow::Error::msg)?;
+    let params = sampling_params(args, max_new)?;
+    let capacity = model.decode_capacity();
 
     println!("simd kernels: {}", bpdq::tensor::simd::active().label());
     println!("starting router: {n_workers} workers, engine={engine_name}, max_batch={max_batch}");
@@ -190,6 +208,13 @@ pub fn run(args: &Args) -> Result<()> {
         RouterConfig { n_workers, max_batch, strategy: Strategy::LeastLoaded, prefix_cache },
         |_| Ok(kind.clone()),
     )?;
+
+    // --listen: hand the router to the network front door and block
+    // until a drain completes (see `serving::net`). The trace/stream
+    // smoke paths below stay in-process.
+    if let Some(addr) = args.get("listen") {
+        return run_listen(args, addr, router, tok, &model, prefix_cache, params);
+    }
 
     if args.has("stream") {
         stream_smoke(&router, &tok, &params, n_requests, max_new, capacity)?;
@@ -439,4 +464,82 @@ fn print_summary(router: &Router) {
     println!("throughput         : {:.1} tok/s", s.tokens_per_sec);
     println!("simd tier          : {}", s.simd_tier);
     println!("summary json       : {}", s.to_json());
+}
+
+/// `serve --listen <addr>`: serve the router over HTTP/SSE until a
+/// drain (`POST /admin/drain`) completes, then print the summary and
+/// hard-check for leaks — a drained server must hold zero KV arena
+/// slots, and (without a prefix cache, which retains pages by design)
+/// zero KV pages.
+fn run_listen(
+    args: &Args,
+    addr: &str,
+    router: Router,
+    tok: Tokenizer,
+    model: &Model,
+    prefix_cache: bool,
+    params: SamplingParams,
+) -> Result<()> {
+    // --deadline-budget-us N: admission control threshold; absent = off.
+    let deadline_budget_us = match args.get("deadline-budget-us") {
+        Some(_) => {
+            let us = args.get_usize("deadline-budget-us", 0).map_err(anyhow::Error::msg)?;
+            Some(us as u64)
+        }
+        None => None,
+    };
+    let cfg = ServerConfig {
+        max_conns: args.get_usize("max-conns", 64).map_err(anyhow::Error::msg)?,
+        deadline_budget_us,
+        keepalive_ms: args.get_usize("keepalive-ms", 5_000).map_err(anyhow::Error::msg)? as u64,
+        io_timeout_ms: args.get_usize("io-timeout-ms", 30_000).map_err(anyhow::Error::msg)? as u64,
+        tenant_priority: parse_tenants(args.get_or("tenant-priority", ""))?,
+        default_params: params,
+        capacity: model.decode_capacity(),
+        vocab_size: model.cfg.vocab_size as u32,
+    };
+    let router = Arc::new(router);
+    let server = Server::start(addr, router.clone(), Arc::new(tok), cfg)?;
+    println!(
+        "listening on {} (POST /v1/generate streams SSE; POST /admin/drain to stop)",
+        server.local_addr()
+    );
+    // --addr-file: publish the bound address (with the OS-assigned port
+    // when listening on :0) for wire clients like `bpdq loadgen`.
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, server.local_addr().to_string())
+            .with_context(|| format!("writing --addr-file {path}"))?;
+    }
+    server.join()?;
+    println!("\n--- drained: final summary ---");
+    print_summary(&router);
+    let m = router.metrics.summary();
+    anyhow::ensure!(
+        m.arena_slots_in_use == 0,
+        "drain leaked {} KV arena slots",
+        m.arena_slots_in_use
+    );
+    if !prefix_cache {
+        let pages = m.arena_pages_in_use;
+        anyhow::ensure!(pages == 0, "drain leaked {pages} KV pages");
+    }
+    router.shutdown();
+    println!("drain complete — no leaked slots or pages");
+    Ok(())
+}
+
+/// Parse `--tenant-priority "gold=9,free=0"` into the server's map.
+fn parse_tenants(spec: &str) -> Result<Vec<(String, u8)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, prio) = part
+            .split_once('=')
+            .with_context(|| format!("--tenant-priority: `{part}` is not name=priority"))?;
+        let p: u8 = prio
+            .trim()
+            .parse()
+            .with_context(|| format!("--tenant-priority: bad priority in `{part}`"))?;
+        out.push((name.trim().to_string(), p));
+    }
+    Ok(out)
 }

@@ -1,4 +1,11 @@
-//! Tiny JSON writer (reports & metrics only — we never parse JSON).
+//! Tiny JSON writer + parser.
+//!
+//! The writer produces compact reports and metrics; the parser exists
+//! for the serving front door (`serve --listen` request bodies and the
+//! `loadgen` client's SSE/metrics frames). Both are dependency-free.
+//! The parser is defensive by construction: it never panics on
+//! arbitrary input (malformed documents are `Err`), and recursion depth
+//! is capped so adversarial `[[[[…` bodies cannot blow the stack.
 
 use std::fmt::Write;
 
@@ -89,6 +96,12 @@ impl JsonWriter {
         self
     }
 
+    pub fn null(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str("null");
+        self
+    }
+
     fn push_escaped(buf: &mut String, s: &str) {
         buf.push('"');
         for c in s.chars() {
@@ -110,6 +123,292 @@ impl JsonWriter {
     pub fn finish(self) -> String {
         debug_assert!(self.needs_comma.is_empty(), "unbalanced json");
         self.buf
+    }
+}
+
+/// Maximum nesting depth [`JsonValue::parse`] accepts. Request bodies
+/// on the wire are flat objects; anything deeper is hostile input.
+const MAX_JSON_DEPTH: usize = 64;
+
+/// A parsed JSON document. Object members keep their source order
+/// (duplicate keys: first wins via [`JsonValue::get`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse a complete JSON document. Errors carry a byte offset and a
+    /// short reason; the parser never panics, whatever the input.
+    pub fn parse(text: &str) -> Result<JsonValue, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object member lookup (`None` for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric value that is a non-negative integer (fractional or
+    /// out-of-range numbers are `None`, not truncated).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, JsonValue::Null)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.i) {
+            if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.i)
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue, String> {
+        if depth > MAX_JSON_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.b.get(self.i) {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if *c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected byte 0x{c:02x}"))),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(JsonValue::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value(depth + 1)?;
+            members.push((key, v));
+            self.skip_ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Obj(members));
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.i;
+        while let Some(&c) = self.b.get(self.i) {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        // The token alphabet above cannot spell `inf`/`nan`, so a
+        // successful parse that is still non-finite means overflow
+        // (`1e999`) — rejected: JSON has no such value.
+        let tok = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad utf8"))?;
+        match tok.parse::<f64>() {
+            Ok(v) if v.is_finite() => Ok(JsonValue::Num(v)),
+            _ => Err(format!("bad number `{tok}` at byte {start}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.i;
+            // Bulk-copy the unescaped span. `"` and `\` are ASCII, so
+            // the span boundary can never split a multi-byte char.
+            while let Some(&c) = self.b.get(self.i) {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.i += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad utf8"))?,
+            );
+            match self.b.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    self.escape(&mut out)?;
+                }
+                Some(_) => return Err(self.err("raw control byte in string")),
+            }
+        }
+    }
+
+    fn escape(&mut self, out: &mut String) -> Result<(), String> {
+        let c = *self.b.get(self.i).ok_or_else(|| self.err("truncated escape"))?;
+        self.i += 1;
+        match c {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{8}'),
+            b'f' => out.push('\u{c}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let hi = self.hex4()?;
+                let code = if (0xD800..0xDC00).contains(&hi) {
+                    // Surrogate pair: a low surrogate must follow.
+                    if self.b.get(self.i) != Some(&b'\\') || self.b.get(self.i + 1) != Some(&b'u')
+                    {
+                        return Err(self.err("lone high surrogate"));
+                    }
+                    self.i += 2;
+                    let lo = self.hex4()?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(self.err("bad low surrogate"));
+                    }
+                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                } else {
+                    hi
+                };
+                out.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
+            }
+            _ => return Err(self.err("bad escape")),
+        }
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = *self.b.get(self.i).ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = (v << 4) | d;
+            self.i += 1;
+        }
+        Ok(v)
     }
 }
 
@@ -156,5 +455,111 @@ mod tests {
         let mut w = JsonWriter::new();
         w.begin_array().number(f64::INFINITY).end_array();
         assert_eq!(w.finish(), r#"["inf"]"#);
+    }
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(JsonValue::parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(JsonValue::parse("true").unwrap(), JsonValue::Bool(true));
+        assert_eq!(JsonValue::parse(" false ").unwrap(), JsonValue::Bool(false));
+        assert_eq!(JsonValue::parse("-1.5e2").unwrap(), JsonValue::Num(-150.0));
+        assert_eq!(JsonValue::parse(r#""a\nb""#).unwrap(), JsonValue::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_request_shaped_object() {
+        let v = JsonValue::parse(
+            r#"{"prompt":"2+2=","max_new":8,"temperature":0.5,"tokens":[1,2,3],"tenant":"a"}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("prompt").and_then(JsonValue::as_str), Some("2+2="));
+        assert_eq!(v.get("max_new").and_then(JsonValue::as_u64), Some(8));
+        assert_eq!(v.get("temperature").and_then(JsonValue::as_f64), Some(0.5));
+        let arr = v.get("tokens").unwrap().as_array().unwrap();
+        let toks: Vec<u64> = arr.iter().filter_map(|t| t.as_u64()).collect();
+        assert_eq!(toks, vec![1, 2, 3]);
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "{", "}", "[1,", "{\"a\":}", "{\"a\" 1}", "tru", "01x", "1e999", "nan",
+            "\"unterminated", "\"bad \\q escape\"", "\"\\ud800 lone\"", "{}extra", "\u{7}",
+        ] {
+            assert!(JsonValue::parse(bad).is_err(), "accepted malformed: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        assert_eq!(JsonValue::parse(r#""Aé""#).unwrap(), JsonValue::Str("Aé".into()));
+        // Surrogate pair → one astral char.
+        assert_eq!(JsonValue::parse(r#""😀""#).unwrap(), JsonValue::Str("😀".into()));
+    }
+
+    #[test]
+    fn parse_depth_is_capped_not_stack_overflowed() {
+        let deep = "[".repeat(100_000);
+        assert!(JsonValue::parse(&deep).is_err());
+        let nested = format!("{}1{}", "[".repeat(10), "]".repeat(10));
+        assert!(JsonValue::parse(&nested).is_ok());
+    }
+
+    #[test]
+    fn writer_output_roundtrips_through_parser() {
+        let mut w = JsonWriter::new();
+        w.begin_object()
+            .key("name")
+            .string("zipf \"wire\"\n")
+            .key("rows")
+            .begin_array()
+            .int(-3)
+            .number(1.25)
+            .bool(false)
+            .end_array()
+            .key("null_like")
+            .string("null")
+            .end_object();
+        let v = JsonValue::parse(&w.finish()).unwrap();
+        assert_eq!(v.get("name").and_then(JsonValue::as_str), Some("zipf \"wire\"\n"));
+        let rows = v.get("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows[0].as_f64(), Some(-3.0));
+        assert_eq!(rows[1].as_f64(), Some(1.25));
+        assert_eq!(rows[2].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn prop_parser_never_panics_on_arbitrary_bytes() {
+        // The front door feeds attacker-controlled bodies straight into
+        // the parser: any input must produce Ok or Err, never a panic.
+        crate::proptest_lite::check("json_parse_total", |rng| {
+            let len = rng.below(257) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            if let Ok(text) = std::str::from_utf8(&bytes) {
+                let _ = JsonValue::parse(text);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mutated_valid_documents_never_panic() {
+        // Take a valid request body, flip a few bytes, and parse: the
+        // result may be Ok or Err but must never panic. Mutants that
+        // stay valid UTF-8 exercise deep parser states.
+        let base = br#"{"prompt":"2+2=","max_new":8,"tokens":[1,2,3],"t":{"a":[true,null,"x"]}}"#;
+        crate::proptest_lite::check("json_parse_mutated", |rng| {
+            let mut doc = base.to_vec();
+            for _ in 0..(1 + rng.below(4)) {
+                let i = rng.below(doc.len() as u64) as usize;
+                doc[i] = rng.below(256) as u8;
+            }
+            let cut = rng.below(doc.len() as u64 + 1) as usize;
+            if let Ok(text) = std::str::from_utf8(&doc[..cut]) {
+                let _ = JsonValue::parse(text);
+            }
+            Ok(())
+        });
     }
 }

@@ -10,7 +10,10 @@
 //! * `table1` / `table2` / `table3` / `fig1b` / `fig3` — regenerate the
 //!   paper's tables/figures on the synthetic substrate;
 //! * `serve`      — start the serving engine on a quantized checkpoint
-//!   and run a request trace through it;
+//!   and run a request trace through it, or (`--listen`) expose it over
+//!   HTTP/SSE with admission control and graceful drain;
+//! * `loadgen`    — wire-level Zipf load generator against a
+//!   `serve --listen` process, emitting `BENCH_serve_load.json`;
 //! * `selfcheck`  — verify artifacts (vocab sync, HLO loads, kernel
 //!   parity) end to end;
 //! * `lint`       — project-native static analysis: hot-path and
@@ -22,6 +25,7 @@ mod commands {
     pub mod bench_tables;
     pub mod gen_data;
     pub mod lint;
+    pub mod loadgen;
     pub mod quantize;
     pub mod selfcheck;
     pub mod serve;
@@ -45,6 +49,7 @@ fn main() {
         "fig1b" => commands::bench_tables::fig1b(&args),
         "fig3" => commands::bench_tables::fig3(&args),
         "serve" => commands::serve::run(&args),
+        "loadgen" => commands::loadgen::run(&args),
         "selfcheck" => commands::selfcheck::run(&args),
         "lint" => commands::lint::run(&args),
         "help" | "--help" | "-h" => {
@@ -87,6 +92,22 @@ SUBCOMMANDS
              [--stop id,id,...]                streaming scheduler smoke
                                                via --stream (cancels one
                                                request mid-decode)
+             [--prefix-cache] [--kv-page N]   radix prefix cache + paging
+             [--listen host:port] [--addr-file p] [--max-conns N]
+             [--deadline-budget-us N] [--tenant-priority gold=9,free=0]
+             [--keepalive-ms N] [--io-timeout-ms N]
+                                               HTTP/SSE front door: POST
+                                               /v1/generate, GET /healthz,
+                                               GET /metrics, POST
+                                               /admin/drain (+ raw BPQ1
+                                               protocol on the same port)
+  loadgen    --addr host:port | --addr-file p   wire-level Zipf load client
+             [--requests N] [--concurrency C] [--pool P] [--zipf-s S]
+             [--max-new N] [--seed S] [--raw] [--drain] [--name NAME]
+             [--out BENCH_serve_load.json] [--verify-inprocess]
+             [--require-all] [--expect-rejections]
+                                               + the serve model/engine
+                                               flags when verifying
   selfcheck                                       artifact + kernel parity
   lint       [--root rust/src] [--config rust/lint.toml] [--list-rules]
                                                   static analysis (L1..L5):

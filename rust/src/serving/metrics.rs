@@ -78,6 +78,12 @@ struct Inner {
     // Latest prefix-cache snapshot per cache (keyed by `PrefixCache::id`),
     // same latest-wins-per-key / sum-across-keys convention as `arenas`.
     prefixes: HashMap<u64, PrefixStats>,
+    // Front-door admission counters (`serve --listen`): what happened to
+    // wire requests *before* (or instead of) reaching the scheduler.
+    accepted: u64,
+    rejected_429: u64,
+    cancelled_by_disconnect: u64,
+    drained: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -147,6 +153,16 @@ pub struct LatencySummary {
     pub prefix_hits: u64,
     /// prompt tokens skipped at prefill thanks to borrowed prefixes
     pub prefix_hit_tokens: u64,
+    /// wire requests admitted by the front door into the scheduler
+    pub accepted: u64,
+    /// wire requests rejected `429` by admission control (estimated
+    /// queue delay over the deadline budget)
+    pub rejected_429: u64,
+    /// accepted streams cancelled because their client disconnected (or
+    /// stalled past the write timeout) mid-stream
+    pub cancelled_by_disconnect: u64,
+    /// wire requests rejected because the server was draining
+    pub drained: u64,
     /// active SIMD dispatch tier label (`"scalar"` / `"avx2"` / `"neon"`)
     pub simd_tier: &'static str,
 }
@@ -208,6 +224,14 @@ impl LatencySummary {
             .int(self.prefix_hits as i64)
             .key("prefix_hit_tokens")
             .int(self.prefix_hit_tokens as i64)
+            .key("accepted")
+            .int(self.accepted as i64)
+            .key("rejected_429")
+            .int(self.rejected_429 as i64)
+            .key("cancelled_by_disconnect")
+            .int(self.cancelled_by_disconnect as i64)
+            .key("drained")
+            .int(self.drained as i64)
             .key("simd_tier")
             .string(self.simd_tier)
             .end_object();
@@ -279,6 +303,43 @@ impl Metrics {
         m.prefixes.insert(cache_id, s);
     }
 
+    /// Front door: a wire request passed admission and was submitted.
+    pub fn record_accepted(&self) {
+        self.inner.lock().unwrap().accepted += 1;
+    }
+
+    /// Front door: a wire request was rejected `429` by admission
+    /// control.
+    pub fn record_rejected_429(&self) {
+        self.inner.lock().unwrap().rejected_429 += 1;
+    }
+
+    /// Front door: an accepted stream was cancelled because its client
+    /// disconnected (write failure / stalled socket).
+    pub fn record_disconnect(&self) {
+        self.inner.lock().unwrap().cancelled_by_disconnect += 1;
+    }
+
+    /// Front door: a wire request was turned away because the server is
+    /// draining.
+    pub fn record_drained(&self) {
+        self.inner.lock().unwrap().drained += 1;
+    }
+
+    /// Current p50 inter-token latency in µs over the sample window
+    /// (0 with no samples yet). Cheaper than a full [`Metrics::summary`]
+    /// — admission control reads this on the request path.
+    pub fn itl_p50_us(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        let xs = &m.itl_us.data;
+        if xs.is_empty() {
+            return 0;
+        }
+        let mut s = xs.clone();
+        s.sort_unstable();
+        s[(s.len() / 2).min(s.len() - 1)]
+    }
+
     pub fn summary(&self) -> LatencySummary {
         let m = self.inner.lock().unwrap();
         let pct = |xs: &[u64], p: f64| -> u64 {
@@ -333,6 +394,10 @@ impl Metrics {
             prefix_lookups: m.prefixes.values().map(|p| p.lookups).sum(),
             prefix_hits: m.prefixes.values().map(|p| p.hits).sum(),
             prefix_hit_tokens: m.prefixes.values().map(|p| p.hit_tokens).sum(),
+            accepted: m.accepted,
+            rejected_429: m.rejected_429,
+            cancelled_by_disconnect: m.cancelled_by_disconnect,
+            drained: m.drained,
             simd_tier: crate::tensor::simd::active().label(),
         }
     }
@@ -412,13 +477,45 @@ mod tests {
             "prefix_lookups",
             "prefix_hits",
             "prefix_hit_tokens",
+            "accepted",
+            "rejected_429",
+            "cancelled_by_disconnect",
+            "drained",
             "simd_tier",
         ] {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
-        // 26 quoted keys plus the one quoted value (`simd_tier` — every
+        // 30 quoted keys plus the one quoted value (`simd_tier` — every
         // other field is numeric and must serialize unquoted).
-        assert_eq!(json.matches('"').count(), 2 * 26 + 2, "non-numeric value leaked into {json}");
+        assert_eq!(json.matches('"').count(), 2 * 30 + 2, "non-numeric value leaked into {json}");
+    }
+
+    #[test]
+    fn admission_counters_accumulate_and_serialize() {
+        let m = Metrics::new();
+        m.record_accepted();
+        m.record_accepted();
+        m.record_rejected_429();
+        m.record_disconnect();
+        m.record_drained();
+        m.record_drained();
+        let s = m.summary();
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.rejected_429, 1);
+        assert_eq!(s.cancelled_by_disconnect, 1);
+        assert_eq!(s.drained, 2);
+        let json = s.to_json();
+        assert!(json.contains("\"rejected_429\":1"), "{json}");
+        assert!(json.contains("\"drained\":2"), "{json}");
+    }
+
+    #[test]
+    fn itl_p50_accessor_matches_summary() {
+        let m = Metrics::new();
+        assert_eq!(m.itl_p50_us(), 0, "no samples yet");
+        m.record_retired(FinishReason::Length, 1, Some(10), &[30, 10, 20], 4, 60);
+        assert_eq!(m.itl_p50_us(), m.summary().p50_itl_us);
+        assert_eq!(m.itl_p50_us(), 20);
     }
 
     #[test]

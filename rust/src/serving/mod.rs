@@ -135,6 +135,52 @@
 //!   ([`kv::KvArena::set_reclaimer`]): cache memory yields to live
 //!   sessions automatically, loudly panicking only when truly out.
 //!
+//! ## Front door
+//!
+//! `serve --listen <addr>` ([`net::Server`]) exposes the stack over
+//! plain HTTP/1.1, one request per connection (`Connection: close`):
+//!
+//! * `POST /v1/generate` — JSON body, streamed SSE response. The body
+//!   carries `prompt` (string) **or** `tokens` (id array), plus any of
+//!   `max_new`, `temperature`, `top_k`, `top_p`, `seed`, `stop` (id
+//!   array), `priority` (0–255) or `tenant` (mapped to a priority via
+//!   `--tenant-priority`). Token events are
+//!   `event: token` / `data: {"id":N,"logprob":F}`; the single terminal
+//!   event is `event: done` /
+//!   `data: {"finish_reason":"length|stop|cancelled|error","usage":{…},"error":null|"msg"}`
+//!   where `usage` carries `prompt_tokens`, `completion_tokens`,
+//!   `queue_us`, `ttft_us`, `total_us`. Silent stretches emit
+//!   `: keep-alive` comment frames.
+//! * Errors are JSON bodies `{"error":"…"}` with the obvious statuses:
+//!   `400` malformed/oversized-field body, `413`/`414`/`431` wire caps,
+//!   `429` admission rejection (with a `Retry-After` header and
+//!   `estimated_queue_delay_us`/`deadline_budget_us` in the body),
+//!   `503` draining or connection pool full.
+//! * **Admission control** (`--deadline-budget-us`): the front door
+//!   estimates queue delay as `Router::queue_depth × ITL p50` (floored
+//!   at 50µs) and rejects `429` rather than queue past the budget.
+//! * **Backpressure**: a client that disconnects (or stalls past the
+//!   socket write timeout) fails its next frame write; the stream is
+//!   cancelled, the scheduler retires the session at the next sweep
+//!   boundary, and its KV-arena slot is released.
+//! * **Drain**: `POST /admin/drain` (idempotent) flips reject-new;
+//!   in-flight streams finish, then the accept loop exits and
+//!   `serve --listen` prints the final summary and exits 0.
+//! * `GET /healthz` — `200 {"status":"ok",…}`, or `503` with
+//!   `"degraded"` (+ `worker_errors`) / `"draining"`.
+//! * `GET /metrics` — the live [`LatencySummary`] JSON (arena, prefix
+//!   cache, admission counters) plus the instantaneous `queue_depth`.
+//! * Raw fallback: a connection whose first 4 bytes are `BPQ1` speaks
+//!   length-prefixed frames (`u32-le len + JSON`) instead of HTTP — one
+//!   request frame in, `{"type":"token"|"done"|"error",…}` frames out
+//!   (`bpdq loadgen --raw`).
+//!
+//! ```text
+//! curl -N -X POST http://127.0.0.1:8080/v1/generate \
+//!      -H 'Content-Type: application/json' \
+//!      -d '{"prompt":"2+2=","max_new":8,"tenant":"gold"}'
+//! ```
+//!
 //! ## Static analysis
 //!
 //! The serving stack's performance and soundness invariants are
@@ -169,6 +215,7 @@ pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod net;
 pub mod prefix;
 pub mod router;
 pub(crate) mod scheduler;
@@ -177,6 +224,7 @@ pub use batcher::{Pending, SubmitQueue};
 pub use engine::{Engine, EngineKind, LutModel};
 pub use kv::{ArenaStats, KvArena, KvFormat, KvGeom, KvHandle, KvView, KvViewMut};
 pub use metrics::{LatencySummary, Metrics};
+pub use net::{Server, ServerConfig};
 pub use prefix::{PrefixCache, PrefixStats};
 pub use router::{GenStream, Router, RouterConfig, Strategy};
 

@@ -1,0 +1,332 @@
+//! Minimal HTTP/1.1 request parsing and response writing for the front
+//! door (`serve --listen`).
+//!
+//! This is deliberately not a general HTTP implementation: it parses
+//! exactly the subset a generate/health/metrics endpoint needs — one
+//! request per connection (`Connection: close` semantics), a
+//! `Content-Length` body, no chunked transfer encoding (rejected `501`)
+//! — and is **defensive by construction**. Every malformed, truncated,
+//! or oversized input maps to a 4xx [`HttpError`]; no input may panic
+//! (the connection threads run under the lint L3 discipline, and a
+//! panic would tear down a connection slot without accounting). Hard
+//! caps bound the request line, header block, and body so a hostile
+//! peer cannot balloon memory.
+
+use std::io::{BufRead, Write};
+
+/// Cap on the request line (`METHOD SP TARGET SP VERSION`).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Cap on the number of header fields.
+pub const MAX_HEADER_COUNT: usize = 64;
+/// Cap on the cumulative header-block bytes.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on the declared `Content-Length` body size.
+pub const MAX_BODY_BYTES: usize = 256 * 1024;
+
+/// A request-level failure: the HTTP status to answer with plus a short
+/// human-readable reason (returned as the JSON error body).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, msg: impl Into<String>) -> Self {
+        Self { status, msg: msg.into() }
+    }
+}
+
+/// A parsed request. Header names are lowercased at parse time; values
+/// keep their bytes (trimmed of surrounding whitespace).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first occurrence wins).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == lower).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one line terminated by `\n` (a trailing `\r` is stripped),
+/// bounded by `cap` bytes. EOF mid-line is a truncated request (400);
+/// exceeding the cap maps to `over_status` (414 for the request line,
+/// 431 for headers).
+fn read_line<R: BufRead>(r: &mut R, cap: usize, over_status: u16) -> Result<String, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => return Err(HttpError::new(400, "truncated request")),
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                if line.len() >= cap {
+                    return Err(HttpError::new(over_status, "line too long"));
+                }
+                line.push(byte[0]);
+            }
+            Err(e) => return Err(HttpError::new(400, format!("read failed: {e}"))),
+        }
+    }
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line).map_err(|_| HttpError::new(400, "non-utf8 bytes in header section"))
+}
+
+/// Parse one request from the stream. On `Err`, the caller answers with
+/// the embedded status and closes — partial reads leave the connection
+/// in an unknown state and this server is `Connection: close` anyway.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, HttpError> {
+    let request_line = read_line(r, MAX_REQUEST_LINE, 414)?;
+    let parts: Vec<&str> = request_line.split_whitespace().collect();
+    if parts.len() != 3 {
+        return Err(HttpError::new(400, "malformed request line"));
+    }
+    let (method, target, version) = (parts[0].to_string(), parts[1].to_string(), parts[2]);
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, "malformed method"));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(400, "unsupported HTTP version"));
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let line = read_line(r, MAX_HEADER_BYTES, 431)?;
+        if line.is_empty() {
+            break;
+        }
+        header_bytes += line.len();
+        if headers.len() >= MAX_HEADER_COUNT || header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::new(431, "header block too large"));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::new(400, "malformed header (no colon)"));
+        };
+        let name = name.trim();
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::new(400, "malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = Request { method, target, headers, body: Vec::new() };
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::new(501, "transfer-encoding not supported"));
+        }
+    }
+    if let Some(cl) = req.header("content-length") {
+        let n: usize = cl.parse().map_err(|_| HttpError::new(400, "malformed content-length"))?;
+        if n > MAX_BODY_BYTES {
+            return Err(HttpError::new(413, "body too large"));
+        }
+        let mut body = vec![0u8; n];
+        let mut filled = 0usize;
+        while filled < n {
+            match r.read(&mut body[filled..]) {
+                Ok(0) => return Err(HttpError::new(400, "truncated body")),
+                Ok(k) => filled += k,
+                Err(e) => return Err(HttpError::new(400, format!("body read failed: {e}"))),
+            }
+        }
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete JSON response (status line, headers, body). `extra`
+/// headers ride along (e.g. `Retry-After`). Write failures bubble up so
+/// the caller can account a client disconnect.
+pub fn write_json<W: Write>(
+    w: &mut W,
+    status: u16,
+    json: &str,
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n",
+        reason(status),
+        json.len(),
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(json.as_bytes())?;
+    w.flush()
+}
+
+/// Write a JSON error body `{"error": msg}` with the given status.
+pub fn write_json_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    msg: &str,
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
+    let mut jw = crate::io::json::JsonWriter::new();
+    jw.begin_object().key("error").string(msg).end_object();
+    write_json(w, status, &jw.finish(), extra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody";
+        let req = parse(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn parses_get_without_body_and_bare_lf() {
+        // Bare-LF line endings are tolerated (curl never sends them, but
+        // hand-rolled clients do).
+        let req = parse(b"GET /healthz HTTP/1.1\nHost: x\n\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive() {
+        let req = parse(b"GET / HTTP/1.1\r\nX-Tenant:  alice \r\n\r\n").unwrap();
+        assert_eq!(req.header("x-tenant"), Some("alice"));
+        assert_eq!(req.header("X-TENANT"), Some("alice"));
+    }
+
+    #[test]
+    fn malformed_inputs_map_to_4xx() {
+        let cases: &[(&[u8], u16)] = &[
+            (b"", 400),                                            // empty
+            (b"GET\r\n\r\n", 400),                                 // no target
+            (b"GET / HTTP/1.1 extra\r\n\r\n", 400),                // 4 tokens
+            (b"get / HTTP/1.1\r\n\r\n", 400),                      // lowercase method
+            (b"GET / SPDY/3\r\n\r\n", 400),                        // bad version
+            (b"GET / HTTP/1.1\r\nno-colon\r\n\r\n", 400),          // colonless header
+            (b"GET / HTTP/1.1\r\n: empty\r\n\r\n", 400),           // empty name
+            (b"GET / HTTP/1.1\r\nContent-Length: x\r\n\r\n", 400), // bad length
+            (b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nab", 400), // truncated body
+            (b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+            (b"GET / HTTP/1.1\r\nHost: x", 400),                   // truncated headers
+        ];
+        for (raw, want) in cases {
+            let err = parse(raw).expect_err("must reject");
+            assert_eq!(err.status, *want, "input {:?} -> {err:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn oversized_inputs_are_capped() {
+        let long_line = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE + 10));
+        assert_eq!(parse(long_line.as_bytes()).unwrap_err().status, 414);
+
+        let mut many_headers = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADER_COUNT + 5) {
+            many_headers.push_str(&format!("h{i}: v\r\n"));
+        }
+        many_headers.push_str("\r\n");
+        assert_eq!(parse(many_headers.as_bytes()).unwrap_err().status, 431);
+
+        let fat_header =
+            format!("GET / HTTP/1.1\r\nbig: {}\r\n\r\n", "x".repeat(MAX_HEADER_BYTES + 10));
+        assert_eq!(parse(fat_header.as_bytes()).unwrap_err().status, 431);
+
+        let big_body = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert_eq!(parse(big_body.as_bytes()).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn write_json_emits_complete_response() {
+        let mut out = Vec::new();
+        write_json(&mut out, 429, r#"{"error":"overloaded"}"#, &[("Retry-After", "2".into())])
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 22\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"error\":\"overloaded\"}"), "{text}");
+    }
+
+    #[test]
+    fn prop_arbitrary_bytes_never_panic() {
+        // Satellite: the parser is total — random garbage at the socket
+        // yields Ok or a 4xx/5xx HttpError, never a panic.
+        crate::proptest_lite::check("http_parse_total", |rng| {
+            let len = rng.below(512) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            match read_request(&mut Cursor::new(bytes)) {
+                Ok(_) => Ok(()),
+                Err(e) if (400..=599).contains(&e.status) => Ok(()),
+                Err(e) => Err(format!("non-4xx/5xx error status {}", e.status)),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mutated_valid_requests_never_panic() {
+        // Mutate/truncate a well-formed request: deeper parser states
+        // than pure garbage reaches, same totality requirement.
+        let base: &[u8] =
+            b"POST /v1/generate HTTP/1.1\r\nHost: bpdq\r\nContent-Type: application/json\r\n\
+              Content-Length: 17\r\n\r\n{\"prompt\":\"2+2=\"}";
+        crate::proptest_lite::check("http_parse_mutated", |rng| {
+            let mut doc = base.to_vec();
+            for _ in 0..(1 + rng.below(4)) {
+                let i = rng.below(doc.len() as u64) as usize;
+                doc[i] = rng.below(256) as u8;
+            }
+            let cut = rng.below(doc.len() as u64 + 1) as usize;
+            doc.truncate(cut);
+            match read_request(&mut Cursor::new(doc)) {
+                Ok(_) => Ok(()),
+                Err(e) if (400..=599).contains(&e.status) => Ok(()),
+                Err(e) => Err(format!("non-4xx/5xx error status {}", e.status)),
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! The network front door: a dependency-free HTTP/1.1 + SSE layer over
+//! the in-process serving stack.
+//!
+//! [`http`] is the defensive wire parser/writer (hard caps, total — no
+//! input panics); [`server`] is the accept loop, routes, admission
+//! control, and stream pumps. See the `## Front door` section of
+//! [`crate::serving`] for the wire contract (endpoints, SSE event
+//! schema, error shapes, drain semantics).
+
+pub mod http;
+pub mod server;
+
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,1053 @@
+//! The HTTP/1.1 + SSE front door over [`Router::submit_with`].
+//!
+//! One accept loop (bounded thread-per-connection pool) serves four
+//! routes — `POST /v1/generate` (SSE token stream), `GET /healthz`,
+//! `GET /metrics`, `POST /admin/drain` — plus a length-prefixed
+//! raw-socket fallback for dependency-free clients (first four bytes
+//! `BPQ1`). See the `## Front door` section of [`crate::serving`] for
+//! the wire format and drain semantics.
+//!
+//! Design rules:
+//!
+//! * **Backpressure is cancellation.** A client that disconnects or
+//!   stalls past the socket write timeout fails the next frame write;
+//!   the pump cancels the stream, the scheduler retires the session at
+//!   the next sweep boundary, and its arena slot is released. The
+//!   counter is `cancelled_by_disconnect`.
+//! * **Admission control is early rejection.** With a deadline budget
+//!   configured, a request whose estimated queue delay
+//!   (`Router::queue_depth` × observed ITL p50, floored at
+//!   [`ITL_FLOOR_US`]) exceeds the budget is answered `429` +
+//!   `Retry-After` before it ever touches a queue.
+//! * **Drain is reject-new, finish-in-flight.** `POST /admin/drain`
+//!   (or [`Server::drain`]) flips one flag: new generate requests get
+//!   `503`, live streams run to completion, then the accept loop joins
+//!   its connection threads and [`Server::join`] returns.
+
+use super::http::{self, HttpError, Request};
+use crate::data::Tokenizer;
+use crate::io::json::{JsonValue, JsonWriter};
+use crate::serving::{FinishReason, GenEvent, GenStream, Router, SamplingParams, Usage};
+use anyhow::Result;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Admission control's lower bound on the per-token latency estimate,
+/// in µs. Before any traffic has retired there are no ITL samples; a
+/// floor keeps `queue depth × ITL` meaningful on a cold server instead
+/// of estimating zero delay for an arbitrarily deep queue.
+pub const ITL_FLOOR_US: u64 = 50;
+
+/// Magic prefix selecting the length-prefixed raw protocol. Chosen to
+/// collide with no HTTP method.
+pub const RAW_MAGIC: &[u8; 4] = b"BPQ1";
+
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Maximum concurrent connections; excess connects are answered
+    /// `503` immediately (never queued — queueing belongs to the
+    /// scheduler, where it is measurable).
+    pub max_conns: usize,
+    /// Admission deadline budget in µs: reject `429` when the estimated
+    /// queue delay exceeds this. `None` disables admission control.
+    pub deadline_budget_us: Option<u64>,
+    /// SSE keep-alive interval: a comment frame is written whenever no
+    /// event arrives for this long, bounding how stale a silent
+    /// connection can get (and detecting dead clients).
+    pub keepalive_ms: u64,
+    /// Socket read/write timeout — a stalled client fails its next
+    /// frame write instead of pinning a connection slot forever.
+    pub io_timeout_ms: u64,
+    /// `tenant → priority` map for requests that carry a `tenant` field
+    /// (an explicit `priority` field wins). Unknown tenants get 0.
+    pub tenant_priority: Vec<(String, u8)>,
+    /// Server-side sampling defaults; request bodies override per field.
+    pub default_params: SamplingParams,
+    /// Model decode capacity: `len(tokens) + max_new` above this is a
+    /// `400` (the scheduler would truncate at capacity otherwise).
+    pub capacity: usize,
+    /// Vocabulary bound for raw `tokens` bodies — out-of-range ids are
+    /// a `400`, never an engine panic.
+    pub vocab_size: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            deadline_budget_us: None,
+            keepalive_ms: 5_000,
+            io_timeout_ms: 30_000,
+            tenant_priority: Vec::new(),
+            default_params: SamplingParams::default(),
+            capacity: 256,
+            vocab_size: u32::MAX,
+        }
+    }
+}
+
+/// Shared connection-thread context.
+struct Ctx {
+    router: Arc<Router>,
+    tok: Arc<Tokenizer>,
+    cfg: ServerConfig,
+    draining: AtomicBool,
+    /// Cached ITL p50 for admission (µs), refreshed every few
+    /// admissions so the estimate tracks live traffic without sorting
+    /// the sample window on every request.
+    itl_cache_us: AtomicU64,
+    admissions: AtomicU64,
+}
+
+/// A live front door. Bind with [`Server::start`]; [`Server::join`]
+/// blocks until a drain completes (there is no other clean exit — kill
+/// the process for an unclean one).
+pub struct Server {
+    local_addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an OS-assigned port) and
+    /// start the accept loop.
+    pub fn start(
+        addr: &str,
+        router: Arc<Router>,
+        tok: Arc<Tokenizer>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot listen on {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        // Non-blocking accept so the loop can poll the drain flag.
+        listener.set_nonblocking(true)?;
+        let ctx = Arc::new(Ctx {
+            router,
+            tok,
+            cfg,
+            draining: AtomicBool::new(false),
+            itl_cache_us: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
+        });
+        let ctx2 = ctx.clone();
+        let accept = std::thread::spawn(move || accept_sweep(listener, ctx2));
+        Ok(Server { local_addr, ctx, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Flip to reject-new (idempotent; also reachable over the wire via
+    /// `POST /admin/drain`). In-flight streams finish.
+    pub fn drain(&self) {
+        self.ctx.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.ctx.draining.load(Ordering::Acquire)
+    }
+
+    /// Block until the drain completes: every in-flight connection has
+    /// finished and the accept loop has exited.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// The connection sweep: accept, bound the pool, dispatch connection
+/// threads, and — once draining — wait for them and exit. Like the
+/// scheduler sweep, a panic here would strand every client, so the
+/// lint gate holds it to the no-panic/no-lock discipline.
+// lint: sweep
+fn accept_sweep(listener: TcpListener, ctx: Arc<Ctx>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        conns.retain(|h| !h.is_finished());
+        if ctx.draining.load(Ordering::Acquire) && conns.is_empty() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if conns.len() >= ctx.cfg.max_conns {
+                    reject_conn(stream);
+                    continue;
+                }
+                let c = ctx.clone();
+                conns.push(std::thread::spawn(move || handle_conn(stream, &c)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Answer a pool-full connect with an immediate `503` and close.
+fn reject_conn(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = http::write_json_error(&mut stream, 503, "connection pool full", &[]);
+}
+
+/// Sniff the first 4 bytes without consuming: raw-protocol magic routes
+/// to the frame handler, anything else is HTTP. `Ok(false)` = EOF.
+fn peek_exact(stream: &TcpStream, buf: &mut [u8]) -> std::io::Result<bool> {
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        let n = stream.peek(buf)?;
+        if n == 0 {
+            return Ok(false);
+        }
+        if n >= buf.len() || Instant::now() > deadline {
+            return Ok(n >= buf.len());
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: &Ctx) {
+    let io_timeout = Duration::from_millis(ctx.cfg.io_timeout_ms.max(1));
+    let _ = stream.set_read_timeout(Some(io_timeout));
+    let _ = stream.set_write_timeout(Some(io_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut magic = [0u8; 4];
+    match peek_exact(&stream, &mut magic) {
+        Ok(true) if magic == *RAW_MAGIC => {
+            handle_raw(stream, ctx);
+            return;
+        }
+        Ok(_) => {}
+        Err(_) => return,
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    match http::read_request(&mut reader) {
+        Ok(req) => route(req, &mut writer, ctx),
+        Err(e) => {
+            let _ = http::write_json_error(&mut writer, e.status, &e.msg, &[]);
+        }
+    }
+}
+
+fn route(req: Request, w: &mut TcpStream, ctx: &Ctx) {
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/healthz") => healthz(w, ctx),
+        ("GET", "/metrics") => metrics_endpoint(w, ctx),
+        ("POST", "/admin/drain") => {
+            ctx.draining.store(true, Ordering::Release);
+            let _ = http::write_json(w, 200, r#"{"status":"draining"}"#, &[]);
+        }
+        ("POST", "/v1/generate") => generate_http(&req, w, ctx),
+        ("GET" | "POST", _) => {
+            let known = ["/healthz", "/metrics", "/admin/drain", "/v1/generate"];
+            let status = if known.contains(&req.target.as_str()) { 405 } else { 404 };
+            let _ = http::write_json_error(w, status, http::reason(status), &[]);
+        }
+        _ => {
+            let _ = http::write_json_error(w, 405, "method not allowed", &[]);
+        }
+    }
+}
+
+/// `GET /healthz`: `200 ok` when every worker is alive and the server
+/// is accepting; `503 degraded` when any worker died (its error list
+/// rides along so clients see the cause before they see hangs);
+/// `503 draining` during a drain.
+fn healthz(w: &mut TcpStream, ctx: &Ctx) {
+    let errors = ctx.router.worker_errors();
+    let draining = ctx.draining.load(Ordering::Acquire);
+    let (status, label) = if !errors.is_empty() {
+        (503, "degraded")
+    } else if draining {
+        (503, "draining")
+    } else {
+        (200, "ok")
+    };
+    let mut jw = JsonWriter::new();
+    jw.begin_object()
+        .key("status")
+        .string(label)
+        .key("draining")
+        .bool(draining)
+        .key("workers")
+        .int(ctx.router.n_workers() as i64)
+        .key("queue_depth")
+        .int(ctx.router.queue_depth() as i64)
+        .key("worker_errors")
+        .begin_array();
+    for e in &errors {
+        jw.string(e);
+    }
+    jw.end_array().end_object();
+    let _ = http::write_json(w, status, &jw.finish(), &[]);
+}
+
+/// `GET /metrics`: the live [`crate::serving::LatencySummary`] (arena,
+/// prefix-cache, page, and admission counters included) plus the
+/// instantaneous queue depth.
+fn metrics_endpoint(w: &mut TcpStream, ctx: &Ctx) {
+    let summary = ctx.router.metrics.summary().to_json();
+    let json = format!(
+        r#"{{"queue_depth":{},"draining":{},"summary":{}}}"#,
+        ctx.router.queue_depth(),
+        ctx.draining.load(Ordering::Acquire),
+        summary,
+    );
+    let _ = http::write_json(w, 200, &json, &[]);
+}
+
+/// A validated generate request.
+struct GenSpec {
+    tokens: Vec<u32>,
+    params: SamplingParams,
+    priority: u8,
+}
+
+/// Admission decision for one generate request.
+enum Admit {
+    Ok,
+    Drain,
+    Reject { est_us: u64, budget_us: u64 },
+}
+
+fn admit(ctx: &Ctx) -> Admit {
+    if ctx.draining.load(Ordering::Acquire) {
+        return Admit::Drain;
+    }
+    let Some(budget_us) = ctx.cfg.deadline_budget_us else { return Admit::Ok };
+    // Refresh the cached ITL p50 every few admissions (sorting the
+    // whole sample window per request would put a O(n log n) pass on
+    // the admission path for no accuracy gain).
+    let n = ctx.admissions.fetch_add(1, Ordering::Relaxed);
+    if n % 8 == 0 {
+        ctx.itl_cache_us.store(ctx.router.metrics.itl_p50_us(), Ordering::Relaxed);
+    }
+    let itl = ctx.itl_cache_us.load(Ordering::Relaxed).max(ITL_FLOOR_US);
+    let est_us = ctx.router.queue_depth() as u64 * itl;
+    if est_us > budget_us {
+        Admit::Reject { est_us, budget_us }
+    } else {
+        Admit::Ok
+    }
+}
+
+/// Parse + validate a generate body against the server's limits.
+fn parse_generate(body: &[u8], ctx: &Ctx) -> Result<GenSpec, HttpError> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| HttpError::new(400, "body is not utf-8"))?;
+    if text.trim().is_empty() {
+        return Err(HttpError::new(400, "empty body (expected a JSON object)"));
+    }
+    let v = JsonValue::parse(text).map_err(|e| HttpError::new(400, format!("bad json: {e}")))?;
+    let bad = |msg: &str| HttpError::new(400, msg);
+
+    let tokens: Vec<u32> = if let Some(t) = v.get("tokens") {
+        let arr = t.as_array().ok_or_else(|| bad("`tokens` must be an array of ids"))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for item in arr {
+            let id = item.as_u64().ok_or_else(|| bad("`tokens` ids must be integers"))?;
+            if id >= ctx.cfg.vocab_size as u64 {
+                return Err(bad("`tokens` id out of vocabulary range"));
+            }
+            out.push(id as u32);
+        }
+        out
+    } else if let Some(p) = v.get("prompt") {
+        let s = p.as_str().ok_or_else(|| bad("`prompt` must be a string"))?;
+        ctx.tok.encode(s)
+    } else {
+        return Err(bad("body needs `prompt` (string) or `tokens` (id array)"));
+    };
+    if tokens.is_empty() {
+        return Err(bad("empty prompt"));
+    }
+
+    let mut params = ctx.cfg.default_params.clone();
+    if let Some(x) = v.get("max_new") {
+        params.max_new = x.as_u64().ok_or_else(|| bad("`max_new` must be an integer"))? as usize;
+    }
+    if let Some(x) = v.get("temperature") {
+        let t = x.as_f64().ok_or_else(|| bad("`temperature` must be a number"))?;
+        if t < 0.0 {
+            return Err(bad("`temperature` must be >= 0"));
+        }
+        params.temperature = t as f32;
+    }
+    if let Some(x) = v.get("top_k") {
+        params.top_k = x.as_u64().ok_or_else(|| bad("`top_k` must be an integer"))? as usize;
+    }
+    if let Some(x) = v.get("top_p") {
+        let p = x.as_f64().ok_or_else(|| bad("`top_p` must be a number"))?;
+        if !(p > 0.0 && p <= 1.0) {
+            return Err(bad("`top_p` must be in (0, 1]"));
+        }
+        params.top_p = p as f32;
+    }
+    if let Some(x) = v.get("seed") {
+        params.seed = x.as_u64().ok_or_else(|| bad("`seed` must be an integer"))?;
+    }
+    if let Some(x) = v.get("stop") {
+        let arr = x.as_array().ok_or_else(|| bad("`stop` must be an array of ids"))?;
+        params.stop_tokens.clear();
+        for item in arr {
+            let id = item.as_u64().ok_or_else(|| bad("`stop` ids must be integers"))?;
+            params.stop_tokens.push(id as u32);
+        }
+    }
+    if tokens.len() + params.max_new > ctx.cfg.capacity {
+        return Err(bad("prompt + max_new exceeds model capacity"));
+    }
+
+    let priority = if let Some(x) = v.get("priority") {
+        let p = x.as_u64().ok_or_else(|| bad("`priority` must be an integer"))?;
+        if p > u8::MAX as u64 {
+            return Err(bad("`priority` must be 0..=255"));
+        }
+        p as u8
+    } else if let Some(t) = v.get("tenant") {
+        let name = t.as_str().ok_or_else(|| bad("`tenant` must be a string"))?;
+        ctx.cfg
+            .tenant_priority
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| *p)
+            .unwrap_or(0)
+    } else {
+        0
+    };
+    Ok(GenSpec { tokens, params, priority })
+}
+
+fn finish_label(finish: FinishReason) -> &'static str {
+    match finish {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Error => "error",
+    }
+}
+
+fn token_json(id: u32, logprob: f32) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_object().key("id").int(id as i64).key("logprob").number(logprob as f64).end_object();
+    w.finish()
+}
+
+fn done_json(finish: FinishReason, usage: &Usage, error: Option<&str>) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_object()
+        .key("finish_reason")
+        .string(finish_label(finish))
+        .key("usage")
+        .begin_object()
+        .key("prompt_tokens")
+        .int(usage.prompt_tokens as i64)
+        .key("completion_tokens")
+        .int(usage.completion_tokens as i64)
+        .key("queue_us")
+        .int(usage.queue_us as i64)
+        .key("ttft_us")
+        .int(usage.ttft_us as i64)
+        .key("total_us")
+        .int(usage.total_us as i64)
+        .end_object()
+        .key("error");
+    match error {
+        Some(e) => w.string(e),
+        None => w.null(),
+    };
+    w.end_object();
+    w.finish()
+}
+
+/// How a stream pump ended.
+#[derive(Debug, PartialEq, Eq)]
+enum Pump {
+    /// Terminal event delivered (whatever the finish reason).
+    Done,
+    /// A frame write failed: the client is gone or stalled past the
+    /// socket timeout. The caller cancels the stream.
+    ClientGone,
+    /// The worker died without a terminal event (thread panic).
+    WorkerDied,
+}
+
+/// Forward a [`GenStream`] as SSE frames. Bounded waits
+/// ([`GenStream::recv_timeout`]) interleave `: keep-alive` comments and
+/// surface worker death; any failed write is the client's disconnect
+/// signal. Shares the scheduler sweep's no-panic discipline: a panic
+/// here would leak the session until its next token send failed.
+// lint: sweep
+fn pump_sse<W: Write>(stream: &GenStream, w: &mut W, keepalive: Duration) -> Pump {
+    loop {
+        match stream.recv_timeout(keepalive) {
+            Ok(GenEvent::Token { id, logprob }) => {
+                let frame = format!("event: token\ndata: {}\n\n", token_json(id, logprob));
+                if w.write_all(frame.as_bytes()).and_then(|_| w.flush()).is_err() {
+                    return Pump::ClientGone;
+                }
+            }
+            Ok(GenEvent::Done { finish_reason, usage, error }) => {
+                let json = done_json(finish_reason, &usage, error.as_deref());
+                let frame = format!("event: done\ndata: {json}\n\n");
+                let _ = w.write_all(frame.as_bytes()).and_then(|_| w.flush());
+                return Pump::Done;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if w.write_all(b": keep-alive\n\n").and_then(|_| w.flush()).is_err() {
+                    return Pump::ClientGone;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let frame = "event: done\ndata: {\"finish_reason\":\"error\",\"usage\":null,\
+                             \"error\":\"worker died mid-stream\"}\n\n";
+                let _ = w.write_all(frame.as_bytes()).and_then(|_| w.flush());
+                return Pump::WorkerDied;
+            }
+        }
+    }
+}
+
+fn generate_http(req: &Request, w: &mut TcpStream, ctx: &Ctx) {
+    let spec = match parse_generate(&req.body, ctx) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = http::write_json_error(w, e.status, &e.msg, &[]);
+            return;
+        }
+    };
+    match admit(ctx) {
+        Admit::Drain => {
+            ctx.router.metrics.record_drained();
+            let _ = http::write_json_error(w, 503, "draining: not accepting new requests", &[]);
+        }
+        Admit::Reject { est_us, budget_us } => {
+            ctx.router.metrics.record_rejected_429();
+            let retry_s = (est_us - budget_us).div_ceil(1_000_000).max(1);
+            let mut jw = JsonWriter::new();
+            jw.begin_object()
+                .key("error")
+                .string("overloaded: estimated queue delay exceeds deadline budget")
+                .key("estimated_queue_delay_us")
+                .int(est_us as i64)
+                .key("deadline_budget_us")
+                .int(budget_us as i64)
+                .end_object();
+            let extra = [("Retry-After", retry_s.to_string())];
+            let _ = http::write_json(w, 429, &jw.finish(), &extra);
+        }
+        Admit::Ok => {
+            ctx.router.metrics.record_accepted();
+            let stream = ctx.router.submit_with(spec.tokens, spec.params, spec.priority);
+            let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                        Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+            if w.write_all(head.as_bytes()).and_then(|_| w.flush()).is_err() {
+                stream.cancel();
+                ctx.router.metrics.record_disconnect();
+                return;
+            }
+            match pump_sse(&stream, w, Duration::from_millis(ctx.cfg.keepalive_ms.max(1))) {
+                Pump::Done | Pump::WorkerDied => {}
+                Pump::ClientGone => {
+                    // Cancel eagerly (dropping the stream would only
+                    // cancel at the next emitted token) and account it.
+                    stream.cancel();
+                    ctx.router.metrics.record_disconnect();
+                }
+            }
+        }
+    }
+}
+
+// ---- length-prefixed raw fallback ---------------------------------------
+
+/// Read one `u32-le length + payload` frame, capped like an HTTP body.
+fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, HttpError> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).map_err(|_| HttpError::new(400, "truncated frame header"))?;
+    let n = u32::from_le_bytes(len4) as usize;
+    if n > http::MAX_BODY_BYTES {
+        return Err(HttpError::new(413, "frame too large"));
+    }
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body).map_err(|_| HttpError::new(400, "truncated frame body"))?;
+    Ok(body)
+}
+
+fn write_frame(w: &mut impl Write, json: &str) -> std::io::Result<()> {
+    w.write_all(&(json.len() as u32).to_le_bytes())?;
+    w.write_all(json.as_bytes())?;
+    w.flush()
+}
+
+fn raw_error_json(status: u16, msg: &str, retry_after_s: Option<u64>) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_object().key("type").string("error").key("status").int(status as i64);
+    w.key("error").string(msg);
+    if let Some(s) = retry_after_s {
+        w.key("retry_after_s").int(s as i64);
+    }
+    w.end_object();
+    w.finish()
+}
+
+/// Forward a [`GenStream`] as raw frames (`{"type":"token",…}` /
+/// `{"type":"done",…}`). Same discipline and outcomes as [`pump_sse`];
+/// timeouts just re-poll (raw clients need no keep-alive comments).
+// lint: sweep
+fn pump_raw<W: Write>(stream: &GenStream, w: &mut W, poll: Duration) -> Pump {
+    loop {
+        match stream.recv_timeout(poll) {
+            Ok(GenEvent::Token { id, logprob }) => {
+                let json = format!("{{\"type\":\"token\",\"frame\":{}}}", token_json(id, logprob));
+                if write_frame(w, &json).is_err() {
+                    return Pump::ClientGone;
+                }
+            }
+            Ok(GenEvent::Done { finish_reason, usage, error }) => {
+                let json = format!(
+                    "{{\"type\":\"done\",\"frame\":{}}}",
+                    done_json(finish_reason, &usage, error.as_deref()),
+                );
+                let _ = write_frame(w, &json);
+                return Pump::Done;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                let _ = write_frame(w, &raw_error_json(500, "worker died mid-stream", None));
+                return Pump::WorkerDied;
+            }
+        }
+    }
+}
+
+/// One generate request per raw connection: magic, then one request
+/// frame in, token/done/error frames out.
+fn handle_raw(mut stream: TcpStream, ctx: &Ctx) {
+    let mut magic = [0u8; 4];
+    if stream.read_exact(&mut magic).is_err() {
+        return;
+    }
+    let body = match read_frame(&mut stream) {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = write_frame(&mut stream, &raw_error_json(e.status, &e.msg, None));
+            return;
+        }
+    };
+    let spec = match parse_generate(&body, ctx) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = write_frame(&mut stream, &raw_error_json(e.status, &e.msg, None));
+            return;
+        }
+    };
+    match admit(ctx) {
+        Admit::Drain => {
+            ctx.router.metrics.record_drained();
+            let json = raw_error_json(503, "draining: not accepting new requests", None);
+            let _ = write_frame(&mut stream, &json);
+        }
+        Admit::Reject { est_us, budget_us } => {
+            ctx.router.metrics.record_rejected_429();
+            let retry_s = (est_us - budget_us).div_ceil(1_000_000).max(1);
+            let json = raw_error_json(
+                429,
+                "overloaded: estimated queue delay exceeds deadline budget",
+                Some(retry_s),
+            );
+            let _ = write_frame(&mut stream, &json);
+        }
+        Admit::Ok => {
+            ctx.router.metrics.record_accepted();
+            let gen = ctx.router.submit_with(spec.tokens, spec.params, spec.priority);
+            let poll = Duration::from_millis(ctx.cfg.keepalive_ms.max(1));
+            if pump_raw(&gen, &mut stream, poll) == Pump::ClientGone {
+                gen.cancel();
+                ctx.router.metrics.record_disconnect();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{synthetic_model, Model, ModelConfig};
+    use crate::serving::{EngineKind, KvFormat, Router, RouterConfig, Strategy};
+    use std::sync::mpsc::channel;
+
+    fn tiny_model(max_seq: usize) -> Arc<Model> {
+        Arc::new(synthetic_model(
+            &ModelConfig {
+                vocab_size: 16,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 24,
+                max_seq,
+                kv_format: KvFormat::F32,
+            },
+            5,
+        ))
+    }
+
+    fn tiny_router(max_seq: usize) -> Arc<Router> {
+        let model = tiny_model(max_seq);
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 1,
+                max_batch: 2,
+                strategy: Strategy::LeastLoaded,
+                prefix_cache: false,
+            },
+            move |_| Ok(EngineKind::Native(model.clone())),
+        )
+        .unwrap();
+        Arc::new(router)
+    }
+
+    fn test_cfg() -> ServerConfig {
+        ServerConfig { capacity: 32, vocab_size: 16, ..Default::default() }
+    }
+
+    fn start(router: Arc<Router>, cfg: ServerConfig) -> Server {
+        Server::start("127.0.0.1:0", router, Arc::new(Tokenizer::new()), cfg).unwrap()
+    }
+
+    /// One-shot HTTP exchange: write `raw`, read to EOF.
+    fn exchange(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+        let raw = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len(),
+        );
+        exchange(addr, &raw)
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    }
+
+    /// Pull the `data:` payloads out of an SSE response body.
+    fn sse_events(text: &str) -> Vec<JsonValue> {
+        text.lines()
+            .filter_map(|l| l.strip_prefix("data: "))
+            .map(|d| JsonValue::parse(d).expect("valid event json"))
+            .collect()
+    }
+
+    #[test]
+    fn http_generate_streams_tokens_identical_to_inprocess() {
+        let router = tiny_router(32);
+        let want = router.submit(vec![1, 2, 3], 3).collect().unwrap().tokens;
+        let server = start(router.clone(), test_cfg());
+        let addr = server.local_addr();
+
+        let text = post(addr, "/v1/generate", r#"{"tokens":[1,2,3],"max_new":3}"#);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: text/event-stream"), "{text}");
+        let events = sse_events(&text);
+        let got: Vec<u32> = events
+            .iter()
+            .filter_map(|e| e.get("id").and_then(JsonValue::as_u64))
+            .map(|id| id as u32)
+            .collect();
+        assert_eq!(got, want, "wire tokens must match in-process submit_with");
+        let done = events.last().expect("done event");
+        assert_eq!(done.get("finish_reason").and_then(JsonValue::as_str), Some("length"));
+        let usage = done.get("usage").expect("usage");
+        assert_eq!(usage.get("completion_tokens").and_then(JsonValue::as_u64), Some(3));
+        assert!(done.get("error").is_some_and(JsonValue::is_null));
+
+        assert!(post(addr, "/admin/drain", "").contains("draining"));
+        server.join().unwrap();
+        let m = router.metrics.summary();
+        assert_eq!(m.accepted, 1);
+        assert_eq!(m.arena_slots_in_use, 0, "no leaked slots at drain");
+        router.shutdown();
+    }
+
+    #[test]
+    fn raw_fallback_streams_identical_tokens() {
+        let router = tiny_router(32);
+        let want = router.submit(vec![4, 5], 4).collect().unwrap().tokens;
+        let server = start(router.clone(), test_cfg());
+
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        s.write_all(RAW_MAGIC).unwrap();
+        let body = br#"{"tokens":[4,5],"max_new":4}"#;
+        s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(body).unwrap();
+        let mut got = Vec::new();
+        loop {
+            let mut len4 = [0u8; 4];
+            s.read_exact(&mut len4).unwrap();
+            let mut frame = vec![0u8; u32::from_le_bytes(len4) as usize];
+            s.read_exact(&mut frame).unwrap();
+            let v = JsonValue::parse(std::str::from_utf8(&frame).unwrap()).unwrap();
+            match v.get("type").and_then(JsonValue::as_str) {
+                Some("token") => {
+                    let id = v.get("frame").and_then(|f| f.get("id")).and_then(JsonValue::as_u64);
+                    got.push(id.unwrap() as u32);
+                }
+                Some("done") => break,
+                other => panic!("unexpected frame type {other:?} in {v:?}"),
+            }
+        }
+        assert_eq!(got, want, "raw-protocol tokens must match in-process submit_with");
+        server.drain();
+        server.join().unwrap();
+        router.shutdown();
+    }
+
+    #[test]
+    fn malformed_bodies_get_4xx_not_a_hung_stream() {
+        let router = tiny_router(32);
+        let server = start(router.clone(), test_cfg());
+        let addr = server.local_addr();
+        for (body, frag) in [
+            ("", "empty body"),
+            ("{", "bad json"),
+            (r#"{"max_new":4}"#, "prompt"),
+            (r#"{"tokens":[]}"#, "empty prompt"),
+            (r#"{"tokens":[99],"max_new":1}"#, "vocabulary"),
+            (r#"{"tokens":[1],"max_new":1000}"#, "capacity"),
+            (r#"{"tokens":[1],"priority":999}"#, "priority"),
+            (r#"{"tokens":"nope"}"#, "array"),
+        ] {
+            let text = post(addr, "/v1/generate", body);
+            assert!(text.starts_with("HTTP/1.1 400 "), "body {body:?} -> {text}");
+            assert!(text.contains(frag), "body {body:?} -> {text}");
+        }
+        // Unknown path and wrong method.
+        assert!(get(addr, "/nope").starts_with("HTTP/1.1 404 "));
+        assert!(get(addr, "/v1/generate").starts_with("HTTP/1.1 405 "));
+        server.drain();
+        server.join().unwrap();
+        let m = router.metrics.summary();
+        assert_eq!(m.accepted, 0, "rejected bodies must never reach the scheduler");
+        router.shutdown();
+    }
+
+    #[test]
+    fn healthz_flips_on_dead_worker() {
+        let healthy = tiny_router(32);
+        let server = start(healthy.clone(), test_cfg());
+        let text = get(server.local_addr(), "/healthz");
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(text.contains(r#""status":"ok""#), "{text}");
+        server.drain();
+        server.join().unwrap();
+        healthy.shutdown();
+
+        let broken = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            |_| anyhow::bail!("synthetic init failure"),
+        )
+        .unwrap();
+        let broken = Arc::new(broken);
+        let t0 = Instant::now();
+        while broken.worker_errors().is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker error never surfaced");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let server = start(broken.clone(), test_cfg());
+        let text = get(server.local_addr(), "/healthz");
+        assert!(text.starts_with("HTTP/1.1 503 "), "{text}");
+        assert!(text.contains(r#""status":"degraded""#), "{text}");
+        assert!(text.contains("synthetic init failure"), "{text}");
+        server.drain();
+        server.join().unwrap();
+        broken.shutdown();
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_summary_json() {
+        let router = tiny_router(32);
+        router.submit(vec![1, 2], 2).collect().unwrap();
+        let server = start(router.clone(), test_cfg());
+        let text = get(server.local_addr(), "/metrics");
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        let body = text.split("\r\n\r\n").nth(1).expect("body");
+        let v = JsonValue::parse(body).expect("metrics json parses");
+        assert_eq!(v.get("queue_depth").and_then(JsonValue::as_u64), Some(0));
+        let summary = v.get("summary").expect("summary");
+        assert_eq!(summary.get("completed").and_then(JsonValue::as_u64), Some(1));
+        assert!(summary.get("accepted").is_some());
+        server.drain();
+        server.join().unwrap();
+        router.shutdown();
+    }
+
+    #[test]
+    fn overload_rejects_429_with_retry_after() {
+        // Budget 0: any estimated queue delay > 0 must reject. A deep
+        // backlog (48 requests × 200 tokens through a single max_batch-2
+        // worker) keeps the queue demonstrably non-empty for the whole
+        // wire exchange, so the test never races the decode speed.
+        let model = Arc::new(synthetic_model(&ModelConfig::tiny_large(16), 5));
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            move |_| Ok(EngineKind::Native(model.clone())),
+        )
+        .unwrap();
+        let router = Arc::new(router);
+        let cfg = ServerConfig { deadline_budget_us: Some(0), ..test_cfg() };
+        let server = start(router.clone(), cfg);
+        let backlog: Vec<GenStream> =
+            (0..48).map(|_| router.submit(vec![1, 2, 3], 200)).collect();
+        let text = post(server.local_addr(), "/v1/generate", r#"{"tokens":[1],"max_new":1}"#);
+        assert!(text.starts_with("HTTP/1.1 429 "), "{text}");
+        assert!(text.contains("Retry-After: "), "{text}");
+        assert!(text.contains("estimated_queue_delay_us"), "{text}");
+        for s in &backlog {
+            s.cancel();
+        }
+        for s in backlog {
+            while s.recv().is_some() {}
+        }
+        server.drain();
+        server.join().unwrap();
+        let m = router.metrics.summary();
+        assert_eq!(m.rejected_429, 1);
+        assert_eq!(m.accepted, 0, "the rejected request must never reach the scheduler");
+        router.shutdown();
+    }
+
+    #[test]
+    fn draining_rejects_new_generates_and_counts_them() {
+        let router = tiny_router(32);
+        let server = start(router.clone(), test_cfg());
+        let addr = server.local_addr();
+        assert!(post(addr, "/admin/drain", "").starts_with("HTTP/1.1 200 OK"));
+        let text = post(addr, "/v1/generate", r#"{"tokens":[1],"max_new":1}"#);
+        assert!(text.starts_with("HTTP/1.1 503 "), "{text}");
+        assert!(text.contains("draining"), "{text}");
+        let health = get(addr, "/healthz");
+        assert!(health.contains(r#""status":"draining""#), "{health}");
+        server.join().unwrap();
+        assert_eq!(router.metrics.summary().drained, 1);
+        router.shutdown();
+    }
+
+    /// Writer that accepts `budget` bytes, then fails like a closed
+    /// socket — the deterministic stand-in for a slow/dead client.
+    struct FailAfter {
+        budget: usize,
+    }
+
+    impl Write for FailAfter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Err(std::io::Error::from(std::io::ErrorKind::BrokenPipe));
+            }
+            let n = buf.len().min(self.budget);
+            self.budget -= n;
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn pump_reports_client_gone_on_write_failure() {
+        let (tx, rx) = channel();
+        let stream = GenStream::new(1, rx, crate::serving::CancelHandle::new());
+        tx.send(GenEvent::Token { id: 3, logprob: -0.1 }).unwrap();
+        let mut w = FailAfter { budget: 4 };
+        assert_eq!(pump_sse(&stream, &mut w, Duration::from_secs(5)), Pump::ClientGone);
+        let mut w = FailAfter { budget: 0 };
+        tx.send(GenEvent::Token { id: 4, logprob: -0.2 }).unwrap();
+        assert_eq!(pump_raw(&stream, &mut w, Duration::from_secs(5)), Pump::ClientGone);
+    }
+
+    #[test]
+    fn pump_reports_worker_death_and_emits_error_event() {
+        let (tx, rx) = channel();
+        let stream = GenStream::new(1, rx, crate::serving::CancelHandle::new());
+        drop(tx); // worker panicked without a terminal event
+        let mut out = Vec::new();
+        assert_eq!(pump_sse(&stream, &mut out, Duration::from_secs(5)), Pump::WorkerDied);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("worker died"), "{text}");
+    }
+
+    #[test]
+    fn pump_interleaves_keepalive_comments() {
+        let (tx, rx) = channel();
+        let stream = GenStream::new(1, rx, crate::serving::CancelHandle::new());
+        let mut out = Vec::new();
+        let pump = std::thread::spawn(move || {
+            let r = pump_sse(&stream, &mut out, Duration::from_millis(5));
+            (r, out)
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let usage = Usage::default();
+        let done = GenEvent::Done { finish_reason: FinishReason::Length, usage, error: None };
+        tx.send(done).unwrap();
+        let (r, out) = pump.join().unwrap();
+        assert_eq!(r, Pump::Done);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains(": keep-alive"), "silent stretch must emit keep-alives: {text}");
+        assert!(text.contains("event: done"), "{text}");
+    }
+
+    #[test]
+    fn tenant_priority_maps_and_explicit_priority_wins() {
+        let router = tiny_router(32);
+        let cfg = ServerConfig {
+            tenant_priority: vec![("gold".into(), 9), ("free".into(), 0)],
+            ..test_cfg()
+        };
+        let ctx = Ctx {
+            router: router.clone(),
+            tok: Arc::new(Tokenizer::new()),
+            cfg,
+            draining: AtomicBool::new(false),
+            itl_cache_us: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
+        };
+        let spec = parse_generate(br#"{"tokens":[1],"tenant":"gold"}"#, &ctx).unwrap();
+        assert_eq!(spec.priority, 9);
+        let spec = parse_generate(br#"{"tokens":[1],"tenant":"unknown"}"#, &ctx).unwrap();
+        assert_eq!(spec.priority, 0);
+        let explicit = br#"{"tokens":[1],"tenant":"free","priority":3}"#;
+        let spec = parse_generate(explicit, &ctx).unwrap();
+        assert_eq!(spec.priority, 3, "explicit priority beats the tenant map");
+        // Sampling fields flow into params; prompt strings tokenize.
+        let body = br#"{"prompt":"2+2=","max_new":4,"temperature":0.5,"seed":7,"stop":[2]}"#;
+        let spec = parse_generate(body, &ctx).unwrap();
+        assert!(!spec.tokens.is_empty());
+        assert_eq!(spec.params.max_new, 4);
+        assert_eq!(spec.params.temperature, 0.5);
+        assert_eq!(spec.params.seed, 7);
+        assert_eq!(spec.params.stop_tokens, vec![2]);
+        router.shutdown();
+    }
+}

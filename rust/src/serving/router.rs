@@ -86,6 +86,19 @@ impl GenStream {
         self.events.try_recv()
     }
 
+    /// Bounded-wait variant of [`GenStream::recv`]: `Err(Timeout)` means
+    /// no event arrived within `timeout` (the stream is still live —
+    /// retry), `Err(Disconnected)` means the worker died without a
+    /// terminal event. The SSE pump uses this to interleave keep-alive
+    /// frames with token events and to detect worker death without
+    /// blocking a connection thread forever.
+    pub fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Result<GenEvent, std::sync::mpsc::RecvTimeoutError> {
+        self.events.recv_timeout(timeout)
+    }
+
     /// Request cancellation: the scheduler retires the session (and
     /// releases its KV slot) at the next sweep boundary, then emits
     /// `Done{finish_reason: Cancelled}`.
@@ -107,7 +120,7 @@ impl GenStream {
 
 pub struct Router {
     queues: Vec<SubmitQueue>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
     rr_next: AtomicU64,
     strategy: Strategy,
     pub metrics: Metrics,
@@ -190,7 +203,7 @@ impl Router {
         }
         Ok(Self {
             queues,
-            workers,
+            workers: Mutex::new(workers),
             rr_next: AtomicU64::new(0),
             strategy: cfg.strategy,
             metrics,
@@ -203,6 +216,20 @@ impl Router {
     /// arrival order.
     pub fn worker_errors(&self) -> Vec<String> {
         self.errors.lock().unwrap().clone()
+    }
+
+    /// Number of worker threads this router was started with (live or
+    /// dead — `worker_errors` distinguishes).
+    pub fn n_workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Total load across the pool: queued requests plus sessions
+    /// in-flight inside sweeps. The front door's admission control
+    /// multiplies this by the observed inter-token latency to estimate
+    /// the queueing delay a new request would inherit.
+    pub fn queue_depth(&self) -> usize {
+        self.queues.iter().map(|q| q.load()).sum()
     }
 
     fn pick_worker(&self) -> usize {
@@ -254,12 +281,15 @@ impl Router {
     }
 
     /// Graceful shutdown: close every queue (queued requests still
-    /// finish), then join the workers.
-    pub fn shutdown(self) {
+    /// finish), then join the workers. Idempotent, and `&self` so the
+    /// front door can drain a `Arc<Router>` shared with connection
+    /// threads (a second call finds the handles already drained).
+    pub fn shutdown(&self) {
         for q in &self.queues {
             q.close();
         }
-        for w in self.workers {
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in handles {
             let _ = w.join();
         }
     }
@@ -659,5 +689,79 @@ mod tests {
             other => panic!("expected Done, got {other:?}"),
         }
         router.shutdown();
+    }
+
+    #[test]
+    fn recv_timeout_times_out_delivers_and_disconnects() {
+        use std::sync::mpsc::{channel, RecvTimeoutError};
+        let (tx, rx) = channel();
+        let s = GenStream::new(1, rx, CancelHandle::new());
+        // Empty + sender alive: bounded wait, then Timeout.
+        let t0 = Instant::now();
+        assert_eq!(
+            s.recv_timeout(Duration::from_millis(20)).unwrap_err(),
+            RecvTimeoutError::Timeout
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        // Queued event: delivered immediately.
+        tx.send(GenEvent::Token { id: 7, logprob: -0.5 }).unwrap();
+        match s.recv_timeout(Duration::from_secs(5)).expect("queued event") {
+            GenEvent::Token { id, .. } => assert_eq!(id, 7),
+            other => panic!("expected Token, got {other:?}"),
+        }
+        // Dropped sender (worker death): Disconnected, not a hang.
+        drop(tx);
+        assert_eq!(
+            s.recv_timeout(Duration::from_secs(5)).unwrap_err(),
+            RecvTimeoutError::Disconnected
+        );
+    }
+
+    #[test]
+    fn recv_timeout_on_live_router_sees_tokens() {
+        let router = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        let s = router.submit(vec![1, 2], 3);
+        let mut tokens = 0;
+        loop {
+            match s.recv_timeout(Duration::from_secs(10)) {
+                Ok(GenEvent::Token { .. }) => tokens += 1,
+                Ok(GenEvent::Done { .. }) => break,
+                Err(e) => panic!("stream died early: {e:?}"),
+            }
+        }
+        assert_eq!(tokens, 3);
+        router.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_counts_queued_and_in_flight() {
+        let router = Router::start(
+            RouterConfig { n_workers: 2, max_batch: 2, ..Default::default() },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        assert_eq!(router.n_workers(), 2);
+        assert_eq!(router.queue_depth(), 0, "idle router has no load");
+        let streams: Vec<_> = (0..6).map(|i| router.submit(vec![i as u32, 1], 4)).collect();
+        // Sampled while requests are queued/in flight, the depth must be
+        // visible (submission itself bumps the queued count).
+        for s in streams {
+            s.collect().unwrap();
+        }
+        assert_eq!(router.queue_depth(), 0, "drained router has no load");
+        router.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_via_shared_ref() {
+        let router = Router::start(RouterConfig::default(), |_| Ok(engine_kind())).unwrap();
+        let router = Arc::new(router);
+        router.submit(vec![1], 2).collect().unwrap();
+        router.shutdown();
+        router.shutdown(); // second call must be a no-op, not a hang
     }
 }

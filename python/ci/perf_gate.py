@@ -35,6 +35,12 @@ TTFT p50 must stay below its cold twin's within ``--hit-ttft-margin``
 means the borrow path regressed, and no historical baseline is needed
 to see it.
 
+Since chunked prefill, the mixed long/short bench section emits paired
+``… chunked`` / ``… unchunked`` rows the same way; the gate requires the
+chunked run's **short-request** TTFT p95 to stay within
+``--chunked-ttft-margin`` of the unchunked run's — short requests must
+not stall behind long prefills once chunking is on.
+
 Since the SIMD dispatch layer, the gate also (optionally) compares the
 per-kernel-family bench ``BENCH_kernels.json`` via ``--kernels-current``
 / ``--kernels-previous``. Kernel rows are keyed by
@@ -81,7 +87,8 @@ def load_rows(path: str) -> dict[str, dict[str, float]]:
         if isinstance(kv_bits, (int, float)) and int(kv_bits) != 0:
             name = f"{name} [kv{int(kv_bits)}]"
         vals: dict[str, float] = {}
-        for key in ("tokens_per_sec", "ttft_p95_us", "ttft_p50_us"):
+        for key in ("tokens_per_sec", "ttft_p95_us", "ttft_p50_us",
+                    "short_ttft_p95_us"):
             v = row.get(key)
             if isinstance(v, (int, float)):
                 vals[key] = float(v)
@@ -252,6 +259,43 @@ def gate_cache_hit(cur: dict[str, dict[str, float]], margin: float,
               f"vs cold {c_cold:.0f} us ({100.0 * (ratio - 1.0):+.1f}%)")
 
 
+def gate_chunked_prefill(cur: dict[str, dict[str, float]], margin: float,
+                         failures: list) -> None:
+    """Within-artifact chunked-vs-unchunked short-TTFT check.
+
+    Pairs every ``… chunked`` row with its ``… unchunked`` twin from the
+    mixed long/short bench section and fails when the chunked run's
+    short-request TTFT p95 exceeds unchunked × (1 + margin) — chunked
+    prefill exists so short requests stay stall-free while long prompts
+    prefill; losing that (or merely matching the stall) is a regression
+    in the thing the feature ships. Needs no previous artifact — both
+    rows come from the same bench run.
+    """
+    for name in sorted(cur):
+        if " chunked" not in name or " unchunked" in name:
+            continue
+        twin_name = name.replace(" chunked", " unchunked")
+        twin = cur.get(twin_name)
+        if twin is None:
+            print(f"[perf-gate] chunked row has no unchunked twin "
+                  f"(not gating): {name}")
+            continue
+        c_chunk = cur[name].get("short_ttft_p95_us", 0.0)
+        c_plain = twin.get("short_ttft_p95_us", 0.0)
+        if c_chunk <= 0.0 or c_plain <= 0.0:
+            print(f"[perf-gate] skipping chunked-TTFT pair (no p95 data): {name}")
+            continue
+        ratio = c_chunk / c_plain
+        marker = "OK "
+        if ratio > 1.0 + margin:
+            marker = "REG"
+            failures.append((name, "chunked_vs_unchunked_short_ttft_p95",
+                             c_plain, c_chunk, ratio))
+        print(f"[perf-gate] {marker} {name}: chunked short TTFT p95 "
+              f"{c_chunk:.0f} us vs unchunked {c_plain:.0f} us "
+              f"({100.0 * (ratio - 1.0):+.1f}%)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_decode.json")
@@ -271,6 +315,10 @@ def main() -> int:
                     help="headroom for the within-run cache-hit TTFT check: "
                          "warm p50 may exceed cold p50 by this fraction "
                          "(0.25 = 25%%)")
+    ap.add_argument("--chunked-ttft-margin", type=float, default=0.25,
+                    help="headroom for the within-run chunked-prefill check: "
+                         "the chunked run's short-request TTFT p95 may exceed "
+                         "the unchunked run's by this fraction (0.25 = 25%%)")
     ap.add_argument("--serve-load-current", action="append", default=[],
                     help="fresh BENCH_serve_*.json (repeatable; paired by "
                          "position with --serve-load-previous)")
@@ -292,6 +340,7 @@ def main() -> int:
         prev = {}
     failures = []
     gate_cache_hit(cur, args.hit_ttft_margin, failures)
+    gate_chunked_prefill(cur, args.chunked_ttft_margin, failures)
     if args.kernels_current and args.kernels_previous:
         gate_kernels(args.kernels_current, args.kernels_previous,
                      args.kernels_threshold, failures)

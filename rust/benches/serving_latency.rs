@@ -101,7 +101,7 @@ fn main() {
                 n_workers: 1,
                 max_batch,
                 strategy: Strategy::LeastLoaded,
-                prefix_cache: false,
+                ..Default::default()
             },
             |_| Ok(kind.clone()),
         )
@@ -224,6 +224,7 @@ fn main() {
                     max_batch: 4,
                     strategy: Strategy::LeastLoaded,
                     prefix_cache: warm,
+                    ..Default::default()
                 },
                 move |_| Ok(kind.clone()),
             )
@@ -333,6 +334,131 @@ fn main() {
                     .end_object();
             });
         }
+    }
+    // ------------------------------------------------------------------
+    // Mixed long/short chunked-prefill section — the TTFT axis of
+    // Sarathi-style scheduling. A bimodal workload (every 4th request
+    // carries a 64-token prompt, the rest 8-token prompts) runs once
+    // through a chunk-1 router and once through a chunked router
+    // (chunk 8 under a 16-token sweep budget, so decodes claim their
+    // tokens first and the long prefills fill the remainder). Both runs
+    // must be token-identical; the rows carry short-request TTFT
+    // percentiles (classified per stream, measured at the first token
+    // event) so the perf gate can require that chunking keeps short
+    // requests stall-free while long prompts prefill.
+    let mixed_reqs = if quick { 12 } else { 24 };
+    let mixed_new = if quick { 4 } else { 8 };
+    let long_prompt: Vec<u32> = (0..64).map(|t| ((t * 3 + 5) % 68) as u32).collect();
+    println!(
+        "\n---- mixed prefill section: {mixed_reqs} requests (every 4th a {}-token prompt, \
+         shorts 8 tokens) ----",
+        long_prompt.len()
+    );
+    let pctl = |sorted: &[u64], q: f64| -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[i.min(sorted.len() - 1)]
+    };
+    let mut unchunked_tokens: Vec<Vec<u32>> = Vec::new();
+    for chunked in [false, true] {
+        let kind = lut_kind.clone();
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 1,
+                max_batch: 8,
+                strategy: Strategy::LeastLoaded,
+                prefill_chunk: if chunked { 8 } else { 1 },
+                sweep_token_budget: if chunked { Some(16) } else { None },
+                ..Default::default()
+            },
+            move |_| Ok(kind.clone()),
+        )
+        .unwrap();
+        let prompts: Vec<Vec<u32>> = (0..mixed_reqs)
+            .map(|i| {
+                if i % 4 == 0 {
+                    long_prompt.clone()
+                } else {
+                    (0..8).map(|t| ((t * 7 + i * 5 + 2) % 68) as u32).collect()
+                }
+            })
+            .collect();
+        let streams: Vec<_> =
+            prompts.iter().map(|p| router.submit(p.clone(), mixed_new)).collect();
+        let mut tokens = Vec::with_capacity(mixed_reqs);
+        let mut short_ttft_us: Vec<u64> = Vec::new();
+        for (i, s) in streams.into_iter().enumerate() {
+            let r = s.collect().unwrap();
+            if i % 4 != 0 {
+                short_ttft_us.push(r.first_token_us);
+            }
+            tokens.push(r.tokens);
+        }
+        short_ttft_us.sort_unstable();
+        let s = router.metrics.summary();
+        router.shutdown();
+        if chunked {
+            assert_eq!(
+                tokens, unchunked_tokens,
+                "mixed prefill: chunked run must be token-identical to chunk 1"
+            );
+        } else {
+            unchunked_tokens = tokens;
+        }
+        let name =
+            if chunked { "mixed prefill chunked" } else { "mixed prefill unchunked" };
+        println!(
+            "{name:<26} TTFT p50 {:>7.2} ms p95 {:>7.2} ms   short TTFT p50 {:>7.2} ms \
+             p95 {:>7.2} ms   prefill {:>7.1} tok/s   {:>7.1} tok/s",
+            s.p50_first_us as f64 / 1e3,
+            s.p95_first_us as f64 / 1e3,
+            pctl(&short_ttft_us, 0.5) as f64 / 1e3,
+            pctl(&short_ttft_us, 0.95) as f64 / 1e3,
+            s.prefill_tokens_per_sec,
+            s.tokens_per_sec,
+        );
+        report.row(|w| {
+            w.begin_object()
+                .key("name")
+                .string(name)
+                .key("max_batch")
+                .int(8)
+                .key("n_heads")
+                .int(qmodel.cfg.n_heads as i64)
+                .key("n_kv_heads")
+                .int(qmodel.cfg.n_kv_heads as i64)
+                .key("kv_bits")
+                .int(0)
+                .key("prefill_chunk")
+                .int(if chunked { 8 } else { 1 })
+                .key("tokens_per_sec")
+                .number(s.tokens_per_sec)
+                .key("us_per_token")
+                .number(s.us_per_token)
+                .key("ttft_p50_us")
+                .int(s.p50_first_us as i64)
+                .key("ttft_p95_us")
+                .int(s.p95_first_us as i64)
+                .key("itl_p50_us")
+                .int(s.p50_itl_us as i64)
+                .key("itl_p95_us")
+                .int(s.p95_itl_us as i64)
+                .key("short_ttft_p50_us")
+                .int(pctl(&short_ttft_us, 0.5) as i64)
+                .key("short_ttft_p95_us")
+                .int(pctl(&short_ttft_us, 0.95) as i64)
+                .key("prefill_p50_us")
+                .int(s.p50_prefill_us as i64)
+                .key("prefill_p95_us")
+                .int(s.p95_prefill_us as i64)
+                .key("prefill_tokens_per_sec")
+                .number(s.prefill_tokens_per_sec)
+                .key("simd_tier")
+                .string(s.simd_tier)
+                .end_object();
+        });
     }
     report.finish();
     println!("\nBENCH serving_latency done");

@@ -61,12 +61,22 @@ pub fn run(args: &Args) -> Result<()> {
     let raw = args.has("raw");
     let out_path = args.get_or("out", "BENCH_serve_load.json").to_string();
     let name = args.get_or("name", "serve_load").to_string();
+    // --prompt-len-dist bimodal: every 4th request carries a long
+    // (~LONG_PROMPT_LEN-token) prompt — the mixed prefill/decode load
+    // chunked prefill exists for. Short-request TTFT is reported
+    // separately so the gate sees whether long prefills stall shorts.
+    let dist = args.get_or("prompt-len-dist", "uniform");
+    let bimodal = match dist {
+        "uniform" => false,
+        "bimodal" => true,
+        other => anyhow::bail!("--prompt-len-dist must be uniform|bimodal, got `{other}`"),
+    };
 
     wait_ready(&addr, Duration::from_secs(15))?;
-    let specs = Arc::new(build_specs(n_requests, pool, zipf_s, max_new, seed));
+    let specs = Arc::new(build_specs(n_requests, pool, zipf_s, max_new, seed, bimodal));
     println!(
         "loadgen: {n_requests} requests over {concurrency} conns to {addr} ({} wire, \
-         zipf s={zipf_s} over {pool} prompts)",
+         zipf s={zipf_s} over {pool} prompts, {dist} lengths)",
         if raw { "raw" } else { "http/sse" }
     );
 
@@ -118,6 +128,27 @@ pub fn run(args: &Args) -> Result<()> {
         pct(&agg.itl_us, 0.5) as f64 / 1e3,
         pct(&agg.itl_us, 0.95) as f64 / 1e3
     );
+    // Short-request TTFT, classified post-hoc by prompt length — under
+    // a bimodal mix this is the stall-free-scheduling signal.
+    let mut short_ttft_us: Vec<u64> = specs
+        .iter()
+        .zip(&outcomes)
+        .filter_map(|(sp, o)| match o {
+            Outcome::Ok { ttft_us, .. } if sp.tokens.len() < LONG_PROMPT_LEN / 2 => {
+                Some(*ttft_us)
+            }
+            _ => None,
+        })
+        .collect();
+    short_ttft_us.sort_unstable();
+    if bimodal {
+        println!(
+            "short TTFT p50/p95 : {:.2} / {:.2} ms ({} short streams)",
+            pct(&short_ttft_us, 0.5) as f64 / 1e3,
+            pct(&short_ttft_us, 0.95) as f64 / 1e3,
+            short_ttft_us.len()
+        );
+    }
     println!("prefix cache       : {hits}/{lookups} hits ({:.0}%)", 100.0 * cache_hit_rate);
     println!("server counters    : {srv}");
 
@@ -147,6 +178,10 @@ pub fn run(args: &Args) -> Result<()> {
             .int(pct(&agg.itl_us, 0.5) as i64)
             .key("itl_p95_us")
             .int(pct(&agg.itl_us, 0.95) as i64)
+            .key("short_ttft_p50_us")
+            .int(pct(&short_ttft_us, 0.5) as i64)
+            .key("short_ttft_p95_us")
+            .int(pct(&short_ttft_us, 0.95) as i64)
             .key("cache_hit_rate")
             .number(cache_hit_rate)
             .key("kv_bits")
@@ -197,11 +232,24 @@ fn resolve_addr(args: &Args) -> Result<String> {
     }
 }
 
+/// Long-prompt length for `--prompt-len-dist bimodal` — several prefill
+/// chunks worth, and the short/long classification threshold (shorts
+/// are anything under half of this).
+const LONG_PROMPT_LEN: usize = 96;
+
 /// The request mix: every prompt shares a 24-token stem (prefix-cache
 /// bait), prompts are reused Zipf-fashion (rank 0 hottest), and each
 /// request carries its own seed so the server's per-request sampling
-/// state is exercised.
-fn build_specs(n: usize, pool: usize, zipf_s: f64, max_new: usize, seed: u64) -> Vec<Spec> {
+/// state is exercised. With `bimodal`, every 4th request swaps in a
+/// [`LONG_PROMPT_LEN`]-token prompt over the same stem.
+fn build_specs(
+    n: usize,
+    pool: usize,
+    zipf_s: f64,
+    max_new: usize,
+    seed: u64,
+    bimodal: bool,
+) -> Vec<Spec> {
     let vocab = Tokenizer::new().vocab_size();
     let stem: Vec<u32> = (0..24usize).map(|t| ((t * 5 + 3) % vocab) as u32).collect();
     let prompts: Vec<Vec<u32>> = (0..pool)
@@ -211,13 +259,30 @@ fn build_specs(n: usize, pool: usize, zipf_s: f64, max_new: usize, seed: u64) ->
             p
         })
         .collect();
+    let longs: Vec<Vec<u32>> = (0..pool.min(4))
+        .map(|i| {
+            let mut p = stem.clone();
+            p.extend(
+                (0..LONG_PROMPT_LEN - stem.len())
+                    .map(|j| ((i * 13 + j * 7 + 1) % vocab) as u32),
+            );
+            p
+        })
+        .collect();
     let zipf = Zipf::new(pool, zipf_s);
     let mut rng = Rng::new(seed);
     (0..n)
-        .map(|i| Spec {
-            tokens: prompts[zipf.sample(&mut rng)].clone(),
-            max_new,
-            seed: seed.wrapping_add(i as u64),
+        .map(|i| {
+            let rank = zipf.sample(&mut rng);
+            Spec {
+                tokens: if bimodal && i % 4 == 0 {
+                    longs[rank % longs.len()].clone()
+                } else {
+                    prompts[rank].clone()
+                },
+                max_new,
+                seed: seed.wrapping_add(i as u64),
+            }
         })
         .collect()
 }
@@ -597,13 +662,15 @@ fn pct(sorted: &[u64], p: f64) -> u64 {
 /// decoding — the end-to-end parity gate behind the CI smoke.
 fn verify_inprocess(args: &Args, specs: &[Spec], outcomes: &[Outcome]) -> Result<()> {
     println!("\nrebuilding the engine in-process to verify wire tokens …");
-    let ServeSetup { kind, .. } = build_setup(args)?;
+    let ServeSetup { kind, prefill_chunk, sweep_token_budget, .. } = build_setup(args)?;
     let router = Router::start(
         RouterConfig {
             n_workers: 1,
             max_batch: 4,
             strategy: Strategy::LeastLoaded,
-            prefix_cache: false,
+            prefill_chunk,
+            sweep_token_budget,
+            ..Default::default()
         },
         move |_| Ok(kind.clone()),
     )?;

@@ -57,6 +57,12 @@ pub(crate) struct ServeSetup {
     pub tok: Tokenizer,
     pub engine_name: String,
     pub prefix_cache: bool,
+    /// `--prefill-chunk N`: prompt tokens a prefilling session may claim
+    /// per scheduler sweep (1 = legacy one-token-per-sweep).
+    pub prefill_chunk: usize,
+    /// `--sweep-token-budget N`: per-sweep token budget shared by decode
+    /// and prefill; absent derives `max_batch × prefill_chunk`.
+    pub sweep_token_budget: Option<usize>,
 }
 
 pub(crate) fn build_setup(args: &Args) -> Result<ServeSetup> {
@@ -82,6 +88,20 @@ pub(crate) fn build_setup(args: &Args) -> Result<ServeSetup> {
         args.get_usize("kv-page", bpdq::model::Model::DEFAULT_KV_PAGE).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(kv_page >= 1, "--kv-page must be at least 1 position");
     let prefix_cache = args.has("prefix-cache");
+    // --prefill-chunk N + --sweep-token-budget N: chunked prefill (see
+    // the `## Chunked prefill` section of `bpdq::serving`). Chunk 1 is
+    // the legacy path; the pjrt engine steps one token per sweep either
+    // way (its stepper keeps the default chunk fallback).
+    let prefill_chunk = args.get_usize("prefill-chunk", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(prefill_chunk >= 1, "--prefill-chunk must be at least 1 token");
+    let sweep_token_budget = match args.get("sweep-token-budget") {
+        Some(_) => {
+            let n = args.get_usize("sweep-token-budget", 0).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(n >= 1, "--sweep-token-budget must be at least 1 token");
+            Some(n)
+        }
+        None => None,
+    };
     anyhow::ensure!(
         !(engine_name == "pjrt" && prefix_cache),
         "--prefix-cache is not supported by the pjrt engine (its KV travels as literals, \
@@ -190,11 +210,27 @@ pub(crate) fn build_setup(args: &Args) -> Result<ServeSetup> {
         }
         other => anyhow::bail!("unknown engine `{other}` (native|native-fp16|lut|pjrt)"),
     };
-    Ok(ServeSetup { kind, model, tok, engine_name: engine_name.to_string(), prefix_cache })
+    Ok(ServeSetup {
+        kind,
+        model,
+        tok,
+        engine_name: engine_name.to_string(),
+        prefix_cache,
+        prefill_chunk,
+        sweep_token_budget,
+    })
 }
 
 pub fn run(args: &Args) -> Result<()> {
-    let ServeSetup { kind, model, tok, engine_name, prefix_cache } = build_setup(args)?;
+    let ServeSetup {
+        kind,
+        model,
+        tok,
+        engine_name,
+        prefix_cache,
+        prefill_chunk,
+        sweep_token_budget,
+    } = build_setup(args)?;
     let n_requests = args.get_usize("requests", 24).map_err(anyhow::Error::msg)?;
     let n_workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let max_new = args.get_usize("max-new", 8).map_err(anyhow::Error::msg)?;
@@ -203,9 +239,23 @@ pub fn run(args: &Args) -> Result<()> {
     let capacity = model.decode_capacity();
 
     println!("simd kernels: {}", bpdq::tensor::simd::active().label());
-    println!("starting router: {n_workers} workers, engine={engine_name}, max_batch={max_batch}");
+    println!(
+        "starting router: {n_workers} workers, engine={engine_name}, max_batch={max_batch}, \
+         prefill chunk {prefill_chunk}, sweep budget {}",
+        match sweep_token_budget {
+            Some(b) => b.to_string(),
+            None => format!("{} (derived)", max_batch.max(1) * prefill_chunk),
+        }
+    );
     let router = Router::start(
-        RouterConfig { n_workers, max_batch, strategy: Strategy::LeastLoaded, prefix_cache },
+        RouterConfig {
+            n_workers,
+            max_batch,
+            strategy: Strategy::LeastLoaded,
+            prefix_cache,
+            prefill_chunk,
+            sweep_token_budget,
+        },
         |_| Ok(kind.clone()),
     )?;
 
@@ -227,12 +277,26 @@ pub fn run(args: &Args) -> Result<()> {
                     n_workers: 1,
                     max_batch,
                     strategy: Strategy::LeastLoaded,
-                    prefix_cache: false,
+                    prefill_chunk,
+                    sweep_token_budget,
+                    ..Default::default()
                 },
                 |_| Ok(kind.clone()),
             )?;
             let res = prefix_smoke(&router, &cold, &tok, &params);
             cold.shutdown();
+            res?;
+        }
+        if prefill_chunk > 1 {
+            // Chunking-off reference router (chunk 1, no cache): the
+            // chunked router's outputs must be token-identical to the
+            // one-token-per-sweep path under a mixed long/short load.
+            let reference = Router::start(
+                RouterConfig { n_workers: 1, max_batch, ..Default::default() },
+                |_| Ok(kind.clone()),
+            )?;
+            let res = chunked_smoke(&router, &reference, &tok, &params, max_new, capacity);
+            reference.shutdown();
             res?;
         }
         print_summary(&router);
@@ -427,6 +491,65 @@ fn prefix_smoke(
     Ok(())
 }
 
+/// Chunked-prefill smoke (`--stream --prefill-chunk N`): one long
+/// prompt and several short ones submitted together through the
+/// chunked router and through a chunk-1 reference router over the same
+/// engine. Hard-fails on any token or finish-reason divergence, on a
+/// missing prefill-rate measurement, or on leaked slots — the CI gate
+/// for the chunked prefill path.
+fn chunked_smoke(
+    chunked: &Router,
+    reference: &Router,
+    tok: &Tokenizer,
+    params: &SamplingParams,
+    max_new: usize,
+    capacity: usize,
+) -> Result<()> {
+    // A long prompt (several chunks worth) plus shorts, all within the
+    // model's decode capacity.
+    let stem = "17+25=42 9+3=12 8+6=14 11+7=18 ";
+    let mut long = tok.encode(&stem.repeat(4));
+    long.truncate(capacity.saturating_sub(max_new + 1).min(48).max(4));
+    let shorts = tasks::gen_arith(0xBEEF, 4, 2);
+    let mut prompts = vec![long];
+    prompts.extend(shorts.iter().map(|t| tok.encode(&t.prompt)));
+    println!(
+        "chunked smoke: 1 long ({} tokens) + {} short prompts, chunked vs chunk-1 reference",
+        prompts[0].len(),
+        prompts.len() - 1
+    );
+    let run = |router: &Router| -> Result<Vec<Vec<u32>>> {
+        let streams: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit_with(p.clone(), params.clone(), 0))
+            .collect();
+        streams.into_iter().map(|s| s.collect().map(|r| r.tokens)).collect()
+    };
+    let got = run(chunked)?;
+    let want = run(reference)?;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        anyhow::ensure!(
+            g == w,
+            "chunked smoke: request {i} diverged from the chunk-1 reference ({g:?} vs {w:?})"
+        );
+    }
+    let m = chunked.metrics.summary();
+    anyhow::ensure!(
+        m.prefill_tokens_per_sec > 0.0,
+        "chunked smoke: no prefill rate was measured"
+    );
+    anyhow::ensure!(
+        m.arena_slots_in_use == 0,
+        "chunked smoke: {} KV arena slots leaked",
+        m.arena_slots_in_use
+    );
+    println!(
+        "chunked smoke OK — token-identical to chunk 1, prefill {:.0} tok/s, no leaked slots",
+        m.prefill_tokens_per_sec
+    );
+    Ok(())
+}
+
 fn print_summary(router: &Router) {
     let s = router.metrics.summary();
     println!("requests completed : {}", s.completed);
@@ -437,6 +560,17 @@ fn print_summary(router: &Router) {
     println!("p50 inter-token    : {:.2} ms", s.p50_itl_us as f64 / 1e3);
     println!("p95 inter-token    : {:.2} ms", s.p95_itl_us as f64 / 1e3);
     println!("p50 queue delay    : {:.2} ms", s.p50_queue_us as f64 / 1e3);
+    println!(
+        "p50/p95 prefill    : {:.2} / {:.2} ms",
+        s.p50_prefill_us as f64 / 1e3,
+        s.p95_prefill_us as f64 / 1e3
+    );
+    println!(
+        "p50/p95 first dec. : {:.2} / {:.2} ms",
+        s.p50_first_decode_us as f64 / 1e3,
+        s.p95_first_decode_us as f64 / 1e3
+    );
+    println!("prefill rate       : {:.1} tok/s", s.prefill_tokens_per_sec);
     println!(
         "decode sweeps      : {} (mean batch {:.2}, max {})",
         s.decode_sweeps, s.mean_decode_batch, s.max_decode_batch

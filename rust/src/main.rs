@@ -93,6 +93,11 @@ SUBCOMMANDS
                                                via --stream (cancels one
                                                request mid-decode)
              [--prefix-cache] [--kv-page N]   radix prefix cache + paging
+             [--prefill-chunk N] [--sweep-token-budget N]
+                                               chunked prefill: N prompt
+                                               tokens per sweep per session
+                                               under a shared token budget
+                                               (default max_batch × chunk)
              [--listen host:port] [--addr-file p] [--max-conns N]
              [--deadline-budget-us N] [--tenant-priority gold=9,free=0]
              [--keepalive-ms N] [--io-timeout-ms N]
@@ -103,6 +108,10 @@ SUBCOMMANDS
                                                protocol on the same port)
   loadgen    --addr host:port | --addr-file p   wire-level Zipf load client
              [--requests N] [--concurrency C] [--pool P] [--zipf-s S]
+             [--prompt-len-dist uniform|bimodal] (bimodal: every 4th
+                                               request is a 96-token
+                                               prompt; short TTFT is
+                                               reported separately)
              [--max-new N] [--seed S] [--raw] [--drain] [--name NAME]
              [--out BENCH_serve_load.json] [--verify-inprocess]
              [--require-all] [--expect-rejections]

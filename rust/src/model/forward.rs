@@ -485,6 +485,155 @@ impl DecodeState {
         rmsnorm(&h, &model.norm_f, &mut normed);
         matvec(&model.lm_head, &normed)
     }
+
+    /// Feed a chunk of prompt tokens at consecutive positions and
+    /// return only the **final** position's next-token logits — the
+    /// native multi-token prefill path behind the scheduler's chunked
+    /// prefill. Token-identical to feeding the chunk through
+    /// [`DecodeState::step`] one token at a time: every position runs
+    /// the exact per-position kernels of `step` in the same order; what
+    /// changes is the K/V store, which lands per layer as one bulk run
+    /// ([`crate::serving::kv::KvViewMut::store_k_run`] — byte-identical
+    /// end state, one page-ownership resolution per touched page).
+    /// Storing the whole chunk *before* any in-chunk attention is safe
+    /// because position `t`'s walk caps at `len = t + 1`: the later
+    /// rows exist but are never read — causality by length, not masks.
+    pub fn prefill_chunk(&mut self, model: &Model, tokens: &[u32]) -> Vec<f32> {
+        let n = tokens.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            return self.step(model, tokens[0]);
+        }
+        assert!(self.pos + n <= self.max_seq, "KV cache exhausted");
+        let cfg = &model.cfg;
+        let (d, nh, nkv, hd) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let kvd = cfg.kv_dim();
+        let group = cfg.kv_group();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t0 = self.pos;
+
+        // Lane-major flat buffers: lane j = position t0 + j.
+        let mut hbuf = vec![0.0f32; n * d];
+        for (j, &tok) in tokens.iter().enumerate() {
+            let id = (tok as usize).min(cfg.vocab_size - 1);
+            hbuf[j * d..(j + 1) * d].copy_from_slice(model.embed.row(id));
+        }
+        let mut normed = vec![0.0f32; n * d];
+        let mut qbuf = vec![0.0f32; n * d];
+        let mut kbuf = vec![0.0f32; n * kvd];
+        let mut vbuf = vec![0.0f32; n * kvd];
+        let mut scores = vec![0.0f32; t0 + n];
+        let pp = self.arena.geom().page_positions;
+        let mut kv = self.arena.view_mut(self.handle.as_mut().expect("live decode state"));
+
+        for (l, lw) in model.layers.iter().enumerate() {
+            for j in 0..n {
+                let (h0, h1) = (j * d, (j + 1) * d);
+                rmsnorm(&hbuf[h0..h1], &lw.norm1, &mut normed[h0..h1]);
+                let mut q = matvec(&lw.wq, &normed[h0..h1]);
+                let mut kx = matvec(&lw.wk, &normed[h0..h1]);
+                let vx = matvec(&lw.wv, &normed[h0..h1]);
+                let t = t0 + j;
+                for hh in 0..nh {
+                    self.rope.apply(&mut q[hh * hd..(hh + 1) * hd], t);
+                }
+                for hh in 0..nkv {
+                    self.rope.apply(&mut kx[hh * hd..(hh + 1) * hd], t);
+                }
+                qbuf[h0..h1].copy_from_slice(&q);
+                kbuf[j * kvd..(j + 1) * kvd].copy_from_slice(&kx);
+                vbuf[j * kvd..(j + 1) * kvd].copy_from_slice(&vx);
+            }
+            // Whole-chunk store first (quantization, if any, happens
+            // here exactly as in `step` — same rows, same encoder),
+            // then per-position attention over the arena-resident
+            // prefix plus the in-chunk causal block.
+            kv.store_k_run(l, t0, &kbuf);
+            kv.store_v_run(l, t0, &vbuf);
+
+            for j in 0..n {
+                let len = t0 + j + 1;
+                let mut attn = vec![0.0f32; d];
+                for hh in 0..nh {
+                    let o0 = hh * hd;
+                    let kvh = hh / group;
+                    let q_h = &qbuf[j * d + o0..j * d + o0 + hd];
+                    let (mut p0, mut pg) = (0usize, 0usize);
+                    while p0 < len {
+                        let plen = (len - p0).min(pp);
+                        let sc = &mut scores[p0..p0 + plen];
+                        match kv.format() {
+                            KvFormat::F32 => {
+                                let kpage = kv.k_page(l, kvh, pg);
+                                for (u, s) in sc.iter_mut().enumerate() {
+                                    *s = dot(q_h, &kpage[u * hd..(u + 1) * hd]) * scale;
+                                }
+                            }
+                            KvFormat::BitPlane { .. } => strip_dots_packed(
+                                &[q_h],
+                                &[kv.k_page_packed(l, kvh, pg)],
+                                plen,
+                                scale,
+                                sc,
+                                &mut self.simd,
+                            ),
+                        }
+                        p0 += plen;
+                        pg += 1;
+                    }
+                    softmax(&mut scores[..len]);
+                    let out = &mut attn[o0..o0 + hd];
+                    let (mut p0, mut pg) = (0usize, 0usize);
+                    while p0 < len {
+                        let plen = (len - p0).min(pp);
+                        let sc = &scores[p0..p0 + plen];
+                        match kv.format() {
+                            KvFormat::F32 => {
+                                let vpage = kv.v_page(l, kvh, pg);
+                                for (u, &w) in sc.iter().enumerate() {
+                                    if w < 1e-9 {
+                                        continue;
+                                    }
+                                    axpy(w, &vpage[u * hd..(u + 1) * hd], out);
+                                }
+                            }
+                            KvFormat::BitPlane { .. } => {
+                                let mut outs: [&mut [f32]; 1] = [&mut *out];
+                                strip_axpys_packed(
+                                    sc,
+                                    &[kv.v_page_packed(l, kvh, pg)],
+                                    plen,
+                                    &mut outs,
+                                );
+                            }
+                        }
+                        p0 += plen;
+                        pg += 1;
+                    }
+                }
+                let (h0, h1) = (j * d, (j + 1) * d);
+                let proj = matvec(&lw.wo, &attn);
+                for (hi, p) in hbuf[h0..h1].iter_mut().zip(&proj) {
+                    *hi += p;
+                }
+
+                rmsnorm(&hbuf[h0..h1], &lw.norm2, &mut normed[h0..h1]);
+                let up = matvec(&lw.w1, &normed[h0..h1]);
+                let gate = matvec(&lw.w3, &normed[h0..h1]);
+                let mid: Vec<f32> = up.iter().zip(&gate).map(|(&u, &g)| u * silu(g)).collect();
+                let down = matvec(&lw.w2, &mid);
+                for (hi, dn) in hbuf[h0..h1].iter_mut().zip(&down) {
+                    *hi += dn;
+                }
+            }
+        }
+        self.pos += n;
+        let last = &hbuf[(n - 1) * d..];
+        rmsnorm(last, &model.norm_f, &mut normed[..d]);
+        matvec(&model.lm_head, &normed[..d])
+    }
 }
 
 /// Greedy-decode `max_new` tokens after feeding `prompt`.
@@ -810,6 +959,44 @@ mod tests {
                 logits = warm.step(&m, next);
             }
             assert_eq!(warm_tokens, cold_tokens, "bits {bits}: cache hit diverged from cold");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_matches_stepwise() {
+        // The chunked native prefill must be BIT-identical to stepping
+        // the same tokens one at a time — every kv_bits, small pages
+        // (chunks cross page boundaries), ragged chunk splits, and a
+        // chunk fed mid-stream (non-zero starting position).
+        for bits in [0usize, 2, 3, 4] {
+            let m = if bits == 0 {
+                tiny_gqa(2)
+            } else {
+                tiny_gqa(2).with_kv_format(KvFormat::bit_plane(bits))
+            }
+            .with_kv_page(2);
+            let toks = [3u32, 7, 1, 12, 5, 9, 2, 11, 4, 6];
+            let mut seq = m.decode_state();
+            let mut seq_logits = Vec::new();
+            for &tk in &toks {
+                seq_logits = seq.step(&m, tk);
+            }
+            for splits in [vec![10usize], vec![3, 4, 3], vec![1, 5, 2, 2]] {
+                let mut ch = m.decode_state();
+                let mut logits = Vec::new();
+                let mut at = 0usize;
+                for &len in splits.iter() {
+                    logits = ch.prefill_chunk(&m, &toks[at..at + len]);
+                    at += len;
+                }
+                assert_eq!(ch.pos(), seq.pos(), "bits {bits} {splits:?}");
+                assert_eq!(logits, seq_logits, "bits {bits} {splits:?}: chunked ≠ stepwise");
+                // …and the decodes that follow stay identical too (the
+                // stored KV bytes, not just the logits, must match).
+                let mut a = seq.fork();
+                let next = argmax(&seq_logits) as u32;
+                assert_eq!(ch.step(&m, next), a.step(&m, next), "bits {bits} {splits:?}");
+            }
         }
     }
 

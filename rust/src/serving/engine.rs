@@ -54,7 +54,7 @@ use super::batcher::{Pending, SubmitQueue};
 use super::kv::{KvArena, KvFormat, KvHandle, KvView};
 use super::metrics::Metrics;
 use super::prefix::{register_reclaimer, PrefixCache};
-use super::scheduler::{run_scheduler, Session, Stepper};
+use super::scheduler::{run_scheduler, ChunkPolicy, Session, Stepper};
 use super::{CancelHandle, GenRequest, Request, Response, SamplingParams};
 use crate::lut::{lut_gemm, LutScratch};
 use crate::model::{rmsnorm, silu, softmax, DecodeState, Model, Rope};
@@ -112,6 +112,8 @@ pub struct Engine {
     lut_step: Option<BatchedLutStep>,
     metrics: Option<Metrics>,
     prefix_cache: Option<Arc<PrefixCache>>,
+    prefill_chunk: usize,
+    sweep_budget: Option<usize>,
 }
 
 impl Engine {
@@ -124,7 +126,28 @@ impl Engine {
             EngineKind::Lut(lm) => Some(BatchedLutStep::new(lm.clone())),
             _ => None,
         };
-        Ok(Self { kind, runtime, lut_step, metrics: None, prefix_cache: None })
+        Ok(Self {
+            kind,
+            runtime,
+            lut_step,
+            metrics: None,
+            prefix_cache: None,
+            prefill_chunk: 1,
+            sweep_budget: None,
+        })
+    }
+
+    /// Configure Sarathi-style chunked prefill (`serve --prefill-chunk`
+    /// / `--sweep-token-budget`): prefilling sessions consume up to
+    /// `chunk` prompt tokens per sweep through the multi-token step
+    /// path, under a per-sweep token budget that decode claims first
+    /// (see `serving` module docs, "Chunked prefill"). `None` budget
+    /// defaults to `max_batch × chunk` at serve time. The default
+    /// (`chunk = 1`, no budget) is exactly the legacy
+    /// one-token-per-sweep prefill.
+    pub fn configure_prefill(&mut self, chunk: usize, sweep_token_budget: Option<usize>) {
+        self.prefill_chunk = chunk.max(1);
+        self.sweep_budget = sweep_token_budget;
     }
 
     /// Build and wire a radix prefix cache over this engine's KV arena
@@ -186,6 +209,12 @@ impl Engine {
         let metrics = self.metrics.clone();
         let arena = self.arena();
         let cache = self.prefix_cache.clone();
+        let policy = ChunkPolicy {
+            chunk: self.prefill_chunk,
+            budget: self
+                .sweep_budget
+                .unwrap_or_else(|| max_batch.max(1).saturating_mul(self.prefill_chunk)),
+        };
         let res = match &self.kind {
             EngineKind::Native(model) => {
                 let mut stepper = NativeStepper { model: model.clone() };
@@ -193,6 +222,7 @@ impl Engine {
                     &mut stepper,
                     queue,
                     max_batch,
+                    policy,
                     metrics.as_ref(),
                     arena.as_deref(),
                     cache.as_deref(),
@@ -204,6 +234,7 @@ impl Engine {
                     stepper,
                     queue,
                     max_batch,
+                    policy,
                     metrics.as_ref(),
                     arena.as_deref(),
                     cache.as_deref(),
@@ -213,7 +244,7 @@ impl Engine {
                 let (model, artifact, cache_len) = (model.clone(), artifact.clone(), *cache_len);
                 let rt = self.runtime.as_mut().context("pjrt runtime")?;
                 let mut stepper = PjrtStepper::new(rt, &model, &artifact, cache_len)?;
-                run_scheduler(&mut stepper, queue, max_batch, metrics.as_ref(), None, None)
+                run_scheduler(&mut stepper, queue, max_batch, policy, metrics.as_ref(), None, None)
             }
         };
         if let (Some(m), Some(a)) = (&self.metrics, &arena) {
@@ -300,6 +331,10 @@ impl Stepper for NativeStepper {
         tokens: &[u32],
     ) -> Result<Vec<Vec<f32>>> {
         Ok(sessions.iter_mut().zip(tokens).map(|(s, &t)| s.state.step(&self.model, t)).collect())
+    }
+
+    fn step_prefill_chunk(&mut self, sess: &mut NativeSession, tokens: &[u32]) -> Result<Vec<f32>> {
+        Ok(sess.state.prefill_chunk(&self.model, tokens))
     }
 }
 
@@ -748,6 +783,143 @@ impl Stepper for BatchedLutStep {
             out.push(matvec(&model.lm_head, normb));
         }
         Ok(out)
+    }
+
+    /// Fused chunked prefill: the chunk's positions become the sweep
+    /// lanes of ONE session. Each layer runs the same batched linears
+    /// as [`BatchedLutStep::step_batch`] (`n` lanes of one multi-LUT
+    /// build), then stores the whole chunk's K/V as one bulk run per
+    /// strip (one ownership/packed-view resolution per touched page —
+    /// byte-identical to per-token stores), then reuses
+    /// [`fused_attention`] with **singleton position groups**
+    /// `[(t0,[0]), (t0+1,[1]), …]`, every lane viewing the same
+    /// handle: lane `j`'s score length `t0+j+1` caps its page-run
+    /// walk, so the in-chunk causal block falls out of store-first
+    /// ordering with no masking. Per-lane kernels and accumulation
+    /// order are exactly the single-token path's, so the chunk is
+    /// token-identical to feeding it one sweep at a time. Only the
+    /// final position's logits are computed (earlier positions predict
+    /// known prompt tokens).
+    fn step_prefill_chunk(&mut self, sess: &mut LutSession, tokens: &[u32]) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 1 {
+            let mut lane = [&mut *sess];
+            let mut out = self.step_batch(&mut lane, tokens)?;
+            return Ok(out.pop().unwrap_or_default());
+        }
+        let model = self.lm.base.clone();
+        let cfg = &model.cfg;
+        let (d, nh, nkv, hd) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let kvd = cfg.kv_dim();
+        let dff = cfg.d_ff;
+        let group = cfg.kv_group();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t0 = sess.pos;
+        assert!(t0 + n <= sess.cap, "KV cache exhausted");
+
+        self.h.clear();
+        for &tok in tokens {
+            let id = (tok as usize).min(cfg.vocab_size - 1);
+            self.h.extend_from_slice(model.embed.row(id));
+        }
+        self.normed.resize(n * d, 0.0);
+
+        // Consecutive positions of one session: singleton groups in
+        // ascending position order (lane j at t0 + j).
+        let groups: Vec<(usize, Vec<usize>)> = (0..n).map(|j| (t0 + j, vec![j])).collect();
+
+        for l in 0..cfg.n_layers {
+            let lw = &model.layers[l];
+
+            for b in 0..n {
+                let (h0, h1) = (b * d, (b + 1) * d);
+                rmsnorm(&self.h[h0..h1], &lw.norm1, &mut self.normed[h0..h1]);
+            }
+            lin_batch(&self.lm, l, "wq", &self.normed, d, &mut self.q, &mut self.scratch);
+            lin_batch(&self.lm, l, "wk", &self.normed, d, &mut self.kx, &mut self.scratch);
+            lin_batch(&self.lm, l, "wv", &self.normed, d, &mut self.vx, &mut self.scratch);
+
+            for j in 0..n {
+                let t = t0 + j;
+                let qb = &mut self.q[j * d..(j + 1) * d];
+                for hh in 0..nh {
+                    self.rope.apply(&mut qb[hh * hd..(hh + 1) * hd], t);
+                }
+                let kxb = &mut self.kx[j * kvd..(j + 1) * kvd];
+                for hh in 0..nkv {
+                    self.rope.apply(&mut kxb[hh * hd..(hh + 1) * hd], t);
+                }
+            }
+            // Whole-chunk store first, then attend: later in-chunk rows
+            // exist but are never read past each lane's score length.
+            {
+                let mut kv = self.arena.view_mut(sess.handle.as_mut().expect("live session"));
+                kv.store_k_run(l, t0, &self.kx[..n * kvd]);
+                kv.store_v_run(l, t0, &self.vx[..n * kvd]);
+            }
+            self.attn.clear();
+            self.attn.resize(n * d, 0.0);
+
+            let format = self.arena.geom().format;
+            let pp = self.arena.geom().page_positions;
+            let arena = &self.arena;
+            let handle = sess.handle.as_ref().expect("live session");
+            let views: Vec<KvView> = (0..n).map(|_| arena.view(handle)).collect();
+            let mut strip_refs = StripRefs::default();
+            fused_attention(
+                format,
+                &groups,
+                &views,
+                l,
+                nkv,
+                group,
+                hd,
+                d,
+                scale,
+                pp,
+                &self.q,
+                &mut self.attn[..n * d],
+                &mut self.scores,
+                &mut self.pscores,
+                &mut strip_refs,
+                &mut self.simd,
+            );
+            drop(strip_refs);
+            drop(views);
+
+            lin_batch(&self.lm, l, "wo", &self.attn, d, &mut self.proj, &mut self.scratch);
+            for (hi, p) in self.h[..n * d].iter_mut().zip(self.proj[..n * d].iter()) {
+                *hi += p;
+            }
+
+            for b in 0..n {
+                let (h0, h1) = (b * d, (b + 1) * d);
+                rmsnorm(&self.h[h0..h1], &lw.norm2, &mut self.normed[h0..h1]);
+            }
+            lin_batch(&self.lm, l, "w1", &self.normed, d, &mut self.up, &mut self.scratch);
+            lin_batch(&self.lm, l, "w3", &self.normed, d, &mut self.gate, &mut self.scratch);
+            self.mid.resize(n * dff, 0.0);
+            for ((m, &u), &gt) in self.mid[..n * dff]
+                .iter_mut()
+                .zip(self.up[..n * dff].iter())
+                .zip(self.gate[..n * dff].iter())
+            {
+                *m = u * silu(gt);
+            }
+            lin_batch(&self.lm, l, "w2", &self.mid, dff, &mut self.down, &mut self.scratch);
+            for (hi, dn) in self.h[..n * d].iter_mut().zip(self.down[..n * d].iter()) {
+                *hi += dn;
+            }
+        }
+
+        sess.pos += n;
+        let b = n - 1;
+        let normb = &mut self.normed[b * d..(b + 1) * d];
+        rmsnorm(&self.h[b * d..(b + 1) * d], &model.norm_f, normb);
+        Ok(matvec(&model.lm_head, normb))
     }
 }
 
@@ -1317,6 +1489,101 @@ mod tests {
                 arena.cow_copies >= 1,
                 "bits {bits}: extended prompt must COW its first divergent page"
             );
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_token_identical_all_kv_bits() {
+        // Tentpole parity bar: chunked prefill (every chunk size —
+        // ragged splits and one covering the whole prompt) must be
+        // token-identical to one-token-per-sweep prefill, native and
+        // LUT, at f32 KV and every packed kv_bits, across small pages.
+        for bits in [0usize, 2, 3, 4] {
+            let base = if bits == 0 {
+                Arc::new(tiny_gqa(2).with_kv_page(2))
+            } else {
+                Arc::new(tiny_gqa(2).with_kv_format(KvFormat::bit_plane(bits)).with_kv_page(2))
+            };
+            let (mut native, mut lut) = quantized_engine_pair(base, 16);
+            let reqs_v = vec![
+                Request {
+                    id: 0,
+                    prompt: (0..13).map(|t| ((t * 5 + 3) % 20) as u32).collect(),
+                    max_new: 4,
+                },
+                Request { id: 1, prompt: vec![2, 9, 14], max_new: 4 },
+            ];
+            for engine in [&mut native, &mut lut] {
+                engine.configure_prefill(1, None);
+                let baseline = engine.generate_batch(&reqs_v).unwrap();
+                for chunk in [2usize, 3, 5, 16] {
+                    engine.configure_prefill(chunk, None);
+                    let chunked = engine.generate_batch(&reqs_v).unwrap();
+                    for (i, (a, b)) in baseline.iter().zip(&chunked).enumerate() {
+                        assert_eq!(
+                            a.tokens,
+                            b.tokens,
+                            "bits {bits} chunk {chunk} {} request {i}",
+                            engine.kind_name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_with_prefix_cache_parity() {
+        // Chunking composes with the radix cache: the cache-miss suffix
+        // is what gets chunked, publication still happens once at
+        // suffix completion, and both the publishing (cold-miss) run
+        // and the cache-hit run stay token-identical to the unchunked
+        // cold decode.
+        for bits in [0usize, 2] {
+            let base = if bits == 0 {
+                Arc::new(tiny_gqa(2).with_kv_page(2))
+            } else {
+                Arc::new(tiny_gqa(2).with_kv_format(KvFormat::bit_plane(bits)).with_kv_page(2))
+            };
+            let (_, mut lut) = quantized_engine_pair(base, 16);
+            let req = Request { id: 0, prompt: vec![3, 7, 1, 12, 5, 9, 2, 11], max_new: 5 };
+            let cold = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+            lut.enable_prefix_cache();
+            lut.configure_prefill(3, None);
+            let publish = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+            let warm = lut.generate_batch(std::slice::from_ref(&req)).unwrap();
+            assert_eq!(publish[0].tokens, cold[0].tokens, "bits {bits}: chunked publish run");
+            assert_eq!(warm[0].tokens, cold[0].tokens, "bits {bits}: chunked cache-hit run");
+            let st = lut.prefix_cache().unwrap().stats();
+            assert!(st.hits >= 1, "bits {bits}: warm run must hit: {st:?}");
+            let arena = lut.arena().unwrap().stats();
+            assert_eq!(arena.slots_in_use, 0, "bits {bits}: sessions must drain");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_budget_mixed_parity() {
+        // A tight sweep budget interleaving a long chunked prefill with
+        // live decodes must not change anyone's tokens — fairness
+        // reorders work across sweeps, never the per-session math.
+        let (_, mut lut) = quantized_engine_pair(tiny_gqa(2), 16);
+        let mk = |id: u64, prompt: Vec<u32>, max_new: usize| GenRequest {
+            id,
+            prompt,
+            params: SamplingParams { max_new, ..Default::default() },
+            priority: 0,
+        };
+        let long: Vec<u32> = (0..16).map(|t| ((t * 3 + 1) % 20) as u32).collect();
+        let batch = || {
+            vec![mk(0, vec![1, 4], 8), mk(1, long.clone(), 5), mk(2, vec![7, 2, 9], 6)]
+        };
+        lut.configure_prefill(1, None);
+        let baseline = serve_streams(&mut lut, batch(), 3);
+        lut.configure_prefill(4, Some(6));
+        let chunked = serve_streams(&mut lut, batch(), 3);
+        for (i, (a, b)) in baseline.iter().zip(&chunked).enumerate() {
+            assert_eq!(a.0, b.0, "request {i} tokens changed under budgeted chunking");
+            assert_eq!(a.1, b.1, "request {i} finish reason");
         }
     }
 

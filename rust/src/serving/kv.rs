@@ -941,6 +941,90 @@ impl KvViewMut<'_> {
             }
         }
     }
+
+    /// Store `n` consecutive K projection rows starting at position
+    /// `pos0` (`rows` is the flat `n × kv_dim` slab, position-major) —
+    /// the chunked-prefill bulk store. Byte-identical end state to `n`
+    /// [`KvViewMut::store_k`] calls: the per-row encode keeps no
+    /// cross-position state, so only the *bookkeeping* is amortized —
+    /// one ownership resolution (and one packed view) per touched page
+    /// instead of one per position.
+    #[inline]
+    pub fn store_k_run(&mut self, layer: usize, pos0: usize, rows: &[f32]) {
+        self.store_run(layer, 0, pos0, rows)
+    }
+
+    /// Store `n` consecutive V projection rows (see
+    /// [`KvViewMut::store_k_run`]).
+    #[inline]
+    pub fn store_v_run(&mut self, layer: usize, pos0: usize, rows: &[f32]) {
+        self.store_run(layer, 1, pos0, rows)
+    }
+
+    fn store_run(&mut self, layer: usize, which: usize, pos0: usize, rows: &[f32]) {
+        let g = self.geom;
+        let kvd = g.n_kv_heads * g.head_dim;
+        assert_eq!(rows.len() % kvd, 0, "KV run width != n × kv_dim");
+        let n = rows.len() / kvd;
+        if n == 0 {
+            return;
+        }
+        assert!(pos0 + n <= g.cap, "store run beyond slot capacity");
+        for kvh in 0..g.n_kv_heads {
+            let strip = g.strip_index(layer, which, kvh);
+            self.store_strip_run(strip, kvh, pos0, rows, n);
+        }
+    }
+
+    /// One strip's page-segment walk for [`KvViewMut::store_run`]: the
+    /// run `[pos0, pos0+n)` is split at page boundaries, and each
+    /// touched page resolves ownership (COW/alloc) and constructs its
+    /// write view **once**, however many positions land on it.
+    // lint: hot
+    fn store_strip_run(&mut self, strip: usize, kvh: usize, pos0: usize, rows: &[f32], n: usize) {
+        let g = self.geom;
+        let (hd, pp) = (g.head_dim, g.page_positions);
+        let kvd = g.n_kv_heads * hd;
+        let mut i = 0usize;
+        while i < n {
+            let pos = pos0 + i;
+            let (page, u0) = (pos / pp, pos % pp);
+            let seg = (pp - u0).min(n - i);
+            let base = self.ensure_owned(strip, page);
+            match g.packed_page() {
+                None => {
+                    for j in 0..seg {
+                        let head = &rows[(i + j) * kvd + kvh * hd..][..hd];
+                        // SAFETY: `base` is a live page this handle owns
+                        // non-shared (ensure_owned), written only through
+                        // this `&mut` borrow (aliasing header);
+                        // `u0 + seg ≤ pp` keeps every row span inside
+                        // the page's pp·hd words.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                head.as_ptr(),
+                                (base as *mut f32).add((u0 + j) * hd),
+                                hd,
+                            );
+                        }
+                    }
+                }
+                Some(pg) => {
+                    // SAFETY: same ownership/liveness argument as the
+                    // single store; the slice is exactly the page span.
+                    let words =
+                        unsafe { std::slice::from_raw_parts_mut(base, pg.strip_words()) };
+                    PackedStripMut::new(pg, words).store_rows(
+                        u0,
+                        rows[i * kvd..(i + seg) * kvd]
+                            .chunks_exact(kvd)
+                            .map(|r| &r[kvh * hd..(kvh + 1) * hd]),
+                    );
+                }
+            }
+            i += seg;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1171,6 +1255,87 @@ mod tests {
             );
         }
         arena.release(h);
+    }
+
+    #[test]
+    fn store_run_matches_sequential_stores_bytewise() {
+        // The chunked-prefill bulk store must leave every touched page
+        // byte-for-byte identical to per-position stores — f32 and
+        // packed, runs starting mid-page and crossing page boundaries,
+        // multi-head rows.
+        for format in [KvFormat::F32, KvFormat::BitPlane { bits: 2, group: 8 }] {
+            let g = KvGeom {
+                n_layers: 1,
+                n_kv_heads: 2,
+                head_dim: 8,
+                cap: 8,
+                page_positions: 2,
+                format,
+            };
+            let arena = KvArena::new(g, 2);
+            let kvd = g.n_kv_heads * g.head_dim;
+            // 5 rows at positions 1..6: page 0 partial, pages 1–2 full.
+            let rows: Vec<f32> =
+                (0..5 * kvd).map(|i| ((i * 7) % 13) as f32 * 0.25 - 1.0).collect();
+            let mut ha = arena.acquire().unwrap();
+            let mut hb = arena.acquire().unwrap();
+            {
+                let mut va = arena.view_mut(&mut ha);
+                for (j, r) in rows.chunks_exact(kvd).enumerate() {
+                    va.store_k(0, 1 + j, r);
+                    va.store_v(0, 1 + j, r);
+                }
+            }
+            {
+                let mut vb = arena.view_mut(&mut hb);
+                vb.store_k_run(0, 1, &rows);
+                vb.store_v_run(0, 1, &rows);
+            }
+            let (va, vb) = (arena.view(&ha), arena.view(&hb));
+            for kvh in 0..g.n_kv_heads {
+                match format {
+                    KvFormat::F32 => {
+                        // Fully-stored pages compare whole; the partial
+                        // page compares only its stored row (position 0
+                        // was never written — dirty words there are
+                        // unspecified by design).
+                        for pg in [1usize, 2] {
+                            let (ka, kb) = (va.k_page(0, kvh, pg), vb.k_page(0, kvh, pg));
+                            assert_eq!(ka, kb, "{format:?}");
+                            let (pa, pb) = (va.v_page(0, kvh, pg), vb.v_page(0, kvh, pg));
+                            assert_eq!(pa, pb, "{format:?}");
+                        }
+                        assert_eq!(
+                            &va.k_page(0, kvh, 0)[8..16],
+                            &vb.k_page(0, kvh, 0)[8..16],
+                            "{format:?} partial page"
+                        );
+                    }
+                    KvFormat::BitPlane { .. } => {
+                        for pg in [1usize, 2] {
+                            assert_eq!(
+                                va.k_page_packed(0, kvh, pg).words,
+                                vb.k_page_packed(0, kvh, pg).words,
+                                "{format:?} K page {pg}"
+                            );
+                            assert_eq!(
+                                va.v_page_packed(0, kvh, pg).words,
+                                vb.v_page_packed(0, kvh, pg).words,
+                                "{format:?} V page {pg}"
+                            );
+                        }
+                        let mut a = vec![0.0f32; 8];
+                        let mut b = vec![0.0f32; 8];
+                        va.k_page_packed(0, kvh, 0).dequant_row(1, &mut a);
+                        vb.k_page_packed(0, kvh, 0).dequant_row(1, &mut b);
+                        assert_eq!(a, b, "{format:?} partial page");
+                    }
+                }
+            }
+            drop((va, vb));
+            arena.release(ha);
+            arena.release(hb);
+        }
     }
 
     #[test]

@@ -51,6 +51,17 @@ struct Inner {
     queue_us: Samples,
     /// Submission → first emitted token, per request (real TTFT).
     ttft_us: Samples,
+    /// Admission → last prompt token processed (the prefill component
+    /// of TTFT), per request that completed prefill.
+    prefill_us: Samples,
+    /// First-decode component of TTFT: what's left of it after the
+    /// queue and prefill spans (sampling + the first emitting sweep).
+    first_decode_us: Samples,
+    /// Prompt tokens actually fed through prefill (running sum) and the
+    /// prefill wall-µs they took — the measured `prefill_tokens_per_sec`
+    /// admission control folds into its deadline estimate.
+    prefill_tokens_total: u64,
+    prefill_us_total: u64,
     /// Gap between consecutive token events of one request.
     itl_us: Samples,
     /// Total admission → retirement µs across all requests (running
@@ -93,6 +104,25 @@ pub struct Metrics {
     inner: Arc<Mutex<Inner>>,
 }
 
+/// Everything the scheduler buffered for one request, flushed in a
+/// single [`Metrics::record_retired`] call (one lock per request).
+pub struct RetireSample<'a> {
+    pub finish: FinishReason,
+    pub queue_us: u64,
+    /// Submission → first `Token` event; `None` when no token was emitted.
+    pub ttft_us: Option<u64>,
+    /// Admission → last prompt token processed; `None` when the request
+    /// retired mid-prefill.
+    pub prefill_us: Option<u64>,
+    /// Prompt tokens actually fed (the cache-miss suffix on a prefix hit).
+    pub prefill_tokens: usize,
+    /// Buffered inter-token gaps, one per token after the first.
+    pub itl_us: &'a [u64],
+    pub tokens: usize,
+    /// Admission → retirement µs (feeds `us_per_token`).
+    pub decode_us: u64,
+}
+
 impl Default for Metrics {
     fn default() -> Self {
         Self::new()
@@ -118,6 +148,21 @@ pub struct LatencySummary {
     /// p95 inter-token latency.
     pub p95_itl_us: u64,
     pub p50_queue_us: u64,
+    /// p50 prefill span (admission → last prompt token processed) — the
+    /// middle component of the queued / prefill / first-decode TTFT split.
+    pub p50_prefill_us: u64,
+    /// p95 prefill span.
+    pub p95_prefill_us: u64,
+    /// p50 first-decode span: TTFT minus its queue and prefill
+    /// components (sampling + the sweep that emitted the first token).
+    pub p50_first_decode_us: u64,
+    /// p95 first-decode span.
+    pub p95_first_decode_us: u64,
+    /// Measured prefill throughput: prompt tokens fed per second of
+    /// prefill wall time, across all retired requests (0 until a
+    /// prefill completes). Admission control's deadline estimate uses
+    /// this to price queued prompt tokens.
+    pub prefill_tokens_per_sec: f64,
     /// number of fused decode sweeps executed by the schedulers
     pub decode_sweeps: u64,
     /// mean sessions advanced per sweep (engine-level batching — the
@@ -192,6 +237,16 @@ impl LatencySummary {
             .int(self.p95_itl_us as i64)
             .key("p50_queue_us")
             .int(self.p50_queue_us as i64)
+            .key("p50_prefill_us")
+            .int(self.p50_prefill_us as i64)
+            .key("p95_prefill_us")
+            .int(self.p95_prefill_us as i64)
+            .key("p50_first_decode_us")
+            .int(self.p50_first_decode_us as i64)
+            .key("p95_first_decode_us")
+            .int(self.p95_first_decode_us as i64)
+            .key("prefill_tokens_per_sec")
+            .number(self.prefill_tokens_per_sec)
             .key("decode_sweeps")
             .int(self.decode_sweeps as i64)
             .key("mean_decode_batch")
@@ -247,32 +302,34 @@ impl Metrics {
     /// A request retired. One call (and one lock) per request: the
     /// scheduler measured TTFT at the first token *event* and buffered
     /// the inter-token gaps as they happened, and flushes them all
-    /// here. `ttft_us` is `None` when no token was emitted.
-    pub fn record_retired(
-        &self,
-        finish: FinishReason,
-        queue_us: u64,
-        ttft_us: Option<u64>,
-        itl_us: &[u64],
-        tokens: usize,
-        decode_us: u64,
-    ) {
+    /// here. The TTFT split is derived at flush time: first-decode =
+    /// TTFT − queue − prefill (saturating — the three spans are
+    /// measured at slightly different instants).
+    pub fn record_retired(&self, s: RetireSample<'_>) {
         let mut m = self.inner.lock().unwrap();
         let now = Instant::now();
         m.started.get_or_insert(now);
         m.finished = Some(now);
-        match finish {
+        match s.finish {
             FinishReason::Length | FinishReason::Stop => m.completed += 1,
             FinishReason::Cancelled => m.cancelled += 1,
             FinishReason::Error => m.errored += 1,
         }
-        m.tokens += tokens;
-        m.decode_us_total += decode_us;
-        m.queue_us.push(queue_us);
-        if let Some(t) = ttft_us {
+        m.tokens += s.tokens;
+        m.decode_us_total += s.decode_us;
+        m.queue_us.push(s.queue_us);
+        if let Some(t) = s.ttft_us {
             m.ttft_us.push(t);
         }
-        for &v in itl_us {
+        if let Some(p) = s.prefill_us {
+            m.prefill_us.push(p);
+            m.prefill_tokens_total += s.prefill_tokens as u64;
+            m.prefill_us_total += p;
+            if let Some(t) = s.ttft_us {
+                m.first_decode_us.push(t.saturating_sub(s.queue_us).saturating_sub(p));
+            }
+        }
+        for &v in s.itl_us {
             m.itl_us.push(v);
         }
     }
@@ -340,6 +397,18 @@ impl Metrics {
         s[(s.len() / 2).min(s.len() - 1)]
     }
 
+    /// Measured prefill throughput (prompt tokens per second of prefill
+    /// wall time), 0.0 until the first prefill completes. Like
+    /// [`Metrics::itl_p50_us`] this is read on the admission path, so
+    /// it stays a running-sum ratio rather than a full summary.
+    pub fn prefill_tokens_per_sec(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.prefill_us_total == 0 {
+            return 0.0;
+        }
+        m.prefill_tokens_total as f64 * 1e6 / m.prefill_us_total as f64
+    }
+
     pub fn summary(&self) -> LatencySummary {
         let m = self.inner.lock().unwrap();
         let pct = |xs: &[u64], p: f64| -> u64 {
@@ -365,6 +434,15 @@ impl Metrics {
             p50_itl_us: pct(&m.itl_us.data, 0.5),
             p95_itl_us: pct(&m.itl_us.data, 0.95),
             p50_queue_us: pct(&m.queue_us.data, 0.5),
+            p50_prefill_us: pct(&m.prefill_us.data, 0.5),
+            p95_prefill_us: pct(&m.prefill_us.data, 0.95),
+            p50_first_decode_us: pct(&m.first_decode_us.data, 0.5),
+            p95_first_decode_us: pct(&m.first_decode_us.data, 0.95),
+            prefill_tokens_per_sec: if m.prefill_us_total == 0 {
+                0.0
+            } else {
+                m.prefill_tokens_total as f64 * 1e6 / m.prefill_us_total as f64
+            },
             decode_sweeps: m.decode_sweeps,
             mean_decode_batch: if m.decode_sweeps == 0 {
                 0.0
@@ -407,11 +485,34 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    /// Positional shorthand for the common test shape; prefill is half
+    /// of TTFT so the split samples populate without every test
+    /// spelling out the full struct.
+    fn tsample(
+        finish: FinishReason,
+        queue_us: u64,
+        ttft_us: Option<u64>,
+        itl_us: &[u64],
+        tokens: usize,
+        decode_us: u64,
+    ) -> RetireSample<'_> {
+        RetireSample {
+            finish,
+            queue_us,
+            ttft_us,
+            prefill_us: ttft_us.map(|t| t / 2),
+            prefill_tokens: tokens,
+            itl_us,
+            tokens,
+            decode_us,
+        }
+    }
+
     #[test]
     fn summary_percentiles() {
         let m = Metrics::new();
         for i in 1..=100u64 {
-            m.record_retired(FinishReason::Length, i, Some(i * 10), &[i * 2], 2, i * 20);
+            m.record_retired(tsample(FinishReason::Length, i, Some(i * 10), &[i * 2], 2, i * 20));
         }
         let s = m.summary();
         assert_eq!(s.completed, 100);
@@ -440,7 +541,7 @@ mod tests {
         // tokens_per_sec = f64::INFINITY, which is unrepresentable in
         // JSON and corrupted bench reports.
         let m = Metrics::new();
-        m.record_retired(FinishReason::Length, 1, Some(10), &[], 5, 50);
+        m.record_retired(tsample(FinishReason::Length, 1, Some(10), &[], 5, 50));
         let s = m.summary();
         assert!(s.tokens_per_sec.is_finite(), "tokens_per_sec must be finite");
         assert_eq!(s.tokens_per_sec, 0.0);
@@ -449,7 +550,7 @@ mod tests {
     #[test]
     fn summary_is_json_serializable() {
         let m = Metrics::new();
-        m.record_retired(FinishReason::Length, 1, Some(10), &[5, 5], 3, 30);
+        m.record_retired(tsample(FinishReason::Length, 1, Some(10), &[5, 5], 3, 30));
         m.record_decode_sweep(2);
         let s = m.summary();
         let json = s.to_json();
@@ -467,6 +568,11 @@ mod tests {
             "p95_first_us",
             "p50_itl_us",
             "p95_itl_us",
+            "p50_prefill_us",
+            "p95_prefill_us",
+            "p50_first_decode_us",
+            "p95_first_decode_us",
+            "prefill_tokens_per_sec",
             "arena_high_water",
             "arena_bytes_resident",
             "arena_slot_bytes",
@@ -485,9 +591,47 @@ mod tests {
         ] {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
-        // 30 quoted keys plus the one quoted value (`simd_tier` — every
+        // 35 quoted keys plus the one quoted value (`simd_tier` — every
         // other field is numeric and must serialize unquoted).
-        assert_eq!(json.matches('"').count(), 2 * 30 + 2, "non-numeric value leaked into {json}");
+        assert_eq!(json.matches('"').count(), 2 * 35 + 2, "non-numeric value leaked into {json}");
+    }
+
+    #[test]
+    fn ttft_split_components_and_prefill_rate() {
+        // queue 100 + prefill 300 + first-decode 100 = TTFT 500; 60
+        // prompt tokens over 300µs of prefill = 200k tok/s.
+        let m = Metrics::new();
+        m.record_retired(RetireSample {
+            finish: FinishReason::Length,
+            queue_us: 100,
+            ttft_us: Some(500),
+            prefill_us: Some(300),
+            prefill_tokens: 60,
+            itl_us: &[],
+            tokens: 1,
+            decode_us: 400,
+        });
+        let s = m.summary();
+        assert_eq!(s.p50_prefill_us, 300);
+        assert_eq!(s.p95_prefill_us, 300);
+        assert_eq!(s.p50_first_decode_us, 100);
+        assert!((s.prefill_tokens_per_sec - 200_000.0).abs() < 1e-6);
+        assert!((m.prefill_tokens_per_sec() - s.prefill_tokens_per_sec).abs() < 1e-9);
+        // A mid-prefill retirement contributes no split samples and no
+        // prefill throughput.
+        m.record_retired(RetireSample {
+            finish: FinishReason::Cancelled,
+            queue_us: 1,
+            ttft_us: None,
+            prefill_us: None,
+            prefill_tokens: 0,
+            itl_us: &[],
+            tokens: 0,
+            decode_us: 5,
+        });
+        let s2 = m.summary();
+        assert_eq!(s2.p95_prefill_us, 300);
+        assert!((s2.prefill_tokens_per_sec - 200_000.0).abs() < 1e-6);
     }
 
     #[test]
@@ -513,7 +657,7 @@ mod tests {
     fn itl_p50_accessor_matches_summary() {
         let m = Metrics::new();
         assert_eq!(m.itl_p50_us(), 0, "no samples yet");
-        m.record_retired(FinishReason::Length, 1, Some(10), &[30, 10, 20], 4, 60);
+        m.record_retired(tsample(FinishReason::Length, 1, Some(10), &[30, 10, 20], 4, 60));
         assert_eq!(m.itl_p50_us(), m.summary().p50_itl_us);
         assert_eq!(m.itl_p50_us(), 20);
     }
@@ -523,7 +667,7 @@ mod tests {
         // 3 tokens of one request flush one TTFT sample and two ITL
         // samples in a single record_retired call.
         let m = Metrics::new();
-        m.record_retired(FinishReason::Length, 1, Some(100), &[10, 12], 3, 130);
+        m.record_retired(tsample(FinishReason::Length, 1, Some(100), &[10, 12], 3, 130));
         let s = m.summary();
         assert_eq!(s.completed, 1);
         assert_eq!(s.tokens, 3);
@@ -536,10 +680,10 @@ mod tests {
         // Cancelled / errored retirements must not inflate `completed`;
         // their emitted tokens still count toward throughput.
         let m = Metrics::new();
-        m.record_retired(FinishReason::Length, 0, Some(5), &[], 4, 40);
-        m.record_retired(FinishReason::Stop, 0, Some(5), &[], 2, 20);
-        m.record_retired(FinishReason::Cancelled, 0, Some(5), &[], 3, 30);
-        m.record_retired(FinishReason::Error, 0, None, &[], 1, 10);
+        m.record_retired(tsample(FinishReason::Length, 0, Some(5), &[], 4, 40));
+        m.record_retired(tsample(FinishReason::Stop, 0, Some(5), &[], 2, 20));
+        m.record_retired(tsample(FinishReason::Cancelled, 0, Some(5), &[], 3, 30));
+        m.record_retired(tsample(FinishReason::Error, 0, None, &[], 1, 10));
         let s = m.summary();
         assert_eq!(s.completed, 2);
         assert_eq!(s.cancelled, 1);

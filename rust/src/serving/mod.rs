@@ -135,6 +135,42 @@
 //!   ([`kv::KvArena::set_reclaimer`]): cache memory yields to live
 //!   sessions automatically, loudly panicking only when truly out.
 //!
+//! ## Chunked prefill
+//!
+//! Long prompts used to monopolize the sweep: prefill fed **one**
+//! prompt token per sweep, so a 4k-token prompt held its batch slot
+//! for 4k sweeps while every short request behind it paid the wait in
+//! TTFT. `serve --prefill-chunk N` makes prefill multi-token and
+//! budgeted, Sarathi-style:
+//!
+//! * **Budget semantics** — every sweep has a token budget
+//!   (`--sweep-token-budget`, default `max_batch × prefill_chunk`).
+//!   Decoding sessions claim 1 token each **first** (unconditionally —
+//!   a sampled token must be fed), then prefilling sessions split what
+//!   remains into chunks of up to `prefill_chunk` prompt tokens each,
+//!   in admission order. A prefiller whose share is zero simply holds
+//!   its slot until the next sweep.
+//! * **Fairness both ways** — decode-first claiming means a long
+//!   prompt can never stall token emission of running streams; the
+//!   one-chunk-per-session-per-sweep cap means a decode-heavy batch
+//!   can never starve prefill (and if nothing claimed the budget at
+//!   all, the first prefiller is forced one token, so every sweep
+//!   makes progress even at `--sweep-token-budget 0`).
+//! * **One fused pass per chunk** — a chunk runs through
+//!   `Stepper::step_prefill_chunk`: attention covers the
+//!   arena-resident prefix plus the in-chunk causal block via the same
+//!   page-run walk as decode, K/V for the whole chunk is stored in one
+//!   pass (per-page packed-strip setup amortized per chunk, not per
+//!   token), and only the final prompt token's logits are kept.
+//!   Chunking is **token-identical** to one-token-per-sweep prefill at
+//!   every `kv_bits` — the chunk kernels are the decode kernels at
+//!   other lane counts, in the same accumulation order.
+//! * **Prefix-cache interaction** — a cache hit leaves only the miss
+//!   *suffix* to prefill, and that suffix is what gets chunked: the
+//!   scheduler's prompt cursor is already past the borrowed prefix, so
+//!   hit TTFT stays near one sweep and miss TTFT shrinks by the chunk
+//!   factor. Publication still happens once, at suffix completion.
+//!
 //! ## Front door
 //!
 //! `serve --listen <addr>` ([`net::Server`]) exposes the stack over
@@ -149,16 +185,20 @@
 //!   event is `event: done` /
 //!   `data: {"finish_reason":"length|stop|cancelled|error","usage":{…},"error":null|"msg"}`
 //!   where `usage` carries `prompt_tokens`, `completion_tokens`,
-//!   `queue_us`, `ttft_us`, `total_us`. Silent stretches emit
-//!   `: keep-alive` comment frames.
+//!   `queue_us`, `prefill_us`, `ttft_us`, `total_us`. Silent stretches
+//!   emit `: keep-alive` comment frames.
 //! * Errors are JSON bodies `{"error":"…"}` with the obvious statuses:
 //!   `400` malformed/oversized-field body, `413`/`414`/`431` wire caps,
 //!   `429` admission rejection (with a `Retry-After` header and
 //!   `estimated_queue_delay_us`/`deadline_budget_us` in the body),
 //!   `503` draining or connection pool full.
 //! * **Admission control** (`--deadline-budget-us`): the front door
-//!   estimates queue delay as `Router::queue_depth × ITL p50` (floored
-//!   at 50µs) and rejects `429` rather than queue past the budget.
+//!   estimates the request's wait as `Router::queue_depth × ITL p50`
+//!   (floored at 50µs) **plus its own prefill cost**,
+//!   `prompt_tokens / prefill_tokens_per_sec` (measured; the term is 0
+//!   until the first prefill completes), and rejects `429` rather than
+//!   queue past the budget — a 4k-token prompt no longer passes the
+//!   same gate as a 10-token one.
 //! * **Backpressure**: a client that disconnects (or stalls past the
 //!   socket write timeout) fails its next frame write; the stream is
 //!   cancelled, the scheduler retires the session at the next sweep
@@ -304,6 +344,12 @@ pub struct Usage {
     pub completion_tokens: usize,
     /// Submission → admission into a sweep.
     pub queue_us: u64,
+    /// Prefill span: admission → last prompt token processed (0 if the
+    /// stream retired before completing prefill). Unlike the other
+    /// timestamps this is a *duration component* of TTFT, not an offset
+    /// from submission: `queue_us + prefill_us ≤ ttft_us` when a token
+    /// was emitted; the remainder is the first-decode span.
+    pub prefill_us: u64,
     /// Submission → first emitted token (the real TTFT; 0 if no token
     /// was emitted).
     pub ttft_us: u64,

@@ -15,10 +15,13 @@
 //!   the next sweep boundary, and its arena slot is released. The
 //!   counter is `cancelled_by_disconnect`.
 //! * **Admission control is early rejection.** With a deadline budget
-//!   configured, a request whose estimated queue delay
+//!   configured, a request whose estimated delay — queueing
 //!   (`Router::queue_depth` × observed ITL p50, floored at
-//!   [`ITL_FLOOR_US`]) exceeds the budget is answered `429` +
-//!   `Retry-After` before it ever touches a queue.
+//!   [`ITL_FLOOR_US`]) plus its own prefill cost (`prompt_tokens` ÷
+//!   the measured prefill rate, zero until traffic has measured one) —
+//!   exceeds the budget is answered `429` + `Retry-After` before it
+//!   ever touches a queue. Long prompts thus admit against the work
+//!   they bring, not just the work already queued.
 //! * **Drain is reject-new, finish-in-flight.** `POST /admin/drain`
 //!   (or [`Server::drain`]) flips one flag: new generate requests get
 //!   `503`, live streams run to completion, then the accept loop joins
@@ -101,6 +104,11 @@ struct Ctx {
     /// admissions so the estimate tracks live traffic without sorting
     /// the sample window on every request.
     itl_cache_us: AtomicU64,
+    /// Cached measured prefill rate (whole tokens/sec) for admission,
+    /// refreshed on the same cadence as `itl_cache_us`. 0 until any
+    /// request has retired with prefill timing, which zeroes the
+    /// prefill term instead of guessing.
+    prefill_rate_cache: AtomicU64,
     admissions: AtomicU64,
 }
 
@@ -133,6 +141,7 @@ impl Server {
             cfg,
             draining: AtomicBool::new(false),
             itl_cache_us: AtomicU64::new(0),
+            prefill_rate_cache: AtomicU64::new(0),
             admissions: AtomicU64::new(0),
         });
         let ctx2 = ctx.clone();
@@ -324,20 +333,28 @@ enum Admit {
     Reject { est_us: u64, budget_us: u64 },
 }
 
-fn admit(ctx: &Ctx) -> Admit {
+fn admit(ctx: &Ctx, prompt_tokens: usize) -> Admit {
     if ctx.draining.load(Ordering::Acquire) {
         return Admit::Drain;
     }
     let Some(budget_us) = ctx.cfg.deadline_budget_us else { return Admit::Ok };
-    // Refresh the cached ITL p50 every few admissions (sorting the
-    // whole sample window per request would put a O(n log n) pass on
-    // the admission path for no accuracy gain).
+    // Refresh the cached ITL p50 / prefill rate every few admissions
+    // (sorting the whole sample window per request would put a
+    // O(n log n) pass on the admission path for no accuracy gain).
     let n = ctx.admissions.fetch_add(1, Ordering::Relaxed);
     if n % 8 == 0 {
         ctx.itl_cache_us.store(ctx.router.metrics.itl_p50_us(), Ordering::Relaxed);
+        let rate = ctx.router.metrics.prefill_tokens_per_sec();
+        ctx.prefill_rate_cache.store(rate as u64, Ordering::Relaxed);
     }
     let itl = ctx.itl_cache_us.load(Ordering::Relaxed).max(ITL_FLOOR_US);
-    let est_us = ctx.router.queue_depth() as u64 * itl;
+    // The request's own prefill cost at the measured rate; zero while
+    // the rate is unmeasured (cold server) — the queue term still
+    // protects against backlog, and the first retirements teach us.
+    let rate = ctx.prefill_rate_cache.load(Ordering::Relaxed);
+    let prefill_us =
+        if rate > 0 { (prompt_tokens as u64).saturating_mul(1_000_000) / rate } else { 0 };
+    let est_us = (ctx.router.queue_depth() as u64 * itl).saturating_add(prefill_us);
     if est_us > budget_us {
         Admit::Reject { est_us, budget_us }
     } else {
@@ -460,6 +477,8 @@ fn done_json(finish: FinishReason, usage: &Usage, error: Option<&str>) -> String
         .int(usage.completion_tokens as i64)
         .key("queue_us")
         .int(usage.queue_us as i64)
+        .key("prefill_us")
+        .int(usage.prefill_us as i64)
         .key("ttft_us")
         .int(usage.ttft_us as i64)
         .key("total_us")
@@ -530,7 +549,7 @@ fn generate_http(req: &Request, w: &mut TcpStream, ctx: &Ctx) {
             return;
         }
     };
-    match admit(ctx) {
+    match admit(ctx, spec.tokens.len()) {
         Admit::Drain => {
             ctx.router.metrics.record_drained();
             let _ = http::write_json_error(w, 503, "draining: not accepting new requests", &[]);
@@ -656,7 +675,7 @@ fn handle_raw(mut stream: TcpStream, ctx: &Ctx) {
             return;
         }
     };
-    match admit(ctx) {
+    match admit(ctx, spec.tokens.len()) {
         Admit::Drain => {
             ctx.router.metrics.record_drained();
             let json = raw_error_json(503, "draining: not accepting new requests", None);
@@ -714,7 +733,7 @@ mod tests {
                 n_workers: 1,
                 max_batch: 2,
                 strategy: Strategy::LeastLoaded,
-                prefix_cache: false,
+                ..Default::default()
             },
             move |_| Ok(EngineKind::Native(model.clone())),
         )
@@ -939,6 +958,49 @@ mod tests {
     }
 
     #[test]
+    fn admission_folds_prompt_prefill_cost_into_429() {
+        // Satellite: once traffic has measured a prefill rate, a long
+        // prompt's own prefill time counts against the deadline budget
+        // — an idle server (queue term 0) must still 429 a prompt whose
+        // prefill alone busts the budget, and still admit a short one.
+        use crate::serving::metrics::RetireSample;
+        let router = tiny_router(32);
+        // Teach the metrics a rate of 1000 tok/s: 500 prompt tokens
+        // prefilled in 0.5 s.
+        router.metrics.record_retired(RetireSample {
+            finish: FinishReason::Length,
+            queue_us: 0,
+            ttft_us: Some(500_000),
+            prefill_us: Some(500_000),
+            prefill_tokens: 500,
+            itl_us: &[],
+            tokens: 1,
+            decode_us: 500_000,
+        });
+        let cfg = ServerConfig { deadline_budget_us: Some(10_000), ..test_cfg() };
+        let ctx = Ctx {
+            router: router.clone(),
+            tok: Arc::new(Tokenizer::new()),
+            cfg,
+            draining: AtomicBool::new(false),
+            itl_cache_us: AtomicU64::new(0),
+            prefill_rate_cache: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
+        };
+        // 100 tokens at 1000 tok/s ≈ 100 ms ≫ the 10 ms budget.
+        match admit(&ctx, 100) {
+            Admit::Reject { est_us, budget_us } => {
+                assert!(est_us >= 100_000, "prefill term must dominate: {est_us}");
+                assert_eq!(budget_us, 10_000);
+            }
+            _ => panic!("long prompt must be rejected on prefill cost alone"),
+        }
+        // 5 tokens ≈ 5 ms < 10 ms budget: admitted.
+        assert!(matches!(admit(&ctx, 5), Admit::Ok), "short prompt must admit");
+        router.shutdown();
+    }
+
+    #[test]
     fn draining_rejects_new_generates_and_counts_them() {
         let router = tiny_router(32);
         let server = start(router.clone(), test_cfg());
@@ -1031,6 +1093,7 @@ mod tests {
             cfg,
             draining: AtomicBool::new(false),
             itl_cache_us: AtomicU64::new(0),
+            prefill_rate_cache: AtomicU64::new(0),
             admissions: AtomicU64::new(0),
         };
         let spec = parse_generate(br#"{"tokens":[1],"tenant":"gold"}"#, &ctx).unwrap();

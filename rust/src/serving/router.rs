@@ -50,11 +50,28 @@ pub struct RouterConfig {
     /// default — caching holds pages resident between requests, which
     /// a memory-capped deployment may not want.
     pub prefix_cache: bool,
+    /// Prompt tokens a prefilling session may claim per scheduler sweep
+    /// (`serve --prefill-chunk`). 1 is the legacy one-token-per-sweep
+    /// path; larger chunks amortize per-sweep overhead and cut TTFT by
+    /// running one fused multi-token forward per chunk.
+    pub prefill_chunk: usize,
+    /// Per-sweep token budget shared by decode (1 token each, claimed
+    /// first) and prefill chunks (`serve --sweep-token-budget`). `None`
+    /// derives `max_batch × prefill_chunk`, which keeps chunk-of-one
+    /// behavior identical to the unbudgeted scheduler.
+    pub sweep_token_budget: Option<usize>,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { n_workers: 2, max_batch: 8, strategy: Strategy::LeastLoaded, prefix_cache: false }
+        Self {
+            n_workers: 2,
+            max_batch: 8,
+            strategy: Strategy::LeastLoaded,
+            prefix_cache: false,
+            prefill_chunk: 1,
+            sweep_token_budget: None,
+        }
     }
 }
 
@@ -172,6 +189,8 @@ impl Router {
             let errs = errors.clone();
             let max_batch = cfg.max_batch;
             let prefix_cache = cfg.prefix_cache;
+            let prefill_chunk = cfg.prefill_chunk;
+            let sweep_token_budget = cfg.sweep_token_budget;
             workers.push(std::thread::spawn(move || {
                 let _guard =
                     CloseOnPanic { queue: q.clone(), errors: errs.clone(), worker: w };
@@ -192,6 +211,7 @@ impl Router {
                 if prefix_cache {
                     engine.enable_prefix_cache();
                 }
+                engine.configure_prefill(prefill_chunk, sweep_token_budget);
                 if let Err(e) = engine.serve(&q, max_batch) {
                     let msg = format!("worker {w}: serve loop failed: {e:#}");
                     eprintln!("{msg}");
@@ -609,6 +629,37 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_config_wires_workers_and_keeps_tokens() {
+        // `prefill_chunk`/`sweep_token_budget` reach every worker's
+        // engine: chunked prefill must decode token-identically to the
+        // default one-token-per-sweep router and report prefill rate.
+        let plain = Router::start(
+            RouterConfig { n_workers: 1, max_batch: 2, ..Default::default() },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        let baseline = plain.submit(vec![1, 2, 3, 4, 5, 6, 7], 5).collect().unwrap();
+        plain.shutdown();
+
+        let router = Router::start(
+            RouterConfig {
+                n_workers: 1,
+                max_batch: 2,
+                prefill_chunk: 3,
+                sweep_token_budget: Some(6),
+                ..Default::default()
+            },
+            |_| Ok(engine_kind()),
+        )
+        .unwrap();
+        let resp = router.submit(vec![1, 2, 3, 4, 5, 6, 7], 5).collect().unwrap();
+        assert_eq!(resp.tokens, baseline.tokens, "chunked prefill changed tokens");
+        let m = router.metrics.summary();
+        assert!(m.prefill_tokens_per_sec > 0.0, "chunked prefill must report a rate: {m:?}");
+        router.shutdown();
+    }
+
+    #[test]
     fn streaming_metrics_populated() {
         let router = Router::start(
             RouterConfig { n_workers: 1, max_batch: 4, ..Default::default() },
@@ -637,7 +688,7 @@ mod tests {
                 n_workers: 3,
                 strategy: Strategy::RoundRobin,
                 max_batch: 1,
-                prefix_cache: false,
+                ..Default::default()
             },
             |_| Ok(engine_kind()),
         )

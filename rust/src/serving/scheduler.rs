@@ -8,9 +8,14 @@
 //! 2. admits queued requests into free batch slots (blocking on the
 //!    [`SubmitQueue`] only when *nothing* is active) — prompt prefill
 //!    starts on the very next sweep, joining whatever is in flight;
-//! 3. gathers one token per active session (prompt prefill counts as
-//!    steps — single-token engines) and hands the whole sweep to the
-//!    engine's [`Stepper`];
+//! 3. gathers this sweep's work under a token budget ([`ChunkPolicy`]):
+//!    every decoding session claims one budget token first, then
+//!    prefilling sessions fill the remainder with prompt **chunks** of
+//!    up to `chunk` tokens each (Sarathi-style chunked prefill). Decode
+//!    lanes and chunk-of-one prefill tails run as one fused
+//!    [`Stepper::step_batch`]; multi-token chunks go through
+//!    [`Stepper::step_prefill_chunk`], which stores K/V for the whole
+//!    chunk in one pass and returns only the final position's logits;
 //! 4. samples each generating session's logits via
 //!    [`crate::model::sample`] (seeded per request; temp=0 ≡ argmax),
 //!    emits `Token{id, logprob}` events as they are produced, and
@@ -26,13 +31,35 @@
 
 use super::batcher::{Pending, SubmitQueue};
 use super::kv::KvArena;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, RetireSample};
 use super::prefix::PrefixCache;
 use super::{FinishReason, GenEvent, Usage};
 use crate::model::sample;
 use crate::rng::Rng;
 use anyhow::Result;
 use std::time::Instant;
+
+/// Per-sweep chunked-prefill policy (Sarathi-style). `chunk` caps how
+/// many prompt tokens one prefilling session may consume per sweep;
+/// `budget` is the sweep-wide token budget shared by decode and
+/// prefill, with decode claiming first (1 token per generating
+/// session, unconditionally — a sampled token must be fed, and this is
+/// the fairness rule that keeps prefill from starving decode). The
+/// scheduler always advances at least one token per sweep, so a
+/// too-small budget degrades to one-token-per-sweep prefill rather
+/// than stalling. `ChunkPolicy::default()` (chunk 1, unbounded budget)
+/// reproduces the legacy one-token-per-sweep prefill exactly.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ChunkPolicy {
+    pub chunk: usize,
+    pub budget: usize,
+}
+
+impl Default for ChunkPolicy {
+    fn default() -> Self {
+        Self { chunk: 1, budget: usize::MAX }
+    }
+}
 
 /// One in-flight decode session: KV state + position bookkeeping. The
 /// stepping itself belongs to the [`Stepper`] so batched engines can
@@ -70,6 +97,23 @@ pub(crate) trait Stepper {
         sessions: &mut [&mut Self::Sess],
         tokens: &[u32],
     ) -> Result<Vec<Vec<f32>>>;
+
+    /// Multi-token prefill: feed `tokens` at consecutive positions of
+    /// one session, storing K/V for the whole chunk, and return only
+    /// the **final** position's next-token logits (earlier positions
+    /// predict known prompt tokens, so their logits are discarded).
+    /// Must be token-identical to feeding the chunk through
+    /// `step_batch` one token at a time — the default does exactly
+    /// that, so single-token engines are correct by construction;
+    /// batched engines override it with a fused chunk pass.
+    fn step_prefill_chunk(&mut self, sess: &mut Self::Sess, tokens: &[u32]) -> Result<Vec<f32>> {
+        let mut last = Vec::new();
+        for &t in tokens {
+            let mut lane = [&mut *sess];
+            last = self.step_batch(&mut lane, &[t])?.pop().unwrap_or_default();
+        }
+        Ok(last)
+    }
 }
 
 /// A request admitted into the sweep. Per-token latency samples are
@@ -88,6 +132,12 @@ struct ActiveGen<S> {
     last_tok: Option<Instant>,
     /// Buffered inter-token gaps (µs), one per token after the first.
     itl_us: Vec<u64>,
+    /// When the last prompt token was processed (prefill completion);
+    /// `None` if the session retires mid-prefill.
+    prefill_done: Option<Instant>,
+    /// Prompt tokens actually fed through the engine (the cache-miss
+    /// suffix when a prefix-cache hit skipped the head).
+    n_prefill: usize,
     /// Whether this session's prompt pages were published to the prefix
     /// cache (exactly once, at prefill completion).
     published: bool,
@@ -107,17 +157,19 @@ fn retire<S>(
     metrics: Option<&Metrics>,
     arena: Option<&KvArena>,
 ) {
-    let ActiveGen { p, sess, n_out, admitted, first_tok, itl_us, .. } = a;
+    let ActiveGen { p, sess, n_out, admitted, first_tok, itl_us, prefill_done, n_prefill, .. } = a;
     drop(sess);
     if let (Some(m), Some(ar)) = (metrics, arena) {
         m.observe_arena(ar.id(), ar.stats());
     }
     let now = Instant::now();
     let ttft_us = first_tok.map(|t| (t - p.enqueued).as_micros() as u64);
+    let prefill_us = prefill_done.map(|t| (t - admitted).as_micros() as u64);
     let usage = Usage {
         prompt_tokens: p.request.prompt.len(),
         completion_tokens: n_out,
         queue_us: (admitted - p.enqueued).as_micros() as u64,
+        prefill_us: prefill_us.unwrap_or(0),
         ttft_us: ttft_us.unwrap_or(0),
         total_us: (now - p.enqueued).as_micros() as u64,
         finished_sweep: sweep,
@@ -125,14 +177,16 @@ fn retire<S>(
     let _ = p.events.send(GenEvent::Done { finish_reason, usage, error });
     queue.finish_one();
     if let Some(m) = metrics {
-        m.record_retired(
-            finish_reason,
-            usage.queue_us,
+        m.record_retired(RetireSample {
+            finish: finish_reason,
+            queue_us: usage.queue_us,
             ttft_us,
-            &itl_us,
-            n_out,
-            (now - admitted).as_micros() as u64,
-        );
+            prefill_us,
+            prefill_tokens: n_prefill,
+            itl_us: &itl_us,
+            tokens: n_out,
+            decode_us: (now - admitted).as_micros() as u64,
+        });
     }
 }
 
@@ -163,9 +217,23 @@ fn admit<St: Stepper>(
         first_tok: None,
         last_tok: None,
         itl_us: Vec::new(),
+        prefill_done: None,
+        n_prefill: 0,
         published: false,
         p,
     }
+}
+
+/// What one active session does this sweep. `Single` lanes (decode
+/// steps and chunk-of-one prefill tails) fuse into one `step_batch`
+/// call; `Chunk` sessions run a multi-token prefill pass each and are
+/// rewritten to `Logits` once executed; `Hold` sessions carry over
+/// untouched (budget exhausted this sweep).
+enum Plan {
+    Hold,
+    Single(u32),
+    Chunk(Vec<u32>),
+    Logits(Vec<f32>),
 }
 
 /// Run the persistent scheduling loop until the queue is closed and
@@ -182,6 +250,7 @@ pub(crate) fn run_scheduler<St: Stepper>(
     stepper: &mut St,
     queue: &SubmitQueue,
     max_batch: usize,
+    policy: ChunkPolicy,
     metrics: Option<&Metrics>,
     arena: Option<&KvArena>,
     cache: Option<&PrefixCache>,
@@ -223,66 +292,161 @@ pub(crate) fn run_scheduler<St: Stepper>(
                 next.reject(FinishReason::Cancelled, None);
                 queue.finish_one();
                 if let Some(m) = metrics {
-                    m.record_retired(FinishReason::Cancelled, queue_us, None, &[], 0, 0);
+                    m.record_retired(RetireSample {
+                        finish: FinishReason::Cancelled,
+                        queue_us,
+                        ttft_us: None,
+                        prefill_us: None,
+                        prefill_tokens: 0,
+                        itl_us: &[],
+                        tokens: 0,
+                        decode_us: 0,
+                    });
                 }
                 continue;
             }
             active.push(admit(stepper, next, cache));
         }
 
-        // 3. Gather this sweep's (session, token) pairs; sessions with
-        // no token left (or no KV capacity) retire instead.
-        let mut stepping: Vec<ActiveGen<St::Sess>> = Vec::with_capacity(active.len());
-        let mut tokens: Vec<u32> = Vec::with_capacity(active.len());
+        // 3. Budgeted gather. Decode lanes claim one budget token each
+        // first — a sampled token must always be fed, which is exactly
+        // the rule that keeps prefill from starving decode. Sessions
+        // out of prompt+generation or KV capacity retire instead.
+        let mut entries: Vec<(ActiveGen<St::Sess>, Plan)> = Vec::with_capacity(active.len());
+        let mut budget = policy.budget;
+        let mut stepped = 0usize;
         for mut a in active {
             let capacity_left = a.sess.capacity() - a.sess.pos();
-            match a.next_token.take().or_else(|| a.prompt_left.next()) {
+            match a.next_token.take() {
                 Some(t) if capacity_left > 0 => {
-                    tokens.push(t);
-                    stepping.push(a);
+                    budget = budget.saturating_sub(1);
+                    stepped += 1;
+                    entries.push((a, Plan::Single(t)));
                 }
-                // out of prompt+generation or capacity: finalize
-                _ => retire(a, FinishReason::Length, None, sweep, queue, metrics, arena),
+                Some(_) => retire(a, FinishReason::Length, None, sweep, queue, metrics, arena),
+                None if capacity_left == 0 || a.prompt_left.as_slice().is_empty() => {
+                    retire(a, FinishReason::Length, None, sweep, queue, metrics, arena)
+                }
+                None => entries.push((a, Plan::Hold)),
             }
         }
-        if stepping.is_empty() {
+        // Prefilling sessions split what's left of the budget, in
+        // admission order, at most one chunk each per sweep (the rule
+        // that keeps decode from starving prefill). A session whose
+        // share is zero holds its slot and retries next sweep; if
+        // nothing at all claimed the budget, the first prefiller is
+        // forced one token so every sweep makes progress.
+        for (a, plan) in entries.iter_mut() {
+            if !matches!(plan, Plan::Hold) {
+                continue;
+            }
+            let capacity_left = a.sess.capacity() - a.sess.pos();
+            let want = policy.chunk.max(1).min(a.prompt_left.len()).min(capacity_left);
+            let mut take = want.min(budget);
+            if take == 0 && stepped == 0 {
+                take = 1;
+            }
+            if take == 0 {
+                continue;
+            }
+            stepped += 1;
+            budget = budget.saturating_sub(take);
+            a.n_prefill += take;
+            if take == 1 {
+                if let Some(t) = a.prompt_left.next() {
+                    *plan = Plan::Single(t);
+                }
+            } else {
+                let chunk: Vec<u32> = a.prompt_left.by_ref().take(take).collect();
+                *plan = Plan::Chunk(chunk);
+            }
+        }
+        if entries.is_empty() {
             active = Vec::new();
             continue;
         }
         if let Some(m) = metrics {
-            m.record_decode_sweep(stepping.len());
+            m.record_decode_sweep(stepped);
         }
         sweep += 1;
 
-        // 4. One fused sweep through the engine.
-        let logits_all = {
-            let mut refs: Vec<&mut St::Sess> = stepping.iter_mut().map(|a| &mut a.sess).collect();
-            stepper.step_batch(&mut refs, &tokens)
-        };
-        let logits_all = match logits_all {
-            Ok(l) => l,
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for a in stepping {
-                    retire(a, FinishReason::Error, Some(msg.clone()), sweep, queue, metrics, arena);
+        // 4a. One fused pass over every single-token lane — at
+        // `chunk == 1` this is exactly the legacy per-session sweep.
+        let singles_res = {
+            let mut refs: Vec<&mut St::Sess> = Vec::new();
+            let mut tokens: Vec<u32> = Vec::new();
+            for (a, plan) in entries.iter_mut() {
+                if let Plan::Single(t) = plan {
+                    tokens.push(*t);
+                    refs.push(&mut a.sess);
                 }
-                return Err(e);
+            }
+            if tokens.is_empty() {
+                Ok(Vec::new())
+            } else {
+                stepper.step_batch(&mut refs, &tokens)
             }
         };
-        debug_assert_eq!(logits_all.len(), stepping.len());
+        // 4b. Multi-token prefill chunks, one fused chunk pass each:
+        // K/V for the whole chunk lands in one store pass and only the
+        // final position's logits come back.
+        let mut sweep_err = None;
+        let singles_logits = match singles_res {
+            Ok(l) => l,
+            Err(e) => {
+                sweep_err = Some(e);
+                Vec::new()
+            }
+        };
+        if sweep_err.is_none() {
+            for (a, plan) in entries.iter_mut() {
+                let toks = match plan {
+                    Plan::Chunk(toks) => std::mem::take(toks),
+                    _ => continue,
+                };
+                match stepper.step_prefill_chunk(&mut a.sess, &toks) {
+                    Ok(l) => *plan = Plan::Logits(l),
+                    Err(e) => {
+                        sweep_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = sweep_err {
+            // A poisoned sweep retires *everything* in flight — held
+            // sessions included — so every caller sees a terminal event.
+            let msg = format!("{e:#}");
+            for (a, _) in entries {
+                retire(a, FinishReason::Error, Some(msg.clone()), sweep, queue, metrics, arena);
+            }
+            return Err(e);
+        }
 
         // 5. Sample, emit token events, retire finished sessions now so
         // their slots are re-admitted on the next iteration.
-        let mut still = Vec::with_capacity(stepping.len());
-        for (mut a, logits) in stepping.into_iter().zip(logits_all) {
-            if a.prompt_left.len() != 0 {
+        let mut singles_iter = singles_logits.into_iter();
+        let mut still = Vec::with_capacity(entries.len());
+        for (mut a, plan) in entries {
+            let logits = match plan {
+                Plan::Hold => {
+                    still.push(a); // budget exhausted: retry next sweep
+                    continue;
+                }
+                Plan::Single(_) => singles_iter.next().unwrap_or_default(),
+                Plan::Logits(l) => l,
+                Plan::Chunk(_) => Vec::new(), // unreachable: executed in 4b
+            };
+            if !a.prompt_left.as_slice().is_empty() {
                 still.push(a); // prefill: logits discarded until the last prompt token
                 continue;
             }
             if !a.published {
-                // Prefill just completed: publish the prompt's pages
-                // (refcount bumps only) before any generated token can
-                // overwrite the page holding the last prompt position.
+                // Prefill just completed: timestamp it, then publish the
+                // prompt's pages (refcount bumps only) before any
+                // generated token can overwrite the page holding the
+                // last prompt position.
+                a.prefill_done = Some(Instant::now());
                 if let Some(c) = cache {
                     a.sess.prefix_publish(c, &a.p.request.prompt);
                 }
@@ -453,7 +617,7 @@ mod tests {
             (1..=8).map(|i| submit(&q, i, vec![i as u32], 4, 0).0).collect();
         q.close();
         let mut st = MockStepper::new(17, 4096);
-        run_scheduler(&mut st, &q, 4, None, None, None).unwrap();
+        run_scheduler(&mut st, &q, 4, ChunkPolicy::default(), None, None, None).unwrap();
 
         let (long_toks, long_fin, long_usage, _) = drain(&long_rx);
         assert_eq!(long_toks.len(), 64);
@@ -482,7 +646,16 @@ mod tests {
             let q = SubmitQueue::new();
             let (rx, _) = submit(&q, 0, vec![5, 9], 6, 0);
             q.close();
-            run_scheduler(&mut MockStepper::new(17, 4096), &q, 1, None, None, None).unwrap();
+            run_scheduler(
+                &mut MockStepper::new(17, 4096),
+                &q,
+                1,
+                ChunkPolicy::default(),
+                None,
+                None,
+                None,
+            )
+            .unwrap();
             drain(&rx).0
         };
 
@@ -491,7 +664,16 @@ mod tests {
         let (early_rx, _) = submit(&q, 1, vec![2], 3, 0);
         let (joiner_rx, _) = submit(&q, 2, vec![5, 9], 6, 0);
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 4096), &q, 2, None, None, None).unwrap();
+        run_scheduler(
+            &mut MockStepper::new(17, 4096),
+            &q,
+            2,
+            ChunkPolicy::default(),
+            None,
+            None,
+            None,
+        )
+        .unwrap();
 
         let (long_toks, _, long_usage, _) = drain(&long_rx);
         let (_, _, early_usage, _) = drain(&early_rx);
@@ -516,7 +698,7 @@ mod tests {
         q.close();
         let mut st = MockStepper::new(17, 4096);
         st.fail_at_sweep = Some(4);
-        let res = run_scheduler(&mut st, &q, 4, None, None, None);
+        let res = run_scheduler(&mut st, &q, 4, ChunkPolicy::default(), None, None, None);
         assert!(res.is_err(), "scheduler must propagate the engine error");
         for rx in [&rx_a, &rx_b] {
             let (toks, fin, _, err) = drain(rx);
@@ -534,7 +716,7 @@ mod tests {
         let q2 = q.clone();
         let h = thread::spawn(move || {
             let mut st = MockStepper::new(17, 1 << 20);
-            run_scheduler(&mut st, &q2, 2, None, None, None)
+            run_scheduler(&mut st, &q2, 2, ChunkPolicy::default(), None, None, None)
         });
         // Wait until generation is demonstrably in flight…
         let first = rx.recv().unwrap();
@@ -558,7 +740,7 @@ mod tests {
         cancel.cancel();
         q.close();
         let mut st = MockStepper::new(17, 64);
-        run_scheduler(&mut st, &q, 2, None, None, None).unwrap();
+        run_scheduler(&mut st, &q, 2, ChunkPolicy::default(), None, None, None).unwrap();
         let (toks, fin, usage, _) = drain(&rx);
         assert!(toks.is_empty());
         assert_eq!(fin, FinishReason::Cancelled);
@@ -575,7 +757,16 @@ mod tests {
         let (rx1, _) = submit(&q, 1, vec![2], 2, 5);
         let (rx2, _) = submit(&q, 2, vec![3], 2, 1);
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
+        run_scheduler(
+            &mut MockStepper::new(17, 64),
+            &q,
+            1,
+            ChunkPolicy::default(),
+            None,
+            None,
+            None,
+        )
+        .unwrap();
         let s0 = drain(&rx0).2.finished_sweep;
         let s1 = drain(&rx1).2.finished_sweep;
         let s2 = drain(&rx2).2.finished_sweep;
@@ -589,7 +780,7 @@ mod tests {
         drop(rx);
         q.close();
         let mut st = MockStepper::new(17, 1 << 20);
-        run_scheduler(&mut st, &q, 1, None, None, None).unwrap();
+        run_scheduler(&mut st, &q, 1, ChunkPolicy::default(), None, None, None).unwrap();
         // prompt (1) + first generated token whose send fails ⇒ ~2 sweeps,
         // nowhere near max_new.
         assert!(st.sweeps <= 3, "decode must stop for an unread stream ({} sweeps)", st.sweeps);
@@ -601,7 +792,16 @@ mod tests {
         let q = SubmitQueue::new();
         let (rx, _) = submit(&q, 0, vec![1, 2, 3], 0, 0);
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
+        run_scheduler(
+            &mut MockStepper::new(17, 64),
+            &q,
+            1,
+            ChunkPolicy::default(),
+            None,
+            None,
+            None,
+        )
+        .unwrap();
         let (toks, fin, usage, _) = drain(&rx);
         assert!(toks.is_empty());
         assert_eq!(fin, FinishReason::Length);
@@ -617,7 +817,16 @@ mod tests {
             let q = SubmitQueue::new();
             let (rx, _) = submit(&q, 0, vec![4], 6, 0);
             q.close();
-            run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
+            run_scheduler(
+                &mut MockStepper::new(17, 64),
+                &q,
+                1,
+                ChunkPolicy::default(),
+                None,
+                None,
+                None,
+            )
+            .unwrap();
             drain(&rx).0
         };
         assert_eq!(greedy.len(), 6);
@@ -639,10 +848,116 @@ mod tests {
             enqueued: Instant::now(),
         });
         q.close();
-        run_scheduler(&mut MockStepper::new(17, 64), &q, 1, None, None, None).unwrap();
+        run_scheduler(
+            &mut MockStepper::new(17, 64),
+            &q,
+            1,
+            ChunkPolicy::default(),
+            None,
+            None,
+            None,
+        )
+        .unwrap();
         let (toks, fin, usage, _) = drain(&rx);
         assert_eq!(toks, greedy[..2].to_vec());
         assert_eq!(fin, FinishReason::Stop);
         assert_eq!(usage.completion_tokens, 2);
+    }
+
+    /// One full run at a given policy: (tokens, finish, usage).
+    fn run_one(prompt: Vec<u32>, max_new: usize, policy: ChunkPolicy) -> (Vec<u32>, Usage) {
+        let q = SubmitQueue::new();
+        let (rx, _) = submit(&q, 0, prompt, max_new, 0);
+        q.close();
+        run_scheduler(&mut MockStepper::new(17, 4096), &q, 2, policy, None, None, None).unwrap();
+        let (toks, fin, usage, _) = drain(&rx);
+        assert_eq!(fin, FinishReason::Length);
+        (toks, usage)
+    }
+
+    #[test]
+    fn chunked_prefill_is_token_identical_and_saves_sweeps() {
+        // The default Stepper::step_prefill_chunk replays the chunk one
+        // token at a time, so this pins the *scheduler's* bookkeeping:
+        // same tokens, same usage counts, strictly fewer sweeps.
+        let prompt: Vec<u32> = (0..13).map(|t| t % 7).collect();
+        let (base_toks, base_usage) = run_one(prompt.clone(), 5, ChunkPolicy::default());
+        for chunk in [2usize, 3, 4, 16] {
+            let policy = ChunkPolicy { chunk, budget: usize::MAX };
+            let (toks, usage) = run_one(prompt.clone(), 5, policy);
+            assert_eq!(toks, base_toks, "chunk {chunk} changed tokens");
+            assert_eq!(usage.prompt_tokens, base_usage.prompt_tokens);
+            assert!(
+                usage.finished_sweep < base_usage.finished_sweep,
+                "chunk {chunk}: {} sweeps vs {} unchunked — chunking must shorten prefill",
+                usage.finished_sweep,
+                base_usage.finished_sweep
+            );
+            assert!(usage.prefill_us <= usage.ttft_us.max(1), "prefill is part of TTFT");
+        }
+    }
+
+    #[test]
+    fn budget_interleaves_decode_with_chunked_prefill() {
+        // A short decoder (A) running next to a long chunked prefill
+        // (B) under a tight budget: A must finish at exactly the same
+        // sweep as when it runs alone — decode claims the budget first,
+        // so the long prompt can never stall it — while B's tokens
+        // still match its solo run (interleaving is token-invisible).
+        let policy = ChunkPolicy { chunk: 8, budget: 3 };
+        let (a_solo, a_solo_usage) = run_one(vec![1], 20, policy);
+        let (b_solo, _) = run_one((0..24).map(|t| t % 5).collect(), 2, policy);
+
+        let q = SubmitQueue::new();
+        let (a_rx, _) = submit(&q, 0, vec![1], 20, 0);
+        let (b_rx, _) = submit(&q, 1, (0..24).map(|t| t % 5).collect(), 2, 0);
+        q.close();
+        run_scheduler(&mut MockStepper::new(17, 4096), &q, 2, policy, None, None, None).unwrap();
+        let (a_toks, _, a_usage, _) = drain(&a_rx);
+        let (b_toks, _, _, _) = drain(&b_rx);
+        assert_eq!(a_toks, a_solo, "decode tokens changed under mixed load");
+        assert_eq!(b_toks, b_solo, "prefill tokens changed under mixed load");
+        assert_eq!(
+            a_usage.finished_sweep, a_solo_usage.finished_sweep,
+            "the long prefill delayed the decoder — budget fairness broken"
+        );
+    }
+
+    #[test]
+    fn zero_budget_still_makes_progress() {
+        // Pathological budget 0: the progress guarantee forces one
+        // prompt token per sweep, so the run completes with identical
+        // tokens (it just degrades to legacy prefill).
+        let prompt: Vec<u32> = (0..9).map(|t| t % 6).collect();
+        let (base_toks, _) = run_one(prompt.clone(), 4, ChunkPolicy::default());
+        let (toks, _) = run_one(prompt, 4, ChunkPolicy { chunk: 8, budget: 0 });
+        assert_eq!(toks, base_toks);
+    }
+
+    #[test]
+    fn cancel_mid_chunked_prefill_retires_without_tokens() {
+        // A short request's first token proves the long prompt is still
+        // mid-prefill (400 tokens at chunk 2 spans many sweeps); cancel
+        // the long one then and expect Done{Cancelled} with no tokens
+        // and an empty queue at drain.
+        let q = SubmitQueue::new();
+        let (long_rx, long_cancel) = submit(&q, 0, (0..400).map(|t| t % 7).collect(), 4, 0);
+        let (short_rx, _) = submit(&q, 1, vec![2], 2, 0);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            let policy = ChunkPolicy { chunk: 2, budget: 4 };
+            run_scheduler(&mut MockStepper::new(17, 4096), &q2, 2, policy, None, None, None)
+        });
+        let first = short_rx.recv().unwrap();
+        assert!(matches!(first, GenEvent::Token { .. }));
+        long_cancel.cancel();
+        let (toks, fin, usage, _) = drain(&long_rx);
+        assert_eq!(fin, FinishReason::Cancelled);
+        assert!(toks.is_empty(), "cancelled during prefill — no tokens expected");
+        assert_eq!(usage.completion_tokens, 0);
+        assert_eq!(usage.prefill_us, 0, "prefill never completed");
+        q.close();
+        h.join().unwrap().unwrap();
+        assert_eq!(q.load(), 0);
     }
 }

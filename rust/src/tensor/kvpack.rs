@@ -407,6 +407,20 @@ impl<'a> PackedStripMut<'a> {
             }
         }
     }
+
+    /// Quantize and store consecutive rows starting at position `u0` —
+    /// the chunked-prefill bulk store. Each row goes through exactly
+    /// [`PackedStripMut::store_row`] (which keeps no cross-position
+    /// state), so the resulting strip bytes are identical to storing
+    /// the rows one call at a time; the caller amortizes what *is*
+    /// per-call — page ownership resolution and view construction —
+    /// over the whole run.
+    // lint: hot
+    pub fn store_rows<'r>(&mut self, u0: usize, rows: impl IntoIterator<Item = &'r [f32]>) {
+        for (j, row) in rows.into_iter().enumerate() {
+            self.store_row(u0 + j, row);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -494,6 +508,29 @@ mod tests {
         strip.as_strip().dequant_row(0, &mut out);
         for v in out {
             assert_eq!(v, 1.5, "constant rows survive exactly (1.5 is f16-exact)");
+        }
+    }
+
+    #[test]
+    fn store_rows_is_byte_identical_to_sequential_store_row() {
+        // The bulk store must leave *exactly* the words a sequential
+        // per-row store leaves — the property the chunked-prefill
+        // token-identity bar rests on. Dirty slabs, ragged group, odd
+        // hd (position rows straddle plane words).
+        let mut rng = Rng::new(9);
+        for &(hd, group, bits) in &[(8usize, 8usize, 2usize), (5, 4, 3), (32, 16, 4)] {
+            let geom = PackedGeom::new(8, hd, bits, group);
+            let rows: Vec<Vec<f32>> =
+                (0..5).map(|_| (0..hd).map(|_| rng.normal() as f32).collect()).collect();
+            let mut seq_words = vec![0xDEAD_BEEFu32; geom.strip_words()];
+            let mut bulk_words = seq_words.clone();
+            let mut seq = PackedStripMut::new(geom, &mut seq_words);
+            for (j, row) in rows.iter().enumerate() {
+                seq.store_row(2 + j, row);
+            }
+            let mut bulk = PackedStripMut::new(geom, &mut bulk_words);
+            bulk.store_rows(2, rows.iter().map(|r| r.as_slice()));
+            assert_eq!(seq_words, bulk_words, "hd {hd} bits {bits}");
         }
     }
 

@@ -454,6 +454,159 @@ fn prop_prefix_cache_interleavings_parity_no_resurrection() {
     );
 }
 
+/// Chunked-prefill lifecycle invariants under random interleavings of
+/// admit / advance-prefill-by-a-chunk / greedy-decode / cancel / evict,
+/// on f32 and packed-W2 arenas with tiny pages (1–3 positions, so
+/// chunks straddle page transitions):
+///
+/// * **parity** — a session prefilled in random-sized chunks (over
+///   whatever prefix pages the cache lent it) emits greedy tokens
+///   identical to its one-token-per-step cold twin;
+/// * **mid-prefill cancel safety** — a session dropped with its prompt
+///   only partially fed releases its slot and every borrowed page;
+/// * **no leaks** — after dropping every session and evicting the whole
+///   tree, the arena is back to zero pages and zero slots.
+#[test]
+fn prop_chunked_prefill_interleavings_parity_no_leaks() {
+    use bpdq::model::{argmax, DecodeState};
+    run_prop(
+        "chunked_prefill_interleavings_parity_no_leaks",
+        Config { cases: 4, ..Default::default() },
+        |rng| {
+            for bits in [0usize, 2] {
+                let nh = 1 << rng.below_usize(2);
+                let divisors: Vec<usize> = (1..=nh).filter(|d| nh % d == 0).collect();
+                let nkv = divisors[rng.below_usize(divisors.len())];
+                let cfg = ModelConfig {
+                    vocab_size: 10 + rng.below_usize(20),
+                    d_model: nh * 8,
+                    n_layers: 1 + rng.below_usize(2),
+                    n_heads: nh,
+                    n_kv_heads: nkv,
+                    d_ff: 16 + rng.below_usize(16),
+                    max_seq: 32,
+                    kv_format: if bits == 0 { KvFormat::F32 } else { KvFormat::bit_plane(bits) },
+                };
+                let m = synthetic_model(&cfg, rng.next_u64()).with_kv_page(1 + rng.below_usize(3));
+                let arena = m.kv_arena();
+                let cache = Arc::new(PrefixCache::new(arena.clone()));
+                register_reclaimer(&arena, &cache);
+
+                let stem: Vec<u32> = (0..3 + rng.below_usize(3))
+                    .map(|_| rng.below(cfg.vocab_size as u64) as u32)
+                    .collect();
+                let pool: Vec<Vec<u32>> = (0..3)
+                    .map(|_| {
+                        let mut p = stem.clone();
+                        for _ in 0..2 + rng.below_usize(4) {
+                            p.push(rng.below(cfg.vocab_size as u64) as u32);
+                        }
+                        p
+                    })
+                    .collect();
+                let decode_n = 3 + rng.below_usize(3);
+
+                // Cold oracle: one token per step, no cache, no chunks.
+                let oracle: Vec<Vec<u32>> = pool
+                    .iter()
+                    .map(|p| {
+                        let mut st = m.decode_state();
+                        let mut logits = Vec::new();
+                        for &t in p {
+                            logits = st.step(&m, t);
+                        }
+                        let mut toks = Vec::new();
+                        for _ in 0..decode_n {
+                            let tok = argmax(&logits) as u32;
+                            toks.push(tok);
+                            logits = st.step(&m, tok);
+                        }
+                        toks
+                    })
+                    .collect();
+
+                // (state, prompt idx, prompt tokens fed, emitted, logits)
+                let mut live: Vec<(DecodeState, usize, usize, usize, Vec<f32>)> = Vec::new();
+                for _ in 0..24 {
+                    match rng.below(5) {
+                        0 if live.len() < 3 => {
+                            // Admit: borrow whatever prefix is cached;
+                            // the suffix is fed in chunks later.
+                            let pi = rng.below_usize(pool.len());
+                            let mut st = m.decode_state();
+                            let matched = st.prefix_attach(&cache, &pool[pi]);
+                            if matched >= pool[pi].len() {
+                                return Err(format!(
+                                    "match_and_borrow returned {matched} for a \
+                                     {}-token prompt (must leave one to feed)",
+                                    pool[pi].len()
+                                ));
+                            }
+                            live.push((st, pi, matched, 0, Vec::new()));
+                        }
+                        1 if !live.is_empty() => {
+                            // Advance a random session's prefill by a
+                            // ragged chunk (1..=3 tokens); publish when
+                            // the prompt completes.
+                            let i = rng.below_usize(live.len());
+                            let (st, pi, fed, _, logits) = &mut live[i];
+                            let p = &pool[*pi];
+                            if *fed < p.len() {
+                                let n = (1 + rng.below_usize(3)).min(p.len() - *fed);
+                                let out = st.prefill_chunk(&m, &p[*fed..*fed + n]);
+                                *fed += n;
+                                if *fed == p.len() {
+                                    st.prefix_publish(&cache, p);
+                                    *logits = out;
+                                }
+                            }
+                        }
+                        2 if !live.is_empty() => {
+                            // One greedy decode step on a prefilled
+                            // session; its token must match the oracle.
+                            let i = rng.below_usize(live.len());
+                            let (st, pi, fed, emitted, logits) = &mut live[i];
+                            if *fed == pool[*pi].len() && *emitted < decode_n {
+                                let tok = argmax(logits) as u32;
+                                if tok != oracle[*pi][*emitted] {
+                                    return Err(format!(
+                                        "bits {bits} prompt {pi} token {emitted}: chunked \
+                                         session emitted {tok}, cold twin {}",
+                                        oracle[*pi][*emitted]
+                                    ));
+                                }
+                                *logits = st.step(&m, tok);
+                                *emitted += 1;
+                            }
+                        }
+                        3 if !live.is_empty() => {
+                            // Cancel a session — possibly mid-prefill,
+                            // which must release its slot and every
+                            // borrowed page.
+                            let i = rng.below_usize(live.len());
+                            drop(live.swap_remove(i));
+                        }
+                        _ => {
+                            // Pressure the cache's reclaimer.
+                            cache.evict(1 + rng.below_usize(3));
+                        }
+                    }
+                }
+                drop(live);
+                cache.evict(usize::MAX / 2);
+                let st = arena.stats();
+                if st.slots_in_use != 0 || st.pages_in_use != 0 {
+                    return Err(format!(
+                        "bits {bits}: leak at drain — {} slots, {} pages still in use",
+                        st.slots_in_use, st.pages_in_use
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Model decode path (KV cache) matches the batch forward for random
 /// tiny models and token streams.
 #[test]
